@@ -1,0 +1,24 @@
+//! Table 1 driver: sweeps FP32 / EXACT / block-wise G/R ∈ {2..64} / VM
+//! over both paper datasets and prints the paper-format table.
+//!
+//! Run: `cargo run --release --example compression_sweep [-- --effort paper]`
+
+use iexact::experiments::{table1, Effort};
+
+fn main() -> iexact::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let effort = args
+        .iter()
+        .position(|a| a == "--effort")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| Effort::parse(s))
+        .unwrap_or(Effort::Quick);
+
+    eprintln!("running Table 1 sweep at effort {effort:?}…");
+    let t = table1::run(effort, |line| eprintln!("{line}"))?;
+    println!("\n{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table1.csv", t.to_csv())?;
+    eprintln!("csv written to results/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Variance-minimization analysis driver: regenerates Table 2 and
+//! Figures 3, 4 and 5 (the Appendix B/C validation suite).
+//!
+//! Run: `cargo run --release --example varmin_analysis [-- --effort paper]`
+
+use iexact::experiments::{fig3, fig4, fig5, table2, Effort};
+
+fn main() -> iexact::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let effort = args
+        .iter()
+        .position(|a| a == "--effort")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| Effort::parse(s))
+        .unwrap_or(Effort::Quick);
+    std::fs::create_dir_all("results").ok();
+
+    eprintln!("== Table 2: JS divergence + variance reduction ==");
+    let t2 = table2::run(effort, |l| eprintln!("{l}"))?;
+    println!("{}", t2.render());
+    std::fs::write("results/table2.csv", t2.to_csv())?;
+
+    eprintln!("== Fig 3: SR variance surface ==");
+    let f3 = fig3::run(16, if effort == Effort::Paper { 60 } else { 30 })?;
+    println!("{}", f3.render());
+    std::fs::write("results/fig3.csv", f3.to_csv())?;
+
+    eprintln!("== Fig 4: variance reduction vs assumed D ==");
+    let f4 = fig4::run(effort, |l| eprintln!("{l}"))?;
+    println!("{}", f4.render());
+    std::fs::write("results/fig4.csv", f4.to_csv())?;
+
+    eprintln!("== Fig 5: CN_[1/D] reduction curves ==");
+    let (trials, samples) = if effort == Effort::Paper {
+        (10, 20_000)
+    } else {
+        (4, 6_000)
+    };
+    let f5 = fig5::run(trials, samples, 0, |l| eprintln!("{l}"))?;
+    println!("{}", f5.render());
+    std::fs::write("results/fig5.csv", f5.to_csv())?;
+
+    eprintln!("csvs written to results/");
+    Ok(())
+}

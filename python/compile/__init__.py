@@ -1,0 +1,7 @@
+"""Build-time Python for the i-Exact reproduction (Layers 1 and 2).
+
+This package is only ever executed by ``make artifacts`` (and pytest):
+it authors the JAX compute graph and Pallas kernels, lowers them to HLO
+text, and writes ``artifacts/``. The Rust coordinator loads those
+artifacts via PJRT — Python is never on the request path.
+"""

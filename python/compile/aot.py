@@ -1,0 +1,223 @@
+"""AOT pipeline: lower every (dataset × quantization) training-step and
+eval module to HLO **text** and write ``artifacts/`` + ``manifest.json``.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out ../artifacts [--quick]
+
+Python runs ONLY here (and in pytest). The Rust binary is self-contained
+once artifacts are built.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import varmin
+from .model import CompressionCfg, StepCfg, eval_forward, make_step_fn
+
+# ---------------------------------------------------------------------------
+# AOT-scale dataset specs (mirrors rust config::DatasetSpec; the AOT path
+# uses smaller N so dense-Â artifacts stay fast on the CPU PJRT client).
+# ---------------------------------------------------------------------------
+
+AOT_DATASETS = {
+    "arxiv": dict(num_nodes=1024, num_features=128, num_classes=40, base="arxiv-like"),
+    "flickr": dict(num_nodes=896, num_features=500, num_classes=7, base="flickr-like"),
+}
+QUICK_DATASETS = {
+    "arxiv": dict(num_nodes=128, num_features=32, num_classes=8, base="arxiv-like"),
+}
+HIDDEN = 128
+QUICK_HIDDEN = 32
+LAYERS = 3
+LR = 0.01
+
+# Quantization variants to bake (subset of the Table 1 column: the AOT
+# path proves composition; the full sweep runs on the native pipeline).
+VARIANTS = ["fp32", "rowwise", "blockwise:8", "blockwise:64", "vm"]
+
+
+def make_compression(variant: str, widths) -> CompressionCfg:
+    """Build the CompressionCfg for a variant string, resolving VM
+    boundaries per layer from the projected dimensionality R = d // 8."""
+    if variant == "fp32":
+        return CompressionCfg(mode="fp32", use_pallas=False)
+    if variant == "rowwise":
+        return CompressionCfg(mode="rowwise", proj_ratio=8)
+    if variant.startswith("blockwise:"):
+        return CompressionCfg(
+            mode="blockwise", proj_ratio=8, group_ratio=int(variant.split(":")[1])
+        )
+    if variant == "vm":
+        alphas, betas = [], []
+        for d in widths[:-1]:  # layer input widths F, H, H
+            r = max(d // 8, 4)
+            a, b, _, _ = varmin.optimal_boundaries(r)
+            alphas.append(a)
+            betas.append(b)
+        return CompressionCfg(
+            mode="vm", proj_ratio=8, alphas=tuple(alphas), betas=tuple(betas)
+        )
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(rows, cols):
+    return jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+
+
+def weight_shapes(f, h, c, layers=LAYERS):
+    dims = [f] + [h] * (layers - 1) + [c]
+    return [(dims[i], dims[i + 1]) for i in range(layers)], dims
+
+
+def lower_train_step(ds_cfg, hidden, variant):
+    n, f, c = ds_cfg["num_nodes"], ds_cfg["num_features"], ds_cfg["num_classes"]
+    shapes, dims = weight_shapes(f, hidden, c)
+    cfg = StepCfg(lr=LR, compression=make_compression(variant, dims))
+    fn = make_step_fn(cfg)
+    args = [
+        spec(n, f),  # features
+        spec(n, n),  # dense Â
+        spec(n, c),  # one-hot labels
+        spec(n, 1),  # train mask
+        *[spec(r, co) for r, co in shapes],  # w0..w2
+        *[spec(r, co) for r, co in shapes],  # m0..m2
+        *[spec(r, co) for r, co in shapes],  # v0..v2
+        spec(1, 1),  # t
+        spec(1, 2),  # key
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    input_names = (
+        ["features", "adj", "onehot", "train_mask"]
+        + [f"w{i}" for i in range(LAYERS)]
+        + [f"m{i}" for i in range(LAYERS)]
+        + [f"v{i}" for i in range(LAYERS)]
+        + ["t", "key"]
+    )
+    output_names = (
+        [f"w{i}" for i in range(LAYERS)]
+        + [f"m{i}" for i in range(LAYERS)]
+        + [f"v{i}" for i in range(LAYERS)]
+        + ["loss"]
+    )
+    out_shapes = [a.shape for a in args[4 : 4 + 3 * LAYERS]] + [(1, 1)]
+    inputs = [
+        {"name": nm, "shape": list(a.shape)} for nm, a in zip(input_names, args)
+    ]
+    outputs = [
+        {"name": nm, "shape": list(s)} for nm, s in zip(output_names, out_shapes)
+    ]
+    return lowered, inputs, outputs
+
+
+def lower_eval(ds_cfg, hidden):
+    n, f, c = ds_cfg["num_nodes"], ds_cfg["num_features"], ds_cfg["num_classes"]
+    shapes, _ = weight_shapes(f, hidden, c)
+    args = [spec(n, f), spec(n, n)] + [spec(r, co) for r, co in shapes]
+
+    def fn(x, adj, w0, w1, w2):
+        return (eval_forward(x, adj, (w0, w1, w2)),)
+
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [
+        {"name": nm, "shape": list(a.shape)}
+        for nm, a in zip(["features", "adj", "w0", "w1", "w2"], args)
+    ]
+    outputs = [{"name": "logits", "shape": [n, c]}]
+    return lowered, inputs, outputs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="tiny shapes for CI smoke runs"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    datasets = QUICK_DATASETS if args.quick else AOT_DATASETS
+    hidden = QUICK_HIDDEN if args.quick else HIDDEN
+    manifest = []
+
+    for ds_key, ds_cfg in datasets.items():
+        for variant in VARIANTS:
+            cfg = make_compression(
+                variant, weight_shapes(ds_cfg["num_features"], hidden, ds_cfg["num_classes"])[1]
+            )
+            slug = cfg.slug()
+            name = f"train_step_{ds_key}_{slug}"
+            print(f"lowering {name} …", flush=True)
+            lowered, inputs, outputs = lower_train_step(ds_cfg, hidden, variant)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as fh:
+                fh.write(text)
+            manifest.append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "inputs": inputs,
+                    "outputs": outputs,
+                    "meta": {
+                        "dataset": ds_cfg["base"],
+                        "quant": slug,
+                        "num_nodes": ds_cfg["num_nodes"],
+                        "num_features": ds_cfg["num_features"],
+                        "num_classes": ds_cfg["num_classes"],
+                        "hidden": hidden,
+                        "layers": LAYERS,
+                        "lr": LR,
+                    },
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)", flush=True)
+
+        name = f"eval_{ds_key}"
+        print(f"lowering {name} …", flush=True)
+        lowered, inputs, outputs = lower_eval(ds_cfg, hidden)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as fh:
+            fh.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": inputs,
+                "outputs": outputs,
+                "meta": {
+                    "dataset": ds_cfg["base"],
+                    "num_nodes": ds_cfg["num_nodes"],
+                    "num_features": ds_cfg["num_features"],
+                    "num_classes": ds_cfg["num_classes"],
+                    "hidden": hidden,
+                },
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump({"artifacts": manifest}, fh, indent=1)
+    print(f"manifest: {len(manifest)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

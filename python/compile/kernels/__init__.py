@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for block-wise stochastic-rounding quantization
+and the GNN layer matmul, plus the pure-jnp reference oracles.
+
+All kernels run with ``interpret=True``: real-TPU Pallas lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute; in interpret
+mode the kernel lowers to plain HLO ops and runs anywhere, while keeping
+the BlockSpec structure that documents the HBM<->VMEM schedule a real TPU
+would use (DESIGN.md §8).
+"""

@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernels: block-wise stochastic-rounding quantize +
+dequantize (the paper's hot spot).
+
+TPU mapping (DESIGN.md §8): the flat activation tensor is viewed as
+``(num_blocks, G)``; each grid step owns a ``(BLOCK_ROWS, G)`` VMEM tile.
+With ``G`` a multiple of the 128-lane vector width, the per-block min/max
+is a single-vreg reduction and the (zero, range) metadata is a scalar
+broadcast per block — this is precisely why block-wise quantization is
+*faster* than EXACT's per-row gather on wide rows. Random bits are
+generated upstream with ``jax.random`` and streamed in as a same-shape
+uniform tensor so the kernel stays a pure map.
+
+All entry points run ``interpret=True`` (CPU correctness path; Mosaic
+custom-calls cannot execute on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of blocks each grid step processes. 8 sublanes x G lanes mirrors
+# the (8, 128) float32 vreg tiling of a real TPU.
+BLOCK_ROWS = 8
+
+
+def _qdq_uniform_kernel(x_ref, u_ref, o_ref, *, b: int):
+    """Fused Quant(Eq.2)+Dequant(Eq.3) with uniform bins on one tile."""
+    x = x_ref[...]
+    u = u_ref[...]
+    zero = jnp.min(x, axis=1, keepdims=True)
+    rng = jnp.max(x, axis=1, keepdims=True) - zero
+    safe = jnp.where(rng > 0, rng, 1.0)
+    hbar = (x - zero) / safe * b
+    floor = jnp.floor(hbar)
+    codes = floor + (u < (hbar - floor)).astype(hbar.dtype)
+    codes = jnp.clip(codes, 0.0, float(b))
+    codes = jnp.where(rng > 0, codes, 0.0)
+    o_ref[...] = zero + codes / b * rng
+
+
+def _qdq_vm_kernel(x_ref, u_ref, o_ref, *, alpha: float, beta: float):
+    """Fused quant+dequant with the variance-minimized INT2 bins
+    [0, α, β, 3] (Eq. 8). Boundaries are trace-time constants, so the
+    bin search is two vectorized compares — no gather."""
+    x = x_ref[...]
+    u = u_ref[...]
+    zero = jnp.min(x, axis=1, keepdims=True)
+    rng = jnp.max(x, axis=1, keepdims=True) - zero
+    safe = jnp.where(rng > 0, rng, 1.0)
+    hbar = jnp.clip((x - zero) / safe * 3.0, 0.0, 3.0)
+    ge_a = (hbar >= alpha).astype(hbar.dtype)
+    ge_b = (hbar >= beta).astype(hbar.dtype)
+    lo = ge_a * alpha + ge_b * (beta - alpha)  # bounds[i]
+    width = (  # bounds[i+1] - bounds[i]
+        (1.0 - ge_a) * alpha
+        + (ge_a - ge_b) * (beta - alpha)
+        + ge_b * (3.0 - beta)
+    )
+    p_up = (hbar - lo) / width
+    up = (u < p_up).astype(hbar.dtype)
+    # Dequantized normalized position = bounds[i] or bounds[i+1].
+    pos = lo + up * width
+    pos = jnp.where(rng > 0, pos, 0.0)
+    o_ref[...] = zero + pos / 3.0 * rng
+
+
+def _pad_blocks(x_blocks: jnp.ndarray):
+    """Pad the block count to a BLOCK_ROWS multiple (masked back after)."""
+    n = x_blocks.shape[0]
+    padded = ((n + BLOCK_ROWS - 1) // BLOCK_ROWS) * BLOCK_ROWS
+    if padded == n:
+        return x_blocks, n
+    pad = jnp.zeros((padded - n, x_blocks.shape[1]), x_blocks.dtype)
+    return jnp.concatenate([x_blocks, pad], axis=0), n
+
+
+def quant_dequant_blockwise(x: jnp.ndarray, group: int, key: jax.Array,
+                            b: int = 3) -> jnp.ndarray:
+    """Pallas-backed fused quantize+dequantize with uniform bins.
+
+    ``x`` is any float32 tensor whose element count divides ``group``.
+    Matches ``ref.quant_dequant_blockwise`` exactly in distribution and,
+    given the same uniforms, in value.
+    """
+    shape = x.shape
+    x_blocks = x.reshape(-1, group)
+    u = jax.random.uniform(key, x_blocks.shape, dtype=x_blocks.dtype)
+    x_pad, n = _pad_blocks(x_blocks)
+    u_pad, _ = _pad_blocks(u)
+    grid = (x_pad.shape[0] // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, group), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_qdq_uniform_kernel, b=b),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(x_pad, u_pad)
+    return out[:n].reshape(shape)
+
+
+def quant_dequant_blockwise_vm(x: jnp.ndarray, group: int, key: jax.Array,
+                               alpha: float, beta: float) -> jnp.ndarray:
+    """Pallas-backed fused quantize+dequantize with VM bins [0, α, β, 3]."""
+    shape = x.shape
+    x_blocks = x.reshape(-1, group)
+    u = jax.random.uniform(key, x_blocks.shape, dtype=x_blocks.dtype)
+    x_pad, n = _pad_blocks(x_blocks)
+    u_pad, _ = _pad_blocks(u)
+    grid = (x_pad.shape[0] // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, group), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_qdq_vm_kernel, alpha=float(alpha), beta=float(beta)),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(x_pad, u_pad)
+    return out[:n].reshape(shape)
+
+
+def vmem_bytes_per_tile(group: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (x, u, out tiles plus the
+    (zero, range) scalars) — the §Perf roofline input for DESIGN.md."""
+    tile = BLOCK_ROWS * group * dtype_bytes
+    return 3 * tile + 2 * BLOCK_ROWS * dtype_bytes

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in ``quant.py`` /
+``gnn.py`` must match its oracle here to float tolerance (pytest +
+hypothesis sweep shapes and dtypes). They also serve as the L2 fallback
+path so the model can be lowered with or without Pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+INT2_B = 3  # number of quantization *steps* for b=2 bits: levels 0..3
+
+
+def blockwise_minmax(x_flat: jnp.ndarray, group: int):
+    """Per-block (zero-point, range) over a flat tensor reshaped to
+    ``(num_blocks, group)`` — Eq. 6 + the Z/r of Eq. 2."""
+    blocks = x_flat.reshape(-1, group)
+    zero = blocks.min(axis=1, keepdims=True)
+    rng = blocks.max(axis=1, keepdims=True) - zero
+    return blocks, zero, rng
+
+
+def quantize_blockwise(x: jnp.ndarray, group: int, key: jax.Array, b: int = INT2_B):
+    """Eq. 2 with stochastic rounding, block-wise grouping (Eq. 6).
+
+    Returns ``(codes, zero, rng)`` where ``codes`` is int32 in ``[0, b]``
+    with the same blocked shape. Constant blocks (range 0) produce code 0.
+    """
+    x_flat = x.reshape(-1)
+    blocks, zero, rng = blockwise_minmax(x_flat, group)
+    safe_rng = jnp.where(rng > 0, rng, 1.0)
+    hbar = (blocks - zero) / safe_rng * b  # normalized to [0, B]
+    u = jax.random.uniform(key, hbar.shape)
+    floor = jnp.floor(hbar)
+    codes = floor + (u < (hbar - floor)).astype(hbar.dtype)
+    codes = jnp.clip(codes, 0, b)
+    codes = jnp.where(rng > 0, codes, 0.0)
+    return codes.astype(jnp.int32), zero, rng
+
+
+def dequantize_blockwise(codes: jnp.ndarray, zero: jnp.ndarray, rng: jnp.ndarray,
+                         shape, b: int = INT2_B):
+    """Eq. 3: map codes back through the affine transform."""
+    vals = zero + codes.astype(jnp.float32) / b * rng
+    return vals.reshape(shape)
+
+
+def quantize_blockwise_vm(x: jnp.ndarray, group: int, key: jax.Array,
+                          alpha: float, beta: float):
+    """Eq. 8: INT2 stochastic rounding with non-uniform boundaries
+    ``[0, alpha, beta, 3]`` (the variance-minimized layout).
+
+    Codes index the boundary positions; dequantization maps code k to
+    boundary_k (uniform bins recover Eq. 3 exactly).
+    """
+    bounds = jnp.array([0.0, alpha, beta, 3.0], dtype=jnp.float32)
+    x_flat = x.reshape(-1)
+    blocks, zero, rng = blockwise_minmax(x_flat, group)
+    safe_rng = jnp.where(rng > 0, rng, 1.0)
+    hbar = jnp.clip((blocks - zero) / safe_rng * 3.0, 0.0, 3.0)
+    # Bin index i such that bounds[i] <= h < bounds[i+1] (i in 0..2).
+    i = (hbar >= bounds[1]).astype(jnp.int32) + (hbar >= bounds[2]).astype(jnp.int32)
+    lo = bounds[i]
+    hi = bounds[i + 1]
+    p_up = (hbar - lo) / (hi - lo)
+    u = jax.random.uniform(key, hbar.shape)
+    codes = i + (u < p_up).astype(jnp.int32)
+    codes = jnp.where(rng > 0, codes, 0)
+    return codes.astype(jnp.int32), zero, rng
+
+
+def dequantize_blockwise_vm(codes, zero, rng, shape, alpha: float, beta: float):
+    """Inverse of :func:`quantize_blockwise_vm`: code k -> boundary_k."""
+    bounds = jnp.array([0.0, alpha, beta, 3.0], dtype=jnp.float32)
+    vals = zero + bounds[codes] / 3.0 * rng
+    return vals.reshape(shape)
+
+
+def quant_dequant_blockwise(x, group, key, b: int = INT2_B):
+    """Fused Quant -> Dequant (what the stash actually computes)."""
+    codes, zero, rng = quantize_blockwise(x, group, key, b)
+    return dequantize_blockwise(codes, zero, rng, x.shape, b)
+
+
+def quant_dequant_blockwise_vm(x, group, key, alpha, beta):
+    codes, zero, rng = quantize_blockwise_vm(x, group, key, alpha, beta)
+    return dequantize_blockwise_vm(codes, zero, rng, x.shape, alpha, beta)
+
+
+def gnn_layer(adj: jnp.ndarray, h: jnp.ndarray, w: jnp.ndarray):
+    """One GCN layer pre-activation: ``Â @ H @ Θ`` (Eq. 1, before σ)."""
+    return (adj @ h) @ w
+
+
+def random_projection(key: jax.Array, d: int, r: int):
+    """Normalized Rademacher matrix R in {±1/sqrt(r)}^{d×r} (Eq. 4)."""
+    signs = jax.random.rademacher(key, (d, r), dtype=jnp.float32)
+    return signs / jnp.sqrt(jnp.float32(r))

@@ -1,0 +1,212 @@
+"""Layer-2 JAX model: a GCN (Eq. 1) trained with EXACT-style activation
+compression — random projection + block-wise stochastic-rounding
+quantization of the stashed activations — expressed as a ``custom_vjp``
+so the compression sits exactly where the paper puts it:
+
+* forward: compute ``U @ Θ`` exactly, but stash only
+  ``Dequant(Quant(RP(U)))`` (numerically identical to storing the INT2
+  codes and dequantizing in the backward pass — the storage itself is
+  accounted analytically by the Rust memory model, DESIGN.md §3);
+* backward: ``dΘ = Û^T dP`` with the reconstructed ``Û = IRP(·)``, and
+  ``dH = Â (dP Θ^T)`` which needs only the weights.
+
+The quantize+dequantize runs through the Layer-1 **Pallas kernel**
+(`kernels.quant`), so the lowered HLO contains the kernel's interpret-mode
+loop structure; `use_pallas=False` swaps in the pure-jnp oracle for A/B
+testing.
+"""
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gnn as gnn_kernels
+from .kernels import quant as quant_kernels
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class CompressionCfg:
+    """Mirror of the Rust ``QuantConfig`` + ``Arch`` (config.rs)."""
+
+    mode: str = "fp32"  # fp32 | rowwise | blockwise | vm
+    proj_ratio: int = 8  # D/R
+    group_ratio: int = 1  # G/R (blockwise only)
+    # VM boundaries per layer, resolved at trace time by aot.py.
+    alphas: Optional[Sequence[float]] = None
+    betas: Optional[Sequence[float]] = None
+    use_pallas: bool = True
+    # "gcn" (Eq. 1) or "sage" (GraphSAGE concat form — the paper's
+    # architecture; weights are (2·d_in, d_out)).
+    arch: str = "gcn"
+
+    @property
+    def compressed(self) -> bool:
+        return self.mode != "fp32"
+
+    def slug(self) -> str:
+        return {
+            "fp32": "fp32",
+            "rowwise": "int2_exact",
+            "blockwise": f"int2_g{self.group_ratio}",
+            "vm": "int2_vm",
+        }[self.mode]
+
+
+def _qdq(proj, group, key, cfg: CompressionCfg, layer: int):
+    """Fused quantize+dequantize on the projected activation."""
+    if cfg.mode == "vm":
+        a = float(cfg.alphas[layer])
+        b = float(cfg.betas[layer])
+        if cfg.use_pallas:
+            return quant_kernels.quant_dequant_blockwise_vm(proj, group, key, a, b)
+        return ref.quant_dequant_blockwise_vm(proj, group, key, a, b)
+    if cfg.use_pallas:
+        return quant_kernels.quant_dequant_blockwise(proj, group, key)
+    return ref.quant_dequant_blockwise(proj, group, key)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def compressed_matmul(u, w, rp, key, cfg: CompressionCfg, layer: int):
+    """``U @ Θ`` whose backward uses the compressed stash of ``U``."""
+    return u @ w
+
+
+def _compressed_matmul_fwd(u, w, rp, key, cfg: CompressionCfg, layer: int):
+    out = u @ w
+    r = rp.shape[1]
+    group = r if cfg.mode in ("rowwise", "vm") else cfg.group_ratio * r
+    proj_hat = _qdq(u @ rp, group, key, cfg, layer)
+    # Residuals: ONLY the compressed reconstruction + projection + weights.
+    return out, (proj_hat, rp, w)
+
+
+def _compressed_matmul_bwd(cfg: CompressionCfg, layer: int, res, g):
+    proj_hat, rp, w = res
+    u_hat = proj_hat @ rp.T  # IRP (Eq. 5)
+    dw = u_hat.T @ g
+    du = g @ w.T
+    return du, dw, None, None
+
+
+compressed_matmul.defvjp(_compressed_matmul_fwd, _compressed_matmul_bwd)
+
+
+def forward(params, x, adj, key, cfg: CompressionCfg):
+    """GNN forward with per-layer compression. ``params`` is a list of
+    weight matrices ``[Θ_0 … Θ_{L-1}]``. The compressed (and stashed)
+    activation is the layer input: ``Â H`` for GCN, ``[H ‖ Â H]`` for
+    GraphSAGE."""
+    h = x
+    last = len(params) - 1
+    for layer, w in enumerate(params):
+        if cfg.use_pallas and not cfg.compressed:
+            u = gnn_kernels.matmul(adj, h)
+        else:
+            u = adj @ h
+        if cfg.arch == "sage":
+            u = jnp.concatenate([h, u], axis=1)
+        if cfg.compressed:
+            key, kp, kq = jax.random.split(key, 3)
+            d = u.shape[1]
+            rp = ref.random_projection(kp, d, max(d // cfg.proj_ratio, 1))
+            p = compressed_matmul(u, w, rp, kq, cfg, layer)
+        else:
+            p = gnn_kernels.matmul(u, w) if cfg.use_pallas else u @ w
+        h = p if layer == last else jax.nn.relu(p)
+    return h
+
+
+def masked_loss(logits, onehot, mask):
+    """Masked mean softmax cross-entropy. ``mask`` is (N, 1) float."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_node = -(onehot * logp).sum(axis=-1, keepdims=True)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_node * mask).sum() / denom
+
+
+def loss_fn(params, x, adj, onehot, mask, key, cfg: CompressionCfg):
+    return masked_loss(forward(params, x, adj, key, cfg), onehot, mask)
+
+
+# ---------------------------------------------------------------------------
+# Training step (Adam) — the artifact entry point.
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclass(frozen=True)
+class StepCfg:
+    lr: float = 0.01
+    compression: CompressionCfg = field(default_factory=CompressionCfg)
+
+
+def train_step(step_cfg: StepCfg, x, adj, onehot, mask, params, ms, vs, t, key_f32):
+    """One full-batch Adam step.
+
+    Matches the Rust-side artifact contract (coordinator/aot.rs): `t` is a
+    (1,1) f32 step counter, `key_f32` a (1,2) f32 tensor of small ints.
+    Returns (new_params, new_ms, new_vs, loss(1,1)).
+    """
+    key = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(key, key_f32[0, 0].astype(jnp.int32))
+    key = jax.random.fold_in(key, key_f32[0, 1].astype(jnp.int32))
+
+    loss, grads = jax.value_and_grad(loss_fn)(
+        params, x, adj, onehot, mask, key, step_cfg.compression
+    )
+    tt = t[0, 0]
+    b1c = 1.0 - ADAM_B1 ** tt
+    b2c = 1.0 - ADAM_B2 ** tt
+    new_params, new_ms, new_vs = [], [], []
+    for p, g, m, v in zip(params, grads, ms, vs):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        new_params.append(p - step_cfg.lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_ms.append(m)
+        new_vs.append(v)
+    return new_params, new_ms, new_vs, loss.reshape(1, 1)
+
+
+def make_step_fn(step_cfg: StepCfg, layers: int = 3):
+    """Flatten :func:`train_step` to the positional-arg signature the Rust
+    AOT coordinator feeds (coordinator/aot.rs): weights/moments as separate
+    tensors, outputs as one flat tuple."""
+
+    def fn(x, adj, onehot, mask, *rest):
+        ws = list(rest[0:layers])
+        ms = list(rest[layers : 2 * layers])
+        vs = list(rest[2 * layers : 3 * layers])
+        t, key = rest[3 * layers], rest[3 * layers + 1]
+        nps, nms, nvs, loss = train_step(
+            step_cfg, x, adj, onehot, mask, ws, ms, vs, t, key
+        )
+        return (*nps, *nms, *nvs, loss)
+
+    return fn
+
+
+def eval_forward(x, adj, params):
+    """Inference logits (FP32, no compression — evaluation path)."""
+    cfg = CompressionCfg(mode="fp32", use_pallas=False)
+    return forward(list(params), x, adj, jax.random.PRNGKey(0), cfg)
+
+
+def init_params(key, dims: Sequence[int]):
+    """Glorot-uniform weights for widths ``dims = [F, H, …, C]``."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        limit = jnp.sqrt(6.0 / (dims[i] + dims[i + 1]))
+        params.append(
+            jax.random.uniform(
+                sub, (dims[i], dims[i + 1]), jnp.float32, -limit, limit
+            )
+        )
+    return params

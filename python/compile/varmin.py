@@ -1,0 +1,73 @@
+"""Variance minimization on the Python side (mirrors rust/src/varmin.rs).
+
+`aot.py` needs the optimal INT2 boundaries (α*, β*) at trace time to bake
+them into the VM artifacts. We re-derive them here — closed-form Eq. 10
+via truncated-normal partial moments + scipy's Nelder–Mead — and pytest
+cross-checks that the two implementations agree to 1e-6, so the Rust and
+JAX paths provably quantize with identical bins.
+"""
+
+import math
+from dataclasses import dataclass
+
+from scipy.optimize import minimize
+from scipy.special import ndtri  # Φ⁻¹
+from scipy.stats import norm
+
+
+@dataclass(frozen=True)
+class ClippedNormal:
+    """Eq. 7: CN_{[1/D]}(μ=B/2, σ=-μ/Φ⁻¹(1/D)) clipped to [0, B]."""
+
+    mu: float
+    sigma: float
+    b: float
+    d: int
+
+    @classmethod
+    def for_bits(cls, bits: int, d: int) -> "ClippedNormal":
+        if d < 3:
+            raise ValueError(f"clipped normal needs D >= 3, got {d}")
+        b = float(2**bits - 1)
+        mu = b / 2.0
+        sigma = -mu / ndtri(1.0 / d)
+        return cls(mu=mu, sigma=sigma, b=b, d=d)
+
+    def partial_moments(self, a: float, c: float):
+        """(m0, m1, m2) of the underlying normal on [a, c]."""
+        za = (a - self.mu) / self.sigma
+        zc = (c - self.mu) / self.sigma
+        pa, pc = norm.pdf(za), norm.pdf(zc)
+        m0 = norm.cdf(zc) - norm.cdf(za)
+        m1 = self.mu * m0 - self.sigma * (pc - pa)
+        m2 = (self.mu**2 + self.sigma**2) * m0 - self.sigma * (
+            (c + self.mu) * pc - (a + self.mu) * pa
+        )
+        return m0, m1, m2
+
+
+def expected_sr_variance(cn: ClippedNormal, alpha: float, beta: float) -> float:
+    """Eq. 10 in closed form (see rust/src/varmin.rs for the derivation)."""
+    if not (0.0 < alpha < beta < cn.b):
+        return math.inf
+
+    def bin_term(a: float, c: float) -> float:
+        m0, m1, m2 = cn.partial_moments(a, c)
+        delta = c - a
+        return -m2 + (delta + 2.0 * a) * m1 - a * (delta + a) * m0
+
+    return bin_term(0.0, alpha) + bin_term(alpha, beta) + bin_term(beta, cn.b)
+
+
+def optimal_boundaries(d: int, bits: int = 2):
+    """Minimize Eq. 10 over (α, β) for CN_{[1/D]}; returns
+    (alpha, beta, var_opt, var_uniform)."""
+    cn = ClippedNormal.for_bits(bits, d)
+    res = minimize(
+        lambda p: expected_sr_variance(cn, p[0], p[1]),
+        x0=[cn.mu - 0.5, cn.mu + 0.5],
+        method="Nelder-Mead",
+        options={"xatol": 1e-10, "fatol": 1e-14, "maxiter": 800},
+    )
+    alpha, beta = float(res.x[0]), float(res.x[1])
+    return alpha, beta, float(res.fun), expected_sr_variance(cn, 1.0, 2.0)

@@ -1,0 +1,22 @@
+"""Shared pytest fixtures for the build-time Python test suite."""
+
+import os
+import sys
+
+import jax
+import pytest
+
+# Make `compile` importable when pytest runs from the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_x64_off():
+    # The artifact contract is f32 end to end.
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,89 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the
+shapes the Rust runtime contract expects, and the manifest is complete.
+
+Full-size lowering is exercised by `make artifacts`; here we lower the
+--quick shapes so the suite stays fast.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.model import CompressionCfg
+
+
+class TestMakeCompression:
+    def test_all_variants_resolve(self):
+        widths = [32, 32, 32, 8]
+        for v in aot.VARIANTS:
+            cfg = aot.make_compression(v, widths)
+            assert isinstance(cfg, CompressionCfg)
+
+    def test_vm_boundaries_sane(self):
+        cfg = aot.make_compression("vm", [128, 128, 128, 40])
+        assert len(cfg.alphas) == 3 == len(cfg.betas)
+        for a, b in zip(cfg.alphas, cfg.betas):
+            assert 0.0 < a < b < 3.0
+            assert a + b == pytest.approx(3.0, abs=1e-3)
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            aot.make_compression("int1", [8, 8])
+
+    def test_slugs(self):
+        widths = [32, 32, 32, 8]
+        slugs = [aot.make_compression(v, widths).slug() for v in aot.VARIANTS]
+        assert slugs == ["fp32", "int2_exact", "int2_g8", "int2_g64", "int2_vm"]
+
+
+class TestLowering:
+    def test_train_step_lowers_to_hlo_text(self):
+        ds = dict(num_nodes=64, num_features=16, num_classes=4)
+        lowered, inputs, outputs = aot.lower_train_step(ds, 32, "blockwise:8")
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert len(inputs) == 15
+        assert len(outputs) == 10
+        assert inputs[0] == {"name": "features", "shape": [64, 16]}
+        assert inputs[-1] == {"name": "key", "shape": [1, 2]}
+        assert outputs[-1] == {"name": "loss", "shape": [1, 1]}
+
+    def test_eval_lowers(self):
+        ds = dict(num_nodes=64, num_features=16, num_classes=4)
+        lowered, inputs, outputs = aot.lower_eval(ds, 32)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert len(inputs) == 5
+        assert outputs == [{"name": "logits", "shape": [64, 4]}]
+
+    def test_vm_train_step_lowers(self):
+        ds = dict(num_nodes=64, num_features=32, num_classes=4)
+        lowered, _, _ = aot.lower_train_step(ds, 32, "vm")
+        assert aot.to_hlo_text(lowered).startswith("HloModule")
+
+
+@pytest.mark.slow
+class TestEndToEnd:
+    def test_quick_artifact_build(self, tmp_path):
+        out = tmp_path / "artifacts"
+        res = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out), "--quick"],
+            capture_output=True,
+            text=True,
+            cwd=str(aot.os.path.dirname(aot.os.path.dirname(aot.__file__))),
+        )
+        assert res.returncode == 0, res.stderr[-2000:]
+        manifest = json.loads((out / "manifest.json").read_text())
+        names = {a["name"] for a in manifest["artifacts"]}
+        assert "train_step_arxiv_fp32" in names
+        assert "train_step_arxiv_int2_g8" in names
+        assert "eval_arxiv" in names
+        for a in manifest["artifacts"]:
+            text = (out / a["file"]).read_text()
+            assert text.startswith("HloModule"), a["name"]
+            # Shapes must appear in the HLO parameter list.
+            n, f = a["inputs"][0]["shape"]
+            assert f"f32[{n},{f}]" in text

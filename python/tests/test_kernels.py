@@ -1,0 +1,218 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+The hypothesis sweeps are the contract: for every shape/group/dtype the
+kernels must agree with ref.py bit-for-bit given the same PRNG key.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gnn, quant, ref
+
+ATOL = 1e-5
+
+
+def _rand(key, shape, scale=2.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize+dequantize (uniform bins)
+# ---------------------------------------------------------------------------
+
+
+class TestQuantDequantUniform:
+    def test_matches_ref_basic(self, key):
+        x = _rand(key, (32, 16))
+        out = quant.quant_dequant_blockwise(x, 16, key)
+        expect = ref.quant_dequant_blockwise(x, 16, key)
+        np.testing.assert_allclose(out, expect, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 40),
+        group_pow=st.integers(1, 6),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, rows, group_pow, seed):
+        group = 2**group_pow
+        key = jax.random.PRNGKey(seed)
+        # total elements must divide group: build (rows, group) directly.
+        x = _rand(key, (rows, group))
+        out = quant.quant_dequant_blockwise(x, group, key)
+        expect = ref.quant_dequant_blockwise(x, group, key)
+        np.testing.assert_allclose(out, expect, atol=ATOL)
+
+    def test_error_bounded_by_bin_width(self, key):
+        x = _rand(key, (64, 32))
+        out = quant.quant_dequant_blockwise(x, 32, key)
+        blocks = np.asarray(x).reshape(-1, 32)
+        widths = (blocks.max(1) - blocks.min(1)) / 3.0
+        err = np.abs(np.asarray(out).reshape(-1, 32) - blocks)
+        assert (err <= widths[:, None] * 1.0001).all()
+
+    def test_unbiased(self):
+        # E[Dequant(Quant(h))] = h (footnote 4).
+        key = jax.random.PRNGKey(1)
+        x = _rand(key, (4, 16))
+        acc = np.zeros(x.shape, np.float64)
+        trials = 800
+        fn = jax.jit(lambda x, k: ref.quant_dequant_blockwise(x, 16, k))
+        for t in range(trials):
+            acc += np.asarray(fn(x, jax.random.PRNGKey(t)))
+        mean = acc / trials
+        rel = np.abs(mean - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+        assert rel < 0.05, rel
+
+    def test_constant_block_exact(self, key):
+        x = jnp.full((8, 16), 2.5)
+        out = quant.quant_dequant_blockwise(x, 16, key)
+        np.testing.assert_allclose(out, x, atol=0)
+
+    def test_levels_are_quantized(self, key):
+        # Every output must be one of the 4 levels of its block.
+        x = _rand(key, (16, 8))
+        out = np.asarray(quant.quant_dequant_blockwise(x, 8, key)).reshape(-1, 8)
+        blocks = np.asarray(x).reshape(-1, 8)
+        zero = blocks.min(1, keepdims=True)
+        rng = blocks.max(1, keepdims=True) - zero
+        for k in range(out.shape[0]):
+            levels = zero[k] + np.arange(4)[:, None] / 3.0 * rng[k]
+            dist = np.abs(out[k][None, :] - levels).min(0)
+            assert dist.max() < 1e-5
+
+    def test_pallas_vs_ref_gradient_free(self):
+        # The kernel is used inside custom_vjp fwd only; still, it must be
+        # traceable under jit without error.
+        key = jax.random.PRNGKey(2)
+        x = _rand(key, (24, 32))
+        jitted = jax.jit(lambda x, k: quant.quant_dequant_blockwise(x, 32, k))
+        out = jitted(x, key)
+        assert out.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# Variance-minimized bins
+# ---------------------------------------------------------------------------
+
+
+class TestQuantDequantVm:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 32),
+        group_pow=st.integers(2, 6),
+        seed=st.integers(0, 2**16),
+        alpha=st.floats(0.3, 1.4),
+        width=st.floats(0.2, 1.2),
+    )
+    def test_matches_ref_hypothesis(self, rows, group_pow, seed, alpha, width):
+        beta = min(alpha + width, 2.9)
+        group = 2**group_pow
+        key = jax.random.PRNGKey(seed)
+        x = _rand(key, (rows, group))
+        out = quant.quant_dequant_blockwise_vm(x, group, key, alpha, beta)
+        expect = ref.quant_dequant_blockwise_vm(x, group, key, alpha, beta)
+        np.testing.assert_allclose(out, expect, atol=ATOL)
+
+    def test_uniform_boundaries_recover_uniform_sr(self, key):
+        # With (α, β) = (1, 2) the VM path must equal the uniform path.
+        x = _rand(key, (16, 16))
+        vm = quant.quant_dequant_blockwise_vm(x, 16, key, 1.0, 2.0)
+        uni = quant.quant_dequant_blockwise(x, 16, key)
+        np.testing.assert_allclose(vm, uni, atol=ATOL)
+
+    def test_unbiased_vm(self):
+        key = jax.random.PRNGKey(3)
+        x = _rand(key, (4, 16))
+        acc = np.zeros(x.shape, np.float64)
+        trials = 800
+        fn = jax.jit(
+            lambda x, k: ref.quant_dequant_blockwise_vm(x, 16, k, 1.2, 1.8)
+        )
+        for t in range(trials):
+            acc += np.asarray(fn(x, jax.random.PRNGKey(t)))
+        mean = acc / trials
+        rel = np.abs(mean - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+        assert rel < 0.05, rel
+
+    def test_outputs_on_vm_levels(self, key):
+        x = _rand(key, (8, 8))
+        a, b = 0.9, 2.1
+        out = np.asarray(
+            quant.quant_dequant_blockwise_vm(x, 8, key, a, b)
+        ).reshape(-1, 8)
+        blocks = np.asarray(x).reshape(-1, 8)
+        zero = blocks.min(1, keepdims=True)
+        rng = blocks.max(1, keepdims=True) - zero
+        bounds = np.array([0.0, a, b, 3.0])
+        for k in range(out.shape[0]):
+            levels = zero[k] + bounds[:, None] / 3.0 * rng[k]
+            dist = np.abs(out[k][None, :] - levels).min(0)
+            assert dist.max() < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Pallas matmul kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 150),
+        k=st.integers(1, 150),
+        n=st.integers(1, 150),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_jnp(self, m, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        a = _rand(k1, (m, k))
+        b = _rand(k2, (k, n))
+        out = gnn.matmul(a, b)
+        np.testing.assert_allclose(out, a @ b, atol=1e-3, rtol=1e-4)
+
+    def test_gnn_layer_composes(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        adj = _rand(k1, (40, 40))
+        h = _rand(k2, (40, 24))
+        w = _rand(k3, (24, 8))
+        out = gnn.gnn_layer(adj, h, w)
+        np.testing.assert_allclose(out, (adj @ h) @ w, atol=1e-3, rtol=1e-4)
+
+    def test_exact_tile_sizes(self, key):
+        # No padding path: shapes exactly on the (128, 128) grid.
+        k1, k2 = jax.random.split(key)
+        a = _rand(k1, (128, 256))
+        b = _rand(k2, (256, 128))
+        np.testing.assert_allclose(gnn.matmul(a, b), a @ b, atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Random projection oracle
+# ---------------------------------------------------------------------------
+
+
+class TestRandomProjection:
+    def test_entries_and_norm(self, key):
+        rp = ref.random_projection(key, 64, 8)
+        vals = np.unique(np.abs(np.asarray(rp)))
+        np.testing.assert_allclose(vals, [1.0 / np.sqrt(8.0)], atol=1e-6)
+
+    def test_rrt_identity_in_expectation(self):
+        d, r = 16, 4
+        acc = np.zeros((d, d))
+        trials = 2000
+        for t in range(trials):
+            rp = np.asarray(ref.random_projection(jax.random.PRNGKey(t), d, r))
+            acc += rp @ rp.T
+        acc /= trials
+        np.testing.assert_allclose(acc, np.eye(d), atol=0.1)
+
+
+def test_vmem_estimates_positive():
+    assert quant.vmem_bytes_per_tile(128) > 0
+    assert gnn.vmem_bytes_per_tile() == (128 * 128 * 3) * 4

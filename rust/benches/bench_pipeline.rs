@@ -1,0 +1,47 @@
+//! End-to-end epoch benchmark on the native pipeline: one full-batch
+//! train step (forward + compression + backward + Adam) per config.
+//! This regenerates the *shape* of Table 1's S column: FP32 fastest,
+//! EXACT slowest of the quantized rows, block-wise recovering speed as
+//! G/R grows, VM slowest.
+//!
+//! Run: `cargo bench --bench bench_pipeline`
+
+use iexact::config::{DatasetSpec, TrainConfig};
+use iexact::util::timer::measure;
+
+fn main() {
+    let mut spec = DatasetSpec::arxiv_like();
+    spec.num_nodes = 1024; // bench-scale
+    let dataset = spec.generate(42);
+    let cfg = TrainConfig {
+        hidden_dim: 128,
+        num_layers: 3,
+        epochs: 4,
+        eval_every: 100,
+        seeds: vec![0],
+        ..TrainConfig::default()
+    };
+    println!(
+        "# bench_pipeline: {} nodes, {} edges, hidden {}",
+        dataset.num_nodes(),
+        dataset.num_edges(),
+        cfg.hidden_dim
+    );
+    println!("{:<24} {:>14} {:>12}", "config", "ms/epoch", "epochs/s");
+
+    let configs = iexact::coordinator::table1_configs(&[2, 4, 8, 16, 32, 64]);
+    for quant in configs {
+        let (_, med, _) = measure(1, 3, || {
+            std::hint::black_box(
+                iexact::pipeline::train(&dataset, &quant, &cfg, 0).unwrap(),
+            );
+        });
+        let per_epoch = med / cfg.epochs as f64;
+        println!(
+            "{:<24} {:>14.2} {:>12.2}",
+            quant.label(),
+            per_epoch * 1e3,
+            1.0 / per_epoch
+        );
+    }
+}

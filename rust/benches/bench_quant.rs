@@ -1,0 +1,79 @@
+//! Quantization micro-benchmarks: quantize+dequantize throughput across
+//! bit widths and block sizes. This is the substrate behind Table 1's
+//! speed column — larger blocks amortize (zero, range) metadata work,
+//! which is why block-wise is *faster* than EXACT's per-row scheme.
+//!
+//! Run: `cargo bench --bench bench_quant`
+
+use iexact::quant::{BinSpec, BlockwiseQuantizer, RowQuantizer};
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
+use iexact::util::timer::measure;
+
+fn main() {
+    let n = 4096;
+    let r = 64;
+    let mut rng = Pcg64::new(1);
+    let h = Matrix::from_fn(n, r, |_, _| rng.next_f32() * 4.0 - 2.0);
+    let scalars = (n * r) as f64;
+
+    println!("# bench_quant: H is {n}x{r} f32 ({scalars} scalars)");
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "config", "median ms", "Mscalar/s", "bytes"
+    );
+
+    // Per-row (EXACT) at each bit width.
+    for bits in [2u32, 4, 8] {
+        let q = RowQuantizer::new(bits);
+        let mut rng = Pcg64::new(2);
+        let mut nbytes = 0;
+        let (_, med, _) = measure(3, 10, || {
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            nbytes = ct.nbytes();
+            std::hint::black_box(ct.dequantize().unwrap());
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            format!("rowwise int{bits} quant+dequant"),
+            med * 1e3,
+            scalars / med / 1e6,
+            nbytes
+        );
+    }
+
+    // Block-wise INT2 across the paper's G/R sweep.
+    for g_ratio in [2usize, 4, 8, 16, 32, 64] {
+        let q = BlockwiseQuantizer::new(2, g_ratio * r);
+        let mut rng = Pcg64::new(3);
+        let mut nbytes = 0;
+        let (_, med, _) = measure(3, 10, || {
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            nbytes = ct.nbytes();
+            std::hint::black_box(ct.dequantize().unwrap());
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            format!("blockwise int2 G/R={g_ratio}"),
+            med * 1e3,
+            scalars / med / 1e6,
+            nbytes
+        );
+    }
+
+    // Variance-minimized bins (non-uniform SR path).
+    let bins = BinSpec::int2_vm(1.2, 1.8).unwrap();
+    let q = RowQuantizer::with_bins(2, bins);
+    let mut rng = Pcg64::new(4);
+    let (_, med, _) = measure(3, 10, || {
+        let ct = q.quantize(&h, &mut rng).unwrap();
+        std::hint::black_box(ct.dequantize().unwrap());
+    });
+    println!(
+        "{:<34} {:>12.3} {:>14.1} {:>12}",
+        "rowwise int2+VM quant+dequant",
+        med * 1e3,
+        scalars / med / 1e6,
+        "-"
+    );
+}

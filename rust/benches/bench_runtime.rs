@@ -1,0 +1,62 @@
+//! PJRT runtime benchmarks: artifact compile time and per-step execution
+//! overhead of the AOT path (JAX graph + Pallas kernel → HLO → PJRT CPU).
+//! Requires `make artifacts`; prints a notice and exits cleanly otherwise
+//! so `cargo bench` stays green on a fresh checkout.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_runtime`
+
+use iexact::config::DatasetSpec;
+use iexact::coordinator::AotCoordinator;
+use iexact::runtime::Runtime;
+use iexact::util::timer::measure;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("# bench_runtime: artifacts/manifest.json missing — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::open(dir).unwrap();
+    println!("# bench_runtime: platform {}", rt.platform());
+    println!("{:<36} {:>14}", "op", "time");
+
+    // Compile time per artifact (cold).
+    for name in rt.artifact_names() {
+        let t0 = Instant::now();
+        rt.load(&name).unwrap();
+        println!(
+            "{:<36} {:>11.1} ms",
+            format!("compile {name}"),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // Steady-state step latency for one train-step artifact.
+    let slug = "int2_g8";
+    let name = format!("train_step_arxiv_{slug}");
+    if rt.manifest().get(&name).is_some() {
+        let entry = rt.load(&name).unwrap().entry.clone();
+        let spec = DatasetSpec {
+            num_nodes: entry.meta["num_nodes"].parse().unwrap(),
+            num_features: entry.meta["num_features"].parse().unwrap(),
+            num_classes: entry.meta["num_classes"].parse().unwrap(),
+            ..DatasetSpec::arxiv_like()
+        };
+        let ds = spec.generate(42);
+        let mut coord = AotCoordinator::new(&mut rt, "arxiv", slug, &ds, 0).unwrap();
+        let (_, med, min) = measure(3, 15, || {
+            std::hint::black_box(coord.step(slug).unwrap());
+        });
+        println!(
+            "{:<36} {:>11.2} ms (min {:.2})",
+            format!("train step {slug} (N={})", ds.num_nodes()),
+            med * 1e3,
+            min * 1e3
+        );
+        let (_, med, _) = measure(2, 10, || {
+            std::hint::black_box(coord.logits().unwrap());
+        });
+        println!("{:<36} {:>11.2} ms", "eval forward", med * 1e3);
+    }
+}

@@ -1,0 +1,36 @@
+//! Table 1 regeneration bench: runs the full sweep at quick effort and
+//! prints the paper-format table plus per-cell timing. This is the
+//! canonical "reproduce Table 1" entry point for `cargo bench`.
+//!
+//! Run: `cargo bench --bench bench_table1`
+//! (paper effort: `cargo run --release -- table1 --effort paper`)
+
+use iexact::experiments::{table1, Effort};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let t = table1::run(Effort::Quick, |line| eprintln!("{line}")).unwrap();
+    let elapsed = t0.elapsed();
+    println!("\n{}", t.render());
+    println!("# sweep completed in {:.1} s", elapsed.as_secs_f64());
+
+    // Paper-shape assertions (who wins, roughly by how much).
+    let rows = &t.outcomes;
+    // rows are [fp32, exact, g2..g64, vm] × datasets.
+    let per_ds = rows.len() / 2;
+    for ds in 0..2 {
+        let base = ds * per_ds;
+        let fp32 = &rows[base].summary;
+        let exact = &rows[base + 1].summary;
+        let g64 = &rows[base + 7].summary;
+        assert!(fp32.memory_mb > 20.0 * exact.memory_mb, "95% claim");
+        assert!(g64.memory_mb < exact.memory_mb, "blockwise < exact");
+        println!(
+            "# {}: INT2/FP32 memory = {:.1}%, G64/EXACT memory = {:.1}%",
+            fp32.dataset,
+            100.0 * exact.memory_mb / fp32.memory_mb,
+            100.0 * g64.memory_mb / exact.memory_mb
+        );
+    }
+}

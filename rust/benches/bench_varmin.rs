@@ -1,0 +1,55 @@
+//! Variance-minimization solver benchmarks: Eq. 10 closed-form evaluation,
+//! the Nelder–Mead boundary optimization, and the Appendix B lookup-table
+//! build (the paper computes D ∈ {4..2048} offline — we measure how cheap
+//! that is with the closed-form objective).
+//!
+//! Run: `cargo bench --bench bench_varmin`
+
+use iexact::stats::ClippedNormal;
+use iexact::util::timer::measure;
+use iexact::varmin::{
+    expected_sr_variance, expected_sr_variance_quadrature, optimal_boundaries, BoundaryTable,
+};
+
+fn main() {
+    println!("# bench_varmin");
+    println!("{:<44} {:>14}", "op", "median");
+
+    let cn = ClippedNormal::new(2, 64).unwrap();
+
+    let (_, med, _) = measure(10, 200, || {
+        std::hint::black_box(expected_sr_variance(&cn, 1.1, 1.9).unwrap());
+    });
+    println!("{:<44} {:>11.2} us", "Eq.10 closed form (1 eval)", med * 1e6);
+
+    let (_, med, _) = measure(2, 10, || {
+        std::hint::black_box(
+            expected_sr_variance_quadrature(&cn, 1.1, 1.9, 2000).unwrap(),
+        );
+    });
+    println!(
+        "{:<44} {:>11.2} us",
+        "Eq.10 quadrature x2000 (cross-check)",
+        med * 1e6
+    );
+
+    let (_, med, _) = measure(2, 20, || {
+        std::hint::black_box(optimal_boundaries(&cn).unwrap());
+    });
+    println!(
+        "{:<44} {:>11.2} ms",
+        "optimal_boundaries (Nelder-Mead)",
+        med * 1e3
+    );
+
+    for range in [(4usize, 128usize), (4, 512)] {
+        let (_, med, _) = measure(0, 3, || {
+            std::hint::black_box(BoundaryTable::build(range.0, range.1).unwrap());
+        });
+        println!(
+            "{:<44} {:>11.2} ms",
+            format!("BoundaryTable::build D in [{}, {}]", range.0, range.1),
+            med * 1e3
+        );
+    }
+}

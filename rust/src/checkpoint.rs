@@ -1,0 +1,183 @@
+//! Model checkpointing: save/load trained GNN weights with a small
+//! self-describing binary format (magic + version + arch + shapes +
+//! little-endian f32 payload + checksum), so long runs survive restarts
+//! and trained models can be shipped between the native and AOT paths.
+
+use crate::config::Arch;
+use crate::pipeline::GcnModel;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"IEXACKPT";
+const VERSION: u32 = 1;
+
+/// Serialize a model to `path`.
+pub fn save(model: &GcnModel, path: impl AsRef<Path>) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(match model.arch {
+        Arch::Gcn => 0,
+        Arch::GraphSage => 1,
+    });
+    buf.extend_from_slice(&(model.weights.len() as u32).to_le_bytes());
+    for w in &model.weights {
+        buf.extend_from_slice(&(w.rows() as u64).to_le_bytes());
+        buf.extend_from_slice(&(w.cols() as u64).to_le_bytes());
+        for &v in w.as_slice() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let checksum = fnv1a(&buf);
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a model from `path`, validating magic, version and checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<GcnModel> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() + 4 + 1 + 4 + 8 {
+        return Err(Error::Artifact("checkpoint too short".into()));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        return Err(Error::Artifact("checkpoint checksum mismatch".into()));
+    }
+    let mut cur = body;
+    let take = |cur: &mut &[u8], n: usize| -> Result<Vec<u8>> {
+        if cur.len() < n {
+            return Err(Error::Artifact("checkpoint truncated".into()));
+        }
+        let (head, rest) = cur.split_at(n);
+        *cur = rest;
+        Ok(head.to_vec())
+    };
+    if take(&mut cur, 8)? != MAGIC {
+        return Err(Error::Artifact("not an iexact checkpoint".into()));
+    }
+    let version = u32::from_le_bytes(take(&mut cur, 4)?.try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Artifact(format!(
+            "unsupported checkpoint version {version}"
+        )));
+    }
+    let arch = match take(&mut cur, 1)?[0] {
+        0 => Arch::Gcn,
+        1 => Arch::GraphSage,
+        other => return Err(Error::Artifact(format!("bad arch byte {other}"))),
+    };
+    let n_weights = u32::from_le_bytes(take(&mut cur, 4)?.try_into().unwrap()) as usize;
+    if n_weights == 0 || n_weights > 1024 {
+        return Err(Error::Artifact(format!("bad layer count {n_weights}")));
+    }
+    let mut weights = Vec::with_capacity(n_weights);
+    for _ in 0..n_weights {
+        let rows = u64::from_le_bytes(take(&mut cur, 8)?.try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(take(&mut cur, 8)?.try_into().unwrap()) as usize;
+        if rows.saturating_mul(cols) > (1 << 30) {
+            return Err(Error::Artifact(format!("weight {rows}x{cols} too large")));
+        }
+        let raw = take(&mut cur, rows * cols * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        weights.push(Matrix::from_vec(rows, cols, data)?);
+    }
+    if !cur.is_empty() {
+        return Err(Error::Artifact("trailing bytes in checkpoint".into()));
+    }
+    Ok(GcnModel { arch, weights })
+}
+
+/// FNV-1a 64-bit hash (checksum only — not cryptographic).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    fn model(arch: Arch) -> GcnModel {
+        let mut rng = Pcg64::new(1);
+        GcnModel::init_arch(arch, 16, 8, 4, 3, &mut rng).unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("iexact_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_both_archs() {
+        for arch in [Arch::Gcn, Arch::GraphSage] {
+            let m = model(arch);
+            let p = tmp(arch.label());
+            save(&m, &p).unwrap();
+            let loaded = load(&p).unwrap();
+            assert_eq!(loaded.arch, m.arch);
+            assert_eq!(loaded.weights.len(), m.weights.len());
+            for (a, b) in loaded.weights.iter().zip(&m.weights) {
+                assert_eq!(a, b);
+            }
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = model(Arch::Gcn);
+        let p = tmp("corrupt");
+        save(&m, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err(), "checksum must catch corruption");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_short_files() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTACKPT0000000000000000000000").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::write(&p, b"xx").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn loaded_model_predicts_identically() {
+        let ds = crate::config::DatasetSpec::tiny().generate(3);
+        let mut rng = Pcg64::new(5);
+        let m = GcnModel::init_arch(
+            Arch::GraphSage,
+            ds.num_features(),
+            16,
+            ds.num_classes,
+            2,
+            &mut rng,
+        )
+        .unwrap();
+        let p = tmp("predict");
+        save(&m, &p).unwrap();
+        let loaded = load(&p).unwrap();
+        let a = m.forward(&ds).unwrap();
+        let b = loaded.forward(&ds).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,507 @@
+//! Experiment configuration: typed configs for datasets, quantization,
+//! training and sweeps, plus a dependency-free TOML-subset loader so
+//! experiments are reproducible from checked-in config files.
+
+use crate::graph::{Dataset, GraphGenerator};
+use crate::util::toml::TomlTable;
+use crate::{Error, Result};
+
+/// How activations are compressed before being stashed for the backward
+/// pass. Mirrors the rows of Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantMode {
+    /// No compression: FP32 baseline (GraphSAGE [14]).
+    Fp32,
+    /// EXACT: random projection + per-row INT-b quantization [15].
+    RowWise,
+    /// This paper: random projection + block-wise INT-b quantization.
+    BlockWise {
+        /// Block size as a multiple of the projected dim (`G/R`): the
+        /// paper sweeps {2, 4, 8, 16, 32, 64}.
+        group_ratio: usize,
+    },
+    /// EXACT + variance-minimized non-uniform bins ("INT2+VM").
+    RowWiseVm,
+}
+
+impl QuantMode {
+    pub fn label(&self) -> String {
+        match self {
+            QuantMode::Fp32 => "FP32".into(),
+            QuantMode::RowWise => "INT2 (EXACT)".into(),
+            QuantMode::BlockWise { group_ratio } => format!("INT2 G/R={group_ratio}"),
+            QuantMode::RowWiseVm => "INT2+VM".into(),
+        }
+    }
+}
+
+/// Full quantization configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantConfig {
+    pub mode: QuantMode,
+    /// Bit width (the paper's headline is 2).
+    pub bits: u32,
+    /// Random-projection ratio `D/R` (paper: 8). 1 disables projection.
+    pub proj_ratio: usize,
+}
+
+impl QuantConfig {
+    pub fn fp32() -> Self {
+        QuantConfig {
+            mode: QuantMode::Fp32,
+            bits: 32,
+            proj_ratio: 1,
+        }
+    }
+
+    /// EXACT baseline: INT2, per-row, D/R = 8.
+    pub fn int2_exact() -> Self {
+        QuantConfig {
+            mode: QuantMode::RowWise,
+            bits: 2,
+            proj_ratio: 8,
+        }
+    }
+
+    /// This paper's block-wise INT2 with the given `G/R`.
+    pub fn int2_blockwise(group_ratio: usize) -> Self {
+        QuantConfig {
+            mode: QuantMode::BlockWise { group_ratio },
+            bits: 2,
+            proj_ratio: 8,
+        }
+    }
+
+    /// EXACT + variance minimization.
+    pub fn int2_vm() -> Self {
+        QuantConfig {
+            mode: QuantMode::RowWiseVm,
+            bits: 2,
+            proj_ratio: 8,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.mode.label()
+    }
+
+    /// Short machine-friendly name used for artifact files.
+    pub fn slug(&self) -> String {
+        match &self.mode {
+            QuantMode::Fp32 => "fp32".into(),
+            QuantMode::RowWise => format!("int{}_exact", self.bits),
+            QuantMode::BlockWise { group_ratio } => {
+                format!("int{}_g{}", self.bits, group_ratio)
+            }
+            QuantMode::RowWiseVm => format!("int{}_vm", self.bits),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.mode {
+            QuantMode::Fp32 => Ok(()),
+            _ => {
+                if !matches!(self.bits, 2 | 4 | 8) {
+                    return Err(Error::Config(format!("bits must be 2/4/8, got {}", self.bits)));
+                }
+                if self.proj_ratio == 0 {
+                    return Err(Error::Config("proj_ratio must be >= 1".into()));
+                }
+                if let QuantMode::BlockWise { group_ratio } = self.mode {
+                    if group_ratio == 0 {
+                        return Err(Error::Config("group_ratio must be >= 1".into()));
+                    }
+                }
+                if matches!(self.mode, QuantMode::RowWiseVm) && self.bits != 2 {
+                    return Err(Error::Config(
+                        "variance minimization is derived for INT2 only".into(),
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// GNN architecture. The paper's experiments use GraphSAGE [14]; the
+/// vanilla GCN of Eq. 1 is kept as the simpler default for examples and
+/// the AOT path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Kipf–Welling GCN: `H' = σ(Â H Θ)`.
+    Gcn,
+    /// GraphSAGE (mean aggregator, concat form):
+    /// `H' = σ([H ‖ Â H] Θ)` with `Θ ∈ R^{2d×d'}`.
+    GraphSage,
+}
+
+impl Arch {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Arch::Gcn => "gcn",
+            Arch::GraphSage => "graphsage",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Arch> {
+        match s {
+            "gcn" => Ok(Arch::Gcn),
+            "sage" | "graphsage" => Ok(Arch::GraphSage),
+            other => Err(Error::Config(format!("unknown architecture '{other}'"))),
+        }
+    }
+}
+
+/// GNN + optimizer hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub arch: Arch,
+    pub hidden_dim: usize,
+    pub num_layers: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seeds: Vec<u64>,
+    /// Evaluate on val/test every `eval_every` epochs.
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            arch: Arch::Gcn,
+            hidden_dim: 128,
+            num_layers: 3,
+            epochs: 100,
+            lr: 0.01,
+            weight_decay: 0.0,
+            seeds: vec![0, 1, 2],
+            eval_every: 5,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.num_layers < 2 {
+            return Err(Error::Config("need at least 2 GNN layers".into()));
+        }
+        if self.hidden_dim == 0 || self.epochs == 0 || self.seeds.is_empty() {
+            return Err(Error::Config("hidden_dim/epochs/seeds must be non-zero".into()));
+        }
+        if self.eval_every == 0 {
+            return Err(Error::Config("eval_every must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic-dataset specification; the registry of paper-analogue
+/// datasets lives here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub num_nodes: usize,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub mean_degree: f64,
+    pub feature_snr: f64,
+    /// Probability that a generated edge stays within its community —
+    /// the GNN's structural signal. Lower = harder task.
+    pub homophily: f64,
+}
+
+impl DatasetSpec {
+    /// OGB-Arxiv analogue (scaled: 170k → 2048 nodes, F = 128, C = 40,
+    /// matching the real feature/class dimensions and edge density ~14).
+    pub fn arxiv_like() -> Self {
+        DatasetSpec {
+            name: "arxiv-like".into(),
+            num_nodes: 2048,
+            num_features: 128,
+            num_classes: 40,
+            mean_degree: 13.7, // 2 * 1.17M / 170k
+            // Calibrated so the GCN lands off the accuracy ceiling
+            // (~70-90%), keeping config-to-config deltas observable.
+            // Separability grows with snr²·F, so snr must shrink ~1/√F.
+            feature_snr: 0.22,
+            homophily: 0.8,
+        }
+    }
+
+    /// Flickr analogue (scaled: 89k → 1792 nodes, F = 500, C = 7,
+    /// density ~20).
+    pub fn flickr_like() -> Self {
+        DatasetSpec {
+            name: "flickr-like".into(),
+            num_nodes: 1792,
+            num_features: 500,
+            num_classes: 7,
+            mean_degree: 20.0, // 2 * 900k / 89k
+            // Flickr is the harder task in the paper (51% vs 72%); a low
+            // SNR keeps our analogue off the ceiling as well (F = 500, so
+            // snr must be tiny for imperfect separability).
+            feature_snr: 0.10,
+            // Much weaker community structure than the citation graph —
+            // this is what keeps the paper's Flickr accuracy at ~51%.
+            homophily: 0.45,
+        }
+    }
+
+    /// Small fixture for tests and the quickstart example.
+    pub fn tiny() -> Self {
+        DatasetSpec {
+            name: "tiny".into(),
+            num_nodes: 256,
+            num_features: 32,
+            num_classes: 4,
+            mean_degree: 8.0,
+            feature_snr: 3.0,
+            homophily: 0.85,
+        }
+    }
+
+    /// Named registry lookup.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "arxiv" | "arxiv-like" => Ok(Self::arxiv_like()),
+            "flickr" | "flickr-like" => Ok(Self::flickr_like()),
+            "tiny" => Ok(Self::tiny()),
+            other => Err(Error::Config(format!("unknown dataset '{other}'"))),
+        }
+    }
+
+    /// All paper datasets.
+    pub fn paper_datasets() -> Vec<Self> {
+        vec![Self::arxiv_like(), Self::flickr_like()]
+    }
+
+    /// Materialize the dataset deterministically from a seed.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        GraphGenerator {
+            num_nodes: self.num_nodes,
+            num_features: self.num_features,
+            num_classes: self.num_classes,
+            mean_degree: self.mean_degree,
+            intra_community_prob: self.homophily,
+            preferential_frac: 0.25,
+            feature_snr: self.feature_snr,
+            train_frac: 0.6,
+            val_frac: 0.2,
+        }
+        .generate(&self.name, seed)
+        .expect("dataset spec is valid by construction")
+    }
+}
+
+/// A complete experiment: dataset × quantization × training.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetSpec,
+    pub quant: QuantConfig,
+    pub train: TrainConfig,
+    pub dataset_seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.quant.validate()?;
+        self.train.validate()?;
+        // The projected dimension must divide cleanly.
+        if self.quant.proj_ratio > 1 && self.train.hidden_dim % self.quant.proj_ratio != 0 {
+            return Err(Error::Config(format!(
+                "hidden_dim {} not divisible by D/R {}",
+                self.train.hidden_dim, self.quant.proj_ratio
+            )));
+        }
+        Ok(())
+    }
+
+    /// Parse from a TOML-subset file. See `configs/` for examples.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = TomlTable::parse(text)?;
+        let dataset_name = t.get_str("dataset.name").unwrap_or("arxiv-like");
+        let mut dataset = DatasetSpec::by_name(dataset_name)?;
+        if let Some(n) = t.get_int("dataset.num_nodes") {
+            dataset.num_nodes = n as usize;
+        }
+        if let Some(f) = t.get_int("dataset.num_features") {
+            dataset.num_features = f as usize;
+        }
+        if let Some(c) = t.get_int("dataset.num_classes") {
+            dataset.num_classes = c as usize;
+        }
+
+        let mode_str = t.get_str("quant.mode").unwrap_or("fp32");
+        let bits = t.get_int("quant.bits").unwrap_or(2) as u32;
+        let proj_ratio = t.get_int("quant.proj_ratio").unwrap_or(8) as usize;
+        let mode = match mode_str {
+            "fp32" => QuantMode::Fp32,
+            "rowwise" | "exact" => QuantMode::RowWise,
+            "blockwise" => QuantMode::BlockWise {
+                group_ratio: t.get_int("quant.group_ratio").unwrap_or(8) as usize,
+            },
+            "vm" | "rowwise_vm" => QuantMode::RowWiseVm,
+            other => return Err(Error::Config(format!("unknown quant mode '{other}'"))),
+        };
+        let quant = if matches!(mode, QuantMode::Fp32) {
+            QuantConfig::fp32()
+        } else {
+            QuantConfig {
+                mode,
+                bits,
+                proj_ratio,
+            }
+        };
+
+        let mut train = TrainConfig::default();
+        if let Some(a) = t.get_str("train.arch") {
+            train.arch = Arch::parse(a)?;
+        }
+        if let Some(h) = t.get_int("train.hidden_dim") {
+            train.hidden_dim = h as usize;
+        }
+        if let Some(l) = t.get_int("train.num_layers") {
+            train.num_layers = l as usize;
+        }
+        if let Some(e) = t.get_int("train.epochs") {
+            train.epochs = e as usize;
+        }
+        if let Some(lr) = t.get_float("train.lr") {
+            train.lr = lr as f32;
+        }
+        if let Some(wd) = t.get_float("train.weight_decay") {
+            train.weight_decay = wd as f32;
+        }
+        if let Some(ev) = t.get_int("train.eval_every") {
+            train.eval_every = ev as usize;
+        }
+        if let Some(seeds) = t.get_int_list("train.seeds") {
+            train.seeds = seeds.iter().map(|&s| s as u64).collect();
+        }
+
+        let cfg = ExperimentConfig {
+            dataset,
+            quant,
+            train,
+            dataset_seed: t.get_int("dataset.seed").unwrap_or(42) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_config_constructors_validate() {
+        QuantConfig::fp32().validate().unwrap();
+        QuantConfig::int2_exact().validate().unwrap();
+        QuantConfig::int2_blockwise(64).validate().unwrap();
+        QuantConfig::int2_vm().validate().unwrap();
+    }
+
+    #[test]
+    fn quant_config_rejects_bad() {
+        let mut q = QuantConfig::int2_exact();
+        q.bits = 3;
+        assert!(q.validate().is_err());
+        let mut q = QuantConfig::int2_blockwise(0);
+        assert!(q.validate().is_err());
+        q = QuantConfig::int2_vm();
+        q.bits = 4;
+        assert!(q.validate().is_err());
+    }
+
+    #[test]
+    fn slugs_are_distinct() {
+        let slugs: Vec<String> = [
+            QuantConfig::fp32(),
+            QuantConfig::int2_exact(),
+            QuantConfig::int2_blockwise(2),
+            QuantConfig::int2_blockwise(64),
+            QuantConfig::int2_vm(),
+        ]
+        .iter()
+        .map(|q| q.slug())
+        .collect();
+        let mut unique = slugs.clone();
+        unique.sort();
+        unique.dedup();
+        assert_eq!(unique.len(), slugs.len());
+    }
+
+    #[test]
+    fn dataset_registry() {
+        assert_eq!(DatasetSpec::by_name("arxiv").unwrap().num_classes, 40);
+        assert_eq!(DatasetSpec::by_name("flickr").unwrap().num_features, 500);
+        assert!(DatasetSpec::by_name("nope").is_err());
+        assert_eq!(DatasetSpec::paper_datasets().len(), 2);
+    }
+
+    #[test]
+    fn tiny_dataset_generates() {
+        let ds = DatasetSpec::tiny().generate(7);
+        assert_eq!(ds.num_nodes(), 256);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn experiment_validates_divisibility() {
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::tiny(),
+            quant: QuantConfig::int2_exact(),
+            train: TrainConfig {
+                hidden_dim: 100, // not divisible by 8
+                ..TrainConfig::default()
+            },
+            dataset_seed: 0,
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let text = r#"
+# experiment config
+[dataset]
+name = "tiny"
+seed = 9
+num_nodes = 300
+
+[quant]
+mode = "blockwise"
+bits = 2
+proj_ratio = 8
+group_ratio = 16
+
+[train]
+hidden_dim = 64
+epochs = 20
+lr = 0.05
+seeds = [0, 1]
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.dataset.num_nodes, 300);
+        assert_eq!(cfg.dataset_seed, 9);
+        assert_eq!(
+            cfg.quant.mode,
+            QuantMode::BlockWise { group_ratio: 16 }
+        );
+        assert_eq!(cfg.train.hidden_dim, 64);
+        assert!((cfg.train.lr - 0.05).abs() < 1e-7);
+        assert_eq!(cfg.train.seeds, vec![0, 1]);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_mode() {
+        assert!(ExperimentConfig::from_toml("[quant]\nmode = \"int1\"\n").is_err());
+    }
+}

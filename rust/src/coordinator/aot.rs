@@ -1,0 +1,227 @@
+//! AOT training coordinator: drives the JAX-lowered training-step
+//! executables (Layer 2/1) from Rust via the PJRT runtime.
+//!
+//! Contract with `python/compile/aot.py` (see the manifest):
+//!
+//! * `train_step_{dataset}_{slug}` — inputs, in order:
+//!   `features (N,F)`, `adj (N,N)` (dense Â), `onehot (N,C)`,
+//!   `train_mask (N,1)`, `w0 (F,H)`, `w1 (H,H)`, `w2 (H,C)`,
+//!   `m0,m1,m2`, `v0,v1,v2` (Adam moments, same shapes as weights),
+//!   `t (1,1)` (Adam step counter), `key (1,2)` (PRNG key as f32 ints);
+//!   outputs: updated `w*, m*, v*` then `loss (1,1)`.
+//! * `eval_{dataset}` — inputs `features, adj, w0, w1, w2`;
+//!   output `logits (N,C)`.
+//!
+//! The static tensors (features, Â, one-hot labels, mask) are converted
+//! once at construction; only weights/opt-state/key change per step.
+
+use crate::graph::Dataset;
+use crate::metrics::{masked_accuracy, TrainCurve};
+use crate::rngs::Pcg64;
+use crate::runtime::Runtime;
+use crate::tensor::Matrix;
+use crate::util::timer::LapTimer;
+use crate::{Error, Result};
+
+/// Outcome of an AOT-driven training run.
+#[derive(Debug, Clone)]
+pub struct AotTrainOutcome {
+    pub curve: TrainCurve,
+    pub test_accuracy: f64,
+    pub best_val_loss: f64,
+    pub epochs_per_sec: f64,
+    pub final_train_loss: f64,
+}
+
+/// Drives AOT train-step/eval artifacts for one dataset.
+pub struct AotCoordinator<'rt> {
+    runtime: &'rt mut Runtime,
+    dataset_key: String,
+    // Static inputs.
+    features: Matrix,
+    adj_dense: Matrix,
+    onehot: Matrix,
+    train_mask: Matrix,
+    // Model + optimizer state (owned by rust between steps).
+    weights: Vec<Matrix>,
+    ms: Vec<Matrix>,
+    vs: Vec<Matrix>,
+    t: f32,
+    rng: Pcg64,
+}
+
+impl<'rt> AotCoordinator<'rt> {
+    /// Prepare static tensors and initialize weights to match the
+    /// `train_step_{dataset_key}_{slug}` artifact shapes.
+    pub fn new(
+        runtime: &'rt mut Runtime,
+        dataset_key: &str,
+        slug: &str,
+        dataset: &Dataset,
+        seed: u64,
+    ) -> Result<Self> {
+        dataset.validate()?;
+        let name = format!("train_step_{dataset_key}_{slug}");
+        let entry = runtime.load(&name)?.entry.clone();
+        // Weights are inputs 4..7 by the contract.
+        if entry.inputs.len() != 15 {
+            return Err(Error::Artifact(format!(
+                "'{name}' should have 15 inputs, has {}",
+                entry.inputs.len()
+            )));
+        }
+        let n = dataset.num_nodes();
+        let c = dataset.num_classes;
+        let mut rng = Pcg64::new(seed ^ 0xa07);
+        let weights: Vec<Matrix> = entry.inputs[4..7]
+            .iter()
+            .map(|spec| crate::linalg::glorot_uniform(spec.rows, spec.cols, &mut rng))
+            .collect();
+        let zeros_like =
+            |specs: &[crate::runtime::TensorSpec]| -> Vec<Matrix> {
+                specs.iter().map(|s| Matrix::zeros(s.rows, s.cols)).collect()
+            };
+        let ms = zeros_like(&entry.inputs[7..10]);
+        let vs = zeros_like(&entry.inputs[10..13]);
+
+        let mut onehot = Matrix::zeros(n, c);
+        for (i, &l) in dataset.labels.iter().enumerate() {
+            onehot.set(i, l as usize, 1.0);
+        }
+        let train_mask = Matrix::from_fn(n, 1, |i, _| {
+            if dataset.train_mask[i] {
+                1.0
+            } else {
+                0.0
+            }
+        });
+
+        Ok(AotCoordinator {
+            runtime,
+            dataset_key: dataset_key.to_string(),
+            features: dataset.features.clone(),
+            adj_dense: dataset.adj.to_dense(),
+            onehot,
+            train_mask,
+            weights,
+            ms,
+            vs,
+            t: 0.0,
+            rng,
+        })
+    }
+
+    /// Execute one training step; returns the loss.
+    pub fn step(&mut self, slug: &str) -> Result<f64> {
+        self.t += 1.0;
+        let t = Matrix::from_vec(1, 1, vec![self.t])?;
+        let key = Matrix::from_vec(
+            1,
+            2,
+            vec![
+                (self.rng.next_u64() & 0xff_ffff) as f32,
+                (self.rng.next_u64() & 0xff_ffff) as f32,
+            ],
+        )?;
+        let name = format!("train_step_{}_{slug}", self.dataset_key);
+        let inputs: Vec<&Matrix> = vec![
+            &self.features,
+            &self.adj_dense,
+            &self.onehot,
+            &self.train_mask,
+            &self.weights[0],
+            &self.weights[1],
+            &self.weights[2],
+            &self.ms[0],
+            &self.ms[1],
+            &self.ms[2],
+            &self.vs[0],
+            &self.vs[1],
+            &self.vs[2],
+            &t,
+            &key,
+        ];
+        let mut out = self.runtime.execute(&name, &inputs)?;
+        if out.len() != 10 {
+            return Err(Error::Runtime(format!(
+                "train step returned {} outputs, expected 10",
+                out.len()
+            )));
+        }
+        let loss = out.pop().unwrap().get(0, 0) as f64;
+        // Outputs: w0,w1,w2, m0..2, v0..2 in order.
+        let mut it = out.into_iter();
+        for w in self.weights.iter_mut() {
+            *w = it.next().unwrap();
+        }
+        for m in self.ms.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        for v in self.vs.iter_mut() {
+            *v = it.next().unwrap();
+        }
+        Ok(loss)
+    }
+
+    /// Run the eval artifact with the current weights.
+    pub fn logits(&mut self) -> Result<Matrix> {
+        let name = format!("eval_{}", self.dataset_key);
+        let inputs: Vec<&Matrix> = vec![
+            &self.features,
+            &self.adj_dense,
+            &self.weights[0],
+            &self.weights[1],
+            &self.weights[2],
+        ];
+        let mut out = self.runtime.execute(&name, &inputs)?;
+        out.pop()
+            .ok_or_else(|| Error::Runtime("eval returned no outputs".into()))
+    }
+
+    /// Full training loop: `epochs` steps with periodic evaluation;
+    /// reports test accuracy at the best-validation epoch.
+    pub fn train(
+        &mut self,
+        slug: &str,
+        dataset: &Dataset,
+        epochs: usize,
+        eval_every: usize,
+    ) -> Result<AotTrainOutcome> {
+        let mut curve = TrainCurve::default();
+        let mut timer = LapTimer::new();
+        let mut best_val_loss = f64::INFINITY;
+        let mut test_at_best = 0.0;
+        let mut final_train_loss = f64::NAN;
+        for epoch in 0..epochs {
+            let loss = timer.lap(|| self.step(slug))?;
+            final_train_loss = loss;
+            if epoch % eval_every.max(1) == 0 || epoch + 1 == epochs {
+                let logits = self.logits()?;
+                let (val_loss, _) = crate::linalg::softmax_cross_entropy(
+                    &logits,
+                    &dataset.labels,
+                    &dataset.val_mask,
+                )?;
+                let val_acc =
+                    masked_accuracy(&logits, &dataset.labels, &dataset.val_mask);
+                curve.push(epoch, loss, val_loss, val_acc);
+                if val_loss < best_val_loss {
+                    best_val_loss = val_loss;
+                    test_at_best =
+                        masked_accuracy(&logits, &dataset.labels, &dataset.test_mask);
+                }
+            }
+        }
+        Ok(AotTrainOutcome {
+            curve,
+            test_accuracy: test_at_best,
+            best_val_loss,
+            epochs_per_sec: timer.rate_per_sec(),
+            final_train_loss,
+        })
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.weights
+    }
+}

@@ -1,0 +1,115 @@
+//! Training coordinator (Layer 3).
+//!
+//! Owns run plans (dataset × quant-config × seeds), drives either the
+//! **native pipeline** (pure Rust, used for the Table 1 sweep) or the
+//! **AOT runtime path** (PJRT-executed JAX training steps, proving the
+//! three-layer composition), aggregates metrics, and produces the
+//! Table 1 rows.
+
+mod aot;
+
+pub use aot::{AotCoordinator, AotTrainOutcome};
+
+use crate::config::{ExperimentConfig, QuantConfig, TrainConfig};
+use crate::graph::Dataset;
+use crate::memory::MemoryModel;
+use crate::metrics::{Aggregate, RunSummary};
+use crate::pipeline::{train, TrainResult};
+use crate::Result;
+
+/// All results of one (dataset × config) cell.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub summary: RunSummary,
+    pub results: Vec<TrainResult>,
+}
+
+/// Run one experiment cell over all its seeds on the native pipeline.
+pub fn run_native(cfg: &ExperimentConfig) -> Result<RunOutcome> {
+    cfg.validate()?;
+    let dataset = cfg.dataset.generate(cfg.dataset_seed);
+    run_native_on(&dataset, &cfg.quant, &cfg.train)
+}
+
+/// Like [`run_native`] but on a pre-generated dataset (so a sweep shares
+/// one graph across configs, as the paper does).
+pub fn run_native_on(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    train_cfg: &TrainConfig,
+) -> Result<RunOutcome> {
+    let mut acc = Aggregate::new();
+    let mut rate = 0.0;
+    let mut results = Vec::with_capacity(train_cfg.seeds.len());
+    for &seed in &train_cfg.seeds {
+        let r = train(dataset, quant, train_cfg, seed)?;
+        acc.add(r.test_accuracy * 100.0);
+        rate += r.epochs_per_sec;
+        results.push(r);
+    }
+    rate /= train_cfg.seeds.len() as f64;
+
+    let mem = MemoryModel::for_arch(
+        train_cfg.arch,
+        dataset.num_nodes(),
+        dataset.num_features(),
+        train_cfg.hidden_dim,
+        train_cfg.num_layers,
+    );
+    let summary = RunSummary {
+        dataset: dataset.name.clone(),
+        config_label: quant.label(),
+        accuracy: acc,
+        epochs_per_sec: rate,
+        memory_mb: mem.total_mb(quant)?,
+    };
+    Ok(RunOutcome { summary, results })
+}
+
+/// The Table 1 config column: FP32, EXACT, the G/R sweep, and VM.
+pub fn table1_configs(group_ratios: &[usize]) -> Vec<QuantConfig> {
+    let mut configs = vec![QuantConfig::fp32(), QuantConfig::int2_exact()];
+    configs.extend(
+        group_ratios
+            .iter()
+            .map(|&g| QuantConfig::int2_blockwise(g)),
+    );
+    configs.push(QuantConfig::int2_vm());
+    configs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+
+    #[test]
+    fn run_native_aggregates_seeds() {
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::tiny(),
+            quant: QuantConfig::int2_blockwise(8),
+            train: TrainConfig {
+                hidden_dim: 32,
+                epochs: 12,
+                seeds: vec![0, 1],
+                eval_every: 4,
+                ..TrainConfig::default()
+            },
+            dataset_seed: 3,
+        };
+        let out = run_native(&cfg).unwrap();
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.summary.accuracy.count(), 2);
+        assert!(out.summary.memory_mb > 0.0);
+        assert!(out.summary.epochs_per_sec > 0.0);
+        assert_eq!(out.summary.dataset, "tiny");
+    }
+
+    #[test]
+    fn table1_configs_cover_paper_rows() {
+        let c = table1_configs(&[2, 4, 8, 16, 32, 64]);
+        assert_eq!(c.len(), 9); // fp32 + exact + 6 ratios + vm
+        assert_eq!(c[0], QuantConfig::fp32());
+        assert_eq!(c[8], QuantConfig::int2_vm());
+    }
+}

@@ -1,0 +1,145 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * **Bit width** — the paper goes straight to INT2 ("extreme"); the
+//!   substrate supports INT4/INT8, so we sweep bits ∈ {2, 4, 8} to show
+//!   the accuracy/memory frontier that justifies INT2.
+//! * **Projection ratio** — EXACT fixes D/R = 8; we sweep
+//!   D/R ∈ {1, 2, 4, 8} to expose the compounding RP × quantization
+//!   trade-off.
+//! * **Block size at INT4/8** — does the paper's G/R memory amortization
+//!   argument hold at higher precision? (It must: metadata is
+//!   precision-independent.)
+
+use super::Effort;
+use crate::config::{DatasetSpec, QuantConfig, QuantMode, TrainConfig};
+use crate::coordinator::run_native_on;
+use crate::util::table::AsciiTable;
+use crate::Result;
+
+#[derive(Debug)]
+pub struct Ablation {
+    table: AsciiTable,
+}
+
+impl Ablation {
+    pub fn render(&self) -> String {
+        self.table.render()
+    }
+
+    pub fn to_csv(&self) -> String {
+        self.table.to_csv()
+    }
+}
+
+/// Run all three ablations on the arxiv-like dataset.
+pub fn run(effort: Effort, mut progress: impl FnMut(&str)) -> Result<Ablation> {
+    let mut spec = DatasetSpec::arxiv_like();
+    let train_cfg = match effort {
+        Effort::Paper => TrainConfig {
+            hidden_dim: 128,
+            epochs: 40,
+            seeds: vec![0, 1],
+            eval_every: 5,
+            ..TrainConfig::default()
+        },
+        Effort::Quick => {
+            spec.num_nodes /= 4;
+            TrainConfig {
+                hidden_dim: 64,
+                epochs: 15,
+                seeds: vec![0],
+                eval_every: 5,
+                ..TrainConfig::default()
+            }
+        }
+    };
+    let dataset = spec.generate(42);
+    let mut table = AsciiTable::new(&[
+        "ablation", "config", "accuracy (%)", "S (e/s)", "M (MB)",
+    ]);
+
+    let mut run_one = |ablation: &str, label: String, quant: &QuantConfig,
+                       table: &mut AsciiTable|
+     -> Result<()> {
+        let out = run_native_on(&dataset, quant, &train_cfg)?;
+        progress(&format!(
+            "  [{ablation}] {label}: acc {} | {:.2} e/s | {:.2} MB",
+            out.summary.accuracy, out.summary.epochs_per_sec, out.summary.memory_mb
+        ));
+        table.add_row(vec![
+            ablation.to_string(),
+            label,
+            format!("{}", out.summary.accuracy),
+            format!("{:.2}", out.summary.epochs_per_sec),
+            format!("{:.2}", out.summary.memory_mb),
+        ]);
+        Ok(())
+    };
+
+    // 1. Bit-width sweep (blockwise, G/R = 16, D/R = 8).
+    for bits in [2u32, 4, 8] {
+        let quant = QuantConfig {
+            mode: QuantMode::BlockWise { group_ratio: 16 },
+            bits,
+            proj_ratio: 8,
+        };
+        run_one("bits", format!("INT{bits} G/R=16"), &quant, &mut table)?;
+    }
+
+    // 2. Projection-ratio sweep (INT2, per-row, EXACT-style).
+    for ratio in [1usize, 2, 4, 8] {
+        let quant = QuantConfig {
+            mode: QuantMode::RowWise,
+            bits: 2,
+            proj_ratio: ratio,
+        };
+        run_one("proj", format!("INT2 D/R={ratio}"), &quant, &mut table)?;
+    }
+
+    // 3. Block-size sweep at INT8 (memory amortization is
+    //    precision-independent).
+    for g in [2usize, 16, 64] {
+        let quant = QuantConfig {
+            mode: QuantMode::BlockWise { group_ratio: g },
+            bits: 8,
+            proj_ratio: 8,
+        };
+        run_one("block@int8", format!("INT8 G/R={g}"), &quant, &mut table)?;
+    }
+
+    Ok(Ablation { table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::MemoryModel;
+
+    #[test]
+    fn higher_bits_use_more_memory() {
+        let m = MemoryModel::new(1024, 128, 128, 3);
+        let mb = |bits: u32| {
+            m.total_mb(&QuantConfig {
+                mode: QuantMode::BlockWise { group_ratio: 16 },
+                bits,
+                proj_ratio: 8,
+            })
+            .unwrap()
+        };
+        assert!(mb(2) < mb(4) && mb(4) < mb(8));
+    }
+
+    #[test]
+    fn smaller_projection_ratio_uses_more_memory() {
+        let m = MemoryModel::new(1024, 128, 128, 3);
+        let mb = |ratio: usize| {
+            m.total_mb(&QuantConfig {
+                mode: QuantMode::RowWise,
+                bits: 2,
+                proj_ratio: ratio,
+            })
+            .unwrap()
+        };
+        assert!(mb(1) > mb(2) && mb(2) > mb(4) && mb(4) > mb(8));
+    }
+}

@@ -1,0 +1,147 @@
+//! Fig. 1: stochastic-rounding demonstration for b = 2 (4 levels) on 128
+//! uniformly sampled points — uniform bin widths (left panel) vs the
+//! variance-optimized non-uniform bins (right panel).
+//!
+//! For each sample we report the rounding probabilities toward its two
+//! neighbouring levels, which is exactly what the figure's color gradient
+//! encodes.
+
+use crate::rngs::Pcg64;
+use crate::stats::ClippedNormal;
+use crate::varmin::optimal_boundaries;
+use crate::Result;
+
+/// One plotted point.
+#[derive(Debug, Clone)]
+pub struct Fig1Point {
+    pub h: f64,
+    /// Lower/upper neighbouring level positions.
+    pub lo: f64,
+    pub hi: f64,
+    /// Probability of rounding up to `hi`.
+    pub p_up: f64,
+}
+
+#[derive(Debug)]
+pub struct Fig1 {
+    pub uniform: Vec<Fig1Point>,
+    pub optimized: Vec<Fig1Point>,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+fn points_for(samples: &[f64], boundaries: &[f64]) -> Vec<Fig1Point> {
+    samples
+        .iter()
+        .map(|&h| {
+            let b = boundaries.len() - 1;
+            let mut i = 0;
+            while i + 1 < b && h >= boundaries[i + 1] {
+                i += 1;
+            }
+            let lo = boundaries[i];
+            let hi = boundaries[i + 1];
+            Fig1Point {
+                h,
+                lo,
+                hi,
+                p_up: (h - lo) / (hi - lo),
+            }
+        })
+        .collect()
+}
+
+/// Generate the two panels. `d` selects the CN_{[1/D]} used for the
+/// optimized boundaries (the paper draws the right panel from the
+/// variance optimization of §3.2).
+pub fn run(n_points: usize, d: usize, seed: u64) -> Result<Fig1> {
+    let mut rng = Pcg64::new(seed);
+    let samples: Vec<f64> = (0..n_points).map(|_| rng.next_f64() * 3.0).collect();
+    let cn = ClippedNormal::new(2, d)?;
+    let opt = optimal_boundaries(&cn)?;
+    Ok(Fig1 {
+        uniform: points_for(&samples, &[0.0, 1.0, 2.0, 3.0]),
+        optimized: points_for(&samples, &[0.0, opt.alpha, opt.beta, 3.0]),
+        alpha: opt.alpha,
+        beta: opt.beta,
+    })
+}
+
+impl Fig1 {
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("panel,h,lo,hi,p_up\n");
+        for (panel, pts) in [("uniform", &self.uniform), ("optimized", &self.optimized)] {
+            for p in pts {
+                s.push_str(&format!(
+                    "{panel},{:.6},{:.4},{:.4},{:.6}\n",
+                    p.h, p.lo, p.hi, p.p_up
+                ));
+            }
+        }
+        s
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "Fig 1: SR demo with {} points. Uniform bins [0,1,2,3]; optimized bins \
+             [0,{:.4},{:.4},3]\n{}",
+            self.uniform.len(),
+            self.alpha,
+            self.beta,
+            summary_hist(&self.uniform, &self.optimized)
+        )
+    }
+}
+
+/// Small text rendering: counts of points per bin for both panels.
+fn summary_hist(uniform: &[Fig1Point], optimized: &[Fig1Point]) -> String {
+    let count = |pts: &[Fig1Point]| {
+        let mut c = std::collections::BTreeMap::new();
+        for p in pts {
+            *c.entry(format!("[{:.2},{:.2})", p.lo, p.hi)).or_insert(0usize) += 1;
+        }
+        c.into_iter()
+            .map(|(k, v)| format!("  {k}: {v} pts"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    format!(
+        "uniform bins:\n{}\noptimized bins:\n{}",
+        count(uniform),
+        count(optimized)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_valid_and_boundaries_match() {
+        let f = run(128, 16, 7).unwrap();
+        assert_eq!(f.uniform.len(), 128);
+        assert_eq!(f.optimized.len(), 128);
+        for p in f.uniform.iter().chain(&f.optimized) {
+            assert!((0.0..=1.0).contains(&p.p_up), "p_up={}", p.p_up);
+            assert!(p.lo <= p.h && p.h <= p.hi);
+        }
+        // Optimized central bin is [α, β].
+        assert!(f.alpha < f.beta);
+        let central: Vec<_> = f
+            .optimized
+            .iter()
+            .filter(|p| (p.lo - f.alpha).abs() < 1e-12)
+            .collect();
+        assert!(!central.is_empty());
+        assert!(central.iter().all(|p| (p.hi - f.beta).abs() < 1e-12));
+    }
+
+    #[test]
+    fn csv_has_both_panels() {
+        let f = run(16, 16, 1).unwrap();
+        let csv = f.to_csv();
+        assert!(csv.contains("uniform,"));
+        assert!(csv.contains("optimized,"));
+        assert_eq!(csv.lines().count(), 1 + 32);
+    }
+}

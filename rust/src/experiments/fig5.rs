@@ -1,0 +1,185 @@
+//! Fig. 5: for synthetic clipnorm data `CN_{[1/D]}`,
+//! `D ∈ {16, 32, 64, 96, 128}`, sweep the assumed dimensionality and plot
+//! the relative variance reduction per trial — mean curve, min/max band,
+//! and the spread of observed maxima vs the expected maximum (`D# = D`).
+
+use crate::rngs::Pcg64;
+use crate::stats::ClippedNormal;
+use crate::varmin::{empirical_variance_reduction, optimal_boundaries};
+use crate::Result;
+
+/// Results for one true D.
+#[derive(Debug, Clone)]
+pub struct Fig5Series {
+    pub true_d: usize,
+    pub d_sweep: Vec<usize>,
+    /// Mean reduction per assumed D over trials.
+    pub mean: Vec<f64>,
+    pub min: Vec<f64>,
+    pub max: Vec<f64>,
+    /// Observed-optimal assumed D per trial.
+    pub observed_maxima: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct Fig5 {
+    pub series: Vec<Fig5Series>,
+}
+
+/// Paper sweep values.
+pub const TRUE_DS: [usize; 5] = [16, 32, 64, 96, 128];
+
+/// Run the figure. `samples_per_trial` controls noise; the paper's spread
+/// bands come from trial-to-trial variation.
+pub fn run(
+    trials: usize,
+    samples_per_trial: usize,
+    seed: u64,
+    mut progress: impl FnMut(&str),
+) -> Result<Fig5> {
+    let d_sweep: Vec<usize> = vec![4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256];
+    let mut rng = Pcg64::new(seed);
+    let mut series = Vec::new();
+
+    // Precompute boundaries per assumed D (shared across trials).
+    let mut bounds = Vec::with_capacity(d_sweep.len());
+    for &d in &d_sweep {
+        let opt = optimal_boundaries(&ClippedNormal::new(2, d)?)?;
+        bounds.push((opt.alpha, opt.beta));
+    }
+
+    for &true_d in &TRUE_DS {
+        let cn = ClippedNormal::new(2, true_d)?;
+        let mut per_trial: Vec<Vec<f64>> = Vec::with_capacity(trials);
+        let mut observed_maxima = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let samples = cn.sample_n(&mut rng, samples_per_trial);
+            let reductions: Vec<f64> = bounds
+                .iter()
+                .map(|&(a, b)| empirical_variance_reduction(&samples, a, b, 1, &mut rng))
+                .collect();
+            let best = d_sweep
+                .iter()
+                .zip(&reductions)
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(&d, _)| d)
+                .unwrap();
+            observed_maxima.push(best);
+            per_trial.push(reductions);
+        }
+        let k = d_sweep.len();
+        let mut mean = vec![0.0; k];
+        let mut min = vec![f64::INFINITY; k];
+        let mut max = vec![f64::NEG_INFINITY; k];
+        for t in &per_trial {
+            for i in 0..k {
+                mean[i] += t[i] / trials as f64;
+                min[i] = min[i].min(t[i]);
+                max[i] = max[i].max(t[i]);
+            }
+        }
+        progress(&format!(
+            "  CN_[1/{true_d}]: observed maxima {observed_maxima:?}"
+        ));
+        series.push(Fig5Series {
+            true_d,
+            d_sweep: d_sweep.clone(),
+            mean,
+            min,
+            max,
+            observed_maxima,
+        });
+    }
+    Ok(Fig5 { series })
+}
+
+impl Fig5 {
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("true_d,assumed_d,mean,min,max\n");
+        for ser in &self.series {
+            for i in 0..ser.d_sweep.len() {
+                s.push_str(&format!(
+                    "{},{},{:.6},{:.6},{:.6}\n",
+                    ser.true_d, ser.d_sweep[i], ser.mean[i], ser.min[i], ser.max[i]
+                ));
+            }
+        }
+        s
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::from("Fig 5: reduction curves for CN_[1/D]\n");
+        for ser in &self.series {
+            let (best_idx, best) = ser
+                .mean
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let lo = ser.observed_maxima.iter().min().unwrap();
+            let hi = ser.observed_maxima.iter().max().unwrap();
+            s.push_str(&format!(
+                "  D={:<4} expected max at {:<4} mean-curve max at {:<4} ({:.3}%) \
+                 observed-maxima spread [{lo}, {hi}]\n",
+                ser.true_d,
+                ser.true_d,
+                ser.d_sweep[best_idx],
+                100.0 * best
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observed_maxima_near_expected() {
+        let f = run(4, 8_000, 11, |_| {}).unwrap();
+        assert_eq!(f.series.len(), TRUE_DS.len());
+        for ser in &f.series {
+            // Mean reduction positive at the expected D.
+            let idx = ser
+                .d_sweep
+                .iter()
+                .position(|&d| d == ser.true_d)
+                .unwrap();
+            assert!(
+                ser.mean[idx] > 0.0,
+                "D={}: mean[{idx}]={}",
+                ser.true_d,
+                ser.mean[idx]
+            );
+            // min <= mean <= max pointwise.
+            for i in 0..ser.d_sweep.len() {
+                assert!(ser.min[i] <= ser.mean[i] + 1e-12);
+                assert!(ser.mean[i] <= ser.max[i] + 1e-12);
+            }
+            // Mean-curve maximum within a factor ~4 of the expected D (the
+            // curves level out at high D, so per-trial maxima wander — the
+            // paper's Fig. 5 shows exactly this widening spread).
+            let (mean_best_idx, _) = ser
+                .mean
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let mean_best_d = ser.d_sweep[mean_best_idx];
+            assert!(
+                mean_best_d * 4 >= ser.true_d && mean_best_d <= ser.true_d * 6,
+                "D={}: mean-curve max at {mean_best_d}",
+                ser.true_d
+            );
+        }
+    }
+
+    #[test]
+    fn csv_lines() {
+        let f = run(2, 2_000, 3, |_| {}).unwrap();
+        let expect = 1 + f.series.len() * f.series[0].d_sweep.len();
+        assert_eq!(f.to_csv().lines().count(), expect);
+        assert!(f.render().contains("Fig 5"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Experiment harness: one module per paper artifact. Each regenerates
+//! the corresponding table/figure's rows or series as an ASCII table plus
+//! CSV, on the synthetic paper-analogue datasets (DESIGN.md §5).
+//!
+//! | module   | paper artifact |
+//! |----------|----------------|
+//! | `table1` | Table 1 — accuracy / epochs-per-sec / memory for FP32, EXACT, G/R sweep, VM |
+//! | `table2` | Table 2 — JS divergence (uniform vs clipped normal) + variance reduction per layer |
+//! | `fig1`   | Fig. 1 — stochastic rounding demo, uniform vs optimized bins |
+//! | `fig2`   | Fig. 2 — observed vs modelled activation distributions |
+//! | `fig3`   | Fig. 3 — SR variance surface over (α, β) |
+//! | `fig4`   | Fig. 4 — variance reduction vs assumed D per layer |
+//! | `fig5`   | Fig. 5 — variance-reduction curves for CN_{1/D} |
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+
+/// Effort level: `Quick` shrinks node counts / epochs / seeds for CI and
+/// smoke runs; `Paper` uses the full synthetic-analogue scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Paper,
+}
+
+impl Effort {
+    pub fn parse(s: &str) -> Option<Effort> {
+        match s {
+            "quick" => Some(Effort::Quick),
+            "paper" | "full" => Some(Effort::Paper),
+            _ => None,
+        }
+    }
+}

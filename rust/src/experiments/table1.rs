@@ -1,0 +1,156 @@
+//! Table 1: test accuracy, training speed (epochs/s) and activation
+//! memory (MB) for FP32, EXACT (INT2 per-row), the block-size sweep
+//! `G/R ∈ {2,4,8,16,32,64}`, and INT2+VM, on both paper datasets.
+
+use super::Effort;
+use crate::config::{DatasetSpec, TrainConfig};
+use crate::coordinator::{run_native_on, table1_configs, RunOutcome};
+use crate::util::table::AsciiTable;
+use crate::Result;
+
+/// Full Table 1 output.
+#[derive(Debug)]
+pub struct Table1 {
+    pub outcomes: Vec<RunOutcome>,
+    table: AsciiTable,
+}
+
+impl Table1 {
+    pub fn render(&self) -> String {
+        self.table.render()
+    }
+
+    pub fn to_csv(&self) -> String {
+        self.table.to_csv()
+    }
+}
+
+/// Dataset specs used for the sweep at each effort level.
+pub fn datasets(effort: Effort) -> Vec<DatasetSpec> {
+    match effort {
+        Effort::Paper => DatasetSpec::paper_datasets(),
+        Effort::Quick => DatasetSpec::paper_datasets()
+            .into_iter()
+            .map(|mut d| {
+                d.num_nodes /= 4;
+                d
+            })
+            .collect(),
+    }
+}
+
+/// Training hyperparameters at each effort level.
+pub fn train_config(effort: Effort) -> TrainConfig {
+    match effort {
+        Effort::Paper => TrainConfig {
+            // The paper's architecture is GraphSAGE [14]; it converges
+            // more slowly than GCN on the low-SNR synthetic task, so the
+            // paper-effort sweep trains longer.
+            arch: crate::config::Arch::GraphSage,
+            hidden_dim: 128,
+            num_layers: 3,
+            epochs: 150,
+            lr: 0.01,
+            weight_decay: 0.0,
+            seeds: vec![0, 1, 2],
+            eval_every: 5,
+        },
+        Effort::Quick => TrainConfig {
+            arch: crate::config::Arch::GraphSage,
+            hidden_dim: 64,
+            num_layers: 3,
+            epochs: 20,
+            lr: 0.02,
+            weight_decay: 0.0,
+            seeds: vec![0],
+            eval_every: 5,
+        },
+    }
+}
+
+/// The paper's block-ratio sweep.
+pub const GROUP_RATIOS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+/// Run the full sweep. `progress` receives one line per finished cell.
+pub fn run(effort: Effort, mut progress: impl FnMut(&str)) -> Result<Table1> {
+    let train_cfg = train_config(effort);
+    let mut table = AsciiTable::new(&[
+        "Dataset", "Quant.", "G/R", "Accuracy (%)", "S (e/s)", "M (MB)",
+    ]);
+    let mut outcomes = Vec::new();
+
+    for spec in datasets(effort) {
+        let dataset = spec.generate(42);
+        progress(&format!(
+            "dataset {}: {} nodes, {} edges, {} feats, {} classes",
+            spec.name,
+            dataset.num_nodes(),
+            dataset.num_edges(),
+            dataset.num_features(),
+            dataset.num_classes
+        ));
+        for quant in table1_configs(&GROUP_RATIOS) {
+            let out = run_native_on(&dataset, &quant, &train_cfg)?;
+            let gr = match quant.mode {
+                crate::config::QuantMode::BlockWise { group_ratio } => {
+                    group_ratio.to_string()
+                }
+                _ => "-".into(),
+            };
+            progress(&format!(
+                "  {:<14} acc {:<14} {:>6.2} e/s  {:>8.2} MB",
+                quant.label(),
+                format!("{}", out.summary.accuracy),
+                out.summary.epochs_per_sec,
+                out.summary.memory_mb
+            ));
+            table.add_row(vec![
+                spec.name.clone(),
+                quant.label(),
+                gr,
+                format!("{}", out.summary.accuracy),
+                format!("{:.2}", out.summary.epochs_per_sec),
+                format!("{:.2}", out.summary.memory_mb),
+            ]);
+            outcomes.push(out);
+        }
+    }
+    Ok(Table1 { outcomes, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+
+    #[test]
+    fn quick_sweep_has_paper_shape() {
+        // A tiny end-to-end sweep on one dataset to keep CI fast: reuse the
+        // internals rather than `run` (which does both datasets).
+        let spec = DatasetSpec::tiny();
+        let dataset = spec.generate(1);
+        let cfg = TrainConfig {
+            hidden_dim: 32,
+            epochs: 10,
+            seeds: vec![0],
+            eval_every: 5,
+            ..TrainConfig::default()
+        };
+        let fp32 = run_native_on(&dataset, &QuantConfig::fp32(), &cfg).unwrap();
+        let exact = run_native_on(&dataset, &QuantConfig::int2_exact(), &cfg).unwrap();
+        let blk64 =
+            run_native_on(&dataset, &QuantConfig::int2_blockwise(64), &cfg).unwrap();
+        // Memory ordering is the paper's central claim.
+        assert!(fp32.summary.memory_mb > 10.0 * exact.summary.memory_mb);
+        assert!(blk64.summary.memory_mb < exact.summary.memory_mb);
+    }
+
+    #[test]
+    fn effort_scaling() {
+        let q = datasets(Effort::Quick);
+        let p = datasets(Effort::Paper);
+        assert_eq!(q.len(), p.len());
+        assert!(q[0].num_nodes < p[0].num_nodes);
+        assert!(train_config(Effort::Quick).epochs < train_config(Effort::Paper).epochs);
+    }
+}

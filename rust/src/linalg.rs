@@ -1,0 +1,308 @@
+//! Neural-network numeric ops for the native pipeline: activations,
+//! softmax cross-entropy with masked reductions, Glorot initialization,
+//! and the Adam optimizer.
+
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+/// ReLU forward, out of place.
+pub fn relu(x: &Matrix) -> Matrix {
+    x.map(|v| v.max(0.0))
+}
+
+/// ReLU backward: `grad * 1[pre > 0]`.
+pub fn relu_backward(grad: &Matrix, pre_activation: &Matrix) -> Result<Matrix> {
+    grad.zip(pre_activation, |g, p| if p > 0.0 { g } else { 0.0 })
+}
+
+/// Bit-packed sign pattern of a pre-activation (what a memory-efficient
+/// implementation actually stashes for the ReLU backward — 1 bit/scalar).
+#[derive(Debug, Clone)]
+pub struct SignPattern {
+    bits: Vec<u8>,
+    shape: (usize, usize),
+}
+
+impl SignPattern {
+    pub fn from_matrix(pre: &Matrix) -> Self {
+        let data = pre.as_slice();
+        let mut bits = vec![0u8; data.len().div_ceil(8)];
+        for (i, &v) in data.iter().enumerate() {
+            if v > 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        SignPattern {
+            bits,
+            shape: pre.shape(),
+        }
+    }
+
+    #[inline]
+    pub fn is_positive(&self, idx: usize) -> bool {
+        (self.bits[idx / 8] >> (idx % 8)) & 1 == 1
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// ReLU backward from the packed pattern.
+    pub fn apply_backward(&self, grad: &Matrix) -> Result<Matrix> {
+        if grad.shape() != self.shape {
+            return Err(Error::Shape(format!(
+                "sign pattern {:?} vs grad {:?}",
+                self.shape,
+                grad.shape()
+            )));
+        }
+        let mut out = grad.clone();
+        for (i, v) in out.as_mut_slice().iter_mut().enumerate() {
+            if !self.is_positive(i) {
+                *v = 0.0;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(logits: &Matrix) -> Matrix {
+    let mut out = logits.clone();
+    let cols = out.cols();
+    for r in 0..out.rows() {
+        let row = &mut out.as_mut_slice()[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Masked mean softmax cross-entropy.
+/// Returns `(loss, dL/dlogits)` where the gradient is already divided by
+/// the mask count (and zero outside the mask).
+pub fn softmax_cross_entropy(
+    logits: &Matrix,
+    labels: &[u32],
+    mask: &[bool],
+) -> Result<(f64, Matrix)> {
+    let n = logits.rows();
+    if labels.len() != n || mask.len() != n {
+        return Err(Error::Shape("labels/mask length mismatch".into()));
+    }
+    let probs = softmax_rows(logits);
+    let count = mask.iter().filter(|&&m| m).count().max(1);
+    let scale = 1.0 / count as f32;
+    let mut grad = Matrix::zeros(n, logits.cols());
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let p = probs.row(i);
+        let y = labels[i] as usize;
+        loss += -(p[y].max(1e-12) as f64).ln();
+        let g = grad.row_mut(i);
+        for (j, &pj) in p.iter().enumerate() {
+            g[j] = (pj - if j == y { 1.0 } else { 0.0 }) * scale;
+        }
+    }
+    Ok((loss / count as f64, grad))
+}
+
+/// Glorot/Xavier uniform initialization for a `fan_in × fan_out` weight.
+pub fn glorot_uniform(fan_in: usize, fan_out: usize, rng: &mut Pcg64) -> Matrix {
+    let limit = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+    Matrix::from_fn(fan_in, fan_out, |_, _| {
+        (rng.next_f32() * 2.0 - 1.0) * limit
+    })
+}
+
+/// Adam optimizer state for a list of parameter tensors.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    t: u64,
+    m: Vec<Matrix>,
+    v: Vec<Matrix>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, weight_decay: f32, shapes: &[(usize, usize)]) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            t: 0,
+            m: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            v: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+        }
+    }
+
+    /// One Adam step over matched `params`/`grads`.
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) -> Result<()> {
+        if params.len() != self.m.len() || grads.len() != self.m.len() {
+            return Err(Error::Shape(format!(
+                "adam: {} params vs {} states",
+                params.len(),
+                self.m.len()
+            )));
+        }
+        self.t += 1;
+        let b1t = 1.0 - (self.beta1 as f64).powi(self.t as i32);
+        let b2t = 1.0 - (self.beta2 as f64).powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            if p.shape() != g.shape() || p.shape() != m.shape() {
+                return Err(Error::Shape("adam: param/grad shape mismatch".into()));
+            }
+            let (b1, b2, eps, lr, wd) =
+                (self.beta1, self.beta2, self.eps, self.lr, self.weight_decay);
+            let ps = p.as_mut_slice();
+            let gs = g.as_slice();
+            let ms = m.as_mut_slice();
+            let vs = v.as_mut_slice();
+            for i in 0..ps.len() {
+                let grad = gs[i] + wd * ps[i];
+                ms[i] = b1 * ms[i] + (1.0 - b1) * grad;
+                vs[i] = b2 * vs[i] + (1.0 - b2) * grad * grad;
+                let mhat = ms[i] as f64 / b1t;
+                let vhat = vs[i] as f64 / b2t;
+                ps[i] -= (lr as f64 * mhat / (vhat.sqrt() + eps as f64)) as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_and_backward() {
+        let x = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]).unwrap();
+        let y = relu(&x);
+        assert_eq!(y.as_slice(), &[0.0, 0.0, 2.0, 0.0]);
+        let g = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let gx = relu_backward(&g, &x).unwrap();
+        assert_eq!(gx.as_slice(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn sign_pattern_matches_dense_backward() {
+        let mut rng = Pcg64::new(1);
+        let pre = Matrix::from_fn(13, 7, |_, _| rng.next_f32() * 2.0 - 1.0);
+        let grad = Matrix::from_fn(13, 7, |_, _| rng.next_f32());
+        let sp = SignPattern::from_matrix(&pre);
+        let fast = sp.apply_backward(&grad).unwrap();
+        let slow = relu_backward(&grad, &pre).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(sp.nbytes(), (13 * 7usize).div_ceil(8));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::new(2);
+        let x = Matrix::from_fn(5, 9, |_, _| rng.next_f32() * 10.0 - 5.0);
+        let p = softmax_rows(&x);
+        for r in 0..5 {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]).unwrap();
+        let p = softmax_rows(&x);
+        assert!(p.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cross_entropy_gradient_checks() {
+        // Finite-difference the masked CE loss wrt logits.
+        let mut rng = Pcg64::new(3);
+        let logits = Matrix::from_fn(4, 3, |_, _| rng.next_f32());
+        let labels = vec![0u32, 2, 1, 1];
+        let mask = vec![true, true, false, true];
+        let (_, grad) = softmax_cross_entropy(&logits, &labels, &mask).unwrap();
+        let eps = 1e-3f32;
+        for r in 0..4 {
+            for c in 0..3 {
+                let mut plus = logits.clone();
+                plus.set(r, c, plus.get(r, c) + eps);
+                let mut minus = logits.clone();
+                minus.set(r, c, minus.get(r, c) - eps);
+                let (lp, _) = softmax_cross_entropy(&plus, &labels, &mask).unwrap();
+                let (lm, _) = softmax_cross_entropy(&minus, &labels, &mask).unwrap();
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad.get(r, c)).abs() < 1e-3,
+                    "({r},{c}): fd={fd} analytic={}",
+                    grad.get(r, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_nodes_have_zero_gradient() {
+        let logits = Matrix::zeros(3, 2);
+        let (_, grad) =
+            softmax_cross_entropy(&logits, &[0, 0, 0], &[true, false, true]).unwrap();
+        assert!(grad.row(1).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn glorot_within_limits() {
+        let mut rng = Pcg64::new(4);
+        let w = glorot_uniform(64, 32, &mut rng);
+        let limit = (6.0f64 / 96.0).sqrt() as f32;
+        assert!(w.as_slice().iter().all(|&v| v.abs() <= limit));
+        // Not degenerate.
+        assert!(w.frobenius_norm() > 0.0);
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // minimize ||x - 3||^2 elementwise.
+        let mut params = vec![Matrix::zeros(2, 2)];
+        let mut adam = Adam::new(0.1, 0.0, &[(2, 2)]);
+        for _ in 0..300 {
+            let grads = vec![params[0].map(|v| 2.0 * (v - 3.0))];
+            adam.step(&mut params, &grads).unwrap();
+        }
+        for &v in params[0].as_slice() {
+            assert!((v - 3.0).abs() < 0.05, "v={v}");
+        }
+    }
+
+    #[test]
+    fn adam_shape_validation() {
+        let mut adam = Adam::new(0.1, 0.0, &[(2, 2)]);
+        let mut params = vec![Matrix::zeros(2, 2)];
+        let grads = vec![Matrix::zeros(3, 2)];
+        assert!(adam.step(&mut params, &grads).is_err());
+        let grads2: Vec<Matrix> = vec![];
+        assert!(adam.step(&mut params, &grads2).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! `iexact` — CLI for the i-Exact reproduction.
+//!
+//! Subcommands regenerate every table and figure of the paper, train
+//! models natively or through the AOT/PJRT path, and dump CSVs for
+//! EXPERIMENTS.md. Run `iexact help` for usage.
+
+use iexact::config::{DatasetSpec, ExperimentConfig, QuantConfig, TrainConfig};
+use iexact::coordinator::{run_native_on, AotCoordinator};
+use iexact::experiments::{ablation, fig1, fig2, fig3, fig4, fig5, table1, table2, Effort};
+use iexact::runtime::Runtime;
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+iexact — Activation Compression of GNNs (block-wise quantization + VM)
+
+USAGE:
+    iexact <COMMAND> [OPTIONS]
+
+COMMANDS:
+    table1        Reproduce Table 1 (accuracy / speed / memory sweep)
+    table2        Reproduce Table 2 (JS divergence + variance reduction)
+    fig1          Fig 1: stochastic rounding demo (uniform vs optimized bins)
+    fig2          Fig 2: observed vs modelled activation distributions
+    fig3          Fig 3: SR variance surface over (alpha, beta)
+    fig4          Fig 4: variance reduction vs assumed D per layer
+    fig5          Fig 5: variance reduction curves for CN_[1/D]
+    ablation      Bit-width / projection-ratio / block-size ablations
+    train         Train one configuration on the native pipeline
+    train-aot     Train via the AOT (JAX->HLO->PJRT) path
+    artifacts     List AOT artifacts and their shapes
+    boundaries    Print optimal (alpha*, beta*) for a D range (Appendix B)
+    help          Show this message
+
+COMMON OPTIONS:
+    --effort quick|paper   Experiment scale (default: quick)
+    --csv <path>           Also write the result as CSV
+    --out <path>           Write rendered output to a file too
+
+TRAIN OPTIONS:
+    --dataset arxiv|flickr|tiny   (default: tiny)
+    --quant fp32|exact|vm|g<N>    (default: g8; g<N> = blockwise, G/R=N)
+    --arch gcn|sage               (default: gcn)
+    --sample <n>                  GraphSAINT-RN minibatch of n nodes/epoch
+    --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
+
+TRAIN-AOT OPTIONS:
+    --artifacts <dir>      Artifact directory (default: artifacts)
+    --dataset arxiv|flickr (AOT-scale datasets; default: arxiv)
+    --quant ...            As above
+    --epochs <n>
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let opts = match parse_opts(&args[1..]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "table1" => cmd_table1(&opts),
+        "table2" => cmd_table2(&opts),
+        "fig1" => cmd_fig1(&opts),
+        "fig2" => cmd_fig2(&opts),
+        "fig3" => cmd_fig3(&opts),
+        "fig4" => cmd_fig4(&opts),
+        "fig5" => cmd_fig5(&opts),
+        "ablation" => cmd_ablation(&opts),
+        "train" => cmd_train(&opts),
+        "train-aot" => cmd_train_aot(&opts),
+        "artifacts" => cmd_artifacts(&opts),
+        "boundaries" => cmd_boundaries(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type Opts = HashMap<String, String>;
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".into());
+            let consumed = if val == "true" && args.get(i + 1).map(|v| v.as_str()) != Some("true")
+            {
+                1
+            } else {
+                2
+            };
+            map.insert(key.to_string(), val);
+            i += consumed;
+        } else {
+            return Err(format!("unexpected argument '{a}'"));
+        }
+    }
+    Ok(map)
+}
+
+fn effort(opts: &Opts) -> Effort {
+    opts.get("effort")
+        .and_then(|s| Effort::parse(s))
+        .unwrap_or(Effort::Quick)
+}
+
+fn emit(opts: &Opts, rendered: &str, csv: Option<String>) -> iexact::Result<()> {
+    println!("{rendered}");
+    if let Some(path) = opts.get("out") {
+        std::fs::write(path, rendered)?;
+    }
+    if let (Some(path), Some(csv)) = (opts.get("csv"), csv) {
+        std::fs::write(path, csv)?;
+        eprintln!("csv written to {path}");
+    }
+    Ok(())
+}
+
+fn quant_from(opts: &Opts) -> iexact::Result<QuantConfig> {
+    let q = opts.get("quant").map(|s| s.as_str()).unwrap_or("g8");
+    match q {
+        "fp32" => Ok(QuantConfig::fp32()),
+        "exact" | "int2" => Ok(QuantConfig::int2_exact()),
+        "vm" => Ok(QuantConfig::int2_vm()),
+        g if g.starts_with('g') => {
+            let ratio: usize = g[1..]
+                .parse()
+                .map_err(|_| iexact::Error::Config(format!("bad quant '{g}'")))?;
+            Ok(QuantConfig::int2_blockwise(ratio))
+        }
+        other => Err(iexact::Error::Config(format!("unknown quant '{other}'"))),
+    }
+}
+
+fn cmd_table1(opts: &Opts) -> iexact::Result<()> {
+    let t = table1::run(effort(opts), |line| eprintln!("{line}"))?;
+    emit(opts, &t.render(), Some(t.to_csv()))
+}
+
+fn cmd_table2(opts: &Opts) -> iexact::Result<()> {
+    let t = table2::run(effort(opts), |line| eprintln!("{line}"))?;
+    emit(opts, &t.render(), Some(t.to_csv()))
+}
+
+fn cmd_fig1(opts: &Opts) -> iexact::Result<()> {
+    let d = opts
+        .get("d")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16usize);
+    let f = fig1::run(128, d, 0)?;
+    emit(opts, &f.render(), Some(f.to_csv()))
+}
+
+fn cmd_fig2(opts: &Opts) -> iexact::Result<()> {
+    let f = fig2::run(effort(opts))?;
+    let (js_u, js_cn) = f.divergences()?;
+    let rendered = format!("{}\nJS(uniform)={js_u:.4}  JS(clipnorm)={js_cn:.4}", f.render());
+    emit(opts, &rendered, Some(f.to_csv()))
+}
+
+fn cmd_fig3(opts: &Opts) -> iexact::Result<()> {
+    let d = opts
+        .get("d")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16usize);
+    let steps = if effort(opts) == Effort::Paper { 60 } else { 30 };
+    let f = fig3::run(d, steps)?;
+    emit(opts, &f.render(), Some(f.to_csv()))
+}
+
+fn cmd_fig4(opts: &Opts) -> iexact::Result<()> {
+    let f = fig4::run(effort(opts), |line| eprintln!("{line}"))?;
+    emit(opts, &f.render(), Some(f.to_csv()))
+}
+
+fn cmd_fig5(opts: &Opts) -> iexact::Result<()> {
+    let (trials, samples) = if effort(opts) == Effort::Paper {
+        (10, 20_000)
+    } else {
+        (4, 6_000)
+    };
+    let f = fig5::run(trials, samples, 0, |line| eprintln!("{line}"))?;
+    emit(opts, &f.render(), Some(f.to_csv()))
+}
+
+fn cmd_ablation(opts: &Opts) -> iexact::Result<()> {
+    let a = ablation::run(effort(opts), |line| eprintln!("{line}"))?;
+    emit(opts, &a.render(), Some(a.to_csv()))
+}
+
+fn cmd_train(opts: &Opts) -> iexact::Result<()> {
+    let cfg = if let Some(path) = opts.get("config") {
+        ExperimentConfig::from_toml_file(std::path::Path::new(path))?
+    } else {
+        let dataset = DatasetSpec::by_name(
+            opts.get("dataset").map(|s| s.as_str()).unwrap_or("tiny"),
+        )?;
+        let mut train = TrainConfig::default();
+        if let Some(a) = opts.get("arch") {
+            train.arch = iexact::config::Arch::parse(a)?;
+        }
+        if let Some(e) = opts.get("epochs").and_then(|s| s.parse().ok()) {
+            train.epochs = e;
+        }
+        if let Some(h) = opts.get("hidden").and_then(|s| s.parse().ok()) {
+            train.hidden_dim = h;
+        }
+        if let Some(s) = opts.get("seed").and_then(|s| s.parse().ok()) {
+            train.seeds = vec![s];
+        }
+        ExperimentConfig {
+            dataset,
+            quant: quant_from(opts)?,
+            train,
+            dataset_seed: 42,
+        }
+    };
+    cfg.validate()?;
+    let ds = cfg.dataset.generate(cfg.dataset_seed);
+    eprintln!(
+        "training {} ({} nodes, {} edges) with {}",
+        ds.name,
+        ds.num_nodes(),
+        ds.num_edges(),
+        cfg.quant.label()
+    );
+    if let Some(n_sample) = opts.get("sample").and_then(|s| s.parse().ok()) {
+        // GraphSAINT-RN minibatch training (sampling.rs).
+        let res =
+            iexact::sampling::train_sampled(&ds, &cfg.quant, &cfg.train, n_sample, 0)?;
+        println!(
+            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}",
+            res.test_accuracy,
+            res.epochs_per_sec,
+            res.stash_bytes / 1024
+        );
+        if let Some(path) = opts.get("csv") {
+            std::fs::write(path, res.curve.to_csv())?;
+        }
+        return Ok(());
+    }
+    let out = run_native_on(&ds, &cfg.quant, &cfg.train)?;
+    println!(
+        "test accuracy: {}\nepochs/sec:    {:.2}\nactivation MB: {:.2}",
+        out.summary.accuracy, out.summary.epochs_per_sec, out.summary.memory_mb
+    );
+    if let Some(path) = opts.get("csv") {
+        std::fs::write(path, out.results[0].curve.to_csv())?;
+        eprintln!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train_aot(opts: &Opts) -> iexact::Result<()> {
+    let dir = opts
+        .get("artifacts")
+        .map(|s| s.as_str())
+        .unwrap_or("artifacts");
+    let dataset_key = opts.get("dataset").map(|s| s.as_str()).unwrap_or("arxiv");
+    let quant = quant_from(opts)?;
+    let slug = quant.slug();
+    let epochs = opts
+        .get("epochs")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50usize);
+
+    let mut rt = Runtime::open(dir)?;
+    eprintln!("platform: {}", rt.platform());
+    // The AOT datasets are the scaled specs stored in the manifest meta.
+    let entry = rt
+        .load(&format!("train_step_{dataset_key}_{slug}"))?
+        .entry
+        .clone();
+    let spec = aot_spec_from_meta(&entry.meta)?;
+    let ds = spec.generate(42);
+    let mut coord = AotCoordinator::new(&mut rt, dataset_key, &slug, &ds, 0)?;
+    let out = coord.train(&slug, &ds, epochs, 5)?;
+    println!(
+        "AOT {} / {}: test acc {:.4}, best val loss {:.4}, {:.2} steps/s",
+        dataset_key, slug, out.test_accuracy, out.best_val_loss, out.epochs_per_sec
+    );
+    if let Some(path) = opts.get("csv") {
+        std::fs::write(path, out.curve.to_csv())?;
+    }
+    Ok(())
+}
+
+/// Rebuild the dataset spec an artifact was compiled for from its meta.
+fn aot_spec_from_meta(
+    meta: &std::collections::BTreeMap<String, String>,
+) -> iexact::Result<DatasetSpec> {
+    let get = |k: &str| -> iexact::Result<usize> {
+        meta.get(k)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| iexact::Error::Artifact(format!("manifest meta missing '{k}'")))
+    };
+    let base = DatasetSpec::by_name(
+        meta.get("dataset")
+            .map(|s| s.as_str())
+            .unwrap_or("arxiv-like"),
+    )?;
+    Ok(DatasetSpec {
+        num_nodes: get("num_nodes")?,
+        num_features: get("num_features")?,
+        num_classes: get("num_classes")?,
+        ..base
+    })
+}
+
+fn cmd_artifacts(opts: &Opts) -> iexact::Result<()> {
+    let dir = opts
+        .get("artifacts")
+        .map(|s| s.as_str())
+        .unwrap_or("artifacts");
+    let rt = Runtime::open(dir)?;
+    let mut t = iexact::util::table::AsciiTable::new(&["artifact", "inputs", "outputs"]);
+    for name in rt.artifact_names() {
+        let e = rt.manifest().get(&name).unwrap();
+        t.add_row(vec![
+            name.clone(),
+            e.inputs.len().to_string(),
+            e.outputs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_boundaries(opts: &Opts) -> iexact::Result<()> {
+    let lo = opts.get("from").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let hi = opts.get("to").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let table = iexact::varmin::BoundaryTable::build(lo, hi)?;
+    let mut t = iexact::util::table::AsciiTable::new(&[
+        "D", "alpha*", "beta*", "Var*", "Var(uniform)", "reduction %",
+    ]);
+    let mut d = lo;
+    while d <= hi {
+        let b = table.get(d);
+        t.add_row(vec![
+            d.to_string(),
+            format!("{:.5}", b.alpha),
+            format!("{:.5}", b.beta),
+            format!("{:.6}", b.variance),
+            format!("{:.6}", b.uniform_variance),
+            format!("{:.2}", 100.0 * b.reduction()),
+        ]);
+        d = (d * 2).max(d + 1);
+    }
+    emit(opts, &t.render(), Some(t.to_csv()))
+}

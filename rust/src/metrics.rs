@@ -1,0 +1,201 @@
+//! Training metrics: accuracy, loss curves, throughput, and multi-seed
+//! aggregation (the `mean ± std over 10 runs` of Table 1).
+
+use crate::stats::Welford;
+use std::fmt;
+
+/// Masked classification accuracy: fraction of `mask`-selected nodes whose
+/// argmax logit matches the label.
+pub fn masked_accuracy(logits: &crate::tensor::Matrix, labels: &[u32], mask: &[bool]) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..logits.rows() {
+        if !mask[i] {
+            continue;
+        }
+        let row = logits.row(i);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        total += 1;
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// History of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainCurve {
+    pub epochs: Vec<usize>,
+    pub train_loss: Vec<f64>,
+    pub val_loss: Vec<f64>,
+    pub val_accuracy: Vec<f64>,
+}
+
+impl TrainCurve {
+    pub fn push(&mut self, epoch: usize, train_loss: f64, val_loss: f64, val_acc: f64) {
+        self.epochs.push(epoch);
+        self.train_loss.push(train_loss);
+        self.val_loss.push(val_loss);
+        self.val_accuracy.push(val_acc);
+    }
+
+    /// Epoch index with the lowest validation loss (the paper's model
+    /// selection criterion, Appendix D).
+    pub fn best_epoch(&self) -> Option<usize> {
+        self.val_loss
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epochs.is_empty()
+    }
+
+    /// Render as CSV for EXPERIMENTS.md.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,train_loss,val_loss,val_accuracy\n");
+        for i in 0..self.epochs.len() {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6}\n",
+                self.epochs[i], self.train_loss[i], self.val_loss[i], self.val_accuracy[i]
+            ));
+        }
+        s
+    }
+}
+
+/// `mean ± std` aggregate over seeds, formatted like Table 1.
+#[derive(Debug, Clone, Default)]
+pub struct Aggregate {
+    w: Welford,
+}
+
+impl Aggregate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.w.add(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.w.sample_std()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.w.count()
+    }
+}
+
+impl fmt::Display for Aggregate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} ± {:.2}", self.mean(), self.std())
+    }
+}
+
+/// Summary of a (dataset × config) cell in Table 1.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub dataset: String,
+    pub config_label: String,
+    /// Test accuracy (%), aggregated over seeds.
+    pub accuracy: Aggregate,
+    /// Epochs per second.
+    pub epochs_per_sec: f64,
+    /// Activation memory in MB (analytic model, cross-checked).
+    pub memory_mb: f64,
+}
+
+impl RunSummary {
+    /// Table 1-style row cells.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.dataset.clone(),
+            self.config_label.clone(),
+            format!("{}", self.accuracy),
+            format!("{:.2}", self.epochs_per_sec),
+            format!("{:.2}", self.memory_mb),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn accuracy_counts_only_masked() {
+        // logits rows: argmax = [1, 0, 1]
+        let logits =
+            Matrix::from_vec(3, 2, vec![0.0, 1.0, 5.0, -1.0, 0.2, 0.9]).unwrap();
+        let labels = vec![1u32, 1, 1];
+        let mask = vec![true, true, false];
+        // node0 correct, node1 wrong, node2 ignored
+        let acc = masked_accuracy(&logits, &labels, &mask);
+        assert!((acc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_empty_mask_is_zero() {
+        let logits = Matrix::zeros(2, 2);
+        assert_eq!(masked_accuracy(&logits, &[0, 0], &[false, false]), 0.0);
+    }
+
+    #[test]
+    fn curve_best_epoch() {
+        let mut c = TrainCurve::default();
+        c.push(0, 1.0, 0.9, 0.5);
+        c.push(5, 0.5, 0.4, 0.7);
+        c.push(10, 0.3, 0.6, 0.65); // overfit
+        assert_eq!(c.best_epoch(), Some(1));
+        let csv = c.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn aggregate_formats_like_table1() {
+        let mut a = Aggregate::new();
+        for x in [71.0, 72.0, 71.5] {
+            a.add(x);
+        }
+        let s = format!("{a}");
+        assert!(s.contains("±"), "{s}");
+        assert!((a.mean() - 71.5).abs() < 1e-9);
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    fn run_summary_row_shape() {
+        let mut acc = Aggregate::new();
+        acc.add(71.2);
+        let r = RunSummary {
+            dataset: "arxiv-like".into(),
+            config_label: "INT2 G/R=64".into(),
+            accuracy: acc,
+            epochs_per_sec: 10.5,
+            memory_mb: 25.56,
+        };
+        assert_eq!(r.row().len(), 5);
+    }
+}

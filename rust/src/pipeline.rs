@@ -1,0 +1,740 @@
+//! Native Rust compressed-training pipeline.
+//!
+//! A full-batch GCN (Eq. 1) trained with activation compression inserted
+//! exactly where EXACT and this paper put it: the forward pass stashes
+//! each layer's aggregated input `U^{(ℓ)} = Â H^{(ℓ)}` as
+//! `Quant(RP(U))` plus the 1-bit ReLU sign pattern; the backward pass
+//! reconstructs `Û = IRP(Dequant(·))` and uses it for the weight
+//! gradients. FP32 mode stashes `U` and the pre-activation densely.
+//!
+//! This is the substrate behind Table 1 (native path), Table 2 / Figs 2 & 4
+//! (activation capture), and the pipeline benches. The same model/step
+//! semantics are mirrored by the JAX L2 graph (`python/compile/model.py`),
+//! which the PJRT runtime executes for the AOT path.
+
+use crate::config::{Arch, QuantConfig, QuantMode, TrainConfig};
+use crate::graph::Dataset;
+use crate::linalg::{glorot_uniform, relu, softmax_cross_entropy, Adam, SignPattern};
+use crate::metrics::{masked_accuracy, TrainCurve};
+use crate::quant::{quantize_grouped, BinSpec, CompressedTensor};
+use crate::rngs::Pcg64;
+use crate::rp::RandomProjection;
+use crate::stats::ClippedNormal;
+use crate::tensor::Matrix;
+use crate::util::timer::LapTimer;
+use crate::varmin::optimal_boundaries;
+use crate::{Error, Result};
+
+/// What the forward pass stashed for one layer.
+enum Stash {
+    /// FP32: the aggregated input and the dense pre-activation.
+    Dense { aggregated: Matrix, pre: Matrix },
+    /// Compressed: RP+quantized aggregated input, the projection used,
+    /// and the 1-bit sign pattern of the pre-activation.
+    Compressed {
+        ct: CompressedTensor,
+        rp: RandomProjection,
+        signs: Option<SignPattern>,
+    },
+    /// Final layer in compressed mode (no ReLU): compressed input only.
+    CompressedLinear {
+        ct: CompressedTensor,
+        rp: RandomProjection,
+    },
+    /// GraphSAGE: the self (`H`) and aggregated (`Â H`) halves of the
+    /// concat are quantized *separately* — their scales differ, and a
+    /// shared (zero, range) would let one half dominate the other (this
+    /// mirrors EXACT, which compresses each stored tensor on its own).
+    CompressedSage {
+        ct_self: CompressedTensor,
+        rp_self: RandomProjection,
+        ct_agg: CompressedTensor,
+        rp_agg: RandomProjection,
+        signs: Option<SignPattern>,
+    },
+}
+
+impl Stash {
+    /// Bytes this stash would occupy in activation memory.
+    fn nbytes(&self) -> usize {
+        match self {
+            Stash::Dense { aggregated, pre } => 4 * (aggregated.len() + pre.len()),
+            Stash::Compressed { ct, rp, signs } => {
+                ct.nbytes()
+                    + signs.as_ref().map_or(0, |s| s.nbytes())
+                    + (rp.d * rp.r).div_ceil(8)
+            }
+            Stash::CompressedLinear { ct, rp } => ct.nbytes() + (rp.d * rp.r).div_ceil(8),
+            Stash::CompressedSage {
+                ct_self,
+                rp_self,
+                ct_agg,
+                rp_agg,
+                signs,
+            } => {
+                ct_self.nbytes()
+                    + ct_agg.nbytes()
+                    + signs.as_ref().map_or(0, |s| s.nbytes())
+                    + (rp_self.d * rp_self.r).div_ceil(8)
+                    + (rp_agg.d * rp_agg.r).div_ceil(8)
+            }
+        }
+    }
+}
+
+/// The GNN model: one weight matrix per layer, widths
+/// `F → hidden → … → hidden → C`. For [`Arch::GraphSage`] each weight is
+/// `(2·d_in) × d_out`, acting on the `[H ‖ Â H]` concat.
+#[derive(Debug, Clone)]
+pub struct GcnModel {
+    pub arch: Arch,
+    pub weights: Vec<Matrix>,
+}
+
+impl GcnModel {
+    pub fn init(
+        feat_dim: usize,
+        hidden_dim: usize,
+        num_classes: usize,
+        num_layers: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        Self::init_arch(Arch::Gcn, feat_dim, hidden_dim, num_classes, num_layers, rng)
+    }
+
+    pub fn init_arch(
+        arch: Arch,
+        feat_dim: usize,
+        hidden_dim: usize,
+        num_classes: usize,
+        num_layers: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        if num_layers < 2 {
+            return Err(Error::Config("GNN needs >= 2 layers".into()));
+        }
+        let mut widths = vec![feat_dim];
+        for _ in 1..num_layers {
+            widths.push(hidden_dim);
+        }
+        widths.push(num_classes);
+        let mult = match arch {
+            Arch::Gcn => 1,
+            Arch::GraphSage => 2,
+        };
+        let weights = widths
+            .windows(2)
+            .map(|w| glorot_uniform(mult * w[0], w[1], rng))
+            .collect();
+        Ok(GcnModel { arch, weights })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.weights.iter().map(|w| w.shape()).collect()
+    }
+
+    /// The layer input fed to the dense multiply: `Â H` for GCN,
+    /// `[H ‖ Â H]` for GraphSAGE. This is the activation map the paper
+    /// compresses.
+    fn layer_input(&self, ds: &Dataset, h: &Matrix) -> Result<Matrix> {
+        let u = ds.adj.spmm(h)?;
+        match self.arch {
+            Arch::Gcn => Ok(u),
+            Arch::GraphSage => h.concat_cols(&u),
+        }
+    }
+
+    /// Pure inference forward pass (no stashing, no compression noise).
+    pub fn forward(&self, ds: &Dataset) -> Result<Matrix> {
+        let mut h = ds.features.clone();
+        let last = self.num_layers() - 1;
+        for l in 0..self.num_layers() {
+            let x = self.layer_input(ds, &h)?;
+            let p = x.matmul(&self.weights[l])?;
+            h = if l == last { p } else { relu(&p) };
+        }
+        Ok(h)
+    }
+}
+
+/// Per-layer quantization bins, resolved once per run.
+fn resolve_bins(q: &QuantConfig, r_dim: usize) -> Result<BinSpec> {
+    match q.mode {
+        QuantMode::RowWiseVm => {
+            // Appendix C: assume CN_{[1/R]} for a layer projected to R
+            // dims and use the variance-minimizing boundaries.
+            let cn = ClippedNormal::new(q.bits, r_dim.max(4))?;
+            let opt = optimal_boundaries(&cn)?;
+            BinSpec::int2_vm(opt.alpha, opt.beta)
+        }
+        _ => Ok(BinSpec::Uniform),
+    }
+}
+
+/// Group length in scalars for the quantizer.
+fn group_len(q: &QuantConfig, r_dim: usize) -> usize {
+    match q.mode {
+        QuantMode::BlockWise { group_ratio } => group_ratio * r_dim,
+        _ => r_dim, // per-row
+    }
+}
+
+/// Output of one forward+backward step.
+struct StepOutput {
+    loss: f64,
+    grads: Vec<Matrix>,
+    /// Peak stashed-activation bytes during this step.
+    stash_bytes: usize,
+}
+
+/// One full-batch training step with the configured compression.
+fn train_step(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    bins: &[BinSpec],
+    rng: &mut Pcg64,
+) -> Result<StepOutput> {
+    let last = model.num_layers() - 1;
+    let compressed = !matches!(q.mode, QuantMode::Fp32);
+
+    // ---- Forward ----
+    let mut stashes: Vec<Stash> = Vec::with_capacity(model.num_layers());
+    let mut h = ds.features.clone();
+    for (l, w) in model.weights.iter().enumerate() {
+        // The layer input x (= Â H for GCN, [H ‖ Â H] for GraphSAGE) is
+        // the activation map that gets compressed.
+        let x = model.layer_input(ds, &h)?;
+        let p = x.matmul(w)?; // pre-activation
+        if compressed {
+            let signs = if l == last {
+                None
+            } else {
+                Some(SignPattern::from_matrix(&p))
+            };
+            match model.arch {
+                Arch::GraphSage => {
+                    // Compress the self and aggregated halves separately
+                    // (distinct scales — see Stash::CompressedSage).
+                    let d = x.cols() / 2;
+                    let r_dim = (d / q.proj_ratio).max(1);
+                    let glen = group_len(q, r_dim);
+                    let (xs, xa) = x.split_cols(d)?;
+                    let rp_self = RandomProjection::new(d, r_dim, rng)?;
+                    let rp_agg = RandomProjection::new(d, r_dim, rng)?;
+                    let ct_self = quantize_grouped(
+                        &rp_self.project(&xs)?,
+                        glen,
+                        q.bits,
+                        &bins[l],
+                        rng,
+                    )?;
+                    let ct_agg = quantize_grouped(
+                        &rp_agg.project(&xa)?,
+                        glen,
+                        q.bits,
+                        &bins[l],
+                        rng,
+                    )?;
+                    stashes.push(Stash::CompressedSage {
+                        ct_self,
+                        rp_self,
+                        ct_agg,
+                        rp_agg,
+                        signs,
+                    });
+                }
+                Arch::Gcn => {
+                    let d = x.cols();
+                    let r_dim = (d / q.proj_ratio).max(1);
+                    let rp = RandomProjection::new(d, r_dim, rng)?;
+                    let proj = rp.project(&x)?;
+                    let ct =
+                        quantize_grouped(&proj, group_len(q, r_dim), q.bits, &bins[l], rng)?;
+                    if l == last {
+                        stashes.push(Stash::CompressedLinear { ct, rp });
+                    } else {
+                        stashes.push(Stash::Compressed { ct, rp, signs });
+                    }
+                }
+            }
+        } else {
+            stashes.push(Stash::Dense {
+                aggregated: x,
+                pre: p.clone(),
+            });
+        }
+        h = if l == last { p } else { relu(&p) };
+    }
+
+    let stash_bytes: usize = stashes.iter().map(|s| s.nbytes()).sum();
+
+    // ---- Loss ----
+    let (loss, dlogits) = softmax_cross_entropy(&h, &ds.labels, &ds.train_mask)?;
+
+    // ---- Backward ----
+    let mut grads: Vec<Matrix> = vec![Matrix::zeros(0, 0); model.num_layers()];
+    let mut d_out = dlogits; // gradient wrt layer output
+    for l in (0..model.num_layers()).rev() {
+        // dP: through ReLU for hidden layers, identity for the last.
+        let d_pre = match &stashes[l] {
+            Stash::Dense { pre, .. } if l != last => {
+                crate::linalg::relu_backward(&d_out, pre)?
+            }
+            Stash::Compressed {
+                signs: Some(sp), ..
+            }
+            | Stash::CompressedSage {
+                signs: Some(sp), ..
+            } => sp.apply_backward(&d_out)?,
+            _ => d_out,
+        };
+        // Reconstruct the stashed layer input X̂.
+        let x_hat = match &stashes[l] {
+            Stash::Dense { aggregated, .. } => aggregated.clone(),
+            Stash::Compressed { ct, rp, .. } | Stash::CompressedLinear { ct, rp } => {
+                rp.recover(&ct.dequantize()?)?
+            }
+            Stash::CompressedSage {
+                ct_self,
+                rp_self,
+                ct_agg,
+                rp_agg,
+                ..
+            } => {
+                let hs = rp_self.recover(&ct_self.dequantize()?)?;
+                let ha = rp_agg.recover(&ct_agg.dequantize()?)?;
+                hs.concat_cols(&ha)?
+            }
+        };
+        // dΘ = X̂^T dP.
+        grads[l] = x_hat.transpose_matmul(&d_pre)?;
+        // dH: GCN has X = Â H ⇒ dH = Â (dP Θ^T); GraphSAGE has
+        // X = [H ‖ Â H] ⇒ dH = dX_left + Â dX_right.
+        if l > 0 {
+            let dx = d_pre.matmul_transpose(&model.weights[l])?;
+            d_out = match model.arch {
+                Arch::Gcn => ds.adj.spmm(&dx)?,
+                Arch::GraphSage => {
+                    let (mut left, right) = dx.split_cols(dx.cols() / 2)?;
+                    left.axpy(1.0, &ds.adj.spmm(&right)?)?;
+                    left
+                }
+            };
+        } else {
+            d_out = Matrix::zeros(0, 0);
+        }
+    }
+
+    Ok(StepOutput {
+        loss,
+        grads,
+        stash_bytes,
+    })
+}
+
+/// Public single-step API (used by the minibatch/sampling trainer):
+/// resolves bins from the config and runs one forward/backward pass,
+/// returning `(loss, grads, stash_bytes)`.
+pub fn train_step_public(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    rng: &mut Pcg64,
+) -> Result<(f64, Vec<Matrix>, usize)> {
+    let bins: Vec<BinSpec> = model
+        .weights
+        .iter()
+        .map(|w| resolve_bins(q, (w.rows() / q.proj_ratio).max(1)))
+        .collect::<Result<Vec<_>>>()?;
+    let out = train_step(model, ds, q, &bins, rng)?;
+    Ok((out.loss, out.grads, out.stash_bytes))
+}
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// Test accuracy at the epoch with the best validation loss.
+    pub test_accuracy: f64,
+    pub best_val_loss: f64,
+    pub curve: TrainCurve,
+    /// Mean epochs per second over training (Table 1's S column).
+    pub epochs_per_sec: f64,
+    /// Peak measured stash bytes (cross-checks the analytic MemoryModel).
+    pub stash_bytes: usize,
+    pub final_train_loss: f64,
+}
+
+/// Train a GCN on `dataset` with compression `quant`, returning Table 1's
+/// per-run metrics. Deterministic in `seed`.
+pub fn train(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<TrainResult> {
+    quant.validate()?;
+    cfg.validate()?;
+    dataset.validate()?;
+    let mut rng = Pcg64::new(seed ^ 0x1ed0_5eed);
+    let mut model = GcnModel::init_arch(
+        cfg.arch,
+        dataset.num_features(),
+        cfg.hidden_dim,
+        dataset.num_classes,
+        cfg.num_layers,
+        &mut rng,
+    )?;
+
+    // Resolve bins once per layer (VM solves the boundary optimization).
+    // Widths are the *stashed* layer-input widths (2x for GraphSAGE).
+    let mult = match cfg.arch {
+        Arch::Gcn => 1,
+        Arch::GraphSage => 2,
+    };
+    let widths: Vec<usize> = {
+        let mut w = vec![mult * dataset.num_features()];
+        for _ in 1..cfg.num_layers {
+            w.push(mult * cfg.hidden_dim);
+        }
+        w
+    };
+    let bins: Vec<BinSpec> = widths
+        .iter()
+        .map(|&d| resolve_bins(quant, (d / quant.proj_ratio).max(1)))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+    let mut curve = TrainCurve::default();
+    let mut timer = LapTimer::new();
+    let mut best_val_loss = f64::INFINITY;
+    let mut test_at_best = 0.0;
+    let mut stash_bytes = 0usize;
+    let mut final_train_loss = f64::NAN;
+
+    for epoch in 0..cfg.epochs {
+        let step = timer.lap(|| train_step(&model, dataset, quant, &bins, &mut rng))?;
+        adam.step(&mut model.weights, &step.grads)?;
+        stash_bytes = stash_bytes.max(step.stash_bytes);
+        final_train_loss = step.loss;
+
+        if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            let logits = model.forward(dataset)?;
+            let (val_loss, _) =
+                softmax_cross_entropy(&logits, &dataset.labels, &dataset.val_mask)?;
+            let val_acc = masked_accuracy(&logits, &dataset.labels, &dataset.val_mask);
+            curve.push(epoch, step.loss, val_loss, val_acc);
+            if val_loss < best_val_loss {
+                best_val_loss = val_loss;
+                test_at_best =
+                    masked_accuracy(&logits, &dataset.labels, &dataset.test_mask);
+            }
+        }
+    }
+
+    Ok(TrainResult {
+        test_accuracy: test_at_best,
+        best_val_loss,
+        curve,
+        epochs_per_sec: timer.rate_per_sec(),
+        stash_bytes,
+        final_train_loss,
+    })
+}
+
+/// Capture the *normalized projected* activations `H̄_proj ∈ [0, B]` per
+/// hidden layer after a short training run — the observable behind
+/// Fig. 2, Table 2 and Fig. 4 (Appendix D's capture protocol).
+///
+/// Normalization is per-row (EXACT's quantization granularity): each row
+/// is affinely mapped by its own `(min, range)` onto `[0, 2^bits − 1]`.
+pub fn capture_normalized_activations(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<Vec<Matrix>> {
+    let mut rng = Pcg64::new(seed ^ 0xca97_u64);
+    let mut model = GcnModel::init_arch(
+        cfg.arch,
+        dataset.num_features(),
+        cfg.hidden_dim,
+        dataset.num_classes,
+        cfg.num_layers,
+        &mut rng,
+    )?;
+    // Brief training so activations are from a fitted model, per App. D.
+    let bins: Vec<BinSpec> = (0..model.num_layers())
+        .map(|_| BinSpec::Uniform)
+        .collect();
+    let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+    for _ in 0..cfg.epochs {
+        let step = train_step(&model, dataset, quant, &bins, &mut rng)?;
+        adam.step(&mut model.weights, &step.grads)?;
+    }
+
+    // Forward once more, projecting each layer's aggregated input.
+    let b_max = ((1u32 << quant.bits.min(8)) - 1) as f32;
+    let mut out = Vec::new();
+    let mut h = dataset.features.clone();
+    let last = model.num_layers() - 1;
+    for l in 0..model.num_layers() {
+        let w = &model.weights[l];
+        let x = model.layer_input(dataset, &h)?;
+        let d = x.cols();
+        let r_dim = (d / quant.proj_ratio).max(1);
+        let rp = RandomProjection::new(d, r_dim, &mut rng)?;
+        let proj = rp.project(&x)?;
+        // Per-row normalization onto [0, B].
+        let mut norm = proj.clone();
+        for r in 0..norm.rows() {
+            let row = norm.row_mut(r);
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in row.iter() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let range = (hi - lo).max(1e-12);
+            for v in row.iter_mut() {
+                *v = (*v - lo) / range * b_max;
+            }
+        }
+        out.push(norm);
+        let p = x.matmul(w)?;
+        h = if l == last { p } else { relu(&p) };
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+
+    fn tiny_ds() -> Dataset {
+        DatasetSpec::tiny().generate(1)
+    }
+
+    fn fast_cfg() -> TrainConfig {
+        TrainConfig {
+            arch: Arch::Gcn,
+            hidden_dim: 32,
+            num_layers: 3,
+            epochs: 25,
+            lr: 0.02,
+            weight_decay: 0.0,
+            seeds: vec![0],
+            eval_every: 5,
+        }
+    }
+
+    #[test]
+    fn fp32_training_learns() {
+        let ds = tiny_ds();
+        let res = train(&ds, &QuantConfig::fp32(), &fast_cfg(), 0).unwrap();
+        assert!(
+            res.test_accuracy > 0.6,
+            "fp32 should beat chance (0.25): {}",
+            res.test_accuracy
+        );
+        assert!(res.epochs_per_sec > 0.0);
+        assert!(!res.curve.is_empty());
+    }
+
+    #[test]
+    fn int2_exact_training_learns() {
+        let ds = tiny_ds();
+        let res = train(&ds, &QuantConfig::int2_exact(), &fast_cfg(), 0).unwrap();
+        assert!(
+            res.test_accuracy > 0.5,
+            "int2 accuracy {} too low",
+            res.test_accuracy
+        );
+    }
+
+    #[test]
+    fn blockwise_training_learns_and_uses_less_memory() {
+        let ds = tiny_ds();
+        let exact = train(&ds, &QuantConfig::int2_exact(), &fast_cfg(), 0).unwrap();
+        let blk = train(&ds, &QuantConfig::int2_blockwise(16), &fast_cfg(), 0).unwrap();
+        assert!(blk.test_accuracy > 0.5, "acc {}", blk.test_accuracy);
+        assert!(
+            blk.stash_bytes < exact.stash_bytes,
+            "blockwise {} must stash less than exact {}",
+            blk.stash_bytes,
+            exact.stash_bytes
+        );
+    }
+
+    #[test]
+    fn fp32_stash_dwarfs_compressed() {
+        let ds = tiny_ds();
+        let fp = train(&ds, &QuantConfig::fp32(), &fast_cfg(), 0).unwrap();
+        let q = train(&ds, &QuantConfig::int2_exact(), &fast_cfg(), 0).unwrap();
+        let ratio = fp.stash_bytes as f64 / q.stash_bytes as f64;
+        assert!(ratio > 10.0, "compression ratio only {ratio}");
+    }
+
+    #[test]
+    fn vm_training_runs() {
+        let ds = tiny_ds();
+        let res = train(&ds, &QuantConfig::int2_vm(), &fast_cfg(), 0).unwrap();
+        assert!(res.test_accuracy > 0.4, "acc {}", res.test_accuracy);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let ds = tiny_ds();
+        let a = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 7).unwrap();
+        let b = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 7).unwrap();
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        let c = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 8).unwrap();
+        assert_ne!(a.final_train_loss, c.final_train_loss);
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let ds = tiny_ds();
+        let res = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 3).unwrap();
+        let first = res.curve.train_loss.first().copied().unwrap();
+        let last = res.curve.train_loss.last().copied().unwrap();
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn capture_produces_normalized_layers() {
+        let ds = tiny_ds();
+        let cfg = TrainConfig {
+            epochs: 5,
+            ..fast_cfg()
+        };
+        let acts =
+            capture_normalized_activations(&ds, &QuantConfig::int2_exact(), &cfg, 0)
+                .unwrap();
+        assert_eq!(acts.len(), 3);
+        for a in &acts {
+            let (lo, hi) = a.min_max();
+            assert!(lo >= 0.0 && hi <= 3.0 + 1e-5, "range [{lo},{hi}]");
+            // Each row must touch both edges (per-row normalization).
+            let row = a.row(0);
+            let rmin = row.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+            let rmax = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            assert!(rmin.abs() < 1e-5 && (rmax - 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn graphsage_fp32_training_learns() {
+        let ds = tiny_ds();
+        let cfg = TrainConfig {
+            arch: Arch::GraphSage,
+            ..fast_cfg()
+        };
+        let res = train(&ds, &QuantConfig::fp32(), &cfg, 0).unwrap();
+        assert!(res.test_accuracy > 0.6, "sage acc {}", res.test_accuracy);
+    }
+
+    #[test]
+    fn graphsage_compressed_training_learns() {
+        let ds = tiny_ds();
+        let cfg = TrainConfig {
+            arch: Arch::GraphSage,
+            ..fast_cfg()
+        };
+        let res = train(&ds, &QuantConfig::int2_blockwise(16), &cfg, 0).unwrap();
+        assert!(res.test_accuracy > 0.5, "sage acc {}", res.test_accuracy);
+    }
+
+    #[test]
+    fn graphsage_fd_gradient_check_fp32() {
+        // Finite-difference the loss wrt one weight entry (FP32, exact).
+        let ds = tiny_ds();
+        let mut rng = Pcg64::new(21);
+        let mut model =
+            GcnModel::init_arch(Arch::GraphSage, ds.num_features(), 16, ds.num_classes, 2, &mut rng)
+                .unwrap();
+        let q = QuantConfig::fp32();
+        let bins = vec![BinSpec::Uniform; 2];
+        let base = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+        let eps = 2e-2f32;
+        for &(r, c) in &[(0usize, 0usize), (5, 3), (20, 7)] {
+            let orig = model.weights[0].get(r, c);
+            model.weights[0].set(r, c, orig + eps);
+            let plus = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            model.weights[0].set(r, c, orig - eps);
+            let minus = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            model.weights[0].set(r, c, orig);
+            let fd = ((plus.loss - minus.loss) / (2.0 * eps as f64)) as f32;
+            let an = base.grads[0].get(r, c);
+            assert!(
+                (fd - an).abs() < 2e-2 + 0.15 * an.abs(),
+                "({r},{c}): fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn graphsage_stashes_double_width() {
+        let ds = tiny_ds();
+        let gcn = train(&ds, &QuantConfig::int2_exact(), &fast_cfg(), 0).unwrap();
+        let sage_cfg = TrainConfig {
+            arch: Arch::GraphSage,
+            ..fast_cfg()
+        };
+        let sage = train(&ds, &QuantConfig::int2_exact(), &sage_cfg, 0).unwrap();
+        // SAGE doubles the *code* bytes (stashed width 2d) but per-row
+        // metadata (one pair per node) and ReLU sign bits (output width)
+        // are unchanged, so at tiny scale the total grows by ~10-60%
+        // rather than 2x. The exact 2x on codes is covered by the memory
+        // model unit tests; here we check the direction and bound.
+        let ratio = sage.stash_bytes as f64 / gcn.stash_bytes as f64;
+        assert!(
+            (1.05..=2.5).contains(&ratio),
+            "sage/gcn stash ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn gradients_match_fp32_direction() {
+        // Compressed gradients are noisy but unbiased: over many seeds the
+        // mean gradient should align with the FP32 gradient (cosine > 0.9).
+        let ds = tiny_ds();
+        let mut rng = Pcg64::new(11);
+        let model = GcnModel::init(ds.num_features(), 16, ds.num_classes, 2, &mut rng)
+            .unwrap();
+        let q_fp = QuantConfig::fp32();
+        let bins_fp = vec![BinSpec::Uniform; 2];
+        let fp = train_step(&model, &ds, &q_fp, &bins_fp, &mut rng).unwrap();
+
+        let q = QuantConfig::int2_exact();
+        let bins = vec![BinSpec::Uniform; 2];
+        let mut acc: Vec<Matrix> = model
+            .shapes()
+            .iter()
+            .map(|&(r, c)| Matrix::zeros(r, c))
+            .collect();
+        let trials = 60;
+        for _ in 0..trials {
+            let s = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            for (a, g) in acc.iter_mut().zip(&s.grads) {
+                a.axpy(1.0, g).unwrap();
+            }
+        }
+        for (a, g_fp) in acc.iter().zip(&fp.grads) {
+            let mean = a.map(|v| v / trials as f32);
+            let dot: f64 = mean
+                .as_slice()
+                .iter()
+                .zip(g_fp.as_slice())
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let cos = dot / (mean.frobenius_norm() * g_fp.frobenius_norm()).max(1e-30);
+            assert!(cos > 0.9, "cosine similarity {cos}");
+        }
+    }
+}

@@ -1,0 +1,668 @@
+//! Stochastic-rounding quantization of activation maps — the paper's core
+//! substrate.
+//!
+//! Implements:
+//! * **Eq. 2/3** — per-group affine quantization `Quant(h) = ⌊(h - Z)/r · B⌉`
+//!   with stochastic rounding (SR) and its inverse `Dequant`.
+//! * **Footnote 2 / Eq. 8** — SR with uniform *and* non-uniform bin widths
+//!   (the variance-minimization variant with tunable `[α, β]`).
+//! * **EXACT's per-row grouping** ([`RowQuantizer`]) and the paper's
+//!   **block-wise grouping** of Eq. 6 ([`BlockwiseQuantizer`]): the
+//!   projected activation matrix `H_proj ∈ R^{N×R}` is viewed as
+//!   `(N·R/G)` flat blocks of `G` scalars, each with its own
+//!   `(zero-point, range)` pair.
+//! * **INT2/INT4/INT8 bit-packing** so a compressed tensor's `nbytes()`
+//!   is byte-exact — this is what the Table 1 memory column audits.
+
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+/// Quantization bin layout on the normalized range `[0, B]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BinSpec {
+    /// `B` bins of width 1 with integer boundaries `0, 1, …, B` (EXACT).
+    Uniform,
+    /// Arbitrary increasing boundaries `0 = a_0 < a_1 < … < a_B = B`
+    /// (the variance-minimized layout; for INT2 this is `[0, α, β, 3]`).
+    NonUniform(Vec<f64>),
+}
+
+impl BinSpec {
+    /// The INT2 variance-minimized layout `[0, α, β, 3]`.
+    pub fn int2_vm(alpha: f64, beta: f64) -> Result<Self> {
+        if !(0.0 < alpha && alpha < beta && beta < 3.0) {
+            return Err(Error::Config(format!(
+                "int2 vm boundaries need 0 < α < β < 3, got α={alpha}, β={beta}"
+            )));
+        }
+        Ok(BinSpec::NonUniform(vec![0.0, alpha, beta, 3.0]))
+    }
+
+    /// Boundary positions for `bits`-bit quantization.
+    pub fn boundaries(&self, bits: u32) -> Vec<f64> {
+        match self {
+            BinSpec::Uniform => {
+                let b = (1u64 << bits) - 1;
+                (0..=b).map(|i| i as f64).collect()
+            }
+            BinSpec::NonUniform(bs) => bs.clone(),
+        }
+    }
+
+    fn validate(&self, bits: u32) -> Result<()> {
+        if let BinSpec::NonUniform(bs) = self {
+            let b = (1u64 << bits) as usize; // B + 1 boundaries
+            if bs.len() != b {
+                return Err(Error::Config(format!(
+                    "{bits}-bit quantization needs {} boundaries, got {}",
+                    b,
+                    bs.len()
+                )));
+            }
+            let bmax = (b - 1) as f64;
+            if (bs[0] - 0.0).abs() > 1e-12 || (bs[b - 1] - bmax).abs() > 1e-12 {
+                return Err(Error::Config(
+                    "boundaries must start at 0 and end at B".into(),
+                ));
+            }
+            if !bs.windows(2).all(|w| w[1] > w[0]) {
+                return Err(Error::Config("boundaries must be increasing".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stochastic rounding of a normalized value `h ∈ [0, B]` onto the bin
+/// boundaries. Returns the boundary *index* (the stored integer code).
+///
+/// Uniform bins follow footnote 2; non-uniform bins follow Eq. 8/11:
+/// round up with probability `(h - a_i)/δ_i`, down otherwise — unbiased
+/// in both cases (Appendix A).
+#[inline]
+pub fn stochastic_round(h: f64, boundaries: &[f64], rng: &mut Pcg64) -> u8 {
+    let b = boundaries.len() - 1;
+    let h = h.clamp(boundaries[0], boundaries[b]);
+    // Locate bin i with a_i <= h < a_{i+1}. B is at most 255 so a linear
+    // scan is fine for the general path; the uniform path never calls this.
+    let mut i = 0;
+    while i + 1 < b && h >= boundaries[i + 1] {
+        i += 1;
+    }
+    let lo = boundaries[i];
+    let hi = boundaries[i + 1];
+    let p_up = (h - lo) / (hi - lo);
+    if (rng.next_f64() as f64) < p_up {
+        (i + 1) as u8
+    } else {
+        i as u8
+    }
+}
+
+/// Fast path for uniform bins: `floor(h) + Bernoulli(frac)`.
+#[inline]
+pub fn stochastic_round_uniform(h: f64, b_max: u32, rng: &mut Pcg64) -> u8 {
+    let h = h.clamp(0.0, b_max as f64);
+    let fl = h.floor();
+    let frac = h - fl;
+    let up = (rng.next_f64() < frac) as u32;
+    ((fl as u32) + up).min(b_max) as u8
+}
+
+/// Pack `bits`-wide codes (values `0..2^bits`) into bytes, LSB-first.
+/// Supported widths: 2, 4, 8.
+pub fn pack_codes(codes: &[u8], bits: u32) -> Result<Vec<u8>> {
+    match bits {
+        2 => Ok(codes
+            .chunks(4)
+            .map(|c| {
+                let mut byte = 0u8;
+                for (i, &v) in c.iter().enumerate() {
+                    byte |= (v & 0b11) << (2 * i);
+                }
+                byte
+            })
+            .collect()),
+        4 => Ok(codes
+            .chunks(2)
+            .map(|c| {
+                let mut byte = 0u8;
+                for (i, &v) in c.iter().enumerate() {
+                    byte |= (v & 0b1111) << (4 * i);
+                }
+                byte
+            })
+            .collect()),
+        8 => Ok(codes.to_vec()),
+        _ => Err(Error::Config(format!("unsupported bit width {bits}"))),
+    }
+}
+
+/// Inverse of [`pack_codes`]; `n` is the original code count.
+pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(n);
+    match bits {
+        2 => {
+            for &byte in packed {
+                for i in 0..4 {
+                    if out.len() == n {
+                        break;
+                    }
+                    out.push((byte >> (2 * i)) & 0b11);
+                }
+            }
+        }
+        4 => {
+            for &byte in packed {
+                for i in 0..2 {
+                    if out.len() == n {
+                        break;
+                    }
+                    out.push((byte >> (4 * i)) & 0b1111);
+                }
+            }
+        }
+        8 => out.extend_from_slice(&packed[..n.min(packed.len())]),
+        _ => return Err(Error::Config(format!("unsupported bit width {bits}"))),
+    }
+    if out.len() != n {
+        return Err(Error::Shape(format!(
+            "packed buffer too short: wanted {n} codes, got {}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+/// A quantized activation tensor: packed integer codes plus per-group
+/// `(zero-point, range)` metadata. This is exactly what would live in GPU
+/// memory during the forward pass, so its [`nbytes`](Self::nbytes) is the
+/// quantity the paper's Table 1 M column measures.
+#[derive(Debug, Clone)]
+pub struct CompressedTensor {
+    /// Packed SR codes.
+    pub packed: Vec<u8>,
+    /// Per-group zero points `Z_g = min(block)`.
+    pub zeros: Vec<f32>,
+    /// Per-group ranges `r_g = max(block) - min(block)`.
+    pub ranges: Vec<f32>,
+    /// Original (rows, cols).
+    pub shape: (usize, usize),
+    /// Scalars per quantization group.
+    pub group_len: usize,
+    /// Bit width (2, 4 or 8).
+    pub bits: u32,
+    /// Bin layout used at quantization time (needed to invert codes).
+    pub bins: BinSpec,
+}
+
+impl CompressedTensor {
+    /// Total compressed footprint in bytes: packed codes + FP32 metadata.
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() + 4 * (self.zeros.len() + self.ranges.len())
+    }
+
+    /// Number of quantization groups.
+    pub fn num_groups(&self) -> usize {
+        self.zeros.len()
+    }
+
+    /// Dequantize back to a dense matrix (Eq. 3), mapping each stored code
+    /// through its boundary position: `ĥ = r · a_k / B + Z`.
+    ///
+    /// Hot path: iterates group-by-group (no per-element `idx / group_len`
+    /// division) with a per-group level LUT, so the inner loop is a pure
+    /// table lookup + store.
+    pub fn dequantize(&self) -> Result<Matrix> {
+        let (rows, cols) = self.shape;
+        let n = rows * cols;
+        let codes = unpack_codes(&self.packed, self.bits, n)?;
+        let boundaries = self.bins.boundaries(self.bits);
+        let b_max = (boundaries.len() - 1) as f32;
+        // Normalized boundary positions a_k / B (≤ 256 entries).
+        let norm: Vec<f32> = boundaries.iter().map(|&a| a as f32 / b_max).collect();
+        let mut out = vec![0.0f32; n];
+        let levels_small = norm.len() <= 16;
+        let uniform = matches!(self.bins, BinSpec::Uniform);
+        let mut lut = [0.0f32; 16];
+        for (g, chunk) in codes.chunks(self.group_len).enumerate() {
+            let z = self.zeros[g];
+            let r = self.ranges[g];
+            let base = g * self.group_len;
+            if levels_small {
+                // Per-group level table: ĥ = z + r·a_k/B precomputed.
+                for (k, &p) in norm.iter().enumerate() {
+                    lut[k] = z + r * p;
+                }
+                for (i, &code) in chunk.iter().enumerate() {
+                    out[base + i] = lut[code as usize];
+                }
+            } else if uniform {
+                // INT8 uniform: a_k/B = k/B ⇒ ĥ = z + k·(r/B).
+                let w = r / b_max;
+                for (i, &code) in chunk.iter().enumerate() {
+                    out[base + i] = z + code as f32 * w;
+                }
+            } else {
+                // Wide non-uniform layouts: general boundary lookup.
+                for (i, &code) in chunk.iter().enumerate() {
+                    out[base + i] = z + r * norm[code as usize];
+                }
+            }
+        }
+        Matrix::from_vec(rows, cols, out)
+    }
+}
+
+/// Core grouped quantizer (Eq. 2 + Eq. 6): flattens the matrix row-major,
+/// splits into `group_len` chunks, computes per-group `(Z, r)` and
+/// stochastically rounds the normalized values onto the bin boundaries.
+pub fn quantize_grouped(
+    h: &Matrix,
+    group_len: usize,
+    bits: u32,
+    bins: &BinSpec,
+    rng: &mut Pcg64,
+) -> Result<CompressedTensor> {
+    if group_len == 0 {
+        return Err(Error::Config("group_len must be positive".into()));
+    }
+    if !matches!(bits, 2 | 4 | 8) {
+        return Err(Error::Config(format!("unsupported bit width {bits}")));
+    }
+    bins.validate(bits)?;
+    let data = h.as_slice();
+    let n = data.len();
+    let num_groups = n.div_ceil(group_len);
+    let b_max = (1u32 << bits) - 1;
+    let boundaries = bins.boundaries(bits);
+    let uniform = matches!(bins, BinSpec::Uniform);
+
+    let mut zeros = Vec::with_capacity(num_groups);
+    let mut ranges = Vec::with_capacity(num_groups);
+    let mut codes = vec![0u8; n];
+
+    for g in 0..num_groups {
+        let start = g * group_len;
+        let end = (start + group_len).min(n);
+        let block = &data[start..end];
+        let out = &mut codes[start..end];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in block {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let range = hi - lo;
+        zeros.push(lo);
+        ranges.push(range);
+        if range <= 0.0 {
+            // Constant block: codes stay 0, dequantizing to Z exactly.
+            continue;
+        }
+        if uniform {
+            // Hot path: SR in the integer domain — `floor + (u32 rand <
+            // frac·2³²)` — no f64 math, and each 64-bit RNG draw feeds
+            // two scalars (both halves are independent uniform u32s).
+            let scale = b_max as f32 / range;
+            let mut buffered: u64 = 0;
+            let mut have_half = false;
+            for (o, &v) in out.iter_mut().zip(block) {
+                let hbar = (v - lo) * scale; // in [0, B]
+                let fl = hbar as u32; // trunc == floor (hbar >= 0)
+                let frac = hbar - fl as f32;
+                let threshold = (frac * 4294967296.0) as u32;
+                let r = if have_half {
+                    have_half = false;
+                    (buffered & 0xffff_ffff) as u32
+                } else {
+                    buffered = rng.next_u64();
+                    have_half = true;
+                    (buffered >> 32) as u32
+                };
+                let up = r < threshold;
+                *o = (fl + up as u32).min(b_max) as u8;
+            }
+        } else if boundaries.len() == 4 {
+            // INT2 variance-minimized bins [0, α, β, 3]: branch-free bin
+            // select (two compares) + integer-domain SR, mirroring the
+            // Pallas VM kernel's vectorized form.
+            let scale = b_max as f32 / range;
+            let (a, b) = (boundaries[1] as f32, boundaries[2] as f32);
+            let starts = [0.0f32, a, b];
+            let inv_scaled = [
+                4294967296.0 / a,
+                4294967296.0 / (b - a),
+                4294967296.0 / (3.0 - b),
+            ];
+            let mut buffered: u64 = 0;
+            let mut have_half = false;
+            for (o, &v) in out.iter_mut().zip(block) {
+                let hbar = ((v - lo) * scale).clamp(0.0, 3.0);
+                let ge_a = (hbar >= a) as u32;
+                let ge_b = (hbar >= b) as u32;
+                let i = (ge_a + ge_b) as usize; // bin index 0..=2
+                let threshold = ((hbar - starts[i]) * inv_scaled[i]) as u32;
+                let r = if have_half {
+                    have_half = false;
+                    (buffered & 0xffff_ffff) as u32
+                } else {
+                    buffered = rng.next_u64();
+                    have_half = true;
+                    (buffered >> 32) as u32
+                };
+                let up = (r < threshold) as u32;
+                *o = (i as u32 + up).min(3) as u8;
+            }
+        } else {
+            let scale = b_max as f64 / range as f64;
+            for (o, &v) in out.iter_mut().zip(block) {
+                let hbar = (v - lo) as f64 * scale;
+                *o = stochastic_round(hbar, &boundaries, rng);
+            }
+        }
+    }
+
+    Ok(CompressedTensor {
+        packed: pack_codes(&codes, bits)?,
+        zeros,
+        ranges,
+        shape: h.shape(),
+        group_len,
+        bits,
+        bins: bins.clone(),
+    })
+}
+
+/// EXACT-style per-row quantizer: one `(Z, r)` pair per node embedding
+/// (group = a full row of `H_proj`).
+#[derive(Debug, Clone)]
+pub struct RowQuantizer {
+    pub bits: u32,
+    pub bins: BinSpec,
+}
+
+impl RowQuantizer {
+    pub fn new(bits: u32) -> Self {
+        RowQuantizer {
+            bits,
+            bins: BinSpec::Uniform,
+        }
+    }
+
+    /// Per-row quantizer with variance-minimized boundaries.
+    pub fn with_bins(bits: u32, bins: BinSpec) -> Self {
+        RowQuantizer { bits, bins }
+    }
+
+    pub fn quantize(&self, h: &Matrix, rng: &mut Pcg64) -> Result<CompressedTensor> {
+        quantize_grouped(h, h.cols(), self.bits, &self.bins, rng)
+    }
+}
+
+/// The paper's block-wise quantizer (Eq. 6): groups of `G` contiguous
+/// scalars, independent of row boundaries.
+#[derive(Debug, Clone)]
+pub struct BlockwiseQuantizer {
+    pub bits: u32,
+    /// Block length `G` in scalars.
+    pub group_len: usize,
+    pub bins: BinSpec,
+}
+
+impl BlockwiseQuantizer {
+    pub fn new(bits: u32, group_len: usize) -> Self {
+        BlockwiseQuantizer {
+            bits,
+            group_len,
+            bins: BinSpec::Uniform,
+        }
+    }
+
+    pub fn with_bins(bits: u32, group_len: usize, bins: BinSpec) -> Self {
+        BlockwiseQuantizer {
+            bits,
+            group_len,
+            bins,
+        }
+    }
+
+    pub fn quantize(&self, h: &Matrix, rng: &mut Pcg64) -> Result<CompressedTensor> {
+        quantize_grouped(h, self.group_len, self.bits, &self.bins, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.next_f32() * 4.0 - 2.0)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        let mut rng = Pcg64::new(1);
+        for bits in [2u32, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            for n in [0usize, 1, 3, 4, 5, 17, 64, 100] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+                let packed = pack_codes(&codes, bits).unwrap();
+                let expect_len = (n * bits as usize).div_ceil(8);
+                assert_eq!(packed.len(), expect_len, "bits={bits} n={n}");
+                let back = unpack_codes(&packed, bits, n).unwrap();
+                assert_eq!(back, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rejects_bad_width() {
+        assert!(pack_codes(&[0, 1], 3).is_err());
+        assert!(unpack_codes(&[0], 5, 1).is_err());
+    }
+
+    #[test]
+    fn sr_uniform_is_unbiased() {
+        let mut rng = Pcg64::new(2);
+        for &h in &[0.25f64, 1.5, 2.7, 0.0, 3.0] {
+            let n = 200_000;
+            let mean: f64 = (0..n)
+                .map(|_| stochastic_round_uniform(h, 3, &mut rng) as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!((mean - h).abs() < 0.01, "h={h} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn sr_nonuniform_is_unbiased() {
+        // Appendix A: E[SR(h)] over boundary *positions* equals h.
+        let boundaries = vec![0.0, 0.8, 2.2, 3.0];
+        let mut rng = Pcg64::new(3);
+        for &h in &[0.3f64, 0.8, 1.1, 2.5, 2.95] {
+            let n = 200_000;
+            let mean: f64 = (0..n)
+                .map(|_| boundaries[stochastic_round(h, &boundaries, &mut rng) as usize])
+                .sum::<f64>()
+                / n as f64;
+            assert!((mean - h).abs() < 0.012, "h={h} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn sr_exact_on_boundaries() {
+        let boundaries = vec![0.0, 0.8, 2.2, 3.0];
+        let mut rng = Pcg64::new(4);
+        for (idx, &a) in boundaries.iter().enumerate() {
+            for _ in 0..100 {
+                let code = stochastic_round(a, &boundaries, &mut rng) as usize;
+                assert_eq!(code, idx, "boundary value must quantize exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dequant_unbiased_int2() {
+        // E[Dequant(Quant(h))] == h (footnote 4), per element.
+        let h = sample_matrix(8, 16, 5);
+        let q = BlockwiseQuantizer::new(2, 32);
+        let mut rng = Pcg64::new(6);
+        let trials = 3000;
+        let mut acc = Matrix::zeros(8, 16);
+        for _ in 0..trials {
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            acc.axpy(1.0, &ct.dequantize().unwrap()).unwrap();
+        }
+        acc.scale(1.0 / trials as f32);
+        let err = acc.rel_error(&h).unwrap();
+        assert!(err < 0.01, "bias-ish error {err}");
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded_by_group_range() {
+        // |ĥ - h| <= bin width = range / B for uniform bins.
+        let h = sample_matrix(16, 32, 7);
+        for bits in [2u32, 4, 8] {
+            let q = BlockwiseQuantizer::new(bits, 64);
+            let mut rng = Pcg64::new(8);
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            let d = ct.dequantize().unwrap();
+            let b = ((1u32 << bits) - 1) as f32;
+            for (idx, (&orig, &deq)) in
+                h.as_slice().iter().zip(d.as_slice()).enumerate()
+            {
+                let g = idx / 64;
+                let width = ct.ranges[g] / b;
+                assert!(
+                    (orig - deq).abs() <= width * 1.0001,
+                    "bits={bits} idx={idx}: |{orig} - {deq}| > {width}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_is_tight() {
+        let h = sample_matrix(8, 64, 9);
+        let q = RowQuantizer::new(8);
+        let mut rng = Pcg64::new(10);
+        let ct = q.quantize(&h, &mut rng).unwrap();
+        let d = ct.dequantize().unwrap();
+        assert!(d.rel_error(&h).unwrap() < 0.01);
+    }
+
+    #[test]
+    fn constant_block_roundtrips_exactly() {
+        let h = Matrix::from_fn(4, 8, |_, _| 2.5);
+        let q = BlockwiseQuantizer::new(2, 8);
+        let mut rng = Pcg64::new(11);
+        let ct = q.quantize(&h, &mut rng).unwrap();
+        let d = ct.dequantize().unwrap();
+        assert_eq!(d.as_slice(), h.as_slice());
+    }
+
+    #[test]
+    fn group_metadata_counts() {
+        let h = sample_matrix(16, 16, 12); // 256 scalars
+        for (g, expected) in [(2usize, 128usize), (64, 4), (256, 1), (100, 3)] {
+            let q = BlockwiseQuantizer::new(2, g);
+            let mut rng = Pcg64::new(13);
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            assert_eq!(ct.num_groups(), expected, "G={g}");
+        }
+    }
+
+    #[test]
+    fn larger_blocks_use_fewer_bytes() {
+        // The paper's memory claim: metadata amortizes with G.
+        let h = sample_matrix(64, 64, 14);
+        let mut sizes = Vec::new();
+        for g in [2usize, 4, 8, 16, 32, 64] {
+            let q = BlockwiseQuantizer::new(2, g);
+            let mut rng = Pcg64::new(15);
+            sizes.push(q.quantize(&h, &mut rng).unwrap().nbytes());
+        }
+        for w in sizes.windows(2) {
+            assert!(w[1] < w[0], "sizes must strictly decrease: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn rowwise_equals_blockwise_with_row_group() {
+        let h = sample_matrix(8, 32, 16);
+        let row = RowQuantizer::new(2);
+        let blk = BlockwiseQuantizer::new(2, 32);
+        let mut r1 = Pcg64::new(17);
+        let mut r2 = Pcg64::new(17);
+        let a = row.quantize(&h, &mut r1).unwrap();
+        let b = blk.quantize(&h, &mut r2).unwrap();
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.zeros, b.zeros);
+        assert_eq!(a.ranges, b.ranges);
+    }
+
+    #[test]
+    fn vm_bins_roundtrip_unbiased() {
+        let bins = BinSpec::int2_vm(1.2, 1.8).unwrap();
+        let h = sample_matrix(8, 16, 18);
+        let q = RowQuantizer::with_bins(2, bins);
+        let trials = 4000;
+        let mut rng = Pcg64::new(19);
+        let mut acc = Matrix::zeros(8, 16);
+        for _ in 0..trials {
+            let ct = q.quantize(&h, &mut rng).unwrap();
+            acc.axpy(1.0, &ct.dequantize().unwrap()).unwrap();
+        }
+        acc.scale(1.0 / trials as f32);
+        assert!(acc.rel_error(&h).unwrap() < 0.01);
+    }
+
+    #[test]
+    fn vm_bins_validation() {
+        assert!(BinSpec::int2_vm(1.8, 1.2).is_err()); // α > β
+        assert!(BinSpec::int2_vm(0.0, 2.0).is_err()); // α = 0
+        assert!(BinSpec::int2_vm(1.0, 3.0).is_err()); // β = B
+        // Wrong boundary count for bit width:
+        let bad = BinSpec::NonUniform(vec![0.0, 1.0, 3.0]);
+        let h = sample_matrix(2, 4, 20);
+        let mut rng = Pcg64::new(21);
+        assert!(quantize_grouped(&h, 4, 2, &bad, &mut rng).is_err());
+    }
+
+    #[test]
+    fn nbytes_is_byte_exact() {
+        let h = sample_matrix(32, 32, 22); // 1024 scalars
+        let q = BlockwiseQuantizer::new(2, 16);
+        let mut rng = Pcg64::new(23);
+        let ct = q.quantize(&h, &mut rng).unwrap();
+        // 1024 codes * 2 bits = 256 bytes; 64 groups * 2 * 4 bytes = 512.
+        assert_eq!(ct.nbytes(), 256 + 512);
+    }
+
+    #[test]
+    fn wide_nonuniform_dequant_matches_uniform_at_integer_boundaries() {
+        // A NonUniform spec whose boundaries happen to be the integers must
+        // dequantize identically to Uniform (exercises the wide-LUT path).
+        let h = sample_matrix(8, 32, 30);
+        let int_bounds: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let mut r1 = Pcg64::new(31);
+        let a = quantize_grouped(&h, 32, 8, &BinSpec::Uniform, &mut r1).unwrap();
+        let mut b = a.clone();
+        b.bins = BinSpec::NonUniform(int_bounds);
+        let da = a.dequantize().unwrap();
+        let db = b.dequantize().unwrap();
+        assert!(da.rel_error(&db).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_zero_group_and_bad_bits() {
+        let h = sample_matrix(2, 2, 24);
+        let mut rng = Pcg64::new(25);
+        assert!(quantize_grouped(&h, 0, 2, &BinSpec::Uniform, &mut rng).is_err());
+        assert!(quantize_grouped(&h, 2, 3, &BinSpec::Uniform, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Random projection (Eq. 4/5): dimensionality reduction of node
+//! embeddings with a normalized Rademacher matrix.
+//!
+//! EXACT composes `Quant ∘ RP` in the forward pass and `IRP ∘ Dequant` in
+//! the backward pass. The projection matrix `R ∈ {±1/√R_dim}^{D×R_dim}`
+//! satisfies `E[R Rᵀ] = I`, so `IRP(RP(H)) = H R Rᵀ` is an unbiased
+//! estimator of `H` (footnote 5).
+
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+/// A fixed Rademacher projection `R^{D×R}` with entries `±1/√R`.
+#[derive(Debug, Clone)]
+pub struct RandomProjection {
+    /// `D × R` projection matrix.
+    mat: Matrix,
+    /// Cached `R × D` transpose: `IRP` is `H_proj @ Rᵀ`, and a
+    /// materialized transpose turns that into a long-row i-k-j matmul
+    /// (vectorizable) instead of length-R dot products (hot path).
+    mat_t: Matrix,
+    /// Input dimensionality `D`.
+    pub d: usize,
+    /// Projected dimensionality `R`.
+    pub r: usize,
+}
+
+impl RandomProjection {
+    /// Sample a projection for `D → R`. The paper uses `D/R = 8`
+    /// ("extreme compression"); `R` must be at least 1 and at most `D`.
+    pub fn new(d: usize, r: usize, rng: &mut Pcg64) -> Result<Self> {
+        if r == 0 || r > d {
+            return Err(Error::Config(format!("projection D={d} -> R={r}")));
+        }
+        let scale = 1.0 / (r as f32).sqrt();
+        let mat = Matrix::from_fn(d, r, |_, _| rng.next_sign() * scale);
+        let mat_t = mat.transpose();
+        Ok(RandomProjection { mat, mat_t, d, r })
+    }
+
+    /// A projection that keeps the dimension (identity-free sampling is
+    /// still used so the ratio-1 config exercises the same code path).
+    pub fn ratio(d: usize, ratio: usize, rng: &mut Pcg64) -> Result<Self> {
+        if ratio == 0 || d % ratio != 0 {
+            return Err(Error::Config(format!(
+                "D={d} not divisible by D/R ratio {ratio}"
+            )));
+        }
+        Self::new(d, d / ratio, rng)
+    }
+
+    /// `RP(H) = H R` (Eq. 4).
+    pub fn project(&self, h: &Matrix) -> Result<Matrix> {
+        if h.cols() != self.d {
+            return Err(Error::Shape(format!(
+                "project: H has {} cols, projection expects {}",
+                h.cols(),
+                self.d
+            )));
+        }
+        h.matmul(&self.mat)
+    }
+
+    /// `IRP(H_proj) = H_proj Rᵀ` (Eq. 5).
+    pub fn recover(&self, h_proj: &Matrix) -> Result<Matrix> {
+        if h_proj.cols() != self.r {
+            return Err(Error::Shape(format!(
+                "recover: H_proj has {} cols, projection expects {}",
+                h_proj.cols(),
+                self.r
+            )));
+        }
+        h_proj.matmul(&self.mat_t)
+    }
+
+    /// Access the raw projection matrix (used by the AOT compile path to
+    /// bake the same matrix into the JAX graph).
+    pub fn matrix(&self) -> &Matrix {
+        &self.mat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_are_scaled_signs() {
+        let mut rng = Pcg64::new(1);
+        let rp = RandomProjection::new(16, 4, &mut rng).unwrap();
+        let s = 1.0 / 2.0; // 1/sqrt(4)
+        for &v in rp.matrix().as_slice() {
+            assert!(v == s || v == -s, "entry {v}");
+        }
+    }
+
+    #[test]
+    fn expectation_rrt_is_identity() {
+        // E[R R^T] = I: average over many sampled projections.
+        let d = 8;
+        let r = 4;
+        let mut rng = Pcg64::new(2);
+        let mut acc = Matrix::zeros(d, d);
+        let trials = 4000;
+        for _ in 0..trials {
+            let rp = RandomProjection::new(d, r, &mut rng).unwrap();
+            let rrt = rp.matrix().matmul_transpose(rp.matrix()).unwrap();
+            acc.axpy(1.0, &rrt).unwrap();
+        }
+        acc.scale(1.0 / trials as f32);
+        for i in 0..d {
+            for j in 0..d {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (acc.get(i, j) - expect).abs() < 0.05,
+                    "({i},{j}) = {}",
+                    acc.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn irp_rp_unbiased() {
+        // E[IRP(RP(H))] = H (footnote 5).
+        let d = 16;
+        let r = 2;
+        let h = {
+            let mut rng = Pcg64::new(3);
+            Matrix::from_fn(6, d, |_, _| rng.next_f32() * 2.0 - 1.0)
+        };
+        let mut rng = Pcg64::new(4);
+        let mut acc = Matrix::zeros(6, d);
+        let trials = 6000;
+        for _ in 0..trials {
+            let rp = RandomProjection::new(d, r, &mut rng).unwrap();
+            let rec = rp.recover(&rp.project(&h).unwrap()).unwrap();
+            acc.axpy(1.0, &rec).unwrap();
+        }
+        acc.scale(1.0 / trials as f32);
+        assert!(acc.rel_error(&h).unwrap() < 0.06);
+    }
+
+    #[test]
+    fn projection_preserves_norm_in_expectation() {
+        // Johnson–Lindenstrauss flavour: E||Hx R||^2 = ||Hx||^2.
+        let d = 64;
+        let r = 8;
+        let mut hrng = Pcg64::new(5);
+        let h = Matrix::from_fn(1, d, |_, _| hrng.next_f32() * 2.0 - 1.0);
+        let target = h.frobenius_norm().powi(2);
+        let mut rng = Pcg64::new(6);
+        let trials = 3000;
+        let mean: f64 = (0..trials)
+            .map(|_| {
+                let rp = RandomProjection::new(d, r, &mut rng).unwrap();
+                rp.project(&h).unwrap().frobenius_norm().powi(2)
+            })
+            .sum::<f64>()
+            / trials as f64;
+        assert!(
+            (mean - target).abs() / target < 0.05,
+            "mean={mean} target={target}"
+        );
+    }
+
+    #[test]
+    fn shape_checks() {
+        let mut rng = Pcg64::new(7);
+        let rp = RandomProjection::new(8, 2, &mut rng).unwrap();
+        assert!(rp.project(&Matrix::zeros(3, 9)).is_err());
+        assert!(rp.recover(&Matrix::zeros(3, 3)).is_err());
+        assert!(RandomProjection::new(8, 0, &mut rng).is_err());
+        assert!(RandomProjection::new(8, 9, &mut rng).is_err());
+    }
+
+    #[test]
+    fn ratio_constructor() {
+        let mut rng = Pcg64::new(8);
+        let rp = RandomProjection::ratio(64, 8, &mut rng).unwrap();
+        assert_eq!(rp.r, 8);
+        assert!(RandomProjection::ratio(65, 8, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Artifact manifest: `python/compile/aot.py` writes
+//! `artifacts/manifest.json` describing every lowered module — file name,
+//! input/output tensor shapes, and the experiment config it was built for.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape of one f32 tensor crossing the rust⇄HLO boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Artifact("tensor spec missing name".into()))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Artifact(format!("tensor '{name}' missing shape")))?;
+        if shape.len() != 2 {
+            return Err(Error::Artifact(format!(
+                "tensor '{name}': only rank-2 shapes cross the boundary, got rank {}",
+                shape.len()
+            )));
+        }
+        Ok(TensorSpec {
+            name,
+            rows: shape[0]
+                .as_usize()
+                .ok_or_else(|| Error::Artifact("bad shape entry".into()))?,
+            cols: shape[1]
+                .as_usize()
+                .ok_or_else(|| Error::Artifact("bad shape entry".into()))?,
+        })
+    }
+}
+
+/// One AOT-lowered module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (dataset, quant mode, dims…).
+    pub meta: BTreeMap<String, String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let arr = root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Artifact("manifest missing 'artifacts' array".into()))?;
+        let mut entries = BTreeMap::new();
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+                .to_string();
+            let file = item
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact(format!("artifact '{name}' missing file")))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                item.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::Artifact(format!("artifact '{name}' missing {key}")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let inputs = parse_specs("inputs")?;
+            let outputs = parse_specs("outputs")?;
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = item.get("meta") {
+                for (k, v) in m {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => format!("{n}"),
+                        Json::Bool(b) => format!("{b}"),
+                        other => other.to_string(),
+                    };
+                    meta.insert(k.clone(), s);
+                }
+            }
+            if entries.contains_key(&name) {
+                return Err(Error::Artifact(format!("duplicate artifact '{name}'")));
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file,
+                    inputs,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "train_step_fp32",
+          "file": "train_step_fp32.hlo.txt",
+          "inputs": [
+            {"name": "features", "shape": [256, 32]},
+            {"name": "adj", "shape": [256, 256]}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [1, 1]}
+          ],
+          "meta": {"dataset": "tiny", "quant": "fp32", "hidden": 64}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let e = m.get("train_step_fp32").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].rows, 256);
+        assert_eq!(e.outputs[0].name, "loss");
+        assert_eq!(e.meta.get("quant").map(|s| s.as_str()), Some("fp32"));
+        assert_eq!(e.meta.get("hidden").map(|s| s.as_str()), Some("64"));
+        assert_eq!(m.names(), vec!["train_step_fp32".to_string()]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        let rank3 = r#"{"artifacts": [{"name": "x", "file": "f",
+            "inputs": [{"name": "a", "shape": [1, 2, 3]}], "outputs": []}]}"#;
+        assert!(Manifest::parse(rank3).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = r#"{"artifacts": [
+            {"name": "x", "file": "f", "inputs": [], "outputs": []},
+            {"name": "x", "file": "g", "inputs": [], "outputs": []}
+        ]}"#;
+        assert!(Manifest::parse(dup).is_err());
+    }
+}

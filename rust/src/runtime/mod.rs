@@ -1,0 +1,181 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md). Python never runs on the request path —
+//! after `make artifacts` the rust binary is self-contained.
+
+mod artifacts;
+
+pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
+
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its manifest metadata.
+pub struct LoadedModule {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Execution statistics accumulated per module.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// The PJRT runtime: one CPU client, a cache of compiled executables, and
+/// per-module execution stats.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    modules: HashMap<String, LoadedModule>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`) and parse its
+    /// manifest. Executables are compiled lazily on first use.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e:?}")))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            modules: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
+        if !self.modules.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| Error::Artifact(format!("no artifact named '{name}'")))?
+                .clone();
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Artifact(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile '{name}': {e:?}")))?;
+            self.modules
+                .insert(name.to_string(), LoadedModule { entry, exe });
+        }
+        Ok(&self.modules[name])
+    }
+
+    /// Execute a loaded module on f32 matrices. The module must have been
+    /// lowered with `return_tuple=True`; outputs are returned in order.
+    pub fn execute(&mut self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        self.load(name)?;
+        let module = &self.modules[name];
+        let expected = module.entry.inputs.len();
+        if inputs.len() != expected {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {expected} inputs, got {}",
+                inputs.len()
+            )));
+        }
+        // Build literals, checking shapes against the manifest.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, spec) in inputs.iter().zip(&module.entry.inputs) {
+            if m.shape() != (spec.rows, spec.cols) {
+                return Err(Error::Runtime(format!(
+                    "'{name}' input '{}': expected {}x{}, got {}x{}",
+                    spec.name,
+                    spec.rows,
+                    spec.cols,
+                    m.rows(),
+                    m.cols()
+                )));
+            }
+            let lit = xla::Literal::vec1(m.as_slice())
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .map_err(|e| Error::Runtime(format!("literal reshape: {e:?}")))?;
+            literals.push(lit);
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = module
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute '{name}': {e:?}")))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e:?}")))?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stat = self.stats.entry(name.to_string()).or_default();
+        stat.calls += 1;
+        stat.total_secs += elapsed;
+
+        // Decompose the tuple into matrices using the manifest shapes.
+        let module = &self.modules[name];
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| Error::Runtime(format!("decompose: {e:?}")))?;
+        if parts.len() != module.entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                module.entry.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&module.entry.outputs) {
+            let vec = lit
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("output '{}': {e:?}", spec.name)))?;
+            out.push(Matrix::from_vec(spec.rows, spec.cols, vec)?);
+        }
+        Ok(out)
+    }
+
+    /// Execution stats for a module (calls, cumulative seconds).
+    pub fn stats(&self, name: &str) -> ExecStats {
+        self.stats.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.names()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in rust/tests/ and are
+    // skipped when artifacts/ has not been built. Here we only cover the
+    // pieces that do not require PJRT.
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/path/artifacts").is_err());
+    }
+}

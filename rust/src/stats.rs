@@ -1,0 +1,532 @@
+//! Statistical substrate: normal distribution primitives, the paper's
+//! clipped-normal activation model (Eq. 7), histograms, and the
+//! Jensen–Shannon divergence used in Table 2.
+
+use crate::rngs::Pcg64;
+use crate::{Error, Result};
+
+const SQRT_2: f64 = std::f64::consts::SQRT_2;
+const INV_SQRT_2PI: f64 = 0.398_942_280_401_432_7;
+
+/// Standard normal probability density function.
+#[inline]
+pub fn normal_pdf(x: f64) -> f64 {
+    INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+/// Standard normal cumulative distribution function via `erf`.
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / SQRT_2))
+}
+
+/// Error function via the cancellation-free confluent series
+/// (Abramowitz & Stegun 7.1.6):
+///
+/// `erf(x) = (2x/√π) e^{-x²} Σ_{n≥0} (2x²)^n / (1·3·5···(2n+1))`
+///
+/// All terms are positive, so there is no catastrophic cancellation; the
+/// series is truncated at relative 1e-17. For `|x| > 6`, `erfc(x) < 3e-17`
+/// and we return ±1 exactly — well below every tolerance in this crate.
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x > 6.0 {
+        return 1.0;
+    }
+    let two_x2 = 2.0 * x * x;
+    let mut term = 1.0f64; // (2x^2)^n / (2n+1)!!, n = 0
+    let mut sum = term;
+    let mut n = 0u32;
+    while term > 1e-18 * sum && n < 400 {
+        n += 1;
+        term *= two_x2 / (2.0 * n as f64 + 1.0);
+        sum += term;
+    }
+    (2.0 / std::f64::consts::PI.sqrt()) * x * (-x * x).exp() * sum
+}
+
+/// Standard normal quantile (probability point function Φ⁻¹).
+///
+/// Acklam's rational approximation (|ε| < 1.15e-9) followed by one Halley
+/// refinement step, giving close-to machine precision. This is the Φ⁻¹ in
+/// Eq. 7's σ = -μ / Φ⁻¹(1/D).
+pub fn normal_ppf(p: f64) -> Result<f64> {
+    if !(0.0..=1.0).contains(&p) || p == 0.0 || p == 1.0 {
+        return Err(Error::Numerical(format!("ppf domain: p={p}")));
+    }
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.024_25;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley step: x' = x - f/(f' - f*f''/(2f')) with f = Φ(x) - p.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    let x = x - u / (1.0 + x * u / 2.0);
+    Ok(x)
+}
+
+/// The paper's clipped normal distribution (Eq. 7):
+///
+/// `CN_{[1/D]}(μ, σ) = min(max(0, N(μ, σ)), B)` with `μ = B/2` and
+/// `σ = -μ / Φ⁻¹(1/D)`.
+///
+/// Values outside `[0, B]` are clipped, producing point masses at the two
+/// boundaries — exactly the "spikes at the edges" the paper observes in
+/// normalized GNN activations (Fig. 2).
+#[derive(Debug, Clone, Copy)]
+pub struct ClippedNormal {
+    pub mu: f64,
+    pub sigma: f64,
+    /// Upper clip boundary `B = 2^b - 1`.
+    pub b: f64,
+    /// The dimensionality parameter `D` the distribution was derived from.
+    pub d: usize,
+}
+
+impl ClippedNormal {
+    /// Construct `CN_{[1/D]}` for `B = 2^bits - 1` quantization levels.
+    pub fn new(bits: u32, d: usize) -> Result<Self> {
+        if d < 3 {
+            return Err(Error::Config(format!(
+                "clipped normal needs D >= 3, got {d}"
+            )));
+        }
+        let b = ((1u64 << bits) - 1) as f64;
+        let mu = b / 2.0;
+        let sigma = -mu / normal_ppf(1.0 / d as f64)?;
+        Ok(ClippedNormal { mu, sigma, b, d })
+    }
+
+    /// Probability mass clipped onto the left boundary (h = 0).
+    pub fn mass_at_zero(&self) -> f64 {
+        normal_cdf((0.0 - self.mu) / self.sigma)
+    }
+
+    /// Probability mass clipped onto the right boundary (h = B).
+    pub fn mass_at_b(&self) -> f64 {
+        1.0 - normal_cdf((self.b - self.mu) / self.sigma)
+    }
+
+    /// Continuous density on the open interval `(0, B)`.
+    pub fn pdf(&self, h: f64) -> f64 {
+        if h <= 0.0 || h >= self.b {
+            return 0.0;
+        }
+        normal_pdf((h - self.mu) / self.sigma) / self.sigma
+    }
+
+    /// CDF of the clipped variable.
+    pub fn cdf(&self, h: f64) -> f64 {
+        if h < 0.0 {
+            0.0
+        } else if h >= self.b {
+            1.0
+        } else {
+            normal_cdf((h - self.mu) / self.sigma)
+        }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        (self.mu + self.sigma * rng.next_normal()).clamp(0.0, self.b)
+    }
+
+    /// Draw `n` samples.
+    pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Partial raw moments of the *underlying* normal restricted to
+    /// `[a, c] ⊂ [0, B]`: returns `(m0, m1, m2)` where
+    /// `mk = ∫_a^c h^k N(h; μ, σ) dh`.
+    ///
+    /// These are the closed-form building blocks for the expected SR
+    /// variance (Eq. 10): each bin integrand is a quadratic in `h`.
+    pub fn partial_moments(&self, a: f64, c: f64) -> (f64, f64, f64) {
+        let (mu, s) = (self.mu, self.sigma);
+        let za = (a - mu) / s;
+        let zc = (c - mu) / s;
+        let phi_a = normal_pdf(za);
+        let phi_c = normal_pdf(zc);
+        let m0 = normal_cdf(zc) - normal_cdf(za);
+        // E[h; a<=h<=c] = mu*m0 - s*(phi(zc) - phi(za))
+        let m1 = mu * m0 - s * (phi_c - phi_a);
+        // E[h^2] = (mu^2 + s^2) m0 - s*( (c+mu) phi_c - (a+mu) phi_a )
+        let m2 = (mu * mu + s * s) * m0 - s * ((c + mu) * phi_c - (a + mu) * phi_a);
+        (m0, m1, m2)
+    }
+}
+
+/// A fixed-width histogram over `[lo, hi]`, used both to estimate the
+/// observed activation density (Fig. 2) and as input to the JS divergence
+/// (Table 2).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Result<Self> {
+        if !(hi > lo) || bins == 0 {
+            return Err(Error::Config(format!("bad histogram [{lo},{hi}]x{bins}")));
+        }
+        Ok(Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        })
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins() as f64
+    }
+
+    /// Add a single observation (values outside the range clamp to the
+    /// edge bins, mirroring the clipping in the activation model).
+    pub fn add(&mut self, x: f64) {
+        let b = self.bins();
+        let idx = (((x - self.lo) / self.bin_width()).floor() as i64).clamp(0, b as i64 - 1);
+        self.counts[idx as usize] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all<'a>(&mut self, xs: impl IntoIterator<Item = &'a f64>) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn add_all_f32<'a>(&mut self, xs: impl IntoIterator<Item = &'a f32>) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    /// Normalized probabilities per bin (sums to 1).
+    pub fn probabilities(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.bins()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Discretize an arbitrary density over the histogram's bins via the
+    /// provided CDF (so point masses at the edges are captured exactly).
+    pub fn discretize_cdf(&self, cdf: impl Fn(f64) -> f64) -> Vec<f64> {
+        let w = self.bin_width();
+        (0..self.bins())
+            .map(|i| {
+                let a = self.lo + i as f64 * w;
+                let b = a + w;
+                // Left-closed bins; the final bin absorbs the right edge.
+                let top = if i + 1 == self.bins() { cdf(b) + 1e-300 } else { cdf(b) };
+                // Include the left point mass in bin 0 by evaluating
+                // cdf just below `lo`.
+                let bot = if i == 0 { cdf(a - 1e-12) - 1e-300 } else { cdf(a) };
+                (top - bot).max(0.0)
+            })
+            .collect()
+    }
+}
+
+/// Kullback–Leibler divergence of discrete distributions (natural log).
+/// Bins where `p == 0` contribute nothing; `p > 0 && q == 0` contributes
+/// a large-but-finite penalty via epsilon smoothing so the JS divergence
+/// stays well-defined on empirical histograms.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> Result<f64> {
+    if p.len() != q.len() {
+        return Err(Error::Shape(format!("kl {} vs {}", p.len(), q.len())));
+    }
+    const EPS: f64 = 1e-12;
+    let mut acc = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            acc += pi * (pi / qi.max(EPS)).ln();
+        }
+    }
+    Ok(acc)
+}
+
+/// Jensen–Shannon divergence (base-2, in `[0, 1]`), the Table 2 metric.
+pub fn js_divergence(p: &[f64], q: &[f64]) -> Result<f64> {
+    if p.len() != q.len() {
+        return Err(Error::Shape(format!("js {} vs {}", p.len(), q.len())));
+    }
+    let m: Vec<f64> = p.iter().zip(q).map(|(&a, &b)| 0.5 * (a + b)).collect();
+    let js = 0.5 * kl_divergence(p, &m)? + 0.5 * kl_divergence(q, &m)?;
+    Ok(js / std::f64::consts::LN_2)
+}
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample standard deviation (n-1 denominator, as in Table 1's ±).
+    pub fn sample_std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values from tables.
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(0.5) - 0.520_499_877_813_046_5).abs() < 1e-9);
+        assert!((erf(1.0) - 0.842_700_792_949_714_9).abs() < 1e-9);
+        assert!((erf(2.0) - 0.995_322_265_018_952_7).abs() < 1e-9);
+        assert!((erf(-1.0) + 0.842_700_792_949_714_9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_symmetry() {
+        for x in [0.1, 0.7, 1.3, 2.9] {
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ppf_inverts_cdf() {
+        for p in [1e-6, 1e-3, 0.1, 0.25, 0.5, 0.75, 0.9, 0.999, 1.0 - 1e-6] {
+            let x = normal_ppf(p).unwrap();
+            assert!((normal_cdf(x) - p).abs() < 1e-9, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn ppf_known_values() {
+        assert!(normal_ppf(0.5).unwrap().abs() < 1e-12);
+        assert!((normal_ppf(0.975).unwrap() - 1.959_963_984_540_054).abs() < 1e-8);
+        assert!((normal_ppf(0.025).unwrap() + 1.959_963_984_540_054).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ppf_domain_errors() {
+        assert!(normal_ppf(0.0).is_err());
+        assert!(normal_ppf(1.0).is_err());
+        assert!(normal_ppf(-0.5).is_err());
+    }
+
+    #[test]
+    fn clipped_normal_construction_matches_eq7() {
+        // For INT2, B = 3, mu = 1.5; sigma = -1.5 / ppf(1/D).
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        assert!((cn.b - 3.0).abs() < 1e-12);
+        assert!((cn.mu - 1.5).abs() < 1e-12);
+        let expected_sigma = -1.5 / normal_ppf(1.0 / 16.0).unwrap();
+        assert!((cn.sigma - expected_sigma).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipped_normal_edge_mass_is_one_over_d() {
+        // By construction: P(N(mu, sigma) <= 0) = Phi(-mu/sigma) = 1/D.
+        for d in [8, 16, 64, 512] {
+            let cn = ClippedNormal::new(2, d).unwrap();
+            assert!(
+                (cn.mass_at_zero() - 1.0 / d as f64).abs() < 1e-9,
+                "d={d}: {}",
+                cn.mass_at_zero()
+            );
+            // Symmetric by mu = B/2.
+            assert!((cn.mass_at_b() - cn.mass_at_zero()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn clipped_normal_total_mass() {
+        let cn = ClippedNormal::new(2, 32).unwrap();
+        let (m0, _, _) = cn.partial_moments(0.0, cn.b);
+        let total = m0 + cn.mass_at_zero() + cn.mass_at_b();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_moments_match_quadrature() {
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        let (a, c) = (0.4, 2.2);
+        let (m0, m1, m2) = cn.partial_moments(a, c);
+        // Simpson quadrature cross-check.
+        let n = 20_000;
+        let h = (c - a) / n as f64;
+        let f = |x: f64, k: i32| x.powi(k) * normal_pdf((x - cn.mu) / cn.sigma) / cn.sigma;
+        for (k, m) in [(0, m0), (1, m1), (2, m2)] {
+            let mut acc = f(a, k) + f(c, k);
+            for i in 1..n {
+                let x = a + i as f64 * h;
+                acc += if i % 2 == 1 { 4.0 } else { 2.0 } * f(x, k);
+            }
+            let quad = acc * h / 3.0;
+            assert!((quad - m).abs() < 1e-8, "k={k}: {quad} vs {m}");
+        }
+    }
+
+    #[test]
+    fn clipped_normal_samples_respect_bounds_and_mean() {
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        let mut rng = Pcg64::new(9);
+        let xs = cn.sample_n(&mut rng, 50_000);
+        assert!(xs.iter().all(|&x| (0.0..=3.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        // Symmetric around mu = 1.5.
+        assert!((mean - 1.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn histogram_counts_and_probs() {
+        let mut h = Histogram::new(0.0, 3.0, 3).unwrap();
+        h.add_all(&[0.1, 0.2, 1.5, 2.9, 3.5, -1.0]);
+        assert_eq!(h.total, 6);
+        assert_eq!(h.counts, vec![3, 1, 2]); // clamp: 3.5 -> bin 2, -1 -> bin 0
+        let p = h.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn js_divergence_properties() {
+        let p = vec![0.25, 0.25, 0.25, 0.25];
+        let q = vec![0.25, 0.25, 0.25, 0.25];
+        assert!(js_divergence(&p, &q).unwrap().abs() < 1e-12);
+        // Disjoint distributions: JS = 1 (base 2).
+        let p = vec![1.0, 0.0];
+        let q = vec![0.0, 1.0];
+        assert!((js_divergence(&p, &q).unwrap() - 1.0).abs() < 1e-9);
+        // Symmetry.
+        let p = vec![0.7, 0.2, 0.1];
+        let q = vec![0.1, 0.3, 0.6];
+        let a = js_divergence(&p, &q).unwrap();
+        let b = js_divergence(&q, &p).unwrap();
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 0.0 && a < 1.0);
+    }
+
+    #[test]
+    fn js_closer_model_has_smaller_divergence() {
+        // Sanity for the Table 2 logic: CN-discretized probabilities should
+        // be closer to a CN-sampled histogram than uniform is.
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        let mut rng = Pcg64::new(77);
+        let mut h = Histogram::new(0.0, 3.0, 64).unwrap();
+        for _ in 0..200_000 {
+            h.add(cn.sample(&mut rng));
+        }
+        let obs = h.probabilities();
+        let model_cn = h.discretize_cdf(|x| cn.cdf(x));
+        let uniform = vec![1.0 / 64.0; 64];
+        let js_cn = js_divergence(&obs, &model_cn).unwrap();
+        let js_u = js_divergence(&obs, &uniform).unwrap();
+        assert!(js_cn < js_u, "cn={js_cn} uniform={js_u}");
+        assert!(js_cn < 0.01, "model should fit its own samples: {js_cn}");
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+}

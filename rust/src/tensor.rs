@@ -1,0 +1,458 @@
+//! Dense row-major `f32` matrices.
+//!
+//! A deliberately small ndarray substitute: the compression pipeline only
+//! needs 2-D dense tensors (node-embedding matrices `H ∈ R^{N×D}`) plus a
+//! handful of elementwise and reduction ops. Keeping it in-crate avoids an
+//! external dependency and lets the hot paths (quantize, matmul) own their
+//! memory layout.
+
+use crate::{Error, Result};
+
+/// Dense row-major matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix from an existing buffer. Errors if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer of {} elements cannot be {}x{}",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other` — blocked, transpose-free inner kernel.
+    ///
+    /// This is the native-pipeline hot path (Â·H and H·Θ products); it is
+    /// written as an i-k-j loop so the innermost loop is a contiguous
+    /// axpy over the output row, which autovectorizes well.
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self @ other^T`.
+    pub fn matmul_transpose(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "matmul_t {}x{} @ ({}x{})^T",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            for j in 0..other.rows {
+                let b_row = other.row(j);
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc += a_row[k] * b_row[k];
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self^T @ other`.
+    pub fn transpose_matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.rows != other.rows {
+            return Err(Error::Shape(format!(
+                "t_matmul ({}x{})^T @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for k in 0..self.rows {
+            let a_row = self.row(k);
+            let b_row = other.row(k);
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise map, in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise map, out of place.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise binary zip (errors on shape mismatch).
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Result<Matrix> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "zip {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "axpy {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Scale every element.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// (min, max) over all elements.
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Reshape without copying. Errors if the element count changes.
+    pub fn reshape(self, rows: usize, cols: usize) -> Result<Matrix> {
+        if rows * cols != self.data.len() {
+            return Err(Error::Shape(format!(
+                "reshape {}x{} -> {}x{}",
+                self.rows, self.cols, rows, cols
+            )));
+        }
+        Ok(Matrix {
+            rows,
+            cols,
+            data: self.data,
+        })
+    }
+
+    /// Relative Frobenius error `||self - other||_F / ||other||_F`.
+    pub fn rel_error(&self, other: &Matrix) -> Result<f64> {
+        let diff = self.zip(other, |a, b| a - b)?;
+        let denom = other.frobenius_norm().max(1e-30);
+        Ok(diff.frobenius_norm() / denom)
+    }
+
+    /// Column-wise concatenation `[self ‖ other]` (GraphSAGE's
+    /// self/neighbour concat).
+    pub fn concat_cols(&self, other: &Matrix) -> Result<Matrix> {
+        if self.rows != other.rows {
+            return Err(Error::Shape(format!(
+                "concat_cols: {} vs {} rows",
+                self.rows, other.rows
+            )));
+        }
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for r in 0..self.rows {
+            data.extend_from_slice(self.row(r));
+            data.extend_from_slice(other.row(r));
+        }
+        Ok(Matrix {
+            rows: self.rows,
+            cols,
+            data,
+        })
+    }
+
+    /// Split columns at `at`: returns `(self[:, :at], self[:, at:])`.
+    pub fn split_cols(&self, at: usize) -> Result<(Matrix, Matrix)> {
+        if at > self.cols {
+            return Err(Error::Shape(format!(
+                "split_cols at {at} of {} cols",
+                self.cols
+            )));
+        }
+        let mut left = Vec::with_capacity(self.rows * at);
+        let mut right = Vec::with_capacity(self.rows * (self.cols - at));
+        for r in 0..self.rows {
+            let row = self.row(r);
+            left.extend_from_slice(&row[..at]);
+            right.extend_from_slice(&row[at..]);
+        }
+        Ok((
+            Matrix {
+                rows: self.rows,
+                cols: at,
+                data: left,
+            },
+            Matrix {
+                rows: self.rows,
+                cols: self.cols - at,
+                data: right,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    fn random_matrix(rng: &mut Pcg64, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.next_f32() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = random_matrix(&mut rng, 5, 5);
+        let eye = Matrix::from_fn(5, 5, |r, c| if r == c { 1.0 } else { 0.0 });
+        let prod = a.matmul(&eye).unwrap();
+        assert_eq!(prod, a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Pcg64::new(2);
+        let a = random_matrix(&mut rng, 4, 7);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_transpose_agrees_with_explicit() {
+        let mut rng = Pcg64::new(3);
+        let a = random_matrix(&mut rng, 4, 6);
+        let b = random_matrix(&mut rng, 5, 6);
+        let fast = a.matmul_transpose(&b).unwrap();
+        let slow = a.matmul(&b.transpose()).unwrap();
+        assert!(fast.rel_error(&slow).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_matmul_agrees_with_explicit() {
+        let mut rng = Pcg64::new(4);
+        let a = random_matrix(&mut rng, 6, 4);
+        let b = random_matrix(&mut rng, 6, 5);
+        let fast = a.transpose_matmul(&b).unwrap();
+        let slow = a.transpose().matmul(&b).unwrap();
+        assert!(fast.rel_error(&slow).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = Matrix::from_vec(2, 6, (0..12).map(|i| i as f32).collect()).unwrap();
+        let b = a.clone().reshape(4, 3).unwrap();
+        assert_eq!(b.as_slice(), a.as_slice());
+        assert_eq!(b.shape(), (4, 3));
+    }
+
+    #[test]
+    fn reshape_bad_shape_errors() {
+        let a = Matrix::zeros(2, 6);
+        assert!(a.reshape(5, 3).is_err());
+    }
+
+    #[test]
+    fn min_max_and_mean() {
+        let a = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, 3.0]).unwrap();
+        assert_eq!(a.min_max(), (-1.0, 3.0));
+        assert!((a.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concat_split_round_trip() {
+        let mut rng = Pcg64::new(9);
+        let a = random_matrix(&mut rng, 5, 3);
+        let b = random_matrix(&mut rng, 5, 4);
+        let cat = a.concat_cols(&b).unwrap();
+        assert_eq!(cat.shape(), (5, 7));
+        let (l, r) = cat.split_cols(3).unwrap();
+        assert_eq!(l, a);
+        assert_eq!(r, b);
+        assert!(a.concat_cols(&Matrix::zeros(4, 2)).is_err());
+        assert!(a.split_cols(9).is_err());
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]).unwrap();
+        a.axpy(2.0, &b).unwrap();
+        assert_eq!(a.as_slice(), &[3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small dependency-free utilities: a TOML-subset parser for configs, a
+//! JSON writer/reader for artifact manifests and experiment outputs, a
+//! table pretty-printer, a timing helper, and a lightweight in-crate
+//! property-testing harness.
+
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod timer;
+pub mod toml;

@@ -1,0 +1,230 @@
+//! A lightweight property-testing harness (proptest is unavailable
+//! offline). Provides seeded random-input generation with automatic
+//! **shrinking on failure** for a handful of strategies — enough to
+//! express the crate's invariants (SR unbiasedness, quant–dequant error
+//! bounds, RP isometry, memory-model exactness) as properties.
+//!
+//! ```no_run
+//! use iexact::util::prop::{self, Strategy};
+//! prop::check("abs is non-negative", 100, prop::f64_range(-10.0, 10.0), |&x| {
+//!     x.abs() >= 0.0
+//! });
+//! ```
+
+use crate::rngs::Pcg64;
+
+/// A value-generation strategy with shrinking.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+
+    /// Generate one value.
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate "smaller" values for shrinking (default: none).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases; on failure, shrink to a minimal
+/// counterexample and panic with it. Deterministic per (name, case index).
+pub fn check<S: Strategy>(name: &str, cases: usize, strategy: S, prop: impl Fn(&S::Value) -> bool) {
+    // Seed from the test name so adding tests doesn't perturb others.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut rng = Pcg64::new(h);
+    for case in 0..cases {
+        let value = strategy.generate(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // Shrink loop: greedily take any failing shrink candidate.
+        let mut failing = value;
+        'outer: loop {
+            for cand in strategy.shrink(&failing) {
+                if !prop(&cand) {
+                    failing = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed at case {case}\n  minimal counterexample: {failing:?}"
+        );
+    }
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn f64_range(lo: f64, hi: f64) -> F64Range {
+    F64Range { lo, hi }
+}
+
+pub struct F64Range {
+    lo: f64,
+    hi: f64,
+}
+
+impl Strategy for F64Range {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + rng.next_f64() * (self.hi - self.lo)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        // Try midpoint toward the range centre and zero-ward values.
+        let mid = (self.lo + self.hi) / 2.0;
+        let mut c = vec![mid, (v + mid) / 2.0];
+        c.retain(|x| (x - v).abs() > 1e-12 && (self.lo..self.hi).contains(x));
+        c
+    }
+}
+
+/// Uniform usize in `[lo, hi]`.
+pub fn usize_range(lo: usize, hi: usize) -> UsizeRange {
+    UsizeRange { lo, hi }
+}
+
+pub struct UsizeRange {
+    lo: usize,
+    hi: usize,
+}
+
+impl Strategy for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.lo + rng.next_bounded((self.hi - self.lo + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut c = Vec::new();
+        if *v > self.lo {
+            c.push(self.lo);
+            c.push(self.lo + (v - self.lo) / 2);
+        }
+        c.retain(|x| x != v);
+        c.dedup();
+        c
+    }
+}
+
+/// Vector of f32 drawn from `[lo, hi)` with length in `[min_len, max_len]`.
+pub fn vec_f32(min_len: usize, max_len: usize, lo: f32, hi: f32) -> VecF32 {
+    VecF32 {
+        min_len,
+        max_len,
+        lo,
+        hi,
+    }
+}
+
+pub struct VecF32 {
+    min_len: usize,
+    max_len: usize,
+    lo: f32,
+    hi: f32,
+}
+
+impl Strategy for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let len = self.min_len
+            + rng.next_bounded((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len)
+            .map(|_| self.lo + rng.next_f32() * (self.hi - self.lo))
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // Halve the vector.
+        if v.len() > self.min_len {
+            let half = v[..(v.len() / 2).max(self.min_len)].to_vec();
+            if half.len() < v.len() {
+                out.push(half);
+            }
+            if v.len() > self.min_len {
+                out.push(v[..v.len() - 1].to_vec());
+            }
+        }
+        // Zero the entries (simplest values).
+        if v.iter().any(|&x| x != 0.0) && (self.lo..=self.hi).contains(&0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair strategy.
+pub fn pair<A: Strategy, B: Strategy>(a: A, b: B) -> Pair<A, B> {
+    Pair { a, b }
+}
+
+pub struct Pair<A, B> {
+    a: A,
+    b: B,
+}
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("squares non-negative", 200, f64_range(-5.0, 5.0), |&x| {
+            x * x >= 0.0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks_and_panics() {
+        check("all below 4", 200, usize_range(0, 100), |&x| x < 4);
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds() {
+        let mut rng = Pcg64::new(1);
+        let s = vec_f32(2, 10, -1.0, 1.0);
+        for _ in 0..100 {
+            let v = s.generate(&mut rng);
+            assert!((2..=10).contains(&v.len()));
+            assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn pair_strategy_generates_both() {
+        check(
+            "pair ordering irrelevant",
+            100,
+            pair(usize_range(0, 10), f64_range(0.0, 1.0)),
+            |(n, x)| *n <= 10 && (0.0..1.0).contains(x),
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! Wall-clock timing helpers for the epoch-speed (S) column of Table 1
+//! and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Measures a sequence of laps and reports robust statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LapTimer {
+    laps: Vec<Duration>,
+}
+
+impl LapTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one closure invocation and record it.
+    pub fn lap<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.laps.push(t0.elapsed());
+        out
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.laps.push(d);
+    }
+
+    pub fn count(&self) -> usize {
+        self.laps.len()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.laps.iter().sum()
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.laps.is_empty() {
+            Duration::ZERO
+        } else {
+            self.total() / self.laps.len() as u32
+        }
+    }
+
+    /// Median lap — robust to warmup outliers.
+    pub fn median(&self) -> Duration {
+        if self.laps.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut sorted = self.laps.clone();
+        sorted.sort();
+        sorted[sorted.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.laps.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    /// Laps per second based on the mean (Table 1's epochs/s).
+    pub fn rate_per_sec(&self) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One-shot measurement helper for benches: runs `f` `iters` times after
+/// `warmup` unmeasured runs, returns (mean, median, min) in seconds.
+pub fn measure(warmup: usize, iters: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut t = LapTimer::new();
+    for _ in 0..iters {
+        t.lap(&mut f);
+    }
+    (
+        t.mean().as_secs_f64(),
+        t.median().as_secs_f64(),
+        t.min().as_secs_f64(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut t = LapTimer::new();
+        let x = t.lap(|| 21 * 2);
+        assert_eq!(x, 42);
+        t.record(Duration::from_millis(10));
+        assert_eq!(t.count(), 2);
+        assert!(t.total() >= Duration::from_millis(10));
+        assert!(t.mean() <= t.total());
+        assert!(t.min() <= t.median());
+    }
+
+    #[test]
+    fn rate_is_inverse_mean() {
+        let mut t = LapTimer::new();
+        t.record(Duration::from_millis(100));
+        t.record(Duration::from_millis(100));
+        let r = t.rate_per_sec();
+        assert!((r - 10.0).abs() < 0.5, "rate={r}");
+    }
+
+    #[test]
+    fn empty_timer_is_zero() {
+        let t = LapTimer::new();
+        assert_eq!(t.mean(), Duration::ZERO);
+        assert_eq!(t.rate_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn measure_runs_the_closure() {
+        let mut n = 0;
+        let (mean, median, min) = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert!(mean >= 0.0 && median >= 0.0 && min >= 0.0);
+    }
+}

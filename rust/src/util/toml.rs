@@ -1,0 +1,226 @@
+//! A TOML-subset parser sufficient for experiment configs: `[section]`
+//! headers, `key = value` pairs with string / int / float / bool /
+//! flat-int-list values, and `#` comments. Keys are exposed as
+//! dotted paths (`section.key`).
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+/// A flat table of dotted-path → value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlTable {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlTable {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "toml line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::Config(format!(
+                        "toml line {}: empty section name",
+                        lineno + 1
+                    )));
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config(format!(
+                    "toml line {}: expected key = value",
+                    lineno + 1
+                )));
+            };
+            let key = line[..eq].trim();
+            let value = line[eq + 1..].trim();
+            if key.is_empty() || value.is_empty() {
+                return Err(Error::Config(format!(
+                    "toml line {}: empty key or value",
+                    lineno + 1
+                )));
+            }
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(path, parse_value(value, lineno + 1)?);
+        }
+        Ok(TomlTable { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.map.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.map.get(path) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        match self.map.get(path) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        match self.map.get(path) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.map.get(path) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_int_list(&self, path: &str) -> Option<&[i64]> {
+        match self.map.get(path) {
+            Some(TomlValue::IntList(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(Error::Config(format!("toml line {lineno}: bad string {s}")));
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(Error::Config(format!("toml line {lineno}: bad list {s}")));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::IntList(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|it| {
+                it.trim()
+                    .parse::<i64>()
+                    .map_err(|_| Error::Config(format!("toml line {lineno}: bad int in list")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::IntList(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::Config(format!("toml line {lineno}: cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_types() {
+        let t = TomlTable::parse(
+            r#"
+top = 1
+[a]
+s = "hello"   # trailing comment
+i = -42
+f = 3.5
+b = true
+l = [1, 2, 3]
+empty = []
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.get_int("top"), Some(1));
+        assert_eq!(t.get_str("a.s"), Some("hello"));
+        assert_eq!(t.get_int("a.i"), Some(-42));
+        assert_eq!(t.get_float("a.f"), Some(3.5));
+        assert_eq!(t.get_bool("a.b"), Some(true));
+        assert_eq!(t.get_int_list("a.l"), Some(&[1i64, 2, 3][..]));
+        assert_eq!(t.get_int_list("a.empty"), Some(&[][..]));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let t = TomlTable::parse("x = 2\n").unwrap();
+        assert_eq!(t.get_float("x"), Some(2.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = TomlTable::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(TomlTable::parse("[unclosed\n").is_err());
+        assert!(TomlTable::parse("novalue =\n").is_err());
+        assert!(TomlTable::parse("x = ???\n").is_err());
+        assert!(TomlTable::parse("l = [1, two]\n").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let t = TomlTable::parse("x = 1\n").unwrap();
+        assert_eq!(t.get_str("x"), None); // wrong type
+        assert_eq!(t.get_int("y"), None); // absent
+    }
+}

@@ -1,0 +1,455 @@
+//! Improved variance minimization (paper §3.2, Appendices A–C).
+//!
+//! * [`sr_variance`] — the SR variance of a single normalized value under
+//!   arbitrary bin boundaries (Eq. 9 / 13–17).
+//! * [`expected_sr_variance`] — Eq. 10: the expectation of that variance
+//!   under the clipped-normal activation model, computed in closed form
+//!   from truncated-normal partial moments (with a quadrature cross-check
+//!   in the tests).
+//! * [`optimal_boundaries`] — minimizes Eq. 10 over the INT2 central-bin
+//!   edges `[α, β]` with Nelder–Mead, exploiting the μ = B/2 symmetry for
+//!   the starting simplex.
+//! * [`BoundaryTable`] — Appendix B: the `D → (α*, β*)` lookup for
+//!   `D ∈ {4, …, 2048}` so the runtime maps a layer's projected
+//!   dimensionality `R` straight to its optimal boundaries.
+//! * [`empirical_variance_reduction`] — Eq. 19: the observed reduction in
+//!   SR noise when swapping integer boundaries for `(α*, β*)`.
+
+use crate::quant::{stochastic_round, stochastic_round_uniform};
+use crate::rngs::Pcg64;
+use crate::stats::ClippedNormal;
+use crate::{Error, Result};
+
+/// SR variance of a normalized value `h` for bin boundaries
+/// `0 = a_0 < a_1 < … < a_B = B` (Eq. 9, simplified form of Eq. 13).
+///
+/// Only the bin containing `h` contributes: inside bin `i`,
+/// `Var = δ_i (h − a_{i-1}) − (h − a_{i-1})²`.
+pub fn sr_variance(h: f64, boundaries: &[f64]) -> f64 {
+    let b = boundaries.len() - 1;
+    let h = h.clamp(boundaries[0], boundaries[b]);
+    let mut i = 0;
+    while i + 1 < b && h >= boundaries[i + 1] {
+        i += 1;
+    }
+    let lo = boundaries[i];
+    let delta = boundaries[i + 1] - lo;
+    let t = h - lo;
+    delta * t - t * t
+}
+
+/// Eq. 10: `E[Var(⌊h⌉)]` under `CN_{[1/D]}` for INT2 boundaries
+/// `[0, α, β, 3]`.
+///
+/// Each bin's integrand `δ_i(h − a_{i−1}) − (h − a_{i−1})²` is a quadratic
+/// in `h`, so against the (truncated) normal density the integral reduces
+/// to the partial moments `m0, m1, m2` of `N(μ, σ)` on the bin — computed
+/// in closed form via `erf`. The clipped point masses at `h = 0` and
+/// `h = B` contribute **zero** variance (boundary values round exactly),
+/// so only the continuous part appears.
+pub fn expected_sr_variance(cn: &ClippedNormal, alpha: f64, beta: f64) -> Result<f64> {
+    let b = cn.b;
+    if !(0.0 < alpha && alpha < beta && beta < b) {
+        return Err(Error::Config(format!(
+            "need 0 < α < β < {b}: α={alpha} β={beta}"
+        )));
+    }
+    // Bin [a, c] with width δ = c − a:
+    //   ∫ (δ(h−a) − (h−a)²) φ(h) dh
+    // = ∫ (−h² + (δ + 2a) h − a(δ + a)) φ(h) dh
+    // = −m2 + (δ + 2a) m1 − a (δ + a) m0.
+    let bin = |a: f64, c: f64| -> f64 {
+        let (m0, m1, m2) = cn.partial_moments(a, c);
+        let delta = c - a;
+        -m2 + (delta + 2.0 * a) * m1 - a * (delta + a) * m0
+    };
+    Ok(bin(0.0, alpha) + bin(alpha, beta) + bin(beta, b))
+}
+
+/// Eq. 10 evaluated by adaptive Simpson quadrature — used as an
+/// independent cross-check of the closed form (tests + benches only).
+pub fn expected_sr_variance_quadrature(
+    cn: &ClippedNormal,
+    alpha: f64,
+    beta: f64,
+    panels_per_bin: usize,
+) -> Result<f64> {
+    let boundaries = [0.0, alpha, beta, cn.b];
+    let mut total = 0.0;
+    for w in boundaries.windows(2) {
+        let (a, c) = (w[0], w[1]);
+        let n = panels_per_bin.max(2) * 2; // Simpson needs even panels
+        let h = (c - a) / n as f64;
+        let f = |x: f64| sr_variance(x, &boundaries) * cn.pdf(x);
+        let mut acc = f(a) + f(c);
+        for i in 1..n {
+            let x = a + i as f64 * h;
+            acc += if i % 2 == 1 { 4.0 } else { 2.0 } * f(x);
+        }
+        total += acc * h / 3.0;
+    }
+    Ok(total)
+}
+
+/// Result of the boundary optimization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimalBoundaries {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Expected SR variance at the optimum (Eq. 10).
+    pub variance: f64,
+    /// Expected SR variance with uniform integer boundaries `[1, 2]`.
+    pub uniform_variance: f64,
+}
+
+impl OptimalBoundaries {
+    /// Fractional reduction vs uniform bins, `1 − Var*/Var_uniform`.
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.variance / self.uniform_variance
+    }
+}
+
+/// Minimize Eq. 10 over `(α, β)` for `CN_{[1/D]}` (INT2, B = 3).
+///
+/// Nelder–Mead on the 2-simplex with a symmetric start
+/// `(μ − δ0, μ + δ0)`; invalid points (α ≥ β or outside `(0, B)`) get an
+/// infinite penalty. The objective is smooth and unimodal in practice
+/// (Fig. 3), so convergence is fast and robust.
+pub fn optimal_boundaries(cn: &ClippedNormal) -> Result<OptimalBoundaries> {
+    let b = cn.b;
+    let objective = |p: [f64; 2]| -> f64 {
+        let (a, be) = (p[0], p[1]);
+        if !(0.0 < a && a < be && be < b) {
+            return f64::INFINITY;
+        }
+        expected_sr_variance(cn, a, be).unwrap_or(f64::INFINITY)
+    };
+
+    // Symmetric initialization around mu = B/2.
+    let mu = cn.mu;
+    let start = [
+        [mu - 0.5, mu + 0.5],
+        [mu - 0.8, mu + 0.4],
+        [mu - 0.3, mu + 0.75],
+    ];
+    let best = nelder_mead(objective, start, 400, 1e-12);
+
+    // Uniform INT2 boundaries are [0, 1, 2, 3] i.e. (α, β) = (1, 2).
+    let uniform_variance = expected_sr_variance(cn, 1.0, 2.0)?;
+
+    Ok(OptimalBoundaries {
+        alpha: best.0[0],
+        beta: best.0[1],
+        variance: best.1,
+        uniform_variance,
+    })
+}
+
+/// Minimal Nelder–Mead for 2-D objectives. Returns `(x*, f(x*))`.
+fn nelder_mead(
+    f: impl Fn([f64; 2]) -> f64,
+    start: [[f64; 2]; 3],
+    max_iter: usize,
+    tol: f64,
+) -> ([f64; 2], f64) {
+    const ALPHA: f64 = 1.0; // reflection
+    const GAMMA: f64 = 2.0; // expansion
+    const RHO: f64 = 0.5; // contraction
+    const SIG: f64 = 0.5; // shrink
+
+    let mut simplex: Vec<([f64; 2], f64)> =
+        start.iter().map(|&x| (x, f(x))).collect();
+
+    for _ in 0..max_iter {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let (best, worst) = (simplex[0], simplex[2]);
+        if (worst.1 - best.1).abs() < tol {
+            break;
+        }
+        let centroid = [
+            (simplex[0].0[0] + simplex[1].0[0]) / 2.0,
+            (simplex[0].0[1] + simplex[1].0[1]) / 2.0,
+        ];
+        let refl = [
+            centroid[0] + ALPHA * (centroid[0] - worst.0[0]),
+            centroid[1] + ALPHA * (centroid[1] - worst.0[1]),
+        ];
+        let f_refl = f(refl);
+        if f_refl < best.1 {
+            let exp = [
+                centroid[0] + GAMMA * (refl[0] - centroid[0]),
+                centroid[1] + GAMMA * (refl[1] - centroid[1]),
+            ];
+            let f_exp = f(exp);
+            simplex[2] = if f_exp < f_refl { (exp, f_exp) } else { (refl, f_refl) };
+        } else if f_refl < simplex[1].1 {
+            simplex[2] = (refl, f_refl);
+        } else {
+            let contr = [
+                centroid[0] + RHO * (worst.0[0] - centroid[0]),
+                centroid[1] + RHO * (worst.0[1] - centroid[1]),
+            ];
+            let f_contr = f(contr);
+            if f_contr < worst.1 {
+                simplex[2] = (contr, f_contr);
+            } else {
+                for i in 1..3 {
+                    let x = [
+                        best.0[0] + SIG * (simplex[i].0[0] - best.0[0]),
+                        best.0[1] + SIG * (simplex[i].0[1] - best.0[1]),
+                    ];
+                    simplex[i] = (x, f(x));
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex[0]
+}
+
+/// Appendix B: precomputed `D → (α*, β*)` lookup for
+/// `D ∈ {d_min, …, d_max}` (paper: 4…2048, capped by the OOM bound).
+#[derive(Debug, Clone)]
+pub struct BoundaryTable {
+    pub d_min: usize,
+    pub d_max: usize,
+    entries: Vec<OptimalBoundaries>,
+}
+
+impl BoundaryTable {
+    /// Solve the optimization for every `D` in the range. For the paper's
+    /// full range this is ~2k Nelder–Mead runs, each a few hundred cheap
+    /// closed-form evaluations — fast enough to build at startup.
+    pub fn build(d_min: usize, d_max: usize) -> Result<Self> {
+        if d_min < 3 || d_max < d_min {
+            return Err(Error::Config(format!("bad table range [{d_min},{d_max}]")));
+        }
+        let entries = (d_min..=d_max)
+            .map(|d| {
+                let cn = ClippedNormal::new(2, d)?;
+                optimal_boundaries(&cn)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BoundaryTable {
+            d_min,
+            d_max,
+            entries,
+        })
+    }
+
+    /// Look up the optimal boundaries for dimensionality `d` (clamped to
+    /// the table range — matching Appendix B's "only D ≤ 2048 occurs").
+    pub fn get(&self, d: usize) -> &OptimalBoundaries {
+        let idx = d.clamp(self.d_min, self.d_max) - self.d_min;
+        &self.entries[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Eq. 19: empirical variance reduction of SR with optimized boundaries
+/// vs uniform boundaries, measured on a batch of normalized activations
+/// `h̄ ∈ [0, B]` (INT2).
+///
+/// Returns `1 − Σ(h − ⌊h⌉*)² / Σ(h − ⌊h⌉)²` averaged over `trials`
+/// independent rounding draws.
+pub fn empirical_variance_reduction(
+    normalized: &[f64],
+    alpha: f64,
+    beta: f64,
+    trials: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let opt_bounds = [0.0, alpha, beta, 3.0];
+    let mut err_uniform = 0.0;
+    let mut err_opt = 0.0;
+    for _ in 0..trials.max(1) {
+        for &h in normalized {
+            let u = stochastic_round_uniform(h, 3, rng) as f64;
+            err_uniform += (h - u) * (h - u);
+            let code = stochastic_round(h, &opt_bounds, rng) as usize;
+            let v = opt_bounds[code];
+            err_opt += (h - v) * (h - v);
+        }
+    }
+    1.0 - err_opt / err_uniform.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sr_variance_uniform_bins_matches_p_form() {
+        // Eq. 12: Var = δ²(p − p²) with δ = 1, p = frac(h).
+        let bounds = [0.0, 1.0, 2.0, 3.0];
+        for &h in &[0.25f64, 0.5, 1.75, 2.9] {
+            let p = h - h.floor();
+            let expect = p - p * p;
+            assert!((sr_variance(h, &bounds) - expect).abs() < 1e-12, "h={h}");
+        }
+    }
+
+    #[test]
+    fn sr_variance_zero_on_boundaries() {
+        let bounds = [0.0, 0.7, 2.1, 3.0];
+        for &h in &bounds {
+            assert!(sr_variance(h, &bounds).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sr_variance_peaks_at_bin_centers() {
+        let bounds = [0.0, 1.0, 2.0, 3.0];
+        // Max of δt − t² at t = δ/2 is δ²/4 = 0.25.
+        assert!((sr_variance(0.5, &bounds) - 0.25).abs() < 1e-12);
+        assert!((sr_variance(1.5, &bounds) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sr_variance_matches_monte_carlo() {
+        let bounds = [0.0, 0.9, 2.2, 3.0];
+        let mut rng = Pcg64::new(1);
+        for &h in &[0.4f64, 1.3, 2.6] {
+            let n = 300_000;
+            let mut acc = 0.0;
+            for _ in 0..n {
+                let v = bounds[stochastic_round(h, &bounds, &mut rng) as usize];
+                acc += (v - h) * (v - h);
+            }
+            let mc = acc / n as f64;
+            let analytic = sr_variance(h, &bounds);
+            assert!(
+                (mc - analytic).abs() < 0.01,
+                "h={h}: mc={mc} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_quadrature() {
+        for d in [8usize, 16, 64, 256] {
+            let cn = ClippedNormal::new(2, d).unwrap();
+            for (a, b) in [(1.0, 2.0), (0.8, 2.2), (1.3, 1.7)] {
+                let cf = expected_sr_variance(&cn, a, b).unwrap();
+                let quad = expected_sr_variance_quadrature(&cn, a, b, 2000).unwrap();
+                assert!(
+                    (cf - quad).abs() < 1e-7,
+                    "d={d} ({a},{b}): {cf} vs {quad}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimum_beats_uniform_and_is_symmetric() {
+        for d in [8usize, 16, 64, 128, 1024] {
+            let cn = ClippedNormal::new(2, d).unwrap();
+            let opt = optimal_boundaries(&cn).unwrap();
+            assert!(
+                opt.variance < opt.uniform_variance,
+                "d={d}: {opt:?}"
+            );
+            // mu = 1.5 symmetry => alpha + beta = 3.
+            assert!(
+                (opt.alpha + opt.beta - 3.0).abs() < 1e-4,
+                "d={d}: α={} β={}",
+                opt.alpha,
+                opt.beta
+            );
+            assert!(opt.reduction() > 0.0 && opt.reduction() < 1.0);
+        }
+    }
+
+    #[test]
+    fn optimum_is_stationary() {
+        // Perturbing (α*, β*) must not decrease Eq. 10.
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        let opt = optimal_boundaries(&cn).unwrap();
+        for da in [-0.02f64, 0.02] {
+            for db in [-0.02f64, 0.02] {
+                let v =
+                    expected_sr_variance(&cn, opt.alpha + da, opt.beta + db).unwrap();
+                assert!(
+                    v >= opt.variance - 1e-9,
+                    "perturbed ({da},{db}) gave {v} < {}",
+                    opt.variance
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_boundary_variance_visible_in_fig3_form() {
+        // Fig. 3 anchor: (α=1, β=2) is the uniform configuration and must
+        // equal the closed form at those boundaries.
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        let opt = optimal_boundaries(&cn).unwrap();
+        let direct = expected_sr_variance(&cn, 1.0, 2.0).unwrap();
+        assert!((opt.uniform_variance - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_table_lookup() {
+        let table = BoundaryTable::build(4, 64).unwrap();
+        assert_eq!(table.len(), 61);
+        // Clamping below/above.
+        assert_eq!(table.get(2), table.get(4));
+        assert_eq!(table.get(1000), table.get(64));
+        // Spot value agrees with a fresh solve.
+        let fresh = optimal_boundaries(&ClippedNormal::new(2, 16).unwrap()).unwrap();
+        let cached = table.get(16);
+        assert!((fresh.alpha - cached.alpha).abs() < 1e-8);
+        assert!((fresh.beta - cached.beta).abs() < 1e-8);
+    }
+
+    #[test]
+    fn boundary_table_rejects_bad_range() {
+        assert!(BoundaryTable::build(2, 10).is_err());
+        assert!(BoundaryTable::build(10, 4).is_err());
+    }
+
+    #[test]
+    fn empirical_reduction_positive_on_cn_samples() {
+        // Validation of Appendix C: on CN-distributed activations the
+        // optimized boundaries reduce realized SR noise.
+        let d = 64;
+        let cn = ClippedNormal::new(2, d).unwrap();
+        let mut rng = Pcg64::new(5);
+        let samples = cn.sample_n(&mut rng, 20_000);
+        let opt = optimal_boundaries(&cn).unwrap();
+        let red =
+            empirical_variance_reduction(&samples, opt.alpha, opt.beta, 3, &mut rng);
+        let expected = opt.reduction();
+        assert!(red > 0.0, "reduction={red}");
+        assert!(
+            (red - expected).abs() < 0.02,
+            "empirical {red} vs theoretical {expected}"
+        );
+    }
+
+    #[test]
+    fn larger_d_narrower_center_bin() {
+        // More extreme tails (larger D => larger sigma relative to [0,3])
+        // push the optimal central bin wider or narrower monotonically;
+        // verify the trend is monotone in D to catch solver instability.
+        let mut widths = Vec::new();
+        for d in [8usize, 32, 128, 512] {
+            let cn = ClippedNormal::new(2, d).unwrap();
+            let opt = optimal_boundaries(&cn).unwrap();
+            widths.push(opt.beta - opt.alpha);
+        }
+        let increasing = widths.windows(2).all(|w| w[1] >= w[0] - 1e-6);
+        let decreasing = widths.windows(2).all(|w| w[1] <= w[0] + 1e-6);
+        assert!(
+            increasing || decreasing,
+            "central-bin width not monotone in D: {widths:?}"
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Smoke tests over the experiment harness: every paper artifact's
+//! generator runs end to end at reduced scale and produces output with
+//! the paper's qualitative shape.
+
+use iexact::experiments::{fig1, fig2, fig3, fig5, table2, Effort};
+use iexact::rngs::Pcg64;
+use iexact::stats::ClippedNormal;
+
+#[test]
+fn fig1_panels_cover_all_bins() {
+    let f = fig1::run(256, 16, 3).unwrap();
+    // Uniform panel: 3 bins all populated with 256 uniform points.
+    let bins: std::collections::HashSet<String> = f
+        .uniform
+        .iter()
+        .map(|p| format!("{:.2}", p.lo))
+        .collect();
+    assert_eq!(bins.len(), 3);
+    // Optimized boundaries are the Fig 1-B non-uniform layout.
+    assert!(f.alpha < 1.0 && f.beta > 2.0 || f.alpha > 1.0 && f.beta < 2.0);
+}
+
+#[test]
+fn fig2_from_synthetic_activations_prefers_cn() {
+    let mut rng = Pcg64::new(1);
+    let cn = ClippedNormal::new(2, 24).unwrap();
+    let act =
+        iexact::tensor::Matrix::from_fn(400, 24, |_, _| cn.sample(&mut rng) as f32);
+    let f = fig2::from_activations(&act).unwrap();
+    let (js_u, js_cn) = f.divergences().unwrap();
+    assert!(js_cn < js_u);
+    // CSV parses back into the right column count.
+    for line in f.to_csv().lines().skip(1) {
+        assert_eq!(line.split(',').count(), 4);
+    }
+}
+
+#[test]
+fn fig3_minimum_interior() {
+    let f = fig3::run(32, 25).unwrap();
+    let (a, b, v) = f.optimum;
+    assert!(a > 0.0 && b < 3.0 && a < b);
+    assert!(v < f.uniform);
+    // Surface is symmetric-ish: Var(a, b) ≈ Var(3-b, 3-a) by μ = 1.5.
+    let cn = ClippedNormal::new(2, 32).unwrap();
+    let v1 = iexact::varmin::expected_sr_variance(&cn, 0.9, 1.7).unwrap();
+    let v2 = iexact::varmin::expected_sr_variance(&cn, 3.0 - 1.7, 3.0 - 0.9).unwrap();
+    assert!((v1 - v2).abs() < 1e-9);
+}
+
+#[test]
+fn fig5_quick_effort_runs() {
+    let f = fig5::run(2, 3_000, 9, |_| {}).unwrap();
+    assert_eq!(f.series.len(), fig5::TRUE_DS.len());
+    assert!(f.to_csv().lines().count() > 10);
+}
+
+#[test]
+fn table2_on_tiny_capture() {
+    // Full table2 at Quick effort exercises the capture + fit pipeline.
+    let t = table2::run(Effort::Quick, |_| {}).unwrap();
+    assert!(!t.rows.is_empty());
+    for row in &t.rows {
+        assert!(row.js_uniform.is_finite() && row.js_clipped_normal.is_finite());
+        // The paper's claim: clipped normal fits better on every layer.
+        assert!(
+            row.js_clipped_normal < row.js_uniform,
+            "{} layer {}: JS(CN)={} !< JS(U)={}",
+            row.dataset,
+            row.layer,
+            row.js_clipped_normal,
+            row.js_uniform
+        );
+    }
+}

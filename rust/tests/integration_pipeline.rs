@@ -1,0 +1,135 @@
+//! Cross-module integration tests on the native pipeline: dataset
+//! generation → compressed training → metrics → memory model, plus the
+//! paper's qualitative claims at test scale.
+
+use iexact::config::{DatasetSpec, QuantConfig, TrainConfig};
+use iexact::coordinator::{run_native_on, table1_configs};
+use iexact::memory::MemoryModel;
+use iexact::pipeline::train;
+
+fn cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        arch: iexact::config::Arch::Gcn,
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs,
+        lr: 0.02,
+        weight_decay: 0.0,
+        seeds: vec![0],
+        eval_every: 5,
+    }
+}
+
+#[test]
+fn all_table1_configs_train_on_tiny() {
+    let ds = DatasetSpec::tiny().generate(1);
+    for quant in table1_configs(&[2, 8, 64]) {
+        let res = train(&ds, &quant, &cfg(15), 0)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", quant.label()));
+        assert!(
+            res.test_accuracy > 0.4,
+            "{}: accuracy {}",
+            quant.label(),
+            res.test_accuracy
+        );
+    }
+}
+
+#[test]
+fn accuracy_parity_between_fp32_and_int2() {
+    // The paper's headline: INT2 compression costs ~no accuracy. At test
+    // scale we allow a 12-point band (tiny graphs are noisier than OGB).
+    let ds = DatasetSpec::tiny().generate(7);
+    let c = cfg(30);
+    let fp32 = train(&ds, &QuantConfig::fp32(), &c, 0).unwrap();
+    let int2 = train(&ds, &QuantConfig::int2_blockwise(16), &c, 0).unwrap();
+    assert!(
+        (fp32.test_accuracy - int2.test_accuracy).abs() < 0.12,
+        "fp32 {} vs int2 {}",
+        fp32.test_accuracy,
+        int2.test_accuracy
+    );
+}
+
+#[test]
+fn memory_model_matches_measured_stash() {
+    // The analytic model (Table 1's M column) must agree with the actual
+    // bytes the pipeline stashes, per layer composition.
+    let ds = DatasetSpec::tiny().generate(3);
+    let c = cfg(3);
+    for quant in [
+        QuantConfig::int2_exact(),
+        QuantConfig::int2_blockwise(8),
+        QuantConfig::int2_blockwise(64),
+    ] {
+        let res = train(&ds, &quant, &c, 0).unwrap();
+        let model = MemoryModel::new(
+            ds.num_nodes(),
+            ds.num_features(),
+            c.hidden_dim,
+            c.num_layers,
+        );
+        let analytic = model.breakdown(&quant).unwrap();
+        // The analytic model books a 1-bit sign pattern for every layer;
+        // the final (classifier) layer has no ReLU, so the pipeline stashes
+        // exactly that much less.
+        let last_sign_bytes = (ds.num_nodes() * c.hidden_dim).div_ceil(8);
+        let expected = analytic.total - last_sign_bytes;
+        assert_eq!(
+            res.stash_bytes,
+            expected,
+            "{}: measured {} != analytic-adjusted {}",
+            quant.label(),
+            res.stash_bytes,
+            expected
+        );
+    }
+}
+
+#[test]
+fn memory_ordering_matches_paper() {
+    let model = MemoryModel::new(2048, 128, 128, 3);
+    let fp32 = model.total_mb(&QuantConfig::fp32()).unwrap();
+    let exact = model.total_mb(&QuantConfig::int2_exact()).unwrap();
+    let mut last = exact;
+    for g in [2, 4, 8, 16, 32, 64] {
+        let mb = model.total_mb(&QuantConfig::int2_blockwise(g)).unwrap();
+        assert!(mb < last, "G/R={g} must shrink memory");
+        last = mb;
+    }
+    // >95% reduction vs FP32 (paper: ~97%).
+    assert!(last < fp32 * 0.05);
+}
+
+#[test]
+fn sweep_shares_dataset_across_configs() {
+    let ds = DatasetSpec::tiny().generate(5);
+    let c = cfg(8);
+    let a = run_native_on(&ds, &QuantConfig::int2_exact(), &c).unwrap();
+    let b = run_native_on(&ds, &QuantConfig::int2_blockwise(8), &c).unwrap();
+    assert_eq!(a.summary.dataset, b.summary.dataset);
+    assert!(a.summary.memory_mb > b.summary.memory_mb);
+}
+
+#[test]
+fn toml_config_end_to_end() {
+    let toml = r#"
+[dataset]
+name = "tiny"
+seed = 5
+
+[quant]
+mode = "blockwise"
+bits = 2
+proj_ratio = 8
+group_ratio = 8
+
+[train]
+hidden_dim = 32
+epochs = 10
+seeds = [0]
+"#;
+    let cfg = iexact::config::ExperimentConfig::from_toml(toml).unwrap();
+    let out = iexact::coordinator::run_native(&cfg).unwrap();
+    assert!(out.summary.epochs_per_sec > 0.0);
+}

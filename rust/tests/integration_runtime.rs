@@ -1,0 +1,137 @@
+//! Three-layer composition tests: load the JAX/Pallas AOT artifacts and
+//! drive them from the Rust coordinator via PJRT.
+//!
+//! These tests require `make artifacts`; they skip (pass with a notice)
+//! when the artifact directory is absent so a fresh checkout stays green.
+
+use iexact::config::DatasetSpec;
+use iexact::coordinator::AotCoordinator;
+use iexact::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root.
+    let p = std::path::PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn aot_dataset(rt: &Runtime, name: &str) -> DatasetSpec {
+    let entry = rt.manifest().get(name).unwrap();
+    DatasetSpec {
+        num_nodes: entry.meta["num_nodes"].parse().unwrap(),
+        num_features: entry.meta["num_features"].parse().unwrap(),
+        num_classes: entry.meta["num_classes"].parse().unwrap(),
+        ..DatasetSpec::arxiv_like()
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).unwrap();
+    let names = rt.artifact_names();
+    for expected in [
+        "train_step_arxiv_fp32",
+        "train_step_arxiv_int2_exact",
+        "train_step_arxiv_int2_g8",
+        "train_step_arxiv_int2_g64",
+        "train_step_arxiv_int2_vm",
+        "eval_arxiv",
+        "train_step_flickr_fp32",
+        "eval_flickr",
+    ] {
+        assert!(
+            names.iter().any(|n| n == expected),
+            "missing artifact {expected}; have {names:?}"
+        );
+    }
+}
+
+#[test]
+fn aot_train_step_decreases_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let name = "train_step_arxiv_int2_g8";
+    let spec = aot_dataset(&rt, name);
+    let ds = spec.generate(42);
+    let mut coord = AotCoordinator::new(&mut rt, "arxiv", "int2_g8", &ds, 0).unwrap();
+    let first = coord.step("int2_g8").unwrap();
+    let mut last = first;
+    for _ in 0..20 {
+        last = coord.step("int2_g8").unwrap();
+    }
+    assert!(
+        last < first * 0.9,
+        "loss should drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn aot_eval_produces_valid_logits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let spec = aot_dataset(&rt, "eval_arxiv");
+    let ds = spec.generate(42);
+    let mut coord = AotCoordinator::new(&mut rt, "arxiv", "fp32", &ds, 0).unwrap();
+    let logits = coord.logits().unwrap();
+    assert_eq!(logits.shape(), (ds.num_nodes(), ds.num_classes));
+    assert!(logits.as_slice().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn aot_full_train_reaches_learnable_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let spec = aot_dataset(&rt, "train_step_arxiv_int2_g64");
+    let ds = spec.generate(42);
+    let chance = 1.0 / ds.num_classes as f64;
+    let mut coord = AotCoordinator::new(&mut rt, "arxiv", "int2_g64", &ds, 0).unwrap();
+    let out = coord.train("int2_g64", &ds, 60, 10).unwrap();
+    assert!(
+        out.test_accuracy > 3.0 * chance,
+        "acc {} vs chance {chance}",
+        out.test_accuracy
+    );
+    assert!(out.epochs_per_sec > 0.0);
+    assert!(!out.curve.is_empty());
+}
+
+#[test]
+fn aot_vm_variant_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let spec = aot_dataset(&rt, "train_step_arxiv_int2_vm");
+    let ds = spec.generate(42);
+    let mut coord = AotCoordinator::new(&mut rt, "arxiv", "int2_vm", &ds, 0).unwrap();
+    let l1 = coord.step("int2_vm").unwrap();
+    let l2 = coord.step("int2_vm").unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let bad = iexact::tensor::Matrix::zeros(2, 2);
+    let err = rt.execute("eval_arxiv", &[&bad]);
+    assert!(err.is_err(), "wrong arity must fail");
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let spec = aot_dataset(&rt, "eval_arxiv");
+    let ds = spec.generate(42);
+    let mut coord = AotCoordinator::new(&mut rt, "arxiv", "fp32", &ds, 0).unwrap();
+    coord.logits().unwrap();
+    coord.logits().unwrap();
+    drop(coord);
+    let stats = rt.stats("eval_arxiv");
+    assert_eq!(stats.calls, 2);
+    assert!(stats.total_secs > 0.0);
+}

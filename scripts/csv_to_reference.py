@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Convert the Rust `boundaries` CSV into the golden JSON consumed by
+python/tests/test_varmin.py (cross-implementation check)."""
+
+import csv
+import json
+import sys
+
+
+def main() -> None:
+    src, dst = sys.argv[1], sys.argv[2]
+    out = {}
+    with open(src) as fh:
+        for row in csv.DictReader(fh):
+            out[int(row["D"])] = [float(row["alpha*"]), float(row["beta*"])]
+    with open(dst, "w") as fh:
+        json.dump(out, fh, indent=1, sort_keys=True)
+    print(f"wrote {len(out)} golden boundary pairs to {dst}")
+
+
+if __name__ == "__main__":
+    main()
