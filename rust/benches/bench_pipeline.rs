@@ -44,4 +44,45 @@ fn main() {
             1.0 / per_epoch
         );
     }
+
+    // ---- Quantization-engine threading, end to end ----
+    // Same training step, same numbers (bit-identical by construction) —
+    // only the wall clock may differ. Shard gating is disabled so the
+    // bench-scale tensors fan out.
+    use iexact::config::ParallelismConfig;
+    println!("\n# engine threading (blockwise INT2 G/R=8, identical results)");
+    println!("{:<24} {:>14} {:>12}", "engine", "ms/epoch", "epochs/s");
+    let quant = iexact::config::QuantConfig::int2_blockwise(8);
+    for (label, parallelism) in [
+        ("serial", ParallelismConfig::serial()),
+        (
+            "threads=2",
+            ParallelismConfig {
+                threads: 2,
+                min_blocks_per_shard: 1,
+            },
+        ),
+        (
+            "auto",
+            ParallelismConfig {
+                threads: 0,
+                min_blocks_per_shard: 1,
+            },
+        ),
+    ] {
+        let mut tcfg = cfg.clone();
+        tcfg.parallelism = parallelism;
+        let (_, med, _) = measure(1, 3, || {
+            std::hint::black_box(
+                iexact::pipeline::train(&dataset, &quant, &tcfg, 0).unwrap(),
+            );
+        });
+        let per_epoch = med / tcfg.epochs as f64;
+        println!(
+            "{:<24} {:>14.2} {:>12.2}",
+            label,
+            per_epoch * 1e3,
+            1.0 / per_epoch
+        );
+    }
 }

@@ -1,10 +1,14 @@
 //! Quantization micro-benchmarks: quantize+dequantize throughput across
-//! bit widths and block sizes. This is the substrate behind Table 1's
-//! speed column — larger blocks amortize (zero, range) metadata work,
-//! which is why block-wise is *faster* than EXACT's per-row scheme.
+//! bit widths and block sizes, plus the parallel engine's thread-scaling
+//! sweep. This is the substrate behind Table 1's speed column — larger
+//! blocks amortize (zero, range) metadata work, which is why block-wise
+//! is *faster* than EXACT's per-row scheme — and the ISSUE 1 acceptance
+//! check that ≥2 threads give a measurable speedup on large block counts.
 //!
 //! Run: `cargo bench --bench bench_quant`
 
+use iexact::engine::QuantEngine;
+use iexact::memory::BufferPool;
 use iexact::quant::{BinSpec, BlockwiseQuantizer, RowQuantizer};
 use iexact::rngs::Pcg64;
 use iexact::tensor::Matrix;
@@ -76,4 +80,51 @@ fn main() {
         scalars / med / 1e6,
         "-"
     );
+
+    // ---- Parallel engine thread-scaling sweep ----
+    // A bench-scale tensor with a large flat block list (32768 blocks) so
+    // sharding has real work to amortize the scoped-thread spawns.
+    let big_n = 32_768;
+    let big_r = 64;
+    let group = 64;
+    let mut rng = Pcg64::new(5);
+    let big = Matrix::from_fn(big_n, big_r, |_, _| rng.next_f32() * 4.0 - 2.0);
+    let big_scalars = (big_n * big_r) as f64;
+    let blocks = big_n * big_r / group;
+    println!(
+        "\n# engine sweep: {big_n}x{big_r} f32, G={group} ({blocks} blocks), \
+         auto = {} threads",
+        QuantEngine::auto().threads()
+    );
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "config", "median ms", "Mscalar/s", "speedup"
+    );
+    let mut baseline = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let engine = QuantEngine::with_threads(threads);
+        let mut pool = BufferPool::new();
+        let mut rng = Pcg64::new(6);
+        let (_, med, _) = measure(2, 8, || {
+            let ct = engine
+                .quantize_pooled(&big, group, 2, &BinSpec::Uniform, &mut rng, &mut pool)
+                .unwrap();
+            let deq = engine.dequantize_pooled(&ct, &mut pool).unwrap();
+            std::hint::black_box(&deq);
+            // Return the big buffers so steady-state iterations measure
+            // the engine, not the allocator.
+            pool.put_floats(deq.into_vec());
+            pool.put_bytes(ct.packed);
+        });
+        if threads == 1 {
+            baseline = med;
+        }
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>11.2}x",
+            format!("blockwise int2 threads={threads}"),
+            med * 1e3,
+            big_scalars / med / 1e6,
+            baseline / med
+        );
+    }
 }

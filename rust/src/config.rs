@@ -152,6 +152,80 @@ impl Arch {
     }
 }
 
+/// Execution parallelism for the quantization engine — the `[parallelism]`
+/// config section.
+///
+/// The engine (see [`crate::engine::QuantEngine`]) shards the flat block
+/// list of a grouped quantize/dequantize across scoped worker threads.
+/// Because every block draws randomness from its own deterministic
+/// stream, **these knobs only affect speed, never results**: training is
+/// bit-identical at any thread count.
+///
+/// Keys:
+///
+/// * `threads` — worker-count ceiling. `0` (the default) means **auto**:
+///   one worker per core reported by `std::thread::available_parallelism`,
+///   capped at [`crate::engine::MAX_AUTO_THREADS`] (8) — grouped
+///   quantization saturates memory bandwidth before it saturates wide
+///   machines. `1` forces the serial path.
+/// * `min_blocks_per_shard` — fan-out granularity gate. A quantize call
+///   over `B` blocks stays serial unless `B >= 2 * min_blocks_per_shard`,
+///   and then uses at most `B / min_blocks_per_shard` workers, so tiny
+///   tensors never pay thread-spawn overhead for microseconds of work.
+///
+/// ```toml
+/// [parallelism]
+/// threads = 0              # auto
+/// min_blocks_per_shard = 512
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelismConfig {
+    /// Worker-count ceiling; `0` = auto (see type-level docs).
+    pub threads: usize,
+    /// Minimum blocks a shard must receive before fan-out happens.
+    pub min_blocks_per_shard: usize,
+}
+
+impl Default for ParallelismConfig {
+    fn default() -> Self {
+        ParallelismConfig {
+            threads: 0,
+            min_blocks_per_shard: 512,
+        }
+    }
+}
+
+impl ParallelismConfig {
+    /// Hard ceiling on an explicit thread count — each quantize call
+    /// spawns its workers scoped, so absurd values would mean thousands
+    /// of OS-thread spawns per layer (and `Scope::spawn` aborts the
+    /// process if a spawn fails).
+    pub const MAX_THREADS: usize = 1024;
+
+    /// Force the single-threaded path (still seed-addressed, so results
+    /// match any parallel run).
+    pub fn serial() -> Self {
+        ParallelismConfig {
+            threads: 1,
+            min_blocks_per_shard: 1,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.min_blocks_per_shard == 0 {
+            return Err(Error::Config("min_blocks_per_shard must be >= 1".into()));
+        }
+        if self.threads > Self::MAX_THREADS {
+            return Err(Error::Config(format!(
+                "parallelism.threads must be <= {}, got {}",
+                Self::MAX_THREADS,
+                self.threads
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -164,6 +238,8 @@ pub struct TrainConfig {
     pub seeds: Vec<u64>,
     /// Evaluate on val/test every `eval_every` epochs.
     pub eval_every: usize,
+    /// Quantization-engine threading (speed only — never results).
+    pub parallelism: ParallelismConfig,
 }
 
 impl Default for TrainConfig {
@@ -177,6 +253,7 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             seeds: vec![0, 1, 2],
             eval_every: 5,
+            parallelism: ParallelismConfig::default(),
         }
     }
 }
@@ -192,7 +269,7 @@ impl TrainConfig {
         if self.eval_every == 0 {
             return Err(Error::Config("eval_every must be >= 1".into()));
         }
-        Ok(())
+        self.parallelism.validate()
     }
 }
 
@@ -379,6 +456,24 @@ impl ExperimentConfig {
         if let Some(seeds) = t.get_int_list("train.seeds") {
             train.seeds = seeds.iter().map(|&s| s as u64).collect();
         }
+        // Negative values would wrap through the `as usize` cast into
+        // huge counts that pass validation — reject them here.
+        if let Some(n) = t.get_int("parallelism.threads") {
+            if n < 0 {
+                return Err(Error::Config(format!(
+                    "parallelism.threads must be >= 0, got {n}"
+                )));
+            }
+            train.parallelism.threads = n as usize;
+        }
+        if let Some(m) = t.get_int("parallelism.min_blocks_per_shard") {
+            if m < 0 {
+                return Err(Error::Config(format!(
+                    "parallelism.min_blocks_per_shard must be >= 1, got {m}"
+                )));
+            }
+            train.parallelism.min_blocks_per_shard = m as usize;
+        }
 
         let cfg = ExperimentConfig {
             dataset,
@@ -503,5 +598,45 @@ seeds = [0, 1]
     #[test]
     fn toml_rejects_unknown_mode() {
         assert!(ExperimentConfig::from_toml("[quant]\nmode = \"int1\"\n").is_err());
+    }
+
+    #[test]
+    fn toml_parallelism_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[parallelism]\nthreads = 4\nmin_blocks_per_shard = 64\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.parallelism,
+            ParallelismConfig {
+                threads: 4,
+                min_blocks_per_shard: 64
+            }
+        );
+        // Defaults when the section is absent.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.parallelism, ParallelismConfig::default());
+        // Zero shard granularity is rejected.
+        assert!(ExperimentConfig::from_toml(
+            "[parallelism]\nmin_blocks_per_shard = 0\n"
+        )
+        .is_err());
+        // Negative values must not wrap through the usize cast.
+        assert!(ExperimentConfig::from_toml("[parallelism]\nthreads = -1\n").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[parallelism]\nmin_blocks_per_shard = -1\n"
+        )
+        .is_err());
+        // An absurd explicit thread count is rejected by validate().
+        assert!(ExperimentConfig::from_toml("[parallelism]\nthreads = 1000000\n").is_err());
+    }
+
+    #[test]
+    fn parallelism_defaults_and_serial() {
+        let d = ParallelismConfig::default();
+        assert_eq!(d.threads, 0, "default is auto");
+        assert!(d.min_blocks_per_shard >= 1);
+        d.validate().unwrap();
+        assert_eq!(ParallelismConfig::serial().threads, 1);
     }
 }

@@ -5,6 +5,12 @@
 //! **AOT runtime path** (PJRT-executed JAX training steps, proving the
 //! three-layer composition), aggregates metrics, and produces the
 //! Table 1 rows.
+//!
+//! Each native run builds its quantization engine from the experiment's
+//! `[parallelism]` config (see
+//! [`ParallelismConfig`](crate::config::ParallelismConfig)); the engine's
+//! per-block RNG streams guarantee that a sweep's numbers are identical
+//! whatever thread count each cell ran with.
 
 mod aot;
 
@@ -103,6 +109,37 @@ mod tests {
         assert!(out.summary.memory_mb > 0.0);
         assert!(out.summary.epochs_per_sec > 0.0);
         assert_eq!(out.summary.dataset, "tiny");
+    }
+
+    #[test]
+    fn run_native_results_invariant_to_parallelism() {
+        // The coordinator must report identical numbers for a cell no
+        // matter how the quantization engine is threaded.
+        let mk = |parallelism| ExperimentConfig {
+            dataset: DatasetSpec::tiny(),
+            quant: QuantConfig::int2_blockwise(4),
+            train: TrainConfig {
+                hidden_dim: 32,
+                epochs: 6,
+                seeds: vec![0],
+                eval_every: 3,
+                parallelism,
+                ..TrainConfig::default()
+            },
+            dataset_seed: 3,
+        };
+        use crate::config::ParallelismConfig;
+        let serial = run_native(&mk(ParallelismConfig::serial())).unwrap();
+        let parallel = run_native(&mk(ParallelismConfig {
+            threads: 8,
+            min_blocks_per_shard: 1,
+        }))
+        .unwrap();
+        assert_eq!(
+            serial.results[0].final_train_loss,
+            parallel.results[0].final_train_loss
+        );
+        assert_eq!(serial.summary.memory_mb, parallel.summary.memory_mb);
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! Multi-threaded quantization execution engine.
+//!
+//! The independent-blocks structure of Eq. 6 makes every quantization
+//! group — one `(zero-point, range)` pair plus its slice of codes —
+//! embarrassingly parallel, which is exactly what ActNN and GACT exploit
+//! for throughput. [`QuantEngine`] shards the flat block list of
+//! [`BlockwiseQuantizer`](crate::quant::BlockwiseQuantizer) (and the
+//! per-row groups of [`RowQuantizer`](crate::quant::RowQuantizer)) into
+//! contiguous per-thread shards driven by `std::thread::scope`.
+//!
+//! ## Determinism
+//!
+//! Block `g` always draws its stochastic-rounding randomness from the
+//! deterministic stream [`Pcg64::with_stream`]`(seed, g)` — the stream
+//! assignment depends only on the block *index*, never on which worker
+//! processes it or how many workers exist. Parallel output is therefore
+//! **bit-identical to serial** for the same seed, at every bit width and
+//! any thread count:
+//!
+//! ```
+//! use iexact::engine::QuantEngine;
+//! use iexact::quant::BinSpec;
+//! use iexact::rngs::Pcg64;
+//! use iexact::tensor::Matrix;
+//!
+//! let mut rng = Pcg64::new(7);
+//! let h = Matrix::from_fn(64, 32, |_, _| rng.next_f32());
+//! let serial = QuantEngine::serial()
+//!     .quantize_seeded(&h, 32, 2, &BinSpec::Uniform, 42)
+//!     .unwrap();
+//! let parallel = QuantEngine::with_threads(4)
+//!     .quantize_seeded(&h, 32, 2, &BinSpec::Uniform, 42)
+//!     .unwrap();
+//! assert_eq!(serial.packed, parallel.packed);
+//! assert_eq!(serial.zeros, parallel.zeros);
+//! ```
+//!
+//! ## Configuration
+//!
+//! Production code builds the engine from the `[parallelism]` config
+//! section via [`QuantEngine::from_config`]; see
+//! [`ParallelismConfig`](crate::config::ParallelismConfig) for the
+//! thread-count and shard-granularity knobs and the auto heuristic.
+
+use crate::config::ParallelismConfig;
+use crate::memory::BufferPool;
+use crate::quant::{
+    dequantize_block, pack_codes_into, quantize_block, unpack_range, BinSpec, CompressedTensor,
+    DequantPlan, QuantPlan,
+};
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+/// Auto mode caps the worker count here: grouped quantization saturates
+/// memory bandwidth well before it saturates very wide machines, and the
+/// per-call `thread::scope` spawn cost grows with the worker count.
+pub const MAX_AUTO_THREADS: usize = 8;
+
+/// Resolve a configured thread count (`0` = auto) to a concrete one.
+fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_AUTO_THREADS)
+    }
+}
+
+/// Sharded executor for grouped quantize/dequantize.
+///
+/// Cheap to construct and `Clone`; holds no threads — workers are scoped
+/// per call, so the engine can be shared freely across the pipeline,
+/// coordinator and benches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantEngine {
+    threads: usize,
+    min_blocks_per_shard: usize,
+}
+
+impl QuantEngine {
+    /// Single-threaded engine — the reference every parallel result is
+    /// bit-compared against.
+    pub fn serial() -> Self {
+        QuantEngine {
+            threads: 1,
+            min_blocks_per_shard: 1,
+        }
+    }
+
+    /// Engine with an explicit worker count (`0` = auto-detect). Shard
+    /// gating is disabled (`min_blocks_per_shard = 1`) so even small
+    /// inputs fan out — the right default for tests and benches;
+    /// production configs go through [`Self::from_config`].
+    pub fn with_threads(threads: usize) -> Self {
+        QuantEngine {
+            threads: resolve_threads(threads),
+            min_blocks_per_shard: 1,
+        }
+    }
+
+    /// Engine for the default [`ParallelismConfig`]: auto thread count,
+    /// production shard gating.
+    pub fn auto() -> Self {
+        Self::from_config(&ParallelismConfig::default())
+    }
+
+    /// Build from the `[parallelism]` config section, resolving auto mode
+    /// against `std::thread::available_parallelism`.
+    pub fn from_config(cfg: &ParallelismConfig) -> Self {
+        QuantEngine {
+            threads: resolve_threads(cfg.threads),
+            min_blocks_per_shard: cfg.min_blocks_per_shard.max(1),
+        }
+    }
+
+    /// Resolved worker-count ceiling for this engine.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Worker count actually used for `num_blocks` independent blocks:
+    /// stays serial until at least two shards of `min_blocks_per_shard`
+    /// blocks exist (fan-out below that loses more to spawn overhead than
+    /// it gains), then grows linearly and caps at the configured thread
+    /// count.
+    pub fn effective_shards(&self, num_blocks: usize) -> usize {
+        if self.threads <= 1 {
+            return 1;
+        }
+        if num_blocks < self.min_blocks_per_shard.saturating_mul(2) {
+            return 1;
+        }
+        self.threads.min(num_blocks / self.min_blocks_per_shard).max(1)
+    }
+
+    /// Grouped quantization (Eq. 2 + Eq. 6) with randomness drawn from
+    /// `rng`: one `u64` draw keys the per-block streams, so the caller's
+    /// generator advances identically regardless of thread count.
+    pub fn quantize(
+        &self,
+        h: &Matrix,
+        group_len: usize,
+        bits: u32,
+        bins: &BinSpec,
+        rng: &mut Pcg64,
+    ) -> Result<CompressedTensor> {
+        self.quantize_seeded(h, group_len, bits, bins, rng.next_u64())
+    }
+
+    /// Seed-addressed grouped quantization. Bit-identical across engines:
+    /// `serial().quantize_seeded(..)` ==
+    /// `with_threads(n).quantize_seeded(..)` for every `n`.
+    pub fn quantize_seeded(
+        &self,
+        h: &Matrix,
+        group_len: usize,
+        bits: u32,
+        bins: &BinSpec,
+        seed: u64,
+    ) -> Result<CompressedTensor> {
+        self.quantize_impl(h, group_len, bits, bins, seed, None)
+    }
+
+    /// [`Self::quantize`] with scratch and output buffers recycled
+    /// through `pool` — the packed buffer comes from the pool and the
+    /// code scratch returns to it, so steady-state training does no
+    /// per-layer allocation for the compressed path.
+    pub fn quantize_pooled(
+        &self,
+        h: &Matrix,
+        group_len: usize,
+        bits: u32,
+        bins: &BinSpec,
+        rng: &mut Pcg64,
+        pool: &mut BufferPool,
+    ) -> Result<CompressedTensor> {
+        self.quantize_impl(h, group_len, bits, bins, rng.next_u64(), Some(pool))
+    }
+
+    fn quantize_impl(
+        &self,
+        h: &Matrix,
+        group_len: usize,
+        bits: u32,
+        bins: &BinSpec,
+        seed: u64,
+        mut pool: Option<&mut BufferPool>,
+    ) -> Result<CompressedTensor> {
+        let plan = QuantPlan::resolve(bits, bins, group_len)?;
+        let data = h.as_slice();
+        let n = data.len();
+        let num_groups = n.div_ceil(group_len);
+
+        // Scratch contents are unspecified: quantize_block writes every
+        // element of each block (including the constant-block fill).
+        let mut codes = match pool.as_deref_mut() {
+            Some(p) => p.take_bytes_scratch(n),
+            None => vec![0u8; n],
+        };
+        let mut zeros = vec![0f32; num_groups];
+        let mut ranges = vec![0f32; num_groups];
+
+        let shards = self.effective_shards(num_groups);
+        if shards <= 1 {
+            for g in 0..num_groups {
+                let start = g * group_len;
+                let end = (start + group_len).min(n);
+                let mut rng_g = Pcg64::with_stream(seed, g as u64);
+                let (z, r) =
+                    quantize_block(&plan, &data[start..end], &mut codes[start..end], &mut rng_g);
+                zeros[g] = z;
+                ranges[g] = r;
+            }
+        } else {
+            let groups_per_shard = num_groups.div_ceil(shards);
+            let chunk = groups_per_shard * group_len;
+            let plan = &plan;
+            std::thread::scope(|s| {
+                for (idx, (((data_c, codes_c), zeros_c), ranges_c)) in data
+                    .chunks(chunk)
+                    .zip(codes.chunks_mut(chunk))
+                    .zip(zeros.chunks_mut(groups_per_shard))
+                    .zip(ranges.chunks_mut(groups_per_shard))
+                    .enumerate()
+                {
+                    let base = idx * groups_per_shard;
+                    s.spawn(move || {
+                        for (j, (z, r)) in
+                            zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
+                        {
+                            let lo = j * group_len;
+                            let hi = (lo + group_len).min(data_c.len());
+                            let mut rng_g = Pcg64::with_stream(seed, (base + j) as u64);
+                            let (zz, rr) = quantize_block(
+                                plan,
+                                &data_c[lo..hi],
+                                &mut codes_c[lo..hi],
+                                &mut rng_g,
+                            );
+                            *z = zz;
+                            *r = rr;
+                        }
+                    });
+                }
+            });
+        }
+
+        let mut packed = match pool.as_deref_mut() {
+            Some(p) => p.take_bytes_empty((n * bits as usize).div_ceil(8)),
+            None => Vec::new(),
+        };
+        pack_codes_into(&codes, bits, &mut packed)?;
+        if let Some(p) = pool.as_deref_mut() {
+            p.put_bytes(codes);
+        }
+        Ok(CompressedTensor {
+            packed,
+            zeros,
+            ranges,
+            shape: h.shape(),
+            group_len,
+            bits,
+            bins: bins.clone(),
+        })
+    }
+
+    /// Dequantize (Eq. 3), sharding the group loop across worker threads.
+    /// Purely deterministic, so parallel and serial results are
+    /// bit-identical by construction.
+    pub fn dequantize(&self, ct: &CompressedTensor) -> Result<Matrix> {
+        self.dequantize_impl(ct, None)
+    }
+
+    /// [`Self::dequantize`] with the output and code-scratch buffers
+    /// drawn from (and returned to) `pool`.
+    pub fn dequantize_pooled(
+        &self,
+        ct: &CompressedTensor,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        self.dequantize_impl(ct, Some(pool))
+    }
+
+    fn dequantize_impl(
+        &self,
+        ct: &CompressedTensor,
+        mut pool: Option<&mut BufferPool>,
+    ) -> Result<Matrix> {
+        if !matches!(ct.bits, 2 | 4 | 8) {
+            return Err(Error::Config(format!("unsupported bit width {}", ct.bits)));
+        }
+        if ct.group_len == 0 {
+            return Err(Error::Config("group_len must be positive".into()));
+        }
+        let (rows, cols) = ct.shape;
+        let n = rows * cols;
+        let num_groups = n.div_ceil(ct.group_len);
+        let codes_per_byte = (8 / ct.bits) as usize;
+        if ct.packed.len() * codes_per_byte < n {
+            return Err(Error::Shape(format!(
+                "packed buffer too short: wanted {n} codes, got {}",
+                ct.packed.len() * codes_per_byte
+            )));
+        }
+        if ct.zeros.len() != num_groups || ct.ranges.len() != num_groups {
+            return Err(Error::Shape(format!(
+                "expected {num_groups} (zero, range) pairs, got ({}, {})",
+                ct.zeros.len(),
+                ct.ranges.len()
+            )));
+        }
+        let plan = DequantPlan::resolve(ct.bits, &ct.bins);
+        let group_len = ct.group_len;
+        // Every element of `out` (and the unpack scratch) is overwritten
+        // group by group, so unspecified-content takes are safe.
+        let mut out = match pool.as_deref_mut() {
+            Some(p) => p.take_floats_scratch(n),
+            None => vec![0f32; n],
+        };
+
+        let shards = self.effective_shards(num_groups);
+        if shards <= 1 {
+            let mut scratch = match pool.as_deref_mut() {
+                Some(p) => p.take_bytes_scratch(n),
+                None => vec![0u8; n],
+            };
+            unpack_range(&ct.packed, ct.bits, 0, &mut scratch);
+            for g in 0..num_groups {
+                let start = g * group_len;
+                let end = (start + group_len).min(n);
+                dequantize_block(
+                    &plan,
+                    ct.zeros[g],
+                    ct.ranges[g],
+                    &scratch[start..end],
+                    &mut out[start..end],
+                );
+            }
+            if let Some(p) = pool.as_deref_mut() {
+                p.put_bytes(scratch);
+            }
+        } else {
+            let groups_per_shard = num_groups.div_ceil(shards);
+            let chunk = groups_per_shard * group_len;
+            let shard_count = num_groups.div_ceil(groups_per_shard);
+            // Per-shard unpack scratch, drawn from the pool up front so
+            // the steady-state parallel path stays allocation-free too.
+            let mut scratches: Vec<Vec<u8>> = (0..shard_count)
+                .map(|i| {
+                    let len = chunk.min(n - i * chunk);
+                    match pool.as_deref_mut() {
+                        Some(p) => p.take_bytes_scratch(len),
+                        None => vec![0u8; len],
+                    }
+                })
+                .collect();
+            let plan = &plan;
+            let packed = ct.packed.as_slice();
+            let zeros = ct.zeros.as_slice();
+            let ranges = ct.ranges.as_slice();
+            let bits = ct.bits;
+            std::thread::scope(|s| {
+                for (idx, (((out_c, zeros_c), ranges_c), scratch)) in out
+                    .chunks_mut(chunk)
+                    .zip(zeros.chunks(groups_per_shard))
+                    .zip(ranges.chunks(groups_per_shard))
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                {
+                    s.spawn(move || {
+                        // Each shard unpacks only its own scalar range —
+                        // in-bounds by the packed-length check above.
+                        unpack_range(packed, bits, idx * chunk, scratch);
+                        for (j, (&z, &r)) in zeros_c.iter().zip(ranges_c).enumerate() {
+                            let lo = j * group_len;
+                            let hi = (lo + group_len).min(out_c.len());
+                            dequantize_block(
+                                plan,
+                                z,
+                                r,
+                                &scratch[lo..hi],
+                                &mut out_c[lo..hi],
+                            );
+                        }
+                    });
+                }
+            });
+            if let Some(p) = pool.as_deref_mut() {
+                for scratch in scratches {
+                    p.put_bytes(scratch);
+                }
+            }
+        }
+        Matrix::from_vec(rows, cols, out)
+    }
+}
+
+impl Default for QuantEngine {
+    /// Defaults to [`Self::auto`].
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.next_f32() * 4.0 - 2.0)
+    }
+
+    #[test]
+    fn effective_shards_respects_gating() {
+        let e = QuantEngine::from_config(&ParallelismConfig {
+            threads: 8,
+            min_blocks_per_shard: 100,
+        });
+        assert_eq!(e.effective_shards(50), 1); // too few blocks
+        assert_eq!(e.effective_shards(199), 1); // < 2 full shards
+        assert_eq!(e.effective_shards(200), 2);
+        assert_eq!(e.effective_shards(450), 4);
+        assert_eq!(e.effective_shards(10_000), 8); // capped by threads
+        assert_eq!(QuantEngine::serial().effective_shards(10_000), 1);
+    }
+
+    #[test]
+    fn auto_resolves_to_at_least_one_thread() {
+        assert!(QuantEngine::auto().threads() >= 1);
+        assert!(QuantEngine::with_threads(0).threads() >= 1);
+        assert_eq!(QuantEngine::with_threads(3).threads(), 3);
+    }
+
+    #[test]
+    fn parallel_quantize_matches_serial_across_widths() {
+        let h = sample_matrix(96, 32, 1); // 3072 scalars
+        for bits in [2u32, 4, 8] {
+            for group in [7usize, 32, 100] {
+                let a = QuantEngine::serial()
+                    .quantize_seeded(&h, group, bits, &BinSpec::Uniform, 99)
+                    .unwrap();
+                for threads in [2usize, 5, 8] {
+                    let b = QuantEngine::with_threads(threads)
+                        .quantize_seeded(&h, group, bits, &BinSpec::Uniform, 99)
+                        .unwrap();
+                    assert_eq!(a.packed, b.packed, "bits={bits} G={group} t={threads}");
+                    assert_eq!(a.zeros, b.zeros, "bits={bits} G={group} t={threads}");
+                    assert_eq!(a.ranges, b.ranges, "bits={bits} G={group} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_dequantize_matches_serial() {
+        let h = sample_matrix(64, 48, 2);
+        let ct = QuantEngine::serial()
+            .quantize_seeded(&h, 24, 2, &BinSpec::Uniform, 5)
+            .unwrap();
+        let a = QuantEngine::serial().dequantize(&ct).unwrap();
+        for threads in [2usize, 8] {
+            let b = QuantEngine::with_threads(threads).dequantize(&ct).unwrap();
+            assert_eq!(a.as_slice(), b.as_slice(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn vm_bins_parallel_matches_serial() {
+        let h = sample_matrix(40, 16, 3);
+        let bins = BinSpec::int2_vm(1.2, 1.8).unwrap();
+        let a = QuantEngine::serial()
+            .quantize_seeded(&h, 16, 2, &bins, 13)
+            .unwrap();
+        let b = QuantEngine::with_threads(4)
+            .quantize_seeded(&h, 16, 2, &bins, 13)
+            .unwrap();
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.zeros, b.zeros);
+    }
+
+    #[test]
+    fn pooled_calls_are_bit_identical_and_reuse_buffers() {
+        let h = sample_matrix(32, 32, 4);
+        let engine = QuantEngine::serial();
+        let seed = 0xabcdu64;
+        let plain = engine
+            .quantize_seeded(&h, 16, 2, &BinSpec::Uniform, seed)
+            .unwrap();
+        let mut pool = BufferPool::new();
+        let pooled = engine
+            .quantize_impl(&h, 16, 2, &BinSpec::Uniform, seed, Some(&mut pool))
+            .unwrap();
+        assert_eq!(plain.packed, pooled.packed);
+        assert_eq!(plain.zeros, pooled.zeros);
+        assert_eq!(plain.ranges, pooled.ranges);
+        let d1 = engine.dequantize(&pooled).unwrap();
+        let d2 = engine.dequantize_pooled(&pooled, &mut pool).unwrap();
+        assert_eq!(d1.as_slice(), d2.as_slice());
+        // Run again: the scratch buffers must now come from the pool.
+        let before = pool.stats().hits;
+        let again = engine
+            .quantize_impl(&h, 16, 2, &BinSpec::Uniform, seed, Some(&mut pool))
+            .unwrap();
+        assert_eq!(again.packed, plain.packed);
+        assert!(
+            pool.stats().hits > before,
+            "pool not reused: {:?}",
+            pool.stats()
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let empty = Matrix::zeros(0, 5);
+        let ct = QuantEngine::with_threads(4)
+            .quantize_seeded(&empty, 8, 2, &BinSpec::Uniform, 1)
+            .unwrap();
+        assert_eq!(ct.num_groups(), 0);
+        assert_eq!(ct.dequantize().unwrap().shape(), (0, 5));
+
+        let one = Matrix::from_vec(1, 1, vec![3.5]).unwrap();
+        let ct = QuantEngine::with_threads(8)
+            .quantize_seeded(&one, 4, 2, &BinSpec::Uniform, 1)
+            .unwrap();
+        assert_eq!(ct.dequantize().unwrap().as_slice(), &[3.5]);
+    }
+
+    #[test]
+    fn dequantize_rejects_malformed_tensors() {
+        let h = sample_matrix(8, 8, 5);
+        let good = QuantEngine::serial()
+            .quantize_seeded(&h, 8, 2, &BinSpec::Uniform, 2)
+            .unwrap();
+        let mut short = good.clone();
+        short.packed.truncate(1);
+        assert!(QuantEngine::serial().dequantize(&short).is_err());
+        let mut missing_meta = good.clone();
+        missing_meta.zeros.pop();
+        assert!(QuantEngine::serial().dequantize(&missing_meta).is_err());
+        let mut bad_bits = good;
+        bad_bits.bits = 3;
+        assert!(QuantEngine::serial().dequantize(&bad_bits).is_err());
+    }
+}

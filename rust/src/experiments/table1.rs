@@ -54,6 +54,7 @@ pub fn train_config(effort: Effort) -> TrainConfig {
             weight_decay: 0.0,
             seeds: vec![0, 1, 2],
             eval_every: 5,
+            ..TrainConfig::default()
         },
         Effort::Quick => TrainConfig {
             arch: crate::config::Arch::GraphSage,
@@ -64,6 +65,7 @@ pub fn train_config(effort: Effort) -> TrainConfig {
             weight_decay: 0.0,
             seeds: vec![0],
             eval_every: 5,
+            ..TrainConfig::default()
         },
     }
 }

@@ -11,13 +11,29 @@
 //! * **Layer 2** (build-time Python): JAX GCN/GraphSAGE forward/backward
 //!   with a compressed-activation `custom_vjp`, AOT-lowered to HLO text.
 //! * **Layer 3** (this crate): the training coordinator, the PJRT runtime
-//!   that loads and executes the AOT artifacts, and native-Rust
-//!   implementations of every substrate the paper depends on —
-//!   synthetic graph generation, the EXACT compression pipeline
-//!   (random projection + stochastic rounding), block-wise quantization,
-//!   the clipped-normal variance-minimization solver, the activation
-//!   memory model, and the experiment harness that regenerates every
-//!   table and figure in the paper.
+//!   that loads and executes the AOT artifacts (behind the `pjrt`
+//!   feature), and native-Rust implementations of every substrate the
+//!   paper depends on — synthetic graph generation, the EXACT compression
+//!   pipeline (random projection + stochastic rounding), block-wise
+//!   quantization, the clipped-normal variance-minimization solver, the
+//!   activation memory model, and the experiment harness that regenerates
+//!   every table and figure in the paper.
+//!
+//! ## Module map (paper equation → code)
+//!
+//! | Paper artifact | Module |
+//! |---|---|
+//! | Eq. 2/3 — affine quantize/dequantize with stochastic rounding | [`quant`] |
+//! | Eq. 6 — block-wise grouping `(N·R/G)` blocks of `G` scalars | [`quant::BlockwiseQuantizer`] |
+//! | Eq. 8–11 — non-uniform bins + unbiased SR | [`quant::BinSpec`], [`quant::stochastic_round`] |
+//! | Eq. 9/10 — SR variance and its clipped-normal expectation | [`varmin`] |
+//! | Eq. 10 minimization — optimal `(α*, β*)` via Nelder–Mead | [`varmin::optimal_boundaries`] |
+//! | Clipped-normal activation model `CN_{[1/D]}` | [`stats`] |
+//! | Table 1 memory column (analytic, byte-exact) | [`memory::MemoryModel`] |
+//! | Random projection `RP`/`IRP` (EXACT §3) | [`rp`] |
+//! | Compressed-training forward/backward | [`pipeline`] |
+//! | Parallel block-sharded execution engine | [`engine`] |
+//! | Table/figure regeneration harness | [`experiments`] |
 //!
 //! ## Quickstart
 //!
@@ -34,12 +50,27 @@
 //! println!("test accuracy = {:.4}", result.test_accuracy);
 //! ```
 //!
-//! See `examples/` for end-to-end drivers and `DESIGN.md` for the full
-//! system inventory.
+//! The analytic memory model is independent of training and cheap enough
+//! for doc-tests — this is the paper's >15% block-wise saving at
+//! `G/R = 64`:
+//!
+//! ```
+//! use iexact::prelude::*;
+//!
+//! let model = MemoryModel::new(2048, 128, 128, 3);
+//! let exact = model.total_mb(&QuantConfig::int2_exact()).unwrap();
+//! let blockwise = model.total_mb(&QuantConfig::int2_blockwise(64)).unwrap();
+//! assert!(blockwise < 0.85 * exact, "{blockwise} vs {exact}");
+//! ```
+//!
+//! See `examples/` for end-to-end drivers, the top-level `README.md` for
+//! the architecture diagram and paper-artifact mapping, and `DESIGN.md`
+//! for the full system inventory.
 
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod experiments;
 pub mod graph;
 pub mod linalg;
@@ -58,9 +89,12 @@ pub mod varmin;
 
 /// Commonly used types, re-exported for downstream convenience.
 pub mod prelude {
-    pub use crate::config::{DatasetSpec, ExperimentConfig, QuantConfig, QuantMode, TrainConfig};
+    pub use crate::config::{
+        DatasetSpec, ExperimentConfig, ParallelismConfig, QuantConfig, QuantMode, TrainConfig,
+    };
+    pub use crate::engine::QuantEngine;
     pub use crate::graph::{CsrMatrix, Dataset, GraphGenerator};
-    pub use crate::memory::MemoryModel;
+    pub use crate::memory::{BufferPool, MemoryModel};
     pub use crate::metrics::RunSummary;
     pub use crate::pipeline::{train, TrainResult};
     pub use crate::quant::{BlockwiseQuantizer, CompressedTensor, RowQuantizer};
@@ -72,20 +106,48 @@ pub mod prelude {
 }
 
 /// Crate-level error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
+    /// Tensor/shape mismatch between operands.
     Shape(String),
-    #[error("invalid configuration: {0}")]
+    /// Invalid or inconsistent configuration.
     Config(String),
-    #[error("artifact error: {0}")]
+    /// Malformed or missing AOT artifact.
     Artifact(String),
-    #[error("runtime error: {0}")]
+    /// PJRT/runtime execution failure.
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("numerical error: {0}")]
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Numerical-domain failure (NaN, divergence, empty baseline, …).
     Numerical(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

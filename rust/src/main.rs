@@ -42,6 +42,7 @@ TRAIN OPTIONS:
     --quant fp32|exact|vm|g<N>    (default: g8; g<N> = blockwise, G/R=N)
     --arch gcn|sage               (default: gcn)
     --sample <n>                  GraphSAINT-RN minibatch of n nodes/epoch
+    --threads <n>                 quantization-engine workers (0 = auto)
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
 
 TRAIN-AOT OPTIONS:
@@ -214,7 +215,7 @@ fn cmd_ablation(opts: &Opts) -> iexact::Result<()> {
 }
 
 fn cmd_train(opts: &Opts) -> iexact::Result<()> {
-    let cfg = if let Some(path) = opts.get("config") {
+    let mut cfg = if let Some(path) = opts.get("config") {
         ExperimentConfig::from_toml_file(std::path::Path::new(path))?
     } else {
         let dataset = DatasetSpec::by_name(
@@ -240,6 +241,15 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
             dataset_seed: 42,
         }
     };
+    // CLI override for the quantization engine's worker count (0 = auto).
+    // Unlike the free-form tuning flags, an unparsable value here is
+    // rejected — silently falling back to auto would look like the
+    // user's explicit setting took effect.
+    if let Some(t) = opts.get("threads") {
+        cfg.train.parallelism.threads = t.parse().map_err(|_| {
+            iexact::Error::Config(format!("--threads expects a non-negative integer, got '{t}'"))
+        })?;
+    }
     cfg.validate()?;
     let ds = cfg.dataset.generate(cfg.dataset_seed);
     eprintln!(

@@ -15,6 +15,12 @@
 //!
 //! The model is validated against the byte-exact [`CompressedTensor::nbytes`]
 //! of the native pipeline (see `tests`), so the Table 1 bench is auditable.
+//!
+//! This module also owns the runtime side of the memory story: the
+//! [`BufferPool`] that recycles per-layer packed/scratch buffers across
+//! training epochs, so the compressed path does no steady-state
+//! allocation (the quantization engine takes and returns its buffers
+//! here — see [`crate::engine::QuantEngine::quantize_pooled`]).
 
 use crate::config::{QuantConfig, QuantMode};
 use crate::{Error, Result};
@@ -158,6 +164,220 @@ impl MemoryModel {
     }
 }
 
+/// Counters describing how well a [`BufferPool`] is amortizing
+/// allocations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests served by a pooled buffer of sufficient capacity.
+    pub hits: u64,
+    /// Requests that had to allocate (or grow a too-small buffer).
+    pub misses: u64,
+    /// Bytes currently parked in the pool across both buffer kinds.
+    pub resident_bytes: usize,
+}
+
+/// Reusable-buffer pool for the quantization engine's packed INT2/INT4/
+/// INT8 buffers, unpack scratch, and dequantized activations.
+///
+/// Training quantizes and dequantizes the same layer shapes every epoch;
+/// without recycling, each step re-allocates (and re-faults) the same
+/// few megabytes. The pipeline owns one pool per training run, hands it
+/// to the engine on the forward pass (codes scratch + packed output) and
+/// the backward pass (unpack scratch + dequantized floats), and returns
+/// consumed stash buffers after each layer's gradients are computed.
+///
+/// Buffers are matched best-effort by capacity; the pool keeps at most
+/// [`Self::MAX_POOLED`] buffers of each kind and drops the rest, so
+/// residency stays bounded even under shape churn.
+///
+/// ```
+/// use iexact::memory::BufferPool;
+/// let mut pool = BufferPool::new();
+/// let buf = pool.take_bytes(1024); // first request: allocates
+/// pool.put_bytes(buf);
+/// let again = pool.take_bytes(512); // recycled, no fresh allocation
+/// assert!(again.capacity() >= 1024);
+/// assert_eq!(pool.stats().hits, 1);
+/// ```
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    bytes: Vec<Vec<u8>>,
+    floats: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl BufferPool {
+    /// Per-kind cap on parked buffers; excess returns are dropped.
+    pub const MAX_POOLED: usize = 64;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Index of the parked buffer to reuse for a request of `len`
+    /// elements: the smallest one that fits, else the largest available
+    /// (which then grows in place).
+    fn pick<T>(bufs: &[Vec<T>], len: usize) -> Option<(usize, bool)> {
+        let mut best_fit: Option<(usize, usize)> = None; // (idx, cap)
+        let mut largest: Option<(usize, usize)> = None;
+        for (i, b) in bufs.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best_fit.map_or(true, |(_, c)| cap < c) {
+                best_fit = Some((i, cap));
+            }
+            if largest.map_or(true, |(_, c)| cap > c) {
+                largest = Some((i, cap));
+            }
+        }
+        match (best_fit, largest) {
+            (Some((i, _)), _) => Some((i, true)),
+            (None, Some((i, _))) => Some((i, false)),
+            (None, None) => None,
+        }
+    }
+
+    /// A zero-filled byte buffer of exactly `len` elements.
+    pub fn take_bytes(&mut self, len: usize) -> Vec<u8> {
+        match Self::pick(&self.bytes, len) {
+            Some((i, fits)) => {
+                if fits {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                let mut b = self.bytes.swap_remove(i);
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// Like [`Self::take_bytes`] but with **unspecified contents** (stale
+    /// data from a previous use) — for kernel scratch whose every element
+    /// the caller overwrites. Skips the full zero-fill memset on the
+    /// recycled hot path; only a grown tail is zero-initialized.
+    pub fn take_bytes_scratch(&mut self, len: usize) -> Vec<u8> {
+        match Self::pick(&self.bytes, len) {
+            Some((i, fits)) => {
+                if fits {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                let mut b = self.bytes.swap_remove(i);
+                if b.len() > len {
+                    b.truncate(len);
+                } else {
+                    b.resize(len, 0);
+                }
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// An *empty* byte buffer with capacity for at least `cap` elements —
+    /// for append-style producers like
+    /// [`pack_codes_into`](crate::quant::pack_codes_into).
+    pub fn take_bytes_empty(&mut self, cap: usize) -> Vec<u8> {
+        match Self::pick(&self.bytes, cap) {
+            Some((i, fits)) => {
+                if fits {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                let mut b = self.bytes.swap_remove(i);
+                b.clear();
+                b.reserve(cap); // len is 0, so this guarantees capacity >= cap
+                b
+            }
+            None => {
+                self.misses += 1;
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a byte buffer to the pool.
+    pub fn put_bytes(&mut self, buf: Vec<u8>) {
+        if self.bytes.len() < Self::MAX_POOLED && buf.capacity() > 0 {
+            self.bytes.push(buf);
+        }
+    }
+
+    /// A zero-filled `f32` buffer of exactly `len` elements.
+    pub fn take_floats(&mut self, len: usize) -> Vec<f32> {
+        match Self::pick(&self.floats, len) {
+            Some((i, fits)) => {
+                if fits {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                let mut b = self.floats.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0f32; len]
+            }
+        }
+    }
+
+    /// Like [`Self::take_floats`] but with **unspecified contents** — see
+    /// [`Self::take_bytes_scratch`].
+    pub fn take_floats_scratch(&mut self, len: usize) -> Vec<f32> {
+        match Self::pick(&self.floats, len) {
+            Some((i, fits)) => {
+                if fits {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                let mut b = self.floats.swap_remove(i);
+                if b.len() > len {
+                    b.truncate(len);
+                } else {
+                    b.resize(len, 0.0);
+                }
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0f32; len]
+            }
+        }
+    }
+
+    /// Return an `f32` buffer to the pool.
+    pub fn put_floats(&mut self, buf: Vec<f32>) {
+        if self.floats.len() < Self::MAX_POOLED && buf.capacity() > 0 {
+            self.floats.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits,
+            misses: self.misses,
+            resident_bytes: self.bytes.iter().map(|b| b.capacity()).sum::<usize>()
+                + self.floats.iter().map(|b| 4 * b.capacity()).sum::<usize>(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +470,75 @@ mod tests {
         let mut q = QuantConfig::int2_exact();
         q.bits = 7;
         assert!(m.breakdown(&q).is_err());
+    }
+
+    #[test]
+    fn pool_reuses_and_zeroes_buffers() {
+        let mut pool = BufferPool::new();
+        let mut b = pool.take_bytes(100);
+        b.iter_mut().for_each(|v| *v = 0xff);
+        let ptr = b.as_ptr();
+        pool.put_bytes(b);
+        let b2 = pool.take_bytes(80);
+        assert_eq!(b2.as_ptr(), ptr, "allocation should be recycled");
+        assert!(b2.iter().all(|&v| v == 0), "recycled buffer must be zeroed");
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn pool_prefers_best_fit() {
+        let mut pool = BufferPool::new();
+        pool.put_bytes(Vec::with_capacity(1000));
+        pool.put_bytes(Vec::with_capacity(100));
+        let b = pool.take_bytes(64);
+        assert!(b.capacity() >= 64 && b.capacity() < 1000, "cap {}", b.capacity());
+    }
+
+    #[test]
+    fn pool_float_buffers_roundtrip() {
+        let mut pool = BufferPool::new();
+        let f = pool.take_floats(256);
+        assert_eq!(f.len(), 256);
+        pool.put_floats(f);
+        let f2 = pool.take_floats(256);
+        assert!(f2.iter().all(|&v| v == 0.0));
+        assert_eq!(pool.stats().hits, 1);
+        assert!(pool.stats().resident_bytes == 0);
+    }
+
+    #[test]
+    fn pool_residency_is_bounded() {
+        let mut pool = BufferPool::new();
+        for _ in 0..(2 * BufferPool::MAX_POOLED) {
+            pool.put_bytes(vec![0u8; 16]);
+        }
+        assert!(pool.stats().resident_bytes <= 16 * BufferPool::MAX_POOLED);
+    }
+
+    #[test]
+    fn scratch_takes_recycle_without_zeroing_guarantee() {
+        let mut pool = BufferPool::new();
+        pool.put_bytes(vec![0xab; 64]);
+        let b = pool.take_bytes_scratch(32);
+        assert_eq!(b.len(), 32);
+        assert_eq!(pool.stats().hits, 1);
+        pool.put_floats(vec![1.5; 16]);
+        let f = pool.take_floats_scratch(24);
+        assert_eq!(f.len(), 24);
+        // The grown tail must be initialized (the prefix is unspecified).
+        assert!(f[16..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_bytes_empty_has_capacity() {
+        let mut pool = BufferPool::new();
+        let b = pool.take_bytes_empty(300);
+        assert!(b.is_empty() && b.capacity() >= 300);
+        pool.put_bytes(b);
+        let b2 = pool.take_bytes_empty(200);
+        assert!(b2.is_empty() && b2.capacity() >= 300);
+        assert_eq!(pool.stats().hits, 1);
     }
 
     #[test]

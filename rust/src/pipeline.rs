@@ -13,10 +13,12 @@
 //! which the PJRT runtime executes for the AOT path.
 
 use crate::config::{Arch, QuantConfig, QuantMode, TrainConfig};
+use crate::engine::QuantEngine;
 use crate::graph::Dataset;
 use crate::linalg::{glorot_uniform, relu, softmax_cross_entropy, Adam, SignPattern};
+use crate::memory::BufferPool;
 use crate::metrics::{masked_accuracy, TrainCurve};
-use crate::quant::{quantize_grouped, BinSpec, CompressedTensor};
+use crate::quant::{BinSpec, CompressedTensor};
 use crate::rngs::Pcg64;
 use crate::rp::RandomProjection;
 use crate::stats::ClippedNormal;
@@ -192,12 +194,20 @@ struct StepOutput {
 }
 
 /// One full-batch training step with the configured compression.
+///
+/// Quantize/dequantize runs on `engine` (sharded across its worker
+/// threads) and recycles packed/scratch buffers through `pool`, so the
+/// compressed path does no steady-state allocation across epochs. The
+/// step is bit-identical for any engine configuration — per-block RNG
+/// streams make threading a pure speed knob.
 fn train_step(
     model: &GcnModel,
     ds: &Dataset,
     q: &QuantConfig,
     bins: &[BinSpec],
     rng: &mut Pcg64,
+    engine: &QuantEngine,
+    pool: &mut BufferPool,
 ) -> Result<StepOutput> {
     let last = model.num_layers() - 1;
     let compressed = !matches!(q.mode, QuantMode::Fp32);
@@ -226,20 +236,14 @@ fn train_step(
                     let (xs, xa) = x.split_cols(d)?;
                     let rp_self = RandomProjection::new(d, r_dim, rng)?;
                     let rp_agg = RandomProjection::new(d, r_dim, rng)?;
-                    let ct_self = quantize_grouped(
-                        &rp_self.project(&xs)?,
-                        glen,
-                        q.bits,
-                        &bins[l],
-                        rng,
-                    )?;
-                    let ct_agg = quantize_grouped(
-                        &rp_agg.project(&xa)?,
-                        glen,
-                        q.bits,
-                        &bins[l],
-                        rng,
-                    )?;
+                    let proj_self = rp_self.project(&xs)?;
+                    let ct_self =
+                        engine.quantize_pooled(&proj_self, glen, q.bits, &bins[l], rng, pool)?;
+                    pool.put_floats(proj_self.into_vec());
+                    let proj_agg = rp_agg.project(&xa)?;
+                    let ct_agg =
+                        engine.quantize_pooled(&proj_agg, glen, q.bits, &bins[l], rng, pool)?;
+                    pool.put_floats(proj_agg.into_vec());
                     stashes.push(Stash::CompressedSage {
                         ct_self,
                         rp_self,
@@ -253,8 +257,15 @@ fn train_step(
                     let r_dim = (d / q.proj_ratio).max(1);
                     let rp = RandomProjection::new(d, r_dim, rng)?;
                     let proj = rp.project(&x)?;
-                    let ct =
-                        quantize_grouped(&proj, group_len(q, r_dim), q.bits, &bins[l], rng)?;
+                    let ct = engine.quantize_pooled(
+                        &proj,
+                        group_len(q, r_dim),
+                        q.bits,
+                        &bins[l],
+                        rng,
+                        pool,
+                    )?;
+                    pool.put_floats(proj.into_vec());
                     if l == last {
                         stashes.push(Stash::CompressedLinear { ct, rp });
                     } else {
@@ -277,11 +288,15 @@ fn train_step(
     let (loss, dlogits) = softmax_cross_entropy(&h, &ds.labels, &ds.train_mask)?;
 
     // ---- Backward ----
+    // Stashes are consumed in reverse so each layer's packed buffers and
+    // reconstruction scratch return to the pool as soon as its gradients
+    // are done — peak memory stays one layer's worth above the stash.
     let mut grads: Vec<Matrix> = vec![Matrix::zeros(0, 0); model.num_layers()];
     let mut d_out = dlogits; // gradient wrt layer output
     for l in (0..model.num_layers()).rev() {
+        let stash = stashes.pop().expect("one stash per layer");
         // dP: through ReLU for hidden layers, identity for the last.
-        let d_pre = match &stashes[l] {
+        let d_pre = match &stash {
             Stash::Dense { pre, .. } if l != last => {
                 crate::linalg::relu_backward(&d_out, pre)?
             }
@@ -293,11 +308,22 @@ fn train_step(
             } => sp.apply_backward(&d_out)?,
             _ => d_out,
         };
-        // Reconstruct the stashed layer input X̂.
-        let x_hat = match &stashes[l] {
-            Stash::Dense { aggregated, .. } => aggregated.clone(),
+        // Reconstruct the stashed layer input X̂, recycling the consumed
+        // packed buffer. The tiny zeros/ranges vecs are deliberately NOT
+        // pooled: nothing draws metadata-sized floats back out, so they
+        // would only crowd the capped float-pool slots that the large
+        // projection/dequant/x̂ buffers need.
+        fn recycle_ct(ct: CompressedTensor, pool: &mut BufferPool) {
+            pool.put_bytes(ct.packed);
+        }
+        let x_hat = match stash {
+            Stash::Dense { aggregated, .. } => aggregated,
             Stash::Compressed { ct, rp, .. } | Stash::CompressedLinear { ct, rp } => {
-                rp.recover(&ct.dequantize()?)?
+                let deq = engine.dequantize_pooled(&ct, pool)?;
+                let rec = rp.recover(&deq)?;
+                pool.put_floats(deq.into_vec());
+                recycle_ct(ct, pool);
+                rec
             }
             Stash::CompressedSage {
                 ct_self,
@@ -306,13 +332,20 @@ fn train_step(
                 rp_agg,
                 ..
             } => {
-                let hs = rp_self.recover(&ct_self.dequantize()?)?;
-                let ha = rp_agg.recover(&ct_agg.dequantize()?)?;
+                let deq_self = engine.dequantize_pooled(&ct_self, pool)?;
+                let hs = rp_self.recover(&deq_self)?;
+                pool.put_floats(deq_self.into_vec());
+                recycle_ct(ct_self, pool);
+                let deq_agg = engine.dequantize_pooled(&ct_agg, pool)?;
+                let ha = rp_agg.recover(&deq_agg)?;
+                pool.put_floats(deq_agg.into_vec());
+                recycle_ct(ct_agg, pool);
                 hs.concat_cols(&ha)?
             }
         };
         // dΘ = X̂^T dP.
         grads[l] = x_hat.transpose_matmul(&d_pre)?;
+        pool.put_floats(x_hat.into_vec());
         // dH: GCN has X = Â H ⇒ dH = Â (dP Θ^T); GraphSAGE has
         // X = [H ‖ Â H] ⇒ dH = dX_left + Â dX_right.
         if l > 0 {
@@ -339,19 +372,37 @@ fn train_step(
 
 /// Public single-step API (used by the minibatch/sampling trainer):
 /// resolves bins from the config and runs one forward/backward pass,
-/// returning `(loss, grads, stash_bytes)`.
+/// returning `(loss, grads, stash_bytes)`. Runs on the serial engine
+/// with a throwaway buffer pool; long-lived drivers that want sharding
+/// and cross-step buffer reuse should use [`train_step_pooled`].
 pub fn train_step_public(
     model: &GcnModel,
     ds: &Dataset,
     q: &QuantConfig,
     rng: &mut Pcg64,
 ) -> Result<(f64, Vec<Matrix>, usize)> {
+    let mut pool = BufferPool::new();
+    train_step_pooled(model, ds, q, rng, &QuantEngine::serial(), &mut pool)
+}
+
+/// [`train_step_public`] on a caller-provided engine and pool: the
+/// quantize/dequantize block loops shard across the engine's workers and
+/// every packed/scratch buffer is recycled through `pool` across calls.
+/// Bit-identical to the serial path for the same `rng` state.
+pub fn train_step_pooled(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    rng: &mut Pcg64,
+    engine: &QuantEngine,
+    pool: &mut BufferPool,
+) -> Result<(f64, Vec<Matrix>, usize)> {
     let bins: Vec<BinSpec> = model
         .weights
         .iter()
         .map(|w| resolve_bins(q, (w.rows() / q.proj_ratio).max(1)))
         .collect::<Result<Vec<_>>>()?;
-    let out = train_step(model, ds, q, &bins, rng)?;
+    let out = train_step(model, ds, q, &bins, rng, engine, pool)?;
     Ok((out.loss, out.grads, out.stash_bytes))
 }
 
@@ -416,8 +467,16 @@ pub fn train(
     let mut stash_bytes = 0usize;
     let mut final_train_loss = f64::NAN;
 
+    // The quantization engine and buffer pool live for the whole run:
+    // threads are a pure speed knob (bit-identical results) and the pool
+    // recycles every per-layer packed/scratch buffer across epochs.
+    let engine = QuantEngine::from_config(&cfg.parallelism);
+    let mut pool = BufferPool::new();
+
     for epoch in 0..cfg.epochs {
-        let step = timer.lap(|| train_step(&model, dataset, quant, &bins, &mut rng))?;
+        let step = timer.lap(|| {
+            train_step(&model, dataset, quant, &bins, &mut rng, &engine, &mut pool)
+        })?;
         adam.step(&mut model.weights, &step.grads)?;
         stash_bytes = stash_bytes.max(step.stash_bytes);
         final_train_loss = step.loss;
@@ -472,8 +531,10 @@ pub fn capture_normalized_activations(
         .map(|_| BinSpec::Uniform)
         .collect();
     let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+    let engine = QuantEngine::from_config(&cfg.parallelism);
+    let mut pool = BufferPool::new();
     for _ in 0..cfg.epochs {
-        let step = train_step(&model, dataset, quant, &bins, &mut rng)?;
+        let step = train_step(&model, dataset, quant, &bins, &mut rng, &engine, &mut pool)?;
         adam.step(&mut model.weights, &step.grads)?;
     }
 
@@ -529,6 +590,7 @@ mod tests {
             weight_decay: 0.0,
             seeds: vec![0],
             eval_every: 5,
+            ..TrainConfig::default()
         }
     }
 
@@ -598,6 +660,56 @@ mod tests {
     }
 
     #[test]
+    fn training_is_invariant_to_thread_count() {
+        // The engine's per-block RNG streams make threading a pure speed
+        // knob: a whole training run must be bit-identical at 1 vs 8
+        // worker threads, with shard gating disabled so fan-out happens
+        // even at tiny scale.
+        use crate::config::ParallelismConfig;
+        let ds = tiny_ds();
+        let mut serial_cfg = fast_cfg();
+        serial_cfg.epochs = 8;
+        serial_cfg.parallelism = ParallelismConfig::serial();
+        let mut parallel_cfg = serial_cfg.clone();
+        parallel_cfg.parallelism = ParallelismConfig {
+            threads: 8,
+            min_blocks_per_shard: 1,
+        };
+        for quant in [QuantConfig::int2_blockwise(4), QuantConfig::int2_exact()] {
+            let a = train(&ds, &quant, &serial_cfg, 5).unwrap();
+            let b = train(&ds, &quant, &parallel_cfg, 5).unwrap();
+            assert_eq!(a.final_train_loss, b.final_train_loss, "{}", quant.label());
+            assert_eq!(a.test_accuracy, b.test_accuracy, "{}", quant.label());
+            assert_eq!(a.best_val_loss, b.best_val_loss, "{}", quant.label());
+        }
+    }
+
+    #[test]
+    fn pooled_steps_match_public_steps() {
+        // Cross-step buffer recycling must not change results.
+        let ds = tiny_ds();
+        let mut rng_init = Pcg64::new(31);
+        let model =
+            GcnModel::init(ds.num_features(), 16, ds.num_classes, 2, &mut rng_init).unwrap();
+        let q = QuantConfig::int2_blockwise(4);
+        let engine = QuantEngine::with_threads(2);
+        let mut pool = BufferPool::new();
+        let mut r1 = Pcg64::new(77);
+        let mut r2 = Pcg64::new(77);
+        for _ in 0..3 {
+            let a = train_step_public(&model, &ds, &q, &mut r1).unwrap();
+            let b =
+                train_step_pooled(&model, &ds, &q, &mut r2, &engine, &mut pool).unwrap();
+            assert_eq!(a.0, b.0, "loss must match bit-exactly");
+            for (ga, gb) in a.1.iter().zip(&b.1) {
+                assert_eq!(ga.as_slice(), gb.as_slice());
+            }
+            assert_eq!(a.2, b.2);
+        }
+        assert!(pool.stats().hits > 0, "pool should recycle across steps");
+    }
+
+    #[test]
     fn loss_decreases() {
         let ds = tiny_ds();
         let res = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 3).unwrap();
@@ -660,14 +772,18 @@ mod tests {
                 .unwrap();
         let q = QuantConfig::fp32();
         let bins = vec![BinSpec::Uniform; 2];
-        let base = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+        let engine = QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        let base = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
         let eps = 2e-2f32;
         for &(r, c) in &[(0usize, 0usize), (5, 3), (20, 7)] {
             let orig = model.weights[0].get(r, c);
             model.weights[0].set(r, c, orig + eps);
-            let plus = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            let plus =
+                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
             model.weights[0].set(r, c, orig - eps);
-            let minus = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            let minus =
+                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
             model.weights[0].set(r, c, orig);
             let fd = ((plus.loss - minus.loss) / (2.0 * eps as f64)) as f32;
             let an = base.grads[0].get(r, c);
@@ -709,7 +825,10 @@ mod tests {
             .unwrap();
         let q_fp = QuantConfig::fp32();
         let bins_fp = vec![BinSpec::Uniform; 2];
-        let fp = train_step(&model, &ds, &q_fp, &bins_fp, &mut rng).unwrap();
+        let engine = QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        let fp =
+            train_step(&model, &ds, &q_fp, &bins_fp, &mut rng, &engine, &mut pool).unwrap();
 
         let q = QuantConfig::int2_exact();
         let bins = vec![BinSpec::Uniform; 2];
@@ -720,7 +839,7 @@ mod tests {
             .collect();
         let trials = 60;
         for _ in 0..trials {
-            let s = train_step(&model, &ds, &q, &bins, &mut rng).unwrap();
+            let s = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
             for (a, g) in acc.iter_mut().zip(&s.grads) {
                 a.axpy(1.0, g).unwrap();
             }

@@ -13,6 +13,33 @@
 //!   `(zero-point, range)` pair.
 //! * **INT2/INT4/INT8 bit-packing** so a compressed tensor's `nbytes()`
 //!   is byte-exact — this is what the Table 1 memory column audits.
+//!
+//! ## Execution model
+//!
+//! Every quantization group is independent — one `(Z, r)` pair, one slice
+//! of codes — so the flat block list is embarrassingly parallel. The
+//! per-block kernels in this module (driving [`quantize_grouped_seeded`]
+//! and the dequantization LUT loop) draw their stochastic-rounding
+//! randomness from a *per-block* stream
+//! [`Pcg64::with_stream`]`(seed, block_index)`, which makes the output a
+//! pure function of `(input, layout, seed)`. The multi-threaded engine in
+//! [`crate::engine`] exploits this: sharding blocks across
+//! `std::thread::scope` workers produces bit-identical results to the
+//! serial path at any thread count.
+//!
+//! ```
+//! use iexact::quant::BlockwiseQuantizer;
+//! use iexact::rngs::Pcg64;
+//! use iexact::tensor::Matrix;
+//!
+//! let mut rng = Pcg64::new(0);
+//! let h = Matrix::from_fn(4, 16, |_, _| rng.next_f32());
+//! // INT2, blocks of G = 16 scalars (Eq. 6).
+//! let q = BlockwiseQuantizer::new(2, 16);
+//! let ct = q.quantize(&h, &mut rng).unwrap();
+//! assert_eq!(ct.num_groups(), 4);
+//! assert_eq!(ct.dequantize().unwrap().shape(), (4, 16));
+//! ```
 
 use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
@@ -29,7 +56,14 @@ pub enum BinSpec {
 }
 
 impl BinSpec {
-    /// The INT2 variance-minimized layout `[0, α, β, 3]`.
+    /// The INT2 variance-minimized layout `[0, α, β, 3]` (Eq. 8, the
+    /// boundaries solved for by [`crate::varmin::optimal_boundaries`]).
+    ///
+    /// ```
+    /// use iexact::quant::BinSpec;
+    /// assert!(BinSpec::int2_vm(1.2, 1.8).is_ok());
+    /// assert!(BinSpec::int2_vm(1.8, 1.2).is_err()); // needs α < β
+    /// ```
     pub fn int2_vm(alpha: f64, beta: f64) -> Result<Self> {
         if !(0.0 < alpha && alpha < beta && beta < 3.0) {
             return Err(Error::Config(format!(
@@ -112,31 +146,50 @@ pub fn stochastic_round_uniform(h: f64, b_max: u32, rng: &mut Pcg64) -> u8 {
 
 /// Pack `bits`-wide codes (values `0..2^bits`) into bytes, LSB-first.
 /// Supported widths: 2, 4, 8.
+///
+/// ```
+/// use iexact::quant::{pack_codes, unpack_codes};
+/// let codes = vec![0u8, 1, 2, 3, 3];
+/// let packed = pack_codes(&codes, 2).unwrap(); // 2 bits/code → 2 bytes
+/// assert_eq!(packed.len(), 2);
+/// assert_eq!(unpack_codes(&packed, 2, 5).unwrap(), codes);
+/// ```
 pub fn pack_codes(codes: &[u8], bits: u32) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    pack_codes_into(codes, bits, &mut out)?;
+    Ok(out)
+}
+
+/// [`pack_codes`] into a caller-provided buffer (cleared first) so the
+/// packed allocation can be recycled through a
+/// [`crate::memory::BufferPool`].
+pub fn pack_codes_into(codes: &[u8], bits: u32, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     match bits {
-        2 => Ok(codes
-            .chunks(4)
-            .map(|c| {
+        2 => {
+            out.reserve(codes.len().div_ceil(4));
+            for c in codes.chunks(4) {
                 let mut byte = 0u8;
                 for (i, &v) in c.iter().enumerate() {
                     byte |= (v & 0b11) << (2 * i);
                 }
-                byte
-            })
-            .collect()),
-        4 => Ok(codes
-            .chunks(2)
-            .map(|c| {
+                out.push(byte);
+            }
+        }
+        4 => {
+            out.reserve(codes.len().div_ceil(2));
+            for c in codes.chunks(2) {
                 let mut byte = 0u8;
                 for (i, &v) in c.iter().enumerate() {
                     byte |= (v & 0b1111) << (4 * i);
                 }
-                byte
-            })
-            .collect()),
-        8 => Ok(codes.to_vec()),
-        _ => Err(Error::Config(format!("unsupported bit width {bits}"))),
+                out.push(byte);
+            }
+        }
+        8 => out.extend_from_slice(codes),
+        _ => return Err(Error::Config(format!("unsupported bit width {bits}"))),
     }
+    Ok(())
 }
 
 /// Inverse of [`pack_codes`]; `n` is the original code count.
@@ -175,6 +228,33 @@ pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Unpack `out.len()` codes starting at scalar index `start`, without
+/// materializing the whole code array — each parallel dequantization
+/// shard unpacks only its own contiguous range. Since every supported
+/// width divides 8, codes never straddle byte boundaries.
+///
+/// Callers must pre-validate that `packed` holds at least
+/// `start + out.len()` codes; out-of-range access panics (the engine
+/// checks once per tensor before fanning out).
+pub(crate) fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    match bits {
+        2 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let idx = start + i;
+                *o = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
+            }
+        }
+        4 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let idx = start + i;
+                *o = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
+            }
+        }
+        8 => out.copy_from_slice(&packed[start..start + out.len()]),
+        _ => unreachable!("bit width validated before unpacking"),
+    }
+}
+
 /// A quantized activation tensor: packed integer codes plus per-group
 /// `(zero-point, range)` metadata. This is exactly what would live in GPU
 /// memory during the forward pass, so its [`nbytes`](Self::nbytes) is the
@@ -211,53 +291,195 @@ impl CompressedTensor {
     /// Dequantize back to a dense matrix (Eq. 3), mapping each stored code
     /// through its boundary position: `ĥ = r · a_k / B + Z`.
     ///
-    /// Hot path: iterates group-by-group (no per-element `idx / group_len`
-    /// division) with a per-group level LUT, so the inner loop is a pure
-    /// table lookup + store.
+    /// Runs on the serial engine; use
+    /// [`QuantEngine::dequantize`](crate::engine::QuantEngine::dequantize)
+    /// to shard the group loop across threads — the result is
+    /// bit-identical either way.
     pub fn dequantize(&self) -> Result<Matrix> {
-        let (rows, cols) = self.shape;
-        let n = rows * cols;
-        let codes = unpack_codes(&self.packed, self.bits, n)?;
-        let boundaries = self.bins.boundaries(self.bits);
-        let b_max = (boundaries.len() - 1) as f32;
-        // Normalized boundary positions a_k / B (≤ 256 entries).
-        let norm: Vec<f32> = boundaries.iter().map(|&a| a as f32 / b_max).collect();
-        let mut out = vec![0.0f32; n];
-        let levels_small = norm.len() <= 16;
-        let uniform = matches!(self.bins, BinSpec::Uniform);
-        let mut lut = [0.0f32; 16];
-        for (g, chunk) in codes.chunks(self.group_len).enumerate() {
-            let z = self.zeros[g];
-            let r = self.ranges[g];
-            let base = g * self.group_len;
-            if levels_small {
-                // Per-group level table: ĥ = z + r·a_k/B precomputed.
-                for (k, &p) in norm.iter().enumerate() {
-                    lut[k] = z + r * p;
-                }
-                for (i, &code) in chunk.iter().enumerate() {
-                    out[base + i] = lut[code as usize];
-                }
-            } else if uniform {
-                // INT8 uniform: a_k/B = k/B ⇒ ĥ = z + k·(r/B).
-                let w = r / b_max;
-                for (i, &code) in chunk.iter().enumerate() {
-                    out[base + i] = z + code as f32 * w;
-                }
-            } else {
-                // Wide non-uniform layouts: general boundary lookup.
-                for (i, &code) in chunk.iter().enumerate() {
-                    out[base + i] = z + r * norm[code as usize];
-                }
-            }
-        }
-        Matrix::from_vec(rows, cols, out)
+        crate::engine::QuantEngine::serial().dequantize(self)
     }
+}
+
+/// Dequantization lookup state resolved once per tensor and shared by
+/// every worker: normalized boundary positions `a_k / B` plus which
+/// inner-loop specialization applies.
+#[derive(Debug, Clone)]
+pub(crate) struct DequantPlan {
+    norm: Vec<f32>,
+    b_max: f32,
+    uniform: bool,
+}
+
+impl DequantPlan {
+    pub(crate) fn resolve(bits: u32, bins: &BinSpec) -> DequantPlan {
+        let boundaries = bins.boundaries(bits);
+        let b_max = (boundaries.len() - 1) as f32;
+        DequantPlan {
+            // Normalized boundary positions a_k / B (≤ 256 entries).
+            norm: boundaries.iter().map(|&a| a as f32 / b_max).collect(),
+            b_max,
+            uniform: matches!(bins, BinSpec::Uniform),
+        }
+    }
+}
+
+/// Dequantize one group's codes into `out` (Eq. 3 on a single `(Z, r)`
+/// block). Hot path: a per-group level LUT so the inner loop is a pure
+/// table lookup + store — no per-element `idx / group_len` division.
+pub(crate) fn dequantize_block(
+    plan: &DequantPlan,
+    z: f32,
+    r: f32,
+    codes: &[u8],
+    out: &mut [f32],
+) {
+    if plan.norm.len() <= 16 {
+        // Per-group level table: ĥ = z + r·a_k/B precomputed.
+        let mut lut = [0.0f32; 16];
+        for (k, &p) in plan.norm.iter().enumerate() {
+            lut[k] = z + r * p;
+        }
+        for (o, &code) in out.iter_mut().zip(codes) {
+            *o = lut[code as usize];
+        }
+    } else if plan.uniform {
+        // INT8 uniform: a_k/B = k/B ⇒ ĥ = z + k·(r/B).
+        let w = r / plan.b_max;
+        for (o, &code) in out.iter_mut().zip(codes) {
+            *o = z + code as f32 * w;
+        }
+    } else {
+        // Wide non-uniform layouts: general boundary lookup.
+        for (o, &code) in out.iter_mut().zip(codes) {
+            *o = z + r * plan.norm[code as usize];
+        }
+    }
+}
+
+/// Quantization state resolved (and validated) once per tensor: bit
+/// width, bin boundaries, and which inner-loop specialization applies.
+/// Shared read-only by every worker of the parallel engine.
+#[derive(Debug, Clone)]
+pub(crate) struct QuantPlan {
+    pub(crate) b_max: u32,
+    pub(crate) boundaries: Vec<f64>,
+    pub(crate) uniform: bool,
+}
+
+impl QuantPlan {
+    pub(crate) fn resolve(bits: u32, bins: &BinSpec, group_len: usize) -> Result<QuantPlan> {
+        if group_len == 0 {
+            return Err(Error::Config("group_len must be positive".into()));
+        }
+        if !matches!(bits, 2 | 4 | 8) {
+            return Err(Error::Config(format!("unsupported bit width {bits}")));
+        }
+        bins.validate(bits)?;
+        Ok(QuantPlan {
+            b_max: (1u32 << bits) - 1,
+            boundaries: bins.boundaries(bits),
+            uniform: matches!(bins, BinSpec::Uniform),
+        })
+    }
+}
+
+/// Quantize one independent block (Eq. 2 on a single group): computes the
+/// block's `(Z, r)`, stochastically rounds every scalar into `out`, and
+/// returns the `(zero, range)` pair. Infallible — validation happens once
+/// in [`QuantPlan::resolve`], which is what lets the engine run this
+/// kernel inside worker threads without error plumbing.
+pub(crate) fn quantize_block(
+    plan: &QuantPlan,
+    block: &[f32],
+    out: &mut [u8],
+    rng: &mut Pcg64,
+) -> (f32, f32) {
+    let b_max = plan.b_max;
+    let boundaries = &plan.boundaries;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in block {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let range = hi - lo;
+    if range <= 0.0 {
+        // Constant block: every code is 0, dequantizing to Z exactly.
+        // Written explicitly so recycled (non-zeroed) buffers are safe.
+        out.fill(0);
+        return (lo, range);
+    }
+    if plan.uniform {
+        // Hot path: SR in the integer domain — `floor + (u32 rand <
+        // frac·2³²)` — no f64 math, and each 64-bit RNG draw feeds
+        // two scalars (both halves are independent uniform u32s).
+        let scale = b_max as f32 / range;
+        let mut buffered: u64 = 0;
+        let mut have_half = false;
+        for (o, &v) in out.iter_mut().zip(block) {
+            let hbar = (v - lo) * scale; // in [0, B]
+            let fl = hbar as u32; // trunc == floor (hbar >= 0)
+            let frac = hbar - fl as f32;
+            let threshold = (frac * 4294967296.0) as u32;
+            let r = if have_half {
+                have_half = false;
+                (buffered & 0xffff_ffff) as u32
+            } else {
+                buffered = rng.next_u64();
+                have_half = true;
+                (buffered >> 32) as u32
+            };
+            let up = r < threshold;
+            *o = (fl + up as u32).min(b_max) as u8;
+        }
+    } else if boundaries.len() == 4 {
+        // INT2 variance-minimized bins [0, α, β, 3]: branch-free bin
+        // select (two compares) + integer-domain SR, mirroring the
+        // Pallas VM kernel's vectorized form.
+        let scale = b_max as f32 / range;
+        let (a, b) = (boundaries[1] as f32, boundaries[2] as f32);
+        let starts = [0.0f32, a, b];
+        let inv_scaled = [
+            4294967296.0 / a,
+            4294967296.0 / (b - a),
+            4294967296.0 / (3.0 - b),
+        ];
+        let mut buffered: u64 = 0;
+        let mut have_half = false;
+        for (o, &v) in out.iter_mut().zip(block) {
+            let hbar = ((v - lo) * scale).clamp(0.0, 3.0);
+            let ge_a = (hbar >= a) as u32;
+            let ge_b = (hbar >= b) as u32;
+            let i = (ge_a + ge_b) as usize; // bin index 0..=2
+            let threshold = ((hbar - starts[i]) * inv_scaled[i]) as u32;
+            let r = if have_half {
+                have_half = false;
+                (buffered & 0xffff_ffff) as u32
+            } else {
+                buffered = rng.next_u64();
+                have_half = true;
+                (buffered >> 32) as u32
+            };
+            let up = (r < threshold) as u32;
+            *o = (i as u32 + up).min(3) as u8;
+        }
+    } else {
+        let scale = b_max as f64 / range as f64;
+        for (o, &v) in out.iter_mut().zip(block) {
+            let hbar = (v - lo) as f64 * scale;
+            *o = stochastic_round(hbar, boundaries, rng);
+        }
+    }
+    (lo, range)
 }
 
 /// Core grouped quantizer (Eq. 2 + Eq. 6): flattens the matrix row-major,
 /// splits into `group_len` chunks, computes per-group `(Z, r)` and
 /// stochastically rounds the normalized values onto the bin boundaries.
+///
+/// Randomness is seed-addressed: one draw from `rng` keys the per-block
+/// streams (see [`quantize_grouped_seeded`]), so the caller's generator
+/// advances by exactly one `u64` regardless of tensor size or threading.
 pub fn quantize_grouped(
     h: &Matrix,
     group_len: usize,
@@ -265,114 +487,23 @@ pub fn quantize_grouped(
     bins: &BinSpec,
     rng: &mut Pcg64,
 ) -> Result<CompressedTensor> {
-    if group_len == 0 {
-        return Err(Error::Config("group_len must be positive".into()));
-    }
-    if !matches!(bits, 2 | 4 | 8) {
-        return Err(Error::Config(format!("unsupported bit width {bits}")));
-    }
-    bins.validate(bits)?;
-    let data = h.as_slice();
-    let n = data.len();
-    let num_groups = n.div_ceil(group_len);
-    let b_max = (1u32 << bits) - 1;
-    let boundaries = bins.boundaries(bits);
-    let uniform = matches!(bins, BinSpec::Uniform);
+    quantize_grouped_seeded(h, group_len, bits, bins, rng.next_u64())
+}
 
-    let mut zeros = Vec::with_capacity(num_groups);
-    let mut ranges = Vec::with_capacity(num_groups);
-    let mut codes = vec![0u8; n];
-
-    for g in 0..num_groups {
-        let start = g * group_len;
-        let end = (start + group_len).min(n);
-        let block = &data[start..end];
-        let out = &mut codes[start..end];
-        let mut lo = f32::INFINITY;
-        let mut hi = f32::NEG_INFINITY;
-        for &v in block {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-        let range = hi - lo;
-        zeros.push(lo);
-        ranges.push(range);
-        if range <= 0.0 {
-            // Constant block: codes stay 0, dequantizing to Z exactly.
-            continue;
-        }
-        if uniform {
-            // Hot path: SR in the integer domain — `floor + (u32 rand <
-            // frac·2³²)` — no f64 math, and each 64-bit RNG draw feeds
-            // two scalars (both halves are independent uniform u32s).
-            let scale = b_max as f32 / range;
-            let mut buffered: u64 = 0;
-            let mut have_half = false;
-            for (o, &v) in out.iter_mut().zip(block) {
-                let hbar = (v - lo) * scale; // in [0, B]
-                let fl = hbar as u32; // trunc == floor (hbar >= 0)
-                let frac = hbar - fl as f32;
-                let threshold = (frac * 4294967296.0) as u32;
-                let r = if have_half {
-                    have_half = false;
-                    (buffered & 0xffff_ffff) as u32
-                } else {
-                    buffered = rng.next_u64();
-                    have_half = true;
-                    (buffered >> 32) as u32
-                };
-                let up = r < threshold;
-                *o = (fl + up as u32).min(b_max) as u8;
-            }
-        } else if boundaries.len() == 4 {
-            // INT2 variance-minimized bins [0, α, β, 3]: branch-free bin
-            // select (two compares) + integer-domain SR, mirroring the
-            // Pallas VM kernel's vectorized form.
-            let scale = b_max as f32 / range;
-            let (a, b) = (boundaries[1] as f32, boundaries[2] as f32);
-            let starts = [0.0f32, a, b];
-            let inv_scaled = [
-                4294967296.0 / a,
-                4294967296.0 / (b - a),
-                4294967296.0 / (3.0 - b),
-            ];
-            let mut buffered: u64 = 0;
-            let mut have_half = false;
-            for (o, &v) in out.iter_mut().zip(block) {
-                let hbar = ((v - lo) * scale).clamp(0.0, 3.0);
-                let ge_a = (hbar >= a) as u32;
-                let ge_b = (hbar >= b) as u32;
-                let i = (ge_a + ge_b) as usize; // bin index 0..=2
-                let threshold = ((hbar - starts[i]) * inv_scaled[i]) as u32;
-                let r = if have_half {
-                    have_half = false;
-                    (buffered & 0xffff_ffff) as u32
-                } else {
-                    buffered = rng.next_u64();
-                    have_half = true;
-                    (buffered >> 32) as u32
-                };
-                let up = (r < threshold) as u32;
-                *o = (i as u32 + up).min(3) as u8;
-            }
-        } else {
-            let scale = b_max as f64 / range as f64;
-            for (o, &v) in out.iter_mut().zip(block) {
-                let hbar = (v - lo) as f64 * scale;
-                *o = stochastic_round(hbar, &boundaries, rng);
-            }
-        }
-    }
-
-    Ok(CompressedTensor {
-        packed: pack_codes(&codes, bits)?,
-        zeros,
-        ranges,
-        shape: h.shape(),
-        group_len,
-        bits,
-        bins: bins.clone(),
-    })
+/// Seed-addressed grouped quantization: block `g` draws its randomness
+/// from the deterministic stream [`Pcg64::with_stream`]`(seed, g)`, so
+/// the output is a pure function of `(h, layout, seed)` — independent of
+/// execution order, and therefore bit-identical whether the block loop
+/// runs serially or sharded across threads
+/// ([`crate::engine::QuantEngine`]).
+pub fn quantize_grouped_seeded(
+    h: &Matrix,
+    group_len: usize,
+    bits: u32,
+    bins: &BinSpec,
+    seed: u64,
+) -> Result<CompressedTensor> {
+    crate::engine::QuantEngine::serial().quantize_seeded(h, group_len, bits, bins, seed)
 }
 
 /// EXACT-style per-row quantizer: one `(Z, r)` pair per node embedding
@@ -398,6 +529,18 @@ impl RowQuantizer {
 
     pub fn quantize(&self, h: &Matrix, rng: &mut Pcg64) -> Result<CompressedTensor> {
         quantize_grouped(h, h.cols(), self.bits, &self.bins, rng)
+    }
+
+    /// Quantize on a caller-provided execution engine: the per-row groups
+    /// are sharded across its worker threads, bit-identical to
+    /// [`Self::quantize`] for the same `rng` state.
+    pub fn quantize_on(
+        &self,
+        engine: &crate::engine::QuantEngine,
+        h: &Matrix,
+        rng: &mut Pcg64,
+    ) -> Result<CompressedTensor> {
+        engine.quantize(h, h.cols(), self.bits, &self.bins, rng)
     }
 }
 
@@ -430,6 +573,18 @@ impl BlockwiseQuantizer {
 
     pub fn quantize(&self, h: &Matrix, rng: &mut Pcg64) -> Result<CompressedTensor> {
         quantize_grouped(h, self.group_len, self.bits, &self.bins, rng)
+    }
+
+    /// Quantize on a caller-provided execution engine: the flat block
+    /// list is sharded across its worker threads, bit-identical to
+    /// [`Self::quantize`] for the same `rng` state.
+    pub fn quantize_on(
+        &self,
+        engine: &crate::engine::QuantEngine,
+        h: &Matrix,
+        rng: &mut Pcg64,
+    ) -> Result<CompressedTensor> {
+        engine.quantize(h, self.group_len, self.bits, &self.bins, rng)
     }
 }
 

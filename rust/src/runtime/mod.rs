@@ -6,6 +6,12 @@
 //! rejects; the text parser reassigns ids and round-trips cleanly (see
 //! /opt/xla-example/README.md). Python never runs on the request path —
 //! after `make artifacts` the rust binary is self-contained.
+//!
+//! The PJRT client itself lives behind the **`pjrt` cargo feature** (it
+//! needs the external `xla` crate, which is not vendored). Without the
+//! feature, manifest parsing, artifact listing and shape validation all
+//! work natively; [`Runtime::load`]/[`Runtime::execute`] return a
+//! [`Error::Runtime`] explaining how to enable compilation.
 
 mod artifacts;
 
@@ -19,6 +25,7 @@ use std::path::{Path, PathBuf};
 /// A compiled executable plus its manifest metadata.
 pub struct LoadedModule {
     pub entry: ArtifactEntry,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -32,9 +39,12 @@ pub struct ExecStats {
 /// The PJRT runtime: one CPU client, a cache of compiled executables, and
 /// per-module execution stats.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     dir: PathBuf,
     manifest: Manifest,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     modules: HashMap<String, LoadedModule>,
     stats: HashMap<String, ExecStats>,
 }
@@ -45,9 +55,11 @@ impl Runtime {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e:?}")))?;
         Ok(Runtime {
+            #[cfg(feature = "pjrt")]
             client,
             dir,
             manifest,
@@ -60,11 +72,18 @@ impl Runtime {
         &self.manifest
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
     /// Compile (or fetch from cache) the named artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
         if !self.modules.contains_key(name) {
             let entry = self
@@ -89,8 +108,42 @@ impl Runtime {
         Ok(&self.modules[name])
     }
 
+    /// Without the `pjrt` feature, compilation is unavailable: manifest
+    /// and artifact-file lookups still run (so missing-artifact errors
+    /// stay precise), then an explanatory [`Error::Runtime`] is returned.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named '{name}'")))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "artifact file missing: {}",
+                path.display()
+            )));
+        }
+        Err(Error::Runtime(format!(
+            "cannot compile '{name}': built without the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt` and a local `xla` crate)"
+        )))
+    }
+
     /// Execute a loaded module on f32 matrices. The module must have been
     /// lowered with `return_tuple=True`; outputs are returned in order.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&mut self, name: &str, _inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        self.load(name)?;
+        Err(Error::Runtime(format!(
+            "cannot execute '{name}': built without the `pjrt` feature"
+        )))
+    }
+
+    /// Execute a loaded module on f32 matrices. The module must have been
+    /// lowered with `return_tuple=True`; outputs are returned in order.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&mut self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
         self.load(name)?;
         let module = &self.modules[name];

@@ -150,6 +150,8 @@ pub fn train_sampled(
     quant.validate()?;
     cfg.validate()?;
     parent.validate()?;
+    let engine = crate::engine::QuantEngine::from_config(&cfg.parallelism);
+    let mut pool = crate::memory::BufferPool::new();
     let mut rng = Pcg64::new(seed ^ 0x5a3e);
     let mut model = GcnModel::init_arch(
         cfg.arch,
@@ -170,7 +172,9 @@ pub fn train_sampled(
     for epoch in 0..cfg.epochs {
         let sub = sample_nodes(parent, n_sample, &mut rng)?;
         let step = timer.lap(|| {
-            crate::pipeline::train_step_public(&model, &sub.data, quant, &mut rng)
+            crate::pipeline::train_step_pooled(
+                &model, &sub.data, quant, &mut rng, &engine, &mut pool,
+            )
         })?;
         adam.step(&mut model.weights, &step.1)?;
         stash_bytes = stash_bytes.max(step.2);

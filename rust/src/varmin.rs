@@ -25,6 +25,14 @@ use crate::{Error, Result};
 ///
 /// Only the bin containing `h` contributes: inside bin `i`,
 /// `Var = δ_i (h − a_{i-1}) − (h − a_{i-1})²`.
+///
+/// ```
+/// use iexact::varmin::sr_variance;
+/// let uniform = [0.0, 1.0, 2.0, 3.0];
+/// // Zero on boundaries, maximal (δ²/4) at bin centers.
+/// assert_eq!(sr_variance(2.0, &uniform), 0.0);
+/// assert!((sr_variance(0.5, &uniform) - 0.25).abs() < 1e-12);
+/// ```
 pub fn sr_variance(h: f64, boundaries: &[f64]) -> f64 {
     let b = boundaries.len() - 1;
     let h = h.clamp(boundaries[0], boundaries[b]);
@@ -115,6 +123,18 @@ impl OptimalBoundaries {
 /// `(μ − δ0, μ + δ0)`; invalid points (α ≥ β or outside `(0, B)`) get an
 /// infinite penalty. The objective is smooth and unimodal in practice
 /// (Fig. 3), so convergence is fast and robust.
+///
+/// ```
+/// use iexact::stats::ClippedNormal;
+/// use iexact::varmin::optimal_boundaries;
+/// // Activations projected to R = 16 dims: CN_{[1/16]}.
+/// let cn = ClippedNormal::new(2, 16).unwrap();
+/// let opt = optimal_boundaries(&cn).unwrap();
+/// // The optimized bins beat uniform [0,1,2,3] and keep the paper's
+/// // μ = B/2 symmetry: α* + β* = 3.
+/// assert!(opt.variance < opt.uniform_variance);
+/// assert!((opt.alpha + opt.beta - 3.0).abs() < 1e-3);
+/// ```
 pub fn optimal_boundaries(cn: &ClippedNormal) -> Result<OptimalBoundaries> {
     let b = cn.b;
     let objective = |p: [f64; 2]| -> f64 {

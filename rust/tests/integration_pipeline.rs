@@ -17,6 +17,7 @@ fn cfg(epochs: usize) -> TrainConfig {
         weight_decay: 0.0,
         seeds: vec![0],
         eval_every: 5,
+        ..TrainConfig::default()
     }
 }
 
