@@ -45,6 +45,43 @@ fn main() {
         );
     }
 
+    // ---- Adaptive bit allocation, end to end ----
+    // Fixed INT2 vs greedy allocation at the same average budget: the
+    // adaptive arm pays a periodic stats pass + re-solve plus the
+    // mixed-width kernels; bytes stay within budget by construction.
+    use iexact::config::{AllocStrategy, AllocationConfig};
+    println!("\n# adaptive allocation (blockwise G/R=8, avg budget = 2 bits)");
+    println!("{:<24} {:>14} {:>12}", "allocation", "ms/epoch", "epochs/s");
+    let quant = iexact::config::QuantConfig::int2_blockwise(8);
+    for (label, allocation) in [
+        ("fixed int2", AllocationConfig::default()),
+        (
+            "greedy b=2/epoch4",
+            AllocationConfig {
+                strategy: AllocStrategy::Greedy,
+                budget_bits: 2.0,
+                realloc_interval_epochs: 4,
+                min_bits: 1,
+                max_bits: 8,
+            },
+        ),
+    ] {
+        let mut acfg = cfg.clone();
+        acfg.allocation = allocation;
+        let (_, med, _) = measure(1, 3, || {
+            std::hint::black_box(
+                iexact::pipeline::train(&dataset, &quant, &acfg, 0).unwrap(),
+            );
+        });
+        let per_epoch = med / acfg.epochs as f64;
+        println!(
+            "{:<24} {:>14.2} {:>12.2}",
+            label,
+            per_epoch * 1e3,
+            1.0 / per_epoch
+        );
+    }
+
     // ---- Quantization-engine threading, end to end ----
     // Same training step, same numbers (bit-identical by construction) —
     // only the wall clock may differ. Shard gating is disabled so the

@@ -81,6 +81,53 @@ fn main() {
         "-"
     );
 
+    // ---- Adaptive bit allocation (heterogeneous-width engine path) ----
+    // Fixed INT2 vs a greedy plan at the same average 2-bit budget on a
+    // block-heterogeneous snapshot: same bytes, lower dequant error, and
+    // this arm shows what the mixed-width quantize/dequant loop costs.
+    println!("\n# adaptive allocation: 2048 blocks of 64, avg budget = 2 bits");
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "config", "median ms", "Mscalar/s", "bytes"
+    );
+    let (hh, plan) = iexact::experiments::allocation::sweep_plan(2.0, 2048, 64).unwrap();
+    let hetero_scalars = hh.len() as f64;
+    let engine = QuantEngine::serial();
+    {
+        let mut rng = Pcg64::new(7);
+        let mut nbytes = 0;
+        let (_, med, _) = measure(3, 10, || {
+            let ct = engine
+                .quantize(&hh, 64, 2, &BinSpec::Uniform, &mut rng)
+                .unwrap();
+            nbytes = ct.nbytes();
+            std::hint::black_box(engine.dequantize(&ct).unwrap());
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            "fixed int2 quant+dequant",
+            med * 1e3,
+            hetero_scalars / med / 1e6,
+            nbytes
+        );
+    }
+    {
+        let mut rng = Pcg64::new(7);
+        let mut nbytes = 0;
+        let (_, med, _) = measure(3, 10, || {
+            let pt = engine.quantize_planned(&hh, &plan, &mut rng).unwrap();
+            nbytes = pt.nbytes();
+            std::hint::black_box(engine.dequantize_planned(&pt).unwrap());
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            format!("adaptive plan (avg {:.2}b)", plan.avg_bits()),
+            med * 1e3,
+            hetero_scalars / med / 1e6,
+            nbytes
+        );
+    }
+
     // ---- Parallel engine thread-scaling sweep ----
     // A bench-scale tensor with a large flat block list (32768 blocks) so
     // sharding has real work to amortize the scoped-thread spawns.

@@ -1,0 +1,629 @@
+//! Adaptive per-block bit allocation driven by the improved variance
+//! model.
+//!
+//! The paper's variance analysis (§3.2, [`crate::varmin`]) is computed
+//! per *layer* but — until this module — every block was still quantized
+//! at one fixed width. ActNN (Chen et al., 2021) showed that spending a
+//! **heterogeneous** bit budget according to per-group sensitivity beats
+//! any fixed width, and GACT generalized that allocation loop. This
+//! module closes the gap for the block-wise scheme of Eq. 6:
+//!
+//! 1. [`BlockStats`] measures each block's dynamic range `r_g` on a
+//!    fresh activation snapshot (the only per-block quantity the
+//!    dequantization variance depends on).
+//! 2. [`BitAllocator`] solves the constrained budget problem
+//!
+//!    ```text
+//!    minimize   Σ_g  r_g² · L_g · κ_D(b_g)          (total dequant variance)
+//!    subject to Σ_g  L_g · b_g  ≤  b̄ · N           (average-bits budget)
+//!               b_g ∈ {1, 2, 4, 8} ∩ [min_bits, max_bits]
+//!    ```
+//!
+//!    where `κ_D(b) = E_CN[Var(SR)] / B_b²` is the per-scalar noise of a
+//!    `b`-bit quantizer under the paper's clipped-normal activation model
+//!    `CN_{[1/D]}` ([`crate::varmin::expected_uniform_variance`]), *not*
+//!    the naive uniform-activation `δ²/6` — this is where the improved
+//!    variance model steers compression. The solver is the greedy
+//!    water-filling scheme ActNN uses: start every block at `min_bits`
+//!    and repeatedly apply the upgrade with the best
+//!    variance-reduction-per-bit until the budget is exhausted. Marginal
+//!    gains are decreasing in `b`, so greedy is exchange-optimal up to
+//!    one block's worth of bits.
+//! 3. The result is a [`BitPlan`] — one width per block — that
+//!    [`crate::engine::QuantEngine::quantize_planned`] executes,
+//!    producing a [`PlannedTensor`] whose packed codes are
+//!    bit-width-heterogeneous.
+//!
+//! See `docs/bit-allocation.md` for the derivation and a worked example.
+//!
+//! ## Packed format
+//!
+//! Block `g` of a [`BitPlan`] occupies `(L_g · b_g).div_ceil(8)` bytes
+//! starting at the byte offset [`BitPlan::offsets`]`[g]` — every block is
+//! **byte-aligned** (widths 1/2/4/8 all divide 8, and any partial final
+//! byte is zero-padded), so blocks pack and unpack independently and the
+//! parallel engine can hand each shard a disjoint `&mut` byte range.
+//!
+//! ## Determinism
+//!
+//! A plan never touches the RNG: block `g` still draws its
+//! stochastic-rounding randomness from `Pcg64::with_stream(seed, g)`
+//! exactly as the fixed-width path does, so serial and parallel runs are
+//! bit-identical under **any** `BitPlan` (enforced by
+//! `tests/parallel_determinism.rs`).
+//!
+//! ```
+//! use iexact::alloc::{BitAllocator, BlockStats};
+//!
+//! // Four blocks of 8 scalars; one has 16x the dynamic range of the
+//! // rest. At an average budget of 2 bits/scalar the greedy solver
+//! // funds the wide block by downgrading the flat ones.
+//! let stats = BlockStats {
+//!     ranges: vec![0.1, 0.1, 0.1, 1.6],
+//!     group_len: 8,
+//!     n_scalars: 32,
+//!     model_d: 8,
+//! };
+//! let plan = BitAllocator::new(2.0, 1, 8).unwrap().allocate(&stats).unwrap();
+//! assert_eq!(plan.num_blocks(), 4);
+//! assert!(plan.avg_bits() <= 2.0 + 1e-9);
+//! assert!(plan.bit(3) > plan.bit(0)); // range-heavy block got more bits
+//! ```
+
+use crate::stats::ClippedNormal;
+use crate::tensor::Matrix;
+use crate::varmin::expected_uniform_variance;
+use crate::{Error, Result};
+
+/// The bit widths a plan may assign. Each divides 8, so blocks stay
+/// byte-aligned; 1-bit is allocator-only (the fixed-width config surface
+/// remains 2/4/8).
+pub const SUPPORTED_WIDTHS: [u32; 4] = [1, 2, 4, 8];
+
+fn width_supported(b: u32) -> bool {
+    SUPPORTED_WIDTHS.contains(&b)
+}
+
+/// Per-block bit widths for one tensor — the contract between the
+/// allocator and the execution engine.
+///
+/// Invariants (enforced by [`BitPlan::new`], fields are private):
+/// every width is one of [`SUPPORTED_WIDTHS`], and `group_len >= 1`.
+/// The plan is laid out over the tensor's flat row-major block list
+/// exactly like fixed-width grouping (Eq. 6): block `g` covers scalars
+/// `[g·G, min((g+1)·G, N))`, so only the final block may be ragged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlan {
+    bits: Vec<u8>,
+    group_len: usize,
+}
+
+impl BitPlan {
+    /// Validated construction from explicit per-block widths.
+    pub fn new(bits: Vec<u8>, group_len: usize) -> Result<Self> {
+        if group_len == 0 {
+            return Err(Error::Config("bit plan group_len must be positive".into()));
+        }
+        if let Some(&bad) = bits.iter().find(|&&b| !width_supported(b as u32)) {
+            return Err(Error::Config(format!(
+                "bit plan width must be one of {SUPPORTED_WIDTHS:?}, got {bad}"
+            )));
+        }
+        Ok(BitPlan { bits, group_len })
+    }
+
+    /// A plan that assigns the same width to every block — the planned
+    /// path's equivalent of fixed-width quantization (and bit-identical
+    /// to it, see `tests/bit_allocation.rs`).
+    pub fn uniform(bits: u32, num_blocks: usize, group_len: usize) -> Result<Self> {
+        if !width_supported(bits) {
+            return Err(Error::Config(format!(
+                "bit plan width must be one of {SUPPORTED_WIDTHS:?}, got {bits}"
+            )));
+        }
+        Self::new(vec![bits as u8; num_blocks], group_len)
+    }
+
+    /// Number of blocks covered by the plan.
+    pub fn num_blocks(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Scalars per block (the final block may hold fewer).
+    pub fn group_len(&self) -> usize {
+        self.group_len
+    }
+
+    /// Width assigned to block `g`.
+    pub fn bit(&self, g: usize) -> u32 {
+        self.bits[g] as u32
+    }
+
+    /// All per-block widths.
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
+    }
+
+    /// Block-mean width. Exact as a scalar average when every block is
+    /// full (`N` divisible by `group_len`); off by at most the final
+    /// ragged block's share otherwise.
+    pub fn avg_bits(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.bits.len() as f64
+    }
+
+    /// Byte offset of every block in the packed buffer for a tensor of
+    /// `n_scalars`, plus the total as a final entry (`num_blocks + 1`
+    /// entries). Errors if the plan does not cover `n_scalars`.
+    pub fn offsets(&self, n_scalars: usize) -> Result<Vec<usize>> {
+        let nb = self.bits.len();
+        if n_scalars.div_ceil(self.group_len) != nb {
+            return Err(Error::Shape(format!(
+                "plan has {nb} blocks but {n_scalars} scalars at G={} need {}",
+                self.group_len,
+                n_scalars.div_ceil(self.group_len)
+            )));
+        }
+        let mut offsets = Vec::with_capacity(nb + 1);
+        let mut acc = 0usize;
+        for (g, &b) in self.bits.iter().enumerate() {
+            offsets.push(acc);
+            let lo = g * self.group_len;
+            let len = self.group_len.min(n_scalars - lo);
+            acc += (len * b as usize).div_ceil(8);
+        }
+        offsets.push(acc);
+        Ok(offsets)
+    }
+
+    /// Total packed-code bytes for a tensor of `n_scalars`.
+    pub fn packed_bytes(&self, n_scalars: usize) -> Result<usize> {
+        Ok(*self.offsets(n_scalars)?.last().expect("offsets non-empty"))
+    }
+}
+
+/// Per-block activation statistics — the allocator's input, measured on
+/// a (projected) activation snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockStats {
+    /// Dynamic range `r_g = max(block) − min(block)` per block.
+    pub ranges: Vec<f32>,
+    /// Scalars per block (final block may be ragged).
+    pub group_len: usize,
+    /// Total scalars covered (`ranges.len() == n_scalars.div_ceil(group_len)`).
+    pub n_scalars: usize,
+    /// Dimensionality `D` for the clipped-normal model `CN_{[1/D]}` —
+    /// the projected width `R` of the layer the snapshot came from.
+    pub model_d: usize,
+}
+
+impl BlockStats {
+    /// Measure per-block ranges of `h` under flat row-major grouping,
+    /// with `model_d` taken from the matrix width.
+    pub fn measure(h: &Matrix, group_len: usize) -> Result<Self> {
+        if group_len == 0 {
+            return Err(Error::Config("group_len must be positive".into()));
+        }
+        let data = h.as_slice();
+        let ranges = data
+            .chunks(group_len)
+            .map(|block| {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &v in block {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                if block.is_empty() {
+                    0.0
+                } else {
+                    hi - lo
+                }
+            })
+            .collect();
+        Ok(BlockStats {
+            ranges,
+            group_len,
+            n_scalars: data.len(),
+            model_d: h.cols(),
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.group_len == 0 {
+            return Err(Error::Config("group_len must be positive".into()));
+        }
+        if self.ranges.len() != self.n_scalars.div_ceil(self.group_len) {
+            return Err(Error::Shape(format!(
+                "{} ranges but {} scalars at G={} need {}",
+                self.ranges.len(),
+                self.n_scalars,
+                self.group_len,
+                self.n_scalars.div_ceil(self.group_len)
+            )));
+        }
+        Ok(())
+    }
+
+    /// Length in scalars of block `g`.
+    fn block_len(&self, g: usize) -> usize {
+        self.group_len.min(self.n_scalars - g * self.group_len)
+    }
+}
+
+/// One pending upgrade in the greedy queue, ordered by
+/// variance-reduction per bit (ties broken toward the lower block index
+/// so allocation is fully deterministic).
+#[derive(Debug)]
+struct Upgrade {
+    priority: f64,
+    cost_bits: f64,
+    block: usize,
+    /// Index into the width ladder this upgrade moves the block *to*.
+    to_step: usize,
+}
+
+impl PartialEq for Upgrade {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Upgrade {}
+impl PartialOrd for Upgrade {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Upgrade {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Priorities are finite by construction (ranges and κ are finite).
+        self.priority
+            .partial_cmp(&other.priority)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.block.cmp(&self.block))
+    }
+}
+
+/// Greedy water-filling solver for the constrained bit-budget problem
+/// (module docs): start every block at `min_bits`, then repeatedly apply
+/// the upgrade with the largest marginal variance reduction per bit that
+/// still fits the budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitAllocator {
+    /// Average-bits budget `b̄` (bits per stored scalar).
+    pub budget_bits: f64,
+    /// Lowest width any block may receive (one of 1/2/4/8).
+    pub min_bits: u32,
+    /// Highest width any block may receive (one of 1/2/4/8).
+    pub max_bits: u32,
+}
+
+impl BitAllocator {
+    /// Validated construction. `budget_bits` must lie in
+    /// `[min_bits, max_bits]`, and both bounds must be supported widths.
+    pub fn new(budget_bits: f64, min_bits: u32, max_bits: u32) -> Result<Self> {
+        if !width_supported(min_bits) || !width_supported(max_bits) {
+            return Err(Error::Config(format!(
+                "allocator widths must be one of {SUPPORTED_WIDTHS:?}, got min={min_bits} max={max_bits}"
+            )));
+        }
+        if min_bits > max_bits {
+            return Err(Error::Config(format!(
+                "allocator needs min_bits <= max_bits, got {min_bits} > {max_bits}"
+            )));
+        }
+        if !(budget_bits >= min_bits as f64 && budget_bits <= max_bits as f64) {
+            return Err(Error::Config(format!(
+                "budget_bits must lie in [{min_bits}, {max_bits}], got {budget_bits}"
+            )));
+        }
+        Ok(BitAllocator {
+            budget_bits,
+            min_bits,
+            max_bits,
+        })
+    }
+
+    /// The width ladder this allocator may climb.
+    fn ladder(&self) -> Vec<u32> {
+        SUPPORTED_WIDTHS
+            .iter()
+            .copied()
+            .filter(|&w| w >= self.min_bits && w <= self.max_bits)
+            .collect()
+    }
+
+    /// Per-scalar dequantization-noise factor `κ_D(b)` for each ladder
+    /// width: the clipped-normal expected SR variance at `b` bits,
+    /// rescaled from the normalized `[0, B]` grid to the dequantized
+    /// scale by `1/B²` (Eq. 3 multiplies codes by `r/B`).
+    fn kappa(&self, ladder: &[u32], model_d: usize) -> Result<Vec<f64>> {
+        ladder
+            .iter()
+            .map(|&w| {
+                let cn = ClippedNormal::new(w, model_d.max(4))?;
+                let b = cn.b;
+                Ok(expected_uniform_variance(&cn)? / (b * b))
+            })
+            .collect()
+    }
+
+    /// Solve for a [`BitPlan`] given fresh per-block statistics.
+    ///
+    /// The returned plan always satisfies
+    /// `min_bits <= b_g <= max_bits` and
+    /// `Σ L_g b_g <= budget_bits · n_scalars`; on termination no further
+    /// upgrade fits, so the unspent budget is smaller than one block's
+    /// largest single upgrade (see `tests/bit_allocation.rs`).
+    pub fn allocate(&self, stats: &BlockStats) -> Result<BitPlan> {
+        stats.validate()?;
+        let nb = stats.ranges.len();
+        let ladder = self.ladder();
+        if nb == 0 {
+            return BitPlan::new(Vec::new(), stats.group_len);
+        }
+        let kappa = self.kappa(&ladder, stats.model_d)?;
+
+        // Everybody starts on the bottom rung; the max(0) guards against
+        // f64 rounding when budget_bits == min_bits exactly.
+        let mut step = vec![0usize; nb];
+        let spent: f64 = (0..nb)
+            .map(|g| self.min_bits as f64 * stats.block_len(g) as f64)
+            .sum();
+        let mut remaining = (self.budget_bits * stats.n_scalars as f64 - spent).max(0.0);
+
+        let candidate = |g: usize, to_step: usize| -> Upgrade {
+            let len = stats.block_len(g) as f64;
+            let r = stats.ranges[g] as f64;
+            let gain = r * r * len * (kappa[to_step - 1] - kappa[to_step]);
+            let cost = (ladder[to_step] - ladder[to_step - 1]) as f64 * len;
+            Upgrade {
+                priority: if cost > 0.0 { gain / cost } else { 0.0 },
+                cost_bits: cost,
+                block: g,
+                to_step,
+            }
+        };
+
+        let mut heap = std::collections::BinaryHeap::with_capacity(nb);
+        if ladder.len() > 1 {
+            for g in 0..nb {
+                heap.push(candidate(g, 1));
+            }
+        }
+        while let Some(up) = heap.pop() {
+            if up.cost_bits <= remaining + 1e-9 {
+                remaining -= up.cost_bits;
+                step[up.block] = up.to_step;
+                if up.to_step + 1 < ladder.len() {
+                    heap.push(candidate(up.block, up.to_step + 1));
+                }
+            }
+            // An unaffordable upgrade is discarded: the budget only
+            // shrinks, so it can never become affordable later. Cheaper
+            // upgrades still in the heap keep getting considered.
+        }
+
+        let bits = step.iter().map(|&s| ladder[s] as u8).collect();
+        BitPlan::new(bits, stats.group_len)
+    }
+}
+
+/// A quantized tensor under a heterogeneous [`BitPlan`]: per-block
+/// byte-aligned packed codes plus the same `(zero, range)` metadata as
+/// [`crate::quant::CompressedTensor`]. Produced by
+/// [`crate::engine::QuantEngine::quantize_planned`].
+#[derive(Debug, Clone)]
+pub struct PlannedTensor {
+    /// Packed codes, block `g` at bytes
+    /// `plan.offsets(n)[g]..plan.offsets(n)[g + 1]`.
+    pub packed: Vec<u8>,
+    /// Per-block zero points.
+    pub zeros: Vec<f32>,
+    /// Per-block ranges.
+    pub ranges: Vec<f32>,
+    /// Original (rows, cols).
+    pub shape: (usize, usize),
+    /// The per-block width assignment this tensor was quantized under.
+    pub plan: BitPlan,
+}
+
+impl PlannedTensor {
+    /// Total compressed footprint in bytes: packed codes + FP32 metadata.
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() + 4 * (self.zeros.len() + self.ranges.len())
+    }
+
+    /// Number of quantization blocks.
+    pub fn num_groups(&self) -> usize {
+        self.zeros.len()
+    }
+
+    /// Dequantize on the serial engine (Eq. 3 per block, at each block's
+    /// own width). Use
+    /// [`QuantEngine::dequantize_planned`](crate::engine::QuantEngine::dequantize_planned)
+    /// to shard across threads — bit-identical either way.
+    pub fn dequantize(&self) -> Result<Matrix> {
+        crate::engine::QuantEngine::serial().dequantize_planned(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    fn hetero_stats(nb: usize, group_len: usize, seed: u64) -> BlockStats {
+        // Log-scale spread of block ranges so allocation has teeth.
+        let mut rng = Pcg64::new(seed);
+        let ranges = (0..nb)
+            .map(|_| (rng.next_normal() * 1.2).exp() as f32)
+            .collect();
+        BlockStats {
+            ranges,
+            group_len,
+            n_scalars: nb * group_len,
+            model_d: 16,
+        }
+    }
+
+    #[test]
+    fn plan_construction_validates() {
+        assert!(BitPlan::new(vec![1, 2, 4, 8], 16).is_ok());
+        assert!(BitPlan::new(vec![3], 16).is_err());
+        assert!(BitPlan::new(vec![2], 0).is_err());
+        assert!(BitPlan::uniform(5, 4, 16).is_err());
+        let p = BitPlan::uniform(2, 10, 32).unwrap();
+        assert_eq!(p.num_blocks(), 10);
+        assert_eq!(p.avg_bits(), 2.0);
+    }
+
+    #[test]
+    fn offsets_are_byte_aligned_and_ragged_aware() {
+        // 3 blocks of 12 scalars over 30 scalars: lens 12, 12, 6.
+        let p = BitPlan::new(vec![1, 4, 8], 12).unwrap();
+        let off = p.offsets(30).unwrap();
+        // 12*1 bits -> 2 bytes; 12*4 -> 6 bytes; 6*8 -> 6 bytes.
+        assert_eq!(off, vec![0, 2, 8, 14]);
+        assert_eq!(p.packed_bytes(30).unwrap(), 14);
+        // Coverage mismatch is rejected.
+        assert!(p.offsets(100).is_err());
+    }
+
+    #[test]
+    fn allocator_validates_inputs() {
+        assert!(BitAllocator::new(2.0, 1, 8).is_ok());
+        assert!(BitAllocator::new(2.0, 3, 8).is_err()); // bad width
+        assert!(BitAllocator::new(2.0, 4, 2).is_err()); // min > max
+        assert!(BitAllocator::new(0.5, 1, 8).is_err()); // budget < min
+        assert!(BitAllocator::new(9.0, 1, 8).is_err()); // budget > max
+    }
+
+    #[test]
+    fn uniform_ranges_reproduce_fixed_width() {
+        // Equal sensitivities + integer budget => the plan collapses to
+        // the fixed width (greedy has no reason to differentiate).
+        let stats = BlockStats {
+            ranges: vec![1.0; 16],
+            group_len: 8,
+            n_scalars: 128,
+            model_d: 8,
+        };
+        let plan = BitAllocator::new(2.0, 1, 8).unwrap().allocate(&stats).unwrap();
+        assert!(plan.bits().iter().all(|&b| b == 2), "{:?}", plan.bits());
+    }
+
+    #[test]
+    fn budget_is_respected_and_nearly_exhausted() {
+        for budget in [1.0f64, 1.5, 2.0, 3.0, 4.0, 6.5, 8.0] {
+            let stats = hetero_stats(64, 16, 7);
+            let plan = BitAllocator::new(budget, 1, 8).unwrap().allocate(&stats).unwrap();
+            let avg = plan.avg_bits();
+            assert!(avg <= budget + 1e-9, "budget {budget}: avg {avg}");
+            // Either saturated at max everywhere or within one block's
+            // largest upgrade (4 bits/block avg over 64 blocks).
+            let saturated = plan.bits().iter().all(|&b| b as u32 == 8);
+            assert!(
+                saturated || budget - avg <= 4.0 / 64.0 + 1e-9,
+                "budget {budget}: avg {avg} leaves too much unspent"
+            );
+        }
+    }
+
+    #[test]
+    fn min_max_bounds_are_hard() {
+        let stats = hetero_stats(32, 16, 9);
+        let plan = BitAllocator::new(3.0, 2, 4).unwrap().allocate(&stats).unwrap();
+        assert!(plan.bits().iter().all(|&b| b == 2 || b == 4));
+    }
+
+    #[test]
+    fn wider_ranges_get_at_least_as_many_bits() {
+        let stats = hetero_stats(48, 32, 11);
+        let plan = BitAllocator::new(2.0, 1, 8).unwrap().allocate(&stats).unwrap();
+        // Allocation must be monotone in range: sort blocks by range and
+        // check widths are non-decreasing along it.
+        let mut order: Vec<usize> = (0..48).collect();
+        order.sort_by(|&a, &b| stats.ranges[a].partial_cmp(&stats.ranges[b]).unwrap());
+        for w in order.windows(2) {
+            assert!(
+                plan.bit(w[0]) <= plan.bit(w[1]),
+                "block {} (r={}) got {} bits but block {} (r={}) got {}",
+                w[0],
+                stats.ranges[w[0]],
+                plan.bit(w[0]),
+                w[1],
+                stats.ranges[w[1]],
+                plan.bit(w[1])
+            );
+        }
+    }
+
+    #[test]
+    fn measure_matches_manual_ranges() {
+        let h = Matrix::from_vec(2, 4, vec![0.0, 1.0, -1.0, 3.0, 5.0, 5.0, 2.0, 8.0])
+            .unwrap();
+        let stats = BlockStats::measure(&h, 4).unwrap();
+        assert_eq!(stats.ranges, vec![4.0, 6.0]);
+        assert_eq!(stats.n_scalars, 8);
+        assert_eq!(stats.model_d, 4);
+        assert!(BlockStats::measure(&h, 0).is_err());
+    }
+
+    #[test]
+    fn empty_input_gives_empty_plan() {
+        let stats = BlockStats {
+            ranges: vec![],
+            group_len: 8,
+            n_scalars: 0,
+            model_d: 8,
+        };
+        let plan = BitAllocator::new(2.0, 1, 8).unwrap().allocate(&stats).unwrap();
+        assert_eq!(plan.num_blocks(), 0);
+        assert_eq!(plan.avg_bits(), 0.0);
+    }
+
+    #[test]
+    fn inconsistent_stats_rejected() {
+        let stats = BlockStats {
+            ranges: vec![1.0; 3],
+            group_len: 8,
+            n_scalars: 100, // needs 13 blocks, not 3
+            model_d: 8,
+        };
+        assert!(BitAllocator::new(2.0, 1, 8)
+            .unwrap()
+            .allocate(&stats)
+            .is_err());
+    }
+
+    #[test]
+    fn allocation_reduces_model_variance_vs_fixed_at_equal_budget() {
+        // The greedy objective value must not exceed the fixed-width
+        // point at the same budget (uniform INT2 is feasible).
+        let stats = hetero_stats(128, 16, 13);
+        let alloc = BitAllocator::new(2.0, 1, 8).unwrap();
+        let plan = alloc.allocate(&stats).unwrap();
+        let ladder = vec![1u32, 2, 4, 8];
+        let kappa = alloc.kappa(&ladder, stats.model_d).unwrap();
+        let objective = |widths: &[u8]| -> f64 {
+            widths
+                .iter()
+                .enumerate()
+                .map(|(g, &b)| {
+                    let k = kappa[ladder.iter().position(|&w| w == b as u32).unwrap()];
+                    let r = stats.ranges[g] as f64;
+                    r * r * stats.block_len(g) as f64 * k
+                })
+                .sum()
+        };
+        let adaptive = objective(plan.bits());
+        let fixed2 = objective(&vec![2u8; 128]);
+        assert!(
+            adaptive < fixed2,
+            "adaptive {adaptive} should beat fixed INT2 {fixed2} on heterogeneous blocks"
+        );
+    }
+}

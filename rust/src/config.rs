@@ -2,6 +2,7 @@
 //! training and sweeps, plus a dependency-free TOML-subset loader so
 //! experiments are reproducible from checked-in config files.
 
+use crate::alloc::SUPPORTED_WIDTHS;
 use crate::graph::{Dataset, GraphGenerator};
 use crate::util::toml::TomlTable;
 use crate::{Error, Result};
@@ -102,19 +103,24 @@ impl QuantConfig {
             QuantMode::Fp32 => Ok(()),
             _ => {
                 if !matches!(self.bits, 2 | 4 | 8) {
-                    return Err(Error::Config(format!("bits must be 2/4/8, got {}", self.bits)));
+                    return Err(Error::Config(format!(
+                        "quant.bits must be 2/4/8, got {}",
+                        self.bits
+                    )));
                 }
                 if self.proj_ratio == 0 {
-                    return Err(Error::Config("proj_ratio must be >= 1".into()));
+                    return Err(Error::Config("quant.proj_ratio must be >= 1".into()));
                 }
                 if let QuantMode::BlockWise { group_ratio } = self.mode {
                     if group_ratio == 0 {
-                        return Err(Error::Config("group_ratio must be >= 1".into()));
+                        return Err(Error::Config("quant.group_ratio must be >= 1".into()));
                     }
                 }
                 if matches!(self.mode, QuantMode::RowWiseVm) && self.bits != 2 {
                     return Err(Error::Config(
-                        "variance minimization is derived for INT2 only".into(),
+                        "quant.mode = 'vm' requires quant.bits = 2 \
+                         (variance minimization is derived for INT2 only)"
+                            .into(),
                     ));
                 }
                 Ok(())
@@ -226,6 +232,134 @@ impl ParallelismConfig {
     }
 }
 
+/// How per-block bit widths are chosen — the `[allocation]` config
+/// section's `strategy` key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// Every block at the configured `quant.bits` (the pre-allocation
+    /// behavior; the default).
+    Fixed,
+    /// ActNN-style greedy water-filling over the clipped-normal variance
+    /// model ([`crate::alloc::BitAllocator`]): per-block widths are
+    /// re-solved from fresh activation statistics every
+    /// [`AllocationConfig::realloc_interval_epochs`] epochs.
+    Greedy,
+}
+
+impl AllocStrategy {
+    pub fn parse(s: &str) -> Result<AllocStrategy> {
+        match s {
+            "fixed" => Ok(AllocStrategy::Fixed),
+            "greedy" | "adaptive" => Ok(AllocStrategy::Greedy),
+            other => Err(Error::Config(format!(
+                "allocation.strategy must be 'fixed' or 'greedy', got '{other}'"
+            ))),
+        }
+    }
+}
+
+/// Adaptive bit-allocation knobs — the `[allocation]` config section.
+///
+/// With `strategy = "greedy"` the trainer periodically measures
+/// per-block activation ranges and re-solves the constrained bit-budget
+/// problem (see [`crate::alloc`] and `docs/bit-allocation.md`), so the
+/// quantize/dequantize path runs under a heterogeneous
+/// [`BitPlan`](crate::alloc::BitPlan). Like threading, allocation is
+/// engine-independent: serial and parallel runs stay bit-identical under
+/// any plan.
+///
+/// ```toml
+/// [allocation]
+/// strategy = "greedy"
+/// budget_bits = 2.0            # average bits per stored scalar
+/// realloc_interval_epochs = 10 # re-solve from fresh statistics
+/// min_bits = 1                 # lowest rung a block may take
+/// max_bits = 8                 # highest rung
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocationConfig {
+    pub strategy: AllocStrategy,
+    /// Average-bits budget `b̄` (bits per stored scalar).
+    pub budget_bits: f64,
+    /// Re-run allocation from fresh activation statistics every this
+    /// many epochs (the plan from epoch `k·interval` drives the epochs
+    /// until the next multiple).
+    pub realloc_interval_epochs: usize,
+    /// Lowest width any block may receive (1/2/4/8).
+    pub min_bits: u32,
+    /// Highest width any block may receive (1/2/4/8).
+    pub max_bits: u32,
+}
+
+impl Default for AllocationConfig {
+    fn default() -> Self {
+        AllocationConfig {
+            strategy: AllocStrategy::Fixed,
+            budget_bits: 2.0,
+            realloc_interval_epochs: 10,
+            min_bits: 1,
+            max_bits: 8,
+        }
+    }
+}
+
+impl AllocationConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !SUPPORTED_WIDTHS.contains(&self.min_bits) {
+            return Err(Error::Config(format!(
+                "allocation.min_bits must be one of {SUPPORTED_WIDTHS:?}, got {}",
+                self.min_bits
+            )));
+        }
+        if !SUPPORTED_WIDTHS.contains(&self.max_bits) {
+            return Err(Error::Config(format!(
+                "allocation.max_bits must be one of {SUPPORTED_WIDTHS:?}, got {}",
+                self.max_bits
+            )));
+        }
+        if self.min_bits > self.max_bits {
+            return Err(Error::Config(format!(
+                "allocation.min_bits ({}) must be <= allocation.max_bits ({})",
+                self.min_bits, self.max_bits
+            )));
+        }
+        if !(self.budget_bits >= self.min_bits as f64
+            && self.budget_bits <= self.max_bits as f64)
+        {
+            return Err(Error::Config(format!(
+                "allocation.budget_bits must lie in [allocation.min_bits, \
+                 allocation.max_bits] = [{}, {}], got {}",
+                self.min_bits, self.max_bits, self.budget_bits
+            )));
+        }
+        if self.realloc_interval_epochs == 0 {
+            return Err(Error::Config(
+                "allocation.realloc_interval_epochs must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The solver this config calls for: a [`crate::alloc::BitAllocator`]
+    /// when the strategy is greedy and `quant` actually stores quantized
+    /// activations, else `None` (fixed-width behavior). Shared by both
+    /// trainers so the gating logic cannot drift between them.
+    pub fn allocator(
+        &self,
+        quant: &QuantConfig,
+    ) -> Result<Option<crate::alloc::BitAllocator>> {
+        if self.strategy == AllocStrategy::Greedy && !matches!(quant.mode, QuantMode::Fp32) {
+            Ok(Some(crate::alloc::BitAllocator::new(
+                self.budget_bits,
+                self.min_bits,
+                self.max_bits,
+            )?))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -240,6 +374,8 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Quantization-engine threading (speed only — never results).
     pub parallelism: ParallelismConfig,
+    /// Per-block bit allocation (`[allocation]`; default: fixed width).
+    pub allocation: AllocationConfig,
 }
 
 impl Default for TrainConfig {
@@ -254,6 +390,7 @@ impl Default for TrainConfig {
             seeds: vec![0, 1, 2],
             eval_every: 5,
             parallelism: ParallelismConfig::default(),
+            allocation: AllocationConfig::default(),
         }
     }
 }
@@ -261,15 +398,21 @@ impl Default for TrainConfig {
 impl TrainConfig {
     pub fn validate(&self) -> Result<()> {
         if self.num_layers < 2 {
-            return Err(Error::Config("need at least 2 GNN layers".into()));
+            return Err(Error::Config(format!(
+                "train.num_layers must be >= 2, got {}",
+                self.num_layers
+            )));
         }
         if self.hidden_dim == 0 || self.epochs == 0 || self.seeds.is_empty() {
-            return Err(Error::Config("hidden_dim/epochs/seeds must be non-zero".into()));
+            return Err(Error::Config(
+                "train.hidden_dim, train.epochs and train.seeds must be non-zero".into(),
+            ));
         }
         if self.eval_every == 0 {
-            return Err(Error::Config("eval_every must be >= 1".into()));
+            return Err(Error::Config("train.eval_every must be >= 1".into()));
         }
-        self.parallelism.validate()
+        self.parallelism.validate()?;
+        self.allocation.validate()
     }
 }
 
@@ -387,9 +530,32 @@ impl ExperimentConfig {
         // The projected dimension must divide cleanly.
         if self.quant.proj_ratio > 1 && self.train.hidden_dim % self.quant.proj_ratio != 0 {
             return Err(Error::Config(format!(
-                "hidden_dim {} not divisible by D/R {}",
+                "train.hidden_dim {} not divisible by quant.proj_ratio (D/R) {}",
                 self.train.hidden_dim, self.quant.proj_ratio
             )));
+        }
+        // The VM bin layout is a fixed-width INT2 construction; adaptive
+        // plans quantize each block with uniform bins at its own width.
+        if self.train.allocation.strategy == AllocStrategy::Greedy
+            && matches!(self.quant.mode, QuantMode::RowWiseVm)
+        {
+            return Err(Error::Config(
+                "allocation.strategy = 'greedy' is incompatible with quant.mode = 'vm' \
+                 (non-uniform VM bins only exist at fixed INT2)"
+                    .into(),
+            ));
+        }
+        // FP32 stores no quantized activations, so a greedy budget would
+        // silently do nothing — reject it rather than let an
+        // adaptive-vs-fixed comparison measure two identical runs.
+        if self.train.allocation.strategy == AllocStrategy::Greedy
+            && matches!(self.quant.mode, QuantMode::Fp32)
+        {
+            return Err(Error::Config(
+                "allocation.strategy = 'greedy' has no effect with quant.mode = 'fp32' \
+                 (nothing is quantized)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -398,7 +564,8 @@ impl ExperimentConfig {
     pub fn from_toml(text: &str) -> Result<Self> {
         let t = TomlTable::parse(text)?;
         let dataset_name = t.get_str("dataset.name").unwrap_or("arxiv-like");
-        let mut dataset = DatasetSpec::by_name(dataset_name)?;
+        let mut dataset = DatasetSpec::by_name(dataset_name)
+            .map_err(|_| Error::Config(format!("dataset.name: unknown dataset '{dataset_name}'")))?;
         if let Some(n) = t.get_int("dataset.num_nodes") {
             dataset.num_nodes = n as usize;
         }
@@ -419,7 +586,11 @@ impl ExperimentConfig {
                 group_ratio: t.get_int("quant.group_ratio").unwrap_or(8) as usize,
             },
             "vm" | "rowwise_vm" => QuantMode::RowWiseVm,
-            other => return Err(Error::Config(format!("unknown quant mode '{other}'"))),
+            other => {
+                return Err(Error::Config(format!(
+                    "quant.mode: unknown quant mode '{other}'"
+                )))
+            }
         };
         let quant = if matches!(mode, QuantMode::Fp32) {
             QuantConfig::fp32()
@@ -433,7 +604,8 @@ impl ExperimentConfig {
 
         let mut train = TrainConfig::default();
         if let Some(a) = t.get_str("train.arch") {
-            train.arch = Arch::parse(a)?;
+            train.arch = Arch::parse(a)
+                .map_err(|_| Error::Config(format!("train.arch: unknown architecture '{a}'")))?;
         }
         if let Some(h) = t.get_int("train.hidden_dim") {
             train.hidden_dim = h as usize;
@@ -473,6 +645,41 @@ impl ExperimentConfig {
                 )));
             }
             train.parallelism.min_blocks_per_shard = m as usize;
+        }
+
+        // [allocation] — adaptive per-block bit widths. Negative values
+        // are rejected before the usize/u32 casts, like [parallelism].
+        if let Some(s) = t.get_str("allocation.strategy") {
+            train.allocation.strategy = AllocStrategy::parse(s)?;
+        }
+        if let Some(b) = t.get_float("allocation.budget_bits") {
+            train.allocation.budget_bits = b;
+        }
+        if let Some(e) = t.get_int("allocation.realloc_interval_epochs") {
+            if e < 1 {
+                return Err(Error::Config(format!(
+                    "allocation.realloc_interval_epochs must be >= 1, got {e}"
+                )));
+            }
+            train.allocation.realloc_interval_epochs = e as usize;
+        }
+        // Range-check before the u32 cast: a huge i64 must not truncate
+        // into an accidentally-valid width (cf. parallelism.threads).
+        if let Some(b) = t.get_int("allocation.min_bits") {
+            if !(1..=8).contains(&b) {
+                return Err(Error::Config(format!(
+                    "allocation.min_bits must be in 1..=8, got {b}"
+                )));
+            }
+            train.allocation.min_bits = b as u32;
+        }
+        if let Some(b) = t.get_int("allocation.max_bits") {
+            if !(1..=8).contains(&b) {
+                return Err(Error::Config(format!(
+                    "allocation.max_bits must be in 1..=8, got {b}"
+                )));
+            }
+            train.allocation.max_bits = b as u32;
         }
 
         let cfg = ExperimentConfig {
@@ -629,6 +836,80 @@ seeds = [0, 1]
         .is_err());
         // An absurd explicit thread count is rejected by validate().
         assert!(ExperimentConfig::from_toml("[parallelism]\nthreads = 1000000\n").is_err());
+    }
+
+    #[test]
+    fn toml_allocation_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[quant]\nmode = \"blockwise\"\n\n[allocation]\nstrategy = \"greedy\"\n\
+             budget_bits = 2.5\nrealloc_interval_epochs = 4\nmin_bits = 1\nmax_bits = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.allocation.strategy, AllocStrategy::Greedy);
+        assert!((cfg.train.allocation.budget_bits - 2.5).abs() < 1e-12);
+        assert_eq!(cfg.train.allocation.realloc_interval_epochs, 4);
+        assert_eq!(cfg.train.allocation.min_bits, 1);
+        assert_eq!(cfg.train.allocation.max_bits, 4);
+        // Defaults when the section is absent: fixed-width behavior.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.allocation, AllocationConfig::default());
+        assert_eq!(cfg.train.allocation.strategy, AllocStrategy::Fixed);
+        // An integer budget parses too.
+        let cfg =
+            ExperimentConfig::from_toml("[allocation]\nbudget_bits = 4\n").unwrap();
+        assert!((cfg.train.allocation.budget_bits - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allocation_validation_reports_key_paths() {
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        assert!(err("[allocation]\nstrategy = \"magic\"\n").contains("allocation.strategy"));
+        assert!(err("[allocation]\nmin_bits = 3\n").contains("allocation.min_bits"));
+        assert!(err("[allocation]\nmin_bits = -1\n").contains("allocation.min_bits"));
+        assert!(err("[allocation]\nmax_bits = 16\n").contains("allocation.max_bits"));
+        // Out-of-range values must not truncate through the u32 cast
+        // into accidentally-valid widths (4294967297 as u32 == 1).
+        assert!(err("[allocation]\nmin_bits = 4294967297\n").contains("allocation.min_bits"));
+        assert!(err("[allocation]\nmax_bits = 4294967300\n").contains("allocation.max_bits"));
+        assert!(
+            err("[allocation]\nmin_bits = 4\nmax_bits = 2\nbudget_bits = 4.0\n")
+                .contains("allocation.min_bits")
+        );
+        assert!(err("[allocation]\nbudget_bits = 0.5\n").contains("allocation.budget_bits"));
+        assert!(err("[allocation]\nrealloc_interval_epochs = 0\n")
+            .contains("allocation.realloc_interval_epochs"));
+        // Greedy + VM is rejected with both key paths named.
+        let e = err("[quant]\nmode = \"vm\"\n\n[allocation]\nstrategy = \"greedy\"\n");
+        assert!(e.contains("allocation.strategy") && e.contains("quant.mode"), "{e}");
+        // Greedy + FP32 is a no-op combination and rejected too.
+        let e = err("[quant]\nmode = \"fp32\"\n\n[allocation]\nstrategy = \"greedy\"\n");
+        assert!(e.contains("allocation.strategy") && e.contains("fp32"), "{e}");
+    }
+
+    #[test]
+    fn validation_errors_name_offending_keys() {
+        // Every config-validation branch names the TOML key path it
+        // rejects (the [parallelism] messages already did; the rest were
+        // audited alongside [allocation]).
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        assert!(err("[quant]\nmode = \"exact\"\nbits = 3\n").contains("quant.bits"));
+        assert!(err("[quant]\nmode = \"exact\"\nproj_ratio = 0\n").contains("quant.proj_ratio"));
+        assert!(err("[quant]\nmode = \"blockwise\"\ngroup_ratio = 0\n")
+            .contains("quant.group_ratio"));
+        assert!(err("[quant]\nmode = \"vm\"\nbits = 4\n").contains("quant.bits"));
+        assert!(err("[quant]\nmode = \"nope\"\n").contains("quant.mode"));
+        assert!(err("[dataset]\nname = \"nope\"\n").contains("dataset.name"));
+        assert!(err("[train]\narch = \"mlp\"\n").contains("train.arch"));
+        assert!(err("[train]\nnum_layers = 1\n").contains("train.num_layers"));
+        assert!(err("[train]\nepochs = 0\n").contains("train.epochs"));
+        assert!(err("[train]\neval_every = 0\n").contains("train.eval_every"));
+        assert!(err("[train]\nhidden_dim = 100\n\n[quant]\nmode = \"exact\"\n")
+            .contains("train.hidden_dim"));
+        assert!(err("[parallelism]\nthreads = -1\n").contains("parallelism.threads"));
     }
 
     #[test]

@@ -42,15 +42,23 @@
 //! [`ParallelismConfig`](crate::config::ParallelismConfig) for the
 //! thread-count and shard-granularity knobs and the auto heuristic.
 
+use crate::alloc::{BitPlan, PlannedTensor};
 use crate::config::ParallelismConfig;
 use crate::memory::BufferPool;
 use crate::quant::{
-    dequantize_block, pack_codes_into, quantize_block, unpack_range, BinSpec, CompressedTensor,
-    DequantPlan, QuantPlan,
+    dequantize_block, pack_codes_into, pack_codes_slice, quantize_block, unpack_range, BinSpec,
+    CompressedTensor, DequantPlan, QuantPlan,
 };
 use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
 use crate::{Error, Result};
+
+/// Slot in a per-width lookup array for the supported widths 1/2/4/8
+/// (1 → 0, 2 → 1, 4 → 2, 8 → 3).
+#[inline]
+fn width_slot(bits: u32) -> usize {
+    bits.trailing_zeros() as usize
+}
 
 /// Auto mode caps the worker count here: grouped quantization saturates
 /// memory bandwidth well before it saturates very wide machines, and the
@@ -289,7 +297,7 @@ impl QuantEngine {
         ct: &CompressedTensor,
         mut pool: Option<&mut BufferPool>,
     ) -> Result<Matrix> {
-        if !matches!(ct.bits, 2 | 4 | 8) {
+        if !matches!(ct.bits, 1 | 2 | 4 | 8) {
             return Err(Error::Config(format!("unsupported bit width {}", ct.bits)));
         }
         if ct.group_len == 0 {
@@ -393,6 +401,308 @@ impl QuantEngine {
                     p.put_bytes(scratch);
                 }
             }
+        }
+        Matrix::from_vec(rows, cols, out)
+    }
+
+    /// Grouped quantization under a heterogeneous [`BitPlan`]: block `g`
+    /// is quantized at `plan.bit(g)` with uniform bins, packed
+    /// byte-aligned at `plan.offsets(n)[g]`. One `u64` draw from `rng`
+    /// keys the per-block streams, exactly like [`Self::quantize`].
+    ///
+    /// ```
+    /// use iexact::alloc::BitPlan;
+    /// use iexact::engine::QuantEngine;
+    /// use iexact::rngs::Pcg64;
+    /// use iexact::tensor::Matrix;
+    ///
+    /// let mut rng = Pcg64::new(3);
+    /// let h = Matrix::from_fn(4, 16, |_, _| rng.next_f32());
+    /// // 4 blocks of 16 scalars at 1/2/4/8 bits.
+    /// let plan = BitPlan::new(vec![1, 2, 4, 8], 16).unwrap();
+    /// let pt = QuantEngine::serial().quantize_planned(&h, &plan, &mut rng).unwrap();
+    /// assert_eq!(pt.num_groups(), 4);
+    /// assert_eq!(pt.packed.len(), 2 + 4 + 8 + 16);
+    /// assert_eq!(pt.dequantize().unwrap().shape(), (4, 16));
+    /// ```
+    pub fn quantize_planned(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        rng: &mut Pcg64,
+    ) -> Result<PlannedTensor> {
+        self.quantize_planned_seeded(h, plan, rng.next_u64())
+    }
+
+    /// Seed-addressed planned quantization — bit-identical across
+    /// engines for every `BitPlan`, like [`Self::quantize_seeded`].
+    pub fn quantize_planned_seeded(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        seed: u64,
+    ) -> Result<PlannedTensor> {
+        self.quantize_planned_impl(h, plan, seed, None)
+    }
+
+    /// [`Self::quantize_planned`] with the packed buffer and code scratch
+    /// recycled through `pool`.
+    pub fn quantize_planned_pooled(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        rng: &mut Pcg64,
+        pool: &mut BufferPool,
+    ) -> Result<PlannedTensor> {
+        self.quantize_planned_impl(h, plan, rng.next_u64(), Some(pool))
+    }
+
+    fn quantize_planned_impl(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        seed: u64,
+        mut pool: Option<&mut BufferPool>,
+    ) -> Result<PlannedTensor> {
+        let data = h.as_slice();
+        let n = data.len();
+        let group_len = plan.group_len();
+        let num_groups = plan.num_blocks();
+        let offsets = plan.offsets(n)?; // also validates plan coverage
+        let total_bytes = *offsets.last().expect("offsets non-empty");
+
+        // Resolve one fixed-width QuantPlan per width the plan uses —
+        // all with uniform bins (the VM bin layout is INT2-specific and
+        // belongs to the fixed-width RowWiseVm mode).
+        let mut qplans: [Option<QuantPlan>; 4] = [None, None, None, None];
+        for &b in plan.bits() {
+            let slot = width_slot(b as u32);
+            if qplans[slot].is_none() {
+                qplans[slot] = Some(QuantPlan::resolve(b as u32, &BinSpec::Uniform, group_len)?);
+            }
+        }
+
+        let mut zeros = vec![0f32; num_groups];
+        let mut ranges = vec![0f32; num_groups];
+        // Every byte of `packed` is written by pack_codes_slice (blocks
+        // are byte-aligned, partial final bytes zero-padded), so an
+        // unspecified-content take is safe.
+        let mut packed = match pool.as_deref_mut() {
+            Some(p) => p.take_bytes_scratch(total_bytes),
+            None => vec![0u8; total_bytes],
+        };
+
+        let shards = self.effective_shards(num_groups);
+        if shards <= 1 {
+            let mut scratch = match pool.as_deref_mut() {
+                Some(p) => p.take_bytes_scratch(group_len.min(n.max(1))),
+                None => vec![0u8; group_len.min(n.max(1))],
+            };
+            for g in 0..num_groups {
+                let lo = g * group_len;
+                let hi = (lo + group_len).min(n);
+                let bits = plan.bit(g);
+                let qp = qplans[width_slot(bits)].as_ref().expect("resolved above");
+                let mut rng_g = Pcg64::with_stream(seed, g as u64);
+                let (z, r) =
+                    quantize_block(qp, &data[lo..hi], &mut scratch[..hi - lo], &mut rng_g);
+                zeros[g] = z;
+                ranges[g] = r;
+                pack_codes_slice(
+                    &scratch[..hi - lo],
+                    bits,
+                    &mut packed[offsets[g]..offsets[g + 1]],
+                );
+            }
+            if let Some(p) = pool.as_deref_mut() {
+                p.put_bytes(scratch);
+            }
+        } else {
+            let groups_per_shard = num_groups.div_ceil(shards);
+            let shard_count = num_groups.div_ceil(groups_per_shard);
+            // Split the packed buffer at shard boundaries (blocks are
+            // byte-aligned, so shard ranges are disjoint byte ranges).
+            let mut packed_chunks: Vec<&mut [u8]> = Vec::with_capacity(shard_count);
+            let mut rest: &mut [u8] = packed.as_mut_slice();
+            let mut consumed = 0usize;
+            for i in 0..shard_count {
+                let end = offsets[((i + 1) * groups_per_shard).min(num_groups)];
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(end - consumed);
+                packed_chunks.push(head);
+                rest = tail;
+                consumed = end;
+            }
+            let offsets = offsets.as_slice();
+            let qplans = &qplans;
+            std::thread::scope(|s| {
+                for (i, ((packed_c, zeros_c), ranges_c)) in packed_chunks
+                    .into_iter()
+                    .zip(zeros.chunks_mut(groups_per_shard))
+                    .zip(ranges.chunks_mut(groups_per_shard))
+                    .enumerate()
+                {
+                    s.spawn(move || {
+                        let base = i * groups_per_shard;
+                        let base_off = offsets[base];
+                        let mut scratch = vec![0u8; group_len];
+                        for (j, (z, r)) in
+                            zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
+                        {
+                            let g = base + j;
+                            let lo = g * group_len;
+                            let hi = (lo + group_len).min(n);
+                            let bits = plan.bit(g);
+                            let qp =
+                                qplans[width_slot(bits)].as_ref().expect("resolved above");
+                            let mut rng_g = Pcg64::with_stream(seed, g as u64);
+                            let (zz, rr) = quantize_block(
+                                qp,
+                                &data[lo..hi],
+                                &mut scratch[..hi - lo],
+                                &mut rng_g,
+                            );
+                            *z = zz;
+                            *r = rr;
+                            pack_codes_slice(
+                                &scratch[..hi - lo],
+                                bits,
+                                &mut packed_c[offsets[g] - base_off..offsets[g + 1] - base_off],
+                            );
+                        }
+                    });
+                }
+            });
+        }
+
+        Ok(PlannedTensor {
+            packed,
+            zeros,
+            ranges,
+            shape: h.shape(),
+            plan: plan.clone(),
+        })
+    }
+
+    /// Dequantize a [`PlannedTensor`] (Eq. 3 per block, each at its own
+    /// width), sharding the block loop across worker threads. Purely
+    /// deterministic — parallel and serial results are bit-identical.
+    pub fn dequantize_planned(&self, pt: &PlannedTensor) -> Result<Matrix> {
+        self.dequantize_planned_impl(pt, None)
+    }
+
+    /// [`Self::dequantize_planned`] with the output and unpack scratch
+    /// drawn from (and returned to) `pool`.
+    pub fn dequantize_planned_pooled(
+        &self,
+        pt: &PlannedTensor,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        self.dequantize_planned_impl(pt, Some(pool))
+    }
+
+    fn dequantize_planned_impl(
+        &self,
+        pt: &PlannedTensor,
+        mut pool: Option<&mut BufferPool>,
+    ) -> Result<Matrix> {
+        let (rows, cols) = pt.shape;
+        let n = rows * cols;
+        let group_len = pt.plan.group_len();
+        let num_groups = pt.plan.num_blocks();
+        let offsets = pt.plan.offsets(n)?;
+        let total_bytes = *offsets.last().expect("offsets non-empty");
+        if pt.packed.len() < total_bytes {
+            return Err(Error::Shape(format!(
+                "packed buffer too short: plan needs {total_bytes} bytes, got {}",
+                pt.packed.len()
+            )));
+        }
+        if pt.zeros.len() != num_groups || pt.ranges.len() != num_groups {
+            return Err(Error::Shape(format!(
+                "expected {num_groups} (zero, range) pairs, got ({}, {})",
+                pt.zeros.len(),
+                pt.ranges.len()
+            )));
+        }
+        let mut dplans: [Option<DequantPlan>; 4] = [None, None, None, None];
+        for &b in pt.plan.bits() {
+            let slot = width_slot(b as u32);
+            if dplans[slot].is_none() {
+                dplans[slot] = Some(DequantPlan::resolve(b as u32, &BinSpec::Uniform));
+            }
+        }
+        let mut out = match pool.as_deref_mut() {
+            Some(p) => p.take_floats_scratch(n),
+            None => vec![0f32; n],
+        };
+
+        let shards = self.effective_shards(num_groups);
+        if shards <= 1 {
+            let mut scratch = match pool.as_deref_mut() {
+                Some(p) => p.take_bytes_scratch(group_len.min(n.max(1))),
+                None => vec![0u8; group_len.min(n.max(1))],
+            };
+            for g in 0..num_groups {
+                let lo = g * group_len;
+                let hi = (lo + group_len).min(n);
+                let bits = pt.plan.bit(g);
+                let dp = dplans[width_slot(bits)].as_ref().expect("resolved above");
+                unpack_range(
+                    &pt.packed[offsets[g]..offsets[g + 1]],
+                    bits,
+                    0,
+                    &mut scratch[..hi - lo],
+                );
+                dequantize_block(
+                    dp,
+                    pt.zeros[g],
+                    pt.ranges[g],
+                    &scratch[..hi - lo],
+                    &mut out[lo..hi],
+                );
+            }
+            if let Some(p) = pool.as_deref_mut() {
+                p.put_bytes(scratch);
+            }
+        } else {
+            let groups_per_shard = num_groups.div_ceil(shards);
+            let chunk = groups_per_shard * group_len;
+            let offsets = offsets.as_slice();
+            let dplans = &dplans;
+            let packed = pt.packed.as_slice();
+            let zeros = pt.zeros.as_slice();
+            let ranges = pt.ranges.as_slice();
+            let plan = &pt.plan;
+            std::thread::scope(|s| {
+                for (i, out_c) in out.chunks_mut(chunk).enumerate() {
+                    s.spawn(move || {
+                        let base = i * groups_per_shard;
+                        let mut scratch = vec![0u8; group_len];
+                        let blocks = out_c.len().div_ceil(group_len);
+                        for j in 0..blocks {
+                            let g = base + j;
+                            let lo = j * group_len;
+                            let hi = (lo + group_len).min(out_c.len());
+                            let bits = plan.bit(g);
+                            let dp =
+                                dplans[width_slot(bits)].as_ref().expect("resolved above");
+                            unpack_range(
+                                &packed[offsets[g]..offsets[g + 1]],
+                                bits,
+                                0,
+                                &mut scratch[..hi - lo],
+                            );
+                            dequantize_block(
+                                dp,
+                                zeros[g],
+                                ranges[g],
+                                &scratch[..hi - lo],
+                                &mut out_c[lo..hi],
+                            );
+                        }
+                    });
+                }
+            });
         }
         Matrix::from_vec(rows, cols, out)
     }
@@ -527,6 +837,157 @@ mod tests {
             .quantize_seeded(&one, 4, 2, &BinSpec::Uniform, 1)
             .unwrap();
         assert_eq!(ct.dequantize().unwrap().as_slice(), &[3.5]);
+    }
+
+    #[test]
+    fn planned_quantize_matches_serial_across_threads() {
+        let h = sample_matrix(128, 32, 21); // 4096 scalars
+        let mut rng = Pcg64::new(22);
+        // A deliberately mixed plan: 128 blocks of 32 scalars.
+        let bits: Vec<u8> = (0..128)
+            .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+            .collect();
+        let plan = BitPlan::new(bits, 32).unwrap();
+        let reference = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xbeef)
+            .unwrap();
+        for threads in [2usize, 5, 8] {
+            let pt = QuantEngine::with_threads(threads)
+                .quantize_planned_seeded(&h, &plan, 0xbeef)
+                .unwrap();
+            assert_eq!(pt.packed, reference.packed, "t={threads}");
+            assert_eq!(pt.zeros, reference.zeros, "t={threads}");
+            assert_eq!(pt.ranges, reference.ranges, "t={threads}");
+            let a = QuantEngine::serial().dequantize_planned(&reference).unwrap();
+            let b = QuantEngine::with_threads(threads)
+                .dequantize_planned(&pt)
+                .unwrap();
+            assert_eq!(a.as_slice(), b.as_slice(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn uniform_plan_matches_fixed_width_path_bit_exactly() {
+        // A constant-width plan must reproduce the fixed-width engine
+        // byte for byte: same per-block streams, same packing layout
+        // (every full block is byte-aligned in both).
+        let h = sample_matrix(64, 32, 23); // 2048 scalars, G=32 divides evenly
+        for bits in [2u32, 4, 8] {
+            let fixed = QuantEngine::serial()
+                .quantize_seeded(&h, 32, bits, &BinSpec::Uniform, 77)
+                .unwrap();
+            let plan = BitPlan::uniform(bits, 64, 32).unwrap();
+            let planned = QuantEngine::with_threads(4)
+                .quantize_planned_seeded(&h, &plan, 77)
+                .unwrap();
+            assert_eq!(planned.packed, fixed.packed, "bits={bits}");
+            assert_eq!(planned.zeros, fixed.zeros, "bits={bits}");
+            assert_eq!(planned.ranges, fixed.ranges, "bits={bits}");
+            let a = fixed.dequantize().unwrap();
+            let b = planned.dequantize().unwrap();
+            assert_eq!(a.as_slice(), b.as_slice(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn planned_pooled_calls_are_bit_identical_and_reuse_buffers() {
+        let h = sample_matrix(32, 32, 24);
+        let plan = BitPlan::new(
+            (0..64).map(|g| if g % 2 == 0 { 1u8 } else { 4 }).collect(),
+            16,
+        )
+        .unwrap();
+        let engine = QuantEngine::serial();
+        let plain = engine.quantize_planned_seeded(&h, &plan, 5).unwrap();
+        let mut pool = BufferPool::new();
+        let pooled = engine
+            .quantize_planned_impl(&h, &plan, 5, Some(&mut pool))
+            .unwrap();
+        assert_eq!(plain.packed, pooled.packed);
+        assert_eq!(plain.zeros, pooled.zeros);
+        let d1 = engine.dequantize_planned(&pooled).unwrap();
+        let d2 = engine.dequantize_planned_pooled(&pooled, &mut pool).unwrap();
+        assert_eq!(d1.as_slice(), d2.as_slice());
+        // Recycle the consumed packed buffer like the pipeline's backward
+        // pass does; the next step's packed take must then hit the pool.
+        pool.put_bytes(pooled.packed.clone());
+        let before = pool.stats().hits;
+        let again = engine
+            .quantize_planned_impl(&h, &plan, 5, Some(&mut pool))
+            .unwrap();
+        assert_eq!(again.packed, plain.packed);
+        assert!(pool.stats().hits > before, "pool not reused");
+    }
+
+    #[test]
+    fn planned_error_bounded_by_block_width() {
+        // |ĥ - h| <= range_g / (2^{b_g} - 1) for each block's own width.
+        let h = sample_matrix(16, 32, 25);
+        let bits: Vec<u8> = (0..32).map(|g| [1u8, 2, 4, 8][g % 4]).collect();
+        let plan = BitPlan::new(bits, 16).unwrap();
+        let pt = QuantEngine::with_threads(3)
+            .quantize_planned_seeded(&h, &plan, 9)
+            .unwrap();
+        let d = pt.dequantize().unwrap();
+        for (idx, (&orig, &deq)) in h.as_slice().iter().zip(d.as_slice()).enumerate() {
+            let g = idx / 16;
+            let b = ((1u32 << plan.bit(g)) - 1) as f32;
+            let width = pt.ranges[g] / b;
+            assert!(
+                (orig - deq).abs() <= width * 1.0001,
+                "idx={idx} bits={}: |{orig} - {deq}| > {width}",
+                plan.bit(g)
+            );
+        }
+    }
+
+    #[test]
+    fn planned_handles_ragged_and_empty() {
+        // 1221 scalars, G=100 -> 13 blocks, last has 21 scalars.
+        let h = sample_matrix(33, 37, 26);
+        let bits: Vec<u8> = (0..13).map(|g| [2u8, 8][g % 2]).collect();
+        let plan = BitPlan::new(bits, 100).unwrap();
+        let a = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 31)
+            .unwrap();
+        let b = QuantEngine::with_threads(8)
+            .quantize_planned_seeded(&h, &plan, 31)
+            .unwrap();
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(
+            a.dequantize().unwrap().as_slice(),
+            b.dequantize().unwrap().as_slice()
+        );
+
+        let empty = Matrix::zeros(0, 7);
+        let plan = BitPlan::new(vec![], 8).unwrap();
+        let pt = QuantEngine::with_threads(4)
+            .quantize_planned_seeded(&empty, &plan, 1)
+            .unwrap();
+        assert_eq!(pt.num_groups(), 0);
+        assert_eq!(pt.dequantize().unwrap().shape(), (0, 7));
+    }
+
+    #[test]
+    fn planned_rejects_mismatched_plan() {
+        let h = sample_matrix(8, 8, 27);
+        // 64 scalars at G=16 need 4 blocks; give 3.
+        let plan = BitPlan::new(vec![2, 2, 2], 16).unwrap();
+        assert!(QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 1)
+            .is_err());
+        // Malformed planned tensor: truncated packed buffer.
+        let good_plan = BitPlan::new(vec![2, 2, 2, 2], 16).unwrap();
+        let mut pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &good_plan, 1)
+            .unwrap();
+        pt.packed.truncate(3);
+        assert!(QuantEngine::serial().dequantize_planned(&pt).is_err());
+        let mut pt2 = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &good_plan, 1)
+            .unwrap();
+        pt2.zeros.pop();
+        assert!(QuantEngine::serial().dequantize_planned(&pt2).is_err());
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! | `fig3`   | Fig. 3 — SR variance surface over (α, β) |
 //! | `fig4`   | Fig. 4 — variance reduction vs assumed D per layer |
 //! | `fig5`   | Fig. 5 — variance-reduction curves for CN_{1/D} |
+//! | `allocation` | adaptive vs fixed per-block bit allocation at equal budgets (beyond-paper, ActNN-style) |
 
 pub mod ablation;
+pub mod allocation;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

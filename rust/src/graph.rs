@@ -9,6 +9,33 @@
 //! the real datasets play: the compression technique only ever sees dense
 //! activation matrices, so accuracy *deltas* between quantization configs
 //! and memory/speed *ratios* are preserved (see DESIGN.md §3).
+//!
+//! Datasets are deterministic in their seed, pre-normalized (`adj` holds
+//! the symmetric-normalized `Â` of Eq. 1) and self-validating:
+//!
+//! ```
+//! use iexact::graph::GraphGenerator;
+//!
+//! let ds = GraphGenerator {
+//!     num_nodes: 64,
+//!     num_features: 8,
+//!     num_classes: 4,
+//!     mean_degree: 6.0,
+//!     intra_community_prob: 0.85,
+//!     preferential_frac: 0.25,
+//!     feature_snr: 2.0,
+//!     train_frac: 0.6,
+//!     val_frac: 0.2,
+//! }
+//! .generate("demo", 7)
+//! .unwrap();
+//! assert_eq!(ds.num_nodes(), 64);
+//! assert_eq!(ds.features.shape(), (64, 8));
+//! ds.validate().unwrap();
+//! // Same seed, same graph.
+//! let again = iexact::config::DatasetSpec::tiny().generate(1);
+//! assert_eq!(again.adj.nnz(), iexact::config::DatasetSpec::tiny().generate(1).adj.nnz());
+//! ```
 
 use crate::rngs::Pcg64;
 use crate::tensor::Matrix;

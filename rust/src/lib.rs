@@ -29,6 +29,7 @@
 //! | Eq. 9/10 — SR variance and its clipped-normal expectation | [`varmin`] |
 //! | Eq. 10 minimization — optimal `(α*, β*)` via Nelder–Mead | [`varmin::optimal_boundaries`] |
 //! | Clipped-normal activation model `CN_{[1/D]}` | [`stats`] |
+//! | Adaptive per-block bit allocation (ActNN-style budget, CN-model weighted) | [`alloc`] |
 //! | Table 1 memory column (analytic, byte-exact) | [`memory::MemoryModel`] |
 //! | Random projection `RP`/`IRP` (EXACT §3) | [`rp`] |
 //! | Compressed-training forward/backward | [`pipeline`] |
@@ -67,6 +68,7 @@
 //! the architecture diagram and paper-artifact mapping, and `DESIGN.md`
 //! for the full system inventory.
 
+pub mod alloc;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
@@ -89,8 +91,10 @@ pub mod varmin;
 
 /// Commonly used types, re-exported for downstream convenience.
 pub mod prelude {
+    pub use crate::alloc::{BitAllocator, BitPlan, BlockStats, PlannedTensor};
     pub use crate::config::{
-        DatasetSpec, ExperimentConfig, ParallelismConfig, QuantConfig, QuantMode, TrainConfig,
+        AllocationConfig, DatasetSpec, ExperimentConfig, ParallelismConfig, QuantConfig,
+        QuantMode, TrainConfig,
     };
     pub use crate::engine::QuantEngine;
     pub use crate::graph::{CsrMatrix, Dataset, GraphGenerator};

@@ -6,7 +6,9 @@
 
 use iexact::config::{DatasetSpec, ExperimentConfig, QuantConfig, TrainConfig};
 use iexact::coordinator::{run_native_on, AotCoordinator};
-use iexact::experiments::{ablation, fig1, fig2, fig3, fig4, fig5, table1, table2, Effort};
+use iexact::experiments::{
+    ablation, allocation, fig1, fig2, fig3, fig4, fig5, table1, table2, Effort,
+};
 use iexact::runtime::Runtime;
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -26,6 +28,7 @@ COMMANDS:
     fig4          Fig 4: variance reduction vs assumed D per layer
     fig5          Fig 5: variance reduction curves for CN_[1/D]
     ablation      Bit-width / projection-ratio / block-size ablations
+    allocation    Adaptive vs fixed bit allocation at equal budgets
     train         Train one configuration on the native pipeline
     train-aot     Train via the AOT (JAX->HLO->PJRT) path
     artifacts     List AOT artifacts and their shapes
@@ -43,6 +46,8 @@ TRAIN OPTIONS:
     --arch gcn|sage               (default: gcn)
     --sample <n>                  GraphSAINT-RN minibatch of n nodes/epoch
     --threads <n>                 quantization-engine workers (0 = auto)
+    --budget-bits <b>             adaptive per-block bit allocation (greedy)
+                                  at an average budget of b bits/scalar
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
 
 TRAIN-AOT OPTIONS:
@@ -74,6 +79,7 @@ fn main() -> ExitCode {
         "fig4" => cmd_fig4(&opts),
         "fig5" => cmd_fig5(&opts),
         "ablation" => cmd_ablation(&opts),
+        "allocation" => cmd_allocation(&opts),
         "train" => cmd_train(&opts),
         "train-aot" => cmd_train_aot(&opts),
         "artifacts" => cmd_artifacts(&opts),
@@ -214,6 +220,11 @@ fn cmd_ablation(opts: &Opts) -> iexact::Result<()> {
     emit(opts, &a.render(), Some(a.to_csv()))
 }
 
+fn cmd_allocation(opts: &Opts) -> iexact::Result<()> {
+    let a = allocation::run(effort(opts), |line| eprintln!("{line}"))?;
+    emit(opts, &a.render(), Some(a.to_csv()))
+}
+
 fn cmd_train(opts: &Opts) -> iexact::Result<()> {
     let mut cfg = if let Some(path) = opts.get("config") {
         ExperimentConfig::from_toml_file(std::path::Path::new(path))?
@@ -249,6 +260,16 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         cfg.train.parallelism.threads = t.parse().map_err(|_| {
             iexact::Error::Config(format!("--threads expects a non-negative integer, got '{t}'"))
         })?;
+    }
+    // CLI opt-in to adaptive bit allocation: --budget-bits <b> switches
+    // the strategy to greedy at that average budget (the rest of the
+    // [allocation] knobs keep their config/default values). Invalid
+    // values are rejected, like --threads.
+    if let Some(b) = opts.get("budget-bits") {
+        cfg.train.allocation.budget_bits = b.parse().map_err(|_| {
+            iexact::Error::Config(format!("--budget-bits expects a number, got '{b}'"))
+        })?;
+        cfg.train.allocation.strategy = iexact::config::AllocStrategy::Greedy;
     }
     cfg.validate()?;
     let ds = cfg.dataset.generate(cfg.dataset_seed);

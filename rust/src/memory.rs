@@ -13,7 +13,8 @@
 //! * **Block-wise (this paper)** replaces per-row metadata with one pair
 //!   per block of `G = ratio · R` scalars — the >15% saving at G/R = 64.
 //!
-//! The model is validated against the byte-exact [`CompressedTensor::nbytes`]
+//! The model is validated against the byte-exact
+//! [`CompressedTensor::nbytes`](crate::quant::CompressedTensor::nbytes)
 //! of the native pipeline (see `tests`), so the Table 1 bench is auditable.
 //!
 //! This module also owns the runtime side of the memory story: the
@@ -21,6 +22,17 @@
 //! training epochs, so the compressed path does no steady-state
 //! allocation (the quantization engine takes and returns its buffers
 //! here — see [`crate::engine::QuantEngine::quantize_pooled`]).
+//!
+//! ## Heterogeneous bit widths
+//!
+//! Under an adaptive [`BitPlan`](crate::alloc::BitPlan) the packed size
+//! of a tensor is no longer a fixed function of its shape — re-running
+//! allocation changes per-block widths, and with them every packed
+//! buffer's length. To keep the pool's hit rate high under that churn,
+//! fresh allocations are rounded up to a **capacity class** (the next
+//! power of two, [`capacity_class`]): buffers for an avg-2.1-bit plan
+//! and an avg-1.9-bit plan land in the same class and recycle into each
+//! other instead of fragmenting the pool with near-miss capacities.
 
 use crate::config::{QuantConfig, QuantMode};
 use crate::{Error, Result};
@@ -164,6 +176,26 @@ impl MemoryModel {
     }
 }
 
+/// Capacity class of a requested buffer length: the next power of two
+/// (`0` stays `0`). Every pool **miss** allocates at class capacity, so
+/// requests whose sizes wobble inside one class (heterogeneous
+/// [`BitPlan`](crate::alloc::BitPlan)s re-allocated across epochs) hit
+/// the same recycled buffers instead of growing a near-miss ladder.
+///
+/// ```
+/// use iexact::memory::capacity_class;
+/// assert_eq!(capacity_class(0), 0);
+/// assert_eq!(capacity_class(1000), 1024);
+/// assert_eq!(capacity_class(1024), 1024);
+/// ```
+pub fn capacity_class(len: usize) -> usize {
+    if len == 0 {
+        0
+    } else {
+        len.next_power_of_two()
+    }
+}
+
 /// Counters describing how well a [`BufferPool`] is amortizing
 /// allocations.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -186,9 +218,12 @@ pub struct PoolStats {
 /// the backward pass (unpack scratch + dequantized floats), and returns
 /// consumed stash buffers after each layer's gradients are computed.
 ///
-/// Buffers are matched best-effort by capacity; the pool keeps at most
-/// [`Self::MAX_POOLED`] buffers of each kind and drops the rest, so
-/// residency stays bounded even under shape churn.
+/// Buffers are matched best-effort by capacity; fresh allocations are
+/// rounded up to a [`capacity_class`] so size-wobbling request streams
+/// (e.g. re-allocated heterogeneous bit plans) keep hitting the same
+/// buffers. The pool keeps at most [`Self::MAX_POOLED`] buffers of each
+/// kind and drops the rest, so residency stays bounded even under shape
+/// churn.
 ///
 /// ```
 /// use iexact::memory::BufferPool;
@@ -248,12 +283,20 @@ impl BufferPool {
                 }
                 let mut b = self.bytes.swap_remove(i);
                 b.clear();
+                if !fits {
+                    // Grow-path misses land on class capacity too, so a
+                    // slowly growing request stream converges instead of
+                    // rebuilding a near-miss capacity ladder.
+                    b.reserve(capacity_class(len));
+                }
                 b.resize(len, 0);
                 b
             }
             None => {
                 self.misses += 1;
-                vec![0u8; len]
+                let mut b = Vec::with_capacity(capacity_class(len));
+                b.resize(len, 0);
+                b
             }
         }
     }
@@ -274,13 +317,18 @@ impl BufferPool {
                 if b.len() > len {
                     b.truncate(len);
                 } else {
+                    if !fits {
+                        b.reserve(capacity_class(len).saturating_sub(b.len()));
+                    }
                     b.resize(len, 0);
                 }
                 b
             }
             None => {
                 self.misses += 1;
-                vec![0u8; len]
+                let mut b = Vec::with_capacity(capacity_class(len));
+                b.resize(len, 0);
+                b
             }
         }
     }
@@ -298,12 +346,14 @@ impl BufferPool {
                 }
                 let mut b = self.bytes.swap_remove(i);
                 b.clear();
-                b.reserve(cap); // len is 0, so this guarantees capacity >= cap
+                // len is 0, so this guarantees capacity >= cap (class
+                // capacity when the buffer has to grow anyway).
+                b.reserve(if fits { cap } else { capacity_class(cap) });
                 b
             }
             None => {
                 self.misses += 1;
-                Vec::with_capacity(cap)
+                Vec::with_capacity(capacity_class(cap))
             }
         }
     }
@@ -326,12 +376,17 @@ impl BufferPool {
                 }
                 let mut b = self.floats.swap_remove(i);
                 b.clear();
+                if !fits {
+                    b.reserve(capacity_class(len));
+                }
                 b.resize(len, 0.0);
                 b
             }
             None => {
                 self.misses += 1;
-                vec![0f32; len]
+                let mut b = Vec::with_capacity(capacity_class(len));
+                b.resize(len, 0.0);
+                b
             }
         }
     }
@@ -350,13 +405,18 @@ impl BufferPool {
                 if b.len() > len {
                     b.truncate(len);
                 } else {
+                    if !fits {
+                        b.reserve(capacity_class(len).saturating_sub(b.len()));
+                    }
                     b.resize(len, 0.0);
                 }
                 b
             }
             None => {
                 self.misses += 1;
-                vec![0f32; len]
+                let mut b = Vec::with_capacity(capacity_class(len));
+                b.resize(len, 0.0);
+                b
             }
         }
     }
@@ -484,6 +544,23 @@ mod tests {
         assert!(b2.iter().all(|&v| v == 0), "recycled buffer must be zeroed");
         assert_eq!(pool.stats().hits, 1);
         assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn misses_allocate_class_capacity() {
+        // A fresh allocation is rounded up to its capacity class, so a
+        // slightly-larger follow-up request in the same class still hits.
+        let mut pool = BufferPool::new();
+        let b = pool.take_bytes(100);
+        assert!(b.capacity() >= 128, "cap {}", b.capacity());
+        pool.put_bytes(b);
+        let b2 = pool.take_bytes(120); // same class as 100
+        assert_eq!(pool.stats().hits, 1, "{:?}", pool.stats());
+        pool.put_bytes(b2);
+        let f = pool.take_floats_scratch(1000);
+        assert!(f.capacity() >= 1024);
+        assert_eq!(capacity_class(0), 0);
+        assert_eq!(capacity_class(65), 128);
     }
 
     #[test]

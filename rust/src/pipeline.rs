@@ -11,7 +11,32 @@
 //! (activation capture), and the pipeline benches. The same model/step
 //! semantics are mirrored by the JAX L2 graph (`python/compile/model.py`),
 //! which the PJRT runtime executes for the AOT path.
+//!
+//! Training is deterministic in the seed, and the quantization engine's
+//! thread count is a pure speed knob (see [`crate::engine`]); with
+//! `[allocation] strategy = "greedy"` the stashes are quantized under
+//! periodically re-solved heterogeneous [`BitPlan`]s (see
+//! [`crate::alloc`]) with the same determinism guarantees.
+//!
+//! ```
+//! use iexact::config::{DatasetSpec, QuantConfig, TrainConfig};
+//!
+//! let ds = DatasetSpec::tiny().generate(1);
+//! let cfg = TrainConfig {
+//!     hidden_dim: 16,
+//!     num_layers: 2,
+//!     epochs: 3,
+//!     eval_every: 1,
+//!     seeds: vec![0],
+//!     ..TrainConfig::default()
+//! };
+//! let run = iexact::pipeline::train(&ds, &QuantConfig::int2_blockwise(8), &cfg, 0).unwrap();
+//! let again = iexact::pipeline::train(&ds, &QuantConfig::int2_blockwise(8), &cfg, 0).unwrap();
+//! assert_eq!(run.final_train_loss, again.final_train_loss); // bit-deterministic
+//! assert!(run.stash_bytes > 0);
+//! ```
 
+use crate::alloc::{BitAllocator, BitPlan, BlockStats, PlannedTensor};
 use crate::config::{Arch, QuantConfig, QuantMode, TrainConfig};
 use crate::engine::QuantEngine;
 use crate::graph::Dataset;
@@ -27,6 +52,43 @@ use crate::util::timer::LapTimer;
 use crate::varmin::optimal_boundaries;
 use crate::{Error, Result};
 
+/// A stashed compressed tensor: fixed-width ([`CompressedTensor`]) or
+/// under a heterogeneous [`BitPlan`] ([`PlannedTensor`]). The backward
+/// pass treats both uniformly — dequantize, then recycle the packed
+/// buffer.
+enum StashedCt {
+    Fixed(CompressedTensor),
+    Planned(PlannedTensor),
+}
+
+impl StashedCt {
+    fn nbytes(&self) -> usize {
+        match self {
+            StashedCt::Fixed(ct) => ct.nbytes(),
+            StashedCt::Planned(pt) => pt.nbytes(),
+        }
+    }
+
+    fn dequantize_pooled(&self, engine: &QuantEngine, pool: &mut BufferPool) -> Result<Matrix> {
+        match self {
+            StashedCt::Fixed(ct) => engine.dequantize_pooled(ct, pool),
+            StashedCt::Planned(pt) => engine.dequantize_planned_pooled(pt, pool),
+        }
+    }
+
+    /// Return the consumed packed buffer to the pool. The tiny
+    /// zeros/ranges vecs are deliberately NOT pooled: nothing draws
+    /// metadata-sized floats back out, so they would only crowd the
+    /// capped float-pool slots that the large projection/dequant/x̂
+    /// buffers need.
+    fn recycle(self, pool: &mut BufferPool) {
+        match self {
+            StashedCt::Fixed(ct) => pool.put_bytes(ct.packed),
+            StashedCt::Planned(pt) => pool.put_bytes(pt.packed),
+        }
+    }
+}
+
 /// What the forward pass stashed for one layer.
 enum Stash {
     /// FP32: the aggregated input and the dense pre-activation.
@@ -34,13 +96,13 @@ enum Stash {
     /// Compressed: RP+quantized aggregated input, the projection used,
     /// and the 1-bit sign pattern of the pre-activation.
     Compressed {
-        ct: CompressedTensor,
+        ct: StashedCt,
         rp: RandomProjection,
         signs: Option<SignPattern>,
     },
     /// Final layer in compressed mode (no ReLU): compressed input only.
     CompressedLinear {
-        ct: CompressedTensor,
+        ct: StashedCt,
         rp: RandomProjection,
     },
     /// GraphSAGE: the self (`H`) and aggregated (`Â H`) halves of the
@@ -48,9 +110,9 @@ enum Stash {
     /// shared (zero, range) would let one half dominate the other (this
     /// mirrors EXACT, which compresses each stored tensor on its own).
     CompressedSage {
-        ct_self: CompressedTensor,
+        ct_self: StashedCt,
         rp_self: RandomProjection,
-        ct_agg: CompressedTensor,
+        ct_agg: StashedCt,
         rp_agg: RandomProjection,
         signs: Option<SignPattern>,
     },
@@ -193,13 +255,40 @@ struct StepOutput {
     stash_bytes: usize,
 }
 
+/// Quantize one projected activation for stashing: under `plan` via the
+/// heterogeneous-width engine path (uniform bins at each block's own
+/// width), else fixed-width with the layer's resolved bins. Both draw
+/// exactly one `u64` from `rng`.
+fn quantize_stash(
+    engine: &QuantEngine,
+    proj: &Matrix,
+    glen: usize,
+    q: &QuantConfig,
+    bins: &BinSpec,
+    plan: Option<&BitPlan>,
+    rng: &mut Pcg64,
+    pool: &mut BufferPool,
+) -> Result<StashedCt> {
+    match plan {
+        Some(p) => Ok(StashedCt::Planned(
+            engine.quantize_planned_pooled(proj, p, rng, pool)?,
+        )),
+        None => Ok(StashedCt::Fixed(
+            engine.quantize_pooled(proj, glen, q.bits, bins, rng, pool)?,
+        )),
+    }
+}
+
 /// One full-batch training step with the configured compression.
 ///
 /// Quantize/dequantize runs on `engine` (sharded across its worker
 /// threads) and recycles packed/scratch buffers through `pool`, so the
 /// compressed path does no steady-state allocation across epochs. The
 /// step is bit-identical for any engine configuration — per-block RNG
-/// streams make threading a pure speed knob.
+/// streams make threading a pure speed knob. When `plans` is `Some`, it
+/// holds one [`BitPlan`] per stashed tensor in forward order (one per
+/// layer for GCN, self then aggregated per layer for GraphSAGE) and the
+/// stashes are quantized bit-width-heterogeneously.
 fn train_step(
     model: &GcnModel,
     ds: &Dataset,
@@ -208,11 +297,28 @@ fn train_step(
     rng: &mut Pcg64,
     engine: &QuantEngine,
     pool: &mut BufferPool,
+    plans: Option<&[BitPlan]>,
 ) -> Result<StepOutput> {
     let last = model.num_layers() - 1;
     let compressed = !matches!(q.mode, QuantMode::Fp32);
+    let stashes_per_layer = match model.arch {
+        Arch::Gcn => 1,
+        Arch::GraphSage => 2,
+    };
+    if let Some(ps) = plans {
+        let expected = model.num_layers() * stashes_per_layer;
+        if ps.len() != expected {
+            return Err(Error::Config(format!(
+                "expected {expected} bit plans (one per stashed tensor), got {}",
+                ps.len()
+            )));
+        }
+    }
+    let mut plan_slot = 0usize;
 
     // ---- Forward ----
+    // NOTE: collect_block_stats mirrors this walk's stash structure
+    // (projection geometry, SAGE split, slot order) — keep them in sync.
     let mut stashes: Vec<Stash> = Vec::with_capacity(model.num_layers());
     let mut h = ds.features.clone();
     for (l, w) in model.weights.iter().enumerate() {
@@ -237,12 +343,30 @@ fn train_step(
                     let rp_self = RandomProjection::new(d, r_dim, rng)?;
                     let rp_agg = RandomProjection::new(d, r_dim, rng)?;
                     let proj_self = rp_self.project(&xs)?;
-                    let ct_self =
-                        engine.quantize_pooled(&proj_self, glen, q.bits, &bins[l], rng, pool)?;
+                    let ct_self = quantize_stash(
+                        engine,
+                        &proj_self,
+                        glen,
+                        q,
+                        &bins[l],
+                        plans.map(|ps| &ps[plan_slot]),
+                        rng,
+                        pool,
+                    )?;
+                    plan_slot += 1;
                     pool.put_floats(proj_self.into_vec());
                     let proj_agg = rp_agg.project(&xa)?;
-                    let ct_agg =
-                        engine.quantize_pooled(&proj_agg, glen, q.bits, &bins[l], rng, pool)?;
+                    let ct_agg = quantize_stash(
+                        engine,
+                        &proj_agg,
+                        glen,
+                        q,
+                        &bins[l],
+                        plans.map(|ps| &ps[plan_slot]),
+                        rng,
+                        pool,
+                    )?;
+                    plan_slot += 1;
                     pool.put_floats(proj_agg.into_vec());
                     stashes.push(Stash::CompressedSage {
                         ct_self,
@@ -257,14 +381,17 @@ fn train_step(
                     let r_dim = (d / q.proj_ratio).max(1);
                     let rp = RandomProjection::new(d, r_dim, rng)?;
                     let proj = rp.project(&x)?;
-                    let ct = engine.quantize_pooled(
+                    let ct = quantize_stash(
+                        engine,
                         &proj,
                         group_len(q, r_dim),
-                        q.bits,
+                        q,
                         &bins[l],
+                        plans.map(|ps| &ps[plan_slot]),
                         rng,
                         pool,
                     )?;
+                    plan_slot += 1;
                     pool.put_floats(proj.into_vec());
                     if l == last {
                         stashes.push(Stash::CompressedLinear { ct, rp });
@@ -309,20 +436,15 @@ fn train_step(
             _ => d_out,
         };
         // Reconstruct the stashed layer input X̂, recycling the consumed
-        // packed buffer. The tiny zeros/ranges vecs are deliberately NOT
-        // pooled: nothing draws metadata-sized floats back out, so they
-        // would only crowd the capped float-pool slots that the large
-        // projection/dequant/x̂ buffers need.
-        fn recycle_ct(ct: CompressedTensor, pool: &mut BufferPool) {
-            pool.put_bytes(ct.packed);
-        }
+        // packed buffer (see StashedCt::recycle for why metadata vecs
+        // are not pooled).
         let x_hat = match stash {
             Stash::Dense { aggregated, .. } => aggregated,
             Stash::Compressed { ct, rp, .. } | Stash::CompressedLinear { ct, rp } => {
-                let deq = engine.dequantize_pooled(&ct, pool)?;
+                let deq = ct.dequantize_pooled(engine, pool)?;
                 let rec = rp.recover(&deq)?;
                 pool.put_floats(deq.into_vec());
-                recycle_ct(ct, pool);
+                ct.recycle(pool);
                 rec
             }
             Stash::CompressedSage {
@@ -332,14 +454,14 @@ fn train_step(
                 rp_agg,
                 ..
             } => {
-                let deq_self = engine.dequantize_pooled(&ct_self, pool)?;
+                let deq_self = ct_self.dequantize_pooled(engine, pool)?;
                 let hs = rp_self.recover(&deq_self)?;
                 pool.put_floats(deq_self.into_vec());
-                recycle_ct(ct_self, pool);
-                let deq_agg = engine.dequantize_pooled(&ct_agg, pool)?;
+                ct_self.recycle(pool);
+                let deq_agg = ct_agg.dequantize_pooled(engine, pool)?;
                 let ha = rp_agg.recover(&deq_agg)?;
                 pool.put_floats(deq_agg.into_vec());
-                recycle_ct(ct_agg, pool);
+                ct_agg.recycle(pool);
                 hs.concat_cols(&ha)?
             }
         };
@@ -397,13 +519,105 @@ pub fn train_step_pooled(
     engine: &QuantEngine,
     pool: &mut BufferPool,
 ) -> Result<(f64, Vec<Matrix>, usize)> {
+    train_step_planned(model, ds, q, rng, engine, pool, None)
+}
+
+/// [`train_step_pooled`] under an optional set of heterogeneous
+/// [`BitPlan`]s — one per stashed tensor in forward order (one per layer
+/// for GCN, self then aggregated per layer for GraphSAGE), as produced
+/// by [`collect_block_stats`] + [`BitAllocator::allocate`]. With
+/// `plans = None` this is exactly the fixed-width step.
+pub fn train_step_planned(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    rng: &mut Pcg64,
+    engine: &QuantEngine,
+    pool: &mut BufferPool,
+    plans: Option<&[BitPlan]>,
+) -> Result<(f64, Vec<Matrix>, usize)> {
     let bins: Vec<BinSpec> = model
         .weights
         .iter()
         .map(|w| resolve_bins(q, (w.rows() / q.proj_ratio).max(1)))
         .collect::<Result<Vec<_>>>()?;
-    let out = train_step(model, ds, q, &bins, rng, engine, pool)?;
+    let out = train_step(model, ds, q, &bins, rng, engine, pool, plans)?;
     Ok((out.loss, out.grads, out.stash_bytes))
+}
+
+/// Forward-only statistics pass for the adaptive bit allocator: project
+/// each layer's stashed activation with fresh RP draws from `rng` and
+/// measure per-block dynamic ranges. Returns one [`BlockStats`] per
+/// stashed tensor in forward order (the slot order
+/// [`train_step_planned`] expects); empty for FP32 mode.
+///
+/// The pass never touches the quantization engine, so it is trivially
+/// engine-independent — feeding its output through
+/// [`BitAllocator::allocate`] keeps the serial-vs-parallel bit-identity
+/// contract intact under adaptive allocation.
+///
+/// **Coupling invariant:** this walk mirrors the (private)
+/// `train_step` forward
+/// (same `layer_input`, same GraphSAGE self/aggregated split, same
+/// projection geometry and `group_len`). If the forward's stash
+/// structure changes, change this function in the same commit —
+/// `block_stats_slot_counts_match_arch` and the adaptive pipeline tests
+/// guard the slot count and shapes.
+pub fn collect_block_stats(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    rng: &mut Pcg64,
+) -> Result<Vec<BlockStats>> {
+    if matches!(q.mode, QuantMode::Fp32) {
+        return Ok(Vec::new());
+    }
+    let last = model.num_layers() - 1;
+    let mut out = Vec::new();
+    let mut h = ds.features.clone();
+    for (l, w) in model.weights.iter().enumerate() {
+        let x = model.layer_input(ds, &h)?;
+        match model.arch {
+            Arch::GraphSage => {
+                let d = x.cols() / 2;
+                let r_dim = (d / q.proj_ratio).max(1);
+                let glen = group_len(q, r_dim);
+                let (xs, xa) = x.split_cols(d)?;
+                for half in [&xs, &xa] {
+                    let rp = RandomProjection::new(d, r_dim, rng)?;
+                    let proj = rp.project(half)?;
+                    out.push(BlockStats::measure(&proj, glen)?);
+                }
+            }
+            Arch::Gcn => {
+                let d = x.cols();
+                let r_dim = (d / q.proj_ratio).max(1);
+                let rp = RandomProjection::new(d, r_dim, rng)?;
+                let proj = rp.project(&x)?;
+                out.push(BlockStats::measure(&proj, group_len(q, r_dim))?);
+            }
+        }
+        let p = x.matmul(w)?;
+        h = if l == last { p } else { relu(&p) };
+    }
+    Ok(out)
+}
+
+/// Solve one [`BitPlan`] per stashed tensor from fresh activation
+/// statistics — the periodic re-allocation step of the adaptive
+/// trainers. Deterministic in `(model, ds, q, stats_rng)` and
+/// engine-independent.
+pub fn allocate_plans(
+    model: &GcnModel,
+    ds: &Dataset,
+    q: &QuantConfig,
+    allocator: &BitAllocator,
+    stats_rng: &mut Pcg64,
+) -> Result<Vec<BitPlan>> {
+    collect_block_stats(model, ds, q, stats_rng)?
+        .iter()
+        .map(|s| allocator.allocate(s))
+        .collect()
 }
 
 /// Result of one training run.
@@ -473,9 +687,31 @@ pub fn train(
     let engine = QuantEngine::from_config(&cfg.parallelism);
     let mut pool = BufferPool::new();
 
+    // Adaptive bit allocation: re-solve per-block widths from fresh
+    // activation statistics every realloc interval. The stats pass draws
+    // from its own seed-derived stream, so the main rng (and with it the
+    // fixed-width trajectory's reproducibility story) is untouched.
+    let allocator = cfg.allocation.allocator(quant)?;
+    let mut plans: Option<Vec<BitPlan>> = None;
+
     for epoch in 0..cfg.epochs {
+        if let Some(alloc) = &allocator {
+            if epoch % cfg.allocation.realloc_interval_epochs == 0 {
+                let mut stats_rng = Pcg64::with_stream(seed ^ 0xb17a_110c, epoch as u64);
+                plans = Some(allocate_plans(&model, dataset, quant, alloc, &mut stats_rng)?);
+            }
+        }
         let step = timer.lap(|| {
-            train_step(&model, dataset, quant, &bins, &mut rng, &engine, &mut pool)
+            train_step(
+                &model,
+                dataset,
+                quant,
+                &bins,
+                &mut rng,
+                &engine,
+                &mut pool,
+                plans.as_deref(),
+            )
         })?;
         adam.step(&mut model.weights, &step.grads)?;
         stash_bytes = stash_bytes.max(step.stash_bytes);
@@ -534,7 +770,8 @@ pub fn capture_normalized_activations(
     let engine = QuantEngine::from_config(&cfg.parallelism);
     let mut pool = BufferPool::new();
     for _ in 0..cfg.epochs {
-        let step = train_step(&model, dataset, quant, &bins, &mut rng, &engine, &mut pool)?;
+        let step =
+            train_step(&model, dataset, quant, &bins, &mut rng, &engine, &mut pool, None)?;
         adam.step(&mut model.weights, &step.grads)?;
     }
 
@@ -574,6 +811,7 @@ pub fn capture_normalized_activations(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AllocStrategy;
     use crate::config::DatasetSpec;
 
     fn tiny_ds() -> Dataset {
@@ -710,6 +948,123 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_allocation_training_learns() {
+        let ds = tiny_ds();
+        let mut cfg = fast_cfg();
+        cfg.allocation = crate::config::AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.0,
+            realloc_interval_epochs: 5,
+            min_bits: 1,
+            max_bits: 8,
+        };
+        let res = train(&ds, &QuantConfig::int2_blockwise(8), &cfg, 0).unwrap();
+        assert!(res.test_accuracy > 0.5, "adaptive acc {}", res.test_accuracy);
+        // The budget caps code bytes at fixed-INT2 level (+ identical
+        // metadata), so the stash cannot blow up.
+        let fixed = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 0).unwrap();
+        assert!(
+            res.stash_bytes <= fixed.stash_bytes + fixed.stash_bytes / 8,
+            "adaptive stash {} vs fixed {}",
+            res.stash_bytes,
+            fixed.stash_bytes
+        );
+    }
+
+    #[test]
+    fn adaptive_training_is_deterministic_and_thread_invariant() {
+        // The acceptance criterion of ISSUE 2: serial and parallel runs
+        // stay bit-identical under heterogeneous BitPlans.
+        use crate::config::ParallelismConfig;
+        let ds = tiny_ds();
+        let mut serial_cfg = fast_cfg();
+        serial_cfg.epochs = 8;
+        serial_cfg.parallelism = ParallelismConfig::serial();
+        serial_cfg.allocation = crate::config::AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.5,
+            realloc_interval_epochs: 3,
+            min_bits: 1,
+            max_bits: 8,
+        };
+        let mut parallel_cfg = serial_cfg.clone();
+        parallel_cfg.parallelism = ParallelismConfig {
+            threads: 8,
+            min_blocks_per_shard: 1,
+        };
+        let a = train(&ds, &QuantConfig::int2_blockwise(4), &serial_cfg, 5).unwrap();
+        let b = train(&ds, &QuantConfig::int2_blockwise(4), &parallel_cfg, 5).unwrap();
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+        assert_eq!(a.best_val_loss, b.best_val_loss);
+        // And repeated runs are bit-identical.
+        let c = train(&ds, &QuantConfig::int2_blockwise(4), &serial_cfg, 5).unwrap();
+        assert_eq!(a.final_train_loss, c.final_train_loss);
+    }
+
+    #[test]
+    fn block_stats_slot_counts_match_arch() {
+        let ds = tiny_ds();
+        let mut rng = Pcg64::new(51);
+        let gcn = GcnModel::init(ds.num_features(), 32, ds.num_classes, 3, &mut rng).unwrap();
+        let q = QuantConfig::int2_blockwise(8);
+        let stats = collect_block_stats(&gcn, &ds, &q, &mut rng).unwrap();
+        assert_eq!(stats.len(), 3, "one slot per GCN layer");
+        let sage = GcnModel::init_arch(
+            Arch::GraphSage,
+            ds.num_features(),
+            32,
+            ds.num_classes,
+            3,
+            &mut rng,
+        )
+        .unwrap();
+        let stats = collect_block_stats(&sage, &ds, &q, &mut rng).unwrap();
+        assert_eq!(stats.len(), 6, "self + aggregated per GraphSAGE layer");
+        // FP32 stashes nothing compressed.
+        let stats = collect_block_stats(&gcn, &ds, &QuantConfig::fp32(), &mut rng).unwrap();
+        assert!(stats.is_empty());
+    }
+
+    #[test]
+    fn planned_step_rejects_wrong_slot_count() {
+        let ds = tiny_ds();
+        let mut rng = Pcg64::new(52);
+        let model = GcnModel::init(ds.num_features(), 16, ds.num_classes, 2, &mut rng).unwrap();
+        let q = QuantConfig::int2_blockwise(4);
+        let plans = vec![crate::alloc::BitPlan::uniform(2, 4, 16).unwrap()]; // needs 2
+        let engine = QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        assert!(train_step_planned(
+            &model,
+            &ds,
+            &q,
+            &mut rng,
+            &engine,
+            &mut pool,
+            Some(&plans)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn adaptive_sage_training_runs() {
+        let ds = tiny_ds();
+        let mut cfg = fast_cfg();
+        cfg.arch = Arch::GraphSage;
+        cfg.epochs = 10;
+        cfg.allocation = crate::config::AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.0,
+            realloc_interval_epochs: 4,
+            min_bits: 1,
+            max_bits: 8,
+        };
+        let res = train(&ds, &QuantConfig::int2_blockwise(8), &cfg, 0).unwrap();
+        assert!(res.final_train_loss.is_finite());
+    }
+
+    #[test]
     fn loss_decreases() {
         let ds = tiny_ds();
         let res = train(&ds, &QuantConfig::int2_blockwise(8), &fast_cfg(), 3).unwrap();
@@ -774,16 +1129,16 @@ mod tests {
         let bins = vec![BinSpec::Uniform; 2];
         let engine = QuantEngine::serial();
         let mut pool = BufferPool::new();
-        let base = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
+        let base = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool, None).unwrap();
         let eps = 2e-2f32;
         for &(r, c) in &[(0usize, 0usize), (5, 3), (20, 7)] {
             let orig = model.weights[0].get(r, c);
             model.weights[0].set(r, c, orig + eps);
             let plus =
-                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
+                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool, None).unwrap();
             model.weights[0].set(r, c, orig - eps);
             let minus =
-                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
+                train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool, None).unwrap();
             model.weights[0].set(r, c, orig);
             let fd = ((plus.loss - minus.loss) / (2.0 * eps as f64)) as f32;
             let an = base.grads[0].get(r, c);
@@ -828,7 +1183,7 @@ mod tests {
         let engine = QuantEngine::serial();
         let mut pool = BufferPool::new();
         let fp =
-            train_step(&model, &ds, &q_fp, &bins_fp, &mut rng, &engine, &mut pool).unwrap();
+            train_step(&model, &ds, &q_fp, &bins_fp, &mut rng, &engine, &mut pool, None).unwrap();
 
         let q = QuantConfig::int2_exact();
         let bins = vec![BinSpec::Uniform; 2];
@@ -839,7 +1194,7 @@ mod tests {
             .collect();
         let trials = 60;
         for _ in 0..trials {
-            let s = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool).unwrap();
+            let s = train_step(&model, &ds, &q, &bins, &mut rng, &engine, &mut pool, None).unwrap();
             for (a, g) in acc.iter_mut().zip(&s.grads) {
                 a.axpy(1.0, g).unwrap();
             }

@@ -145,7 +145,9 @@ pub fn stochastic_round_uniform(h: f64, b_max: u32, rng: &mut Pcg64) -> u8 {
 }
 
 /// Pack `bits`-wide codes (values `0..2^bits`) into bytes, LSB-first.
-/// Supported widths: 2, 4, 8.
+/// Supported widths: 1, 2, 4, 8 (1-bit exists for the adaptive bit
+/// allocator's lowest rung — see [`crate::alloc::BitPlan`]; the
+/// fixed-width config surface stays 2/4/8).
 ///
 /// ```
 /// use iexact::quant::{pack_codes, unpack_codes};
@@ -162,40 +164,76 @@ pub fn pack_codes(codes: &[u8], bits: u32) -> Result<Vec<u8>> {
 
 /// [`pack_codes`] into a caller-provided buffer (cleared first) so the
 /// packed allocation can be recycled through a
-/// [`crate::memory::BufferPool`].
+/// [`crate::memory::BufferPool`]. Delegates to the crate-internal
+/// `pack_codes_slice` so there is exactly one implementation of the
+/// packing layout.
 pub fn pack_codes_into(codes: &[u8], bits: u32, out: &mut Vec<u8>) -> Result<()> {
+    if !matches!(bits, 1 | 2 | 4 | 8) {
+        return Err(Error::Config(format!("unsupported bit width {bits}")));
+    }
     out.clear();
+    out.resize((codes.len() * bits as usize).div_ceil(8), 0);
+    pack_codes_slice(codes, bits, out);
+    Ok(())
+}
+
+/// [`pack_codes`] into an exactly-sized output slice, writing **every**
+/// byte of `out` (the final partial byte is zero-padded). This is the
+/// per-block packer of the heterogeneous-width path: each block of a
+/// [`crate::alloc::BitPlan`] starts at its own byte boundary, so blocks
+/// pack independently and recycled (non-zeroed) buffers are safe.
+///
+/// `out.len()` must equal `(codes.len() * bits).div_ceil(8)`; width must
+/// be one of 1/2/4/8 (both are validated by the callers once per tensor).
+pub(crate) fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
     match bits {
+        1 => {
+            for (o, c) in out.iter_mut().zip(codes.chunks(8)) {
+                let mut byte = 0u8;
+                for (i, &v) in c.iter().enumerate() {
+                    byte |= (v & 0b1) << i;
+                }
+                *o = byte;
+            }
+        }
         2 => {
-            out.reserve(codes.len().div_ceil(4));
-            for c in codes.chunks(4) {
+            for (o, c) in out.iter_mut().zip(codes.chunks(4)) {
                 let mut byte = 0u8;
                 for (i, &v) in c.iter().enumerate() {
                     byte |= (v & 0b11) << (2 * i);
                 }
-                out.push(byte);
+                *o = byte;
             }
         }
         4 => {
-            out.reserve(codes.len().div_ceil(2));
-            for c in codes.chunks(2) {
+            for (o, c) in out.iter_mut().zip(codes.chunks(2)) {
                 let mut byte = 0u8;
                 for (i, &v) in c.iter().enumerate() {
                     byte |= (v & 0b1111) << (4 * i);
                 }
-                out.push(byte);
+                *o = byte;
             }
         }
-        8 => out.extend_from_slice(codes),
-        _ => return Err(Error::Config(format!("unsupported bit width {bits}"))),
+        8 => out.copy_from_slice(codes),
+        _ => unreachable!("bit width validated before packing"),
     }
-    Ok(())
 }
 
 /// Inverse of [`pack_codes`]; `n` is the original code count.
 pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(n);
     match bits {
+        1 => {
+            for &byte in packed {
+                for i in 0..8 {
+                    if out.len() == n {
+                        break;
+                    }
+                    out.push((byte >> i) & 0b1);
+                }
+            }
+        }
         2 => {
             for &byte in packed {
                 for i in 0..4 {
@@ -238,6 +276,12 @@ pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
 /// checks once per tensor before fanning out).
 pub(crate) fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
     match bits {
+        1 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let idx = start + i;
+                *o = (packed[idx / 8] >> (idx % 8)) & 0b1;
+            }
+        }
         2 => {
             for (i, o) in out.iter_mut().enumerate() {
                 let idx = start + i;
@@ -371,7 +415,7 @@ impl QuantPlan {
         if group_len == 0 {
             return Err(Error::Config("group_len must be positive".into()));
         }
-        if !matches!(bits, 2 | 4 | 8) {
+        if !matches!(bits, 1 | 2 | 4 | 8) {
             return Err(Error::Config(format!("unsupported bit width {bits}")));
         }
         bins.validate(bits)?;
@@ -600,7 +644,7 @@ mod tests {
     #[test]
     fn pack_unpack_roundtrip_all_widths() {
         let mut rng = Pcg64::new(1);
-        for bits in [2u32, 4, 8] {
+        for bits in [1u32, 2, 4, 8] {
             let max = (1u32 << bits) as u64;
             for n in [0usize, 1, 3, 4, 5, 17, 64, 100] {
                 let codes: Vec<u8> =
@@ -618,6 +662,43 @@ mod tests {
     fn pack_rejects_bad_width() {
         assert!(pack_codes(&[0, 1], 3).is_err());
         assert!(unpack_codes(&[0], 5, 1).is_err());
+    }
+
+    #[test]
+    fn pack_slice_matches_pack_codes_and_zero_pads() {
+        let mut rng = Pcg64::new(99);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            for n in [1usize, 3, 7, 8, 9, 33] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+                let via_vec = pack_codes(&codes, bits).unwrap();
+                // Stale contents must be fully overwritten, tail included.
+                let mut out = vec![0xffu8; (n * bits as usize).div_ceil(8)];
+                pack_codes_slice(&codes, bits, &mut out);
+                assert_eq!(out, via_vec, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn int1_quantize_dequantize_roundtrip() {
+        // 1-bit codes exist for the adaptive allocator's lowest rung: the
+        // engine's fixed-width path must accept them end to end.
+        let h = sample_matrix(8, 16, 40);
+        let mut rng = Pcg64::new(41);
+        let ct = quantize_grouped(&h, 16, 1, &BinSpec::Uniform, &mut rng).unwrap();
+        assert_eq!(ct.bits, 1);
+        assert_eq!(ct.packed.len(), (8 * 16) / 8);
+        let d = ct.dequantize().unwrap();
+        // Every reconstructed value is one of the block's two endpoints,
+        // and the error is bounded by the block range.
+        for (idx, (&orig, &deq)) in h.as_slice().iter().zip(d.as_slice()).enumerate() {
+            let g = idx / 16;
+            let (z, r) = (ct.zeros[g], ct.ranges[g]);
+            assert!(deq == z || deq == z + r, "idx={idx}: {deq} not an endpoint");
+            assert!((orig - deq).abs() <= r * 1.0001);
+        }
     }
 
     #[test]

@@ -2,8 +2,26 @@
 //! family builds on (GraphSAINT-style random-node sampling and
 //! GraphSAGE-style neighbour fan-out). Full-batch training on OGB-scale
 //! graphs is what motivates activation compression in the first place;
-//! this module lets the pipeline train on induced subgraphs so the memory
-//! story composes with minibatching.
+//! this module lets the pipeline train on induced subgraphs so the
+//! memory story composes with minibatching — and, via
+//! [`train_sampled`], with adaptive bit allocation (plans are re-solved
+//! on the current epoch's subgraph every realloc interval).
+//!
+//! ```
+//! use iexact::config::DatasetSpec;
+//! use iexact::rngs::Pcg64;
+//! use iexact::sampling::sample_nodes;
+//!
+//! let parent = DatasetSpec::tiny().generate(3);
+//! let mut rng = Pcg64::new(1);
+//! let sub = sample_nodes(&parent, 64, &mut rng).unwrap();
+//! assert_eq!(sub.data.num_nodes(), 64);
+//! // node_map ties every subgraph row back to its parent node.
+//! for (s, &p) in sub.node_map.iter().enumerate() {
+//!     assert_eq!(sub.data.labels[s], parent.labels[p]);
+//! }
+//! sub.data.validate().unwrap();
+//! ```
 
 use crate::graph::Dataset;
 use crate::rngs::Pcg64;
@@ -169,11 +187,36 @@ pub fn train_sampled(
     let mut stash_bytes = 0usize;
     let mut final_train_loss = f64::NAN;
 
+    // Adaptive bit allocation composes with sampling: every realloc
+    // interval the plan is re-solved on that epoch's subgraph (same
+    // n_sample => same block counts for the following epochs). The stats
+    // pass draws from its own stream, leaving the main rng untouched.
+    let allocator = cfg.allocation.allocator(quant)?;
+    let mut plans: Option<Vec<crate::alloc::BitPlan>> = None;
+
     for epoch in 0..cfg.epochs {
         let sub = sample_nodes(parent, n_sample, &mut rng)?;
+        if let Some(alloc) = &allocator {
+            if epoch % cfg.allocation.realloc_interval_epochs == 0 {
+                let mut stats_rng = Pcg64::with_stream(seed ^ 0x5a3e_110c, epoch as u64);
+                plans = Some(crate::pipeline::allocate_plans(
+                    &model,
+                    &sub.data,
+                    quant,
+                    alloc,
+                    &mut stats_rng,
+                )?);
+            }
+        }
         let step = timer.lap(|| {
-            crate::pipeline::train_step_pooled(
-                &model, &sub.data, quant, &mut rng, &engine, &mut pool,
+            crate::pipeline::train_step_planned(
+                &model,
+                &sub.data,
+                quant,
+                &mut rng,
+                &engine,
+                &mut pool,
+                plans.as_deref(),
             )
         })?;
         adam.step(&mut model.weights, &step.1)?;
@@ -258,6 +301,36 @@ mod tests {
         assert!(sub.data.num_nodes() <= p.num_nodes());
         assert!(sub.node_map.contains(&0) && sub.node_map.contains(&1));
         sub.data.validate().unwrap();
+    }
+
+    #[test]
+    fn sampled_training_with_adaptive_allocation_runs() {
+        // Allocation composes with minibatching: block counts are stable
+        // across epochs (fixed n_sample), plans refresh every interval.
+        let p = parent();
+        let cfg = TrainConfig {
+            hidden_dim: 32,
+            epochs: 12,
+            lr: 0.02,
+            eval_every: 4,
+            seeds: vec![0],
+            allocation: crate::config::AllocationConfig {
+                strategy: crate::config::AllocStrategy::Greedy,
+                budget_bits: 2.0,
+                realloc_interval_epochs: 4,
+                min_bits: 1,
+                max_bits: 8,
+            },
+            ..TrainConfig::default()
+        };
+        let res =
+            train_sampled(&p, &QuantConfig::int2_blockwise(8), &cfg, 128, 0).unwrap();
+        assert!(res.final_train_loss.is_finite());
+        assert!(res.stash_bytes > 0);
+        // Deterministic in the seed.
+        let res2 =
+            train_sampled(&p, &QuantConfig::int2_blockwise(8), &cfg, 128, 0).unwrap();
+        assert_eq!(res.final_train_loss, res2.final_train_loss);
     }
 
     #[test]

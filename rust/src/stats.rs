@@ -1,6 +1,24 @@
 //! Statistical substrate: normal distribution primitives, the paper's
 //! clipped-normal activation model (Eq. 7), histograms, and the
 //! Jensen–Shannon divergence used in Table 2.
+//!
+//! The central object is [`ClippedNormal`] — `CN_{[1/D]}` with
+//! `μ = B/2` and `σ = −μ / Φ⁻¹(1/D)`, so exactly a `1/D` tail mass is
+//! clipped onto each boundary:
+//!
+//! ```
+//! use iexact::stats::ClippedNormal;
+//!
+//! let cn = ClippedNormal::new(2, 16).unwrap(); // INT2, D = 16
+//! assert_eq!(cn.b, 3.0);
+//! assert!((cn.mu - 1.5).abs() < 1e-12);
+//! // Eq. 7's construction: the clipped point mass at each edge is 1/D.
+//! assert!((cn.mass_at_zero() - 1.0 / 16.0).abs() < 1e-9);
+//! assert!((cn.mass_at_b() - 1.0 / 16.0).abs() < 1e-9);
+//! // Larger D concentrates the density (smaller σ).
+//! let wide = ClippedNormal::new(2, 256).unwrap();
+//! assert!(wide.sigma < cn.sigma);
+//! ```
 
 use crate::rngs::Pcg64;
 use crate::{Error, Result};

@@ -5,6 +5,20 @@
 //! handful of elementwise and reduction ops. Keeping it in-crate avoids an
 //! external dependency and lets the hot paths (quantize, matmul) own their
 //! memory layout.
+//!
+//! ```
+//! use iexact::tensor::Matrix;
+//!
+//! let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+//! let b = Matrix::from_fn(2, 2, |r, c| if r == c { 1.0 } else { 0.0 });
+//! // Multiplying by the identity is the identity (row-major layout).
+//! assert_eq!(a.matmul(&b).unwrap().as_slice(), a.as_slice());
+//! assert_eq!(a.transpose().get(0, 1), 3.0);
+//! let (lo, hi) = a.min_max();
+//! assert_eq!((lo, hi), (1.0, 4.0));
+//! // Shape mismatches are errors, not panics.
+//! assert!(a.matmul(&Matrix::zeros(3, 3)).is_err());
+//! ```
 
 use crate::{Error, Result};
 

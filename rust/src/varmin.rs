@@ -62,6 +62,45 @@ pub fn expected_sr_variance(cn: &ClippedNormal, alpha: f64, beta: f64) -> Result
             "need 0 < α < β < {b}: α={alpha} β={beta}"
         )));
     }
+    expected_sr_variance_bounds(cn, &[0.0, alpha, beta, b])
+}
+
+/// Eq. 10 generalized to an arbitrary bin layout
+/// `0 = a_0 < a_1 < … < a_B = cn.b`: the expected SR variance of
+/// `h ~ CN_{[1/D]}` under those boundaries, in closed form.
+///
+/// This is the variance model the adaptive bit allocator
+/// ([`crate::alloc::BitAllocator`]) evaluates at every candidate bit
+/// width: uniform integer boundaries at `b` bits are just the layout
+/// `[0, 1, …, 2^b − 1]`.
+///
+/// ```
+/// use iexact::stats::ClippedNormal;
+/// use iexact::varmin::{expected_sr_variance, expected_sr_variance_bounds};
+/// let cn = ClippedNormal::new(2, 16).unwrap();
+/// // The INT2 special case agrees with the general form.
+/// let a = expected_sr_variance(&cn, 1.0, 2.0).unwrap();
+/// let b = expected_sr_variance_bounds(&cn, &[0.0, 1.0, 2.0, 3.0]).unwrap();
+/// assert!((a - b).abs() < 1e-15);
+/// ```
+pub fn expected_sr_variance_bounds(cn: &ClippedNormal, boundaries: &[f64]) -> Result<f64> {
+    if boundaries.len() < 2 {
+        return Err(Error::Config(format!(
+            "need at least 2 boundaries, got {}",
+            boundaries.len()
+        )));
+    }
+    if boundaries[0] != 0.0 || (boundaries[boundaries.len() - 1] - cn.b).abs() > 1e-12 {
+        return Err(Error::Config(format!(
+            "boundaries must span [0, {}], got [{}, {}]",
+            cn.b,
+            boundaries[0],
+            boundaries[boundaries.len() - 1]
+        )));
+    }
+    if !boundaries.windows(2).all(|w| w[1] > w[0]) {
+        return Err(Error::Config("boundaries must be increasing".into()));
+    }
     // Bin [a, c] with width δ = c − a:
     //   ∫ (δ(h−a) − (h−a)²) φ(h) dh
     // = ∫ (−h² + (δ + 2a) h − a(δ + a)) φ(h) dh
@@ -71,7 +110,17 @@ pub fn expected_sr_variance(cn: &ClippedNormal, alpha: f64, beta: f64) -> Result
         let delta = c - a;
         -m2 + (delta + 2.0 * a) * m1 - a * (delta + a) * m0
     };
-    Ok(bin(0.0, alpha) + bin(alpha, beta) + bin(beta, b))
+    Ok(boundaries.windows(2).map(|w| bin(w[0], w[1])).sum())
+}
+
+/// Expected SR variance of `h ~ CN_{[1/D]}` under **uniform integer
+/// boundaries** `[0, 1, …, B]` (the default bin layout at `cn`'s bit
+/// width). This is the per-scalar noise term — still on the normalized
+/// `[0, B]` scale — that the bit allocator compares across widths.
+pub fn expected_uniform_variance(cn: &ClippedNormal) -> Result<f64> {
+    let b = cn.b.round() as usize;
+    let boundaries: Vec<f64> = (0..=b).map(|i| i as f64).collect();
+    expected_sr_variance_bounds(cn, &boundaries)
 }
 
 /// Eq. 10 evaluated by adaptive Simpson quadrature — used as an
@@ -350,6 +399,59 @@ mod tests {
                 "h={h}: mc={mc} analytic={analytic}"
             );
         }
+    }
+
+    #[test]
+    fn bounds_form_matches_quadrature_at_higher_widths() {
+        // The generalized closed form must agree with direct Simpson
+        // quadrature for uniform integer bins at INT2 and INT4.
+        for bits in [2u32, 4] {
+            let cn = ClippedNormal::new(bits, 32).unwrap();
+            let b = cn.b.round() as usize;
+            let bounds: Vec<f64> = (0..=b).map(|i| i as f64).collect();
+            let cf = expected_sr_variance_bounds(&cn, &bounds).unwrap();
+            let mut quad = 0.0;
+            for w in bounds.windows(2) {
+                let (a, c) = (w[0], w[1]);
+                let n = 4000;
+                let h = (c - a) / n as f64;
+                let f = |x: f64| sr_variance(x, &bounds) * cn.pdf(x);
+                let mut acc = f(a) + f(c);
+                for i in 1..n {
+                    let x = a + i as f64 * h;
+                    acc += if i % 2 == 1 { 4.0 } else { 2.0 } * f(x);
+                }
+                quad += acc * h / 3.0;
+            }
+            assert!((cf - quad).abs() < 1e-7, "bits={bits}: {cf} vs {quad}");
+        }
+    }
+
+    #[test]
+    fn uniform_variance_decreases_with_bit_width() {
+        // More levels => strictly less expected rounding noise; this
+        // monotonicity is what makes the allocator's upgrades worthwhile.
+        let mut last = f64::INFINITY;
+        for bits in [1u32, 2, 4, 8] {
+            let cn = ClippedNormal::new(bits, 64).unwrap();
+            let v = expected_uniform_variance(&cn).unwrap();
+            // Compare on the dequantized scale: Var/B² (the normalized
+            // scale [0, B] grows with bits, so divide it out).
+            let b = cn.b;
+            let dequant = v / (b * b);
+            assert!(dequant < last, "bits={bits}: {dequant} !< {last}");
+            assert!(dequant > 0.0);
+            last = dequant;
+        }
+    }
+
+    #[test]
+    fn bounds_form_rejects_bad_layouts() {
+        let cn = ClippedNormal::new(2, 16).unwrap();
+        assert!(expected_sr_variance_bounds(&cn, &[0.0]).is_err());
+        assert!(expected_sr_variance_bounds(&cn, &[0.0, 1.0, 2.0]).is_err()); // ends short of B
+        assert!(expected_sr_variance_bounds(&cn, &[0.0, 2.0, 1.0, 3.0]).is_err());
+        assert!(expected_sr_variance_bounds(&cn, &[0.5, 1.0, 3.0]).is_err());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Property tests for the adaptive bit-allocation subsystem (ISSUE 2):
+//! every plan a [`BitAllocator`] produces respects its width bounds and
+//! average budget, planned quantization round-trips (bit-exactly equal
+//! to the fixed-width engine at a constant width, lossless at 8 bits on
+//! grid-aligned inputs), and the adaptive plan beats fixed INT2 at an
+//! equal average budget on block-heterogeneous activations.
+
+use iexact::alloc::{BitAllocator, BitPlan, BlockStats};
+use iexact::engine::QuantEngine;
+use iexact::quant::BinSpec;
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
+use iexact::util::prop;
+
+fn hetero_stats(nb: usize, group_len: usize, seed: u64) -> BlockStats {
+    let mut rng = Pcg64::new(seed);
+    BlockStats {
+        ranges: (0..nb)
+            .map(|_| (rng.next_normal() * 1.2).exp() as f32)
+            .collect(),
+        group_len,
+        n_scalars: nb * group_len,
+        model_d: 32,
+    }
+}
+
+#[test]
+fn every_plan_respects_bounds_and_budget() {
+    // Random (budget, block-count) pairs: the plan's widths stay within
+    // [min_bits, max_bits], the scalar-average width stays within the
+    // budget, and the solver leaves less than one block's largest
+    // upgrade unspent (unless every block is already at max_bits).
+    prop::check(
+        "plan bounds and budget",
+        60,
+        prop::pair(prop::f64_range(1.0, 8.0), prop::usize_range(1, 96)),
+        |&(budget, nb)| {
+            let stats = hetero_stats(nb, 16, nb as u64 + 1);
+            let plan = BitAllocator::new(budget, 1, 8).unwrap().allocate(&stats).unwrap();
+            let widths_ok = plan.bits().iter().all(|&b| [1u8, 2, 4, 8].contains(&b));
+            let avg = plan.avg_bits();
+            let under_budget = avg <= budget + 1e-9;
+            let saturated = plan.bits().iter().all(|&b| b == 8);
+            // Largest single upgrade is 4→8: 4 bits × one block.
+            let nearly_exhausted = saturated || budget - avg <= 4.0 / nb as f64 + 1e-9;
+            widths_ok && under_budget && nearly_exhausted
+        },
+    );
+}
+
+#[test]
+fn constrained_ladders_respect_bounds() {
+    prop::check(
+        "constrained ladder bounds",
+        40,
+        prop::pair(prop::f64_range(2.0, 4.0), prop::usize_range(1, 48)),
+        |&(budget, nb)| {
+            let stats = hetero_stats(nb, 8, nb as u64 + 101);
+            let plan = BitAllocator::new(budget, 2, 4).unwrap().allocate(&stats).unwrap();
+            plan.bits().iter().all(|&b| b == 2 || b == 4) && plan.avg_bits() <= budget + 1e-9
+        },
+    );
+}
+
+#[test]
+fn planned_quantization_roundtrips_within_per_block_width() {
+    // Under any random plan, |ĥ − h| ≤ range_g / (2^{b_g} − 1).
+    prop::check(
+        "planned roundtrip error bound",
+        25,
+        prop::usize_range(1, 40),
+        |&nb| {
+            let g = 24;
+            let mut rng = Pcg64::new(nb as u64 + 7);
+            let h = Matrix::from_fn(nb, g, |_, _| rng.next_f32() * 6.0 - 3.0);
+            let bits: Vec<u8> = (0..nb)
+                .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+                .collect();
+            let plan = BitPlan::new(bits, g).unwrap();
+            let pt = QuantEngine::auto()
+                .quantize_planned_seeded(&h, &plan, nb as u64)
+                .unwrap();
+            let d = pt.dequantize().unwrap();
+            h.as_slice().iter().zip(d.as_slice()).enumerate().all(
+                |(idx, (&orig, &deq))| {
+                    let blk = idx / g;
+                    let b = ((1u32 << plan.bit(blk)) - 1) as f32;
+                    (orig - deq).abs() <= pt.ranges[blk] / b * 1.0001
+                },
+            )
+        },
+    );
+}
+
+#[test]
+fn eight_bit_plan_roundtrips_grid_values_losslessly() {
+    // Values sitting exactly on the 8-bit grid (0..=255 in each block)
+    // reconstruct bit-exactly: SR on a boundary never moves, and the
+    // dequant LUT maps code k back to z + k·(r/255) = the original.
+    let rows = 16;
+    let cols = 64; // 1024 scalars, G = 256 -> 4 blocks, each hits 0 and 255
+    let h = Matrix::from_fn(rows, cols, |r, c| ((r * cols + c) % 256) as f32);
+    let plan = BitPlan::uniform(8, (rows * cols) / 256, 256).unwrap();
+    for threads in [1usize, 4] {
+        let pt = QuantEngine::with_threads(threads)
+            .quantize_planned_seeded(&h, &plan, 99)
+            .unwrap();
+        let d = pt.dequantize().unwrap();
+        assert_eq!(d.as_slice(), h.as_slice(), "threads={threads}");
+    }
+}
+
+#[test]
+fn uniform_plans_match_fixed_width_engine_bit_exactly() {
+    // The planned path at a constant width is the fixed-width path:
+    // same packed bytes, same metadata, same dequantization.
+    let mut rng = Pcg64::new(12);
+    let h = Matrix::from_fn(48, 32, |_, _| rng.next_f32() * 2.0 - 1.0);
+    for bits in [2u32, 4, 8] {
+        let fixed = QuantEngine::serial()
+            .quantize_seeded(&h, 32, bits, &BinSpec::Uniform, 555)
+            .unwrap();
+        let plan = BitPlan::uniform(bits, 48, 32).unwrap();
+        let planned = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 555)
+            .unwrap();
+        assert_eq!(planned.packed, fixed.packed, "bits={bits}");
+        assert_eq!(planned.zeros, fixed.zeros, "bits={bits}");
+        assert_eq!(planned.ranges, fixed.ranges, "bits={bits}");
+        assert_eq!(
+            planned.dequantize().unwrap().as_slice(),
+            fixed.dequantize().unwrap().as_slice(),
+            "bits={bits}"
+        );
+    }
+}
+
+#[test]
+fn adaptive_beats_fixed_int2_at_equal_budget() {
+    // ISSUE 2 acceptance: on block-heterogeneous activations the greedy
+    // plan at an average 2-bit budget realizes lower quantize→dequantize
+    // MSE than fixed INT2, at no more stored bytes.
+    let nb = 512;
+    let g = 64;
+    let mut rng = Pcg64::new(21);
+    let mut data = Vec::with_capacity(nb * g);
+    for _ in 0..nb {
+        let scale = (rng.next_normal() * 1.2).exp() as f32;
+        for _ in 0..g {
+            data.push(rng.next_f32() * scale);
+        }
+    }
+    let h = Matrix::from_vec(nb, g, data).unwrap();
+    let stats = BlockStats::measure(&h, g).unwrap();
+    let plan = BitAllocator::new(2.0, 1, 8).unwrap().allocate(&stats).unwrap();
+    assert!(plan.avg_bits() <= 2.0 + 1e-9);
+
+    let engine = QuantEngine::auto();
+    let mse = |a: &Matrix, b: &Matrix| -> f64 {
+        a.as_slice()
+            .iter()
+            .zip(b.as_slice())
+            .map(|(&x, &y)| (x as f64 - y as f64) * (x as f64 - y as f64))
+            .sum::<f64>()
+            / a.len() as f64
+    };
+    let mut err_fixed = 0.0;
+    let mut err_adaptive = 0.0;
+    let mut bytes_fixed = 0;
+    let mut bytes_adaptive = 0;
+    for seed in 0..4u64 {
+        let ct = engine
+            .quantize_seeded(&h, g, 2, &BinSpec::Uniform, seed)
+            .unwrap();
+        bytes_fixed = ct.nbytes();
+        err_fixed += mse(&h, &engine.dequantize(&ct).unwrap());
+        let pt = engine.quantize_planned_seeded(&h, &plan, seed).unwrap();
+        bytes_adaptive = pt.nbytes();
+        err_adaptive += mse(&h, &engine.dequantize_planned(&pt).unwrap());
+    }
+    assert!(
+        bytes_adaptive <= bytes_fixed,
+        "adaptive {bytes_adaptive} bytes vs fixed {bytes_fixed}"
+    );
+    assert!(
+        err_adaptive < err_fixed,
+        "adaptive MSE {err_adaptive} vs fixed {err_fixed}"
+    );
+}
+
+#[test]
+fn allocation_is_deterministic() {
+    let stats = hetero_stats(64, 16, 3);
+    let a = BitAllocator::new(2.5, 1, 8).unwrap().allocate(&stats).unwrap();
+    let b = BitAllocator::new(2.5, 1, 8).unwrap().allocate(&stats).unwrap();
+    assert_eq!(a, b);
+}
