@@ -82,6 +82,41 @@ fn main() {
         );
     }
 
+    // ---- Partitioned training, end to end ----
+    // Full-graph vs K-way edge-cut partitioning at the same width: the
+    // partitioned arms pay K small steps + cache parks per epoch and in
+    // exchange cap the dense-resident stash at one partition's worth.
+    use iexact::config::PartitionConfig;
+    println!("\n# partitioned training (blockwise INT2 G/R=8, equal width)");
+    println!(
+        "{:<24} {:>14} {:>12} {:>16}",
+        "partitioning", "ms/epoch", "epochs/s", "peak resident KB"
+    );
+    let quant = iexact::config::QuantConfig::int2_blockwise(8);
+    for k in [1usize, 4] {
+        let mut pcfg = cfg.clone();
+        pcfg.partition = PartitionConfig {
+            num_partitions: k,
+            halo_hops: 0,
+            ..PartitionConfig::default()
+        };
+        let mut peak = 0usize;
+        let (_, med, _) = measure(1, 3, || {
+            let out =
+                iexact::pipeline::train_partitioned(&dataset, &quant, &pcfg, 0).unwrap();
+            peak = out.peak_resident_bytes;
+            std::hint::black_box(out);
+        });
+        let per_epoch = med / pcfg.epochs as f64;
+        println!(
+            "{:<24} {:>14.2} {:>12.2} {:>16}",
+            format!("K={k}"),
+            per_epoch * 1e3,
+            1.0 / per_epoch,
+            peak / 1024
+        );
+    }
+
     // ---- Quantization-engine threading, end to end ----
     // Same training step, same numbers (bit-identical by construction) —
     // only the wall clock may differ. Shard gating is disabled so the

@@ -2,9 +2,23 @@
 //! self-describing binary format (magic + version + arch + shapes +
 //! little-endian f32 payload + checksum), so long runs survive restarts
 //! and trained models can be shipped between the native and AOT paths.
+//!
+//! Two formats share the magic:
+//!
+//! * **V1** ([`save`]/[`load`]) — weights only, for shipping trained
+//!   models.
+//! * **V2** ([`save_state`]/[`load_state`]) — a full mid-run
+//!   [`TrainState`]: weights **plus** Adam moments, the training RNG
+//!   state and the active heterogeneous [`BitPlan`]s, which is exactly
+//!   the set of values [`crate::pipeline::train_span`] needs to continue
+//!   a run **bit-identically** to one that never stopped (enforced by
+//!   `tests/checkpoint_resume.rs`).
 
+use crate::alloc::BitPlan;
 use crate::config::Arch;
+use crate::linalg::Adam;
 use crate::pipeline::GcnModel;
+use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -12,6 +26,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"IEXACKPT";
 const VERSION: u32 = 1;
+const STATE_VERSION: u32 = 2;
 
 /// Serialize a model to `path`.
 pub fn save(model: &GcnModel, path: impl AsRef<Path>) -> Result<()> {
@@ -96,6 +111,231 @@ pub fn load(path: impl AsRef<Path>) -> Result<GcnModel> {
     Ok(GcnModel { arch, weights })
 }
 
+/// Everything a mid-run training loop needs to continue exactly where it
+/// stopped: the epoch cursor, model weights, Adam moments, the training
+/// RNG, and the heterogeneous bit plans active at checkpoint time (plans
+/// are solved from epoch-addressed statistics, so re-deriving them after
+/// a resume would see a *later* model and break bit-identity).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Next epoch to run (`epochs completed so far`).
+    pub epoch: usize,
+    pub model: GcnModel,
+    pub adam: Adam,
+    pub rng: Pcg64,
+    /// Active [`BitPlan`]s (one per stashed tensor), if the run uses
+    /// adaptive allocation.
+    pub plans: Option<Vec<BitPlan>>,
+}
+
+fn write_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    write_u64(buf, m.rows() as u64);
+    write_u64(buf, m.cols() as u64);
+    for &v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a full [`TrainState`] to `path` (format V2).
+pub fn save_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    write_u32(&mut buf, STATE_VERSION);
+    write_u64(&mut buf, state.epoch as u64);
+    buf.push(match state.model.arch {
+        Arch::Gcn => 0,
+        Arch::GraphSage => 1,
+    });
+    write_u32(&mut buf, state.model.weights.len() as u32);
+    for w in &state.model.weights {
+        write_matrix(&mut buf, w);
+    }
+    // Adam: every hyperparameter that lives on the optimizer (betas and
+    // eps are pub and tunable — resetting them on load would silently
+    // fork the resumed trajectory) + the step counter and moments.
+    buf.extend_from_slice(&state.adam.lr.to_le_bytes());
+    buf.extend_from_slice(&state.adam.weight_decay.to_le_bytes());
+    buf.extend_from_slice(&state.adam.beta1.to_le_bytes());
+    buf.extend_from_slice(&state.adam.beta2.to_le_bytes());
+    buf.extend_from_slice(&state.adam.eps.to_le_bytes());
+    write_u64(&mut buf, state.adam.t());
+    let (m, v) = state.adam.moments();
+    write_u32(&mut buf, m.len() as u32);
+    for mat in m.iter().chain(v) {
+        write_matrix(&mut buf, mat);
+    }
+    // RNG state.
+    buf.extend_from_slice(&state.rng.to_bytes());
+    // Active bit plans.
+    match &state.plans {
+        None => buf.push(0),
+        Some(plans) => {
+            buf.push(1);
+            write_u32(&mut buf, plans.len() as u32);
+            for p in plans {
+                write_u64(&mut buf, p.group_len() as u64);
+                write_u64(&mut buf, p.num_blocks() as u64);
+                buf.extend_from_slice(p.bits());
+            }
+        }
+    }
+    let checksum = fnv1a(&buf);
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+struct Reader<'a> {
+    cur: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.cur.len() < n {
+            return Err(Error::Artifact("checkpoint truncated".into()));
+        }
+        let cur: &'a [u8] = self.cur;
+        let (head, rest) = cur.split_at(n);
+        self.cur = rest;
+        Ok(head)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn byte(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        if rows.saturating_mul(cols) > (1 << 30) {
+            return Err(Error::Artifact(format!("matrix {rows}x{cols} too large")));
+        }
+        let raw = self.take(rows * cols * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+/// Load a [`TrainState`] saved by [`save_state`], validating magic,
+/// version and checksum.
+pub fn load_state(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        return Err(Error::Artifact("checkpoint too short".into()));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        return Err(Error::Artifact("checkpoint checksum mismatch".into()));
+    }
+    let mut r = Reader { cur: body };
+    if r.take(8)? != MAGIC {
+        return Err(Error::Artifact("not an iexact checkpoint".into()));
+    }
+    let version = r.u32()?;
+    if version != STATE_VERSION {
+        return Err(Error::Artifact(format!(
+            "expected a V{STATE_VERSION} train-state checkpoint, got version {version}"
+        )));
+    }
+    let epoch = r.u64()? as usize;
+    let arch = match r.byte()? {
+        0 => Arch::Gcn,
+        1 => Arch::GraphSage,
+        other => return Err(Error::Artifact(format!("bad arch byte {other}"))),
+    };
+    let n_weights = r.u32()? as usize;
+    if n_weights == 0 || n_weights > 1024 {
+        return Err(Error::Artifact(format!("bad layer count {n_weights}")));
+    }
+    let mut weights = Vec::with_capacity(n_weights);
+    for _ in 0..n_weights {
+        weights.push(r.matrix()?);
+    }
+    let lr = r.f32()?;
+    let weight_decay = r.f32()?;
+    let beta1 = r.f32()?;
+    let beta2 = r.f32()?;
+    let eps = r.f32()?;
+    let t = r.u64()?;
+    let n_moments = r.u32()? as usize;
+    if n_moments != n_weights {
+        return Err(Error::Artifact(format!(
+            "adam state has {n_moments} moments for {n_weights} weights"
+        )));
+    }
+    let mut m = Vec::with_capacity(n_moments);
+    for _ in 0..n_moments {
+        m.push(r.matrix()?);
+    }
+    let mut v = Vec::with_capacity(n_moments);
+    for _ in 0..n_moments {
+        v.push(r.matrix()?);
+    }
+    let mut adam = Adam::from_state(lr, weight_decay, t, m, v)?;
+    adam.beta1 = beta1;
+    adam.beta2 = beta2;
+    adam.eps = eps;
+    let rng_bytes: [u8; 32] = r.take(32)?.try_into().unwrap();
+    let rng = Pcg64::from_bytes(&rng_bytes);
+    let plans = match r.byte()? {
+        0 => None,
+        1 => {
+            let n_plans = r.u32()? as usize;
+            if n_plans > 4096 {
+                return Err(Error::Artifact(format!("bad plan count {n_plans}")));
+            }
+            let mut plans = Vec::with_capacity(n_plans);
+            for _ in 0..n_plans {
+                let group_len = r.u64()? as usize;
+                let n_blocks = r.u64()? as usize;
+                if n_blocks > (1 << 30) {
+                    return Err(Error::Artifact(format!("bad block count {n_blocks}")));
+                }
+                let bits = r.take(n_blocks)?.to_vec();
+                plans.push(BitPlan::new(bits, group_len)?);
+            }
+            Some(plans)
+        }
+        other => return Err(Error::Artifact(format!("bad plans flag {other}"))),
+    };
+    if !r.cur.is_empty() {
+        return Err(Error::Artifact("trailing bytes in checkpoint".into()));
+    }
+    Ok(TrainState {
+        epoch,
+        model: GcnModel { arch, weights },
+        adam,
+        rng,
+        plans,
+    })
+}
+
 /// FNV-1a 64-bit hash (checksum only — not cryptographic).
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -157,6 +397,87 @@ mod tests {
         std::fs::write(&p, b"xx").unwrap();
         assert!(load(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn train_state_round_trip_preserves_everything() {
+        let m = model(Arch::GraphSage);
+        let mut adam = Adam::new(0.02, 0.001, &m.shapes());
+        // Tuned (non-default) hyperparameters must survive the round
+        // trip — resetting them on load would fork resumed trajectories.
+        adam.beta1 = 0.85;
+        adam.beta2 = 0.995;
+        adam.eps = 1e-7;
+        // Advance the optimizer so t/moments are non-trivial.
+        let mut weights = m.weights.clone();
+        let grads: Vec<Matrix> = m.weights.iter().map(|w| w.map(|v| v * 0.1)).collect();
+        adam.step(&mut weights, &grads).unwrap();
+        let mut rng = Pcg64::new(3);
+        rng.next_u64();
+        let plans = Some(vec![
+            BitPlan::new(vec![1, 2, 4, 8], 16).unwrap(),
+            BitPlan::uniform(2, 5, 32).unwrap(),
+        ]);
+        let state = TrainState {
+            epoch: 7,
+            model: m.clone(),
+            adam: adam.clone(),
+            rng: rng.clone(),
+            plans: plans.clone(),
+        };
+        let p = tmp("state");
+        save_state(&state, &p).unwrap();
+        let loaded = load_state(&p).unwrap();
+        assert_eq!(loaded.epoch, 7);
+        assert_eq!(loaded.model.arch, m.arch);
+        for (a, b) in loaded.model.weights.iter().zip(&m.weights) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(loaded.adam.t(), adam.t());
+        assert_eq!(loaded.adam.lr, adam.lr);
+        assert_eq!(loaded.adam.weight_decay, adam.weight_decay);
+        assert_eq!(loaded.adam.beta1, 0.85);
+        assert_eq!(loaded.adam.beta2, 0.995);
+        assert_eq!(loaded.adam.eps, 1e-7);
+        let (lm, lv) = loaded.adam.moments();
+        let (am, av) = adam.moments();
+        assert_eq!(lm, am);
+        assert_eq!(lv, av);
+        assert_eq!(loaded.plans, plans);
+        // The RNG continues the exact sequence.
+        let mut lr = loaded.rng;
+        assert_eq!(lr.next_u64(), rng.next_u64());
+        // The V1 weights-only loader refuses a V2 state file.
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn train_state_rejects_corruption_and_no_plans_round_trips() {
+        let m = model(Arch::Gcn);
+        let state = TrainState {
+            epoch: 0,
+            adam: Adam::new(0.01, 0.0, &m.shapes()),
+            model: m,
+            rng: Pcg64::new(1),
+            plans: None,
+        };
+        let p = tmp("state_noplan");
+        save_state(&state, &p).unwrap();
+        let loaded = load_state(&p).unwrap();
+        assert!(loaded.plans.is_none());
+        // Flip a byte: checksum must catch it.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_state(&p).is_err());
+        // And a V1 file is refused by the state loader.
+        let p1 = tmp("v1_for_state");
+        save(&state.model, &p1).unwrap();
+        assert!(load_state(&p1).is_err());
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p1).ok();
     }
 
     #[test]

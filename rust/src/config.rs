@@ -360,6 +360,75 @@ impl AllocationConfig {
     }
 }
 
+/// Partitioned large-graph training knobs — the `[partition]` config
+/// section.
+///
+/// With `num_partitions > 1` the trainer
+/// ([`crate::pipeline::train_partitioned`]) splits the graph into that
+/// many BFS/greedy edge-cut induced subgraphs
+/// ([`crate::partition::partition_dataset`]) and trains
+/// partition-by-partition with per-epoch gradient accumulation, parking
+/// inactive partitions' activations in a compressed
+/// [`ActivationCache`](crate::memory::ActivationCache). Only the active
+/// partition's stash is dense-resident, so peak activation memory drops
+/// roughly with `1/K` (see `docs/partitioned-training.md`).
+///
+/// ```toml
+/// [partition]
+/// num_partitions = 4   # K induced subgraphs (1 = full-graph training)
+/// halo_hops = 0        # h-hop boundary neighborhood per partition
+/// cache_bits = 4       # width of cached (parked) activations
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionConfig {
+    /// Number of partitions `K`; `1` means full-graph training.
+    pub num_partitions: usize,
+    /// Halo depth: each partition's subgraph additionally contains the
+    /// exact `h`-hop boundary neighborhood of its core (`0` = pure
+    /// Cluster-GCN edge-cut training).
+    pub halo_hops: usize,
+    /// Bit width of activations parked in the cache (1/2/4/8).
+    pub cache_bits: u32,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            num_partitions: 1,
+            halo_hops: 0,
+            cache_bits: 4,
+        }
+    }
+}
+
+impl PartitionConfig {
+    /// Halo depths beyond this are certainly a typo: with a sane graph
+    /// diameter the halo has swallowed the whole parent long before.
+    pub const MAX_HALO_HOPS: usize = 16;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_partitions == 0 {
+            return Err(Error::Config(
+                "partition.num_partitions must be >= 1".into(),
+            ));
+        }
+        if self.halo_hops > Self::MAX_HALO_HOPS {
+            return Err(Error::Config(format!(
+                "partition.halo_hops must be <= {}, got {}",
+                Self::MAX_HALO_HOPS,
+                self.halo_hops
+            )));
+        }
+        if !SUPPORTED_WIDTHS.contains(&self.cache_bits) {
+            return Err(Error::Config(format!(
+                "partition.cache_bits must be one of {SUPPORTED_WIDTHS:?}, got {}",
+                self.cache_bits
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -376,6 +445,8 @@ pub struct TrainConfig {
     pub parallelism: ParallelismConfig,
     /// Per-block bit allocation (`[allocation]`; default: fixed width).
     pub allocation: AllocationConfig,
+    /// Partitioned large-graph training (`[partition]`; default: off).
+    pub partition: PartitionConfig,
 }
 
 impl Default for TrainConfig {
@@ -391,6 +462,7 @@ impl Default for TrainConfig {
             eval_every: 5,
             parallelism: ParallelismConfig::default(),
             allocation: AllocationConfig::default(),
+            partition: PartitionConfig::default(),
         }
     }
 }
@@ -412,7 +484,8 @@ impl TrainConfig {
             return Err(Error::Config("train.eval_every must be >= 1".into()));
         }
         self.parallelism.validate()?;
-        self.allocation.validate()
+        self.allocation.validate()?;
+        self.partition.validate()
     }
 }
 
@@ -682,6 +755,37 @@ impl ExperimentConfig {
             train.allocation.max_bits = b as u32;
         }
 
+        // [partition] — partitioned large-graph training. Negative values
+        // are rejected before the usize/u32 casts (cf. [parallelism] and
+        // [allocation]), so they cannot wrap into huge valid-looking
+        // counts.
+        if let Some(k) = t.get_int("partition.num_partitions") {
+            if k < 1 {
+                return Err(Error::Config(format!(
+                    "partition.num_partitions must be >= 1, got {k}"
+                )));
+            }
+            train.partition.num_partitions = k as usize;
+        }
+        if let Some(h) = t.get_int("partition.halo_hops") {
+            if h < 0 {
+                return Err(Error::Config(format!(
+                    "partition.halo_hops must be >= 0, got {h}"
+                )));
+            }
+            train.partition.halo_hops = h as usize;
+        }
+        // Range-check before the u32 cast so a huge i64 cannot truncate
+        // into an accidentally-valid width (cf. allocation.min_bits).
+        if let Some(b) = t.get_int("partition.cache_bits") {
+            if !(1..=8).contains(&b) {
+                return Err(Error::Config(format!(
+                    "partition.cache_bits must be in 1..=8, got {b}"
+                )));
+            }
+            train.partition.cache_bits = b as u32;
+        }
+
         let cfg = ExperimentConfig {
             dataset,
             quant,
@@ -886,6 +990,67 @@ seeds = [0, 1]
         // Greedy + FP32 is a no-op combination and rejected too.
         let e = err("[quant]\nmode = \"fp32\"\n\n[allocation]\nstrategy = \"greedy\"\n");
         assert!(e.contains("allocation.strategy") && e.contains("fp32"), "{e}");
+    }
+
+    #[test]
+    fn toml_partition_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[partition]\nnum_partitions = 4\nhalo_hops = 2\ncache_bits = 4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.partition,
+            PartitionConfig {
+                num_partitions: 4,
+                halo_hops: 2,
+                cache_bits: 4
+            }
+        );
+        // Defaults when the section is absent: full-graph training.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.partition, PartitionConfig::default());
+        assert_eq!(cfg.train.partition.num_partitions, 1);
+    }
+
+    #[test]
+    fn partition_validation_reports_key_paths() {
+        // Every [partition] validation error names its full key path —
+        // the PR 2 audit contract, extended to the new section.
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        let cases: &[(&str, &str)] = &[
+            ("[partition]\nnum_partitions = 0\n", "partition.num_partitions"),
+            ("[partition]\nnum_partitions = -3\n", "partition.num_partitions"),
+            ("[partition]\nhalo_hops = -1\n", "partition.halo_hops"),
+            ("[partition]\nhalo_hops = 17\n", "partition.halo_hops"),
+            ("[partition]\ncache_bits = 3\n", "partition.cache_bits"),
+            ("[partition]\ncache_bits = 0\n", "partition.cache_bits"),
+            ("[partition]\ncache_bits = -2\n", "partition.cache_bits"),
+            // Out-of-range values must not truncate through the u32 cast
+            // into accidentally-valid widths (4294967298 as u32 == 2).
+            ("[partition]\ncache_bits = 4294967298\n", "partition.cache_bits"),
+        ];
+        for (toml, key) in cases {
+            let e = err(toml);
+            assert!(e.contains(key), "error for `{toml}` missing '{key}': {e}");
+        }
+        // And the struct-level validator agrees with the TOML layer.
+        let p = PartitionConfig {
+            num_partitions: 0,
+            ..PartitionConfig::default()
+        };
+        assert!(p.validate().unwrap_err().to_string().contains("partition.num_partitions"));
+        let p = PartitionConfig {
+            halo_hops: PartitionConfig::MAX_HALO_HOPS + 1,
+            ..PartitionConfig::default()
+        };
+        assert!(p.validate().unwrap_err().to_string().contains("partition.halo_hops"));
+        let p = PartitionConfig {
+            cache_bits: 5,
+            ..PartitionConfig::default()
+        };
+        assert!(p.validate().unwrap_err().to_string().contains("partition.cache_bits"));
     }
 
     #[test]

@@ -457,6 +457,21 @@ impl QuantEngine {
         self.quantize_planned_impl(h, plan, rng.next_u64(), Some(pool))
     }
 
+    /// Seed-addressed **and** pooled planned quantization: the
+    /// idempotent entry point behind
+    /// [`ActivationCache::park`](crate::memory::ActivationCache::park) —
+    /// re-quantizing the same matrix under the same seed reproduces the
+    /// same bytes while still recycling buffers through `pool`.
+    pub fn quantize_planned_seeded_pooled(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        seed: u64,
+        pool: &mut BufferPool,
+    ) -> Result<PlannedTensor> {
+        self.quantize_planned_impl(h, plan, seed, Some(pool))
+    }
+
     fn quantize_planned_impl(
         &self,
         h: &Matrix,

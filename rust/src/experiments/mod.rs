@@ -12,6 +12,7 @@
 //! | `fig4`   | Fig. 4 — variance reduction vs assumed D per layer |
 //! | `fig5`   | Fig. 5 — variance-reduction curves for CN_{1/D} |
 //! | `allocation` | adaptive vs fixed per-block bit allocation at equal budgets (beyond-paper, ActNN-style) |
+//! | `partition` | partitioned large-graph training: peak-resident bytes vs full-graph at equal width (beyond-paper, Cluster-GCN-style) |
 
 pub mod ablation;
 pub mod allocation;
@@ -20,6 +21,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod partition;
 pub mod table1;
 pub mod table2;
 

@@ -1,0 +1,232 @@
+//! Partitioned-training sweep (ISSUE 3 acceptance artifact).
+//!
+//! Train the bundled dataset full-graph and partitioned at several `K`,
+//! at the **same quantization width**, and report the peak-resident
+//! activation bytes (active partition stash + compressed cache) next to
+//! full-graph training's stash, plus the final-epoch loss and test
+//! accuracy of every arm. The headline row pair: **K=4 vs full-graph**
+//! — peak residency at least 40% lower with final loss within a few
+//! percent (asserted by this module's tests and printed by
+//! `iexact partition`).
+
+use super::Effort;
+use crate::config::{DatasetSpec, PartitionConfig, QuantConfig, TrainConfig};
+use crate::pipeline::{train, train_partitioned};
+use crate::util::table::AsciiTable;
+use crate::Result;
+
+/// One sweep row.
+#[derive(Debug, Clone)]
+pub struct PartitionRow {
+    pub label: String,
+    /// Partition count (1 = full-graph baseline).
+    pub k: usize,
+    pub halo_hops: usize,
+    /// Peak-resident activation bytes (stash for the baseline; active
+    /// stash + cache for partitioned arms).
+    pub peak_bytes: usize,
+    /// Reduction vs the full-graph baseline in percent.
+    pub reduction_pct: f64,
+    pub final_loss: f64,
+    pub test_accuracy: f64,
+    pub edge_cut_pct: f64,
+}
+
+/// Sweep result.
+#[derive(Debug)]
+pub struct PartitionSweep {
+    pub rows: Vec<PartitionRow>,
+    pub dataset: String,
+    pub num_nodes: usize,
+}
+
+impl PartitionSweep {
+    pub fn render(&self) -> String {
+        let mut t = AsciiTable::new(&[
+            "config",
+            "K",
+            "halo",
+            "peak bytes",
+            "reduction %",
+            "final loss",
+            "test acc",
+            "edge cut %",
+        ]);
+        for r in &self.rows {
+            t.add_row(vec![
+                r.label.clone(),
+                r.k.to_string(),
+                r.halo_hops.to_string(),
+                r.peak_bytes.to_string(),
+                format!("{:.1}", r.reduction_pct),
+                format!("{:.4}", r.final_loss),
+                format!("{:.4}", r.test_accuracy),
+                format!("{:.1}", r.edge_cut_pct),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut t = AsciiTable::new(&[
+            "config",
+            "k",
+            "halo_hops",
+            "peak_bytes",
+            "reduction_pct",
+            "final_loss",
+            "test_accuracy",
+            "edge_cut_pct",
+        ]);
+        for r in &self.rows {
+            t.add_row(vec![
+                r.label.clone(),
+                r.k.to_string(),
+                r.halo_hops.to_string(),
+                r.peak_bytes.to_string(),
+                format!("{:.2}", r.reduction_pct),
+                format!("{:.6}", r.final_loss),
+                format!("{:.6}", r.test_accuracy),
+                format!("{:.2}", r.edge_cut_pct),
+            ]);
+        }
+        t.to_csv()
+    }
+
+    /// Look a row up by its label (panics if absent — sweep bug).
+    pub fn row(&self, label: &str) -> &PartitionRow {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)
+            .expect("sweep emits this row")
+    }
+}
+
+/// Run the sweep. `Quick` uses the tiny bundled graph; `Paper` the
+/// arxiv-like analogue. `only_k` restricts the partitioned arms to one
+/// partition count (the CI smoke path: `iexact partition --partitions 4`).
+pub fn run(
+    effort: Effort,
+    only_k: Option<usize>,
+    halo_hops: usize,
+    mut progress: impl FnMut(&str),
+) -> Result<PartitionSweep> {
+    let (spec, epochs, hidden) = match effort {
+        Effort::Quick => (DatasetSpec::tiny(), 30usize, 32usize),
+        Effort::Paper => (DatasetSpec::arxiv_like(), 60, 128),
+    };
+    let ds = spec.generate(42);
+    let quant = QuantConfig::int2_blockwise(8);
+    let cfg = TrainConfig {
+        hidden_dim: hidden,
+        num_layers: 3,
+        epochs,
+        lr: 0.02,
+        weight_decay: 0.0,
+        seeds: vec![0],
+        eval_every: 5,
+        ..TrainConfig::default()
+    };
+
+    progress(&format!(
+        "partition sweep on {} ({} nodes, {} edges), {}",
+        ds.name,
+        ds.num_nodes(),
+        ds.num_edges(),
+        quant.label()
+    ));
+
+    let full = train(&ds, &quant, &cfg, 0)?;
+    let full_bytes = full.stash_bytes;
+    let mut rows = vec![PartitionRow {
+        label: "full-graph".into(),
+        k: 1,
+        halo_hops: 0,
+        peak_bytes: full_bytes,
+        reduction_pct: 0.0,
+        final_loss: full.final_train_loss,
+        test_accuracy: full.test_accuracy,
+        edge_cut_pct: 0.0,
+    }];
+    progress(&format!(
+        "  full-graph: stash {} B, final loss {:.4}, acc {:.4}",
+        full_bytes, full.final_train_loss, full.test_accuracy
+    ));
+
+    let ks: Vec<usize> = match only_k {
+        Some(k) => vec![k],
+        None => vec![2, 4, 8],
+    };
+    for k in ks {
+        let mut pcfg = cfg.clone();
+        pcfg.partition = PartitionConfig {
+            num_partitions: k,
+            halo_hops,
+            ..PartitionConfig::default()
+        };
+        let out = train_partitioned(&ds, &quant, &pcfg, 0)?;
+        let reduction =
+            100.0 * (1.0 - out.peak_resident_bytes as f64 / full_bytes.max(1) as f64);
+        let row = PartitionRow {
+            label: format!("K={k} halo={halo_hops}"),
+            k,
+            halo_hops,
+            peak_bytes: out.peak_resident_bytes,
+            reduction_pct: reduction,
+            final_loss: out.result.final_train_loss,
+            test_accuracy: out.result.test_accuracy,
+            edge_cut_pct: 100.0 * out.edge_cut_fraction,
+        };
+        progress(&format!(
+            "  {}: peak {} B ({:.1}% below full), final loss {:.4}, acc {:.4}",
+            row.label, row.peak_bytes, row.reduction_pct, row.final_loss, row.test_accuracy
+        ));
+        rows.push(row);
+    }
+
+    Ok(PartitionSweep {
+        rows,
+        dataset: ds.name.clone(),
+        num_nodes: ds.num_nodes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k4_cuts_peak_residency_by_at_least_40_pct() {
+        // ISSUE 3 acceptance criterion: at K=4 and equal average bit
+        // width, peak-resident activation bytes sit >= 40% below
+        // full-graph training.
+        let sweep = run(Effort::Quick, Some(4), 0, |_| {}).unwrap();
+        let row = sweep.row("K=4 halo=0");
+        assert!(
+            row.reduction_pct >= 40.0,
+            "K=4 reduction only {:.1}% (peak {} vs full {})",
+            row.reduction_pct,
+            row.peak_bytes,
+            sweep.row("full-graph").peak_bytes
+        );
+        // Quality stays in the full-graph ballpark.
+        let full = sweep.row("full-graph");
+        assert!(
+            row.test_accuracy > full.test_accuracy - 0.15,
+            "partitioned acc {:.4} collapsed vs full {:.4}",
+            row.test_accuracy,
+            full.test_accuracy
+        );
+        assert!(row.final_loss.is_finite() && row.final_loss > 0.0);
+    }
+
+    #[test]
+    fn sweep_renders_all_rows() {
+        let sweep = run(Effort::Quick, Some(2), 1, |_| {}).unwrap();
+        assert_eq!(sweep.rows.len(), 2);
+        let rendered = sweep.render();
+        assert!(rendered.contains("full-graph"), "{rendered}");
+        assert!(rendered.contains("K=2 halo=1"), "{rendered}");
+        assert_eq!(sweep.to_csv().lines().count(), 3); // header + 2 rows
+    }
+}

@@ -30,6 +30,7 @@
 //! | Eq. 10 minimization — optimal `(α*, β*)` via Nelder–Mead | [`varmin::optimal_boundaries`] |
 //! | Clipped-normal activation model `CN_{[1/D]}` | [`stats`] |
 //! | Adaptive per-block bit allocation (ActNN-style budget, CN-model weighted) | [`alloc`] |
+//! | Partitioned large-graph training + compressed activation cache (beyond-paper) | [`partition`], [`pipeline::train_partitioned`], [`memory::ActivationCache`] |
 //! | Table 1 memory column (analytic, byte-exact) | [`memory::MemoryModel`] |
 //! | Random projection `RP`/`IRP` (EXACT §3) | [`rp`] |
 //! | Compressed-training forward/backward | [`pipeline`] |
@@ -78,6 +79,7 @@ pub mod graph;
 pub mod linalg;
 pub mod memory;
 pub mod metrics;
+pub mod partition;
 pub mod pipeline;
 pub mod quant;
 pub mod rngs;
@@ -93,14 +95,15 @@ pub mod varmin;
 pub mod prelude {
     pub use crate::alloc::{BitAllocator, BitPlan, BlockStats, PlannedTensor};
     pub use crate::config::{
-        AllocationConfig, DatasetSpec, ExperimentConfig, ParallelismConfig, QuantConfig,
-        QuantMode, TrainConfig,
+        AllocationConfig, DatasetSpec, ExperimentConfig, ParallelismConfig, PartitionConfig,
+        QuantConfig, QuantMode, TrainConfig,
     };
     pub use crate::engine::QuantEngine;
     pub use crate::graph::{CsrMatrix, Dataset, GraphGenerator};
-    pub use crate::memory::{BufferPool, MemoryModel};
+    pub use crate::memory::{ActivationCache, BufferPool, MemoryModel};
     pub use crate::metrics::RunSummary;
-    pub use crate::pipeline::{train, TrainResult};
+    pub use crate::partition::{partition_dataset, GraphPartition, PartitionSet};
+    pub use crate::pipeline::{train, train_partitioned, PartitionTrainResult, TrainResult};
     pub use crate::quant::{BlockwiseQuantizer, CompressedTensor, RowQuantizer};
     pub use crate::rngs::Pcg64;
     pub use crate::rp::RandomProjection;

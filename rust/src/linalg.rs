@@ -153,6 +153,50 @@ impl Adam {
         }
     }
 
+    /// Rebuild an optimizer mid-run from checkpointed state (see
+    /// [`crate::checkpoint::TrainState`]): `t` is the step counter the
+    /// bias correction resumes from, `m`/`v` the moment estimates.
+    pub fn from_state(
+        lr: f32,
+        weight_decay: f32,
+        t: u64,
+        m: Vec<Matrix>,
+        v: Vec<Matrix>,
+    ) -> Result<Self> {
+        if m.len() != v.len() {
+            return Err(Error::Shape(format!(
+                "adam state: {} first moments vs {} second moments",
+                m.len(),
+                v.len()
+            )));
+        }
+        for (a, b) in m.iter().zip(&v) {
+            if a.shape() != b.shape() {
+                return Err(Error::Shape("adam state: m/v shape mismatch".into()));
+            }
+        }
+        Ok(Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            t,
+            m,
+            v,
+        })
+    }
+
+    /// Optimizer step counter (the bias-correction time `t`).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// First- and second-moment estimates, one matrix per parameter.
+    pub fn moments(&self) -> (&[Matrix], &[Matrix]) {
+        (&self.m, &self.v)
+    }
+
     /// One Adam step over matched `params`/`grads`.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) -> Result<()> {
         if params.len() != self.m.len() || grads.len() != self.m.len() {
@@ -294,6 +338,38 @@ mod tests {
         for &v in params[0].as_slice() {
             assert!((v - 3.0).abs() < 0.05, "v={v}");
         }
+    }
+
+    #[test]
+    fn adam_state_round_trip_continues_identically() {
+        let mut p1 = vec![Matrix::from_vec(2, 2, vec![0.0, 0.5, -0.5, 2.0]).unwrap()];
+        let mut adam = Adam::new(0.05, 0.01, &[(2, 2)]);
+        let grad = |p: &Matrix| p.map(|v| 2.0 * (v - 1.0));
+        for _ in 0..5 {
+            let g = vec![grad(&p1[0])];
+            adam.step(&mut p1, &g).unwrap();
+        }
+        let (m, v) = adam.moments();
+        let mut resumed =
+            Adam::from_state(0.05, 0.01, adam.t(), m.to_vec(), v.to_vec()).unwrap();
+        let mut p2 = p1.clone();
+        for _ in 0..5 {
+            let g1 = vec![grad(&p1[0])];
+            adam.step(&mut p1, &g1).unwrap();
+            let g2 = vec![grad(&p2[0])];
+            resumed.step(&mut p2, &g2).unwrap();
+        }
+        assert_eq!(p1[0].as_slice(), p2[0].as_slice(), "resume must be bit-identical");
+        // Mismatched moment lists are rejected.
+        assert!(Adam::from_state(0.1, 0.0, 1, vec![Matrix::zeros(1, 1)], vec![]).is_err());
+        assert!(Adam::from_state(
+            0.1,
+            0.0,
+            1,
+            vec![Matrix::zeros(1, 2)],
+            vec![Matrix::zeros(2, 1)]
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use iexact::config::{DatasetSpec, ExperimentConfig, QuantConfig, TrainConfig};
 use iexact::coordinator::{run_native_on, AotCoordinator};
 use iexact::experiments::{
-    ablation, allocation, fig1, fig2, fig3, fig4, fig5, table1, table2, Effort,
+    ablation, allocation, fig1, fig2, fig3, fig4, fig5, partition, table1, table2, Effort,
 };
 use iexact::runtime::Runtime;
 use std::collections::HashMap;
@@ -29,6 +29,7 @@ COMMANDS:
     fig5          Fig 5: variance reduction curves for CN_[1/D]
     ablation      Bit-width / projection-ratio / block-size ablations
     allocation    Adaptive vs fixed bit allocation at equal budgets
+    partition     Partitioned training: peak-resident bytes vs full-graph
     train         Train one configuration on the native pipeline
     train-aot     Train via the AOT (JAX->HLO->PJRT) path
     artifacts     List AOT artifacts and their shapes
@@ -48,7 +49,15 @@ TRAIN OPTIONS:
     --threads <n>                 quantization-engine workers (0 = auto)
     --budget-bits <b>             adaptive per-block bit allocation (greedy)
                                   at an average budget of b bits/scalar
+    --partitions <k>              partitioned training over k BFS edge-cut
+                                  subgraphs with a compressed activation
+                                  cache (1 = full-graph; default)
+    --halo-hops <h>               h-hop boundary neighborhood per partition
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
+
+PARTITION OPTIONS:
+    --partitions <k>       Restrict the sweep to one partition count
+    --halo-hops <h>        Halo depth for the partitioned arms (default 0)
 
 TRAIN-AOT OPTIONS:
     --artifacts <dir>      Artifact directory (default: artifacts)
@@ -80,6 +89,7 @@ fn main() -> ExitCode {
         "fig5" => cmd_fig5(&opts),
         "ablation" => cmd_ablation(&opts),
         "allocation" => cmd_allocation(&opts),
+        "partition" => cmd_partition(&opts),
         "train" => cmd_train(&opts),
         "train-aot" => cmd_train_aot(&opts),
         "artifacts" => cmd_artifacts(&opts),
@@ -225,6 +235,25 @@ fn cmd_allocation(opts: &Opts) -> iexact::Result<()> {
     emit(opts, &a.render(), Some(a.to_csv()))
 }
 
+fn cmd_partition(opts: &Opts) -> iexact::Result<()> {
+    let only_k = match opts.get("partitions") {
+        Some(s) => Some(s.parse().map_err(|_| {
+            iexact::Error::Config(format!("--partitions expects a positive integer, got '{s}'"))
+        })?),
+        None => None,
+    };
+    let halo = match opts.get("halo-hops") {
+        Some(s) => s.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--halo-hops expects a non-negative integer, got '{s}'"
+            ))
+        })?,
+        None => 0,
+    };
+    let p = partition::run(effort(opts), only_k, halo, |line| eprintln!("{line}"))?;
+    emit(opts, &p.render(), Some(p.to_csv()))
+}
+
 fn cmd_train(opts: &Opts) -> iexact::Result<()> {
     let mut cfg = if let Some(path) = opts.get("config") {
         ExperimentConfig::from_toml_file(std::path::Path::new(path))?
@@ -271,6 +300,22 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         })?;
         cfg.train.allocation.strategy = iexact::config::AllocStrategy::Greedy;
     }
+    // CLI opt-in to partitioned training: --partitions <k> splits the
+    // graph into k edge-cut subgraphs; --halo-hops <h> adds the h-hop
+    // boundary neighborhood to each. Invalid values are rejected, like
+    // --threads.
+    if let Some(k) = opts.get("partitions") {
+        cfg.train.partition.num_partitions = k.parse().map_err(|_| {
+            iexact::Error::Config(format!("--partitions expects a positive integer, got '{k}'"))
+        })?;
+    }
+    if let Some(h) = opts.get("halo-hops") {
+        cfg.train.partition.halo_hops = h.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--halo-hops expects a non-negative integer, got '{h}'"
+            ))
+        })?;
+    }
     cfg.validate()?;
     let ds = cfg.dataset.generate(cfg.dataset_seed);
     eprintln!(
@@ -280,7 +325,52 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         ds.num_edges(),
         cfg.quant.label()
     );
-    if let Some(n_sample) = opts.get("sample").and_then(|s| s.parse().ok()) {
+    if cfg.train.partition.num_partitions > 1 {
+        // The two minibatching regimes are mutually exclusive; silently
+        // preferring one would mislabel the numbers the user reads.
+        if opts.contains_key("sample") {
+            return Err(iexact::Error::Config(
+                "--sample (GraphSAINT-RN) and --partitions (edge-cut partitioned \
+                 training) cannot be combined; pick one"
+                    .into(),
+            ));
+        }
+        let seed = cfg.train.seeds.first().copied().unwrap_or(0);
+        if cfg.train.seeds.len() > 1 {
+            // The full-graph path sweeps all seeds via run_native_on;
+            // this branch trains one run — say so instead of printing
+            // single-seed numbers a user could read as an aggregate.
+            eprintln!(
+                "note: partitioned training runs a single seed ({seed}); \
+                 ignoring {} more from train.seeds",
+                cfg.train.seeds.len() - 1
+            );
+        }
+        let out = iexact::pipeline::train_partitioned(&ds, &cfg.quant, &cfg.train, seed)?;
+        println!(
+            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}\npeak resident KB (stash+cache): {}\nedge cut:      {:.1}%",
+            out.result.test_accuracy,
+            out.result.epochs_per_sec,
+            out.result.stash_bytes / 1024,
+            out.peak_resident_bytes / 1024,
+            100.0 * out.edge_cut_fraction
+        );
+        if let Some(path) = opts.get("csv") {
+            std::fs::write(path, out.result.curve.to_csv())?;
+        }
+        return Ok(());
+    }
+    // A malformed --sample must error, not silently fall through to
+    // full-graph training (whose numbers would be read as sampled).
+    let n_sample = match opts.get("sample") {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--sample expects a positive integer, got '{s}'"
+            ))
+        })?),
+        None => None,
+    };
+    if let Some(n_sample) = n_sample {
         // GraphSAINT-RN minibatch training (sampling.rs).
         let res =
             iexact::sampling::train_sampled(&ds, &cfg.quant, &cfg.train, n_sample, 0)?;

@@ -34,7 +34,11 @@
 //! and an avg-1.9-bit plan land in the same class and recycle into each
 //! other instead of fragmenting the pool with near-miss capacities.
 
+use crate::alloc::{BitPlan, PlannedTensor};
 use crate::config::{QuantConfig, QuantMode};
+use crate::engine::QuantEngine;
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
 use crate::{Error, Result};
 
 /// Byte sizes per stored layer plus totals.
@@ -173,6 +177,148 @@ impl MemoryModel {
             return Err(Error::Numerical("baseline memory is zero".into()));
         }
         Ok(100.0 * (1.0 - a / b))
+    }
+}
+
+/// Compressed slot store that parks activation matrices of *inactive*
+/// workload units (graph partitions, in the partitioned trainer) while
+/// another unit owns the dense working set.
+///
+/// Each slot holds one engine-quantized [`PlannedTensor`] — the same
+/// per-block [`BitPlan`] machinery as the training stashes, so the cache
+/// composes with heterogeneous widths and the analytic memory story.
+/// Parking draws its stochastic-rounding randomness from a
+/// **seed-addressed stream per slot** (`Pcg64::with_stream(seed, slot)`),
+/// so re-parking the same matrix reproduces the same bytes and the whole
+/// cache is bit-deterministic across engine thread counts.
+///
+/// Lifecycle (see `docs/partitioned-training.md` for the diagram):
+///
+/// ```text
+/// park(slot, H) --quantize--> [slot: packed codes + (zero, range)]
+/// fetch(slot)   --dequant---> dense Ĥ (caller-owned, from the pool)
+/// evict(slot)   --recycle---> packed buffer returns to the BufferPool
+/// ```
+///
+/// ```
+/// use iexact::alloc::BitPlan;
+/// use iexact::engine::QuantEngine;
+/// use iexact::memory::{ActivationCache, BufferPool};
+/// use iexact::tensor::Matrix;
+///
+/// let engine = QuantEngine::serial();
+/// let mut pool = BufferPool::new();
+/// let mut cache = ActivationCache::new(2, 42);
+/// let h = Matrix::from_fn(8, 16, |r, c| (r * 16 + c) as f32 / 128.0);
+/// let plan = BitPlan::uniform(8, 8, 16).unwrap();
+/// cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+/// assert!(cache.resident_bytes() > 0);
+/// let h_hat = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+/// assert_eq!(h_hat.shape(), (8, 16));
+/// assert!(cache.fetch(1, &engine, &mut pool).unwrap().is_none());
+/// cache.evict(0, &mut pool);
+/// assert_eq!(cache.resident_bytes(), 0);
+/// ```
+#[derive(Debug)]
+pub struct ActivationCache {
+    slots: Vec<Option<PlannedTensor>>,
+    seed: u64,
+    parks: u64,
+    fetches: u64,
+}
+
+impl ActivationCache {
+    /// A cache with `num_slots` empty slots; `seed` keys every slot's
+    /// quantization stream.
+    pub fn new(num_slots: usize, seed: u64) -> Self {
+        ActivationCache {
+            slots: (0..num_slots).map(|_| None).collect(),
+            seed,
+            parks: 0,
+            fetches: 0,
+        }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Occupied slots.
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Quantize `h` under `plan` into `slot`, replacing (and recycling)
+    /// any previous occupant. The slot's seed stream makes repeated parks
+    /// of the same matrix byte-identical.
+    pub fn park(
+        &mut self,
+        slot: usize,
+        h: &Matrix,
+        plan: &BitPlan,
+        engine: &QuantEngine,
+        pool: &mut BufferPool,
+    ) -> Result<()> {
+        if slot >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "cache slot {slot} out of range {}",
+                self.slots.len()
+            )));
+        }
+        let seed = Pcg64::with_stream(self.seed, slot as u64).next_u64();
+        // Recycle the outgoing occupant's packed buffer first so the new
+        // park can draw it straight back out of the pool.
+        if let Some(old) = self.slots[slot].take() {
+            pool.put_bytes(old.packed);
+        }
+        let pt = engine.quantize_planned_seeded_pooled(h, plan, seed, pool)?;
+        self.slots[slot] = Some(pt);
+        self.parks += 1;
+        Ok(())
+    }
+
+    /// Dequantize the tensor parked in `slot` (None if the slot is
+    /// empty). The returned dense matrix is drawn from `pool`; callers
+    /// should `put_floats` it back when done.
+    pub fn fetch(
+        &mut self,
+        slot: usize,
+        engine: &QuantEngine,
+        pool: &mut BufferPool,
+    ) -> Result<Option<Matrix>> {
+        let Some(pt) = self.slots.get(slot).and_then(|s| s.as_ref()) else {
+            return Ok(None);
+        };
+        self.fetches += 1;
+        Ok(Some(engine.dequantize_planned_pooled(pt, pool)?))
+    }
+
+    /// Shape of the tensor parked in `slot`, if any.
+    pub fn shape(&self, slot: usize) -> Option<(usize, usize)> {
+        self.slots.get(slot).and_then(|s| s.as_ref()).map(|pt| pt.shape)
+    }
+
+    /// Drop `slot`'s occupant, returning its packed buffer to the pool.
+    pub fn evict(&mut self, slot: usize, pool: &mut BufferPool) {
+        if let Some(pt) = self.slots.get_mut(slot).and_then(|s| s.take()) {
+            pool.put_bytes(pt.packed);
+        }
+    }
+
+    /// Compressed bytes currently parked across all slots (packed codes
+    /// plus FP32 metadata) — the cache's contribution to peak-resident
+    /// activation memory.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|pt| pt.nbytes())
+            .sum()
+    }
+
+    /// `(parks, fetches)` counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.parks, self.fetches)
     }
 }
 
@@ -616,6 +762,57 @@ mod tests {
         let b2 = pool.take_bytes_empty(200);
         assert!(b2.is_empty() && b2.capacity() >= 300);
         assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn cache_round_trip_is_deterministic_and_engine_invariant() {
+        let mut rng = Pcg64::new(9);
+        let h = Matrix::from_fn(16, 32, |_, _| rng.next_f32() * 2.0 - 1.0);
+        let plan = crate::alloc::BitPlan::uniform(8, 16, 32).unwrap();
+        let mut pool = BufferPool::new();
+        let serial = crate::engine::QuantEngine::serial();
+        let mut a = ActivationCache::new(4, 7);
+        a.park(2, &h, &plan, &serial, &mut pool).unwrap();
+        let fa = a.fetch(2, &serial, &mut pool).unwrap().unwrap();
+        // Re-parking the same matrix reproduces the same reconstruction
+        // (slot-addressed seed), and a parallel engine parks identically.
+        a.park(2, &h, &plan, &serial, &mut pool).unwrap();
+        let fb = a.fetch(2, &serial, &mut pool).unwrap().unwrap();
+        assert_eq!(fa.as_slice(), fb.as_slice());
+        let parallel = crate::engine::QuantEngine::with_threads(8);
+        let mut b = ActivationCache::new(4, 7);
+        b.park(2, &h, &plan, &parallel, &mut pool).unwrap();
+        let fc = b.fetch(2, &parallel, &mut pool).unwrap().unwrap();
+        assert_eq!(fa.as_slice(), fc.as_slice());
+        // 8-bit reconstruction is close.
+        assert!(fa.rel_error(&h).unwrap() < 0.02);
+    }
+
+    #[test]
+    fn cache_tracks_residency_and_eviction() {
+        let h = Matrix::from_fn(8, 16, |r, c| (r + c) as f32);
+        let plan = crate::alloc::BitPlan::uniform(2, 8, 16).unwrap();
+        let engine = crate::engine::QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        let mut cache = ActivationCache::new(3, 1);
+        assert_eq!(cache.resident_bytes(), 0);
+        assert!(cache.fetch(0, &engine, &mut pool).unwrap().is_none());
+        cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+        cache.park(1, &h, &plan, &engine, &mut pool).unwrap();
+        assert_eq!(cache.occupied(), 2);
+        assert_eq!(cache.shape(0), Some((8, 16)));
+        assert_eq!(cache.shape(2), None);
+        // 2-bit codes: 128 scalars -> 32 packed bytes + 8 blocks * 8 B
+        // metadata = 96 bytes per slot.
+        assert_eq!(cache.resident_bytes(), 2 * (32 + 64));
+        cache.evict(0, &mut pool);
+        assert_eq!(cache.occupied(), 1);
+        assert_eq!(cache.resident_bytes(), 32 + 64);
+        // Out-of-range slots error on park, not panic.
+        assert!(cache.park(9, &h, &plan, &engine, &mut pool).is_err());
+        let (parks, fetches) = cache.stats();
+        assert_eq!(parks, 2);
+        assert!(fetches >= 1);
     }
 
     #[test]

@@ -177,24 +177,38 @@ impl GcnModel {
         if num_layers < 2 {
             return Err(Error::Config("GNN needs >= 2 layers".into()));
         }
-        let mut widths = vec![feat_dim];
-        for _ in 1..num_layers {
-            widths.push(hidden_dim);
-        }
-        widths.push(num_classes);
-        let mult = match arch {
-            Arch::Gcn => 1,
-            Arch::GraphSage => 2,
-        };
-        let weights = widths
-            .windows(2)
-            .map(|w| glorot_uniform(mult * w[0], w[1], rng))
+        let weights = Self::layer_shapes(arch, feat_dim, hidden_dim, num_classes, num_layers)
+            .into_iter()
+            .map(|(rows, cols)| glorot_uniform(rows, cols, rng))
             .collect();
         Ok(GcnModel { arch, weights })
     }
 
     pub fn num_layers(&self) -> usize {
         self.weights.len()
+    }
+
+    /// The weight shapes [`Self::init_arch`] produces for these
+    /// dimensions (GraphSAGE doubles every input width for the
+    /// `[H ‖ Â H]` concat). Also the single source of truth for
+    /// checkpoint-resume shape validation in [`train_span`].
+    pub fn layer_shapes(
+        arch: Arch,
+        feat_dim: usize,
+        hidden_dim: usize,
+        num_classes: usize,
+        num_layers: usize,
+    ) -> Vec<(usize, usize)> {
+        let mult = match arch {
+            Arch::Gcn => 1,
+            Arch::GraphSage => 2,
+        };
+        let mut widths = vec![feat_dim];
+        for _ in 1..num_layers {
+            widths.push(hidden_dim);
+        }
+        widths.push(num_classes);
+        widths.windows(2).map(|w| (mult * w[0], w[1])).collect()
     }
 
     pub fn shapes(&self) -> Vec<(usize, usize)> {
@@ -237,6 +251,25 @@ fn resolve_bins(q: &QuantConfig, r_dim: usize) -> Result<BinSpec> {
         }
         _ => Ok(BinSpec::Uniform),
     }
+}
+
+/// Per-layer bins for a whole run, resolved from the *stashed*
+/// layer-input widths — exactly the weight input dims (rows) of
+/// [`GcnModel::layer_shapes`], which is the single source of truth for
+/// the 2x GraphSAGE concat. Shared by the full-batch and partitioned
+/// trainers so the stash-width formula cannot drift between them.
+fn resolve_layer_bins(
+    arch: Arch,
+    feat_dim: usize,
+    hidden_dim: usize,
+    num_classes: usize,
+    num_layers: usize,
+    q: &QuantConfig,
+) -> Result<Vec<BinSpec>> {
+    GcnModel::layer_shapes(arch, feat_dim, hidden_dim, num_classes, num_layers)
+        .into_iter()
+        .map(|(rows, _)| resolve_bins(q, (rows / q.proj_ratio).max(1)))
+        .collect()
 }
 
 /// Group length in scalars for the quantizer.
@@ -642,38 +675,105 @@ pub fn train(
     cfg: &TrainConfig,
     seed: u64,
 ) -> Result<TrainResult> {
+    train_span(dataset, quant, cfg, seed, None).map(|(r, _)| r)
+}
+
+/// Resumable training: runs epochs `[start, cfg.epochs)` where `start`
+/// is `0` for a fresh run or `resume.epoch` when continuing from a
+/// [`TrainState`](crate::checkpoint::TrainState), and returns the
+/// end-of-span state alongside the span's metrics.
+///
+/// The state carries the model, Adam moments, the training RNG and the
+/// active bit plans, so a run that checkpoints at epoch `e` and resumes
+/// reproduces the **bit-identical** loss trajectory of one that never
+/// stopped (epoch-addressed stats streams keep the adaptive allocator on
+/// the same schedule; enforced by `tests/checkpoint_resume.rs`). The
+/// returned [`TrainResult`] covers only the span that actually ran —
+/// curve entries, peak stash and throughput all start at `start`.
+///
+/// Resume validation: mismatched weight shapes (arch, depth, hidden
+/// width, dataset dims) and mismatched allocation regimes (adaptive
+/// plans under a fixed config, or vice versa off a realloc boundary)
+/// are rejected. `cfg.lr`/`cfg.weight_decay` are re-applied to the
+/// resumed optimizer — unchanged configs keep bit-identity, an edited
+/// config (e.g. annealed lr) is honored.
+pub fn train_span(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+    resume: Option<crate::checkpoint::TrainState>,
+) -> Result<(TrainResult, crate::checkpoint::TrainState)> {
     quant.validate()?;
     cfg.validate()?;
     dataset.validate()?;
-    let mut rng = Pcg64::new(seed ^ 0x1ed0_5eed);
-    let mut model = GcnModel::init_arch(
+
+    let (start_epoch, mut model, mut adam, mut rng, resumed_plans) = match resume {
+        None => {
+            let mut rng = Pcg64::new(seed ^ 0x1ed0_5eed);
+            let model = GcnModel::init_arch(
+                cfg.arch,
+                dataset.num_features(),
+                cfg.hidden_dim,
+                dataset.num_classes,
+                cfg.num_layers,
+                &mut rng,
+            )?;
+            let adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+            (0usize, model, adam, rng, None)
+        }
+        Some(st) => {
+            // `>=` so a finished checkpoint errs instead of silently
+            // returning a zero-epoch result (NaN loss, 0 accuracy).
+            if st.epoch >= cfg.epochs {
+                return Err(Error::Config(format!(
+                    "resume epoch {} leaves no epochs to run (train.epochs = {})",
+                    st.epoch, cfg.epochs
+                )));
+            }
+            // Validate the full weight-shape list, not just arch/depth:
+            // a hidden_dim (or dataset) mismatch would otherwise train
+            // the checkpoint's weights against bins resolved for the
+            // config's dimensions — silently wrong numerics, or a
+            // confusing plan-coverage error under adaptive allocation.
+            let expected = GcnModel::layer_shapes(
+                cfg.arch,
+                dataset.num_features(),
+                cfg.hidden_dim,
+                dataset.num_classes,
+                cfg.num_layers,
+            );
+            if st.model.arch != cfg.arch || st.model.shapes() != expected {
+                return Err(Error::Config(format!(
+                    "resume state is a {} model with weight shapes {:?}; \
+                     config/dataset want {} with {:?}",
+                    st.model.arch.label(),
+                    st.model.shapes(),
+                    cfg.arch.label(),
+                    expected
+                )));
+            }
+            // Moments and the step counter come from the checkpoint;
+            // lr/weight_decay follow the *config*, so an edited TOML
+            // (e.g. an annealed lr) is honored on resume. Unchanged
+            // configs pass the same values and keep bit-identity.
+            let mut adam = st.adam;
+            adam.lr = cfg.lr;
+            adam.weight_decay = cfg.weight_decay;
+            (st.epoch, st.model, adam, st.rng, st.plans)
+        }
+    };
+
+    // Resolve bins once per layer (VM solves the boundary optimization).
+    let bins = resolve_layer_bins(
         cfg.arch,
         dataset.num_features(),
         cfg.hidden_dim,
         dataset.num_classes,
         cfg.num_layers,
-        &mut rng,
+        quant,
     )?;
 
-    // Resolve bins once per layer (VM solves the boundary optimization).
-    // Widths are the *stashed* layer-input widths (2x for GraphSAGE).
-    let mult = match cfg.arch {
-        Arch::Gcn => 1,
-        Arch::GraphSage => 2,
-    };
-    let widths: Vec<usize> = {
-        let mut w = vec![mult * dataset.num_features()];
-        for _ in 1..cfg.num_layers {
-            w.push(mult * cfg.hidden_dim);
-        }
-        w
-    };
-    let bins: Vec<BinSpec> = widths
-        .iter()
-        .map(|&d| resolve_bins(quant, (d / quant.proj_ratio).max(1)))
-        .collect::<Result<Vec<_>>>()?;
-
-    let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
     let mut curve = TrainCurve::default();
     let mut timer = LapTimer::new();
     let mut best_val_loss = f64::INFINITY;
@@ -689,12 +789,39 @@ pub fn train(
 
     // Adaptive bit allocation: re-solve per-block widths from fresh
     // activation statistics every realloc interval. The stats pass draws
-    // from its own seed-derived stream, so the main rng (and with it the
-    // fixed-width trajectory's reproducibility story) is untouched.
+    // from its own seed-derived stream keyed by the *absolute* epoch, so
+    // the main rng (and with it the fixed-width trajectory's
+    // reproducibility story) is untouched and resumed runs stay on the
+    // original schedule. Plans solved before the checkpoint come in via
+    // the resume state — re-deriving them here would see a later model.
     let allocator = cfg.allocation.allocator(quant)?;
-    let mut plans: Option<Vec<BitPlan>> = None;
+    let mut plans: Option<Vec<BitPlan>> = resumed_plans;
 
-    for epoch in 0..cfg.epochs {
+    // A resumed plan set must be consistent with the allocation config:
+    // a fixed-width config must not silently execute checkpointed
+    // adaptive plans, and an adaptive config resumed off a realloc
+    // boundary must not run at full width until the next re-solve.
+    match (&allocator, &plans) {
+        (None, Some(_)) => {
+            return Err(Error::Config(
+                "resume state carries adaptive bit plans but allocation.strategy \
+                 is fixed; resume with the original [allocation] section"
+                    .into(),
+            ));
+        }
+        (Some(_), None) if start_epoch % cfg.allocation.realloc_interval_epochs != 0 => {
+            return Err(Error::Config(format!(
+                "allocation.strategy is adaptive but the resume state has no bit \
+                 plans (checkpoint from a fixed-width run?); the next re-solve is \
+                 only at epoch {}, so the trajectory would fork",
+                start_epoch.div_ceil(cfg.allocation.realloc_interval_epochs)
+                    * cfg.allocation.realloc_interval_epochs
+            )));
+        }
+        _ => {}
+    }
+
+    for epoch in start_epoch..cfg.epochs {
         if let Some(alloc) = &allocator {
             if epoch % cfg.allocation.realloc_interval_epochs == 0 {
                 let mut stats_rng = Pcg64::with_stream(seed ^ 0xb17a_110c, epoch as u64);
@@ -731,13 +858,235 @@ pub fn train(
         }
     }
 
-    Ok(TrainResult {
+    let result = TrainResult {
         test_accuracy: test_at_best,
         best_val_loss,
         curve,
         epochs_per_sec: timer.rate_per_sec(),
         stash_bytes,
         final_train_loss,
+    };
+    let state = crate::checkpoint::TrainState {
+        epoch: cfg.epochs,
+        model,
+        adam,
+        rng,
+        plans,
+    };
+    Ok((result, state))
+}
+
+/// Result of one partitioned training run: the usual per-run metrics
+/// plus the memory accounting that motivates partitioning.
+#[derive(Debug, Clone)]
+pub struct PartitionTrainResult {
+    /// Span metrics (loss curve, accuracy, throughput). `stash_bytes` is
+    /// the largest *single-partition* stash — the dense-resident working
+    /// set of the partitioned trainer.
+    pub result: TrainResult,
+    /// Peak of `active-partition stash + parked cache bytes` over all
+    /// partition steps — the number to compare against full-graph
+    /// training's `stash_bytes` (see `docs/partitioned-training.md`).
+    pub peak_resident_bytes: usize,
+    /// Compressed bytes parked in the
+    /// [`ActivationCache`](crate::memory::ActivationCache) at run end.
+    pub cache_bytes: usize,
+    pub num_partitions: usize,
+    /// Halo nodes summed across partitions.
+    pub halo_nodes: usize,
+    /// Fraction of parent edges cut by the core assignment.
+    pub edge_cut_fraction: f64,
+}
+
+/// Cache layout for parked partition logits: blocks of eight node rows,
+/// so `(zero, range)` metadata stays well under the code bytes even for
+/// narrow class counts (logit scales are homogeneous across nodes, so
+/// multi-row blocks cost little fidelity).
+fn logits_cache_plan(rows: usize, cols: usize, bits: u32) -> Result<BitPlan> {
+    let glen = (cols * 8).max(1);
+    BitPlan::uniform(bits, (rows * cols).div_ceil(glen), glen)
+}
+
+/// Partitioned large-graph training (`[partition]` config section):
+/// split `dataset` into `K` BFS/greedy edge-cut induced subgraphs with
+/// `halo_hops`-hop boundary neighborhoods
+/// ([`crate::partition::partition_dataset`]) and train them
+/// **partition-by-partition with per-epoch gradient accumulation** — one
+/// Adam step per epoch from the core-train-count-weighted sum of
+/// partition gradients, so the trajectory tracks full-batch training up
+/// to the dropped cross-partition edges.
+///
+/// Memory story: only the active partition's compressed stash is ever
+/// dense-resident; everything retained for inactive partitions lives in
+/// a seed-addressed [`ActivationCache`](crate::memory::ActivationCache)
+/// (their latest output activations, quantized at `partition.cache_bits`
+/// through the per-block [`BitPlan`] machinery and recycled through the
+/// run's [`BufferPool`]). Evaluation
+/// assembles full-graph logits from the cache partition by partition:
+/// the only all-nodes dense buffer any step touches is the transient
+/// `N×C` logits matrix of the eval itself — strictly smaller than the
+/// `N×hidden` intermediates the full-graph trainer's eval materializes,
+/// and excluded from the stash metric by the same Table 1 convention
+/// (eval metrics are computed from the cache-reconstructed logits, so
+/// very low `cache_bits` trades eval fidelity for bytes). Peak
+/// residency is tracked as `max(active stash + cache bytes)` and
+/// reported in [`PartitionTrainResult::peak_resident_bytes`].
+///
+/// Like the full-batch trainer, the run is deterministic in `seed` and
+/// bit-identical at any engine thread count; per-partition bit plans are
+/// re-solved from each partition's own activation statistics every
+/// realloc interval when adaptive allocation is on.
+pub fn train_partitioned(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<PartitionTrainResult> {
+    quant.validate()?;
+    cfg.validate()?;
+    dataset.validate()?;
+    let pcfg = &cfg.partition;
+    let k = pcfg.num_partitions;
+    let parts = crate::partition::partition_dataset(dataset, k, pcfg.halo_hops)?;
+    let total_train: usize = parts.parts.iter().map(|p| p.core_train_count()).sum();
+    if total_train == 0 {
+        return Err(Error::Config("dataset has no training nodes".into()));
+    }
+
+    let mut rng = Pcg64::new(seed ^ 0x9a27_1710);
+    let mut model = GcnModel::init_arch(
+        cfg.arch,
+        dataset.num_features(),
+        cfg.hidden_dim,
+        dataset.num_classes,
+        cfg.num_layers,
+        &mut rng,
+    )?;
+    let bins = resolve_layer_bins(
+        cfg.arch,
+        dataset.num_features(),
+        cfg.hidden_dim,
+        dataset.num_classes,
+        cfg.num_layers,
+        quant,
+    )?;
+
+    let engine = QuantEngine::from_config(&cfg.parallelism);
+    let mut pool = BufferPool::new();
+    let mut cache = crate::memory::ActivationCache::new(k, seed ^ 0x00ca_c4ed);
+    let allocator = cfg.allocation.allocator(quant)?;
+    // One plan set per partition: block counts differ with subgraph size.
+    let mut plans: Vec<Option<Vec<BitPlan>>> = vec![None; k];
+
+    let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+    let mut curve = TrainCurve::default();
+    let mut timer = LapTimer::new();
+    let mut best_val_loss = f64::INFINITY;
+    let mut test_at_best = 0.0;
+    let mut max_stash = 0usize;
+    let mut peak_resident = 0usize;
+    let mut final_train_loss = f64::NAN;
+    let n = dataset.num_nodes();
+
+    for epoch in 0..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let mut grad_acc: Vec<Matrix> = model
+            .shapes()
+            .iter()
+            .map(|&(r, c)| Matrix::zeros(r, c))
+            .collect();
+        let mut loss_acc = 0.0f64;
+        for (p, part) in parts.parts.iter().enumerate() {
+            if let Some(alloc) = &allocator {
+                if epoch % cfg.allocation.realloc_interval_epochs == 0 {
+                    // Stats stream addressed by (epoch, partition) so the
+                    // schedule is independent of visit order and engine.
+                    let mut stats_rng =
+                        Pcg64::with_stream(seed ^ 0xb17a_1710, (epoch * k + p) as u64);
+                    plans[p] = Some(allocate_plans(
+                        &model,
+                        &part.data,
+                        quant,
+                        alloc,
+                        &mut stats_rng,
+                    )?);
+                }
+            }
+            let step = train_step(
+                &model,
+                &part.data,
+                quant,
+                &bins,
+                &mut rng,
+                &engine,
+                &mut pool,
+                plans[p].as_deref(),
+            )?;
+            // Partition losses/gradients are means over the partition's
+            // core train nodes; reweight to the global train mean so the
+            // accumulated epoch gradient equals the full-batch gradient
+            // of the edge-cut-approximated graph.
+            let w = part.core_train_count() as f64 / total_train as f64;
+            loss_acc += step.loss * w;
+            for (a, g) in grad_acc.iter_mut().zip(&step.grads) {
+                a.axpy(w as f32, g)?;
+            }
+            max_stash = max_stash.max(step.stash_bytes);
+            peak_resident = peak_resident.max(step.stash_bytes + cache.resident_bytes());
+        }
+        adam.step(&mut model.weights, &grad_acc)?;
+        final_train_loss = loss_acc;
+
+        if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            // Park each partition's post-update output activations, then
+            // assemble full-graph logits from the cache — at no point is
+            // more than one partition's forward pass dense-resident.
+            for (p, part) in parts.parts.iter().enumerate() {
+                let logits = model.forward(&part.data)?;
+                let plan =
+                    logits_cache_plan(logits.rows(), logits.cols(), pcfg.cache_bits)?;
+                cache.park(p, &logits, &plan, &engine, &mut pool)?;
+                pool.put_floats(logits.into_vec());
+                peak_resident = peak_resident.max(cache.resident_bytes());
+            }
+            let mut full = Matrix::zeros(n, dataset.num_classes);
+            for (p, part) in parts.parts.iter().enumerate() {
+                let deq = cache
+                    .fetch(p, &engine, &mut pool)?
+                    .expect("parked in the loop above");
+                for (local, &parent) in part.node_map.iter().enumerate() {
+                    if part.core_mask[local] {
+                        full.row_mut(parent).copy_from_slice(deq.row(local));
+                    }
+                }
+                pool.put_floats(deq.into_vec());
+            }
+            let (val_loss, _) =
+                softmax_cross_entropy(&full, &dataset.labels, &dataset.val_mask)?;
+            let val_acc = masked_accuracy(&full, &dataset.labels, &dataset.val_mask);
+            curve.push(epoch, loss_acc, val_loss, val_acc);
+            if val_loss < best_val_loss {
+                best_val_loss = val_loss;
+                test_at_best = masked_accuracy(&full, &dataset.labels, &dataset.test_mask);
+            }
+        }
+        timer.record(t0.elapsed());
+    }
+
+    Ok(PartitionTrainResult {
+        result: TrainResult {
+            test_accuracy: test_at_best,
+            best_val_loss,
+            curve,
+            epochs_per_sec: timer.rate_per_sec(),
+            stash_bytes: max_stash,
+            final_train_loss,
+        },
+        peak_resident_bytes: peak_resident,
+        cache_bytes: cache.resident_bytes(),
+        num_partitions: k,
+        halo_nodes: parts.total_halo_nodes(),
+        edge_cut_fraction: parts.edge_cut_fraction(),
     })
 }
 
@@ -1062,6 +1411,135 @@ mod tests {
         };
         let res = train(&ds, &QuantConfig::int2_blockwise(8), &cfg, 0).unwrap();
         assert!(res.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn partitioned_training_learns_and_cuts_peak_memory() {
+        let ds = tiny_ds();
+        let q = QuantConfig::int2_blockwise(8);
+        let full = train(&ds, &q, &fast_cfg(), 0).unwrap();
+        let mut cfg = fast_cfg();
+        cfg.partition = crate::config::PartitionConfig {
+            num_partitions: 4,
+            halo_hops: 0,
+            cache_bits: 4,
+        };
+        let part = train_partitioned(&ds, &q, &cfg, 0).unwrap();
+        assert!(
+            part.result.test_accuracy > 0.5,
+            "partitioned acc {}",
+            part.result.test_accuracy
+        );
+        assert!(part.result.final_train_loss.is_finite());
+        // The acceptance criterion: peak-resident activation bytes at
+        // K=4 at least 40% below full-graph training at the same width.
+        assert!(
+            (part.peak_resident_bytes as f64) < 0.6 * full.stash_bytes as f64,
+            "peak resident {} vs full stash {}",
+            part.peak_resident_bytes,
+            full.stash_bytes
+        );
+        assert_eq!(part.num_partitions, 4);
+        assert!(part.edge_cut_fraction > 0.0 && part.edge_cut_fraction < 1.0);
+    }
+
+    #[test]
+    fn partitioned_training_is_deterministic_and_thread_invariant() {
+        use crate::config::ParallelismConfig;
+        let ds = tiny_ds();
+        let q = QuantConfig::int2_blockwise(4);
+        let mut serial_cfg = fast_cfg();
+        serial_cfg.epochs = 6;
+        serial_cfg.parallelism = ParallelismConfig::serial();
+        serial_cfg.partition = crate::config::PartitionConfig {
+            num_partitions: 3,
+            halo_hops: 1,
+            cache_bits: 8,
+        };
+        let mut parallel_cfg = serial_cfg.clone();
+        parallel_cfg.parallelism = ParallelismConfig {
+            threads: 8,
+            min_blocks_per_shard: 1,
+        };
+        let a = train_partitioned(&ds, &q, &serial_cfg, 5).unwrap();
+        let b = train_partitioned(&ds, &q, &parallel_cfg, 5).unwrap();
+        assert_eq!(a.result.final_train_loss, b.result.final_train_loss);
+        assert_eq!(a.result.test_accuracy, b.result.test_accuracy);
+        assert_eq!(a.result.best_val_loss, b.result.best_val_loss);
+        assert_eq!(a.peak_resident_bytes, b.peak_resident_bytes);
+        let c = train_partitioned(&ds, &q, &serial_cfg, 5).unwrap();
+        assert_eq!(a.result.final_train_loss, c.result.final_train_loss);
+    }
+
+    #[test]
+    fn partitioned_single_partition_tracks_full_graph_closely() {
+        // K=1 is full-graph training with the partition bookkeeping: the
+        // graph (and therefore the gradient sequence) is identical, only
+        // the rng domain differs, so quality must be on par.
+        let ds = tiny_ds();
+        let q = QuantConfig::int2_blockwise(8);
+        let mut cfg = fast_cfg();
+        cfg.partition.num_partitions = 1;
+        let part = train_partitioned(&ds, &q, &cfg, 0).unwrap();
+        let full = train(&ds, &q, &fast_cfg(), 0).unwrap();
+        assert_eq!(part.halo_nodes, 0);
+        assert_eq!(part.edge_cut_fraction, 0.0);
+        assert!(part.result.test_accuracy > 0.5);
+        // Same dense working set as the full-batch trainer.
+        assert_eq!(part.result.stash_bytes, full.stash_bytes);
+    }
+
+    #[test]
+    fn partitioned_training_composes_with_adaptive_allocation() {
+        let ds = tiny_ds();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 10;
+        cfg.partition = crate::config::PartitionConfig {
+            num_partitions: 4,
+            halo_hops: 0,
+            cache_bits: 4,
+        };
+        cfg.allocation = crate::config::AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.0,
+            realloc_interval_epochs: 4,
+            min_bits: 1,
+            max_bits: 8,
+        };
+        let a = train_partitioned(&ds, &QuantConfig::int2_blockwise(8), &cfg, 1).unwrap();
+        assert!(a.result.final_train_loss.is_finite());
+        let b = train_partitioned(&ds, &QuantConfig::int2_blockwise(8), &cfg, 1).unwrap();
+        assert_eq!(a.result.final_train_loss, b.result.final_train_loss);
+    }
+
+    #[test]
+    fn train_span_matches_uninterrupted_run() {
+        // Splitting a run into two spans via TrainState must reproduce
+        // the single-run trajectory bit-exactly (the checkpoint-resume
+        // contract; the on-disk round trip is covered in
+        // tests/checkpoint_resume.rs).
+        let ds = tiny_ds();
+        let q = QuantConfig::int2_blockwise(8);
+        let cfg_full = TrainConfig {
+            epochs: 10,
+            ..fast_cfg()
+        };
+        let (whole, _) = train_span(&ds, &q, &cfg_full, 3, None).unwrap();
+        let cfg_half = TrainConfig {
+            epochs: 5,
+            ..fast_cfg()
+        };
+        let (_, mid) = train_span(&ds, &q, &cfg_half, 3, None).unwrap();
+        assert_eq!(mid.epoch, 5);
+        let (tail, done) = train_span(&ds, &q, &cfg_full, 3, Some(mid)).unwrap();
+        assert_eq!(done.epoch, 10);
+        assert_eq!(whole.final_train_loss, tail.final_train_loss);
+        // Resuming beyond the configured horizon is rejected.
+        let bad = crate::checkpoint::TrainState {
+            epoch: 99,
+            ..done
+        };
+        assert!(train_span(&ds, &q, &cfg_full, 3, Some(bad)).is_err());
     }
 
     #[test]

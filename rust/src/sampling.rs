@@ -101,8 +101,11 @@ pub fn sample_neighborhood(
     induce(parent, node_map)
 }
 
-/// Build the induced-subgraph dataset for a sorted node set.
-fn induce(parent: &Dataset, node_map: Vec<usize>) -> Result<Subgraph> {
+/// Build the induced-subgraph dataset for a sorted node set. Shared with
+/// the graph partitioner ([`crate::partition`]), which post-processes the
+/// masks (halo nodes leave every split) — keep the mask semantics here
+/// parent-faithful.
+pub(crate) fn induce(parent: &Dataset, node_map: Vec<usize>) -> Result<Subgraph> {
     let k = node_map.len();
     // Parent -> subgraph index.
     let mut inverse = vec![usize::MAX; parent.num_nodes()];

@@ -1,0 +1,159 @@
+//! Checkpoint round-trip coverage (ISSUE 3): save → load → continue
+//! training must reproduce the **bit-identical** loss trajectory of an
+//! uninterrupted run, for both fixed-width and adaptive-allocation
+//! configurations (the V2 state format persists the active BitPlans so
+//! the resumed allocator stays on the original schedule).
+
+use iexact::checkpoint::{load_state, save_state};
+use iexact::config::{
+    AllocStrategy, AllocationConfig, DatasetSpec, QuantConfig, TrainConfig,
+};
+use iexact::pipeline::train_span;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("iexact_resume_{name}_{}", std::process::id()))
+}
+
+fn cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs,
+        lr: 0.02,
+        weight_decay: 0.0,
+        seeds: vec![0],
+        eval_every: 2,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn resume_reproduces_uninterrupted_trajectory() {
+    let ds = DatasetSpec::tiny().generate(1);
+    let q = QuantConfig::int2_blockwise(8);
+    // Uninterrupted reference: 12 epochs straight through.
+    let (whole, _) = train_span(&ds, &q, &cfg(12), 5, None).unwrap();
+
+    // Interrupted run: 7 epochs, save, load, continue to 12.
+    let (head, state) = train_span(&ds, &q, &cfg(7), 5, None).unwrap();
+    assert_eq!(state.epoch, 7);
+    let path = tmp("fixed");
+    save_state(&state, &path).unwrap();
+    let restored = load_state(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let (tail, done) = train_span(&ds, &q, &cfg(12), 5, Some(restored)).unwrap();
+    assert_eq!(done.epoch, 12);
+
+    // The final epoch's training loss is bit-identical...
+    assert_eq!(whole.final_train_loss, tail.final_train_loss);
+    // ...and so is every curve point the two runs share. The whole run
+    // evaluates at epochs 0,2,4,...,11; head covers [0,7), tail [7,12).
+    for (j, e) in head.curve.epochs.iter().enumerate() {
+        let i = whole
+            .curve
+            .epochs
+            .iter()
+            .position(|we| we == e)
+            .unwrap_or_else(|| panic!("epoch {e} missing from whole-run curve"));
+        assert_eq!(whole.curve.train_loss[i], head.curve.train_loss[j], "head epoch {e}");
+        assert_eq!(whole.curve.val_loss[i], head.curve.val_loss[j], "head epoch {e}");
+    }
+    for (j, e) in tail.curve.epochs.iter().enumerate() {
+        let i = whole
+            .curve
+            .epochs
+            .iter()
+            .position(|we| we == e)
+            .unwrap_or_else(|| panic!("epoch {e} missing from whole-run curve"));
+        assert_eq!(whole.curve.train_loss[i], tail.curve.train_loss[j], "tail epoch {e}");
+        assert_eq!(whole.curve.val_loss[i], tail.curve.val_loss[j], "tail epoch {e}");
+    }
+}
+
+#[test]
+fn resume_preserves_adaptive_allocation_schedule() {
+    // The adaptive allocator re-solves plans at epochs 0, 4, 8, ... from
+    // the model *at that epoch*. Resuming at epoch 6 must reuse the
+    // epoch-4 plans from the checkpoint (re-deriving them would see the
+    // epoch-6 model and fork the trajectory).
+    let ds = DatasetSpec::tiny().generate(2);
+    let q = QuantConfig::int2_blockwise(8);
+    let alloc = AllocationConfig {
+        strategy: AllocStrategy::Greedy,
+        budget_bits: 2.0,
+        realloc_interval_epochs: 4,
+        min_bits: 1,
+        max_bits: 8,
+    };
+    let mut c10 = cfg(10);
+    c10.allocation = alloc.clone();
+    let (whole, _) = train_span(&ds, &q, &c10, 3, None).unwrap();
+
+    let mut c6 = cfg(6);
+    c6.allocation = alloc;
+    let (_, state) = train_span(&ds, &q, &c6, 3, None).unwrap();
+    assert!(
+        state.plans.is_some(),
+        "adaptive run must checkpoint its active plans"
+    );
+    let path = tmp("adaptive");
+    save_state(&state, &path).unwrap();
+    let restored = load_state(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(restored.plans, state.plans);
+    let (tail, _) = train_span(&ds, &q, &c10, 3, Some(restored)).unwrap();
+    assert_eq!(whole.final_train_loss, tail.final_train_loss);
+}
+
+#[test]
+fn resume_rejects_mismatched_config() {
+    let ds = DatasetSpec::tiny().generate(3);
+    let q = QuantConfig::int2_blockwise(8);
+    let (_, state) = train_span(&ds, &q, &cfg(2), 1, None).unwrap();
+    // Wrong depth.
+    let mut deeper = cfg(4);
+    deeper.num_layers = 4;
+    assert!(train_span(&ds, &q, &deeper, 1, Some(state.clone())).is_err());
+    // Wrong width: same arch and depth, different hidden_dim — weight
+    // shapes no longer match what the config/dataset would initialize.
+    let mut wider = cfg(4);
+    wider.hidden_dim = 64;
+    assert!(train_span(&ds, &q, &wider, 1, Some(state.clone())).is_err());
+    // Beyond the horizon.
+    assert!(train_span(&ds, &q, &cfg(1), 1, Some(state)).is_err());
+}
+
+#[test]
+fn resume_rejects_mismatched_allocation_regime() {
+    let ds = DatasetSpec::tiny().generate(3);
+    let q = QuantConfig::int2_blockwise(8);
+    let adaptive = AllocationConfig {
+        strategy: AllocStrategy::Greedy,
+        budget_bits: 2.0,
+        realloc_interval_epochs: 4,
+        min_bits: 1,
+        max_bits: 8,
+    };
+
+    // Adaptive checkpoint into a fixed-width config: the checkpointed
+    // plans would silently execute under a config that promises fixed
+    // width — rejected.
+    let mut c3 = cfg(3);
+    c3.allocation = adaptive.clone();
+    let (_, adaptive_state) = train_span(&ds, &q, &c3, 1, None).unwrap();
+    assert!(adaptive_state.plans.is_some());
+    assert!(train_span(&ds, &q, &cfg(6), 1, Some(adaptive_state)).is_err());
+
+    // Fixed checkpoint into an adaptive config off a realloc boundary
+    // (epoch 3, interval 4): epochs until the next re-solve would run at
+    // full width — rejected. At a boundary (epoch 4) it is a legitimate
+    // upgrade: plans are solved immediately.
+    let (_, fixed_state3) = train_span(&ds, &q, &cfg(3), 1, None).unwrap();
+    let mut c8 = cfg(8);
+    c8.allocation = adaptive;
+    assert!(train_span(&ds, &q, &c8, 1, Some(fixed_state3)).is_err());
+    let (_, fixed_state4) = train_span(&ds, &q, &cfg(4), 1, None).unwrap();
+    let (_, done) = train_span(&ds, &q, &c8, 1, Some(fixed_state4)).unwrap();
+    assert_eq!(done.epoch, 8);
+    assert!(done.plans.is_some(), "upgraded run solves plans at epoch 4");
+}

@@ -1,0 +1,221 @@
+//! Golden-fixture regression tests for the packed quantization formats.
+//!
+//! The packed byte layout (LSB-first code packing, per-block byte-aligned
+//! heterogeneous blocks, `(zero, range)` f32 metadata) is a *persistence
+//! format*: the activation cache, any future on-disk spill, and the
+//! analytic memory model all assume it never drifts silently. These tests
+//! quantize a fixed input under a fixed seed at every supported width —
+//! 1/2/4/8-bit fixed plans plus a heterogeneous `BitPlan` — and compare
+//! the serialized result **byte-exactly** against small binary fixtures
+//! committed under `tests/golden/`.
+//!
+//! The fixtures were generated independently by
+//! `scripts/make_golden_fixtures.py`, a bit-exact Python port of the
+//! PCG64 stream addressing and the uniform-bins stochastic-rounding
+//! kernel, so the Rust implementation is cross-checked against a second
+//! implementation rather than against itself.
+//!
+//! If a format change is *intentional*, re-bless with:
+//!
+//! ```sh
+//! IEXACT_BLESS=1 cargo test --test golden_pack
+//! # or regenerate from the independent port:
+//! python3 scripts/make_golden_fixtures.py rust/tests/golden
+//! ```
+//!
+//! A missing fixture fails loudly too (regenerate with the script or
+//! bless): auto-writing on absence would let a broken checkout bless
+//! exactly the drift this suite exists to catch.
+
+use iexact::alloc::{BitPlan, PlannedTensor};
+use iexact::engine::QuantEngine;
+use iexact::quant::{BinSpec, CompressedTensor};
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
+use std::path::PathBuf;
+
+/// Fixture geometry: 24x16 = 384 scalars, 12 blocks of 32.
+const ROWS: usize = 24;
+const COLS: usize = 16;
+const GROUP_LEN: usize = 32;
+/// Seed for the input values.
+const DATA_SEED: u64 = 0xF1B0;
+/// Seed keying the per-block stochastic-rounding streams.
+const QUANT_SEED: u64 = 0x5EED_601D;
+
+/// The fixed input: `next_f32() * 4 - 2` in row-major order. Every
+/// arithmetic step is exact or IEEE-deterministic, so the Python
+/// generator reproduces it bit-for-bit.
+fn fixture_input() -> Matrix {
+    let mut rng = Pcg64::new(DATA_SEED);
+    Matrix::from_fn(ROWS, COLS, |_, _| rng.next_f32() * 4.0 - 2.0)
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialization protocol for fixed-width tensors (mirrored by
+/// `scripts/make_golden_fixtures.py` — change both together).
+fn serialize_fixed(ct: &CompressedTensor) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"IEXGFIX1");
+    push_u32(&mut buf, ct.shape.0 as u32);
+    push_u32(&mut buf, ct.shape.1 as u32);
+    push_u32(&mut buf, ct.group_len as u32);
+    push_u32(&mut buf, ct.bits);
+    push_u64(&mut buf, ct.packed.len() as u64);
+    buf.extend_from_slice(&ct.packed);
+    push_u64(&mut buf, ct.zeros.len() as u64);
+    push_f32s(&mut buf, &ct.zeros);
+    push_f32s(&mut buf, &ct.ranges);
+    buf
+}
+
+/// Serialization protocol for heterogeneous-plan tensors.
+fn serialize_planned(pt: &PlannedTensor) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"IEXGPLN1");
+    push_u32(&mut buf, pt.shape.0 as u32);
+    push_u32(&mut buf, pt.shape.1 as u32);
+    push_u32(&mut buf, pt.plan.group_len() as u32);
+    push_u64(&mut buf, pt.plan.num_blocks() as u64);
+    buf.extend_from_slice(pt.plan.bits());
+    push_u64(&mut buf, pt.packed.len() as u64);
+    buf.extend_from_slice(&pt.packed);
+    push_u64(&mut buf, pt.zeros.len() as u64);
+    push_f32s(&mut buf, &pt.zeros);
+    push_f32s(&mut buf, &pt.ranges);
+    buf
+}
+
+/// Compare `actual` against the committed fixture, blessing only when
+/// `IEXACT_BLESS` is set. A *missing* fixture is a hard failure: the
+/// fixtures are committed, so their absence means the regression
+/// protection has been silently dropped (gitignore, broken checkout) —
+/// auto-writing would bless exactly the drift this suite exists to
+/// catch.
+fn check_golden(name: &str, actual: &[u8]) {
+    let path = golden_dir().join(format!("{name}.bin"));
+    if std::env::var_os("IEXACT_BLESS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        return;
+    }
+    assert!(
+        path.exists(),
+        "golden fixture '{name}' is missing from {}. Restore the committed \
+         fixture, or regenerate with `python3 scripts/make_golden_fixtures.py \
+         rust/tests/golden` / `IEXACT_BLESS=1 cargo test --test golden_pack`.",
+        path.display()
+    );
+    let expected = std::fs::read(&path).unwrap();
+    if expected != actual {
+        let first_diff = expected
+            .iter()
+            .zip(actual)
+            .position(|(a, b)| a != b)
+            .unwrap_or(expected.len().min(actual.len()));
+        panic!(
+            "packed-format drift in golden fixture '{name}': expected {} bytes, got {}, \
+             first difference at byte {first_diff}. If this change is intentional, \
+             re-bless with `IEXACT_BLESS=1 cargo test --test golden_pack`.",
+            expected.len(),
+            actual.len()
+        );
+    }
+}
+
+/// The heterogeneous plan: 12 blocks cycling through every width.
+fn hetero_plan() -> BitPlan {
+    let bits: Vec<u8> = (0..12).map(|g| [1u8, 2, 4, 8][g % 4]).collect();
+    BitPlan::new(bits, GROUP_LEN).unwrap()
+}
+
+#[test]
+fn golden_fixed_width_2_4_8() {
+    let h = fixture_input();
+    for bits in [2u32, 4, 8] {
+        let ct = QuantEngine::serial()
+            .quantize_seeded(&h, GROUP_LEN, bits, &BinSpec::Uniform, QUANT_SEED)
+            .unwrap();
+        // Sanity on the layout the fixture freezes.
+        assert_eq!(ct.packed.len(), (ROWS * COLS * bits as usize) / 8);
+        assert_eq!(ct.num_groups(), ROWS * COLS / GROUP_LEN);
+        check_golden(&format!("fixed_int{bits}"), &serialize_fixed(&ct));
+        // The parallel engine must serialize identically (bit-identity
+        // is the format's other invariant).
+        let pt = QuantEngine::with_threads(4)
+            .quantize_seeded(&h, GROUP_LEN, bits, &BinSpec::Uniform, QUANT_SEED)
+            .unwrap();
+        assert_eq!(serialize_fixed(&ct), serialize_fixed(&pt), "bits={bits}");
+    }
+}
+
+#[test]
+fn golden_planned_one_bit() {
+    let h = fixture_input();
+    let plan = BitPlan::uniform(1, ROWS * COLS / GROUP_LEN, GROUP_LEN).unwrap();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, QUANT_SEED)
+        .unwrap();
+    assert_eq!(pt.packed.len(), ROWS * COLS / 8);
+    check_golden("planned_int1", &serialize_planned(&pt));
+    let par = QuantEngine::with_threads(4)
+        .quantize_planned_seeded(&h, &plan, QUANT_SEED)
+        .unwrap();
+    assert_eq!(serialize_planned(&pt), serialize_planned(&par));
+}
+
+#[test]
+fn golden_planned_heterogeneous() {
+    let h = fixture_input();
+    let plan = hetero_plan();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, QUANT_SEED)
+        .unwrap();
+    // 3 cycles of (1+2+4+8)-bit blocks of 32 scalars = 3*(4+8+16+32) B.
+    assert_eq!(pt.packed.len(), 180);
+    check_golden("planned_hetero", &serialize_planned(&pt));
+    let par = QuantEngine::with_threads(8)
+        .quantize_planned_seeded(&h, &plan, QUANT_SEED)
+        .unwrap();
+    assert_eq!(serialize_planned(&pt), serialize_planned(&par));
+}
+
+#[test]
+fn golden_fixtures_dequantize_within_width_bound() {
+    // The frozen bytes must stay *semantically* valid too: round-trip
+    // error bounded by each block's own step size.
+    let h = fixture_input();
+    let plan = hetero_plan();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, QUANT_SEED)
+        .unwrap();
+    let d = pt.dequantize().unwrap();
+    for (idx, (&orig, &deq)) in h.as_slice().iter().zip(d.as_slice()).enumerate() {
+        let g = idx / GROUP_LEN;
+        let b = ((1u32 << plan.bit(g)) - 1) as f32;
+        let width = pt.ranges[g] / b;
+        assert!(
+            (orig - deq).abs() <= width * 1.0001,
+            "idx={idx}: |{orig} - {deq}| > {width}"
+        );
+    }
+}

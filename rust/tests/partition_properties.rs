@@ -1,0 +1,193 @@
+//! Property tests for the graph partitioner (ISSUE 3): core-partition
+//! exactness, halo correctness against an independent reference
+//! implementation, and determinism — of the partitioner itself (pure
+//! function, no threads) and of partitioned *training* across engine
+//! thread counts.
+
+use iexact::config::{DatasetSpec, ParallelismConfig, PartitionConfig, QuantConfig, TrainConfig};
+use iexact::graph::Dataset;
+use iexact::partition::{partition_dataset, PartitionSet};
+use iexact::pipeline::train_partitioned;
+use std::collections::HashSet;
+
+fn dataset(seed: u64) -> Dataset {
+    DatasetSpec::tiny().generate(seed)
+}
+
+/// Independent reference for the `h`-hop boundary neighborhood: plain
+/// set-based BFS from the core over the parent adjacency.
+fn reference_halo(ds: &Dataset, core: &[usize], hops: usize) -> Vec<usize> {
+    let core_set: HashSet<usize> = core.iter().copied().collect();
+    let mut reached: HashSet<usize> = core_set.clone();
+    let mut frontier: Vec<usize> = core.to_vec();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &v in ds.adj.row(u).0 {
+                if v != u && !reached.contains(&v) {
+                    reached.insert(v);
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    let mut halo: Vec<usize> = reached.difference(&core_set).copied().collect();
+    halo.sort_unstable();
+    halo
+}
+
+#[test]
+fn every_node_in_exactly_one_core() {
+    for seed in [1u64, 2, 3] {
+        let ds = dataset(seed);
+        for k in [2usize, 3, 4, 8, 13] {
+            let ps = partition_dataset(&ds, k, 0).unwrap();
+            let mut count = vec![0usize; ds.num_nodes()];
+            for p in &ps.parts {
+                for &u in &p.core {
+                    count[u] += 1;
+                }
+            }
+            for (u, &c) in count.iter().enumerate() {
+                assert_eq!(c, 1, "seed {seed} k {k}: node {u} in {c} cores");
+            }
+        }
+    }
+}
+
+#[test]
+fn halo_equals_reference_h_hop_boundary() {
+    let ds = dataset(4);
+    for hops in [0usize, 1, 2, 3] {
+        let ps = partition_dataset(&ds, 4, hops).unwrap();
+        for (i, p) in ps.parts.iter().enumerate() {
+            let expected = reference_halo(&ds, &p.core, hops);
+            assert_eq!(
+                p.halo, expected,
+                "partition {i} at {hops} hops: halo does not match the true boundary"
+            );
+        }
+    }
+}
+
+#[test]
+fn node_map_merges_core_and_halo_and_masks_are_core_pure() {
+    let ds = dataset(5);
+    let ps = partition_dataset(&ds, 3, 2).unwrap();
+    for p in &ps.parts {
+        let mut expected: Vec<usize> = p.core.iter().chain(&p.halo).copied().collect();
+        expected.sort_unstable();
+        assert_eq!(p.node_map, expected);
+        assert_eq!(p.core_mask.len(), p.node_map.len());
+        for (local, &parent) in p.node_map.iter().enumerate() {
+            let is_core = p.core.binary_search(&parent).is_ok();
+            assert_eq!(p.core_mask[local], is_core);
+            if is_core {
+                // Core nodes keep their parent split membership.
+                assert_eq!(p.data.train_mask[local], ds.train_mask[parent]);
+                assert_eq!(p.data.val_mask[local], ds.val_mask[parent]);
+                assert_eq!(p.data.test_mask[local], ds.test_mask[parent]);
+            } else {
+                assert!(
+                    !p.data.train_mask[local]
+                        && !p.data.val_mask[local]
+                        && !p.data.test_mask[local],
+                    "halo node {parent} kept a split"
+                );
+            }
+            // Features and labels line up with the parent.
+            assert_eq!(p.data.labels[local], ds.labels[parent]);
+            assert_eq!(p.data.features.row(local), ds.features.row(parent));
+        }
+    }
+}
+
+fn fingerprint(ps: &PartitionSet) -> Vec<(Vec<usize>, Vec<usize>)> {
+    ps.parts
+        .iter()
+        .map(|p| (p.core.clone(), p.halo.clone()))
+        .collect()
+}
+
+#[test]
+fn partitioning_is_deterministic() {
+    let ds = dataset(6);
+    let a = partition_dataset(&ds, 4, 1).unwrap();
+    for _ in 0..3 {
+        let b = partition_dataset(&ds, 4, 1).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(a.cut_edges, b.cut_edges);
+    }
+    // Regenerating the dataset (same seed) gives the same partitioning.
+    let ds2 = dataset(6);
+    let c = partition_dataset(&ds2, 4, 1).unwrap();
+    assert_eq!(fingerprint(&a), fingerprint(&c));
+}
+
+#[test]
+fn partitioned_training_is_identical_across_thread_counts() {
+    // The partitioner draws no randomness and spawns no threads; the
+    // trainer's engine threading is a pure speed knob. Together:
+    // partitioned training at 1 vs 8 workers must agree bit-for-bit.
+    let ds = dataset(7);
+    let q = QuantConfig::int2_blockwise(4);
+    let mut serial = TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs: 6,
+        lr: 0.02,
+        eval_every: 3,
+        seeds: vec![0],
+        ..TrainConfig::default()
+    };
+    serial.parallelism = ParallelismConfig::serial();
+    serial.partition = PartitionConfig {
+        num_partitions: 4,
+        halo_hops: 1,
+        cache_bits: 4,
+    };
+    let mut threaded = serial.clone();
+    threaded.parallelism = ParallelismConfig {
+        threads: 8,
+        min_blocks_per_shard: 1,
+    };
+    let a = train_partitioned(&ds, &q, &serial, 9).unwrap();
+    let b = train_partitioned(&ds, &q, &threaded, 9).unwrap();
+    assert_eq!(a.result.final_train_loss, b.result.final_train_loss);
+    assert_eq!(a.result.best_val_loss, b.result.best_val_loss);
+    assert_eq!(a.result.test_accuracy, b.result.test_accuracy);
+    assert_eq!(a.peak_resident_bytes, b.peak_resident_bytes);
+    assert_eq!(a.cache_bytes, b.cache_bytes);
+}
+
+#[test]
+fn subgraph_edges_are_exactly_the_induced_edges() {
+    // Every edge of a partition's subgraph maps to a parent edge between
+    // member nodes, and every parent edge between members appears.
+    let ds = dataset(8);
+    let ps = partition_dataset(&ds, 4, 1).unwrap();
+    for p in &ps.parts {
+        let members: HashSet<usize> = p.node_map.iter().copied().collect();
+        // Parent edges between members (excluding self loops).
+        let mut expected = HashSet::new();
+        for &u in &p.node_map {
+            for &v in ds.adj.row(u).0 {
+                if v != u && members.contains(&v) {
+                    expected.insert((u.min(v), u.max(v)));
+                }
+            }
+        }
+        let mut actual = HashSet::new();
+        for local_u in 0..p.data.num_nodes() {
+            let pu = p.node_map[local_u];
+            for &local_v in p.data.adj.row(local_u).0 {
+                let pv = p.node_map[local_v];
+                if pu != pv {
+                    actual.insert((pu.min(pv), pu.max(pv)));
+                }
+            }
+        }
+        assert_eq!(actual, expected);
+    }
+}

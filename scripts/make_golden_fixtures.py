@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Generate the golden packed-format fixtures for rust/tests/golden_pack.rs.
+
+This is a deliberately independent, bit-exact port of the Rust crate's
+PCG64 stream addressing (rust/src/rngs.rs) and the uniform-bins
+stochastic-rounding kernel + LSB-first packing (rust/src/quant.rs), so
+the committed fixtures cross-check the Rust implementation against a
+second implementation rather than against itself.
+
+Exactness argument: every floating-point step in the fixture pipeline is
+either integer math, an exact power-of-two scale, or a single IEEE-754
+float32 operation (numpy float32 ops round identically to Rust f32), so
+the two implementations agree byte-for-byte. The protocol (field order,
+magics) mirrors serialize_fixed/serialize_planned in golden_pack.rs —
+change both together.
+
+Usage: python3 scripts/make_golden_fixtures.py [rust/tests/golden]
+"""
+
+import os
+import struct
+import sys
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+PCG_MULT = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
+
+# Fixture geometry — keep in sync with rust/tests/golden_pack.rs.
+ROWS, COLS, GROUP_LEN = 24, 16, 32
+DATA_SEED = 0xF1B0
+QUANT_SEED = 0x5EED_601D
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E37_79B9_7F4A_7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+class Pcg64:
+    """PCG-XSL-RR 128/64, seeded exactly like rust/src/rngs.rs."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        s0 = sm.next_u64()
+        s1 = sm.next_u64()
+        i0 = sm.next_u64()
+        i1 = sm.next_u64()
+        self.state = ((s0 << 64) | s1) & M128
+        self.inc = (((i0 << 64) | i1) | 1) & M128
+        self.next_u64()  # warm up, matching Pcg64::new
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * PCG_MULT + self.inc) & M128
+        rot = self.state >> 122  # top 6 bits: 0..63
+        xored = ((self.state >> 64) ^ self.state) & M64
+        return ((xored >> rot) | (xored << (64 - rot))) & M64
+
+    def next_f32(self):
+        return np.float32(self.next_u64() >> 40) * np.float32(1.0 / (1 << 24))
+
+
+def rotl64(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+def with_stream(seed, stream):
+    sm = SplitMix64((stream ^ rotl64(seed, 31)) & M64)
+    return Pcg64((seed + sm.next_u64()) & M64)
+
+
+def fixture_input():
+    """next_f32() * 4 - 2, row-major, 384 values (float32 throughout)."""
+    rng = Pcg64(DATA_SEED)
+    return [
+        rng.next_f32() * np.float32(4.0) - np.float32(2.0)
+        for _ in range(ROWS * COLS)
+    ]
+
+
+def quantize_block(block, bits, rng):
+    """quantize_block's uniform hot path (rust/src/quant.rs): integer-
+    domain SR with one 64-bit draw feeding two scalars."""
+    b_max = (1 << bits) - 1
+    lo = block[0]
+    hi = block[0]
+    for v in block:
+        if v < lo:
+            lo = v
+        if v > hi:
+            hi = v
+    rng_range = np.float32(hi - lo)
+    codes = [0] * len(block)
+    if rng_range <= 0:
+        return lo, rng_range, codes
+    scale = np.float32(b_max) / rng_range
+    buffered = 0
+    have_half = False
+    for i, v in enumerate(block):
+        hbar = (v - lo) * scale  # float32 in [0, B]
+        fl = int(hbar)  # trunc == floor (hbar >= 0)
+        frac = hbar - np.float32(fl)
+        threshold = int(frac * np.float32(4294967296.0))
+        if have_half:
+            r = buffered & 0xFFFF_FFFF
+            have_half = False
+        else:
+            buffered = rng.next_u64()
+            r = buffered >> 32
+            have_half = True
+        up = 1 if r < threshold else 0
+        codes[i] = min(fl + up, b_max)
+    return lo, rng_range, codes
+
+
+def pack(codes, bits):
+    """pack_codes_slice: LSB-first, zero-padded final byte."""
+    if bits == 8:
+        return bytes(bytearray(codes))
+    out = bytearray((len(codes) * bits + 7) // 8)
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    for i, c in enumerate(codes):
+        out[i // per] |= (c & mask) << (bits * (i % per))
+    return bytes(out)
+
+
+def fixed_tensor(data, bits):
+    """QuantEngine::quantize_seeded: per-block streams, whole-tensor pack."""
+    n = len(data)
+    ngroups = (n + GROUP_LEN - 1) // GROUP_LEN
+    codes, zeros, ranges = [], [], []
+    for g in range(ngroups):
+        block = data[g * GROUP_LEN : min((g + 1) * GROUP_LEN, n)]
+        rng = with_stream(QUANT_SEED, g)
+        z, r, c = quantize_block(block, bits, rng)
+        zeros.append(z)
+        ranges.append(r)
+        codes.extend(c)
+    return pack(codes, bits), zeros, ranges
+
+
+def planned_tensor(data, bits_list):
+    """QuantEngine::quantize_planned_seeded: byte-aligned per-block pack."""
+    n = len(data)
+    packed = bytearray()
+    zeros, ranges = [], []
+    for g, b in enumerate(bits_list):
+        block = data[g * GROUP_LEN : min((g + 1) * GROUP_LEN, n)]
+        rng = with_stream(QUANT_SEED, g)
+        z, r, c = quantize_block(block, b, rng)
+        zeros.append(z)
+        ranges.append(r)
+        packed += pack(c, b)
+    return bytes(packed), zeros, ranges
+
+
+def f32_bytes(xs):
+    return np.array(xs, dtype="<f4").tobytes()
+
+
+def serialize_fixed(bits, packed, zeros, ranges):
+    buf = bytearray(b"IEXGFIX1")
+    buf += struct.pack("<IIII", ROWS, COLS, GROUP_LEN, bits)
+    buf += struct.pack("<Q", len(packed))
+    buf += packed
+    buf += struct.pack("<Q", len(zeros))
+    buf += f32_bytes(zeros)
+    buf += f32_bytes(ranges)
+    return bytes(buf)
+
+
+def serialize_planned(bits_list, packed, zeros, ranges):
+    buf = bytearray(b"IEXGPLN1")
+    buf += struct.pack("<III", ROWS, COLS, GROUP_LEN)
+    buf += struct.pack("<Q", len(bits_list))
+    buf += bytes(bits_list)
+    buf += struct.pack("<Q", len(packed))
+    buf += packed
+    buf += struct.pack("<Q", len(zeros))
+    buf += f32_bytes(zeros)
+    buf += f32_bytes(ranges)
+    return bytes(buf)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "rust/tests/golden"
+    os.makedirs(out_dir, exist_ok=True)
+    data = fixture_input()
+    nblocks = ROWS * COLS // GROUP_LEN
+
+    fixtures = {}
+    for bits in (2, 4, 8):
+        packed, zeros, ranges = fixed_tensor(data, bits)
+        assert len(packed) == ROWS * COLS * bits // 8
+        fixtures[f"fixed_int{bits}"] = serialize_fixed(bits, packed, zeros, ranges)
+
+    one_bit = [1] * nblocks
+    packed, zeros, ranges = planned_tensor(data, one_bit)
+    assert len(packed) == ROWS * COLS // 8
+    fixtures["planned_int1"] = serialize_planned(one_bit, packed, zeros, ranges)
+
+    hetero = [(1, 2, 4, 8)[g % 4] for g in range(nblocks)]
+    packed, zeros, ranges = planned_tensor(data, hetero)
+    assert len(packed) == 3 * (4 + 8 + 16 + 32)
+    fixtures["planned_hetero"] = serialize_planned(hetero, packed, zeros, ranges)
+
+    # Sanity: the SR codes must reconstruct each value to within one bin.
+    for bits in (2, 4, 8):
+        packed, zeros, ranges = fixed_tensor(data, bits)
+        b_max = (1 << bits) - 1
+        per = 8 // bits
+        mask = (1 << bits) - 1
+        for i, v in enumerate(data):
+            code = (packed[i // per] >> (bits * (i % per))) & mask
+            g = i // GROUP_LEN
+            recon = np.float32(zeros[g]) + np.float32(ranges[g]) * np.float32(
+                code
+            ) / np.float32(b_max)
+            step = ranges[g] / b_max if ranges[g] > 0 else 0.0
+            assert abs(float(recon) - float(v)) <= float(step) * 1.001, (
+                bits,
+                i,
+                float(v),
+                float(recon),
+            )
+
+    for name, blob in sorted(fixtures.items()):
+        path = os.path.join(out_dir, f"{name}.bin")
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"wrote {path} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
