@@ -4,10 +4,67 @@
 //! EXACT slowest of the quantized rows, block-wise recovering speed as
 //! G/R grows, VM slowest.
 //!
+//! Besides the human-readable tables, every arm is recorded in a
+//! machine-readable **`BENCH_pipeline.json`** (per-arm epoch time,
+//! throughput and peak-resident activation bytes) so the repo keeps a
+//! perf trajectory across PRs. `scripts/check_bench.py` sanity-parses
+//! the file; CI uploads it as an artifact. Set `IEXACT_BENCH_JSON` to
+//! change the output path.
+//!
 //! Run: `cargo bench --bench bench_pipeline`
 
+use iexact::alloc::BitPlan;
 use iexact::config::{DatasetSpec, TrainConfig};
+use iexact::engine::QuantEngine;
+use iexact::memory::BufferPool;
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
 use iexact::util::timer::measure;
+
+/// One benchmark arm for the JSON trajectory.
+struct Arm {
+    group: &'static str,
+    name: String,
+    ms_per_epoch: f64,
+    rate_per_sec: f64,
+    peak_resident_bytes: usize,
+    /// Wall-clock speedup vs. this group's serial baseline (1.0 when the
+    /// arm *is* the baseline or the group has none).
+    speedup_vs_serial: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_bench_json(path: &str, nodes: usize, edges: usize, hidden: usize, arms: &[Arm]) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"pipeline\",\n");
+    out.push_str(&format!(
+        "  \"dataset\": {{\"nodes\": {nodes}, \"edges\": {edges}, \"hidden\": {hidden}}},\n"
+    ));
+    out.push_str("  \"arms\": [\n");
+    for (i, a) in arms.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"group\": \"{}\", \"name\": \"{}\", \"ms_per_epoch\": {:.4}, \
+             \"rate_per_sec\": {:.4}, \"peak_resident_bytes\": {}, \
+             \"speedup_vs_serial\": {:.4}}}{}\n",
+            json_escape(a.group),
+            json_escape(&a.name),
+            a.ms_per_epoch,
+            a.rate_per_sec,
+            a.peak_resident_bytes,
+            a.speedup_vs_serial,
+            if i + 1 == arms.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => eprintln!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let mut spec = DatasetSpec::arxiv_like();
@@ -21,6 +78,7 @@ fn main() {
         seeds: vec![0],
         ..TrainConfig::default()
     };
+    let mut arms: Vec<Arm> = Vec::new();
     println!(
         "# bench_pipeline: {} nodes, {} edges, hidden {}",
         dataset.num_nodes(),
@@ -31,10 +89,11 @@ fn main() {
 
     let configs = iexact::coordinator::table1_configs(&[2, 4, 8, 16, 32, 64]);
     for quant in configs {
+        let mut peak = 0usize;
         let (_, med, _) = measure(1, 3, || {
-            std::hint::black_box(
-                iexact::pipeline::train(&dataset, &quant, &cfg, 0).unwrap(),
-            );
+            let out = iexact::pipeline::train(&dataset, &quant, &cfg, 0).unwrap();
+            peak = out.stash_bytes;
+            std::hint::black_box(out);
         });
         let per_epoch = med / cfg.epochs as f64;
         println!(
@@ -43,6 +102,14 @@ fn main() {
             per_epoch * 1e3,
             1.0 / per_epoch
         );
+        arms.push(Arm {
+            group: "table1",
+            name: quant.label(),
+            ms_per_epoch: per_epoch * 1e3,
+            rate_per_sec: 1.0 / per_epoch,
+            peak_resident_bytes: peak,
+            speedup_vs_serial: 1.0,
+        });
     }
 
     // ---- Adaptive bit allocation, end to end ----
@@ -68,10 +135,11 @@ fn main() {
     ] {
         let mut acfg = cfg.clone();
         acfg.allocation = allocation;
+        let mut peak = 0usize;
         let (_, med, _) = measure(1, 3, || {
-            std::hint::black_box(
-                iexact::pipeline::train(&dataset, &quant, &acfg, 0).unwrap(),
-            );
+            let out = iexact::pipeline::train(&dataset, &quant, &acfg, 0).unwrap();
+            peak = out.stash_bytes;
+            std::hint::black_box(out);
         });
         let per_epoch = med / acfg.epochs as f64;
         println!(
@@ -80,6 +148,14 @@ fn main() {
             per_epoch * 1e3,
             1.0 / per_epoch
         );
+        arms.push(Arm {
+            group: "allocation",
+            name: label.to_string(),
+            ms_per_epoch: per_epoch * 1e3,
+            rate_per_sec: 1.0 / per_epoch,
+            peak_resident_bytes: peak,
+            speedup_vs_serial: 1.0,
+        });
     }
 
     // ---- Partitioned training, end to end ----
@@ -115,46 +191,150 @@ fn main() {
             1.0 / per_epoch,
             peak / 1024
         );
+        arms.push(Arm {
+            group: "partition",
+            name: format!("K={k}"),
+            ms_per_epoch: per_epoch * 1e3,
+            rate_per_sec: 1.0 / per_epoch,
+            peak_resident_bytes: peak,
+            speedup_vs_serial: 1.0,
+        });
     }
 
-    // ---- Quantization-engine threading, end to end ----
-    // Same training step, same numbers (bit-identical by construction) —
-    // only the wall clock may differ. Shard gating is disabled so the
-    // bench-scale tensors fan out.
+    // ---- Shared-runtime thread scaling, end to end ----
+    // Same training run, same numbers (bit-identical by construction) —
+    // only the wall clock may differ. The whole step rides the
+    // persistent worker pool now (spmm + matmul + quantize + fused
+    // unstash), so this measures the runtime, not just the quantizer.
+    // Shard gating is disabled so the bench-scale tensors fan out.
     use iexact::config::ParallelismConfig;
-    println!("\n# engine threading (blockwise INT2 G/R=8, identical results)");
-    println!("{:<24} {:>14} {:>12}", "engine", "ms/epoch", "epochs/s");
+    println!("\n# shared-runtime threading (blockwise INT2 G/R=8, identical results)");
+    println!(
+        "{:<24} {:>14} {:>12} {:>10}",
+        "runtime", "ms/epoch", "epochs/s", "speedup"
+    );
     let quant = iexact::config::QuantConfig::int2_blockwise(8);
-    for (label, parallelism) in [
-        ("serial", ParallelismConfig::serial()),
-        (
-            "threads=2",
-            ParallelismConfig {
-                threads: 2,
-                min_blocks_per_shard: 1,
-            },
-        ),
-        (
-            "auto",
-            ParallelismConfig {
-                threads: 0,
-                min_blocks_per_shard: 1,
-            },
-        ),
-    ] {
+    let mut serial_epoch = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
         let mut tcfg = cfg.clone();
-        tcfg.parallelism = parallelism;
+        tcfg.parallelism = ParallelismConfig {
+            threads,
+            min_blocks_per_shard: 1,
+        };
+        let mut peak = 0usize;
         let (_, med, _) = measure(1, 3, || {
-            std::hint::black_box(
-                iexact::pipeline::train(&dataset, &quant, &tcfg, 0).unwrap(),
-            );
+            let out = iexact::pipeline::train(&dataset, &quant, &tcfg, 0).unwrap();
+            peak = out.stash_bytes;
+            std::hint::black_box(out);
         });
         let per_epoch = med / tcfg.epochs as f64;
+        if threads == 1 {
+            serial_epoch = per_epoch;
+        }
+        let speedup = serial_epoch / per_epoch;
         println!(
-            "{:<24} {:>14.2} {:>12.2}",
-            label,
+            "{:<24} {:>14.2} {:>12.2} {:>9.2}x",
+            format!("threads={threads}"),
             per_epoch * 1e3,
-            1.0 / per_epoch
+            1.0 / per_epoch,
+            speedup
         );
+        arms.push(Arm {
+            group: "threads",
+            name: format!("threads={threads}"),
+            ms_per_epoch: per_epoch * 1e3,
+            rate_per_sec: 1.0 / per_epoch,
+            peak_resident_bytes: peak,
+            speedup_vs_serial: speedup,
+        });
     }
+
+    // ---- Fused dequantize→aggregate vs materialize-then-aggregate ----
+    // The backward path's unstash as an isolated kernel: decode a
+    // planned tensor and aggregate it over the bench graph's Â. The
+    // fused kernel streams decoded blocks (one tile per worker) into the
+    // output; the materialize arm builds the full dense matrix first.
+    // peak_resident_bytes records the largest float-buffer draw — the
+    // "no full dense intermediate" claim, measured.
+    println!("\n# fused dequantize->spmm vs materialize (INT2 plan, G = 8 rows)");
+    println!(
+        "{:<24} {:>14} {:>12} {:>16}",
+        "kernel", "ms/call", "calls/s", "max float take B"
+    );
+    let n_nodes = dataset.num_nodes();
+    let r_dim = 64;
+    let mut hrng = Pcg64::new(77);
+    let h = Matrix::from_fn(n_nodes, r_dim, |_, _| hrng.next_f32() * 2.0 - 1.0);
+    let glen = 8 * r_dim; // 8 rows per block, row-aligned
+    let plan = BitPlan::uniform(2, (n_nodes * r_dim).div_ceil(glen), glen).unwrap();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, 0xbe)
+        .unwrap();
+    let mut fused_serial = 0.0f64;
+    let mut mat_serial = 0.0f64;
+    for threads in [1usize, 4] {
+        let engine = QuantEngine::with_threads(threads);
+        // Materialize-then-aggregate.
+        let mut pool = BufferPool::new();
+        let (_, med_mat, _) = measure(2, 6, || {
+            let deq = engine.dequantize_planned_pooled(&pt, &mut pool).unwrap();
+            let out = dataset.adj.spmm_with(&deq, engine.runtime()).unwrap();
+            pool.put_floats(deq.into_vec());
+            std::hint::black_box(out);
+        });
+        if threads == 1 {
+            mat_serial = med_mat;
+        }
+        let mat_take = pool.stats().max_float_take * 4;
+        println!(
+            "{:<24} {:>14.3} {:>12.1} {:>16}",
+            format!("materialize t={threads}"),
+            med_mat * 1e3,
+            1.0 / med_mat,
+            mat_take
+        );
+        arms.push(Arm {
+            group: "fused",
+            name: format!("materialize t={threads}"),
+            ms_per_epoch: med_mat * 1e3,
+            rate_per_sec: 1.0 / med_mat,
+            peak_resident_bytes: mat_take,
+            speedup_vs_serial: mat_serial / med_mat,
+        });
+        // Fused.
+        let mut pool = BufferPool::new();
+        let (_, med_fused, _) = measure(2, 6, || {
+            let out = engine.dequantize_spmm_planned(&dataset.adj, &pt, &mut pool).unwrap();
+            std::hint::black_box(out);
+        });
+        if threads == 1 {
+            fused_serial = med_fused;
+        }
+        let fused_take = pool.stats().max_float_take * 4;
+        println!(
+            "{:<24} {:>14.3} {:>12.1} {:>16}",
+            format!("fused t={threads}"),
+            med_fused * 1e3,
+            1.0 / med_fused,
+            fused_take
+        );
+        arms.push(Arm {
+            group: "fused",
+            name: format!("fused t={threads}"),
+            ms_per_epoch: med_fused * 1e3,
+            rate_per_sec: 1.0 / med_fused,
+            peak_resident_bytes: fused_take,
+            speedup_vs_serial: fused_serial / med_fused,
+        });
+    }
+
+    let path = std::env::var("IEXACT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    write_bench_json(
+        &path,
+        dataset.num_nodes(),
+        dataset.num_edges(),
+        cfg.hidden_dim,
+        &arms,
+    );
 }

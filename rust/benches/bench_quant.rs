@@ -174,4 +174,53 @@ fn main() {
             baseline / med
         );
     }
+
+    // ---- Fused dequantize→matmul vs materialize-then-multiply ----
+    // The backward unstash as an isolated kernel: recover the big
+    // planned tensor through a dense operand. The fused path decodes one
+    // block per worker and streams rows straight into the product — its
+    // largest float draw is one G-scalar tile, not the dense 32768x64
+    // intermediate. Results are bit-identical by construction.
+    println!("\n# fused dequantize->matmul vs materialize (INT2 plan, 4 threads)");
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "kernel", "median ms", "Mscalar/s", "max take B"
+    );
+    let engine = QuantEngine::with_threads(4);
+    let plan = iexact::alloc::BitPlan::uniform(2, blocks, group).unwrap();
+    let pt = engine.quantize_planned_seeded(&big, &plan, 0x51).unwrap();
+    let mut prng = Pcg64::new(8);
+    let operand = Matrix::from_fn(big_r, 128, |_, _| prng.next_f32() - 0.5);
+    {
+        let mut pool = BufferPool::new();
+        let (_, med, _) = measure(2, 6, || {
+            let deq = engine.dequantize_planned_pooled(&pt, &mut pool).unwrap();
+            let out = deq.matmul_with(&operand, engine.runtime()).unwrap();
+            pool.put_floats(deq.into_vec());
+            std::hint::black_box(out);
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            "materialize + matmul",
+            med * 1e3,
+            big_scalars / med / 1e6,
+            pool.stats().max_float_take * 4
+        );
+    }
+    {
+        let mut pool = BufferPool::new();
+        let (_, med, _) = measure(2, 6, || {
+            let out = engine
+                .dequantize_matmul_planned(&pt, &operand, &mut pool)
+                .unwrap();
+            std::hint::black_box(out);
+        });
+        println!(
+            "{:<34} {:>12.3} {:>14.1} {:>12}",
+            "fused dequantize->matmul",
+            med * 1e3,
+            big_scalars / med / 1e6,
+            pool.stats().max_float_take * 4
+        );
+    }
 }

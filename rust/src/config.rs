@@ -158,14 +158,17 @@ impl Arch {
     }
 }
 
-/// Execution parallelism for the quantization engine — the `[parallelism]`
-/// config section.
+/// Execution parallelism for the shared compute runtime — the
+/// `[parallelism]` config section.
 ///
-/// The engine (see [`crate::engine::QuantEngine`]) shards the flat block
-/// list of a grouped quantize/dequantize across scoped worker threads.
-/// Because every block draws randomness from its own deterministic
-/// stream, **these knobs only affect speed, never results**: training is
-/// bit-identical at any thread count.
+/// One persistent [`WorkerPool`](crate::runtime::pool::WorkerPool) is
+/// built from this section per training run and shared by the
+/// quantization engine ([`crate::engine::QuantEngine`]), the tiled dense
+/// kernels and the row-sharded sparse aggregation (see
+/// `docs/runtime.md`). Because every quantization block draws randomness
+/// from its own deterministic stream and every parallel kernel preserves
+/// the serial accumulation order, **these knobs only affect speed, never
+/// results**: training is bit-identical at any thread count.
 ///
 /// Keys:
 ///
@@ -215,6 +218,20 @@ impl ParallelismConfig {
             threads: 1,
             min_blocks_per_shard: 1,
         }
+    }
+
+    /// Whether `threads` requests auto mode (`threads = 0`): one worker
+    /// per core, capped at [`crate::engine::MAX_AUTO_THREADS`].
+    pub fn is_auto(&self) -> bool {
+        self.threads == 0
+    }
+
+    /// The concrete executor count this config resolves to — explicit
+    /// values pass through, auto (`0`) resolves against
+    /// `std::thread::available_parallelism`. Always at least 1; this is
+    /// the size of the worker pool the trainers build.
+    pub fn resolved_threads(&self) -> usize {
+        crate::runtime::pool::resolve_threads(self.threads)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -1084,5 +1101,38 @@ seeds = [0, 1]
         assert!(d.min_blocks_per_shard >= 1);
         d.validate().unwrap();
         assert_eq!(ParallelismConfig::serial().threads, 1);
+    }
+
+    #[test]
+    fn parallelism_auto_mode_is_valid_and_resolves() {
+        // `threads = 0` is the documented auto mode (README parallel
+        // runtime section): accepted by the TOML layer and validate(),
+        // and resolved to at least one worker, capped at the auto
+        // ceiling.
+        let cfg = ExperimentConfig::from_toml("[parallelism]\nthreads = 0\n").unwrap();
+        assert!(cfg.train.parallelism.is_auto());
+        cfg.train.parallelism.validate().unwrap();
+        let t = cfg.train.parallelism.resolved_threads();
+        assert!(
+            (1..=crate::engine::MAX_AUTO_THREADS).contains(&t),
+            "auto resolved to {t}"
+        );
+        // Explicit counts pass through untouched.
+        let explicit = ParallelismConfig {
+            threads: 3,
+            min_blocks_per_shard: 1,
+        };
+        assert!(!explicit.is_auto());
+        assert_eq!(explicit.resolved_threads(), 3);
+        // And the out-of-range error still names the key path (the
+        // contract every [parallelism] rejection follows).
+        let err = ParallelismConfig {
+            threads: ParallelismConfig::MAX_THREADS + 1,
+            min_blocks_per_shard: 1,
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("parallelism.threads"), "{err}");
     }
 }

@@ -6,7 +6,20 @@
 //! for throughput. [`QuantEngine`] shards the flat block list of
 //! [`BlockwiseQuantizer`](crate::quant::BlockwiseQuantizer) (and the
 //! per-row groups of [`RowQuantizer`](crate::quant::RowQuantizer)) into
-//! contiguous per-thread shards driven by `std::thread::scope`.
+//! contiguous per-thread shards executed on a persistent
+//! [`WorkerPool`](crate::runtime::pool::WorkerPool) — threads are
+//! spawned once per engine, not once per call, and the same pool is the
+//! substrate for the tiled dense/sparse kernels (see `docs/runtime.md`).
+//!
+//! Beyond plain quantize/dequantize, the engine owns the **fused
+//! dequantize→aggregate** kernels of the backward hot path:
+//! [`QuantEngine::dequantize_matmul_planned`] /
+//! [`QuantEngine::dequantize_matmul`] stream each decoded block straight
+//! into a matmul consumer (the `IRP` recovery), and
+//! [`QuantEngine::dequantize_spmm_planned`] streams decoded row tiles
+//! into a CSR aggregation — neither materializes the full dense
+//! dequantized matrix (scratch is one block per worker, recycled through
+//! the [`BufferPool`]).
 //!
 //! ## Determinism
 //!
@@ -44,14 +57,21 @@
 
 use crate::alloc::{BitPlan, PlannedTensor};
 use crate::config::ParallelismConfig;
+use crate::graph::CsrMatrix;
 use crate::memory::BufferPool;
 use crate::quant::{
     dequantize_block, pack_codes_into, pack_codes_slice, quantize_block, unpack_range, BinSpec,
     CompressedTensor, DequantPlan, QuantPlan,
 };
 use crate::rngs::Pcg64;
-use crate::tensor::Matrix;
+use crate::runtime::pool::{Task, WorkerPool, MIN_ROWS_PER_SHARD};
+use crate::tensor::{row_axpy_matmul, Matrix};
 use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Auto-mode worker-count cap, re-exported from the shared pool so
+/// existing references keep working.
+pub use crate::runtime::pool::MAX_AUTO_THREADS;
 
 /// Slot in a per-width lookup array for the supported widths 1/2/4/8
 /// (1 → 0, 2 → 1, 4 → 2, 8 → 3).
@@ -60,40 +80,94 @@ fn width_slot(bits: u32) -> usize {
     bits.trailing_zeros() as usize
 }
 
-/// Auto mode caps the worker count here: grouped quantization saturates
-/// memory bandwidth well before it saturates very wide machines, and the
-/// per-call `thread::scope` spawn cost grows with the worker count.
-pub const MAX_AUTO_THREADS: usize = 8;
-
-/// Resolve a configured thread count (`0` = auto) to a concrete one.
-fn resolve_threads(threads: usize) -> usize {
-    if threads > 0 {
-        threads
-    } else {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(MAX_AUTO_THREADS)
+/// Validate a [`CompressedTensor`]'s width, layout and metadata — the
+/// single checkpoint shared by the fixed-width entry points (dequantize
+/// and fused matmul), so a format invariant added here holds for both.
+fn validate_compressed(ct: &CompressedTensor) -> Result<()> {
+    if !matches!(ct.bits, 1 | 2 | 4 | 8) {
+        return Err(Error::Config(format!("unsupported bit width {}", ct.bits)));
     }
+    if ct.group_len == 0 {
+        return Err(Error::Config("group_len must be positive".into()));
+    }
+    let (rows, cols) = ct.shape;
+    let n = rows * cols;
+    let num_groups = n.div_ceil(ct.group_len);
+    let codes_per_byte = (8 / ct.bits) as usize;
+    if ct.packed.len() * codes_per_byte < n {
+        return Err(Error::Shape(format!(
+            "packed buffer too short: wanted {n} codes, got {}",
+            ct.packed.len() * codes_per_byte
+        )));
+    }
+    if ct.zeros.len() != num_groups || ct.ranges.len() != num_groups {
+        return Err(Error::Shape(format!(
+            "expected {num_groups} (zero, range) pairs, got ({}, {})",
+            ct.zeros.len(),
+            ct.ranges.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a [`PlannedTensor`]'s packed layout and metadata, returning
+/// its per-block byte offsets. The single checkpoint shared by every
+/// planned entry point (dequantize, fused matmul, fused spmm), so a
+/// format invariant added here holds for all of them at once.
+fn validate_planned(pt: &PlannedTensor) -> Result<Vec<usize>> {
+    let (rows, cols) = pt.shape;
+    let n = rows * cols;
+    let num_groups = pt.plan.num_blocks();
+    let offsets = pt.plan.offsets(n)?;
+    let total_bytes = *offsets.last().expect("offsets non-empty");
+    if pt.packed.len() < total_bytes {
+        return Err(Error::Shape(format!(
+            "packed buffer too short: plan needs {total_bytes} bytes, got {}",
+            pt.packed.len()
+        )));
+    }
+    if pt.zeros.len() != num_groups || pt.ranges.len() != num_groups {
+        return Err(Error::Shape(format!(
+            "expected {num_groups} (zero, range) pairs, got ({}, {})",
+            pt.zeros.len(),
+            pt.ranges.len()
+        )));
+    }
+    Ok(offsets)
 }
 
 /// Sharded executor for grouped quantize/dequantize.
 ///
-/// Cheap to construct and `Clone`; holds no threads — workers are scoped
-/// per call, so the engine can be shared freely across the pipeline,
-/// coordinator and benches.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// The engine runs on a persistent
+/// [`WorkerPool`](crate::runtime::pool::WorkerPool): threads are spawned
+/// once at construction and reused by every call, so per-layer fan-out
+/// costs a channel send instead of an OS thread spawn. Cloning is cheap
+/// (the pool is shared through an `Arc`), so the engine can be passed
+/// freely across the pipeline, coordinator and benches. The tiled dense
+/// and sparse kernels accept the same pool via
+/// [`QuantEngine::runtime`], making one config-sized pool the execution
+/// substrate for the whole training step.
+#[derive(Debug, Clone)]
 pub struct QuantEngine {
-    threads: usize,
+    pool: Arc<WorkerPool>,
     min_blocks_per_shard: usize,
 }
+
+impl PartialEq for QuantEngine {
+    fn eq(&self, other: &Self) -> bool {
+        self.threads() == other.threads()
+            && self.min_blocks_per_shard == other.min_blocks_per_shard
+    }
+}
+
+impl Eq for QuantEngine {}
 
 impl QuantEngine {
     /// Single-threaded engine — the reference every parallel result is
     /// bit-compared against.
     pub fn serial() -> Self {
         QuantEngine {
-            threads: 1,
+            pool: Arc::new(WorkerPool::serial()),
             min_blocks_per_shard: 1,
         }
     }
@@ -104,7 +178,7 @@ impl QuantEngine {
     /// production configs go through [`Self::from_config`].
     pub fn with_threads(threads: usize) -> Self {
         QuantEngine {
-            threads: resolve_threads(threads),
+            pool: Arc::new(WorkerPool::new(threads)),
             min_blocks_per_shard: 1,
         }
     }
@@ -119,29 +193,39 @@ impl QuantEngine {
     /// against `std::thread::available_parallelism`.
     pub fn from_config(cfg: &ParallelismConfig) -> Self {
         QuantEngine {
-            threads: resolve_threads(cfg.threads),
+            pool: Arc::new(WorkerPool::from_config(cfg)),
             min_blocks_per_shard: cfg.min_blocks_per_shard.max(1),
         }
     }
 
+    /// Engine on an existing shared pool (one pool, many consumers).
+    pub fn with_runtime(pool: Arc<WorkerPool>, min_blocks_per_shard: usize) -> Self {
+        QuantEngine {
+            pool,
+            min_blocks_per_shard: min_blocks_per_shard.max(1),
+        }
+    }
+
+    /// The shared compute runtime this engine executes on — pass it to
+    /// [`Matrix::matmul_with`](crate::tensor::Matrix::matmul_with) /
+    /// [`CsrMatrix::spmm_with`](crate::graph::CsrMatrix::spmm_with) so
+    /// the dense and sparse kernels share the engine's workers.
+    pub fn runtime(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
     /// Resolved worker-count ceiling for this engine.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.threads()
     }
 
     /// Worker count actually used for `num_blocks` independent blocks:
     /// stays serial until at least two shards of `min_blocks_per_shard`
-    /// blocks exist (fan-out below that loses more to spawn overhead than
-    /// it gains), then grows linearly and caps at the configured thread
-    /// count.
+    /// blocks exist (fan-out below that loses more to scheduling overhead
+    /// than it gains), then grows linearly and caps at the configured
+    /// thread count.
     pub fn effective_shards(&self, num_blocks: usize) -> usize {
-        if self.threads <= 1 {
-            return 1;
-        }
-        if num_blocks < self.min_blocks_per_shard.saturating_mul(2) {
-            return 1;
-        }
-        self.threads.min(num_blocks / self.min_blocks_per_shard).max(1)
+        self.pool.shards_for(num_blocks, self.min_blocks_per_shard)
     }
 
     /// Grouped quantization (Eq. 2 + Eq. 6) with randomness drawn from
@@ -226,34 +310,34 @@ impl QuantEngine {
             let groups_per_shard = num_groups.div_ceil(shards);
             let chunk = groups_per_shard * group_len;
             let plan = &plan;
-            std::thread::scope(|s| {
-                for (idx, (((data_c, codes_c), zeros_c), ranges_c)) in data
-                    .chunks(chunk)
-                    .zip(codes.chunks_mut(chunk))
-                    .zip(zeros.chunks_mut(groups_per_shard))
-                    .zip(ranges.chunks_mut(groups_per_shard))
-                    .enumerate()
-                {
-                    let base = idx * groups_per_shard;
-                    s.spawn(move || {
-                        for (j, (z, r)) in
-                            zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
-                        {
-                            let lo = j * group_len;
-                            let hi = (lo + group_len).min(data_c.len());
-                            let mut rng_g = Pcg64::with_stream(seed, (base + j) as u64);
-                            let (zz, rr) = quantize_block(
-                                plan,
-                                &data_c[lo..hi],
-                                &mut codes_c[lo..hi],
-                                &mut rng_g,
-                            );
-                            *z = zz;
-                            *r = rr;
-                        }
-                    });
-                }
-            });
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (idx, (((data_c, codes_c), zeros_c), ranges_c)) in data
+                .chunks(chunk)
+                .zip(codes.chunks_mut(chunk))
+                .zip(zeros.chunks_mut(groups_per_shard))
+                .zip(ranges.chunks_mut(groups_per_shard))
+                .enumerate()
+            {
+                let base = idx * groups_per_shard;
+                tasks.push(Box::new(move || {
+                    for (j, (z, r)) in
+                        zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
+                    {
+                        let lo = j * group_len;
+                        let hi = (lo + group_len).min(data_c.len());
+                        let mut rng_g = Pcg64::with_stream(seed, (base + j) as u64);
+                        let (zz, rr) = quantize_block(
+                            plan,
+                            &data_c[lo..hi],
+                            &mut codes_c[lo..hi],
+                            &mut rng_g,
+                        );
+                        *z = zz;
+                        *r = rr;
+                    }
+                }));
+            }
+            self.pool.run(tasks);
         }
 
         let mut packed = match pool.as_deref_mut() {
@@ -297,29 +381,10 @@ impl QuantEngine {
         ct: &CompressedTensor,
         mut pool: Option<&mut BufferPool>,
     ) -> Result<Matrix> {
-        if !matches!(ct.bits, 1 | 2 | 4 | 8) {
-            return Err(Error::Config(format!("unsupported bit width {}", ct.bits)));
-        }
-        if ct.group_len == 0 {
-            return Err(Error::Config("group_len must be positive".into()));
-        }
+        validate_compressed(ct)?;
         let (rows, cols) = ct.shape;
         let n = rows * cols;
         let num_groups = n.div_ceil(ct.group_len);
-        let codes_per_byte = (8 / ct.bits) as usize;
-        if ct.packed.len() * codes_per_byte < n {
-            return Err(Error::Shape(format!(
-                "packed buffer too short: wanted {n} codes, got {}",
-                ct.packed.len() * codes_per_byte
-            )));
-        }
-        if ct.zeros.len() != num_groups || ct.ranges.len() != num_groups {
-            return Err(Error::Shape(format!(
-                "expected {num_groups} (zero, range) pairs, got ({}, {})",
-                ct.zeros.len(),
-                ct.ranges.len()
-            )));
-        }
         let plan = DequantPlan::resolve(ct.bits, &ct.bins);
         let group_len = ct.group_len;
         // Every element of `out` (and the unpack scratch) is overwritten
@@ -370,32 +435,32 @@ impl QuantEngine {
             let zeros = ct.zeros.as_slice();
             let ranges = ct.ranges.as_slice();
             let bits = ct.bits;
-            std::thread::scope(|s| {
-                for (idx, (((out_c, zeros_c), ranges_c), scratch)) in out
-                    .chunks_mut(chunk)
-                    .zip(zeros.chunks(groups_per_shard))
-                    .zip(ranges.chunks(groups_per_shard))
-                    .zip(scratches.iter_mut())
-                    .enumerate()
-                {
-                    s.spawn(move || {
-                        // Each shard unpacks only its own scalar range —
-                        // in-bounds by the packed-length check above.
-                        unpack_range(packed, bits, idx * chunk, scratch);
-                        for (j, (&z, &r)) in zeros_c.iter().zip(ranges_c).enumerate() {
-                            let lo = j * group_len;
-                            let hi = (lo + group_len).min(out_c.len());
-                            dequantize_block(
-                                plan,
-                                z,
-                                r,
-                                &scratch[lo..hi],
-                                &mut out_c[lo..hi],
-                            );
-                        }
-                    });
-                }
-            });
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for (idx, (((out_c, zeros_c), ranges_c), scratch)) in out
+                .chunks_mut(chunk)
+                .zip(zeros.chunks(groups_per_shard))
+                .zip(ranges.chunks(groups_per_shard))
+                .zip(scratches.iter_mut())
+                .enumerate()
+            {
+                tasks.push(Box::new(move || {
+                    // Each shard unpacks only its own scalar range —
+                    // in-bounds by the packed-length check above.
+                    unpack_range(packed, bits, idx * chunk, scratch);
+                    for (j, (&z, &r)) in zeros_c.iter().zip(ranges_c).enumerate() {
+                        let lo = j * group_len;
+                        let hi = (lo + group_len).min(out_c.len());
+                        dequantize_block(
+                            plan,
+                            z,
+                            r,
+                            &scratch[lo..hi],
+                            &mut out_c[lo..hi],
+                        );
+                    }
+                }));
+            }
+            self.pool.run(tasks);
             if let Some(p) = pool.as_deref_mut() {
                 for scratch in scratches {
                     p.put_bytes(scratch);
@@ -549,44 +614,44 @@ impl QuantEngine {
             }
             let offsets = offsets.as_slice();
             let qplans = &qplans;
-            std::thread::scope(|s| {
-                for (i, ((packed_c, zeros_c), ranges_c)) in packed_chunks
-                    .into_iter()
-                    .zip(zeros.chunks_mut(groups_per_shard))
-                    .zip(ranges.chunks_mut(groups_per_shard))
-                    .enumerate()
-                {
-                    s.spawn(move || {
-                        let base = i * groups_per_shard;
-                        let base_off = offsets[base];
-                        let mut scratch = vec![0u8; group_len];
-                        for (j, (z, r)) in
-                            zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
-                        {
-                            let g = base + j;
-                            let lo = g * group_len;
-                            let hi = (lo + group_len).min(n);
-                            let bits = plan.bit(g);
-                            let qp =
-                                qplans[width_slot(bits)].as_ref().expect("resolved above");
-                            let mut rng_g = Pcg64::with_stream(seed, g as u64);
-                            let (zz, rr) = quantize_block(
-                                qp,
-                                &data[lo..hi],
-                                &mut scratch[..hi - lo],
-                                &mut rng_g,
-                            );
-                            *z = zz;
-                            *r = rr;
-                            pack_codes_slice(
-                                &scratch[..hi - lo],
-                                bits,
-                                &mut packed_c[offsets[g] - base_off..offsets[g + 1] - base_off],
-                            );
-                        }
-                    });
-                }
-            });
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for (i, ((packed_c, zeros_c), ranges_c)) in packed_chunks
+                .into_iter()
+                .zip(zeros.chunks_mut(groups_per_shard))
+                .zip(ranges.chunks_mut(groups_per_shard))
+                .enumerate()
+            {
+                tasks.push(Box::new(move || {
+                    let base = i * groups_per_shard;
+                    let base_off = offsets[base];
+                    let mut scratch = vec![0u8; group_len];
+                    for (j, (z, r)) in
+                        zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
+                    {
+                        let g = base + j;
+                        let lo = g * group_len;
+                        let hi = (lo + group_len).min(n);
+                        let bits = plan.bit(g);
+                        let qp =
+                            qplans[width_slot(bits)].as_ref().expect("resolved above");
+                        let mut rng_g = Pcg64::with_stream(seed, g as u64);
+                        let (zz, rr) = quantize_block(
+                            qp,
+                            &data[lo..hi],
+                            &mut scratch[..hi - lo],
+                            &mut rng_g,
+                        );
+                        *z = zz;
+                        *r = rr;
+                        pack_codes_slice(
+                            &scratch[..hi - lo],
+                            bits,
+                            &mut packed_c[offsets[g] - base_off..offsets[g + 1] - base_off],
+                        );
+                    }
+                }));
+            }
+            self.pool.run(tasks);
         }
 
         Ok(PlannedTensor {
@@ -624,21 +689,7 @@ impl QuantEngine {
         let n = rows * cols;
         let group_len = pt.plan.group_len();
         let num_groups = pt.plan.num_blocks();
-        let offsets = pt.plan.offsets(n)?;
-        let total_bytes = *offsets.last().expect("offsets non-empty");
-        if pt.packed.len() < total_bytes {
-            return Err(Error::Shape(format!(
-                "packed buffer too short: plan needs {total_bytes} bytes, got {}",
-                pt.packed.len()
-            )));
-        }
-        if pt.zeros.len() != num_groups || pt.ranges.len() != num_groups {
-            return Err(Error::Shape(format!(
-                "expected {num_groups} (zero, range) pairs, got ({}, {})",
-                pt.zeros.len(),
-                pt.ranges.len()
-            )));
-        }
+        let offsets = validate_planned(pt)?;
         let mut dplans: [Option<DequantPlan>; 4] = [None, None, None, None];
         for &b in pt.plan.bits() {
             let slot = width_slot(b as u32);
@@ -688,38 +739,476 @@ impl QuantEngine {
             let zeros = pt.zeros.as_slice();
             let ranges = pt.ranges.as_slice();
             let plan = &pt.plan;
-            std::thread::scope(|s| {
-                for (i, out_c) in out.chunks_mut(chunk).enumerate() {
-                    s.spawn(move || {
-                        let base = i * groups_per_shard;
-                        let mut scratch = vec![0u8; group_len];
-                        let blocks = out_c.len().div_ceil(group_len);
-                        for j in 0..blocks {
-                            let g = base + j;
-                            let lo = j * group_len;
-                            let hi = (lo + group_len).min(out_c.len());
-                            let bits = plan.bit(g);
-                            let dp =
-                                dplans[width_slot(bits)].as_ref().expect("resolved above");
-                            unpack_range(
-                                &packed[offsets[g]..offsets[g + 1]],
-                                bits,
-                                0,
-                                &mut scratch[..hi - lo],
-                            );
-                            dequantize_block(
-                                dp,
-                                zeros[g],
-                                ranges[g],
-                                &scratch[..hi - lo],
-                                &mut out_c[lo..hi],
-                            );
-                        }
-                    });
-                }
-            });
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            for (i, out_c) in out.chunks_mut(chunk).enumerate() {
+                tasks.push(Box::new(move || {
+                    let base = i * groups_per_shard;
+                    let mut scratch = vec![0u8; group_len];
+                    let blocks = out_c.len().div_ceil(group_len);
+                    for j in 0..blocks {
+                        let g = base + j;
+                        let lo = j * group_len;
+                        let hi = (lo + group_len).min(out_c.len());
+                        let bits = plan.bit(g);
+                        let dp =
+                            dplans[width_slot(bits)].as_ref().expect("resolved above");
+                        unpack_range(
+                            &packed[offsets[g]..offsets[g + 1]],
+                            bits,
+                            0,
+                            &mut scratch[..hi - lo],
+                        );
+                        dequantize_block(
+                            dp,
+                            zeros[g],
+                            ranges[g],
+                            &scratch[..hi - lo],
+                            &mut out_c[lo..hi],
+                        );
+                    }
+                }));
+            }
+            self.pool.run(tasks);
         }
         Matrix::from_vec(rows, cols, out)
+    }
+
+    /// Fused `Dequant(ct) @ b` — the backward pass's unstash→recover
+    /// product — without materializing the dense dequantized matrix.
+    ///
+    /// Blocks are decoded one at a time into a per-worker scratch tile
+    /// (recycled through `pool`) and each decoded row is streamed
+    /// straight into the output via the same row kernel
+    /// [`Matrix::matmul`] uses, so the result is **bit-identical** to
+    /// `engine.dequantize(ct)? @ b` at any thread count while peak
+    /// intermediate memory drops from the full `rows × cols` matrix to
+    /// `group_len` floats per worker.
+    ///
+    /// Requires the stash's blocks to be row-aligned
+    /// (`group_len % cols == 0`, which holds for every stash the
+    /// pipeline produces — per-row and block-wise grouping are both
+    /// whole-row). Non-aligned tensors fall back to
+    /// materialize-then-multiply.
+    pub fn dequantize_matmul(
+        &self,
+        ct: &CompressedTensor,
+        b: &Matrix,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        validate_compressed(ct)?;
+        let (rows, cols) = ct.shape;
+        let n_scalars = rows * cols;
+        if b.rows() != cols {
+            return Err(Error::Shape(format!(
+                "dequantize_matmul: {rows}x{cols} @ {}x{}",
+                b.rows(),
+                b.cols()
+            )));
+        }
+        if cols == 0 || ct.group_len % cols != 0 {
+            let deq = self.dequantize_pooled(ct, pool)?;
+            let out = deq.matmul_with(b, &self.pool)?;
+            pool.put_floats(deq.into_vec());
+            return Ok(out);
+        }
+        let dec = BlockDecoder {
+            packed: &ct.packed,
+            zeros: &ct.zeros,
+            ranges: &ct.ranges,
+            group_len: ct.group_len,
+            n_scalars,
+            layout: DecodeLayout::Fixed {
+                bits: ct.bits,
+                plan: DequantPlan::resolve(ct.bits, &ct.bins),
+            },
+        };
+        self.fused_matmul(&dec, (rows, cols), b, pool)
+    }
+
+    /// [`Self::dequantize_matmul`] for a heterogeneous [`PlannedTensor`]:
+    /// walks the plan's byte-aligned packed blocks, decoding each at its
+    /// own width. Bit-identical to
+    /// `engine.dequantize_planned(pt)? @ b` at any thread count.
+    pub fn dequantize_matmul_planned(
+        &self,
+        pt: &PlannedTensor,
+        b: &Matrix,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let (rows, cols) = pt.shape;
+        let n_scalars = rows * cols;
+        let offsets = validate_planned(pt)?;
+        if b.rows() != cols {
+            return Err(Error::Shape(format!(
+                "dequantize_matmul: {rows}x{cols} @ {}x{}",
+                b.rows(),
+                b.cols()
+            )));
+        }
+        if cols == 0 || pt.plan.group_len() % cols != 0 {
+            let deq = self.dequantize_planned_pooled(pt, pool)?;
+            let out = deq.matmul_with(b, &self.pool)?;
+            pool.put_floats(deq.into_vec());
+            return Ok(out);
+        }
+        let dec = BlockDecoder {
+            packed: &pt.packed,
+            zeros: &pt.zeros,
+            ranges: &pt.ranges,
+            group_len: pt.plan.group_len(),
+            n_scalars,
+            layout: DecodeLayout::planned(&pt.plan, &offsets),
+        };
+        self.fused_matmul(&dec, (rows, cols), b, pool)
+    }
+
+    /// Fused `adj @ Dequant(pt)` — compressed-activation aggregation —
+    /// without materializing the dense dequantized matrix.
+    ///
+    /// Output rows are sharded across the pool exactly like
+    /// [`CsrMatrix::spmm_with`]; each worker keeps **one decoded block**
+    /// (`group_len` floats, recycled through `pool`) as its tile cache
+    /// and re-decodes on block change. Because every output row
+    /// accumulates its CSR neighbors in the serial order over identical
+    /// decoded values, the result is **bit-identical** to
+    /// `adj.spmm(&engine.dequantize_planned(pt)?)` at any thread count.
+    ///
+    /// Requires row-aligned blocks (`group_len % cols == 0`); non-aligned
+    /// plans fall back to materialize-then-aggregate.
+    ///
+    /// **Cost model:** decode work is `O(block switches × group_len)` —
+    /// a block is re-decoded whenever consecutive CSR neighbors fall in
+    /// different blocks, so the fused kernel trades decode time for
+    /// memory. On neighbor-local graphs (sorted CSR columns, clustered
+    /// or partitioned node orders) switches are rare and the kernel is
+    /// competitive; on scatter-heavy adjacencies materialize-then-
+    /// aggregate can be faster while the fused path still wins on peak
+    /// memory (one `group_len` tile per worker vs the full dense
+    /// matrix). `bench_pipeline`'s `fused` group measures both arms so
+    /// the trade-off is recorded, not assumed.
+    pub fn dequantize_spmm_planned(
+        &self,
+        adj: &CsrMatrix,
+        pt: &PlannedTensor,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let (rows, cols) = pt.shape;
+        let n_scalars = rows * cols;
+        let offsets = validate_planned(pt)?;
+        if adj.n_cols != rows {
+            return Err(Error::Shape(format!(
+                "dequantize_spmm: {}x{} @ {rows}x{cols}",
+                adj.n_rows, adj.n_cols
+            )));
+        }
+        if cols == 0 {
+            return Ok(Matrix::zeros(adj.n_rows, 0));
+        }
+        if pt.plan.group_len() % cols != 0 {
+            let deq = self.dequantize_planned_pooled(pt, pool)?;
+            let out = adj.spmm_with(&deq, &self.pool)?;
+            pool.put_floats(deq.into_vec());
+            return Ok(out);
+        }
+        let dec = BlockDecoder {
+            packed: &pt.packed,
+            zeros: &pt.zeros,
+            ranges: &pt.ranges,
+            group_len: pt.plan.group_len(),
+            n_scalars,
+            layout: DecodeLayout::planned(&pt.plan, &offsets),
+        };
+        self.fused_spmm(adj, &dec, cols, pool)
+    }
+
+    /// Shared core of the fused dequantize→matmul kernels: shard the
+    /// block list, decode block-by-block into per-worker scratch, stream
+    /// each decoded row through [`row_axpy_matmul`] into the output.
+    fn fused_matmul(
+        &self,
+        dec: &BlockDecoder<'_>,
+        shape: (usize, usize),
+        b: &Matrix,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let (rows, cols) = shape;
+        let n = b.cols();
+        let mut out = Matrix::zeros(rows, n);
+        let num_groups = dec.num_groups();
+        if rows == 0 || n == 0 || num_groups == 0 {
+            return Ok(out);
+        }
+        let group_len = dec.group_len;
+        let rows_per_block = group_len / cols;
+        let b_data = b.as_slice();
+        // Gate fan-out on *output rows* like the dense kernels (16-row
+        // minimum tile), not on the quantizer's block gate: stash block
+        // counts are small (hundreds) under production group lengths,
+        // and the work per block here is a matmul row, not a quantize
+        // loop. Shards are still block-aligned (one shard ≥ one block).
+        let shards = self
+            .pool
+            .shards_for(rows, MIN_ROWS_PER_SHARD)
+            .min(num_groups);
+        if shards <= 1 {
+            let mut codes = pool.take_bytes_scratch(group_len);
+            let mut floats = pool.take_floats_scratch(group_len);
+            let out_data = out.as_mut_slice();
+            for g in 0..num_groups {
+                let len = dec.decode(g, &mut codes, &mut floats);
+                let row0 = g * rows_per_block;
+                for (i, a_row) in floats[..len].chunks(cols).enumerate() {
+                    let r = row0 + i;
+                    row_axpy_matmul(a_row, b_data, n, &mut out_data[r * n..(r + 1) * n]);
+                }
+            }
+            pool.put_bytes(codes);
+            pool.put_floats(floats);
+        } else {
+            let groups_per_shard = num_groups.div_ceil(shards);
+            let shard_count = num_groups.div_ceil(groups_per_shard);
+            let chunk = groups_per_shard * rows_per_block * n;
+            let mut codes_scr: Vec<Vec<u8>> = (0..shard_count)
+                .map(|_| pool.take_bytes_scratch(group_len))
+                .collect();
+            let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
+                .map(|_| pool.take_floats_scratch(group_len))
+                .collect();
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for ((i, out_c), (codes, floats)) in out
+                .as_mut_slice()
+                .chunks_mut(chunk)
+                .enumerate()
+                .zip(codes_scr.iter_mut().zip(float_scr.iter_mut()))
+            {
+                tasks.push(Box::new(move || {
+                    let base = i * groups_per_shard;
+                    let blocks = (out_c.len() / n).div_ceil(rows_per_block);
+                    for j in 0..blocks {
+                        let g = base + j;
+                        let len = dec.decode(g, codes, floats);
+                        let lo_row = j * rows_per_block;
+                        for (ri, a_row) in floats[..len].chunks(cols).enumerate() {
+                            let r = lo_row + ri;
+                            row_axpy_matmul(
+                                a_row,
+                                b_data,
+                                n,
+                                &mut out_c[r * n..(r + 1) * n],
+                            );
+                        }
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+            for c in codes_scr {
+                pool.put_bytes(c);
+            }
+            for f in float_scr {
+                pool.put_floats(f);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shared core of the fused dequantize→spmm kernel: shard *output*
+    /// rows, cache one decoded block per worker, accumulate CSR
+    /// neighbors in serial order.
+    fn fused_spmm(
+        &self,
+        adj: &CsrMatrix,
+        dec: &BlockDecoder<'_>,
+        cols: usize,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let mut out = Matrix::zeros(adj.n_rows, cols);
+        if adj.n_rows == 0 || cols == 0 || dec.n_scalars == 0 {
+            return Ok(out);
+        }
+        let group_len = dec.group_len;
+        let rows_per_block = group_len / cols;
+        let shards = self.pool.shards_for(adj.n_rows, MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            let mut codes = pool.take_bytes_scratch(group_len);
+            let mut floats = pool.take_floats_scratch(group_len);
+            let mut cached = usize::MAX;
+            let out_data = out.as_mut_slice();
+            for r in 0..adj.n_rows {
+                let (idx, vals) = adj.row(r);
+                let out_row = &mut out_data[r * cols..(r + 1) * cols];
+                fused_spmm_row(
+                    idx,
+                    vals,
+                    dec,
+                    rows_per_block,
+                    cols,
+                    &mut cached,
+                    &mut codes,
+                    &mut floats,
+                    out_row,
+                );
+            }
+            pool.put_bytes(codes);
+            pool.put_floats(floats);
+        } else {
+            let rows_per = adj.n_rows.div_ceil(shards);
+            let shard_count = adj.n_rows.div_ceil(rows_per);
+            let mut codes_scr: Vec<Vec<u8>> = (0..shard_count)
+                .map(|_| pool.take_bytes_scratch(group_len))
+                .collect();
+            let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
+                .map(|_| pool.take_floats_scratch(group_len))
+                .collect();
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for ((tile, out_c), (codes, floats)) in out
+                .as_mut_slice()
+                .chunks_mut(rows_per * cols)
+                .enumerate()
+                .zip(codes_scr.iter_mut().zip(float_scr.iter_mut()))
+            {
+                let base = tile * rows_per;
+                tasks.push(Box::new(move || {
+                    let mut cached = usize::MAX;
+                    for (i, out_row) in out_c.chunks_mut(cols).enumerate() {
+                        let (idx, vals) = adj.row(base + i);
+                        fused_spmm_row(
+                            idx,
+                            vals,
+                            dec,
+                            rows_per_block,
+                            cols,
+                            &mut cached,
+                            codes,
+                            floats,
+                            out_row,
+                        );
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+            for c in codes_scr {
+                pool.put_bytes(c);
+            }
+            for f in float_scr {
+                pool.put_floats(f);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One fused-spmm output row: accumulate `v · x̂[c]` over CSR neighbors
+/// in order, decoding the block holding row `c` into the worker's tile
+/// cache on block change. The inner accumulation mirrors the serial
+/// `spmm_row` kernel in `graph.rs` exactly — the bit-identity contract
+/// with the materialize-then-aggregate path.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fused_spmm_row(
+    idx: &[usize],
+    vals: &[f32],
+    dec: &BlockDecoder<'_>,
+    rows_per_block: usize,
+    cols: usize,
+    cached: &mut usize,
+    codes: &mut [u8],
+    floats: &mut [f32],
+    out_row: &mut [f32],
+) {
+    for (&c, &v) in idx.iter().zip(vals) {
+        let g = c / rows_per_block;
+        if g != *cached {
+            dec.decode(g, codes, floats);
+            *cached = g;
+        }
+        let off = (c - g * rows_per_block) * cols;
+        let h_row = &floats[off..off + cols];
+        for j in 0..cols {
+            out_row[j] += v * h_row[j];
+        }
+    }
+}
+
+/// Read-only view of one compressed stash's packed blocks plus resolved
+/// dequantization plans — the shared substrate of the fused kernels.
+/// Decoding is purely deterministic, so sharing it across workers keeps
+/// the serial/parallel bit-identity contract.
+struct BlockDecoder<'a> {
+    packed: &'a [u8],
+    zeros: &'a [f32],
+    ranges: &'a [f32],
+    group_len: usize,
+    n_scalars: usize,
+    layout: DecodeLayout<'a>,
+}
+
+enum DecodeLayout<'a> {
+    /// Fixed-width contiguous stream: block `g` starts at scalar
+    /// `g * group_len` of one packed bitstream.
+    Fixed { bits: u32, plan: DequantPlan },
+    /// Heterogeneous widths: block `g` occupies its own byte-aligned
+    /// packed range at `offsets[g]..offsets[g + 1]`.
+    Planned {
+        offsets: &'a [usize],
+        plan: &'a BitPlan,
+        dplans: Box<[Option<DequantPlan>; 4]>,
+    },
+}
+
+impl<'a> DecodeLayout<'a> {
+    /// Resolve one [`DequantPlan`] per width `plan` actually uses
+    /// (uniform bins — the planned path's contract).
+    fn planned(plan: &'a BitPlan, offsets: &'a [usize]) -> Self {
+        let mut dplans: Box<[Option<DequantPlan>; 4]> = Box::new([None, None, None, None]);
+        for &b in plan.bits() {
+            let slot = width_slot(b as u32);
+            if dplans[slot].is_none() {
+                dplans[slot] = Some(DequantPlan::resolve(b as u32, &BinSpec::Uniform));
+            }
+        }
+        DecodeLayout::Planned {
+            offsets,
+            plan,
+            dplans,
+        }
+    }
+}
+
+impl BlockDecoder<'_> {
+    fn num_groups(&self) -> usize {
+        self.n_scalars.div_ceil(self.group_len)
+    }
+
+    /// Scalars in block `g` (only the final block may be ragged).
+    fn block_len(&self, g: usize) -> usize {
+        self.group_len.min(self.n_scalars - g * self.group_len)
+    }
+
+    /// Decode block `g` into `floats[..len]` (using `codes[..len]` as
+    /// unpack scratch) and return `len`.
+    fn decode(&self, g: usize, codes: &mut [u8], floats: &mut [f32]) -> usize {
+        let len = self.block_len(g);
+        let codes = &mut codes[..len];
+        let out = &mut floats[..len];
+        match &self.layout {
+            DecodeLayout::Fixed { bits, plan } => {
+                unpack_range(self.packed, *bits, g * self.group_len, codes);
+                dequantize_block(plan, self.zeros[g], self.ranges[g], codes, out);
+            }
+            DecodeLayout::Planned {
+                offsets,
+                plan,
+                dplans,
+            } => {
+                let bits = plan.bit(g);
+                let dp = dplans[width_slot(bits)]
+                    .as_ref()
+                    .expect("plan resolved per used width");
+                unpack_range(&self.packed[offsets[g]..offsets[g + 1]], bits, 0, codes);
+                dequantize_block(dp, self.zeros[g], self.ranges[g], codes, out);
+            }
+        }
+        len
     }
 }
 
@@ -1020,5 +1509,193 @@ mod tests {
         let mut bad_bits = good;
         bad_bits.bits = 3;
         assert!(QuantEngine::serial().dequantize(&bad_bits).is_err());
+    }
+
+    fn ring_adjacency(n: usize) -> crate::graph::CsrMatrix {
+        // Ring + a few chords so rows reference blocks non-contiguously.
+        let mut edges = Vec::new();
+        for i in 0..n {
+            edges.push((i, (i + 1) % n, 0.5f32));
+            edges.push((i, (i + 7) % n, 0.25f32));
+            edges.push((i, i, 1.0f32));
+        }
+        crate::graph::CsrMatrix::from_edges(n, &edges).unwrap()
+    }
+
+    #[test]
+    fn fused_matmul_matches_materialize_bitwise() {
+        // Fixed-width stash (uniform and VM bins): fused decode→matmul
+        // must equal dequantize-then-matmul byte for byte, at any thread
+        // count. G = 32 scalars = 2 rows of 16, so blocks are
+        // row-aligned and the streaming path engages.
+        let h = sample_matrix(48, 16, 31);
+        let b = sample_matrix(16, 24, 32);
+        for bins in [BinSpec::Uniform, BinSpec::int2_vm(1.2, 1.8).unwrap()] {
+            let ct = QuantEngine::serial()
+                .quantize_seeded(&h, 32, 2, &bins, 5)
+                .unwrap();
+            let reference = QuantEngine::serial()
+                .dequantize(&ct)
+                .unwrap()
+                .matmul(&b)
+                .unwrap();
+            for threads in [1usize, 2, 4, 7] {
+                let e = QuantEngine::with_threads(threads);
+                let mut pool = BufferPool::new();
+                let fused = e.dequantize_matmul(&ct, &b, &mut pool).unwrap();
+                assert_eq!(fused.as_slice(), reference.as_slice(), "t={threads}");
+                // Scratch stayed tile-sized: one block per worker, never
+                // the full 48x16 dense intermediate.
+                assert!(
+                    pool.stats().max_float_take <= 32,
+                    "fused path took {} floats",
+                    pool.stats().max_float_take
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matmul_planned_matches_materialize_bitwise() {
+        let h = sample_matrix(64, 16, 33); // 1024 scalars
+        let b = sample_matrix(16, 8, 34);
+        let mut rng = Pcg64::new(35);
+        // 32 blocks of 32 scalars (2 rows each), mixed widths.
+        let bits: Vec<u8> = (0..32)
+            .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+            .collect();
+        let plan = BitPlan::new(bits, 32).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xfeed)
+            .unwrap();
+        let reference = QuantEngine::serial()
+            .dequantize_planned(&pt)
+            .unwrap()
+            .matmul(&b)
+            .unwrap();
+        for threads in [1usize, 2, 4, 7] {
+            let e = QuantEngine::with_threads(threads);
+            let mut pool = BufferPool::new();
+            let fused = e.dequantize_matmul_planned(&pt, &b, &mut pool).unwrap();
+            assert_eq!(fused.as_slice(), reference.as_slice(), "t={threads}");
+            assert!(pool.stats().max_float_take <= 32);
+        }
+    }
+
+    #[test]
+    fn fused_spmm_planned_matches_materialize_bitwise() {
+        let n = 60;
+        let h = sample_matrix(n, 16, 36);
+        let adj = ring_adjacency(n);
+        let mut rng = Pcg64::new(37);
+        // 30 blocks of 32 scalars (2 rows each), mixed widths.
+        let bits: Vec<u8> = (0..30)
+            .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+            .collect();
+        let plan = BitPlan::new(bits, 32).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xabba)
+            .unwrap();
+        let reference = adj
+            .spmm(&QuantEngine::serial().dequantize_planned(&pt).unwrap())
+            .unwrap();
+        for threads in [1usize, 2, 4, 7] {
+            let e = QuantEngine::with_threads(threads);
+            let mut pool = BufferPool::new();
+            let fused = e.dequantize_spmm_planned(&adj, &pt, &mut pool).unwrap();
+            assert_eq!(fused.as_slice(), reference.as_slice(), "t={threads}");
+            // One decoded block per worker, never the dense 60x16 matrix.
+            assert!(
+                pool.stats().max_float_take <= 32,
+                "fused spmm took {} floats",
+                pool.stats().max_float_take
+            );
+        }
+    }
+
+    #[test]
+    fn fused_kernels_fall_back_on_unaligned_blocks() {
+        // G = 24 does not divide the row width 16, so blocks straddle
+        // rows; the fused entry points must still return the exact
+        // materialize-then-aggregate result (via the fallback).
+        let h = sample_matrix(30, 16, 38);
+        let b = sample_matrix(16, 4, 39);
+        let ct = QuantEngine::serial()
+            .quantize_seeded(&h, 24, 4, &BinSpec::Uniform, 6)
+            .unwrap();
+        let engine = QuantEngine::with_threads(3);
+        let mut pool = BufferPool::new();
+        let fused = engine.dequantize_matmul(&ct, &b, &mut pool).unwrap();
+        let reference = engine.dequantize(&ct).unwrap().matmul(&b).unwrap();
+        assert_eq!(fused.as_slice(), reference.as_slice());
+
+        let plan = BitPlan::uniform(4, 20, 24).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 7)
+            .unwrap();
+        let adj = ring_adjacency(30);
+        let fused = engine.dequantize_spmm_planned(&adj, &pt, &mut pool).unwrap();
+        let reference = adj
+            .spmm(&engine.dequantize_planned(&pt).unwrap())
+            .unwrap();
+        assert_eq!(fused.as_slice(), reference.as_slice());
+        let fused = engine.dequantize_matmul_planned(&pt, &b, &mut pool).unwrap();
+        let reference = engine.dequantize_planned(&pt).unwrap().matmul(&b).unwrap();
+        assert_eq!(fused.as_slice(), reference.as_slice());
+    }
+
+    #[test]
+    fn fused_kernels_validate_shapes() {
+        let h = sample_matrix(8, 8, 40);
+        let ct = QuantEngine::serial()
+            .quantize_seeded(&h, 8, 2, &BinSpec::Uniform, 8)
+            .unwrap();
+        let engine = QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        // Contraction-dim mismatch.
+        assert!(engine
+            .dequantize_matmul(&ct, &Matrix::zeros(9, 3), &mut pool)
+            .is_err());
+        // Malformed tensor.
+        let mut bad = ct.clone();
+        bad.packed.truncate(1);
+        assert!(engine
+            .dequantize_matmul(&bad, &Matrix::zeros(8, 3), &mut pool)
+            .is_err());
+        // Planned: adjacency width mismatch.
+        let plan = BitPlan::uniform(2, 8, 8).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 9)
+            .unwrap();
+        let adj = ring_adjacency(9);
+        assert!(engine.dequantize_spmm_planned(&adj, &pt, &mut pool).is_err());
+        let mut bad = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 9)
+            .unwrap();
+        bad.zeros.pop();
+        assert!(engine
+            .dequantize_matmul_planned(&bad, &Matrix::zeros(8, 3), &mut pool)
+            .is_err());
+    }
+
+    #[test]
+    fn engine_reuses_one_pool_across_calls() {
+        // The persistent pool is shared by clones and reused across
+        // calls — no per-call spawning (the ISSUE 4 tentpole).
+        let engine = QuantEngine::with_threads(4);
+        assert_eq!(engine.threads(), 4);
+        let clone = engine.clone();
+        assert!(Arc::ptr_eq(engine.runtime(), clone.runtime()));
+        let shared = QuantEngine::with_runtime(Arc::clone(engine.runtime()), 1);
+        assert!(Arc::ptr_eq(engine.runtime(), shared.runtime()));
+        assert_eq!(engine, shared);
+        let h = sample_matrix(64, 32, 41);
+        let a = engine
+            .quantize_seeded(&h, 16, 2, &BinSpec::Uniform, 3)
+            .unwrap();
+        let b = shared
+            .quantize_seeded(&h, 16, 2, &BinSpec::Uniform, 3)
+            .unwrap();
+        assert_eq!(a.packed, b.packed);
     }
 }

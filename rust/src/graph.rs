@@ -38,8 +38,24 @@
 //! ```
 
 use crate::rngs::Pcg64;
+use crate::runtime::pool::{Task, WorkerPool, MIN_ROWS_PER_SHARD};
 use crate::tensor::Matrix;
 use crate::{Error, Result};
+
+/// Accumulate one CSR output row: `out_row += Σ v · h[c]` over the
+/// row's `(column, value)` pairs in CSR order. Shared by the serial and
+/// sharded [`CsrMatrix::spmm`] paths; the engine's fused
+/// dequantize→spmm kernel mirrors this accumulation order exactly (the
+/// bit-identity contract between the fused and materialized paths).
+#[inline]
+pub(crate) fn spmm_row(idx: &[usize], vals: &[f32], h: &Matrix, cols: usize, out_row: &mut [f32]) {
+    for (&c, &v) in idx.iter().zip(vals) {
+        let h_row = h.row(c);
+        for j in 0..cols {
+            out_row[j] += v * h_row[j];
+        }
+    }
+}
 
 /// Compressed sparse row matrix with `f32` values — stores Â, the
 /// symmetric-normalized adjacency of Eq. 1.
@@ -99,8 +115,19 @@ impl CsrMatrix {
     }
 
     /// Sparse × dense: `self @ h`. The Â·H product of Eq. 1 — the
-    /// native-pipeline hot loop along with quantization.
+    /// native-pipeline hot loop along with quantization. Serial entry
+    /// point; see [`Self::spmm_with`] for the row-sharded parallel form
+    /// (bit-identical results).
     pub fn spmm(&self, h: &Matrix) -> Result<Matrix> {
+        self.spmm_with(h, WorkerPool::serial_ref())
+    }
+
+    /// `self @ h` with output rows sharded across `pool`'s workers. Each
+    /// output row is accumulated by exactly one worker in CSR
+    /// neighbor order — the serial kernel's order — so results are
+    /// **bit-identical at any thread count** (see
+    /// `rust/tests/runtime_parity.rs`).
+    pub fn spmm_with(&self, h: &Matrix, pool: &WorkerPool) -> Result<Matrix> {
         if h.rows() != self.n_cols {
             return Err(Error::Shape(format!(
                 "spmm: {}x{} @ {}x{}",
@@ -112,15 +139,29 @@ impl CsrMatrix {
         }
         let cols = h.cols();
         let mut out = Matrix::zeros(self.n_rows, cols);
-        for r in 0..self.n_rows {
-            let (idx, vals) = self.row(r);
-            let out_row = &mut out.as_mut_slice()[r * cols..(r + 1) * cols];
-            for (&c, &v) in idx.iter().zip(vals) {
-                let h_row = h.row(c);
-                for j in 0..cols {
-                    out_row[j] += v * h_row[j];
-                }
+        if self.n_rows == 0 || cols == 0 {
+            return Ok(out);
+        }
+        let shards = pool.shards_for(self.n_rows, MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            for r in 0..self.n_rows {
+                let (idx, vals) = self.row(r);
+                let out_row = &mut out.as_mut_slice()[r * cols..(r + 1) * cols];
+                spmm_row(idx, vals, h, cols, out_row);
             }
+        } else {
+            let rows_per = self.n_rows.div_ceil(shards);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (tile, out_c) in out.as_mut_slice().chunks_mut(rows_per * cols).enumerate() {
+                let base = tile * rows_per;
+                tasks.push(Box::new(move || {
+                    for (i, out_row) in out_c.chunks_mut(cols).enumerate() {
+                        let (idx, vals) = self.row(base + i);
+                        spmm_row(idx, vals, h, cols, out_row);
+                    }
+                }));
+            }
+            pool.run(tasks);
         }
         Ok(out)
     }
@@ -413,6 +454,20 @@ mod tests {
         let sparse = ds.adj.spmm(&h).unwrap();
         let dense = ds.adj.to_dense().matmul(&h).unwrap();
         assert!(sparse.rel_error(&dense).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn pooled_spmm_matches_serial_bitwise() {
+        use crate::runtime::pool::WorkerPool;
+        let ds = tiny_gen().generate("p", 8).unwrap();
+        let mut rng = Pcg64::new(9);
+        let h = Matrix::from_fn(ds.num_nodes(), 13, |_, _| rng.next_f32() * 2.0 - 1.0);
+        let serial = ds.adj.spmm(&h).unwrap();
+        for threads in [2usize, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let par = ds.adj.spmm_with(&h, &pool).unwrap();
+            assert_eq!(serial.as_slice(), par.as_slice(), "t={threads}");
+        }
     }
 
     #[test]

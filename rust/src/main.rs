@@ -46,7 +46,9 @@ TRAIN OPTIONS:
     --quant fp32|exact|vm|g<N>    (default: g8; g<N> = blockwise, G/R=N)
     --arch gcn|sage               (default: gcn)
     --sample <n>                  GraphSAINT-RN minibatch of n nodes/epoch
-    --threads <n>                 quantization-engine workers (0 = auto)
+    --threads <n>                 compute-runtime workers for the whole step
+                                  (quantize + matmul + spmm + fused unstash);
+                                  0 = auto (one per core, capped at 8)
     --budget-bits <b>             adaptive per-block bit allocation (greedy)
                                   at an average budget of b bits/scalar
     --partitions <k>              partitioned training over k BFS edge-cut
@@ -281,10 +283,11 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
             dataset_seed: 42,
         }
     };
-    // CLI override for the quantization engine's worker count (0 = auto).
-    // Unlike the free-form tuning flags, an unparsable value here is
-    // rejected — silently falling back to auto would look like the
-    // user's explicit setting took effect.
+    // CLI override for the shared compute runtime's worker count
+    // (0 = auto, the documented [parallelism] auto mode). Unlike the
+    // free-form tuning flags, an unparsable value here is rejected —
+    // silently falling back to auto would look like the user's explicit
+    // setting took effect.
     if let Some(t) = opts.get("threads") {
         cfg.train.parallelism.threads = t.parse().map_err(|_| {
             iexact::Error::Config(format!("--threads expects a non-negative integer, got '{t}'"))

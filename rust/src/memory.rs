@@ -352,6 +352,13 @@ pub struct PoolStats {
     pub misses: u64,
     /// Bytes currently parked in the pool across both buffer kinds.
     pub resident_bytes: usize,
+    /// Largest single `f32`-buffer request served so far (elements).
+    /// This is how the fused dequantize→aggregate kernels *prove* they
+    /// never materialize a full dense intermediate: their biggest float
+    /// take is one `group_len` tile per worker, while the
+    /// materialize-then-aggregate path draws the whole `rows × cols`
+    /// matrix (asserted in `rust/tests/runtime_parity.rs`).
+    pub max_float_take: usize,
 }
 
 /// Reusable-buffer pool for the quantization engine's packed INT2/INT4/
@@ -386,6 +393,7 @@ pub struct BufferPool {
     floats: Vec<Vec<f32>>,
     hits: u64,
     misses: u64,
+    max_float_take: usize,
 }
 
 impl BufferPool {
@@ -513,6 +521,7 @@ impl BufferPool {
 
     /// A zero-filled `f32` buffer of exactly `len` elements.
     pub fn take_floats(&mut self, len: usize) -> Vec<f32> {
+        self.max_float_take = self.max_float_take.max(len);
         match Self::pick(&self.floats, len) {
             Some((i, fits)) => {
                 if fits {
@@ -540,6 +549,7 @@ impl BufferPool {
     /// Like [`Self::take_floats`] but with **unspecified contents** — see
     /// [`Self::take_bytes_scratch`].
     pub fn take_floats_scratch(&mut self, len: usize) -> Vec<f32> {
+        self.max_float_take = self.max_float_take.max(len);
         match Self::pick(&self.floats, len) {
             Some((i, fits)) => {
                 if fits {
@@ -580,6 +590,7 @@ impl BufferPool {
             misses: self.misses,
             resident_bytes: self.bytes.iter().map(|b| b.capacity()).sum::<usize>()
                 + self.floats.iter().map(|b| 4 * b.capacity()).sum::<usize>(),
+            max_float_take: self.max_float_take,
         }
     }
 }

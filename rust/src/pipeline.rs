@@ -46,6 +46,7 @@ use crate::metrics::{masked_accuracy, TrainCurve};
 use crate::quant::{BinSpec, CompressedTensor};
 use crate::rngs::Pcg64;
 use crate::rp::RandomProjection;
+use crate::runtime::pool::WorkerPool;
 use crate::stats::ClippedNormal;
 use crate::tensor::Matrix;
 use crate::util::timer::LapTimer;
@@ -54,8 +55,8 @@ use crate::{Error, Result};
 
 /// A stashed compressed tensor: fixed-width ([`CompressedTensor`]) or
 /// under a heterogeneous [`BitPlan`] ([`PlannedTensor`]). The backward
-/// pass treats both uniformly — dequantize, then recycle the packed
-/// buffer.
+/// pass treats both uniformly — fused dequantize→consume, then recycle
+/// the packed buffer.
 enum StashedCt {
     Fixed(CompressedTensor),
     Planned(PlannedTensor),
@@ -69,10 +70,20 @@ impl StashedCt {
         }
     }
 
-    fn dequantize_pooled(&self, engine: &QuantEngine, pool: &mut BufferPool) -> Result<Matrix> {
+    /// Fused unstash: `Dequant(self) @ b` streamed block-by-block on the
+    /// engine (no dense `N×R` intermediate — see
+    /// [`QuantEngine::dequantize_matmul`]). Bit-identical to
+    /// dequantize-then-multiply under both the fixed-width and
+    /// heterogeneous [`BitPlan`] paths.
+    fn dequantize_matmul(
+        &self,
+        engine: &QuantEngine,
+        b: &Matrix,
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
         match self {
-            StashedCt::Fixed(ct) => engine.dequantize_pooled(ct, pool),
-            StashedCt::Planned(pt) => engine.dequantize_planned_pooled(pt, pool),
+            StashedCt::Fixed(ct) => engine.dequantize_matmul(ct, b, pool),
+            StashedCt::Planned(pt) => engine.dequantize_matmul_planned(pt, b, pool),
         }
     }
 
@@ -219,7 +230,13 @@ impl GcnModel {
     /// `[H ‖ Â H]` for GraphSAGE. This is the activation map the paper
     /// compresses.
     fn layer_input(&self, ds: &Dataset, h: &Matrix) -> Result<Matrix> {
-        let u = ds.adj.spmm(h)?;
+        self.layer_input_with(ds, h, WorkerPool::serial_ref())
+    }
+
+    /// [`Self::layer_input`] with the aggregation spmm row-sharded
+    /// across `rt`'s workers (bit-identical to serial).
+    fn layer_input_with(&self, ds: &Dataset, h: &Matrix, rt: &WorkerPool) -> Result<Matrix> {
+        let u = ds.adj.spmm_with(h, rt)?;
         match self.arch {
             Arch::Gcn => Ok(u),
             Arch::GraphSage => h.concat_cols(&u),
@@ -228,11 +245,20 @@ impl GcnModel {
 
     /// Pure inference forward pass (no stashing, no compression noise).
     pub fn forward(&self, ds: &Dataset) -> Result<Matrix> {
+        self.forward_with(ds, WorkerPool::serial_ref())
+    }
+
+    /// [`Self::forward`] with the spmm/matmul kernels tiled across
+    /// `rt`'s workers — bit-identical to the serial forward at any
+    /// thread count. The trainers call this with the engine's shared
+    /// runtime ([`QuantEngine::runtime`]) so evaluation rides the same
+    /// persistent pool as the training step.
+    pub fn forward_with(&self, ds: &Dataset, rt: &WorkerPool) -> Result<Matrix> {
         let mut h = ds.features.clone();
         let last = self.num_layers() - 1;
         for l in 0..self.num_layers() {
-            let x = self.layer_input(ds, &h)?;
-            let p = x.matmul(&self.weights[l])?;
+            let x = self.layer_input_with(ds, &h, rt)?;
+            let p = x.matmul_with(&self.weights[l], rt)?;
             h = if l == last { p } else { relu(&p) };
         }
         Ok(h)
@@ -348,6 +374,10 @@ fn train_step(
         }
     }
     let mut plan_slot = 0usize;
+    // All dense/sparse kernels of the step run on the engine's shared
+    // runtime — one persistent pool for spmm, matmul, quantize and the
+    // fused unstash (bit-identical to serial at any thread count).
+    let rt: &WorkerPool = engine.runtime();
 
     // ---- Forward ----
     // NOTE: collect_block_stats mirrors this walk's stash structure
@@ -357,8 +387,8 @@ fn train_step(
     for (l, w) in model.weights.iter().enumerate() {
         // The layer input x (= Â H for GCN, [H ‖ Â H] for GraphSAGE) is
         // the activation map that gets compressed.
-        let x = model.layer_input(ds, &h)?;
-        let p = x.matmul(w)?; // pre-activation
+        let x = model.layer_input_with(ds, &h, rt)?;
+        let p = x.matmul_with(w, rt)?; // pre-activation
         if compressed {
             let signs = if l == last {
                 None
@@ -375,7 +405,7 @@ fn train_step(
                     let (xs, xa) = x.split_cols(d)?;
                     let rp_self = RandomProjection::new(d, r_dim, rng)?;
                     let rp_agg = RandomProjection::new(d, r_dim, rng)?;
-                    let proj_self = rp_self.project(&xs)?;
+                    let proj_self = rp_self.project_with(&xs, rt)?;
                     let ct_self = quantize_stash(
                         engine,
                         &proj_self,
@@ -388,7 +418,7 @@ fn train_step(
                     )?;
                     plan_slot += 1;
                     pool.put_floats(proj_self.into_vec());
-                    let proj_agg = rp_agg.project(&xa)?;
+                    let proj_agg = rp_agg.project_with(&xa, rt)?;
                     let ct_agg = quantize_stash(
                         engine,
                         &proj_agg,
@@ -413,7 +443,7 @@ fn train_step(
                     let d = x.cols();
                     let r_dim = (d / q.proj_ratio).max(1);
                     let rp = RandomProjection::new(d, r_dim, rng)?;
-                    let proj = rp.project(&x)?;
+                    let proj = rp.project_with(&x, rt)?;
                     let ct = quantize_stash(
                         engine,
                         &proj,
@@ -439,7 +469,17 @@ fn train_step(
                 pre: p.clone(),
             });
         }
-        h = if l == last { p } else { relu(&p) };
+        // ReLU in place: the pre-activation buffer becomes the next
+        // layer's input (compressed mode keeps only the 1-bit sign
+        // pattern; dense mode stashed its own copy above), so the hot
+        // loop materializes no redundant dense matrix.
+        h = if l == last {
+            p
+        } else {
+            let mut act = p;
+            act.map_inplace(|v| v.max(0.0));
+            act
+        };
     }
 
     let stash_bytes: usize = stashes.iter().map(|s| s.nbytes()).sum();
@@ -456,27 +496,40 @@ fn train_step(
     for l in (0..model.num_layers()).rev() {
         let stash = stashes.pop().expect("one stash per layer");
         // dP: through ReLU for hidden layers, identity for the last.
-        let d_pre = match &stash {
-            Stash::Dense { pre, .. } if l != last => {
+        // Every compressed hidden layer routes through the compact
+        // SignPattern — a hidden compressed stash without one is a
+        // structural bug, not a silent identity.
+        let d_pre = match (&stash, l == last) {
+            (Stash::Dense { pre, .. }, false) => {
                 crate::linalg::relu_backward(&d_out, pre)?
             }
-            Stash::Compressed {
-                signs: Some(sp), ..
+            (
+                Stash::Compressed {
+                    signs: Some(sp), ..
+                }
+                | Stash::CompressedSage {
+                    signs: Some(sp), ..
+                },
+                false,
+            ) => sp.apply_backward(&d_out)?,
+            (_, true) => d_out,
+            _ => {
+                return Err(Error::Config(
+                    "hidden compressed layer stashed no sign pattern; the ReLU \
+                     backward requires SignPattern::apply_backward"
+                        .into(),
+                ))
             }
-            | Stash::CompressedSage {
-                signs: Some(sp), ..
-            } => sp.apply_backward(&d_out)?,
-            _ => d_out,
         };
-        // Reconstruct the stashed layer input X̂, recycling the consumed
-        // packed buffer (see StashedCt::recycle for why metadata vecs
-        // are not pooled).
+        // Reconstruct the stashed layer input X̂ with the fused
+        // dequantize→IRP product (each block decoded into a per-worker
+        // tile and streamed straight into the recovery output — no dense
+        // N×R intermediate), recycling the consumed packed buffer (see
+        // StashedCt::recycle for why metadata vecs are not pooled).
         let x_hat = match stash {
             Stash::Dense { aggregated, .. } => aggregated,
             Stash::Compressed { ct, rp, .. } | Stash::CompressedLinear { ct, rp } => {
-                let deq = ct.dequantize_pooled(engine, pool)?;
-                let rec = rp.recover(&deq)?;
-                pool.put_floats(deq.into_vec());
+                let rec = ct.dequantize_matmul(engine, rp.matrix_t(), pool)?;
                 ct.recycle(pool);
                 rec
             }
@@ -487,29 +540,25 @@ fn train_step(
                 rp_agg,
                 ..
             } => {
-                let deq_self = ct_self.dequantize_pooled(engine, pool)?;
-                let hs = rp_self.recover(&deq_self)?;
-                pool.put_floats(deq_self.into_vec());
+                let hs = ct_self.dequantize_matmul(engine, rp_self.matrix_t(), pool)?;
                 ct_self.recycle(pool);
-                let deq_agg = ct_agg.dequantize_pooled(engine, pool)?;
-                let ha = rp_agg.recover(&deq_agg)?;
-                pool.put_floats(deq_agg.into_vec());
+                let ha = ct_agg.dequantize_matmul(engine, rp_agg.matrix_t(), pool)?;
                 ct_agg.recycle(pool);
                 hs.concat_cols(&ha)?
             }
         };
         // dΘ = X̂^T dP.
-        grads[l] = x_hat.transpose_matmul(&d_pre)?;
+        grads[l] = x_hat.transpose_matmul_with(&d_pre, rt)?;
         pool.put_floats(x_hat.into_vec());
         // dH: GCN has X = Â H ⇒ dH = Â (dP Θ^T); GraphSAGE has
         // X = [H ‖ Â H] ⇒ dH = dX_left + Â dX_right.
         if l > 0 {
-            let dx = d_pre.matmul_transpose(&model.weights[l])?;
+            let dx = d_pre.matmul_transpose_with(&model.weights[l], rt)?;
             d_out = match model.arch {
-                Arch::Gcn => ds.adj.spmm(&dx)?,
+                Arch::Gcn => ds.adj.spmm_with(&dx, rt)?,
                 Arch::GraphSage => {
                     let (mut left, right) = dx.split_cols(dx.cols() / 2)?;
-                    left.axpy(1.0, &ds.adj.spmm(&right)?)?;
+                    left.axpy(1.0, &ds.adj.spmm_with(&right, rt)?)?;
                     left
                 }
             };
@@ -845,7 +894,7 @@ pub fn train_span(
         final_train_loss = step.loss;
 
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
-            let logits = model.forward(dataset)?;
+            let logits = model.forward_with(dataset, engine.runtime())?;
             let (val_loss, _) =
                 softmax_cross_entropy(&logits, &dataset.labels, &dataset.val_mask)?;
             let val_acc = masked_accuracy(&logits, &dataset.labels, &dataset.val_mask);
@@ -1042,7 +1091,7 @@ pub fn train_partitioned(
             // assemble full-graph logits from the cache — at no point is
             // more than one partition's forward pass dense-resident.
             for (p, part) in parts.parts.iter().enumerate() {
-                let logits = model.forward(&part.data)?;
+                let logits = model.forward_with(&part.data, engine.runtime())?;
                 let plan =
                     logits_cache_plan(logits.rows(), logits.cols(), pcfg.cache_bits)?;
                 cache.park(p, &logits, &plan, &engine, &mut pool)?;

@@ -23,9 +23,9 @@
 //! randomness from a *per-block* stream
 //! [`Pcg64::with_stream`]`(seed, block_index)`, which makes the output a
 //! pure function of `(input, layout, seed)`. The multi-threaded engine in
-//! [`crate::engine`] exploits this: sharding blocks across
-//! `std::thread::scope` workers produces bit-identical results to the
-//! serial path at any thread count.
+//! [`crate::engine`] exploits this: sharding blocks across the workers of
+//! a persistent [`WorkerPool`](crate::runtime::pool::WorkerPool) produces
+//! bit-identical results to the serial path at any thread count.
 //!
 //! ```
 //! use iexact::quant::BlockwiseQuantizer;

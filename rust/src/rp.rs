@@ -51,6 +51,16 @@ impl RandomProjection {
 
     /// `RP(H) = H R` (Eq. 4).
     pub fn project(&self, h: &Matrix) -> Result<Matrix> {
+        self.project_with(h, crate::runtime::pool::WorkerPool::serial_ref())
+    }
+
+    /// [`Self::project`] with the matmul tiled across `rt`'s workers
+    /// (bit-identical to serial — see `docs/runtime.md`).
+    pub fn project_with(
+        &self,
+        h: &Matrix,
+        rt: &crate::runtime::pool::WorkerPool,
+    ) -> Result<Matrix> {
         if h.cols() != self.d {
             return Err(Error::Shape(format!(
                 "project: H has {} cols, projection expects {}",
@@ -58,7 +68,7 @@ impl RandomProjection {
                 self.d
             )));
         }
-        h.matmul(&self.mat)
+        h.matmul_with(&self.mat, rt)
     }
 
     /// `IRP(H_proj) = H_proj Rᵀ` (Eq. 5).
@@ -77,6 +87,15 @@ impl RandomProjection {
     /// bake the same matrix into the JAX graph).
     pub fn matrix(&self) -> &Matrix {
         &self.mat
+    }
+
+    /// The cached transpose `Rᵀ` — the `IRP` operand. Exposed so the
+    /// engine's fused dequantize→matmul
+    /// ([`crate::engine::QuantEngine::dequantize_matmul`]) can stream
+    /// decoded blocks straight into the recovery product without
+    /// materializing the dense dequantized matrix.
+    pub fn matrix_t(&self) -> &Matrix {
+        &self.mat_t
     }
 }
 

@@ -12,10 +12,16 @@
 //! feature, manifest parsing, artifact listing and shape validation all
 //! work natively; [`Runtime::load`]/[`Runtime::execute`] return a
 //! [`Error::Runtime`] explaining how to enable compilation.
+//!
+//! The *native* execution substrate — the persistent [`WorkerPool`] that
+//! the quantization engine and the tiled dense/sparse kernels run on —
+//! lives in [`pool`] and has no PJRT dependency (see `docs/runtime.md`).
 
 mod artifacts;
+pub mod pool;
 
 pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
+pub use pool::WorkerPool;
 
 use crate::tensor::Matrix;
 use crate::{Error, Result};

@@ -1,0 +1,477 @@
+//! Shared compute runtime: one persistent, config-sized worker pool with
+//! a deterministic tile-scheduling API.
+//!
+//! Before this module, the only parallel code path in the crate was the
+//! quantization engine — and it re-spawned a `std::thread::scope` on
+//! every call, paying OS thread-spawn latency per layer per step. The
+//! [`WorkerPool`] replaces that: threads are spawned **once** (sized from
+//! the `[parallelism]` config section) and live for the lifetime of the
+//! pool, which the training drivers hold for the whole run. The pool is
+//! the execution substrate for the quantization engine
+//! ([`crate::engine::QuantEngine`]), the tiled dense kernels
+//! ([`crate::tensor::Matrix::matmul_with`] and friends), the row-sharded
+//! sparse aggregation ([`crate::graph::CsrMatrix::spmm_with`]) and the
+//! fused dequantize→aggregate kernels
+//! ([`crate::engine::QuantEngine::dequantize_spmm_planned`]).
+//!
+//! ## Determinism contract
+//!
+//! The scheduling API is deliberately rigid so that threading stays a
+//! pure speed knob:
+//!
+//! * **Fixed tile→worker assignment.** [`WorkerPool::run`] executes task
+//!   `i` of a batch on executor `i % threads` (executor `0` is the
+//!   calling thread). The assignment depends only on the task index and
+//!   the pool size — never on load, timing, or work stealing.
+//! * **Fixed intra-worker order.** Each executor runs its assigned tasks
+//!   in ascending task-index order.
+//! * **Fixed reduction order.** The pool performs no reductions itself;
+//!   kernels either write disjoint output tiles (all the kernels in this
+//!   crate) or the caller reduces per-tile results in tile-index order
+//!   after [`WorkerPool::run`] returns.
+//!
+//! Every kernel built on the pool shards its *output* into disjoint
+//! contiguous tiles and keeps the per-element accumulation order of the
+//! serial kernel, so results are **bit-identical to serial at any thread
+//! count** (enforced by `rust/tests/runtime_parity.rs`). See
+//! `docs/runtime.md` for the lifecycle and data-flow diagrams.
+//!
+//! ```
+//! use iexact::runtime::pool::{Task, WorkerPool};
+//!
+//! let pool = WorkerPool::new(4);
+//! let mut out = vec![0u64; 8];
+//! let tasks: Vec<Task<'_>> = out
+//!     .chunks_mut(2)
+//!     .enumerate()
+//!     .map(|(i, chunk)| {
+//!         Box::new(move || {
+//!             for (j, v) in chunk.iter_mut().enumerate() {
+//!                 *v = (i * 2 + j) as u64 * 10;
+//!             }
+//!         }) as Task<'_>
+//!     })
+//!     .collect();
+//! pool.run(tasks);
+//! assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+//! ```
+
+use crate::config::ParallelismConfig;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Auto mode caps the worker count here: the grouped quantize and the
+/// tiled dense kernels saturate memory bandwidth well before they
+/// saturate very wide machines.
+pub const MAX_AUTO_THREADS: usize = 8;
+
+/// Default fan-out gate for the row-tiled dense/sparse kernels: a matrix
+/// op stays serial unless every shard would receive at least this many
+/// rows (tiny operands lose more to scheduling than they gain).
+pub const MIN_ROWS_PER_SHARD: usize = 16;
+
+/// Resolve a configured thread count (`0` = auto) to a concrete one.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_AUTO_THREADS)
+    }
+}
+
+/// A unit of work scheduled on the pool — one output tile's kernel.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// The boxed-`'static` form a [`Task`] takes while it travels through a
+/// worker channel. Soundness: [`WorkerPool::run`] does not return until
+/// every submitted task has finished (or unwound), so the borrowed data
+/// behind the erased lifetime outlives all task executions.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Countdown latch: `run` waits until every remote job checked in.
+struct Latch {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            count: Mutex::new(count),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut c = self.count.lock().expect("latch mutex");
+        *c -= 1;
+        if *c == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut c = self.count.lock().expect("latch mutex");
+        while *c > 0 {
+            c = self.cv.wait(c).expect("latch condvar");
+        }
+    }
+}
+
+/// Persistent worker pool — see the module docs for the determinism
+/// contract. `threads` counts the calling thread: a pool of `t` threads
+/// spawns `t - 1` background workers, and `threads == 1` is the serial
+/// pool (no background threads, tasks run inline in index order).
+pub struct WorkerPool {
+    threads: usize,
+    /// One channel per background worker (worker `w` serves executor
+    /// index `w + 1`). Senders are `!Sync`, so each sits behind a mutex —
+    /// contention is nil (one lock per batch per worker).
+    senders: Vec<Mutex<Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool of `threads` executors (`0` = auto: one per core, capped at
+    /// [`MAX_AUTO_THREADS`]). Spawns `threads - 1` background workers
+    /// once; they live until the pool is dropped.
+    pub fn new(threads: usize) -> Self {
+        let threads = resolve_threads(threads);
+        let mut senders = Vec::with_capacity(threads.saturating_sub(1));
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for w in 1..threads {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = std::sync::mpsc::channel();
+            let handle = std::thread::Builder::new()
+                .name(format!("iexact-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn pool worker");
+            senders.push(Mutex::new(tx));
+            handles.push(handle);
+        }
+        WorkerPool {
+            threads,
+            senders,
+            handles,
+        }
+    }
+
+    /// The serial pool: one executor (the caller), no background threads.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Build from the `[parallelism]` config section.
+    pub fn from_config(cfg: &ParallelismConfig) -> Self {
+        Self::new(cfg.threads)
+    }
+
+    /// A process-wide serial pool for the zero-configuration entry points
+    /// (`Matrix::matmul`, `CsrMatrix::spmm`): runs every task inline with
+    /// no synchronization, so the plain APIs stay dependency-free.
+    pub fn serial_ref() -> &'static WorkerPool {
+        static SERIAL: OnceLock<WorkerPool> = OnceLock::new();
+        SERIAL.get_or_init(WorkerPool::serial)
+    }
+
+    /// Executor count (background workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Shard count for `items` work units under a fan-out gate: stays `1`
+    /// until at least two shards of `min_per_shard` items exist, then
+    /// grows linearly and caps at the pool's executor count. This is the
+    /// generalized form of the quantization engine's block gating, reused
+    /// by the row-tiled kernels.
+    pub fn shards_for(&self, items: usize, min_per_shard: usize) -> usize {
+        if self.threads <= 1 {
+            return 1;
+        }
+        let min_per_shard = min_per_shard.max(1);
+        if items < min_per_shard.saturating_mul(2) {
+            return 1;
+        }
+        self.threads.min(items / min_per_shard).max(1)
+    }
+
+    /// Execute a batch of tasks and block until all have completed.
+    ///
+    /// Task `i` runs on executor `i % threads()`; executor `0` is the
+    /// calling thread, which participates instead of idling. Each
+    /// executor runs its tasks in ascending index order (the module-level
+    /// determinism contract). Panics inside tasks are caught, the batch
+    /// is still drained to completion, and the first payload is re-raised
+    /// on the caller.
+    pub fn run<'scope>(&self, tasks: Vec<Task<'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.threads <= 1 || tasks.len() == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+
+        // Bucket tasks by executor: task i -> executor i % threads.
+        let mut buckets: Vec<Vec<Task<'scope>>> =
+            (0..self.threads).map(|_| Vec::new()).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            buckets[i % self.threads].push(t);
+        }
+        let own = std::mem::take(&mut buckets[0]);
+        let remote: Vec<(usize, Vec<Task<'scope>>)> = buckets
+            .into_iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, b)| !b.is_empty())
+            .collect();
+
+        let latch = Arc::new(Latch::new(remote.len()));
+        let panic_slot: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
+
+        // SOUNDNESS: nothing between the first dispatch and `latch.wait()`
+        // may unwind — an early return while erased-lifetime jobs are
+        // in flight would free borrowed tiles under running workers. A
+        // failed dispatch (poisoned sender mutex, dead worker — both
+        // "impossible", but the soundness argument must not depend on
+        // that) therefore counts its job down *itself*, drops the
+        // undelivered job on this thread, and defers the panic to after
+        // the wait.
+        let mut dispatch_failed = false;
+        for (executor, bucket) in remote {
+            if dispatch_failed {
+                // Undeliverable batch: account for it so wait() returns;
+                // the bucket (and its borrows) is dropped right here,
+                // before run() returns.
+                latch.count_down();
+                continue;
+            }
+            // Erase the scope lifetime for the channel hop. Sound because
+            // this function always reaches the latch wait below before
+            // returning, so every borrow in the bucket strictly outlives
+            // its use.
+            let bucket: Vec<Job> = bucket
+                .into_iter()
+                .map(|t| unsafe { std::mem::transmute::<Task<'scope>, Job>(t) })
+                .collect();
+            let latch_c = Arc::clone(&latch);
+            let panic_slot_c = Arc::clone(&panic_slot);
+            let job: Job = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    for t in bucket {
+                        t();
+                    }
+                }));
+                if let Err(payload) = result {
+                    if let Ok(mut slot) = panic_slot_c.lock() {
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                }
+                latch_c.count_down();
+            });
+            let delivered = self.senders[executor - 1]
+                .lock()
+                .map(|sender| sender.send(job).is_ok())
+                .unwrap_or(false);
+            if !delivered {
+                // The job (with its erased borrows) was dropped on this
+                // thread by the failed send/poisoned lock; check it in.
+                latch.count_down();
+                dispatch_failed = true;
+            }
+        }
+
+        // The caller is executor 0: run its own tasks while the workers
+        // chew, then wait for everyone before touching panic state (the
+        // borrows erased above must outlive every remote task).
+        let own_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for t in own {
+                t();
+            }
+        }));
+        latch.wait();
+        if dispatch_failed {
+            panic!("worker pool executor unavailable (worker died or sender poisoned)");
+        }
+        if let Err(payload) = own_result {
+            std::panic::resume_unwind(payload);
+        }
+        let remote_panic = panic_slot.lock().ok().and_then(|mut s| s.take());
+        if let Some(payload) = remote_panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels ends each worker's recv loop.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolves_auto_and_explicit_counts() {
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert_eq!(WorkerPool::new(3).threads(), 3);
+        assert_eq!(WorkerPool::serial().threads(), 1);
+        assert_eq!(WorkerPool::serial_ref().threads(), 1);
+        assert!(resolve_threads(0) >= 1 && resolve_threads(0) <= MAX_AUTO_THREADS);
+    }
+
+    #[test]
+    fn runs_borrowed_disjoint_tiles() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0usize; 37];
+        let chunk = 5;
+        let tasks: Vec<Task<'_>> = data
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, c)| {
+                Box::new(move || {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v = i * chunk + j + 1;
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        // The whole point: no per-call spawning, the same pool serves
+        // many batches (one per kernel call per layer per epoch).
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let tasks: Vec<Task<'_>> = (0..7)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 350);
+    }
+
+    #[test]
+    fn serial_pool_runs_inline_in_order() {
+        // Single-executor pools run every task on the caller in
+        // ascending index order (the fixed intra-worker order of the
+        // determinism contract).
+        let pool = WorkerPool::serial();
+        let order = Mutex::new(Vec::new());
+        let tasks: Vec<Task<'_>> = (0..5)
+            .map(|i| {
+                let order = &order;
+                Box::new(move || {
+                    order.lock().unwrap().push(i);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        WorkerPool::new(2).run(Vec::new());
+    }
+
+    #[test]
+    fn more_tasks_than_threads_round_robins() {
+        let pool = WorkerPool::new(2);
+        let mut out = vec![0usize; 11];
+        let tasks: Vec<Task<'_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, v)| {
+                Box::new(move || {
+                    *v = i + 100;
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 100);
+        }
+    }
+
+    #[test]
+    fn shards_for_gates_small_inputs() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.shards_for(10, 16), 1); // < 2 shards of 16
+        assert_eq!(pool.shards_for(31, 16), 1);
+        assert_eq!(pool.shards_for(32, 16), 2);
+        assert_eq!(pool.shards_for(64, 16), 4);
+        assert_eq!(pool.shards_for(10_000, 16), 8); // capped at threads
+        assert_eq!(WorkerPool::serial().shards_for(10_000, 1), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_batch_drains() {
+        let pool = WorkerPool::new(4);
+        let finished = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Task<'_>> = (0..8)
+                .map(|i| {
+                    let finished = &finished;
+                    Box::new(move || {
+                        if i == 5 {
+                            panic!("tile 5 exploded");
+                        }
+                        finished.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // The other executors' tiles all completed before propagation.
+        assert!(finished.load(Ordering::Relaxed) >= 5);
+        // And the pool survives for the next batch.
+        let tasks: Vec<Task<'_>> = (0..4)
+            .map(|_| {
+                let finished = &finished;
+                Box::new(move || {
+                    finished.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+    }
+}

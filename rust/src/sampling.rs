@@ -226,7 +226,8 @@ pub fn train_sampled(
         stash_bytes = stash_bytes.max(step.2);
         final_train_loss = step.0;
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
-            let logits = model.forward(parent)?;
+            // Eval rides the same persistent pool as the training step.
+            let logits = model.forward_with(parent, engine.runtime())?;
             let (val_loss, _) = crate::linalg::softmax_cross_entropy(
                 &logits,
                 &parent.labels,

@@ -20,7 +20,40 @@
 //! assert!(a.matmul(&Matrix::zeros(3, 3)).is_err());
 //! ```
 
+use crate::runtime::pool::{Task, WorkerPool, MIN_ROWS_PER_SHARD};
 use crate::{Error, Result};
+
+/// One output row of `A @ B`: `out_row += a_row @ B`, iterating the
+/// contraction index in ascending order with the zero-skip of the serial
+/// kernel. Shared by [`Matrix::matmul`] and the engine's fused
+/// dequantize→matmul path so both accumulate in the **same order** —
+/// the bit-identity contract between them depends on it.
+#[inline]
+pub(crate) fn row_axpy_matmul(a_row: &[f32], b_data: &[f32], n: usize, out_row: &mut [f32]) {
+    for (k, &a) in a_row.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let b_row = &b_data[k * n..(k + 1) * n];
+        for j in 0..n {
+            out_row[j] += a * b_row[j];
+        }
+    }
+}
+
+/// One output row of `A @ B^T`: length-`k` dot products against each row
+/// of `b_data`, accumulating in ascending contraction order.
+#[inline]
+fn row_dot_rows(a_row: &[f32], b_data: &[f32], k: usize, out_row: &mut [f32]) {
+    for (j, o) in out_row.iter_mut().enumerate() {
+        let b_row = &b_data[j * k..(j + 1) * k];
+        let mut acc = 0.0f32;
+        for kk in 0..k {
+            acc += a_row[kk] * b_row[kk];
+        }
+        *o = acc;
+    }
+}
 
 /// Dense row-major matrix of `f32`.
 #[derive(Debug, Clone, PartialEq)]
@@ -120,12 +153,21 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// `self @ other` — blocked, transpose-free inner kernel.
-    ///
-    /// This is the native-pipeline hot path (Â·H and H·Θ products); it is
-    /// written as an i-k-j loop so the innermost loop is a contiguous
-    /// axpy over the output row, which autovectorizes well.
+    /// `self @ other` — transpose-free i-k-j kernel (the innermost loop
+    /// is a contiguous axpy over the output row, which autovectorizes
+    /// well). Serial entry point; see [`Self::matmul_with`] for the
+    /// row-tiled parallel form (bit-identical results).
     pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        self.matmul_with(other, WorkerPool::serial_ref())
+    }
+
+    /// `self @ other`, row-tiled across `pool`'s workers: each worker
+    /// owns a contiguous tile of output rows, and every output element
+    /// accumulates over the contraction index in the same ascending
+    /// order as the serial kernel — results are **bit-identical at any
+    /// thread count** (see `rust/tests/runtime_parity.rs`). This is the
+    /// native-pipeline hot path (Â·H and H·Θ products).
+    pub fn matmul_with(&self, other: &Matrix, pool: &WorkerPool) -> Result<Matrix> {
         if self.cols != other.rows {
             return Err(Error::Shape(format!(
                 "matmul {}x{} @ {}x{}",
@@ -134,24 +176,45 @@ impl Matrix {
         }
         let mut out = Matrix::zeros(self.rows, other.cols);
         let n = other.cols;
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (k, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    out_row[j] += a * b_row[j];
-                }
+        let k = self.cols;
+        if self.rows == 0 || n == 0 || k == 0 {
+            return Ok(out);
+        }
+        let shards = pool.shards_for(self.rows, MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            for (a_row, out_row) in self.data.chunks(k).zip(out.data.chunks_mut(n)) {
+                row_axpy_matmul(a_row, &other.data, n, out_row);
             }
+        } else {
+            let rows_per = self.rows.div_ceil(shards);
+            let b_data = other.data.as_slice();
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (a_c, out_c) in self
+                .data
+                .chunks(rows_per * k)
+                .zip(out.data.chunks_mut(rows_per * n))
+            {
+                tasks.push(Box::new(move || {
+                    for (a_row, out_row) in a_c.chunks(k).zip(out_c.chunks_mut(n)) {
+                        row_axpy_matmul(a_row, b_data, n, out_row);
+                    }
+                }));
+            }
+            pool.run(tasks);
         }
         Ok(out)
     }
 
-    /// `self @ other^T`.
+    /// `self @ other^T`. Serial entry point; see
+    /// [`Self::matmul_transpose_with`].
     pub fn matmul_transpose(&self, other: &Matrix) -> Result<Matrix> {
+        self.matmul_transpose_with(other, WorkerPool::serial_ref())
+    }
+
+    /// `self @ other^T`, row-tiled across `pool`'s workers (bit-identical
+    /// to serial — each output element is one length-`k` dot product,
+    /// accumulated in ascending contraction order by exactly one worker).
+    pub fn matmul_transpose_with(&self, other: &Matrix, pool: &WorkerPool) -> Result<Matrix> {
         if self.cols != other.cols {
             return Err(Error::Shape(format!(
                 "matmul_t {}x{} @ ({}x{})^T",
@@ -159,22 +222,49 @@ impl Matrix {
             )));
         }
         let mut out = Matrix::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            for j in 0..other.rows {
-                let b_row = other.row(j);
-                let mut acc = 0.0f32;
-                for k in 0..self.cols {
-                    acc += a_row[k] * b_row[k];
-                }
-                out.data[i * other.rows + j] = acc;
+        let m = other.rows;
+        let k = self.cols;
+        if self.rows == 0 || m == 0 || k == 0 {
+            return Ok(out);
+        }
+        let shards = pool.shards_for(self.rows, MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            for (a_row, out_row) in self.data.chunks(k).zip(out.data.chunks_mut(m)) {
+                row_dot_rows(a_row, &other.data, k, out_row);
             }
+        } else {
+            let rows_per = self.rows.div_ceil(shards);
+            let b_data = other.data.as_slice();
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (a_c, out_c) in self
+                .data
+                .chunks(rows_per * k)
+                .zip(out.data.chunks_mut(rows_per * m))
+            {
+                tasks.push(Box::new(move || {
+                    for (a_row, out_row) in a_c.chunks(k).zip(out_c.chunks_mut(m)) {
+                        row_dot_rows(a_row, b_data, k, out_row);
+                    }
+                }));
+            }
+            pool.run(tasks);
         }
         Ok(out)
     }
 
-    /// `self^T @ other`.
+    /// `self^T @ other`. Serial entry point; see
+    /// [`Self::transpose_matmul_with`].
     pub fn transpose_matmul(&self, other: &Matrix) -> Result<Matrix> {
+        self.transpose_matmul_with(other, WorkerPool::serial_ref())
+    }
+
+    /// `self^T @ other`, tiled over *output* rows (= columns of `self`)
+    /// across `pool`'s workers. Every worker scans the shared operands
+    /// once and accumulates only its own output tile, walking the
+    /// contraction (row) index in the same ascending order as the serial
+    /// kernel — bit-identical at any thread count. This is the gradient
+    /// hot path (`X̂ᵀ dP`).
+    pub fn transpose_matmul_with(&self, other: &Matrix, pool: &WorkerPool) -> Result<Matrix> {
         if self.rows != other.rows {
             return Err(Error::Shape(format!(
                 "t_matmul ({}x{})^T @ {}x{}",
@@ -183,18 +273,50 @@ impl Matrix {
         }
         let mut out = Matrix::zeros(self.cols, other.cols);
         let n = other.cols;
-        for k in 0..self.rows {
-            let a_row = self.row(k);
-            let b_row = other.row(k);
-            for (i, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    out_row[j] += a * b_row[j];
+        let k = self.cols;
+        if self.rows == 0 || n == 0 || k == 0 {
+            return Ok(out);
+        }
+        let shards = pool.shards_for(k, MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            for kk in 0..self.rows {
+                let a_row = self.row(kk);
+                let b_row = other.row(kk);
+                for (i, &a) in a_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let out_row = &mut out.data[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        out_row[j] += a * b_row[j];
+                    }
                 }
             }
+        } else {
+            let cols_per = k.div_ceil(shards);
+            let a_data = self.data.as_slice();
+            let b_data = other.data.as_slice();
+            let rows = self.rows;
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (idx, out_c) in out.data.chunks_mut(cols_per * n).enumerate() {
+                let c0 = idx * cols_per;
+                tasks.push(Box::new(move || {
+                    for kk in 0..rows {
+                        let a_row = &a_data[kk * k..(kk + 1) * k];
+                        let b_row = &b_data[kk * n..(kk + 1) * n];
+                        for (local, out_row) in out_c.chunks_mut(n).enumerate() {
+                            let a = a_row[c0 + local];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            for j in 0..n {
+                                out_row[j] += a * b_row[j];
+                            }
+                        }
+                    }
+                }));
+            }
+            pool.run(tasks);
         }
         Ok(out)
     }
@@ -460,6 +582,42 @@ mod tests {
         assert_eq!(r, b);
         assert!(a.concat_cols(&Matrix::zeros(4, 2)).is_err());
         assert!(a.split_cols(9).is_err());
+    }
+
+    #[test]
+    fn pooled_matmul_variants_match_serial_bitwise() {
+        use crate::runtime::pool::WorkerPool;
+        let mut rng = Pcg64::new(11);
+        // Odd shapes so shard boundaries are ragged.
+        let a = random_matrix(&mut rng, 67, 43);
+        let b = random_matrix(&mut rng, 43, 29);
+        let c = random_matrix(&mut rng, 67, 43);
+        for threads in [2usize, 3, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(a.matmul(&b).unwrap(), a.matmul_with(&b, &pool).unwrap());
+            assert_eq!(
+                a.matmul_transpose(&c).unwrap(),
+                a.matmul_transpose_with(&c, &pool).unwrap()
+            );
+            assert_eq!(
+                a.transpose_matmul(&c).unwrap(),
+                a.transpose_matmul_with(&c, &pool).unwrap()
+            );
+        }
+        // Degenerate shapes stay well-defined under a parallel pool.
+        let pool = WorkerPool::new(4);
+        let empty = Matrix::zeros(64, 0);
+        assert_eq!(
+            empty.matmul_with(&Matrix::zeros(0, 5), &pool).unwrap().shape(),
+            (64, 5)
+        );
+        assert_eq!(
+            Matrix::zeros(0, 4)
+                .matmul_with(&Matrix::zeros(4, 3), &pool)
+                .unwrap()
+                .shape(),
+            (0, 3)
+        );
     }
 
     #[test]

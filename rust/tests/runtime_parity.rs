@@ -1,0 +1,276 @@
+//! Cross-layer parity suite for the shared compute runtime (ISSUE 4).
+//!
+//! Every kernel that runs on the persistent
+//! [`WorkerPool`](iexact::runtime::pool::WorkerPool) — the tiled dense
+//! matmuls, the row-sharded spmm, and the fused dequantize→aggregate
+//! kernels — must produce **bit-identical** output to its serial form at
+//! any thread count, and whole training runs must be thread-count
+//! invariant under the fused unstash path (fixed-width *and*
+//! heterogeneous `BitPlan`s). The fused kernels must also prove, via
+//! `BufferPool` stats, that they never materialize the full dense
+//! dequantized matrix.
+
+use iexact::alloc::BitPlan;
+use iexact::config::{
+    AllocStrategy, AllocationConfig, Arch, DatasetSpec, ParallelismConfig, QuantConfig,
+    TrainConfig,
+};
+use iexact::engine::QuantEngine;
+use iexact::graph::Dataset;
+use iexact::memory::BufferPool;
+use iexact::pipeline::{train, GcnModel};
+use iexact::rngs::Pcg64;
+use iexact::runtime::pool::WorkerPool;
+use iexact::tensor::Matrix;
+
+/// The thread counts the ISSUE 4 acceptance criteria name.
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn random_matrix(rng: &mut Pcg64, r: usize, c: usize) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.next_f32() * 2.0 - 1.0)
+}
+
+fn tiny_ds() -> Dataset {
+    DatasetSpec::tiny().generate(1)
+}
+
+#[test]
+fn matmul_family_is_bit_identical_across_thread_counts() {
+    let mut rng = Pcg64::new(1);
+    // Ragged shapes so tile boundaries don't align with shard counts.
+    let a = random_matrix(&mut rng, 201, 67);
+    let b = random_matrix(&mut rng, 67, 45);
+    let c = random_matrix(&mut rng, 201, 67);
+    let mm = a.matmul(&b).unwrap();
+    let mt = a.matmul_transpose(&c).unwrap();
+    let tm = a.transpose_matmul(&c).unwrap();
+    for threads in THREAD_COUNTS {
+        let pool = WorkerPool::new(threads);
+        assert_eq!(
+            mm.as_slice(),
+            a.matmul_with(&b, &pool).unwrap().as_slice(),
+            "matmul t={threads}"
+        );
+        assert_eq!(
+            mt.as_slice(),
+            a.matmul_transpose_with(&c, &pool).unwrap().as_slice(),
+            "matmul_transpose t={threads}"
+        );
+        assert_eq!(
+            tm.as_slice(),
+            a.transpose_matmul_with(&c, &pool).unwrap().as_slice(),
+            "transpose_matmul t={threads}"
+        );
+    }
+}
+
+#[test]
+fn spmm_is_bit_identical_across_thread_counts() {
+    let ds = tiny_ds();
+    let mut rng = Pcg64::new(2);
+    let h = random_matrix(&mut rng, ds.num_nodes(), 33);
+    let serial = ds.adj.spmm(&h).unwrap();
+    for threads in THREAD_COUNTS {
+        let pool = WorkerPool::new(threads);
+        assert_eq!(
+            serial.as_slice(),
+            ds.adj.spmm_with(&h, &pool).unwrap().as_slice(),
+            "spmm t={threads}"
+        );
+    }
+}
+
+#[test]
+fn fused_dequant_spmm_is_bit_identical_and_tile_bounded() {
+    // The ISSUE 4 acceptance criterion: the fused kernel equals
+    // materialize-then-aggregate bit-for-bit at every thread count, and
+    // its scratch stays at one tile (block) per worker — proven by the
+    // pool's largest float draw.
+    let ds = tiny_ds();
+    let n = ds.num_nodes();
+    let r_dim = 16;
+    let mut rng = Pcg64::new(3);
+    let h = random_matrix(&mut rng, n, r_dim);
+    let glen = 4 * r_dim; // 4 rows per block
+    let num_blocks = (n * r_dim).div_ceil(glen);
+    // Heterogeneous plan: every width in play.
+    let bits: Vec<u8> = (0..num_blocks)
+        .map(|g| [1u8, 2, 4, 8][g % 4])
+        .collect();
+    let plan = BitPlan::new(bits, glen).unwrap();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, 0xc0de)
+        .unwrap();
+
+    // Materialize-then-aggregate reference (and its full-dense draw).
+    let mut mat_pool = BufferPool::new();
+    let engine = QuantEngine::serial();
+    let deq = engine
+        .dequantize_planned_pooled(&pt, &mut mat_pool)
+        .unwrap();
+    let reference = ds.adj.spmm(&deq).unwrap();
+    assert_eq!(
+        mat_pool.stats().max_float_take,
+        n * r_dim,
+        "materialize path draws the full dense matrix"
+    );
+
+    for threads in THREAD_COUNTS {
+        let engine = QuantEngine::with_threads(threads);
+        let mut pool = BufferPool::new();
+        let fused = engine
+            .dequantize_spmm_planned(&ds.adj, &pt, &mut pool)
+            .unwrap();
+        assert_eq!(fused.as_slice(), reference.as_slice(), "t={threads}");
+        assert!(
+            pool.stats().max_float_take <= glen,
+            "t={threads}: fused kernel drew {} floats (> one {glen}-scalar tile)",
+            pool.stats().max_float_take
+        );
+    }
+}
+
+#[test]
+fn fused_dequant_matmul_is_bit_identical_fixed_and_planned() {
+    use iexact::quant::BinSpec;
+    let mut rng = Pcg64::new(4);
+    let h = random_matrix(&mut rng, 96, 24);
+    let operand = random_matrix(&mut rng, 24, 40);
+
+    // Fixed-width stash (the backward's CompressedTensor path).
+    let ct = QuantEngine::serial()
+        .quantize_seeded(&h, 48, 2, &BinSpec::Uniform, 11)
+        .unwrap();
+    let ref_fixed = QuantEngine::serial()
+        .dequantize(&ct)
+        .unwrap()
+        .matmul(&operand)
+        .unwrap();
+    // Heterogeneous plan (the adaptive-allocation path).
+    let plan = BitPlan::new(
+        (0..48).map(|g| [1u8, 2, 4, 8][g % 4]).collect(),
+        48,
+    )
+    .unwrap();
+    let pt = QuantEngine::serial()
+        .quantize_planned_seeded(&h, &plan, 12)
+        .unwrap();
+    let ref_planned = QuantEngine::serial()
+        .dequantize_planned(&pt)
+        .unwrap()
+        .matmul(&operand)
+        .unwrap();
+
+    for threads in THREAD_COUNTS {
+        let engine = QuantEngine::with_threads(threads);
+        let mut pool = BufferPool::new();
+        let fused = engine.dequantize_matmul(&ct, &operand, &mut pool).unwrap();
+        assert_eq!(fused.as_slice(), ref_fixed.as_slice(), "fixed t={threads}");
+        let fused = engine
+            .dequantize_matmul_planned(&pt, &operand, &mut pool)
+            .unwrap();
+        assert_eq!(
+            fused.as_slice(),
+            ref_planned.as_slice(),
+            "planned t={threads}"
+        );
+        assert!(
+            pool.stats().max_float_take <= 48,
+            "t={threads}: {} floats drawn",
+            pool.stats().max_float_take
+        );
+    }
+}
+
+#[test]
+fn pooled_forward_matches_serial_forward() {
+    let ds = tiny_ds();
+    let mut rng = Pcg64::new(5);
+    for arch in [Arch::Gcn, Arch::GraphSage] {
+        let model =
+            GcnModel::init_arch(arch, ds.num_features(), 32, ds.num_classes, 3, &mut rng)
+                .unwrap();
+        let serial = model.forward(&ds).unwrap();
+        for threads in THREAD_COUNTS {
+            let pool = WorkerPool::new(threads);
+            let par = model.forward_with(&ds, &pool).unwrap();
+            assert_eq!(serial.as_slice(), par.as_slice(), "{arch:?} t={threads}");
+        }
+    }
+}
+
+fn thread_cfg(threads: usize) -> TrainConfig {
+    TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs: 8,
+        lr: 0.02,
+        eval_every: 2,
+        seeds: vec![0],
+        parallelism: ParallelismConfig {
+            threads,
+            min_blocks_per_shard: 1,
+        },
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn training_curves_are_thread_invariant_under_fused_path() {
+    // Whole-run invariance: the fused unstash + tiled kernels must keep
+    // the loss trajectory bit-identical at every thread count, for both
+    // architectures at fixed width.
+    let ds = tiny_ds();
+    for (arch, quant) in [
+        (Arch::Gcn, QuantConfig::int2_blockwise(4)),
+        (Arch::Gcn, QuantConfig::int2_vm()),
+        (Arch::GraphSage, QuantConfig::int2_blockwise(4)),
+    ] {
+        let mut serial_cfg = thread_cfg(1);
+        serial_cfg.arch = arch;
+        let reference = train(&ds, &quant, &serial_cfg, 5).unwrap();
+        for threads in [2usize, 4, 7] {
+            let mut cfg = thread_cfg(threads);
+            cfg.arch = arch;
+            let run = train(&ds, &quant, &cfg, 5).unwrap();
+            assert_eq!(
+                reference.curve.train_loss, run.curve.train_loss,
+                "{arch:?} {} t={threads}: loss curve diverged",
+                quant.label()
+            );
+            assert_eq!(reference.curve.val_loss, run.curve.val_loss);
+            assert_eq!(reference.test_accuracy, run.test_accuracy);
+            assert_eq!(reference.final_train_loss, run.final_train_loss);
+        }
+    }
+}
+
+#[test]
+fn adaptive_training_is_thread_invariant_under_fused_path() {
+    // Same invariance under heterogeneous BitPlans: the adaptive
+    // allocator re-plans mid-run and the fused planned unstash must stay
+    // bit-identical serial vs parallel.
+    let ds = tiny_ds();
+    let quant = QuantConfig::int2_blockwise(4);
+    let allocation = AllocationConfig {
+        strategy: AllocStrategy::Greedy,
+        budget_bits: 2.5,
+        realloc_interval_epochs: 3,
+        min_bits: 1,
+        max_bits: 8,
+    };
+    let mut serial_cfg = thread_cfg(1);
+    serial_cfg.allocation = allocation.clone();
+    let reference = train(&ds, &quant, &serial_cfg, 9).unwrap();
+    for threads in [2usize, 4, 7] {
+        let mut cfg = thread_cfg(threads);
+        cfg.allocation = allocation.clone();
+        let run = train(&ds, &quant, &cfg, 9).unwrap();
+        assert_eq!(
+            reference.curve.train_loss, run.curve.train_loss,
+            "adaptive t={threads}: loss curve diverged"
+        );
+        assert_eq!(reference.final_train_loss, run.final_train_loss);
+        assert_eq!(reference.test_accuracy, run.test_accuracy);
+    }
+}

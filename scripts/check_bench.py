@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Sanity-parse the machine-readable bench trajectory.
+
+``cargo bench --bench bench_pipeline`` writes ``BENCH_pipeline.json``
+(per-arm epoch time, throughput, peak-resident activation bytes and
+speedup vs. the arm group's serial baseline). This script validates the
+schema and basic invariants so CI catches a malformed emitter before the
+file is archived as the repo's perf trajectory, and prints a compact
+summary table.
+
+Usage:
+    python3 scripts/check_bench.py [path/to/BENCH_pipeline.json]
+
+Exit status is non-zero on a malformed file. Absolute timings are
+machine-dependent, so the script checks structure and sanity (positive
+times, consistent rates), not performance thresholds — those live in the
+bench output itself (the ``threads`` group records speedup_vs_serial).
+"""
+
+import json
+import sys
+
+REQUIRED_ARM_KEYS = {
+    "group": str,
+    "name": str,
+    "ms_per_epoch": (int, float),
+    "rate_per_sec": (int, float),
+    "peak_resident_bytes": int,
+    "speedup_vs_serial": (int, float),
+}
+
+EXPECTED_GROUPS = {"table1", "allocation", "partition", "threads", "fused"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pipeline.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found (run `cargo bench --bench bench_pipeline` first)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if doc.get("bench") != "pipeline":
+        fail(f"unexpected bench id {doc.get('bench')!r}")
+    ds = doc.get("dataset")
+    if not isinstance(ds, dict) or not all(
+        isinstance(ds.get(k), int) and ds[k] > 0 for k in ("nodes", "edges", "hidden")
+    ):
+        fail(f"malformed dataset header: {ds!r}")
+
+    arms = doc.get("arms")
+    if not isinstance(arms, list) or not arms:
+        fail("no benchmark arms recorded")
+    for arm in arms:
+        for key, typ in REQUIRED_ARM_KEYS.items():
+            if key not in arm:
+                fail(f"arm {arm.get('name')!r} missing key {key!r}")
+            if not isinstance(arm[key], typ):
+                fail(f"arm {arm.get('name')!r}: {key} has type {type(arm[key]).__name__}")
+        if arm["ms_per_epoch"] <= 0 or arm["rate_per_sec"] <= 0:
+            fail(f"arm {arm['name']!r}: non-positive timing")
+        if arm["peak_resident_bytes"] < 0 or arm["speedup_vs_serial"] <= 0:
+            fail(f"arm {arm['name']!r}: negative memory or speedup")
+        # ms/epoch and epochs/s must describe the same measurement.
+        recomputed = 1000.0 / arm["ms_per_epoch"]
+        if abs(recomputed - arm["rate_per_sec"]) > 0.02 * max(recomputed, 1e-9):
+            fail(
+                f"arm {arm['name']!r}: rate {arm['rate_per_sec']} inconsistent "
+                f"with ms_per_epoch {arm['ms_per_epoch']}"
+            )
+
+    groups = {a["group"] for a in arms}
+    missing = EXPECTED_GROUPS - groups
+    if missing:
+        fail(f"missing arm groups: {sorted(missing)}")
+
+    print(
+        f"check_bench: OK — {len(arms)} arms over {sorted(groups)} "
+        f"({ds['nodes']} nodes, {ds['edges']} edges, hidden {ds['hidden']})"
+    )
+    print(f"{'group':<12} {'arm':<24} {'ms/epoch':>10} {'peak KB':>9} {'speedup':>8}")
+    for arm in arms:
+        print(
+            f"{arm['group']:<12} {arm['name']:<24} {arm['ms_per_epoch']:>10.2f} "
+            f"{arm['peak_resident_bytes'] // 1024:>9} {arm['speedup_vs_serial']:>7.2f}x"
+        )
+    threads = [a for a in arms if a["group"] == "threads"]
+    best = max((a["speedup_vs_serial"] for a in threads), default=1.0)
+    print(f"check_bench: best end-to-end thread speedup vs serial: {best:.2f}x")
+
+
+if __name__ == "__main__":
+    main()
