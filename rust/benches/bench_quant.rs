@@ -5,14 +5,68 @@
 //! is *faster* than EXACT's per-row scheme — and the ISSUE 1 acceptance
 //! check that ≥2 threads give a measurable speedup on large block counts.
 //!
+//! The `codec` group pits the fused word-parallel codec (SWAR pack,
+//! SR-straight-into-packed-bytes, LUT-fused dequantize) against the
+//! pre-fusion two-pass oracle (`iexact::quant::reference`) at every
+//! width, and records the arms in a machine-readable
+//! **`BENCH_quant.json`** (same arm schema as `BENCH_pipeline.json`;
+//! `IEXACT_BENCH_QUANT_JSON` overrides the path) so the codec win is
+//! visible in the perf trajectory, not just end-to-end.
+//!
 //! Run: `cargo bench --bench bench_quant`
 
 use iexact::engine::QuantEngine;
 use iexact::memory::BufferPool;
-use iexact::quant::{BinSpec, BlockwiseQuantizer, RowQuantizer};
+use iexact::quant::{reference, BinSpec, BlockwiseQuantizer, RowQuantizer};
 use iexact::rngs::Pcg64;
 use iexact::tensor::Matrix;
 use iexact::util::timer::measure;
+
+/// One `codec` arm for the JSON trajectory (same schema as the
+/// `bench_pipeline` arms so `scripts/check_bench.py` parses both).
+/// Schema-field reuse note: for codec arms the `peak_resident_bytes`
+/// slot carries the **compressed tensor size** (`nbytes()`), not a
+/// resident-memory peak — it identifies the workload, not a footprint.
+struct Arm {
+    group: &'static str,
+    name: String,
+    ms_per_call: f64,
+    compressed_bytes: usize,
+    speedup_vs_two_pass: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_bench_json(path: &str, rows: usize, cols: usize, arms: &[Arm]) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"quant\",\n");
+    out.push_str(&format!(
+        "  \"dataset\": {{\"rows\": {rows}, \"cols\": {cols}}},\n"
+    ));
+    out.push_str("  \"arms\": [\n");
+    for (i, a) in arms.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"group\": \"{}\", \"name\": \"{}\", \"ms_per_epoch\": {:.4}, \
+             \"rate_per_sec\": {:.4}, \"peak_resident_bytes\": {}, \
+             \"speedup_vs_serial\": {:.4}}}{}\n",
+            json_escape(a.group),
+            json_escape(&a.name),
+            a.ms_per_call,
+            1e3 / a.ms_per_call,
+            a.compressed_bytes,
+            a.speedup_vs_two_pass,
+            if i + 1 == arms.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => eprintln!("codec bench trajectory written to {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let n = 4096;
@@ -223,4 +277,57 @@ fn main() {
             pool.stats().max_float_take * 4
         );
     }
+
+    // ---- Word-parallel codec vs the two-pass oracle ----
+    // Same tensor, same seed, same per-block RNG streams — the outputs
+    // are bit-identical (tests/codec_fusion.rs proves it), so this arm
+    // isolates pure codec cost: SWAR + SR-into-packed-bytes + LUT-fused
+    // decode vs SR-into-code-scratch + scalar pack + scalar unpack +
+    // LUT. Recorded in BENCH_quant.json as the `codec` group.
+    println!("\n# codec: fused (SWAR + LUT) vs two-pass reference, G=512, serial");
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "config", "median ms", "Mscalar/s", "speedup"
+    );
+    let mut arms: Vec<Arm> = Vec::new();
+    let engine = QuantEngine::serial();
+    for bits in [1u32, 2, 4, 8] {
+        let seed = 0xC0DE + bits as u64;
+        let mut nbytes = 0usize;
+        let (_, med_two, _) = measure(2, 8, || {
+            let ct =
+                reference::quantize_grouped_seeded(&h, 512, bits, &BinSpec::Uniform, seed)
+                    .unwrap();
+            nbytes = ct.nbytes();
+            std::hint::black_box(reference::dequantize(&ct).unwrap());
+        });
+        let (_, med_fused, _) = measure(2, 8, || {
+            let ct = engine
+                .quantize_seeded(&h, 512, bits, &BinSpec::Uniform, seed)
+                .unwrap();
+            std::hint::black_box(engine.dequantize(&ct).unwrap());
+        });
+        for (name, med, speedup) in [
+            (format!("two-pass int{bits}"), med_two, 1.0),
+            (format!("fused int{bits}"), med_fused, med_two / med_fused),
+        ] {
+            println!(
+                "{:<34} {:>12.3} {:>14.1} {:>11.2}x",
+                name,
+                med * 1e3,
+                scalars / med / 1e6,
+                speedup
+            );
+            arms.push(Arm {
+                group: "codec",
+                name,
+                ms_per_call: med * 1e3,
+                compressed_bytes: nbytes,
+                speedup_vs_two_pass: speedup,
+            });
+        }
+    }
+    let path = std::env::var("IEXACT_BENCH_QUANT_JSON")
+        .unwrap_or_else(|_| "BENCH_quant.json".to_string());
+    write_bench_json(&path, n, r, &arms);
 }

@@ -43,6 +43,12 @@
 //! **byte-aligned** (widths 1/2/4/8 all divide 8, and any partial final
 //! byte is zero-padded), so blocks pack and unpack independently and the
 //! parallel engine can hand each shard a disjoint `&mut` byte range.
+//! Byte alignment is also what makes the heterogeneous packer **fully
+//! fused**: the engine stochastically rounds each block straight into
+//! its byte range (`quantize_pack_block`) and decodes packed bytes
+//! directly to `f32` through a per-block `2^{b_g}`-entry value LUT — no
+//! intermediate `u8` code buffer exists on either side of the codec, at
+//! any width mix (layout and word shapes: `docs/codec.md`).
 //!
 //! ## Determinism
 //!

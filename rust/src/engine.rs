@@ -11,6 +11,17 @@
 //! spawned once per engine, not once per call, and the same pool is the
 //! substrate for the tiled dense/sparse kernels (see `docs/runtime.md`).
 //!
+//! The codec itself is word-parallel and fusion-first (see
+//! `docs/codec.md`): quantization stochastically rounds **straight into
+//! packed bytes** ([`crate::quant`]'s `quantize_pack_block`) whenever
+//! blocks occupy whole bytes — always true for heterogeneous
+//! [`BitPlan`]s and for any fixed-width layout with
+//! `group_len · bits ≡ 0 (mod 8)` — and dequantization decodes packed
+//! bytes **directly to `f32`** through per-block value LUTs. Neither
+//! side materializes an intermediate `u8` code buffer, so the
+//! [`BufferPool`]'s only codec byte traffic is the packed output itself
+//! (observable via [`PoolStats::max_byte_take`](crate::memory::PoolStats)).
+//!
 //! Beyond plain quantize/dequantize, the engine owns the **fused
 //! dequantize→aggregate** kernels of the backward hot path:
 //! [`QuantEngine::dequantize_matmul_planned`] /
@@ -60,7 +71,7 @@ use crate::config::ParallelismConfig;
 use crate::graph::CsrMatrix;
 use crate::memory::BufferPool;
 use crate::quant::{
-    dequantize_block, pack_codes_into, pack_codes_slice, quantize_block, unpack_range, BinSpec,
+    pack_codes_into, quantize_block, quantize_pack_block, unpack_dequantize_block, BinSpec,
     CompressedTensor, DequantPlan, QuantPlan,
 };
 use crate::rngs::Pcg64;
@@ -285,16 +296,97 @@ impl QuantEngine {
         let data = h.as_slice();
         let n = data.len();
         let num_groups = n.div_ceil(group_len);
+        let total_bytes = (n * bits as usize).div_ceil(8);
+        let mut zeros = vec![0f32; num_groups];
+        let mut ranges = vec![0f32; num_groups];
 
-        // Scratch contents are unspecified: quantize_block writes every
-        // element of each block (including the constant-block fill).
+        // Fused path: when a full block's bit count is a whole number of
+        // bytes (every production group length — G is a multiple of the
+        // projected width), each block owns a disjoint byte range of the
+        // packed stream and stochastic rounding writes straight into it
+        // via `quantize_pack_block`. No n-byte code scratch exists on
+        // either the serial or the parallel path, and shard byte ranges
+        // stay disjoint so workers never share a byte.
+        if (group_len * bits as usize) % 8 == 0 {
+            // Every byte of `packed` is written below (partial final
+            // bytes zero-padded), so an unspecified-content take is safe.
+            let mut packed = match pool.as_deref_mut() {
+                Some(p) => p.take_bytes_scratch(total_bytes),
+                None => vec![0u8; total_bytes],
+            };
+            let block_bytes = group_len * bits as usize / 8;
+            let shards = self.effective_shards(num_groups);
+            if shards <= 1 {
+                for g in 0..num_groups {
+                    let start = g * group_len;
+                    let end = (start + group_len).min(n);
+                    let byte_lo = g * block_bytes;
+                    let byte_hi = byte_lo + ((end - start) * bits as usize).div_ceil(8);
+                    let mut rng_g = Pcg64::with_stream(seed, g as u64);
+                    let (z, r) = quantize_pack_block(
+                        &plan,
+                        &data[start..end],
+                        &mut packed[byte_lo..byte_hi],
+                        &mut rng_g,
+                    );
+                    zeros[g] = z;
+                    ranges[g] = r;
+                }
+            } else {
+                let groups_per_shard = num_groups.div_ceil(shards);
+                let chunk = groups_per_shard * group_len;
+                let chunk_bytes = groups_per_shard * block_bytes;
+                let plan = &plan;
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+                for (idx, (((data_c, packed_c), zeros_c), ranges_c)) in data
+                    .chunks(chunk)
+                    .zip(packed.chunks_mut(chunk_bytes))
+                    .zip(zeros.chunks_mut(groups_per_shard))
+                    .zip(ranges.chunks_mut(groups_per_shard))
+                    .enumerate()
+                {
+                    let base = idx * groups_per_shard;
+                    tasks.push(Box::new(move || {
+                        for (j, (z, r)) in
+                            zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
+                        {
+                            let lo = j * group_len;
+                            let hi = (lo + group_len).min(data_c.len());
+                            let byte_lo = j * block_bytes;
+                            let byte_hi = byte_lo + ((hi - lo) * bits as usize).div_ceil(8);
+                            let mut rng_g = Pcg64::with_stream(seed, (base + j) as u64);
+                            let (zz, rr) = quantize_pack_block(
+                                plan,
+                                &data_c[lo..hi],
+                                &mut packed_c[byte_lo..byte_hi],
+                                &mut rng_g,
+                            );
+                            *z = zz;
+                            *r = rr;
+                        }
+                    }));
+                }
+                self.pool.run(tasks);
+            }
+            return Ok(CompressedTensor {
+                packed,
+                zeros,
+                ranges,
+                shape: h.shape(),
+                group_len,
+                bits,
+                bins: bins.clone(),
+            });
+        }
+
+        // Two-pass fallback for group boundaries that land mid-byte
+        // (possible only when `group_len * bits % 8 != 0`): SR into a
+        // code scratch, then one global pack. Bit-identical to the fused
+        // path by the shared SR core; proven by `tests/codec_fusion.rs`.
         let mut codes = match pool.as_deref_mut() {
             Some(p) => p.take_bytes_scratch(n),
             None => vec![0u8; n],
         };
-        let mut zeros = vec![0f32; num_groups];
-        let mut ranges = vec![0f32; num_groups];
-
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
             for g in 0..num_groups {
@@ -341,7 +433,7 @@ impl QuantEngine {
         }
 
         let mut packed = match pool.as_deref_mut() {
-            Some(p) => p.take_bytes_empty((n * bits as usize).div_ceil(8)),
+            Some(p) => p.take_bytes_empty(total_bytes),
             None => Vec::new(),
         };
         pack_codes_into(&codes, bits, &mut packed)?;
@@ -366,8 +458,8 @@ impl QuantEngine {
         self.dequantize_impl(ct, None)
     }
 
-    /// [`Self::dequantize`] with the output and code-scratch buffers
-    /// drawn from (and returned to) `pool`.
+    /// [`Self::dequantize`] with the output buffer drawn from `pool`
+    /// (the fused decoder needs no byte scratch).
     pub fn dequantize_pooled(
         &self,
         ct: &CompressedTensor,
@@ -387,8 +479,10 @@ impl QuantEngine {
         let num_groups = n.div_ceil(ct.group_len);
         let plan = DequantPlan::resolve(ct.bits, &ct.bins);
         let group_len = ct.group_len;
-        // Every element of `out` (and the unpack scratch) is overwritten
-        // group by group, so unspecified-content takes are safe.
+        // Every element of `out` is overwritten group by group, so an
+        // unspecified-content take is safe. The fused decoder maps
+        // packed bytes straight to floats — the decode→codes→floats
+        // double pass (and its per-shard byte scratch) is gone.
         let mut out = match pool.as_deref_mut() {
             Some(p) => p.take_floats_scratch(n),
             None => vec![0f32; n],
@@ -396,76 +490,45 @@ impl QuantEngine {
 
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
-            let mut scratch = match pool.as_deref_mut() {
-                Some(p) => p.take_bytes_scratch(n),
-                None => vec![0u8; n],
-            };
-            unpack_range(&ct.packed, ct.bits, 0, &mut scratch);
             for g in 0..num_groups {
                 let start = g * group_len;
                 let end = (start + group_len).min(n);
-                dequantize_block(
+                unpack_dequantize_block(
                     &plan,
                     ct.zeros[g],
                     ct.ranges[g],
-                    &scratch[start..end],
+                    &ct.packed,
+                    start,
                     &mut out[start..end],
                 );
-            }
-            if let Some(p) = pool.as_deref_mut() {
-                p.put_bytes(scratch);
             }
         } else {
             let groups_per_shard = num_groups.div_ceil(shards);
             let chunk = groups_per_shard * group_len;
-            let shard_count = num_groups.div_ceil(groups_per_shard);
-            // Per-shard unpack scratch, drawn from the pool up front so
-            // the steady-state parallel path stays allocation-free too.
-            let mut scratches: Vec<Vec<u8>> = (0..shard_count)
-                .map(|i| {
-                    let len = chunk.min(n - i * chunk);
-                    match pool.as_deref_mut() {
-                        Some(p) => p.take_bytes_scratch(len),
-                        None => vec![0u8; len],
-                    }
-                })
-                .collect();
             let plan = &plan;
             let packed = ct.packed.as_slice();
             let zeros = ct.zeros.as_slice();
             let ranges = ct.ranges.as_slice();
-            let bits = ct.bits;
-            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
-            for (idx, (((out_c, zeros_c), ranges_c), scratch)) in out
+            let mut tasks: Vec<Task<'_>> =
+                Vec::with_capacity(num_groups.div_ceil(groups_per_shard));
+            for (idx, ((out_c, zeros_c), ranges_c)) in out
                 .chunks_mut(chunk)
                 .zip(zeros.chunks(groups_per_shard))
                 .zip(ranges.chunks(groups_per_shard))
-                .zip(scratches.iter_mut())
                 .enumerate()
             {
                 tasks.push(Box::new(move || {
-                    // Each shard unpacks only its own scalar range —
+                    // Each shard decodes only its own scalar range —
                     // in-bounds by the packed-length check above.
-                    unpack_range(packed, bits, idx * chunk, scratch);
+                    let base = idx * chunk;
                     for (j, (&z, &r)) in zeros_c.iter().zip(ranges_c).enumerate() {
                         let lo = j * group_len;
                         let hi = (lo + group_len).min(out_c.len());
-                        dequantize_block(
-                            plan,
-                            z,
-                            r,
-                            &scratch[lo..hi],
-                            &mut out_c[lo..hi],
-                        );
+                        unpack_dequantize_block(plan, z, r, packed, base + lo, &mut out_c[lo..hi]);
                     }
                 }));
             }
             self.pool.run(tasks);
-            if let Some(p) = pool.as_deref_mut() {
-                for scratch in scratches {
-                    p.put_bytes(scratch);
-                }
-            }
         }
         Matrix::from_vec(rows, cols, out)
     }
@@ -510,8 +573,8 @@ impl QuantEngine {
         self.quantize_planned_impl(h, plan, seed, None)
     }
 
-    /// [`Self::quantize_planned`] with the packed buffer and code scratch
-    /// recycled through `pool`.
+    /// [`Self::quantize_planned`] with the packed buffer recycled
+    /// through `pool` (the fused packer needs no code scratch).
     pub fn quantize_planned_pooled(
         &self,
         h: &Matrix,
@@ -564,9 +627,12 @@ impl QuantEngine {
 
         let mut zeros = vec![0f32; num_groups];
         let mut ranges = vec![0f32; num_groups];
-        // Every byte of `packed` is written by pack_codes_slice (blocks
-        // are byte-aligned, partial final bytes zero-padded), so an
-        // unspecified-content take is safe.
+        // Every byte of `packed` is written by quantize_pack_block
+        // (blocks are byte-aligned, partial final bytes zero-padded), so
+        // an unspecified-content take is safe. Heterogeneous blocks are
+        // always byte-aligned, so the planned packer is unconditionally
+        // fused: SR rounds straight into each block's byte range and no
+        // worker allocates a code tile.
         let mut packed = match pool.as_deref_mut() {
             Some(p) => p.take_bytes_scratch(total_bytes),
             None => vec![0u8; total_bytes],
@@ -574,28 +640,20 @@ impl QuantEngine {
 
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
-            let mut scratch = match pool.as_deref_mut() {
-                Some(p) => p.take_bytes_scratch(group_len.min(n.max(1))),
-                None => vec![0u8; group_len.min(n.max(1))],
-            };
             for g in 0..num_groups {
                 let lo = g * group_len;
                 let hi = (lo + group_len).min(n);
                 let bits = plan.bit(g);
                 let qp = qplans[width_slot(bits)].as_ref().expect("resolved above");
                 let mut rng_g = Pcg64::with_stream(seed, g as u64);
-                let (z, r) =
-                    quantize_block(qp, &data[lo..hi], &mut scratch[..hi - lo], &mut rng_g);
+                let (z, r) = quantize_pack_block(
+                    qp,
+                    &data[lo..hi],
+                    &mut packed[offsets[g]..offsets[g + 1]],
+                    &mut rng_g,
+                );
                 zeros[g] = z;
                 ranges[g] = r;
-                pack_codes_slice(
-                    &scratch[..hi - lo],
-                    bits,
-                    &mut packed[offsets[g]..offsets[g + 1]],
-                );
-            }
-            if let Some(p) = pool.as_deref_mut() {
-                p.put_bytes(scratch);
             }
         } else {
             let groups_per_shard = num_groups.div_ceil(shards);
@@ -624,7 +682,6 @@ impl QuantEngine {
                 tasks.push(Box::new(move || {
                     let base = i * groups_per_shard;
                     let base_off = offsets[base];
-                    let mut scratch = vec![0u8; group_len];
                     for (j, (z, r)) in
                         zeros_c.iter_mut().zip(ranges_c.iter_mut()).enumerate()
                     {
@@ -635,19 +692,14 @@ impl QuantEngine {
                         let qp =
                             qplans[width_slot(bits)].as_ref().expect("resolved above");
                         let mut rng_g = Pcg64::with_stream(seed, g as u64);
-                        let (zz, rr) = quantize_block(
+                        let (zz, rr) = quantize_pack_block(
                             qp,
                             &data[lo..hi],
-                            &mut scratch[..hi - lo],
+                            &mut packed_c[offsets[g] - base_off..offsets[g + 1] - base_off],
                             &mut rng_g,
                         );
                         *z = zz;
                         *r = rr;
-                        pack_codes_slice(
-                            &scratch[..hi - lo],
-                            bits,
-                            &mut packed_c[offsets[g] - base_off..offsets[g + 1] - base_off],
-                        );
                     }
                 }));
             }
@@ -670,8 +722,8 @@ impl QuantEngine {
         self.dequantize_planned_impl(pt, None)
     }
 
-    /// [`Self::dequantize_planned`] with the output and unpack scratch
-    /// drawn from (and returned to) `pool`.
+    /// [`Self::dequantize_planned`] with the output buffer drawn from
+    /// `pool` (the fused decoder needs no byte scratch).
     pub fn dequantize_planned_pooled(
         &self,
         pt: &PlannedTensor,
@@ -704,31 +756,19 @@ impl QuantEngine {
 
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
-            let mut scratch = match pool.as_deref_mut() {
-                Some(p) => p.take_bytes_scratch(group_len.min(n.max(1))),
-                None => vec![0u8; group_len.min(n.max(1))],
-            };
             for g in 0..num_groups {
                 let lo = g * group_len;
                 let hi = (lo + group_len).min(n);
                 let bits = pt.plan.bit(g);
                 let dp = dplans[width_slot(bits)].as_ref().expect("resolved above");
-                unpack_range(
-                    &pt.packed[offsets[g]..offsets[g + 1]],
-                    bits,
-                    0,
-                    &mut scratch[..hi - lo],
-                );
-                dequantize_block(
+                unpack_dequantize_block(
                     dp,
                     pt.zeros[g],
                     pt.ranges[g],
-                    &scratch[..hi - lo],
+                    &pt.packed[offsets[g]..offsets[g + 1]],
+                    0,
                     &mut out[lo..hi],
                 );
-            }
-            if let Some(p) = pool.as_deref_mut() {
-                p.put_bytes(scratch);
             }
         } else {
             let groups_per_shard = num_groups.div_ceil(shards);
@@ -743,7 +783,6 @@ impl QuantEngine {
             for (i, out_c) in out.chunks_mut(chunk).enumerate() {
                 tasks.push(Box::new(move || {
                     let base = i * groups_per_shard;
-                    let mut scratch = vec![0u8; group_len];
                     let blocks = out_c.len().div_ceil(group_len);
                     for j in 0..blocks {
                         let g = base + j;
@@ -752,17 +791,12 @@ impl QuantEngine {
                         let bits = plan.bit(g);
                         let dp =
                             dplans[width_slot(bits)].as_ref().expect("resolved above");
-                        unpack_range(
-                            &packed[offsets[g]..offsets[g + 1]],
-                            bits,
-                            0,
-                            &mut scratch[..hi - lo],
-                        );
-                        dequantize_block(
+                        unpack_dequantize_block(
                             dp,
                             zeros[g],
                             ranges[g],
-                            &scratch[..hi - lo],
+                            &packed[offsets[g]..offsets[g + 1]],
+                            0,
                             &mut out_c[lo..hi],
                         );
                     }
@@ -818,7 +852,6 @@ impl QuantEngine {
             group_len: ct.group_len,
             n_scalars,
             layout: DecodeLayout::Fixed {
-                bits: ct.bits,
                 plan: DequantPlan::resolve(ct.bits, &ct.bins),
             },
         };
@@ -951,42 +984,37 @@ impl QuantEngine {
             .shards_for(rows, MIN_ROWS_PER_SHARD)
             .min(num_groups);
         if shards <= 1 {
-            let mut codes = pool.take_bytes_scratch(group_len);
             let mut floats = pool.take_floats_scratch(group_len);
             let out_data = out.as_mut_slice();
             for g in 0..num_groups {
-                let len = dec.decode(g, &mut codes, &mut floats);
+                let len = dec.decode(g, &mut floats);
                 let row0 = g * rows_per_block;
                 for (i, a_row) in floats[..len].chunks(cols).enumerate() {
                     let r = row0 + i;
                     row_axpy_matmul(a_row, b_data, n, &mut out_data[r * n..(r + 1) * n]);
                 }
             }
-            pool.put_bytes(codes);
             pool.put_floats(floats);
         } else {
             let groups_per_shard = num_groups.div_ceil(shards);
             let shard_count = num_groups.div_ceil(groups_per_shard);
             let chunk = groups_per_shard * rows_per_block * n;
-            let mut codes_scr: Vec<Vec<u8>> = (0..shard_count)
-                .map(|_| pool.take_bytes_scratch(group_len))
-                .collect();
             let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
                 .map(|_| pool.take_floats_scratch(group_len))
                 .collect();
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
-            for ((i, out_c), (codes, floats)) in out
+            for ((i, out_c), floats) in out
                 .as_mut_slice()
                 .chunks_mut(chunk)
                 .enumerate()
-                .zip(codes_scr.iter_mut().zip(float_scr.iter_mut()))
+                .zip(float_scr.iter_mut())
             {
                 tasks.push(Box::new(move || {
                     let base = i * groups_per_shard;
                     let blocks = (out_c.len() / n).div_ceil(rows_per_block);
                     for j in 0..blocks {
                         let g = base + j;
-                        let len = dec.decode(g, codes, floats);
+                        let len = dec.decode(g, floats);
                         let lo_row = j * rows_per_block;
                         for (ri, a_row) in floats[..len].chunks(cols).enumerate() {
                             let r = lo_row + ri;
@@ -1001,9 +1029,6 @@ impl QuantEngine {
                 }));
             }
             self.pool.run(tasks);
-            for c in codes_scr {
-                pool.put_bytes(c);
-            }
             for f in float_scr {
                 pool.put_floats(f);
             }
@@ -1029,7 +1054,6 @@ impl QuantEngine {
         let rows_per_block = group_len / cols;
         let shards = self.pool.shards_for(adj.n_rows, MIN_ROWS_PER_SHARD);
         if shards <= 1 {
-            let mut codes = pool.take_bytes_scratch(group_len);
             let mut floats = pool.take_floats_scratch(group_len);
             let mut cached = usize::MAX;
             let out_data = out.as_mut_slice();
@@ -1043,28 +1067,23 @@ impl QuantEngine {
                     rows_per_block,
                     cols,
                     &mut cached,
-                    &mut codes,
                     &mut floats,
                     out_row,
                 );
             }
-            pool.put_bytes(codes);
             pool.put_floats(floats);
         } else {
             let rows_per = adj.n_rows.div_ceil(shards);
             let shard_count = adj.n_rows.div_ceil(rows_per);
-            let mut codes_scr: Vec<Vec<u8>> = (0..shard_count)
-                .map(|_| pool.take_bytes_scratch(group_len))
-                .collect();
             let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
                 .map(|_| pool.take_floats_scratch(group_len))
                 .collect();
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
-            for ((tile, out_c), (codes, floats)) in out
+            for ((tile, out_c), floats) in out
                 .as_mut_slice()
                 .chunks_mut(rows_per * cols)
                 .enumerate()
-                .zip(codes_scr.iter_mut().zip(float_scr.iter_mut()))
+                .zip(float_scr.iter_mut())
             {
                 let base = tile * rows_per;
                 tasks.push(Box::new(move || {
@@ -1078,7 +1097,6 @@ impl QuantEngine {
                             rows_per_block,
                             cols,
                             &mut cached,
-                            codes,
                             floats,
                             out_row,
                         );
@@ -1086,9 +1104,6 @@ impl QuantEngine {
                 }));
             }
             self.pool.run(tasks);
-            for c in codes_scr {
-                pool.put_bytes(c);
-            }
             for f in float_scr {
                 pool.put_floats(f);
             }
@@ -1111,14 +1126,13 @@ fn fused_spmm_row(
     rows_per_block: usize,
     cols: usize,
     cached: &mut usize,
-    codes: &mut [u8],
     floats: &mut [f32],
     out_row: &mut [f32],
 ) {
     for (&c, &v) in idx.iter().zip(vals) {
         let g = c / rows_per_block;
         if g != *cached {
-            dec.decode(g, codes, floats);
+            dec.decode(g, floats);
             *cached = g;
         }
         let off = (c - g * rows_per_block) * cols;
@@ -1145,7 +1159,7 @@ struct BlockDecoder<'a> {
 enum DecodeLayout<'a> {
     /// Fixed-width contiguous stream: block `g` starts at scalar
     /// `g * group_len` of one packed bitstream.
-    Fixed { bits: u32, plan: DequantPlan },
+    Fixed { plan: DequantPlan },
     /// Heterogeneous widths: block `g` occupies its own byte-aligned
     /// packed range at `offsets[g]..offsets[g + 1]`.
     Planned {
@@ -1184,16 +1198,21 @@ impl BlockDecoder<'_> {
         self.group_len.min(self.n_scalars - g * self.group_len)
     }
 
-    /// Decode block `g` into `floats[..len]` (using `codes[..len]` as
-    /// unpack scratch) and return `len`.
-    fn decode(&self, g: usize, codes: &mut [u8], floats: &mut [f32]) -> usize {
+    /// Decode block `g` straight into `floats[..len]` (fused unpack→
+    /// LUT-dequantize; no code scratch) and return `len`.
+    fn decode(&self, g: usize, floats: &mut [f32]) -> usize {
         let len = self.block_len(g);
-        let codes = &mut codes[..len];
         let out = &mut floats[..len];
         match &self.layout {
-            DecodeLayout::Fixed { bits, plan } => {
-                unpack_range(self.packed, *bits, g * self.group_len, codes);
-                dequantize_block(plan, self.zeros[g], self.ranges[g], codes, out);
+            DecodeLayout::Fixed { plan } => {
+                unpack_dequantize_block(
+                    plan,
+                    self.zeros[g],
+                    self.ranges[g],
+                    self.packed,
+                    g * self.group_len,
+                    out,
+                );
             }
             DecodeLayout::Planned {
                 offsets,
@@ -1204,8 +1223,14 @@ impl BlockDecoder<'_> {
                 let dp = dplans[width_slot(bits)]
                     .as_ref()
                     .expect("plan resolved per used width");
-                unpack_range(&self.packed[offsets[g]..offsets[g + 1]], bits, 0, codes);
-                dequantize_block(dp, self.zeros[g], self.ranges[g], codes, out);
+                unpack_dequantize_block(
+                    dp,
+                    self.zeros[g],
+                    self.ranges[g],
+                    &self.packed[offsets[g]..offsets[g + 1]],
+                    0,
+                    out,
+                );
             }
         }
         len
@@ -1314,7 +1339,14 @@ mod tests {
         let d1 = engine.dequantize(&pooled).unwrap();
         let d2 = engine.dequantize_pooled(&pooled, &mut pool).unwrap();
         assert_eq!(d1.as_slice(), d2.as_slice());
-        // Run again: the scratch buffers must now come from the pool.
+        // The fused codec draws only the packed output from the pool —
+        // no n-byte code scratch on either side (1024 scalars at 2 bits
+        // = 256 packed bytes).
+        assert_eq!(pool.stats().max_byte_take, 256, "{:?}", pool.stats());
+        // Recycle the consumed packed buffer like the pipeline's
+        // backward pass does; the next step's packed take must then hit
+        // the pool.
+        pool.put_bytes(pooled.packed.clone());
         let before = pool.stats().hits;
         let again = engine
             .quantize_impl(&h, 16, 2, &BinSpec::Uniform, seed, Some(&mut pool))

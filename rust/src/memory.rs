@@ -359,17 +359,28 @@ pub struct PoolStats {
     /// materialize-then-aggregate path draws the whole `rows × cols`
     /// matrix (asserted in `rust/tests/runtime_parity.rs`).
     pub max_float_take: usize,
+    /// Largest single byte-buffer request served so far (bytes). The
+    /// word-parallel codec draws **no** per-worker `u8` code tiles: its
+    /// only byte takes are packed outputs, so on the quantize side this
+    /// stat stays at the packed size (strictly below the scalar count
+    /// for sub-byte widths) and on the pure dequantize / fused-
+    /// aggregate paths it stays at 0 (asserted in
+    /// `rust/tests/codec_fusion.rs`).
+    pub max_byte_take: usize,
 }
 
-/// Reusable-buffer pool for the quantization engine's packed INT2/INT4/
-/// INT8 buffers, unpack scratch, and dequantized activations.
+/// Reusable-buffer pool for the quantization engine's packed INT1/INT2/
+/// INT4/INT8 buffers, dequantized activations, and fused-kernel float
+/// tiles.
 ///
 /// Training quantizes and dequantizes the same layer shapes every epoch;
 /// without recycling, each step re-allocates (and re-faults) the same
 /// few megabytes. The pipeline owns one pool per training run, hands it
-/// to the engine on the forward pass (codes scratch + packed output) and
-/// the backward pass (unpack scratch + dequantized floats), and returns
-/// consumed stash buffers after each layer's gradients are computed.
+/// to the engine on the forward pass (packed output — the word-parallel
+/// codec rounds straight into packed bytes, so there is no code scratch
+/// to recycle) and the backward pass (dequantized floats / per-worker
+/// decode tiles), and returns consumed stash buffers after each layer's
+/// gradients are computed.
 ///
 /// Buffers are matched best-effort by capacity; fresh allocations are
 /// rounded up to a [`capacity_class`] so size-wobbling request streams
@@ -394,6 +405,7 @@ pub struct BufferPool {
     hits: u64,
     misses: u64,
     max_float_take: usize,
+    max_byte_take: usize,
 }
 
 impl BufferPool {
@@ -428,6 +440,7 @@ impl BufferPool {
 
     /// A zero-filled byte buffer of exactly `len` elements.
     pub fn take_bytes(&mut self, len: usize) -> Vec<u8> {
+        self.max_byte_take = self.max_byte_take.max(len);
         match Self::pick(&self.bytes, len) {
             Some((i, fits)) => {
                 if fits {
@@ -460,6 +473,7 @@ impl BufferPool {
     /// the caller overwrites. Skips the full zero-fill memset on the
     /// recycled hot path; only a grown tail is zero-initialized.
     pub fn take_bytes_scratch(&mut self, len: usize) -> Vec<u8> {
+        self.max_byte_take = self.max_byte_take.max(len);
         match Self::pick(&self.bytes, len) {
             Some((i, fits)) => {
                 if fits {
@@ -491,6 +505,7 @@ impl BufferPool {
     /// for append-style producers like
     /// [`pack_codes_into`](crate::quant::pack_codes_into).
     pub fn take_bytes_empty(&mut self, cap: usize) -> Vec<u8> {
+        self.max_byte_take = self.max_byte_take.max(cap);
         match Self::pick(&self.bytes, cap) {
             Some((i, fits)) => {
                 if fits {
@@ -591,6 +606,7 @@ impl BufferPool {
             resident_bytes: self.bytes.iter().map(|b| b.capacity()).sum::<usize>()
                 + self.floats.iter().map(|b| 4 * b.capacity()).sum::<usize>(),
             max_float_take: self.max_float_take,
+            max_byte_take: self.max_byte_take,
         }
     }
 }
@@ -748,6 +764,22 @@ mod tests {
             pool.put_bytes(vec![0u8; 16]);
         }
         assert!(pool.stats().resident_bytes <= 16 * BufferPool::MAX_POOLED);
+    }
+
+    #[test]
+    fn pool_tracks_largest_takes_per_kind() {
+        let mut pool = BufferPool::new();
+        assert_eq!(pool.stats().max_byte_take, 0);
+        assert_eq!(pool.stats().max_float_take, 0);
+        pool.put_bytes(vec![0u8; 64]);
+        let b = pool.take_bytes_scratch(48);
+        pool.put_bytes(b);
+        let _ = pool.take_bytes_empty(32);
+        let f = pool.take_floats_scratch(100);
+        pool.put_floats(f);
+        let s = pool.stats();
+        assert_eq!(s.max_byte_take, 48, "{s:?}");
+        assert_eq!(s.max_float_take, 100, "{s:?}");
     }
 
     #[test]

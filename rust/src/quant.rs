@@ -11,8 +11,26 @@
 //!   projected activation matrix `H_proj ∈ R^{N×R}` is viewed as
 //!   `(N·R/G)` flat blocks of `G` scalars, each with its own
 //!   `(zero-point, range)` pair.
-//! * **INT2/INT4/INT8 bit-packing** so a compressed tensor's `nbytes()`
-//!   is byte-exact — this is what the Table 1 memory column audits.
+//! * **INT1/INT2/INT4/INT8 bit-packing** so a compressed tensor's
+//!   `nbytes()` is byte-exact — this is what the Table 1 memory column
+//!   audits.
+//!
+//! ## Word-parallel codec
+//!
+//! The codec core is **SWAR** (SIMD-within-a-register): packing and
+//! unpacking move 8 codes per `u64` shift/mask fold instead of one code
+//! per shift, and the hot production paths are **fused** — the
+//! crate-internal `quantize_pack_block` stochastically rounds straight
+//! into packed bytes (codes accumulate in a 64-bit word, flushed 8
+//! bytes at a time; no intermediate `u8` code buffer), and
+//! `unpack_dequantize_block` decodes packed bytes directly to `f32`
+//! through a per-block `2^bits`-entry value LUT (`Z + r · a_k / B`
+//! precomputed once per block). The byte layout is unchanged (LSB-first
+//! within each byte, frozen by `tests/golden_pack.rs`), and the
+//! pre-fusion two-pass codec is kept in the doc-hidden `reference`
+//! module as the oracle the property suite `tests/codec_fusion.rs`
+//! compares against bit-for-bit. Layout, word shapes and the cost
+//! model: `docs/codec.md`.
 //!
 //! ## Execution model
 //!
@@ -127,7 +145,7 @@ pub fn stochastic_round(h: f64, boundaries: &[f64], rng: &mut Pcg64) -> u8 {
     let lo = boundaries[i];
     let hi = boundaries[i + 1];
     let p_up = (h - lo) / (hi - lo);
-    if (rng.next_f64() as f64) < p_up {
+    if rng.next_f64() < p_up {
         (i + 1) as u8
     } else {
         i as u8
@@ -177,42 +195,128 @@ pub fn pack_codes_into(codes: &[u8], bits: u32, out: &mut Vec<u8>) -> Result<()>
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// SWAR word kernels: 8 codes move per u64 shift/mask fold. Each pack
+// fold is the exact inverse of the matching unpack fold; the layout
+// they implement (code `i` at bit `i·bits`, LSB-first within a byte)
+// is byte-identical to the scalar loops in [`reference`], which the
+// property suite `tests/codec_fusion.rs` enforces. Word shapes are
+// documented in `docs/codec.md`.
+// ---------------------------------------------------------------------
+
+/// Gather the low bit of each of 8 code bytes (`w` = codes as one
+/// little-endian `u64`) into one packed byte.
+#[inline(always)]
+fn swar_pack1(w: u64) -> u8 {
+    let w = w & 0x0101_0101_0101_0101;
+    let w = (w | (w >> 7)) & 0x0003_0003_0003_0003;
+    let w = (w | (w >> 14)) & 0x0000_000F_0000_000F;
+    let w = w | (w >> 28);
+    (w & 0xFF) as u8
+}
+
+/// Spread one packed byte into 8 one-bit code bytes (little-endian).
+#[inline(always)]
+fn swar_unpack1(b: u8) -> u64 {
+    let w = b as u64;
+    let w = (w | (w << 28)) & 0x0000_000F_0000_000F;
+    let w = (w | (w << 14)) & 0x0003_0003_0003_0003;
+    (w | (w << 7)) & 0x0101_0101_0101_0101
+}
+
+/// Gather the low 2 bits of each of 8 code bytes into 2 packed bytes.
+#[inline(always)]
+fn swar_pack2(w: u64) -> u16 {
+    let w = w & 0x0303_0303_0303_0303;
+    let w = (w | (w >> 6)) & 0x000F_000F_000F_000F;
+    let w = (w | (w >> 12)) & 0x0000_00FF_0000_00FF;
+    let w = w | (w >> 24);
+    (w & 0xFFFF) as u16
+}
+
+/// Spread 2 packed bytes into 8 two-bit code bytes (little-endian).
+#[inline(always)]
+fn swar_unpack2(p: u16) -> u64 {
+    let w = p as u64;
+    let w = (w | (w << 24)) & 0x0000_00FF_0000_00FF;
+    let w = (w | (w << 12)) & 0x000F_000F_000F_000F;
+    (w | (w << 6)) & 0x0303_0303_0303_0303
+}
+
+/// Gather the low nibble of each of 8 code bytes into 4 packed bytes.
+#[inline(always)]
+fn swar_pack4(w: u64) -> u32 {
+    let w = w & 0x0F0F_0F0F_0F0F_0F0F;
+    let w = (w | (w >> 4)) & 0x00FF_00FF_00FF_00FF;
+    let w = (w | (w >> 8)) & 0x0000_FFFF_0000_FFFF;
+    let w = w | (w >> 16);
+    w as u32
+}
+
+/// Spread 4 packed bytes into 8 four-bit code bytes (little-endian).
+#[inline(always)]
+fn swar_unpack4(p: u32) -> u64 {
+    let w = p as u64;
+    let w = (w | (w << 16)) & 0x0000_FFFF_0000_FFFF;
+    let w = (w | (w << 8)) & 0x00FF_00FF_00FF_00FF;
+    (w | (w << 4)) & 0x0F0F_0F0F_0F0F_0F0F
+}
+
 /// [`pack_codes`] into an exactly-sized output slice, writing **every**
 /// byte of `out` (the final partial byte is zero-padded). This is the
 /// per-block packer of the heterogeneous-width path: each block of a
 /// [`crate::alloc::BitPlan`] starts at its own byte boundary, so blocks
 /// pack independently and recycled (non-zeroed) buffers are safe.
 ///
+/// Word-parallel: full 8-code groups fold through one SWAR `u64` op
+/// chain; only the ragged tail (< 8 codes) packs scalar-wise.
+///
 /// `out.len()` must equal `(codes.len() * bits).div_ceil(8)`; width must
 /// be one of 1/2/4/8 (both are validated by the callers once per tensor).
 pub(crate) fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
     debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+    let full = codes.len() / 8;
+    let word = |i: usize| -> u64 {
+        u64::from_le_bytes(codes[i * 8..i * 8 + 8].try_into().expect("8-byte chunk"))
+    };
     match bits {
         1 => {
-            for (o, c) in out.iter_mut().zip(codes.chunks(8)) {
+            for i in 0..full {
+                out[i] = swar_pack1(word(i));
+            }
+            let rem = &codes[full * 8..];
+            if !rem.is_empty() {
                 let mut byte = 0u8;
-                for (i, &v) in c.iter().enumerate() {
-                    byte |= (v & 0b1) << i;
+                for (k, &v) in rem.iter().enumerate() {
+                    byte |= (v & 0b1) << k;
                 }
-                *o = byte;
+                out[full] = byte;
             }
         }
         2 => {
-            for (o, c) in out.iter_mut().zip(codes.chunks(4)) {
+            for i in 0..full {
+                out[i * 2..i * 2 + 2].copy_from_slice(&swar_pack2(word(i)).to_le_bytes());
+            }
+            let rem = &codes[full * 8..];
+            for (j, c) in rem.chunks(4).enumerate() {
                 let mut byte = 0u8;
-                for (i, &v) in c.iter().enumerate() {
-                    byte |= (v & 0b11) << (2 * i);
+                for (k, &v) in c.iter().enumerate() {
+                    byte |= (v & 0b11) << (2 * k);
                 }
-                *o = byte;
+                out[full * 2 + j] = byte;
             }
         }
         4 => {
-            for (o, c) in out.iter_mut().zip(codes.chunks(2)) {
+            for i in 0..full {
+                out[i * 4..i * 4 + 4].copy_from_slice(&swar_pack4(word(i)).to_le_bytes());
+            }
+            let rem = &codes[full * 8..];
+            for (j, c) in rem.chunks(2).enumerate() {
                 let mut byte = 0u8;
-                for (i, &v) in c.iter().enumerate() {
-                    byte |= (v & 0b1111) << (4 * i);
+                for (k, &v) in c.iter().enumerate() {
+                    byte |= (v & 0b1111) << (4 * k);
                 }
-                *o = byte;
+                out[full * 4 + j] = byte;
             }
         }
         8 => out.copy_from_slice(codes),
@@ -221,80 +325,110 @@ pub(crate) fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
 }
 
 /// Inverse of [`pack_codes`]; `n` is the original code count.
+///
+/// A too-short `packed` buffer is rejected up front with a `Shape`
+/// error at **every** width — including 8-bit, which used to truncate
+/// silently and rely on a trailing length check. Trailing extra bytes
+/// remain legal (the heterogeneous format zero-pads block tails).
 pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(n);
-    match bits {
-        1 => {
-            for &byte in packed {
-                for i in 0..8 {
-                    if out.len() == n {
-                        break;
-                    }
-                    out.push((byte >> i) & 0b1);
-                }
-            }
-        }
-        2 => {
-            for &byte in packed {
-                for i in 0..4 {
-                    if out.len() == n {
-                        break;
-                    }
-                    out.push((byte >> (2 * i)) & 0b11);
-                }
-            }
-        }
-        4 => {
-            for &byte in packed {
-                for i in 0..2 {
-                    if out.len() == n {
-                        break;
-                    }
-                    out.push((byte >> (4 * i)) & 0b1111);
-                }
-            }
-        }
-        8 => out.extend_from_slice(&packed[..n.min(packed.len())]),
-        _ => return Err(Error::Config(format!("unsupported bit width {bits}"))),
+    if !matches!(bits, 1 | 2 | 4 | 8) {
+        return Err(Error::Config(format!("unsupported bit width {bits}")));
     }
-    if out.len() != n {
+    let needed = (n * bits as usize).div_ceil(8);
+    if packed.len() < needed {
         return Err(Error::Shape(format!(
             "packed buffer too short: wanted {n} codes, got {}",
-            out.len()
+            packed.len() * (8 / bits) as usize
         )));
     }
+    let mut out = vec![0u8; n];
+    unpack_range(packed, bits, 0, &mut out);
     Ok(out)
 }
 
-/// Unpack `out.len()` codes starting at scalar index `start`, without
-/// materializing the whole code array — each parallel dequantization
-/// shard unpacks only its own contiguous range. Since every supported
-/// width divides 8, codes never straddle byte boundaries.
+/// Unpack `out.len()` codes starting at scalar index `start`. Since
+/// every supported width divides 8, codes never straddle byte
+/// boundaries.
 ///
-/// Callers must pre-validate that `packed` holds at least
-/// `start + out.len()` codes; out-of-range access panics (the engine
-/// checks once per tensor before fanning out).
+/// Word-parallel: after a scalar head reaches a byte boundary, every
+/// full 8-code group spreads through one SWAR fold; only the ragged
+/// tail decodes scalar-wise.
+///
+/// The production caller is [`unpack_codes`] (always `start == 0`,
+/// length pre-validated there); the engine's decode paths went fully
+/// fused ([`unpack_dequantize_block`]) and no longer unpack to codes
+/// at all. Nonzero `start` support is kept for range decoding of a
+/// shared packed stream (unit-tested against scalar extraction);
+/// callers must pre-validate that `packed` holds at least
+/// `start + out.len()` codes — out-of-range access panics.
 pub(crate) fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    let n = out.len();
     match bits {
         1 => {
-            for (i, o) in out.iter_mut().enumerate() {
-                let idx = start + i;
-                *o = (packed[idx / 8] >> (idx % 8)) & 0b1;
+            let mut i = 0;
+            let mut idx = start;
+            while i < n && idx % 8 != 0 {
+                out[i] = (packed[idx / 8] >> (idx % 8)) & 0b1;
+                i += 1;
+                idx += 1;
+            }
+            while i + 8 <= n {
+                let w = swar_unpack1(packed[idx / 8]);
+                out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                i += 8;
+                idx += 8;
+            }
+            while i < n {
+                out[i] = (packed[idx / 8] >> (idx % 8)) & 0b1;
+                i += 1;
+                idx += 1;
             }
         }
         2 => {
-            for (i, o) in out.iter_mut().enumerate() {
-                let idx = start + i;
-                *o = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
+            let mut i = 0;
+            let mut idx = start;
+            while i < n && idx % 4 != 0 {
+                out[i] = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
+                i += 1;
+                idx += 1;
+            }
+            while i + 8 <= n {
+                let p = idx / 4;
+                let half = u16::from_le_bytes(packed[p..p + 2].try_into().expect("2-byte chunk"));
+                let w = swar_unpack2(half);
+                out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                i += 8;
+                idx += 8;
+            }
+            while i < n {
+                out[i] = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
+                i += 1;
+                idx += 1;
             }
         }
         4 => {
-            for (i, o) in out.iter_mut().enumerate() {
-                let idx = start + i;
-                *o = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
+            let mut i = 0;
+            let mut idx = start;
+            while i < n && idx % 2 != 0 {
+                out[i] = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
+                i += 1;
+                idx += 1;
+            }
+            while i + 8 <= n {
+                let p = idx / 2;
+                let quad = u32::from_le_bytes(packed[p..p + 4].try_into().expect("4-byte chunk"));
+                let w = swar_unpack4(quad);
+                out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                i += 8;
+                idx += 8;
+            }
+            while i < n {
+                out[i] = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
+                i += 1;
+                idx += 1;
             }
         }
-        8 => out.copy_from_slice(&packed[start..start + out.len()]),
+        8 => out.copy_from_slice(&packed[start..start + n]),
         _ => unreachable!("bit width validated before unpacking"),
     }
 }
@@ -315,7 +449,8 @@ pub struct CompressedTensor {
     pub shape: (usize, usize),
     /// Scalars per quantization group.
     pub group_len: usize,
-    /// Bit width (2, 4 or 8).
+    /// Bit width (1, 2, 4 or 8 — 1-bit is the adaptive allocator's
+    /// lowest rung; the fixed-width config surface stays 2/4/8).
     pub bits: u32,
     /// Bin layout used at quantization time (needed to invert codes).
     pub bins: BinSpec,
@@ -349,6 +484,7 @@ impl CompressedTensor {
 /// inner-loop specialization applies.
 #[derive(Debug, Clone)]
 pub(crate) struct DequantPlan {
+    bits: u32,
     norm: Vec<f32>,
     b_max: f32,
     uniform: bool,
@@ -359,6 +495,7 @@ impl DequantPlan {
         let boundaries = bins.boundaries(bits);
         let b_max = (boundaries.len() - 1) as f32;
         DequantPlan {
+            bits,
             // Normalized boundary positions a_k / B (≤ 256 entries).
             norm: boundaries.iter().map(|&a| a as f32 / b_max).collect(),
             b_max,
@@ -367,9 +504,11 @@ impl DequantPlan {
     }
 }
 
-/// Dequantize one group's codes into `out` (Eq. 3 on a single `(Z, r)`
-/// block). Hot path: a per-group level LUT so the inner loop is a pure
-/// table lookup + store — no per-element `idx / group_len` division.
+/// Dequantize one group's *already unpacked* codes into `out` (Eq. 3 on
+/// a single `(Z, r)` block) through a per-group level LUT. This is the
+/// pre-fusion kernel, kept for the [`reference`] oracle — production
+/// dequantization goes through [`unpack_dequantize_block`], which
+/// decodes packed bytes directly and never materializes a code buffer.
 pub(crate) fn dequantize_block(
     plan: &DequantPlan,
     z: f32,
@@ -400,13 +539,103 @@ pub(crate) fn dequantize_block(
     }
 }
 
+/// Fused unpack→dequantize: decode `out.len()` packed codes starting at
+/// scalar index `start` **directly** to `f32` (Eq. 3 on a single
+/// `(Z, r)` block) — the intermediate `u8` code buffer of the two-pass
+/// path is gone. Sub-byte widths route through [`decode_block_lut_width`]: a
+/// per-block `2^bits`-entry value LUT (`z + r · a_k / B` precomputed
+/// once), then each packed byte is split into its `8 / bits` codes and
+/// looked up. The arithmetic matches [`dequantize_block`] expression-
+/// for-expression, so fused and two-pass reconstructions are
+/// bit-identical (enforced by `tests/codec_fusion.rs`).
+///
+/// Same bounds contract as [`unpack_range`]: `packed` must hold at
+/// least `start + out.len()` codes.
+pub(crate) fn unpack_dequantize_block(
+    plan: &DequantPlan,
+    z: f32,
+    r: f32,
+    packed: &[u8],
+    start: usize,
+    out: &mut [f32],
+) {
+    if plan.norm.len() <= 16 {
+        // Sub-byte widths (1/2/4 bits; 16 levels at most): value LUT.
+        let mut lut = [0.0f32; 16];
+        for (k, &p) in plan.norm.iter().enumerate() {
+            lut[k] = z + r * p;
+        }
+        match plan.bits {
+            1 => decode_block_lut_width::<1>(packed, start, out, &lut),
+            2 => decode_block_lut_width::<2>(packed, start, out, &lut),
+            4 => decode_block_lut_width::<4>(packed, start, out, &lut),
+            _ => unreachable!("≤ 16 levels implies a sub-byte width"),
+        }
+    } else if plan.uniform {
+        // INT8 uniform: codes are whole bytes; ĥ = z + k·(r/B).
+        let w = r / plan.b_max;
+        let bytes = &packed[start..start + out.len()];
+        for (o, &code) in out.iter_mut().zip(bytes) {
+            *o = z + code as f32 * w;
+        }
+    } else {
+        // Wide (8-bit) non-uniform layouts: general boundary lookup.
+        let bytes = &packed[start..start + out.len()];
+        for (o, &code) in out.iter_mut().zip(bytes) {
+            *o = z + r * plan.norm[code as usize];
+        }
+    }
+}
+
+/// LUT decode loop for a sub-byte width `B`: scalar head to the next
+/// byte boundary, then one byte → `8 / B` lookups (the compiler unrolls
+/// the constant-trip inner loop), scalar tail.
+fn decode_block_lut_width<const B: usize>(
+    packed: &[u8],
+    start: usize,
+    out: &mut [f32],
+    lut: &[f32; 16],
+) {
+    let cpb = 8 / B; // codes per byte
+    let mask = (1usize << B) - 1;
+    let n = out.len();
+    let mut i = 0;
+    let mut idx = start;
+    while i < n && idx % cpb != 0 {
+        out[i] = lut[(packed[idx / cpb] as usize >> (B * (idx % cpb))) & mask];
+        i += 1;
+        idx += 1;
+    }
+    let mut p = idx / cpb;
+    while i + cpb <= n {
+        let byte = packed[p] as usize;
+        p += 1;
+        for k in 0..cpb {
+            out[i + k] = lut[(byte >> (B * k)) & mask];
+        }
+        i += cpb;
+        idx += cpb;
+    }
+    while i < n {
+        out[i] = lut[(packed[idx / cpb] as usize >> (B * (idx % cpb))) & mask];
+        i += 1;
+        idx += 1;
+    }
+}
+
 /// Quantization state resolved (and validated) once per tensor: bit
-/// width, bin boundaries, and which inner-loop specialization applies.
-/// Shared read-only by every worker of the parallel engine.
+/// width, bin boundaries (with precomputed inverse bin widths for the
+/// general non-uniform path), and which inner-loop specialization
+/// applies. Shared read-only by every worker of the parallel engine.
 #[derive(Debug, Clone)]
 pub(crate) struct QuantPlan {
+    pub(crate) bits: u32,
     pub(crate) b_max: u32,
     pub(crate) boundaries: Vec<f64>,
+    /// `1 / (a_{i+1} - a_i)` per bin — replaces the per-scalar `f64`
+    /// division of the general non-uniform SR path. Empty for uniform
+    /// bins (that path never consults bin widths).
+    inv_widths: Vec<f64>,
     pub(crate) uniform: bool,
 }
 
@@ -419,40 +648,40 @@ impl QuantPlan {
             return Err(Error::Config(format!("unsupported bit width {bits}")));
         }
         bins.validate(bits)?;
+        let boundaries = bins.boundaries(bits);
+        let uniform = matches!(bins, BinSpec::Uniform);
+        let inv_widths = if uniform {
+            Vec::new()
+        } else {
+            boundaries.windows(2).map(|w| 1.0 / (w[1] - w[0])).collect()
+        };
         Ok(QuantPlan {
+            bits,
             b_max: (1u32 << bits) - 1,
-            boundaries: bins.boundaries(bits),
-            uniform: matches!(bins, BinSpec::Uniform),
+            boundaries,
+            inv_widths,
+            uniform,
         })
     }
 }
 
-/// Quantize one independent block (Eq. 2 on a single group): computes the
-/// block's `(Z, r)`, stochastically rounds every scalar into `out`, and
-/// returns the `(zero, range)` pair. Infallible — validation happens once
-/// in [`QuantPlan::resolve`], which is what lets the engine run this
-/// kernel inside worker threads without error plumbing.
-pub(crate) fn quantize_block(
+/// Stochastic-rounding core shared by the two-pass and fused-pack block
+/// quantizers: rounds every scalar of a non-constant block (Eq. 2) and
+/// hands the codes to `emit` in order. Exactly one implementation of
+/// the SR inner loops exists, so the fused packer cannot drift from the
+/// scratch-buffer path — both consume the per-block RNG stream draw for
+/// draw.
+#[inline(always)]
+fn sr_block(
     plan: &QuantPlan,
     block: &[f32],
-    out: &mut [u8],
+    lo: f32,
+    range: f32,
     rng: &mut Pcg64,
-) -> (f32, f32) {
+    mut emit: impl FnMut(u8),
+) {
     let b_max = plan.b_max;
     let boundaries = &plan.boundaries;
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &v in block {
-        lo = lo.min(v);
-        hi = hi.max(v);
-    }
-    let range = hi - lo;
-    if range <= 0.0 {
-        // Constant block: every code is 0, dequantizing to Z exactly.
-        // Written explicitly so recycled (non-zeroed) buffers are safe.
-        out.fill(0);
-        return (lo, range);
-    }
     if plan.uniform {
         // Hot path: SR in the integer domain — `floor + (u32 rand <
         // frac·2³²)` — no f64 math, and each 64-bit RNG draw feeds
@@ -460,7 +689,7 @@ pub(crate) fn quantize_block(
         let scale = b_max as f32 / range;
         let mut buffered: u64 = 0;
         let mut have_half = false;
-        for (o, &v) in out.iter_mut().zip(block) {
+        for &v in block {
             let hbar = (v - lo) * scale; // in [0, B]
             let fl = hbar as u32; // trunc == floor (hbar >= 0)
             let frac = hbar - fl as f32;
@@ -474,7 +703,7 @@ pub(crate) fn quantize_block(
                 (buffered >> 32) as u32
             };
             let up = r < threshold;
-            *o = (fl + up as u32).min(b_max) as u8;
+            emit((fl + up as u32).min(b_max) as u8);
         }
     } else if boundaries.len() == 4 {
         // INT2 variance-minimized bins [0, α, β, 3]: branch-free bin
@@ -490,7 +719,7 @@ pub(crate) fn quantize_block(
         ];
         let mut buffered: u64 = 0;
         let mut have_half = false;
-        for (o, &v) in out.iter_mut().zip(block) {
+        for &v in block {
             let hbar = ((v - lo) * scale).clamp(0.0, 3.0);
             let ge_a = (hbar >= a) as u32;
             let ge_b = (hbar >= b) as u32;
@@ -505,15 +734,117 @@ pub(crate) fn quantize_block(
                 (buffered >> 32) as u32
             };
             let up = (r < threshold) as u32;
-            *o = (i as u32 + up).min(3) as u8;
+            emit((i as u32 + up).min(3) as u8);
         }
     } else {
+        // General non-uniform layouts: binary-search bin select plus the
+        // precomputed inverse width — no per-scalar linear scan, no
+        // per-scalar division (the pre-optimization form is the public
+        // [`stochastic_round`]).
         let scale = b_max as f64 / range as f64;
-        for (o, &v) in out.iter_mut().zip(block) {
-            let hbar = (v - lo) as f64 * scale;
-            *o = stochastic_round(hbar, boundaries, rng);
+        let b = boundaries.len() - 1;
+        let interior = &boundaries[1..b];
+        for &v in block {
+            let hbar = ((v - lo) as f64 * scale).clamp(boundaries[0], boundaries[b]);
+            // Same bin the linear scan located: the count of interior
+            // boundaries `a ≤ hbar`, capped at B − 1.
+            let i = interior.partition_point(|&a| a <= hbar);
+            let p_up = (hbar - boundaries[i]) * plan.inv_widths[i];
+            let up = (rng.next_f64() < p_up) as usize;
+            emit((i + up) as u8);
         }
     }
+}
+
+/// Block min/max — the `(Z, r)` pair of Eq. 2.
+#[inline(always)]
+fn block_zero_range(block: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in block {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi - lo)
+}
+
+/// Quantize one independent block (Eq. 2 on a single group) into a `u8`
+/// code buffer: computes the block's `(Z, r)`, stochastically rounds
+/// every scalar into `out`, and returns the `(zero, range)` pair.
+/// Infallible — validation happens once in [`QuantPlan::resolve`], which
+/// is what lets the engine run this kernel inside worker threads without
+/// error plumbing. Production callers that pack afterwards should use
+/// the fused [`quantize_pack_block`] instead; this two-pass form remains
+/// for the non-byte-aligned fallback and the [`reference`] oracle.
+pub(crate) fn quantize_block(
+    plan: &QuantPlan,
+    block: &[f32],
+    out: &mut [u8],
+    rng: &mut Pcg64,
+) -> (f32, f32) {
+    let (lo, range) = block_zero_range(block);
+    if range <= 0.0 {
+        // Constant block: every code is 0, dequantizing to Z exactly.
+        // Written explicitly so recycled (non-zeroed) buffers are safe.
+        out.fill(0);
+        return (lo, range);
+    }
+    let mut i = 0;
+    sr_block(plan, block, lo, range, rng, |code| {
+        out[i] = code;
+        i += 1;
+    });
+    (lo, range)
+}
+
+/// Fused quantize→pack: stochastically round one block (Eq. 2) straight
+/// into its packed byte range — no intermediate `u8` code buffer. Codes
+/// accumulate LSB-first in a 64-bit word that flushes 8 bytes at a time
+/// (word-parallel on the store side), with the final partial word
+/// zero-padded, so the emitted bytes are identical to
+/// `quantize_block` + [`pack_codes_slice`] whenever the block occupies
+/// whole bytes (always true for the byte-aligned heterogeneous format,
+/// and for any fixed-width layout with `group_len · bits ≡ 0 (mod 8)`).
+///
+/// `out` must be exactly `(block.len() * plan.bits).div_ceil(8)` bytes;
+/// every byte of it is written (constant blocks zero-fill), so recycled
+/// non-zeroed buffers are safe.
+pub(crate) fn quantize_pack_block(
+    plan: &QuantPlan,
+    block: &[f32],
+    out: &mut [u8],
+    rng: &mut Pcg64,
+) -> (f32, f32) {
+    debug_assert_eq!(
+        out.len(),
+        (block.len() * plan.bits as usize).div_ceil(8),
+        "packed output must be exactly block-sized"
+    );
+    let (lo, range) = block_zero_range(block);
+    if range <= 0.0 {
+        out.fill(0);
+        return (lo, range);
+    }
+    let bits = plan.bits;
+    let mut acc = 0u64;
+    let mut filled = 0u32;
+    let mut pos = 0usize;
+    sr_block(plan, block, lo, range, rng, |code| {
+        acc |= (code as u64) << filled;
+        filled += bits;
+        if filled == 64 {
+            out[pos..pos + 8].copy_from_slice(&acc.to_le_bytes());
+            pos += 8;
+            acc = 0;
+            filled = 0;
+        }
+    });
+    if filled > 0 {
+        let bytes = (filled as usize).div_ceil(8);
+        out[pos..pos + bytes].copy_from_slice(&acc.to_le_bytes()[..bytes]);
+        pos += bytes;
+    }
+    debug_assert_eq!(pos, out.len());
     (lo, range)
 }
 
@@ -548,6 +879,243 @@ pub fn quantize_grouped_seeded(
     seed: u64,
 ) -> Result<CompressedTensor> {
     crate::engine::QuantEngine::serial().quantize_seeded(h, group_len, bits, bins, seed)
+}
+
+/// Pre-fusion reference codec — the oracle the word-parallel kernels
+/// are proven against, **not** production code.
+///
+/// Everything here is the two-pass, one-code-per-shift form the codec
+/// had before the SWAR/fusion rewrite: stochastic-round into a `u8`
+/// code scratch, then pack scalar-wise; unpack scalar-wise, then map
+/// codes through the level LUT. `tests/codec_fusion.rs` asserts the
+/// production kernels reproduce these results **bit-for-bit** at every
+/// width, plan and thread count, and `bench_quant`'s `codec` arms
+/// measure the two paths against each other so the fusion win stays
+/// visible in `BENCH_quant.json`.
+///
+/// Kept `pub` (doc-hidden) rather than `#[cfg(test)]` because both the
+/// integration-test oracle and the benches link the crate externally.
+#[doc(hidden)]
+pub mod reference {
+    use super::*;
+
+    /// Naive per-code shift/mask packer (the pre-SWAR loop).
+    pub fn pack_codes(codes: &[u8], bits: u32) -> Result<Vec<u8>> {
+        if !matches!(bits, 1 | 2 | 4 | 8) {
+            return Err(Error::Config(format!("unsupported bit width {bits}")));
+        }
+        let mut out = vec![0u8; (codes.len() * bits as usize).div_ceil(8)];
+        pack_codes_slice_scalar(codes, bits, &mut out);
+        Ok(out)
+    }
+
+    /// Naive per-code packer into an exactly-sized slice.
+    pub(crate) fn pack_codes_slice_scalar(codes: &[u8], bits: u32, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+        match bits {
+            1 => {
+                for (o, c) in out.iter_mut().zip(codes.chunks(8)) {
+                    let mut byte = 0u8;
+                    for (i, &v) in c.iter().enumerate() {
+                        byte |= (v & 0b1) << i;
+                    }
+                    *o = byte;
+                }
+            }
+            2 => {
+                for (o, c) in out.iter_mut().zip(codes.chunks(4)) {
+                    let mut byte = 0u8;
+                    for (i, &v) in c.iter().enumerate() {
+                        byte |= (v & 0b11) << (2 * i);
+                    }
+                    *o = byte;
+                }
+            }
+            4 => {
+                for (o, c) in out.iter_mut().zip(codes.chunks(2)) {
+                    let mut byte = 0u8;
+                    for (i, &v) in c.iter().enumerate() {
+                        byte |= (v & 0b1111) << (4 * i);
+                    }
+                    *o = byte;
+                }
+            }
+            8 => out.copy_from_slice(codes),
+            _ => unreachable!("bit width validated before packing"),
+        }
+    }
+
+    /// Naive per-code unpacker (the pre-SWAR loop).
+    pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(n);
+        match bits {
+            1 | 2 | 4 => {
+                let per_byte = (8 / bits) as usize;
+                for &byte in packed {
+                    for i in 0..per_byte {
+                        if out.len() == n {
+                            break;
+                        }
+                        out.push((byte >> (bits as usize * i)) & ((1 << bits) - 1) as u8);
+                    }
+                }
+            }
+            8 => out.extend_from_slice(&packed[..n.min(packed.len())]),
+            _ => return Err(Error::Config(format!("unsupported bit width {bits}"))),
+        }
+        if out.len() != n {
+            return Err(Error::Shape(format!(
+                "packed buffer too short: wanted {n} codes, got {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Two-pass fixed-width grouped quantizer: the serial pre-fusion
+    /// engine path (SR into an `n`-byte code scratch, then one global
+    /// pack). Same per-block RNG streams as the production engine, so
+    /// outputs must match it byte-for-byte.
+    pub fn quantize_grouped_seeded(
+        h: &Matrix,
+        group_len: usize,
+        bits: u32,
+        bins: &BinSpec,
+        seed: u64,
+    ) -> Result<CompressedTensor> {
+        let plan = QuantPlan::resolve(bits, bins, group_len)?;
+        let data = h.as_slice();
+        let n = data.len();
+        let num_groups = n.div_ceil(group_len);
+        let mut codes = vec![0u8; n];
+        let mut zeros = vec![0f32; num_groups];
+        let mut ranges = vec![0f32; num_groups];
+        for g in 0..num_groups {
+            let start = g * group_len;
+            let end = (start + group_len).min(n);
+            let mut rng_g = Pcg64::with_stream(seed, g as u64);
+            let (z, r) =
+                quantize_block(&plan, &data[start..end], &mut codes[start..end], &mut rng_g);
+            zeros[g] = z;
+            ranges[g] = r;
+        }
+        Ok(CompressedTensor {
+            packed: pack_codes(&codes, bits)?,
+            zeros,
+            ranges,
+            shape: h.shape(),
+            group_len,
+            bits,
+            bins: bins.clone(),
+        })
+    }
+
+    /// Two-pass fixed-width dequantizer: unpack every code into a
+    /// scratch array, then LUT-map group by group.
+    pub fn dequantize(ct: &CompressedTensor) -> Result<Matrix> {
+        if ct.group_len == 0 {
+            return Err(Error::Config("group_len must be positive".into()));
+        }
+        let (rows, cols) = ct.shape;
+        let n = rows * cols;
+        let num_groups = n.div_ceil(ct.group_len);
+        if ct.zeros.len() != num_groups || ct.ranges.len() != num_groups {
+            return Err(Error::Shape(format!(
+                "expected {num_groups} (zero, range) pairs, got ({}, {})",
+                ct.zeros.len(),
+                ct.ranges.len()
+            )));
+        }
+        let codes = unpack_codes(&ct.packed, ct.bits, n)?;
+        let plan = DequantPlan::resolve(ct.bits, &ct.bins);
+        let mut out = vec![0f32; n];
+        for g in 0..num_groups {
+            let start = g * ct.group_len;
+            let end = (start + ct.group_len).min(n);
+            dequantize_block(
+                &plan,
+                ct.zeros[g],
+                ct.ranges[g],
+                &codes[start..end],
+                &mut out[start..end],
+            );
+        }
+        Matrix::from_vec(rows, cols, out)
+    }
+
+    /// Two-pass heterogeneous-plan quantizer: per-block SR into a code
+    /// scratch, then a scalar per-block pack at each block's own width.
+    pub fn quantize_planned_seeded(
+        h: &Matrix,
+        plan: &crate::alloc::BitPlan,
+        seed: u64,
+    ) -> Result<crate::alloc::PlannedTensor> {
+        let data = h.as_slice();
+        let n = data.len();
+        let group_len = plan.group_len();
+        let num_groups = plan.num_blocks();
+        let offsets = plan.offsets(n)?;
+        let total_bytes = *offsets.last().expect("offsets non-empty");
+        let mut zeros = vec![0f32; num_groups];
+        let mut ranges = vec![0f32; num_groups];
+        let mut packed = vec![0u8; total_bytes];
+        let mut scratch = vec![0u8; group_len.min(n.max(1))];
+        for g in 0..num_groups {
+            let lo = g * group_len;
+            let hi = (lo + group_len).min(n);
+            let bits = plan.bit(g);
+            let qp = QuantPlan::resolve(bits, &BinSpec::Uniform, group_len)?;
+            let mut rng_g = Pcg64::with_stream(seed, g as u64);
+            let (z, r) = quantize_block(&qp, &data[lo..hi], &mut scratch[..hi - lo], &mut rng_g);
+            zeros[g] = z;
+            ranges[g] = r;
+            pack_codes_slice_scalar(
+                &scratch[..hi - lo],
+                bits,
+                &mut packed[offsets[g]..offsets[g + 1]],
+            );
+        }
+        Ok(crate::alloc::PlannedTensor {
+            packed,
+            zeros,
+            ranges,
+            shape: h.shape(),
+            plan: plan.clone(),
+        })
+    }
+
+    /// Two-pass heterogeneous-plan dequantizer.
+    pub fn dequantize_planned(pt: &crate::alloc::PlannedTensor) -> Result<Matrix> {
+        let (rows, cols) = pt.shape;
+        let n = rows * cols;
+        let group_len = pt.plan.group_len();
+        let num_groups = pt.plan.num_blocks();
+        let offsets = pt.plan.offsets(n)?;
+        if pt.packed.len() < *offsets.last().expect("offsets non-empty") {
+            return Err(Error::Shape(format!(
+                "packed buffer too short: plan needs {} bytes, got {}",
+                offsets.last().expect("offsets non-empty"),
+                pt.packed.len()
+            )));
+        }
+        if pt.zeros.len() != num_groups || pt.ranges.len() != num_groups {
+            return Err(Error::Shape(format!(
+                "expected {num_groups} (zero, range) pairs, got ({}, {})",
+                pt.zeros.len(),
+                pt.ranges.len()
+            )));
+        }
+        let mut out = vec![0f32; n];
+        for g in 0..num_groups {
+            let lo = g * group_len;
+            let hi = (lo + group_len).min(n);
+            let bits = pt.plan.bit(g);
+            let codes = unpack_codes(&pt.packed[offsets[g]..offsets[g + 1]], bits, hi - lo)?;
+            let dp = DequantPlan::resolve(bits, &BinSpec::Uniform);
+            dequantize_block(&dp, pt.zeros[g], pt.ranges[g], &codes, &mut out[lo..hi]);
+        }
+        Matrix::from_vec(rows, cols, out)
+    }
 }
 
 /// EXACT-style per-row quantizer: one `(Z, r)` pair per node embedding
@@ -662,6 +1230,183 @@ mod tests {
     fn pack_rejects_bad_width() {
         assert!(pack_codes(&[0, 1], 3).is_err());
         assert!(unpack_codes(&[0], 5, 1).is_err());
+    }
+
+    #[test]
+    fn unpack_rejects_short_input_at_every_width() {
+        // The 8-bit path must error directly instead of silently
+        // truncating; the sub-byte paths likewise.
+        assert!(unpack_codes(&[0u8], 8, 2).is_err());
+        assert!(unpack_codes(&[0u8], 2, 5).is_err()); // needs 2 bytes
+        assert!(unpack_codes(&[0u8], 1, 9).is_err());
+        assert!(unpack_codes(&[0u8, 0], 4, 5).is_err());
+        // Exactly enough (and trailing extra) bytes stay legal.
+        assert_eq!(unpack_codes(&[0u8, 0], 2, 8).unwrap().len(), 8);
+        assert_eq!(unpack_codes(&[0u8, 0, 0xff], 2, 8).unwrap().len(), 8);
+    }
+
+    #[test]
+    fn swar_pack_unpack_matches_scalar_reference() {
+        // The word-parallel folds must reproduce the pre-SWAR scalar
+        // loops byte-for-byte at every width and ragged length.
+        let mut rng = Pcg64::new(0xA11);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            for n in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 33, 64, 100, 257] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+                let swar = pack_codes(&codes, bits).unwrap();
+                let naive = reference::pack_codes(&codes, bits).unwrap();
+                assert_eq!(swar, naive, "pack bits={bits} n={n}");
+                let back = unpack_codes(&swar, bits, n).unwrap();
+                let back_naive = reference::unpack_codes(&naive, bits, n).unwrap();
+                assert_eq!(back, codes, "unpack bits={bits} n={n}");
+                assert_eq!(back, back_naive, "unpack parity bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_range_handles_misaligned_starts() {
+        // Parallel shards decode from arbitrary code offsets; the SWAR
+        // head/body/tail split must agree with a scalar extraction.
+        let mut rng = Pcg64::new(0xA12);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            let n = 101;
+            let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+            let packed = pack_codes(&codes, bits).unwrap();
+            for start in [0usize, 1, 2, 3, 5, 7, 8, 9, 40, 96, 100] {
+                for len in [0usize, 1, 3, 7, 8, 9, 23] {
+                    if start + len > n {
+                        continue;
+                    }
+                    let mut out = vec![0xeeu8; len];
+                    unpack_range(&packed, bits, start, &mut out);
+                    assert_eq!(
+                        out,
+                        &codes[start..start + len],
+                        "bits={bits} start={start} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_quantize_pack_matches_two_pass() {
+        // quantize_pack_block must emit the exact bytes of SR-then-pack
+        // for identical RNG streams — every width, ragged lengths,
+        // uniform and non-uniform bins.
+        let mut rng = Pcg64::new(0xA13);
+        for bits in [1u32, 2, 4, 8] {
+            for len in [1usize, 5, 8, 31, 32, 33, 64, 129] {
+                let block: Vec<f32> =
+                    (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+                let plan = QuantPlan::resolve(bits, &BinSpec::Uniform, len).unwrap();
+                let mut codes = vec![0u8; len];
+                let mut r1 = Pcg64::with_stream(7, 3);
+                let (z1, rg1) = quantize_block(&plan, &block, &mut codes, &mut r1);
+                let mut expect = vec![0u8; (len * bits as usize).div_ceil(8)];
+                pack_codes_slice(&codes, bits, &mut expect);
+                let mut fused = vec![0xffu8; expect.len()];
+                let mut r2 = Pcg64::with_stream(7, 3);
+                let (z2, rg2) = quantize_pack_block(&plan, &block, &mut fused, &mut r2);
+                assert_eq!(fused, expect, "bits={bits} len={len}");
+                assert_eq!((z1, rg1), (z2, rg2));
+            }
+        }
+        // Non-uniform INT2 (VM) and a constant block.
+        let bins = BinSpec::int2_vm(1.2, 1.8).unwrap();
+        let plan = QuantPlan::resolve(2, &bins, 16).unwrap();
+        let block: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut codes = vec![0u8; 16];
+        let mut r1 = Pcg64::with_stream(9, 0);
+        quantize_block(&plan, &block, &mut codes, &mut r1);
+        let mut expect = vec![0u8; 4];
+        pack_codes_slice(&codes, 2, &mut expect);
+        let mut fused = vec![0xffu8; 4];
+        let mut r2 = Pcg64::with_stream(9, 0);
+        quantize_pack_block(&plan, &block, &mut fused, &mut r2);
+        assert_eq!(fused, expect);
+        let constant = vec![2.5f32; 13];
+        let plan = QuantPlan::resolve(2, &BinSpec::Uniform, 13).unwrap();
+        let mut fused = vec![0xffu8; (13 * 2usize).div_ceil(8)];
+        let mut r3 = Pcg64::with_stream(9, 1);
+        let (z, rg) = quantize_pack_block(&plan, &constant, &mut fused, &mut r3);
+        assert_eq!((z, rg), (2.5, 0.0));
+        assert!(fused.iter().all(|&b| b == 0), "constant block zero-fills");
+    }
+
+    #[test]
+    fn fused_unpack_dequantize_matches_two_pass() {
+        let mut rng = Pcg64::new(0xA14);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            let n = 103;
+            let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+            let packed = pack_codes(&codes, bits).unwrap();
+            let plan = DequantPlan::resolve(bits, &BinSpec::Uniform);
+            for (start, len) in [(0usize, 103usize), (0, 16), (3, 21), (7, 9), (96, 7)] {
+                let mut expect = vec![0f32; len];
+                dequantize_block(&plan, 0.25, 1.75, &codes[start..start + len], &mut expect);
+                let mut fused = vec![-1f32; len];
+                unpack_dequantize_block(&plan, 0.25, 1.75, &packed, start, &mut fused);
+                // Bit-identical, not approximately equal.
+                assert_eq!(fused, expect, "bits={bits} start={start} len={len}");
+            }
+        }
+        // Non-uniform layouts: INT2 VM (4-entry LUT) and wide 8-bit.
+        let vm = DequantPlan::resolve(2, &BinSpec::int2_vm(0.9, 2.1).unwrap());
+        let codes: Vec<u8> = (0..40).map(|i| (i % 4) as u8).collect();
+        let packed = pack_codes(&codes, 2).unwrap();
+        let mut expect = vec![0f32; 40];
+        dequantize_block(&vm, -0.5, 2.0, &codes, &mut expect);
+        let mut fused = vec![0f32; 40];
+        unpack_dequantize_block(&vm, -0.5, 2.0, &packed, 0, &mut fused);
+        assert_eq!(fused, expect);
+        let wide_bounds: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let wide = DequantPlan::resolve(8, &BinSpec::NonUniform(wide_bounds));
+        let codes: Vec<u8> = (0..64).map(|i| (i * 4) as u8).collect();
+        let mut expect = vec![0f32; 64];
+        dequantize_block(&wide, 0.0, 3.0, &codes, &mut expect);
+        let mut fused = vec![0f32; 64];
+        unpack_dequantize_block(&wide, 0.0, 3.0, &codes, 0, &mut fused);
+        assert_eq!(fused, expect);
+    }
+
+    #[test]
+    fn prepped_nonuniform_sr_stays_unbiased_and_in_bin() {
+        // The binary-search + inverse-width SR path must stay unbiased
+        // (Appendix A) and always land on one of the two boundaries
+        // enclosing h.
+        let bins = BinSpec::NonUniform(vec![
+            0.0, 0.31, 1.07, 1.55, 2.9, 3.3, 4.9, 5.5, 6.1, 6.6, 7.1, 7.9, 9.4, 11.0, 13.2,
+            15.0,
+        ]);
+        let plan = QuantPlan::resolve(4, &bins, 8).unwrap();
+        let boundaries = plan.boundaries.clone();
+        let block = [0.0f32, 0.11, 0.5, 0.73, 0.99, 1.0, 0.42, 0.887];
+        // block maps onto [0, 15] via (v - lo) * 15 / range with lo=0.
+        let mut rng = Pcg64::new(0xA15);
+        let mut sums = [0f64; 8];
+        let trials = 60_000;
+        for _ in 0..trials {
+            let mut codes = [0u8; 8];
+            quantize_block(&plan, &block, &mut codes, &mut rng);
+            for (s, &c) in sums.iter_mut().zip(&codes) {
+                assert!((c as usize) < boundaries.len());
+                *s += boundaries[c as usize];
+            }
+        }
+        for (k, (&v, s)) in block.iter().zip(&sums).enumerate() {
+            let h = v as f64 * 15.0; // lo = 0, range = 1
+            let mean = s / trials as f64;
+            assert!(
+                (mean - h).abs() < 0.05,
+                "scalar {k}: E[SR]={mean} vs h={h}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Property suite for the word-parallel codec (ISSUE 5).
+//!
+//! The SWAR pack/unpack folds, the fused `quantize_pack_block`
+//! (stochastic rounding straight into packed bytes) and the fused
+//! `unpack_dequantize_block` (packed bytes → `f32` through per-block
+//! value LUTs) must be **bit-identical** to the pre-fusion two-pass
+//! codec kept in `iexact::quant::reference` — at every width (1/2/4/8),
+//! on ragged tails, constant blocks, non-uniform bins, heterogeneous
+//! `BitPlan`s, and at every thread count (1/2/4/7). The suite also
+//! proves the structural claim: the fused paths draw **no** byte
+//! scratch from the `BufferPool` (the `max_byte_take` stat), so the
+//! intermediate `u8` code buffer is gone, not merely recycled.
+
+use iexact::alloc::BitPlan;
+use iexact::engine::QuantEngine;
+use iexact::graph::CsrMatrix;
+use iexact::memory::BufferPool;
+use iexact::quant::{reference, BinSpec};
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
+
+/// The thread counts the acceptance criteria name.
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.next_f32() * 4.0 - 2.0)
+}
+
+#[test]
+fn swar_pack_unpack_matches_naive_reference() {
+    let mut rng = Pcg64::new(0xC0DE);
+    for bits in [1u32, 2, 4, 8] {
+        let max = (1u32 << bits) as u64;
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 17, 31, 64, 100, 333] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+            let swar = iexact::quant::pack_codes(&codes, bits).unwrap();
+            let naive = reference::pack_codes(&codes, bits).unwrap();
+            assert_eq!(swar, naive, "pack bits={bits} n={n}");
+            assert_eq!(
+                iexact::quant::unpack_codes(&swar, bits, n).unwrap(),
+                reference::unpack_codes(&naive, bits, n).unwrap(),
+                "unpack bits={bits} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_fixed_width_matches_reference_at_every_thread_count() {
+    // Aligned group lengths ride the fused quantize-pack path; the
+    // non-aligned ones exercise the two-pass fallback. Both must equal
+    // the serial reference byte-for-byte, and so must the fused
+    // dequantize, at every width and thread count. 527 = 17·31 scalars
+    // leaves a ragged final block for every group length here.
+    let h = sample_matrix(17, 31, 0xBEE);
+    for bits in [1u32, 2, 4, 8] {
+        for group_len in [8usize, 20, 7, 64] {
+            let seed = 0x5EED ^ ((bits as u64) << 8) ^ (group_len as u64);
+            let want = reference::quantize_grouped_seeded(
+                &h,
+                group_len,
+                bits,
+                &BinSpec::Uniform,
+                seed,
+            )
+            .unwrap();
+            let want_deq = reference::dequantize(&want).unwrap();
+            for threads in THREAD_COUNTS {
+                let engine = QuantEngine::with_threads(threads);
+                let got = engine
+                    .quantize_seeded(&h, group_len, bits, &BinSpec::Uniform, seed)
+                    .unwrap();
+                assert_eq!(
+                    got.packed, want.packed,
+                    "packed bits={bits} G={group_len} t={threads}"
+                );
+                assert_eq!(got.zeros, want.zeros);
+                assert_eq!(got.ranges, want.ranges);
+                let deq = engine.dequantize(&got).unwrap();
+                assert_eq!(
+                    deq.as_slice(),
+                    want_deq.as_slice(),
+                    "dequant bits={bits} G={group_len} t={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_vm_bins_match_reference() {
+    let h = sample_matrix(24, 16, 0xFACE);
+    let bins = BinSpec::int2_vm(1.2, 1.8).unwrap();
+    let want = reference::quantize_grouped_seeded(&h, 32, 2, &bins, 99).unwrap();
+    let want_deq = reference::dequantize(&want).unwrap();
+    for threads in THREAD_COUNTS {
+        let engine = QuantEngine::with_threads(threads);
+        let got = engine.quantize_seeded(&h, 32, 2, &bins, 99).unwrap();
+        assert_eq!(got.packed, want.packed, "t={threads}");
+        assert_eq!(
+            engine.dequantize(&got).unwrap().as_slice(),
+            want_deq.as_slice(),
+            "t={threads}"
+        );
+    }
+}
+
+#[test]
+fn constant_blocks_stay_exact_under_fusion() {
+    // A constant tensor must pack to all-zero codes and dequantize back
+    // to the constant exactly — the zero-fill path of the fused packer.
+    let h = Matrix::from_fn(9, 14, |_, _| -1.25);
+    for bits in [1u32, 2, 4, 8] {
+        for group_len in [8usize, 9, 126] {
+            let want =
+                reference::quantize_grouped_seeded(&h, group_len, bits, &BinSpec::Uniform, 1)
+                    .unwrap();
+            let got = QuantEngine::with_threads(4)
+                .quantize_seeded(&h, group_len, bits, &BinSpec::Uniform, 1)
+                .unwrap();
+            assert_eq!(got.packed, want.packed, "bits={bits} G={group_len}");
+            assert!(got.packed.iter().all(|&b| b == 0));
+            let deq = got.dequantize().unwrap();
+            assert_eq!(deq.as_slice(), h.as_slice(), "bits={bits} G={group_len}");
+        }
+    }
+}
+
+/// A deliberately adversarial plan: every width, ragged final block.
+fn hetero_plan(num_blocks: usize, group_len: usize, seed: u64) -> BitPlan {
+    let mut rng = Pcg64::new(seed);
+    let bits: Vec<u8> = (0..num_blocks)
+        .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+        .collect();
+    BitPlan::new(bits, group_len).unwrap()
+}
+
+#[test]
+fn fused_planned_matches_reference_at_every_thread_count() {
+    // 1221 scalars at G=100 → 13 blocks, final block ragged (21).
+    let h = sample_matrix(33, 37, 0xDEC0);
+    let plan = hetero_plan(13, 100, 7);
+    let want = reference::quantize_planned_seeded(&h, &plan, 0xfeed).unwrap();
+    let want_deq = reference::dequantize_planned(&want).unwrap();
+    for threads in THREAD_COUNTS {
+        let engine = QuantEngine::with_threads(threads);
+        let got = engine.quantize_planned_seeded(&h, &plan, 0xfeed).unwrap();
+        assert_eq!(got.packed, want.packed, "t={threads}");
+        assert_eq!(got.zeros, want.zeros, "t={threads}");
+        assert_eq!(got.ranges, want.ranges, "t={threads}");
+        let deq = engine.dequantize_planned(&got).unwrap();
+        assert_eq!(deq.as_slice(), want_deq.as_slice(), "t={threads}");
+    }
+}
+
+#[test]
+fn fused_planned_uniform_plan_equals_fixed_width_bytes() {
+    // A constant-width plan and the fixed-width engine must agree on
+    // every byte — the two packers share one layout.
+    let h = sample_matrix(32, 16, 0xAB);
+    for bits in [1u32, 2, 4, 8] {
+        let plan = BitPlan::uniform(bits, 16, 32).unwrap();
+        let planned = QuantEngine::with_threads(3)
+            .quantize_planned_seeded(&h, &plan, 5)
+            .unwrap();
+        let fixed = QuantEngine::serial()
+            .quantize_seeded(&h, 32, bits, &BinSpec::Uniform, 5)
+            .unwrap();
+        assert_eq!(planned.packed, fixed.packed, "bits={bits}");
+        assert_eq!(planned.zeros, fixed.zeros, "bits={bits}");
+    }
+}
+
+fn ring_adjacency(n: usize) -> CsrMatrix {
+    let mut edges = Vec::new();
+    for i in 0..n {
+        edges.push((i, (i + 1) % n, 0.5f32));
+        edges.push((i, (i + 11) % n, 0.25f32));
+        edges.push((i, i, 1.0f32));
+    }
+    CsrMatrix::from_edges(n, &edges).unwrap()
+}
+
+#[test]
+fn dequantize_paths_draw_no_byte_scratch() {
+    // The structural claim of the fusion: pure decode paths never take
+    // a byte buffer from the pool — the decode→codes→floats double pass
+    // is gone. (Float draws stay tile-bounded, as runtime_parity pins.)
+    let n = 64;
+    let r_dim = 16;
+    let h = sample_matrix(n, r_dim, 0xD00D);
+    let glen = 2 * r_dim;
+    let plan = hetero_plan(n * r_dim / glen, glen, 3);
+    let engine = QuantEngine::with_threads(4);
+    let pt = engine.quantize_planned_seeded(&h, &plan, 11).unwrap();
+    let ct = engine
+        .quantize_seeded(&h, glen, 2, &BinSpec::Uniform, 11)
+        .unwrap();
+    let operand = sample_matrix(r_dim, 8, 0xD00E);
+    let adj = ring_adjacency(n);
+
+    let mut pool = BufferPool::new();
+    let _ = engine.dequantize_pooled(&ct, &mut pool).unwrap();
+    assert_eq!(pool.stats().max_byte_take, 0, "fixed dequantize");
+
+    let mut pool = BufferPool::new();
+    let _ = engine.dequantize_planned_pooled(&pt, &mut pool).unwrap();
+    assert_eq!(pool.stats().max_byte_take, 0, "planned dequantize");
+
+    let mut pool = BufferPool::new();
+    let _ = engine.dequantize_matmul(&ct, &operand, &mut pool).unwrap();
+    assert_eq!(pool.stats().max_byte_take, 0, "fused matmul");
+    assert!(pool.stats().max_float_take <= glen);
+
+    let mut pool = BufferPool::new();
+    let _ = engine
+        .dequantize_matmul_planned(&pt, &operand, &mut pool)
+        .unwrap();
+    assert_eq!(pool.stats().max_byte_take, 0, "fused planned matmul");
+
+    let mut pool = BufferPool::new();
+    let _ = engine.dequantize_spmm_planned(&adj, &pt, &mut pool).unwrap();
+    assert_eq!(pool.stats().max_byte_take, 0, "fused spmm");
+    assert!(pool.stats().max_float_take <= glen);
+}
+
+#[test]
+fn quantize_draws_only_the_packed_buffer() {
+    // On the quantize side the pool's sole byte take is the packed
+    // output — 4× smaller than the scalar count at INT2, which is only
+    // possible if no full-size code scratch exists.
+    let h = sample_matrix(64, 16, 0xF00);
+    let n = 64 * 16;
+    let engine = QuantEngine::with_threads(4);
+
+    let mut pool = BufferPool::new();
+    let mut rng = Pcg64::new(1);
+    let ct = engine
+        .quantize_pooled(&h, 32, 2, &BinSpec::Uniform, &mut rng, &mut pool)
+        .unwrap();
+    assert_eq!(ct.packed.len(), n / 4);
+    assert_eq!(pool.stats().max_byte_take, n / 4, "{:?}", pool.stats());
+
+    let mut pool = BufferPool::new();
+    let plan = BitPlan::uniform(2, n / 32, 32).unwrap();
+    let mut rng = Pcg64::new(2);
+    let pt = engine
+        .quantize_planned_pooled(&h, &plan, &mut rng, &mut pool)
+        .unwrap();
+    assert_eq!(pt.packed.len(), n / 4);
+    assert_eq!(pool.stats().max_byte_take, n / 4, "{:?}", pool.stats());
+}
+
+#[test]
+fn fallback_two_pass_path_still_recycles_scratch() {
+    // Non-byte-aligned fixed-width groups (G·bits % 8 ≠ 0) take the
+    // two-pass fallback: it still draws (and returns) the n-byte code
+    // scratch, and stays bit-identical to the reference.
+    let h = sample_matrix(10, 10, 0xF01);
+    let engine = QuantEngine::serial();
+    let mut pool = BufferPool::new();
+    let mut rng = Pcg64::new(3);
+    let seed_probe = Pcg64::new(3).next_u64();
+    let ct = engine
+        .quantize_pooled(&h, 7, 2, &BinSpec::Uniform, &mut rng, &mut pool)
+        .unwrap();
+    assert_eq!(pool.stats().max_byte_take, 100, "{:?}", pool.stats());
+    let want = reference::quantize_grouped_seeded(&h, 7, 2, &BinSpec::Uniform, seed_probe).unwrap();
+    assert_eq!(ct.packed, want.packed);
+    assert_eq!(ct.zeros, want.zeros);
+}
