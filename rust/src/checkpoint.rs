@@ -128,15 +128,15 @@ pub struct TrainState {
     pub plans: Option<Vec<BitPlan>>,
 }
 
-fn write_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn write_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn write_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn write_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn write_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+pub(crate) fn write_matrix(buf: &mut Vec<u8>, m: &Matrix) {
     write_u64(buf, m.rows() as u64);
     write_u64(buf, m.cols() as u64);
     for &v in m.as_slice() {
@@ -194,14 +194,21 @@ pub fn save_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-struct Reader<'a> {
-    cur: &'a [u8],
+/// Bounds-checked cursor over a serialized artifact body. Shared with
+/// the out-of-core chunk store ([`crate::partition::PartitionStore`])
+/// and the cache spill files ([`crate::memory::ActivationCache`]), so
+/// every on-disk format in the crate reads through the same take/decode
+/// idioms. The truncation error carries `what` (e.g. "checkpoint",
+/// "chunk") so a short read names the artifact kind it happened in.
+pub(crate) struct Reader<'a> {
+    pub(crate) cur: &'a [u8],
+    pub(crate) what: &'static str,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.cur.len() < n {
-            return Err(Error::Artifact("checkpoint truncated".into()));
+            return Err(Error::Artifact(format!("{} truncated", self.what)));
         }
         let cur: &'a [u8] = self.cur;
         let (head, rest) = cur.split_at(n);
@@ -209,23 +216,23 @@ impl<'a> Reader<'a> {
         Ok(head)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn byte(&mut self) -> Result<u8> {
+    pub(crate) fn byte(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn matrix(&mut self) -> Result<Matrix> {
+    pub(crate) fn matrix(&mut self) -> Result<Matrix> {
         let rows = self.u64()? as usize;
         let cols = self.u64()? as usize;
         if rows.saturating_mul(cols) > (1 << 30) {
@@ -253,7 +260,10 @@ pub fn load_state(path: impl AsRef<Path>) -> Result<TrainState> {
     if fnv1a(body) != stored {
         return Err(Error::Artifact("checkpoint checksum mismatch".into()));
     }
-    let mut r = Reader { cur: body };
+    let mut r = Reader {
+        cur: body,
+        what: "checkpoint",
+    };
     if r.take(8)? != MAGIC {
         return Err(Error::Artifact("not an iexact checkpoint".into()));
     }
@@ -337,7 +347,7 @@ pub fn load_state(path: impl AsRef<Path>) -> Result<TrainState> {
 }
 
 /// FNV-1a 64-bit hash (checksum only — not cryptographic).
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

@@ -446,6 +446,81 @@ impl PartitionConfig {
     }
 }
 
+/// Out-of-core (disk-backed) partitioned training knobs — the
+/// `[out_of_core]` config section.
+///
+/// With a `spill_dir` set, [`crate::pipeline::train_partitioned`] writes
+/// the partitioned graph to a chunked on-disk store
+/// ([`crate::partition::PartitionStore`]), holds exactly one partition
+/// (plus up to `prefetch_depth` in-flight prefetched chunks) in RAM at a
+/// time, and spills cold [`ActivationCache`](crate::memory::ActivationCache)
+/// slots to the same directory. The streamed run is **bit-identical** to
+/// the in-RAM run (`tests/out_of_core_parity.rs`); out-of-core is purely
+/// a residency knob.
+///
+/// ```toml
+/// [out_of_core]
+/// spill_dir = "/tmp/iexact-spill"   # enables disk-backed training
+/// resident_budget_bytes = 67108864  # 0 = unchecked
+/// prefetch_depth = 1                # chunks decoded ahead of training
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct OutOfCoreConfig {
+    /// Directory for graph chunks and cache spill files. `None` (the
+    /// default) keeps training fully in RAM.
+    pub spill_dir: Option<String>,
+    /// Peak-resident byte budget the streamed run must fit (graph chunk
+    /// + in-flight prefetches + compressed cache + dense stash). `0`
+    /// disables the upfront feasibility check and the post-run assert.
+    pub resident_budget_bytes: usize,
+    /// Partitions decoded ahead of the one currently training (each
+    /// in-flight chunk counts against the budget). `0` defaults to 1.
+    pub prefetch_depth: usize,
+}
+
+impl OutOfCoreConfig {
+    /// More look-ahead than this buys nothing: the trainer visits
+    /// partitions in a fixed cycle and each prefetched chunk costs its
+    /// full decoded size against the resident budget.
+    pub const MAX_PREFETCH_DEPTH: usize = 8;
+
+    /// Whether disk-backed training is enabled.
+    pub fn enabled(&self) -> bool {
+        self.spill_dir.is_some()
+    }
+
+    /// The configured prefetch depth with the `0 = default` resolved.
+    pub fn depth(&self) -> usize {
+        if self.prefetch_depth == 0 {
+            1
+        } else {
+            self.prefetch_depth
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let Some(dir) = &self.spill_dir {
+            if dir.is_empty() {
+                return Err(Error::Config(
+                    "out_of_core.spill_dir must be a non-empty path".into(),
+                ));
+            }
+        } else if self.resident_budget_bytes > 0 {
+            return Err(Error::Config(
+                "out_of_core.resident_budget_bytes requires out_of_core.spill_dir".into(),
+            ));
+        }
+        if self.prefetch_depth > Self::MAX_PREFETCH_DEPTH {
+            return Err(Error::Config(format!(
+                "out_of_core.prefetch_depth must be <= {}, got {}",
+                Self::MAX_PREFETCH_DEPTH,
+                self.prefetch_depth
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -464,6 +539,8 @@ pub struct TrainConfig {
     pub allocation: AllocationConfig,
     /// Partitioned large-graph training (`[partition]`; default: off).
     pub partition: PartitionConfig,
+    /// Disk-backed partitioned training (`[out_of_core]`; default: off).
+    pub out_of_core: OutOfCoreConfig,
 }
 
 impl Default for TrainConfig {
@@ -480,6 +557,7 @@ impl Default for TrainConfig {
             parallelism: ParallelismConfig::default(),
             allocation: AllocationConfig::default(),
             partition: PartitionConfig::default(),
+            out_of_core: OutOfCoreConfig::default(),
         }
     }
 }
@@ -502,7 +580,8 @@ impl TrainConfig {
         }
         self.parallelism.validate()?;
         self.allocation.validate()?;
-        self.partition.validate()
+        self.partition.validate()?;
+        self.out_of_core.validate()
     }
 }
 
@@ -803,6 +882,33 @@ impl ExperimentConfig {
             train.partition.cache_bits = b as u32;
         }
 
+        // [out_of_core] — disk-backed partitioned training. Negative
+        // values are rejected before the usize casts (cf. [partition]).
+        if let Some(d) = t.get_str("out_of_core.spill_dir") {
+            if d.is_empty() {
+                return Err(Error::Config(
+                    "out_of_core.spill_dir must be a non-empty path".into(),
+                ));
+            }
+            train.out_of_core.spill_dir = Some(d.to_string());
+        }
+        if let Some(b) = t.get_int("out_of_core.resident_budget_bytes") {
+            if b < 0 {
+                return Err(Error::Config(format!(
+                    "out_of_core.resident_budget_bytes must be >= 0, got {b}"
+                )));
+            }
+            train.out_of_core.resident_budget_bytes = b as usize;
+        }
+        if let Some(d) = t.get_int("out_of_core.prefetch_depth") {
+            if d < 0 {
+                return Err(Error::Config(format!(
+                    "out_of_core.prefetch_depth must be >= 0, got {d}"
+                )));
+            }
+            train.out_of_core.prefetch_depth = d as usize;
+        }
+
         let cfg = ExperimentConfig {
             dataset,
             quant,
@@ -1027,6 +1133,72 @@ seeds = [0, 1]
         let cfg = ExperimentConfig::from_toml("").unwrap();
         assert_eq!(cfg.train.partition, PartitionConfig::default());
         assert_eq!(cfg.train.partition.num_partitions, 1);
+    }
+
+    #[test]
+    fn toml_out_of_core_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[out_of_core]\nspill_dir = \"/tmp/iexact-spill\"\n\
+             resident_budget_bytes = 67108864\nprefetch_depth = 2\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.out_of_core,
+            OutOfCoreConfig {
+                spill_dir: Some("/tmp/iexact-spill".into()),
+                resident_budget_bytes: 67108864,
+                prefetch_depth: 2,
+            }
+        );
+        assert!(cfg.train.out_of_core.enabled());
+        assert_eq!(cfg.train.out_of_core.depth(), 2);
+        // Defaults when the section is absent: fully in-RAM training.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.out_of_core, OutOfCoreConfig::default());
+        assert!(!cfg.train.out_of_core.enabled());
+        assert_eq!(cfg.train.out_of_core.depth(), 1, "depth 0 resolves to 1");
+    }
+
+    #[test]
+    fn out_of_core_validation_reports_key_paths() {
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        let cases: &[(&str, &str)] = &[
+            ("[out_of_core]\nspill_dir = \"\"\n", "out_of_core.spill_dir"),
+            (
+                // A budget without a spill dir would silently gate nothing.
+                "[out_of_core]\nresident_budget_bytes = 1024\n",
+                "out_of_core.resident_budget_bytes",
+            ),
+            (
+                "[out_of_core]\nresident_budget_bytes = -1\n",
+                "out_of_core.resident_budget_bytes",
+            ),
+            (
+                "[out_of_core]\nspill_dir = \"/tmp/x\"\nprefetch_depth = -1\n",
+                "out_of_core.prefetch_depth",
+            ),
+            (
+                "[out_of_core]\nspill_dir = \"/tmp/x\"\nprefetch_depth = 9\n",
+                "out_of_core.prefetch_depth",
+            ),
+        ];
+        for (toml, key) in cases {
+            assert!(
+                err(toml).contains(key),
+                "{toml:?} should mention {key}: {}",
+                err(toml)
+            );
+        }
+        // Struct-level validate mirrors the TOML layer.
+        let mut ooc = OutOfCoreConfig::default();
+        ooc.resident_budget_bytes = 1;
+        assert!(ooc.validate().is_err());
+        ooc.spill_dir = Some("/tmp/x".into());
+        ooc.validate().unwrap();
+        ooc.prefetch_depth = OutOfCoreConfig::MAX_PREFETCH_DEPTH + 1;
+        assert!(ooc.validate().is_err());
     }
 
     #[test]

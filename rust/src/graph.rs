@@ -260,6 +260,17 @@ impl Dataset {
         )
     }
 
+    /// In-RAM footprint of the dataset in bytes: CSR structure, dense
+    /// features, labels and the three split masks. The out-of-core
+    /// residency accounting ([`crate::pipeline::train_partitioned`] with
+    /// a spill dir) charges exactly this much for a loaded partition.
+    pub fn nbytes(&self) -> usize {
+        self.adj.nbytes()
+            + self.features.rows() * self.features.cols() * 4
+            + self.labels.len() * 4
+            + self.train_mask.len() * 3
+    }
+
     /// Validate internal consistency (shapes, masks disjoint, labels in
     /// range). Called by the coordinator before training.
     pub fn validate(&self) -> Result<()> {

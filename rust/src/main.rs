@@ -55,11 +55,23 @@ TRAIN OPTIONS:
                                   subgraphs with a compressed activation
                                   cache (1 = full-graph; default)
     --halo-hops <h>               h-hop boundary neighborhood per partition
+    --spill-dir <dir>             out-of-core: stream partition chunks and
+                                  cold cache slots through <dir> instead of
+                                  holding the whole PartitionSet in RAM
+    --resident-budget <bytes>     resident byte budget for --spill-dir runs
+    --prefetch-depth <n>          chunks prefetched ahead (default 1, max 8)
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
 
 PARTITION OPTIONS:
     --partitions <k>       Restrict the sweep to one partition count
     --halo-hops <h>        Halo depth for the partitioned arms (default 0)
+    --spill-dir <dir>      Out-of-core smoke instead of the sweep: stream a
+                           synthetic graph larger than --resident-budget
+                           through <dir> and fail if the measured peak
+                           residency exceeds the budget
+    --resident-budget <b>  Byte budget for the smoke (required with
+                           --spill-dir)
+    --prefetch-depth <n>   Chunks prefetched ahead (default 1)
 
 TRAIN-AOT OPTIONS:
     --artifacts <dir>      Artifact directory (default: artifacts)
@@ -252,6 +264,33 @@ fn cmd_partition(opts: &Opts) -> iexact::Result<()> {
         })?,
         None => 0,
     };
+    if let Some(dir) = opts.get("spill-dir") {
+        // Out-of-core smoke: stream a synthetic graph bigger than the
+        // budget and fail unless measured residency stays under it.
+        let budget = match opts.get("resident-budget") {
+            Some(s) => s.parse().map_err(|_| {
+                iexact::Error::Config(format!(
+                    "--resident-budget expects a byte count, got '{s}'"
+                ))
+            })?,
+            None => {
+                return Err(iexact::Error::Config(
+                    "--spill-dir requires --resident-budget <bytes>".into(),
+                ))
+            }
+        };
+        let depth = match opts.get("prefetch-depth") {
+            Some(s) => s.parse().map_err(|_| {
+                iexact::Error::Config(format!(
+                    "--prefetch-depth expects a non-negative integer, got '{s}'"
+                ))
+            })?,
+            None => 1,
+        };
+        let k = only_k.unwrap_or(8);
+        let r = partition::run_ooc(k, halo, dir, budget, depth, |line| eprintln!("{line}"))?;
+        return emit(opts, &r.render(), Some(r.to_csv()));
+    }
     let p = partition::run(effort(opts), only_k, halo, |line| eprintln!("{line}"))?;
     emit(opts, &p.render(), Some(p.to_csv()))
 }
@@ -316,6 +355,25 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         cfg.train.partition.halo_hops = h.parse().map_err(|_| {
             iexact::Error::Config(format!(
                 "--halo-hops expects a non-negative integer, got '{h}'"
+            ))
+        })?;
+    }
+    // Out-of-core streaming: --spill-dir turns it on; budget and depth
+    // refine it. Invalid values are rejected, like --threads.
+    if let Some(d) = opts.get("spill-dir") {
+        cfg.train.out_of_core.spill_dir = Some(d.clone());
+    }
+    if let Some(b) = opts.get("resident-budget") {
+        cfg.train.out_of_core.resident_budget_bytes = b.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--resident-budget expects a byte count, got '{b}'"
+            ))
+        })?;
+    }
+    if let Some(d) = opts.get("prefetch-depth") {
+        cfg.train.out_of_core.prefetch_depth = d.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--prefetch-depth expects a non-negative integer, got '{d}'"
             ))
         })?;
     }

@@ -35,11 +35,13 @@
 //! other instead of fragmenting the pool with near-miss capacities.
 
 use crate::alloc::{BitPlan, PlannedTensor};
+use crate::checkpoint::{fnv1a, write_u32, write_u64, Reader};
 use crate::config::{QuantConfig, QuantMode};
 use crate::engine::QuantEngine;
 use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
 use crate::{Error, Result};
+use std::path::{Path, PathBuf};
 
 /// Byte sizes per stored layer plus totals.
 #[derive(Debug, Clone, PartialEq)]
@@ -198,7 +200,19 @@ impl MemoryModel {
 /// park(slot, H) --quantize--> [slot: packed codes + (zero, range)]
 /// fetch(slot)   --dequant---> dense Ĥ (caller-owned, from the pool)
 /// evict(slot)   --recycle---> packed buffer returns to the BufferPool
+/// spill(slot)   --write-----> [slot: on disk; packed buffer recycled]
 /// ```
+///
+/// A cache built with [`Self::with_spill`] can additionally **spill**
+/// cold slots to disk: the packed [`BitPlan`] bytes are already the
+/// serialization format, so a spill writes them (plus metadata) to
+/// `slot-{i}.spill` verbatim and a later `fetch` reloads them
+/// **byte-exactly** — the reconstruction is bit-identical whether the
+/// slot stayed resident or round-tripped through disk. A reloaded slot
+/// stays marked `on_disk`, so re-spilling it is free (no rewrite) until
+/// the next `park` replaces its contents. Residency accounting counts a
+/// reloaded slot at full weight again (see
+/// [`crate::pipeline::PartitionTrainResult::peak_resident_bytes`]).
 ///
 /// ```
 /// use iexact::alloc::BitPlan;
@@ -221,10 +235,30 @@ impl MemoryModel {
 /// ```
 #[derive(Debug)]
 pub struct ActivationCache {
-    slots: Vec<Option<PlannedTensor>>,
+    slots: Vec<Slot>,
     seed: u64,
+    spill_dir: Option<PathBuf>,
     parks: u64,
     fetches: u64,
+    spills: u64,
+    reloads: u64,
+}
+
+/// One cache slot's state. `Resident { on_disk: true }` means the slot
+/// was spilled and reloaded — its bytes are in RAM *and* valid on disk,
+/// so re-spilling it frees the RAM without rewriting the file.
+#[derive(Debug)]
+enum Slot {
+    Empty,
+    Resident { pt: PlannedTensor, on_disk: bool },
+    Spilled { nbytes: usize, shape: (usize, usize) },
+}
+
+const SPILL_MAGIC: &[u8; 8] = b"IEXACSPL";
+const SPILL_VERSION: u32 = 1;
+
+fn spill_err(path: &Path, msg: impl std::fmt::Display) -> Error {
+    Error::Artifact(format!("out_of_core: {}: {msg}", path.display()))
 }
 
 impl ActivationCache {
@@ -232,20 +266,70 @@ impl ActivationCache {
     /// quantization stream.
     pub fn new(num_slots: usize, seed: u64) -> Self {
         ActivationCache {
-            slots: (0..num_slots).map(|_| None).collect(),
+            slots: (0..num_slots).map(|_| Slot::Empty).collect(),
             seed,
+            spill_dir: None,
             parks: 0,
             fetches: 0,
+            spills: 0,
+            reloads: 0,
         }
+    }
+
+    /// A cache that can [`spill`](Self::spill) cold slots to
+    /// `dir/slot-{i}.spill` (the directory is created if missing).
+    ///
+    /// ```
+    /// use iexact::alloc::BitPlan;
+    /// use iexact::engine::QuantEngine;
+    /// use iexact::memory::{ActivationCache, BufferPool};
+    /// use iexact::tensor::Matrix;
+    ///
+    /// let dir = std::env::temp_dir().join(format!("iexact_doc_spill_{}", std::process::id()));
+    /// let engine = QuantEngine::serial();
+    /// let mut pool = BufferPool::new();
+    /// let mut cache = ActivationCache::with_spill(1, 42, &dir).unwrap();
+    /// let h = Matrix::from_fn(8, 16, |r, c| (r * 16 + c) as f32 / 128.0);
+    /// let plan = BitPlan::uniform(2, 8, 16).unwrap();
+    /// cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+    /// let direct = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+    /// assert!(cache.spill(0, &mut pool).unwrap());
+    /// assert_eq!(cache.resident_bytes(), 0);
+    /// assert!(cache.spilled_bytes() > 0);
+    /// // A fetch reloads the slot byte-exactly: same reconstruction.
+    /// let reloaded = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+    /// assert_eq!(direct.as_slice(), reloaded.as_slice());
+    /// assert!(cache.resident_bytes() > 0, "reloaded slot counts as resident again");
+    /// std::fs::remove_dir_all(&dir).ok();
+    /// ```
+    pub fn with_spill(num_slots: usize, seed: u64, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| spill_err(dir, format!("cannot create spill dir: {e}")))?;
+        let mut cache = Self::new(num_slots, seed);
+        cache.spill_dir = Some(dir.to_path_buf());
+        Ok(cache)
+    }
+
+    /// The spill directory, if this cache was built with one.
+    pub fn spill_dir(&self) -> Option<&Path> {
+        self.spill_dir.as_deref()
+    }
+
+    fn spill_path(&self, slot: usize) -> Option<PathBuf> {
+        self.spill_dir.as_ref().map(|d| d.join(format!("slot-{slot}.spill")))
     }
 
     pub fn num_slots(&self) -> usize {
         self.slots.len()
     }
 
-    /// Occupied slots.
+    /// Occupied slots (resident or spilled).
     pub fn occupied(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.slots
+            .iter()
+            .filter(|s| !matches!(s, Slot::Empty))
+            .count()
     }
 
     /// Quantize `h` under `plan` into `slot`, replacing (and recycling)
@@ -265,54 +349,186 @@ impl ActivationCache {
                 self.slots.len()
             )));
         }
-        let seed = Pcg64::with_stream(self.seed, slot as u64).next_u64();
         // Recycle the outgoing occupant's packed buffer first so the new
-        // park can draw it straight back out of the pool.
-        if let Some(old) = self.slots[slot].take() {
-            pool.put_bytes(old.packed);
+        // park can draw it straight back out of the pool. Any on-disk
+        // copy is now stale: remove it best-effort (a failed remove is
+        // harmless — the slot is no longer marked on_disk).
+        match std::mem::replace(&mut self.slots[slot], Slot::Empty) {
+            Slot::Resident { pt, on_disk } => {
+                pool.put_bytes(pt.packed);
+                if on_disk {
+                    if let Some(p) = self.spill_path(slot) {
+                        std::fs::remove_file(p).ok();
+                    }
+                }
+            }
+            Slot::Spilled { .. } => {
+                if let Some(p) = self.spill_path(slot) {
+                    std::fs::remove_file(p).ok();
+                }
+            }
+            Slot::Empty => {}
         }
+        let seed = Pcg64::with_stream(self.seed, slot as u64).next_u64();
         let pt = engine.quantize_planned_seeded_pooled(h, plan, seed, pool)?;
-        self.slots[slot] = Some(pt);
+        self.slots[slot] = Slot::Resident { pt, on_disk: false };
         self.parks += 1;
         Ok(())
     }
 
     /// Dequantize the tensor parked in `slot` (None if the slot is
-    /// empty). The returned dense matrix is drawn from `pool`; callers
-    /// should `put_floats` it back when done.
+    /// empty). A spilled slot is reloaded from disk first — byte-exactly,
+    /// so the reconstruction is identical to a never-spilled fetch — and
+    /// stays resident (counted by [`Self::resident_bytes`] again) until
+    /// the next [`Self::spill`]. The returned dense matrix is drawn from
+    /// `pool`; callers should `put_floats` it back when done.
     pub fn fetch(
         &mut self,
         slot: usize,
         engine: &QuantEngine,
         pool: &mut BufferPool,
     ) -> Result<Option<Matrix>> {
-        let Some(pt) = self.slots.get(slot).and_then(|s| s.as_ref()) else {
-            return Ok(None);
+        match self.slots.get(slot) {
+            None | Some(Slot::Empty) => return Ok(None),
+            Some(Slot::Spilled { .. }) => self.reload(slot, pool)?,
+            Some(Slot::Resident { .. }) => {}
+        }
+        let Slot::Resident { pt, .. } = &self.slots[slot] else {
+            unreachable!("slot is resident after reload");
         };
         self.fetches += 1;
         Ok(Some(engine.dequantize_planned_pooled(pt, pool)?))
     }
 
-    /// Shape of the tensor parked in `slot`, if any.
-    pub fn shape(&self, slot: usize) -> Option<(usize, usize)> {
-        self.slots.get(slot).and_then(|s| s.as_ref()).map(|pt| pt.shape)
+    /// Write `slot`'s packed bytes to disk and free its RAM (the packed
+    /// buffer recycles through `pool`). Returns `true` if the slot went
+    /// from resident to spilled, `false` if it was empty or already
+    /// spilled. A slot that was reloaded from disk (`on_disk`) is freed
+    /// without rewriting its file. Errors if the cache has no spill dir
+    /// or the write fails (the slot stays resident in that case).
+    pub fn spill(&mut self, slot: usize, pool: &mut BufferPool) -> Result<bool> {
+        if slot >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "cache slot {slot} out of range {}",
+                self.slots.len()
+            )));
+        }
+        if !matches!(self.slots[slot], Slot::Resident { .. }) {
+            return Ok(false);
+        }
+        let Some(path) = self.spill_path(slot) else {
+            return Err(Error::Config(
+                "activation cache has no spill dir (build it with with_spill)".into(),
+            ));
+        };
+        let Slot::Resident { pt, on_disk } =
+            std::mem::replace(&mut self.slots[slot], Slot::Empty)
+        else {
+            unreachable!("checked resident above");
+        };
+        if !on_disk {
+            let body = encode_spill(slot, &pt);
+            let checksum = fnv1a(&body);
+            let mut buf = body;
+            buf.extend_from_slice(&checksum.to_le_bytes());
+            if let Err(e) = std::fs::write(&path, &buf) {
+                // Leave the slot resident so the caller can keep training
+                // (or surface the error) without losing the activation.
+                self.slots[slot] = Slot::Resident { pt, on_disk: false };
+                return Err(spill_err(&path, format!("spill write failed: {e}")));
+            }
+        }
+        let nbytes = pt.nbytes();
+        let shape = pt.shape;
+        pool.put_bytes(pt.packed);
+        self.slots[slot] = Slot::Spilled { nbytes, shape };
+        self.spills += 1;
+        Ok(true)
     }
 
-    /// Drop `slot`'s occupant, returning its packed buffer to the pool.
-    pub fn evict(&mut self, slot: usize, pool: &mut BufferPool) {
-        if let Some(pt) = self.slots.get_mut(slot).and_then(|s| s.take()) {
+    /// Reload a spilled slot's bytes from disk into RAM (byte-exact).
+    fn reload(&mut self, slot: usize, pool: &mut BufferPool) -> Result<()> {
+        let path = self
+            .spill_path(slot)
+            .ok_or_else(|| Error::Config("activation cache has no spill dir".into()))?;
+        let Slot::Spilled { nbytes, shape } = self.slots[slot] else {
+            return Ok(());
+        };
+        let pt = decode_spill(&path, slot, pool)?;
+        if pt.nbytes() != nbytes || pt.shape != shape {
             pool.put_bytes(pt.packed);
+            return Err(spill_err(
+                &path,
+                format!(
+                    "spill file decodes to {:?}/{} bytes, slot expects {:?}/{}",
+                    pt.shape,
+                    pt.nbytes(),
+                    shape,
+                    nbytes
+                ),
+            ));
+        }
+        self.slots[slot] = Slot::Resident { pt, on_disk: true };
+        self.reloads += 1;
+        Ok(())
+    }
+
+    /// Shape of the tensor parked in `slot` (resident or spilled), if any.
+    pub fn shape(&self, slot: usize) -> Option<(usize, usize)> {
+        match self.slots.get(slot)? {
+            Slot::Empty => None,
+            Slot::Resident { pt, .. } => Some(pt.shape),
+            Slot::Spilled { shape, .. } => Some(*shape),
         }
     }
 
-    /// Compressed bytes currently parked across all slots (packed codes
-    /// plus FP32 metadata) — the cache's contribution to peak-resident
-    /// activation memory.
+    /// Drop `slot`'s occupant, returning its packed buffer to the pool
+    /// and removing any spill file (best-effort).
+    pub fn evict(&mut self, slot: usize, pool: &mut BufferPool) {
+        let Some(s) = self.slots.get_mut(slot) else {
+            return;
+        };
+        match std::mem::replace(s, Slot::Empty) {
+            Slot::Resident { pt, on_disk } => {
+                pool.put_bytes(pt.packed);
+                if on_disk {
+                    if let Some(p) = self.spill_path(slot) {
+                        std::fs::remove_file(p).ok();
+                    }
+                }
+            }
+            Slot::Spilled { .. } => {
+                if let Some(p) = self.spill_path(slot) {
+                    std::fs::remove_file(p).ok();
+                }
+            }
+            Slot::Empty => {}
+        }
+    }
+
+    /// Compressed bytes currently parked **in RAM** across all slots
+    /// (packed codes plus FP32 metadata) — the cache's contribution to
+    /// peak-resident activation memory. Spilled slots contribute zero;
+    /// a spilled-then-reloaded slot counts at full weight again.
     pub fn resident_bytes(&self) -> usize {
         self.slots
             .iter()
-            .flatten()
-            .map(|pt| pt.nbytes())
+            .map(|s| match s {
+                Slot::Resident { pt, .. } => pt.nbytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Compressed bytes currently parked **on disk** (spilled slots only;
+    /// a reloaded slot's on-disk copy is not double-counted here).
+    pub fn spilled_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Spilled { nbytes, .. } => *nbytes,
+                _ => 0,
+            })
             .sum()
     }
 
@@ -320,6 +536,117 @@ impl ActivationCache {
     pub fn stats(&self) -> (u64, u64) {
         (self.parks, self.fetches)
     }
+
+    /// `(spills, reloads)` counters: slots written out (or dropped to an
+    /// existing on-disk copy) and slots read back in.
+    pub fn spill_stats(&self) -> (u64, u64) {
+        (self.spills, self.reloads)
+    }
+}
+
+fn encode_spill(slot: usize, pt: &PlannedTensor) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::with_capacity(64 + pt.nbytes() + pt.plan.num_blocks());
+    buf.extend_from_slice(SPILL_MAGIC);
+    write_u32(&mut buf, SPILL_VERSION);
+    write_u64(&mut buf, slot as u64);
+    write_u64(&mut buf, pt.shape.0 as u64);
+    write_u64(&mut buf, pt.shape.1 as u64);
+    write_u64(&mut buf, pt.plan.group_len() as u64);
+    write_u64(&mut buf, pt.plan.num_blocks() as u64);
+    buf.extend_from_slice(pt.plan.bits());
+    write_u64(&mut buf, pt.zeros.len() as u64);
+    for &z in &pt.zeros {
+        buf.extend_from_slice(&z.to_le_bytes());
+    }
+    write_u64(&mut buf, pt.ranges.len() as u64);
+    for &r in &pt.ranges {
+        buf.extend_from_slice(&r.to_le_bytes());
+    }
+    write_u64(&mut buf, pt.packed.len() as u64);
+    buf.extend_from_slice(&pt.packed);
+    buf
+}
+
+fn decode_spill(path: &Path, slot: usize, pool: &mut BufferPool) -> Result<PlannedTensor> {
+    const MAX_COUNT: usize = 1 << 30;
+    let bytes = std::fs::read(path)
+        .map_err(|e| spill_err(path, format!("cannot read spill file: {e}")))?;
+    if bytes.len() < SPILL_MAGIC.len() + 8 {
+        return Err(spill_err(path, "spill file too short"));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        return Err(spill_err(path, "spill checksum mismatch"));
+    }
+    let mut r = Reader {
+        cur: body,
+        what: "spill file",
+    };
+    if r.take(8)? != SPILL_MAGIC {
+        return Err(spill_err(path, "not an iexact spill file"));
+    }
+    let version = r.u32()?;
+    if version != SPILL_VERSION {
+        return Err(spill_err(
+            path,
+            format!("unsupported spill version {version} (expected {SPILL_VERSION})"),
+        ));
+    }
+    let stored_slot = r.u64()? as usize;
+    if stored_slot != slot {
+        return Err(spill_err(
+            path,
+            format!("spill file is for slot {stored_slot}, expected {slot}"),
+        ));
+    }
+    let rows = r.u64()? as usize;
+    let cols = r.u64()? as usize;
+    let group_len = r.u64()? as usize;
+    let num_blocks = r.u64()? as usize;
+    if num_blocks > MAX_COUNT {
+        return Err(spill_err(path, format!("bad block count {num_blocks}")));
+    }
+    let bits = r.take(num_blocks)?.to_vec();
+    let plan = BitPlan::new(bits, group_len)
+        .map_err(|e| spill_err(path, format!("bad bit plan: {e}")))?;
+    let n_zeros = r.u64()? as usize;
+    if n_zeros > MAX_COUNT {
+        return Err(spill_err(path, format!("bad zeros count {n_zeros}")));
+    }
+    let zeros: Vec<f32> = r
+        .take(n_zeros * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let n_ranges = r.u64()? as usize;
+    if n_ranges > MAX_COUNT {
+        return Err(spill_err(path, format!("bad ranges count {n_ranges}")));
+    }
+    let ranges: Vec<f32> = r
+        .take(n_ranges * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let n_packed = r.u64()? as usize;
+    if n_packed > MAX_COUNT {
+        return Err(spill_err(path, format!("bad packed length {n_packed}")));
+    }
+    let raw = r.take(n_packed)?;
+    if !r.cur.is_empty() {
+        return Err(spill_err(path, "trailing bytes in spill file"));
+    }
+    // Draw the packed buffer from the pool — the reload sits on the same
+    // steady-state recycling path as a fresh park.
+    let mut packed = pool.take_bytes_scratch(n_packed);
+    packed.copy_from_slice(raw);
+    Ok(PlannedTensor {
+        packed,
+        zeros,
+        ranges,
+        shape: (rows, cols),
+        plan,
+    })
 }
 
 /// Capacity class of a requested buffer length: the next power of two
@@ -856,6 +1183,111 @@ mod tests {
         let (parks, fetches) = cache.stats();
         assert_eq!(parks, 2);
         assert!(fetches >= 1);
+    }
+
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("iexact_spill_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn spill_reload_is_byte_exact_and_accounted() {
+        let dir = spill_dir("roundtrip");
+        let mut rng = Pcg64::new(11);
+        let h = Matrix::from_fn(16, 32, |_, _| rng.next_f32() * 2.0 - 1.0);
+        let plan = crate::alloc::BitPlan::new(
+            (0..16).map(|g| [1u8, 2, 4, 8][g % 4]).collect(),
+            32,
+        )
+        .unwrap();
+        let engine = crate::engine::QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        let mut cache = ActivationCache::with_spill(2, 3, &dir).unwrap();
+        cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+        let direct = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+        let resident = cache.resident_bytes();
+
+        assert!(cache.spill(0, &mut pool).unwrap());
+        assert_eq!(cache.resident_bytes(), 0);
+        assert_eq!(cache.spilled_bytes(), resident);
+        assert_eq!(cache.occupied(), 1, "spilled slot still counts occupied");
+        assert_eq!(cache.shape(0), Some((16, 32)));
+        // Spilling an empty or already-spilled slot is a no-op.
+        assert!(!cache.spill(1, &mut pool).unwrap());
+        assert!(!cache.spill(0, &mut pool).unwrap());
+
+        // Reload: identical reconstruction, residency counts again.
+        let reloaded = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+        assert_eq!(direct.as_slice(), reloaded.as_slice());
+        assert_eq!(cache.resident_bytes(), resident);
+        assert_eq!(cache.spilled_bytes(), 0);
+        // Re-spilling a reloaded slot needs no rewrite but frees RAM.
+        let mtime = std::fs::metadata(dir.join("slot-0.spill")).unwrap().modified().unwrap();
+        assert!(cache.spill(0, &mut pool).unwrap());
+        assert_eq!(cache.resident_bytes(), 0);
+        assert_eq!(
+            std::fs::metadata(dir.join("slot-0.spill")).unwrap().modified().unwrap(),
+            mtime,
+            "re-spill of an on-disk slot must not rewrite the file"
+        );
+        let (spills, reloads) = cache.spill_stats();
+        assert_eq!((spills, reloads), (2, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_without_dir_errors_and_faults_are_named() {
+        let h = Matrix::from_fn(4, 8, |r, c| (r + c) as f32);
+        let plan = crate::alloc::BitPlan::uniform(2, 4, 8).unwrap();
+        let engine = crate::engine::QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        // No spill dir: spill errors, the slot stays resident.
+        let mut cache = ActivationCache::new(1, 1);
+        cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+        assert!(cache.spill(0, &mut pool).is_err());
+        assert!(cache.resident_bytes() > 0);
+
+        // Corrupt spill file: reload must fail with a path-named error.
+        let dir = spill_dir("corrupt");
+        let mut cache = ActivationCache::with_spill(1, 1, &dir).unwrap();
+        cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+        cache.spill(0, &mut pool).unwrap();
+        let p = dir.join("slot-0.spill");
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = cache.fetch(0, &engine, &mut pool).unwrap_err();
+        assert!(
+            err.to_string().contains("slot-0.spill"),
+            "error must name the spill file: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn park_invalidates_stale_spill_file() {
+        let dir = spill_dir("stale");
+        let h = Matrix::from_fn(4, 8, |r, c| (r + c) as f32);
+        let h2 = Matrix::from_fn(4, 8, |r, c| (r * 2 + c) as f32);
+        let plan = crate::alloc::BitPlan::uniform(2, 4, 8).unwrap();
+        let engine = crate::engine::QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        let mut cache = ActivationCache::with_spill(1, 1, &dir).unwrap();
+        cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+        cache.spill(0, &mut pool).unwrap();
+        // Re-park over the spilled slot: the old file must not resurface.
+        cache.park(0, &h2, &plan, &engine, &mut pool).unwrap();
+        assert!(!dir.join("slot-0.spill").exists());
+        cache.spill(0, &mut pool).unwrap();
+        let direct = {
+            let mut fresh = ActivationCache::with_spill(1, 1, spill_dir("stale_ref")).unwrap();
+            fresh.park(0, &h2, &plan, &engine, &mut pool).unwrap();
+            fresh.fetch(0, &engine, &mut pool).unwrap().unwrap()
+        };
+        let reloaded = cache.fetch(0, &engine, &mut pool).unwrap().unwrap();
+        assert_eq!(direct.as_slice(), reloaded.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(spill_dir("stale_ref")).ok();
     }
 
     #[test]

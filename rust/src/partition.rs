@@ -36,9 +36,12 @@
 //! }
 //! ```
 
-use crate::graph::Dataset;
+use crate::checkpoint::{fnv1a, write_u32, write_u64, write_matrix, Reader};
+use crate::graph::{CsrMatrix, Dataset};
 use crate::sampling::induce;
 use crate::{Error, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 /// One induced partition: its core node set, halo (boundary) node set,
 /// and the induced dataset over `core ∪ halo` with re-normalized
@@ -65,6 +68,18 @@ impl GraphPartition {
     /// term in the accumulated epoch gradient).
     pub fn core_train_count(&self) -> usize {
         self.data.train_mask.iter().filter(|&&m| m).count()
+    }
+
+    /// In-RAM footprint of the loaded partition in bytes: the induced
+    /// dataset plus the core/halo/node_map index vectors and core mask.
+    /// This is what the out-of-core trainer charges against the resident
+    /// budget while this partition is loaded.
+    pub fn nbytes(&self) -> usize {
+        self.data.nbytes()
+            + self.core.len() * 8
+            + self.halo.len() * 8
+            + self.node_map.len() * 8
+            + self.core_mask.len()
     }
 }
 
@@ -292,6 +307,492 @@ fn halo_neighborhood(
     halo
 }
 
+// ---------------------------------------------------------------------
+// Out-of-core chunk store (ISSUE 6)
+// ---------------------------------------------------------------------
+
+/// Manifest magic — distinct from chunk magic so a chunk file handed to
+/// `open` (or vice versa) is rejected by name, not by checksum luck.
+const STORE_MAGIC: &[u8; 8] = b"IEXACOOC";
+const CHUNK_MAGIC: &[u8; 8] = b"IEXACHNK";
+const STORE_VERSION: u32 = 1;
+/// Endianness canary: written as the little-endian bytes of this value.
+/// A store written on a big-endian machine reads back as `0x0403_0201`
+/// here, and the manifest loader rejects it by name.
+const ENDIAN_TAG: u32 = 0x0102_0304;
+/// Upper bound on any serialized list length — rejects hostile or
+/// corrupt length prefixes before they drive an allocation.
+const MAX_COUNT: usize = 1 << 30;
+
+fn ooc_err(path: &Path, msg: impl std::fmt::Display) -> Error {
+    Error::Artifact(format!("out_of_core: {}: {msg}", path.display()))
+}
+
+fn write_usize_list(buf: &mut Vec<u8>, list: &[usize]) {
+    write_u64(buf, list.len() as u64);
+    for &v in list {
+        write_u64(buf, v as u64);
+    }
+}
+
+/// Bool masks are packed 8-per-byte (LSB first), length-prefixed with
+/// the bool count so ragged tails round-trip exactly.
+fn write_bool_list(buf: &mut Vec<u8>, list: &[bool]) {
+    write_u64(buf, list.len() as u64);
+    for chunk in list.chunks(8) {
+        let mut byte = 0u8;
+        for (i, &b) in chunk.iter().enumerate() {
+            byte |= (b as u8) << i;
+        }
+        buf.push(byte);
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    write_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_usize_list(r: &mut Reader<'_>, path: &Path, what: &str) -> Result<Vec<usize>> {
+    let len = r.u64()? as usize;
+    if len > MAX_COUNT {
+        return Err(ooc_err(path, format!("{what} length {len} too large")));
+    }
+    let raw = r.take(len * 8)?;
+    Ok(raw
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect())
+}
+
+fn read_bool_list(r: &mut Reader<'_>, path: &Path, what: &str) -> Result<Vec<bool>> {
+    let len = r.u64()? as usize;
+    if len > MAX_COUNT {
+        return Err(ooc_err(path, format!("{what} length {len} too large")));
+    }
+    let raw = r.take(len.div_ceil(8))?;
+    Ok((0..len).map(|i| raw[i / 8] >> (i % 8) & 1 == 1).collect())
+}
+
+fn read_str(r: &mut Reader<'_>, path: &Path, what: &str) -> Result<String> {
+    let len = r.u32()? as usize;
+    if len > MAX_COUNT {
+        return Err(ooc_err(path, format!("{what} length {len} too large")));
+    }
+    String::from_utf8(r.take(len)?.to_vec())
+        .map_err(|_| ooc_err(path, format!("{what} is not valid UTF-8")))
+}
+
+/// Per-chunk manifest entry: enough to budget and cross-check a chunk
+/// *without* reading it — `resident_bytes` drives the prefetch
+/// accounting and `core_train_count` the gradient weights, so the
+/// streaming trainer never has to pre-load every partition.
+#[derive(Debug, Clone)]
+pub struct ChunkMeta {
+    /// Chunk file name, relative to the store directory.
+    pub file: String,
+    /// Serialized size on disk (including trailer), cross-checked on load.
+    pub bytes: u64,
+    /// FNV-1a of the chunk body, cross-checked against the trailer.
+    pub checksum: u64,
+    /// [`GraphPartition::nbytes`] of the decoded partition.
+    pub resident_bytes: u64,
+    /// [`GraphPartition::core_train_count`] of the decoded partition.
+    pub core_train_count: u64,
+}
+
+/// A chunked on-disk [`PartitionSet`]: one self-describing chunk file
+/// per partition plus a checksummed manifest, written once by the
+/// partitioner and read back one partition at a time by the streaming
+/// trainer. Plain `std::fs` reads — no mmap — so the resident footprint
+/// is exactly the decoded partitions the trainer chooses to hold.
+///
+/// ```
+/// use iexact::config::DatasetSpec;
+/// use iexact::partition::{partition_dataset, PartitionStore};
+///
+/// let ds = DatasetSpec::tiny().generate(1);
+/// let parts = partition_dataset(&ds, 4, 1).unwrap();
+/// let dir = std::env::temp_dir().join(format!("iexact_doc_store_{}", std::process::id()));
+/// let store = PartitionStore::create(&parts, &dir).unwrap();
+/// let reopened = PartitionStore::open(&dir).unwrap();
+/// assert_eq!(reopened.num_partitions(), 4);
+/// let p0 = reopened.load_partition(0).unwrap();
+/// assert_eq!(p0.core, parts.parts[0].core);
+/// std::fs::remove_dir_all(&dir).ok();
+/// ```
+#[derive(Debug, Clone)]
+pub struct PartitionStore {
+    dir: PathBuf,
+    /// Parent-graph node count.
+    pub num_nodes: usize,
+    /// Halo depth the partitions were built with.
+    pub halo_hops: usize,
+    /// Undirected parent edges cut by the core assignment.
+    pub cut_edges: usize,
+    /// Total undirected parent edges.
+    pub total_edges: usize,
+    chunks: Vec<ChunkMeta>,
+}
+
+impl PartitionStore {
+    /// Serialize `parts` into `dir` (created if missing): one
+    /// `part-{p}.chunk` per partition, then `manifest.bin` last, so a
+    /// crashed writer leaves a store `open` rejects (missing manifest)
+    /// rather than a silently short one.
+    pub fn create(parts: &PartitionSet, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| ooc_err(dir, format!("cannot create store dir: {e}")))?;
+        let mut chunks = Vec::with_capacity(parts.parts.len());
+        for (p, part) in parts.parts.iter().enumerate() {
+            let file = format!("part-{p}.chunk");
+            let path = dir.join(&file);
+            let body = encode_chunk(p, part);
+            let checksum = fnv1a(&body);
+            let mut buf = body;
+            buf.extend_from_slice(&checksum.to_le_bytes());
+            let mut f = std::fs::File::create(&path)
+                .map_err(|e| ooc_err(&path, format!("cannot create chunk: {e}")))?;
+            f.write_all(&buf)
+                .map_err(|e| ooc_err(&path, format!("chunk write failed: {e}")))?;
+            f.sync_all().ok();
+            chunks.push(ChunkMeta {
+                file,
+                bytes: buf.len() as u64,
+                checksum,
+                resident_bytes: part.nbytes() as u64,
+                core_train_count: part.core_train_count() as u64,
+            });
+        }
+
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(STORE_MAGIC);
+        write_u32(&mut buf, STORE_VERSION);
+        write_u32(&mut buf, ENDIAN_TAG);
+        write_u64(&mut buf, parts.parts.len() as u64);
+        write_u64(&mut buf, parts.num_nodes as u64);
+        write_u64(&mut buf, parts.halo_hops as u64);
+        write_u64(&mut buf, parts.cut_edges as u64);
+        write_u64(&mut buf, parts.total_edges as u64);
+        for c in &chunks {
+            write_str(&mut buf, &c.file);
+            write_u64(&mut buf, c.bytes);
+            write_u64(&mut buf, c.checksum);
+            write_u64(&mut buf, c.resident_bytes);
+            write_u64(&mut buf, c.core_train_count);
+        }
+        let checksum = fnv1a(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        let mpath = dir.join("manifest.bin");
+        let mut f = std::fs::File::create(&mpath)
+            .map_err(|e| ooc_err(&mpath, format!("cannot create manifest: {e}")))?;
+        f.write_all(&buf)
+            .map_err(|e| ooc_err(&mpath, format!("manifest write failed: {e}")))?;
+        f.sync_all().ok();
+
+        Ok(PartitionStore {
+            dir: dir.to_path_buf(),
+            num_nodes: parts.num_nodes,
+            halo_hops: parts.halo_hops,
+            cut_edges: parts.cut_edges,
+            total_edges: parts.total_edges,
+            chunks,
+        })
+    }
+
+    /// Open an existing store by reading and validating its manifest
+    /// (checksum, magic, version, endianness — each rejected by name).
+    /// Chunk files are *not* read here; they are validated lazily by
+    /// [`Self::load_partition`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let mpath = dir.join("manifest.bin");
+        let bytes = std::fs::read(&mpath)
+            .map_err(|e| ooc_err(&mpath, format!("cannot read manifest: {e}")))?;
+        if bytes.len() < STORE_MAGIC.len() + 8 + 8 {
+            return Err(ooc_err(&mpath, "manifest too short"));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        if fnv1a(body) != stored {
+            return Err(ooc_err(&mpath, "manifest checksum mismatch"));
+        }
+        let mut r = Reader {
+            cur: body,
+            what: "manifest",
+        };
+        if r.take(8)? != STORE_MAGIC {
+            return Err(ooc_err(&mpath, "not an iexact partition-store manifest"));
+        }
+        let version = r.u32()?;
+        if version != STORE_VERSION {
+            return Err(ooc_err(
+                &mpath,
+                format!("unsupported store version {version} (expected {STORE_VERSION})"),
+            ));
+        }
+        let endian = r.u32()?;
+        if endian != ENDIAN_TAG {
+            return Err(ooc_err(
+                &mpath,
+                format!("endianness mismatch (tag 0x{endian:08x}, expected 0x{ENDIAN_TAG:08x})"),
+            ));
+        }
+        let k = r.u64()? as usize;
+        if k == 0 || k > MAX_COUNT {
+            return Err(ooc_err(&mpath, format!("bad partition count {k}")));
+        }
+        let num_nodes = r.u64()? as usize;
+        let halo_hops = r.u64()? as usize;
+        let cut_edges = r.u64()? as usize;
+        let total_edges = r.u64()? as usize;
+        let mut chunks = Vec::with_capacity(k);
+        for _ in 0..k {
+            let file = read_str(&mut r, &mpath, "chunk file name")?;
+            let bytes = r.u64()?;
+            let checksum = r.u64()?;
+            let resident_bytes = r.u64()?;
+            let core_train_count = r.u64()?;
+            chunks.push(ChunkMeta {
+                file,
+                bytes,
+                checksum,
+                resident_bytes,
+                core_train_count,
+            });
+        }
+        if !r.cur.is_empty() {
+            return Err(ooc_err(&mpath, "trailing bytes in manifest"));
+        }
+        Ok(PartitionStore {
+            dir: dir.to_path_buf(),
+            num_nodes,
+            halo_hops,
+            cut_edges,
+            total_edges,
+            chunks,
+        })
+    }
+
+    /// Read, validate and decode one partition chunk. The chunk's size
+    /// and body checksum must match both its own trailer and the
+    /// manifest entry — a truncated or swapped file is rejected by name.
+    pub fn load_partition(&self, p: usize) -> Result<GraphPartition> {
+        let meta = self
+            .chunks
+            .get(p)
+            .ok_or_else(|| ooc_err(&self.dir, format!("no partition {p} in manifest")))?;
+        let path = self.dir.join(&meta.file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| ooc_err(&path, format!("cannot read chunk: {e}")))?;
+        if bytes.len() as u64 != meta.bytes {
+            return Err(ooc_err(
+                &path,
+                format!(
+                    "chunk is {} bytes, manifest says {} (truncated or swapped)",
+                    bytes.len(),
+                    meta.bytes
+                ),
+            ));
+        }
+        if bytes.len() < CHUNK_MAGIC.len() + 8 {
+            return Err(ooc_err(&path, "chunk too short"));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv1a(body);
+        if actual != stored || actual != meta.checksum {
+            return Err(ooc_err(&path, "chunk checksum mismatch"));
+        }
+        decode_chunk(body, p, &path)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Decoded in-RAM size of partition `p` (from the manifest — no read).
+    pub fn resident_bytes(&self, p: usize) -> usize {
+        self.chunks[p].resident_bytes as usize
+    }
+
+    /// Largest decoded partition — the floor any resident budget must
+    /// clear before streaming training can run at all.
+    pub fn max_resident_bytes(&self) -> usize {
+        self.chunks
+            .iter()
+            .map(|c| c.resident_bytes as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Core train-node count of partition `p` (from the manifest).
+    pub fn core_train_count(&self, p: usize) -> usize {
+        self.chunks[p].core_train_count as usize
+    }
+
+    /// Fraction of parent edges cut by the core assignment.
+    pub fn edge_cut_fraction(&self) -> f64 {
+        if self.total_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges as f64 / self.total_edges as f64
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn chunks(&self) -> &[ChunkMeta] {
+        &self.chunks
+    }
+}
+
+fn encode_chunk(p: usize, part: &GraphPartition) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(CHUNK_MAGIC);
+    write_u32(&mut buf, STORE_VERSION);
+    write_u64(&mut buf, p as u64);
+    write_usize_list(&mut buf, &part.core);
+    write_usize_list(&mut buf, &part.halo);
+    write_usize_list(&mut buf, &part.node_map);
+    write_bool_list(&mut buf, &part.core_mask);
+    let d = &part.data;
+    write_str(&mut buf, &d.name);
+    write_u64(&mut buf, d.num_classes as u64);
+    write_u64(&mut buf, d.labels.len() as u64);
+    for &l in &d.labels {
+        write_u32(&mut buf, l);
+    }
+    write_u64(&mut buf, d.adj.n_rows as u64);
+    write_u64(&mut buf, d.adj.n_cols as u64);
+    write_usize_list(&mut buf, &d.adj.row_ptr);
+    write_usize_list(&mut buf, &d.adj.col_idx);
+    write_u64(&mut buf, d.adj.values.len() as u64);
+    for &v in &d.adj.values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    write_matrix(&mut buf, &d.features);
+    write_bool_list(&mut buf, &d.train_mask);
+    write_bool_list(&mut buf, &d.val_mask);
+    write_bool_list(&mut buf, &d.test_mask);
+    buf
+}
+
+fn decode_chunk(body: &[u8], p: usize, path: &Path) -> Result<GraphPartition> {
+    let mut r = Reader {
+        cur: body,
+        what: "chunk",
+    };
+    if r.take(8)? != CHUNK_MAGIC {
+        return Err(ooc_err(path, "not an iexact partition chunk"));
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        return Err(ooc_err(
+            path,
+            format!("unsupported chunk version {version} (expected {STORE_VERSION})"),
+        ));
+    }
+    let stored_p = r.u64()? as usize;
+    if stored_p != p {
+        return Err(ooc_err(
+            path,
+            format!("chunk claims partition {stored_p}, manifest slot is {p}"),
+        ));
+    }
+    let core = read_usize_list(&mut r, path, "core")?;
+    let halo = read_usize_list(&mut r, path, "halo")?;
+    let node_map = read_usize_list(&mut r, path, "node_map")?;
+    let core_mask = read_bool_list(&mut r, path, "core_mask")?;
+    let name = read_str(&mut r, path, "dataset name")?;
+    let num_classes = r.u64()? as usize;
+    let n_labels = r.u64()? as usize;
+    if n_labels > MAX_COUNT {
+        return Err(ooc_err(path, format!("label count {n_labels} too large")));
+    }
+    let labels: Vec<u32> = r
+        .take(n_labels * 4)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let n_rows = r.u64()? as usize;
+    let n_cols = r.u64()? as usize;
+    let row_ptr = read_usize_list(&mut r, path, "row_ptr")?;
+    let col_idx = read_usize_list(&mut r, path, "col_idx")?;
+    let n_values = r.u64()? as usize;
+    if n_values > MAX_COUNT {
+        return Err(ooc_err(path, format!("value count {n_values} too large")));
+    }
+    let values: Vec<f32> = r
+        .take(n_values * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let features = r.matrix()?;
+    let train_mask = read_bool_list(&mut r, path, "train_mask")?;
+    let val_mask = read_bool_list(&mut r, path, "val_mask")?;
+    let test_mask = read_bool_list(&mut r, path, "test_mask")?;
+    if !r.cur.is_empty() {
+        return Err(ooc_err(path, "trailing bytes in chunk"));
+    }
+
+    // Structural CSR validation so a bit-flipped-but-checksum-colliding
+    // (or hand-built) chunk cannot panic downstream kernels.
+    if n_rows > MAX_COUNT || n_cols > MAX_COUNT {
+        return Err(ooc_err(path, format!("adjacency {n_rows}x{n_cols} too large")));
+    }
+    if row_ptr.len() != n_rows + 1
+        || row_ptr.first() != Some(&0)
+        || row_ptr.last() != Some(&col_idx.len())
+        || row_ptr.windows(2).any(|w| w[0] > w[1])
+    {
+        return Err(ooc_err(path, "chunk row_ptr is not a valid CSR index"));
+    }
+    if col_idx.iter().any(|&c| c >= n_cols) {
+        return Err(ooc_err(path, "chunk col_idx out of range"));
+    }
+    if values.len() != col_idx.len() {
+        return Err(ooc_err(path, "chunk values/col_idx length mismatch"));
+    }
+    let adj = CsrMatrix {
+        n_rows,
+        n_cols,
+        row_ptr,
+        col_idx,
+        values,
+    };
+    let data = Dataset {
+        name,
+        adj,
+        features,
+        labels,
+        num_classes,
+        train_mask,
+        val_mask,
+        test_mask,
+    };
+    data.validate()
+        .map_err(|e| ooc_err(path, format!("decoded dataset is inconsistent: {e}")))?;
+    let n = data.num_nodes();
+    if node_map.len() != n
+        || core_mask.len() != n
+        || core.len() + halo.len() != n
+        || core.len() != core_mask.iter().filter(|&&m| m).count()
+    {
+        return Err(ooc_err(path, "chunk core/halo/node_map sizes disagree"));
+    }
+    Ok(GraphPartition {
+        core,
+        halo,
+        data,
+        node_map,
+        core_mask,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,5 +902,54 @@ mod tests {
         for &s in &sizes {
             assert!(s <= target, "core size {s} exceeds balanced share {target}");
         }
+    }
+
+    fn store_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("iexact_store_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn store_round_trips_every_partition_byte_exact() {
+        let d = ds();
+        let parts = partition_dataset(&d, 4, 2).unwrap();
+        let dir = store_dir("roundtrip");
+        let store = PartitionStore::create(&parts, &dir).unwrap();
+        assert_eq!(store.num_partitions(), 4);
+        let reopened = PartitionStore::open(&dir).unwrap();
+        assert_eq!(reopened.num_nodes, parts.num_nodes);
+        assert_eq!(reopened.halo_hops, parts.halo_hops);
+        assert_eq!(reopened.cut_edges, parts.cut_edges);
+        assert_eq!(reopened.total_edges, parts.total_edges);
+        for (p, orig) in parts.parts.iter().enumerate() {
+            let got = reopened.load_partition(p).unwrap();
+            assert_eq!(got.core, orig.core);
+            assert_eq!(got.halo, orig.halo);
+            assert_eq!(got.node_map, orig.node_map);
+            assert_eq!(got.core_mask, orig.core_mask);
+            assert_eq!(got.data.name, orig.data.name);
+            assert_eq!(got.data.labels, orig.data.labels);
+            assert_eq!(got.data.adj.row_ptr, orig.data.adj.row_ptr);
+            assert_eq!(got.data.adj.col_idx, orig.data.adj.col_idx);
+            assert_eq!(got.data.adj.values, orig.data.adj.values);
+            assert_eq!(got.data.features.as_slice(), orig.data.features.as_slice());
+            assert_eq!(got.data.train_mask, orig.data.train_mask);
+            assert_eq!(got.data.val_mask, orig.data.val_mask);
+            assert_eq!(got.data.test_mask, orig.data.test_mask);
+            assert_eq!(reopened.resident_bytes(p), orig.nbytes());
+            assert_eq!(reopened.core_train_count(p), orig.core_train_count());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_rejects_missing_manifest_and_bad_partition_index() {
+        let dir = store_dir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(PartitionStore::open(&dir).is_err());
+        let d = ds();
+        let parts = partition_dataset(&d, 2, 0).unwrap();
+        let store = PartitionStore::create(&parts, &dir).unwrap();
+        assert!(store.load_partition(2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -43,15 +43,20 @@ use crate::graph::Dataset;
 use crate::linalg::{glorot_uniform, relu, softmax_cross_entropy, Adam, SignPattern};
 use crate::memory::BufferPool;
 use crate::metrics::{masked_accuracy, TrainCurve};
+use crate::partition::{GraphPartition, PartitionSet, PartitionStore};
 use crate::quant::{BinSpec, CompressedTensor};
 use crate::rngs::Pcg64;
 use crate::rp::RandomProjection;
 use crate::runtime::pool::WorkerPool;
+use crate::runtime::prefetch::{self, PrefetchHandle};
 use crate::stats::ClippedNormal;
 use crate::tensor::Matrix;
 use crate::util::timer::LapTimer;
 use crate::varmin::optimal_boundaries;
 use crate::{Error, Result};
+use std::borrow::Cow;
+use std::collections::VecDeque;
+use std::path::Path;
 
 /// A stashed compressed tensor: fixed-width ([`CompressedTensor`]) or
 /// under a heterogeneous [`BitPlan`] ([`PlannedTensor`]). The backward
@@ -925,6 +930,129 @@ pub fn train_span(
     Ok((result, state))
 }
 
+/// The acquisition order of the streaming trainer: every epoch visits
+/// partitions `0..k` for the gradient pass, then `0..k` again for the
+/// eval forward pass on eval epochs. The prefetch queue follows this
+/// schedule exactly, so by run end every prefetched chunk has been
+/// consumed.
+fn ooc_schedule(epochs: usize, eval_every: usize, k: usize) -> Vec<usize> {
+    let mut seq = Vec::new();
+    for epoch in 0..epochs {
+        seq.extend(0..k);
+        if epoch % eval_every == 0 || epoch + 1 == epochs {
+            seq.extend(0..k);
+        }
+    }
+    seq
+}
+
+/// Streaming chunk I/O for the out-of-core trainer: a clone-cheap
+/// [`PartitionStore`] plus a bounded prefetch queue riding the engine's
+/// [`WorkerPool`] background lane. Residency accounting is
+/// *schedule-based* — the manifest `resident_bytes` of every queued
+/// chunk, not of whichever decodes happen to have finished — so
+/// `peak_resident_bytes` stays bit-identical across thread counts.
+struct DiskIo {
+    store: PartitionStore,
+    depth: usize,
+    /// Future acquisitions in program order; the queue mirrors a prefix.
+    schedule: VecDeque<usize>,
+    queue: VecDeque<(usize, PrefetchHandle<Result<GraphPartition>>)>,
+    /// Manifest-recorded decoded bytes of every queued chunk.
+    inflight_resident: usize,
+}
+
+impl DiskIo {
+    fn new(store: PartitionStore, depth: usize, schedule: Vec<usize>, rt: &WorkerPool) -> Self {
+        let mut io = DiskIo {
+            store,
+            depth,
+            schedule: schedule.into(),
+            queue: VecDeque::new(),
+            inflight_resident: 0,
+        };
+        io.top_up(rt);
+        io
+    }
+
+    /// Keep up to `depth` chunks in flight, following the schedule.
+    fn top_up(&mut self, rt: &WorkerPool) {
+        while self.queue.len() < self.depth {
+            let Some(&p) = self.schedule.get(self.queue.len()) else {
+                break;
+            };
+            let store = self.store.clone();
+            self.inflight_resident += self.store.resident_bytes(p);
+            self.queue
+                .push_back((p, prefetch::spawn(rt, move || store.load_partition(p))));
+        }
+    }
+
+    /// Take the next scheduled partition (must be the caller's `p`),
+    /// joining its prefetch or falling back to a synchronous read, then
+    /// refill the queue.
+    fn acquire(&mut self, rt: &WorkerPool, p: usize) -> Result<GraphPartition> {
+        debug_assert_eq!(self.schedule.front(), Some(&p), "out-of-order acquire");
+        self.schedule.pop_front();
+        let part = match self.queue.pop_front() {
+            Some((qp, handle)) if qp == p => {
+                self.inflight_resident -= self.store.resident_bytes(qp);
+                handle.wait()
+            }
+            Some((qp, handle)) => {
+                // Unreachable while the queue mirrors the schedule, but
+                // keep the accounting exact if that ever breaks.
+                self.inflight_resident -= self.store.resident_bytes(qp);
+                let _ = handle.wait();
+                self.store.load_partition(p)
+            }
+            None => self.store.load_partition(p),
+        };
+        self.top_up(rt);
+        part
+    }
+}
+
+/// Where the trainer gets partition subgraphs: the whole
+/// [`PartitionSet`] held in RAM (default), or one chunk at a time from
+/// a [`PartitionStore`] (`[out_of_core]`). The subgraphs are
+/// byte-identical either way, so the choice is invisible to the
+/// training math — it only moves bytes between RAM and disk.
+enum PartSource {
+    Ram(PartitionSet),
+    Disk(DiskIo),
+}
+
+impl PartSource {
+    /// Borrow (RAM) or load (disk) partition `p`, returning it together
+    /// with the overhead bytes this visit's residency samples must
+    /// carry: zero in RAM mode; held chunk + queued prefetches +
+    /// retained assembly metadata in streaming mode.
+    fn get(
+        &mut self,
+        rt: &WorkerPool,
+        p: usize,
+        meta_bytes: usize,
+    ) -> Result<(Cow<'_, GraphPartition>, usize)> {
+        match self {
+            PartSource::Ram(set) => Ok((Cow::Borrowed(&set.parts[p]), 0)),
+            PartSource::Disk(io) => {
+                let part = io.acquire(rt, p)?;
+                let overhead = part.nbytes() + io.inflight_resident + meta_bytes;
+                Ok((Cow::Owned(part), overhead))
+            }
+        }
+    }
+
+    /// Overhead bytes while no chunk is held (eval's assembly pass).
+    fn idle_overhead(&self, meta_bytes: usize) -> usize {
+        match self {
+            PartSource::Ram(_) => 0,
+            PartSource::Disk(io) => io.inflight_resident + meta_bytes,
+        }
+    }
+}
+
 /// Result of one partitioned training run: the usual per-run metrics
 /// plus the memory accounting that motivates partitioning.
 #[derive(Debug, Clone)]
@@ -945,6 +1073,9 @@ pub struct PartitionTrainResult {
     pub halo_nodes: usize,
     /// Fraction of parent edges cut by the core assignment.
     pub edge_cut_fraction: f64,
+    /// The trained model — lets callers checkpoint or compare weights
+    /// (the out-of-core parity suite serializes it byte-for-byte).
+    pub model: GcnModel,
 }
 
 /// Cache layout for parked partition logits: blocks of eight node rows,
@@ -985,6 +1116,21 @@ fn logits_cache_plan(rows: usize, cols: usize, bits: u32) -> Result<BitPlan> {
 /// bit-identical at any engine thread count; per-partition bit plans are
 /// re-solved from each partition's own activation statistics every
 /// realloc interval when adaptive allocation is on.
+///
+/// With `[out_of_core] spill_dir` set, the run goes **streaming**: the
+/// partitioner writes every subgraph into a chunked
+/// [`PartitionStore`] under `<spill_dir>/graph`, the in-RAM
+/// [`PartitionSet`] is dropped, and each partition step loads exactly
+/// one chunk (plus up to `prefetch_depth` chunks decoding in the
+/// background on the engine's [`WorkerPool`]); parked activations spill
+/// to `<spill_dir>/cache` and come back through RAM only at eval
+/// assembly. The chunks decode to byte-identical subgraphs and the
+/// spill files are the packed [`BitPlan`] bytes themselves, so the
+/// streaming run is **bit-identical** to the in-RAM run — same weights,
+/// same loss curve, same checkpoints — while `peak_resident_bytes`
+/// additionally counts the held chunk, the scheduled prefetches (by
+/// manifest size, so the metric is thread-invariant) and the retained
+/// scatter metadata (see `docs/out-of-core.md`).
 pub fn train_partitioned(
     dataset: &Dataset,
     quant: &QuantConfig,
@@ -995,12 +1141,29 @@ pub fn train_partitioned(
     cfg.validate()?;
     dataset.validate()?;
     let pcfg = &cfg.partition;
+    let ooc = &cfg.out_of_core;
+    let streaming = ooc.enabled();
     let k = pcfg.num_partitions;
     let parts = crate::partition::partition_dataset(dataset, k, pcfg.halo_hops)?;
-    let total_train: usize = parts.parts.iter().map(|p| p.core_train_count()).sum();
+    let core_train_counts: Vec<usize> = parts.parts.iter().map(|p| p.core_train_count()).collect();
+    let total_train: usize = core_train_counts.iter().sum();
     if total_train == 0 {
         return Err(Error::Config("dataset has no training nodes".into()));
     }
+    let halo_nodes = parts.total_halo_nodes();
+    let edge_cut_fraction = parts.edge_cut_fraction();
+    // Scatter metadata for eval's assembly pass, retained in both modes
+    // so the streaming path never re-reads a chunk just to learn where
+    // its core rows land. Counted against the resident budget.
+    let assembly: Vec<(Vec<usize>, Vec<bool>)> = parts
+        .parts
+        .iter()
+        .map(|p| (p.node_map.clone(), p.core_mask.clone()))
+        .collect();
+    let meta_bytes: usize = assembly
+        .iter()
+        .map(|(nm, cm)| nm.len() * std::mem::size_of::<usize>() + cm.len())
+        .sum();
 
     let mut rng = Pcg64::new(seed ^ 0x9a27_1710);
     let mut model = GcnModel::init_arch(
@@ -1022,7 +1185,32 @@ pub fn train_partitioned(
 
     let engine = QuantEngine::from_config(&cfg.parallelism);
     let mut pool = BufferPool::new();
-    let mut cache = crate::memory::ActivationCache::new(k, seed ^ 0x00ca_c4ed);
+    let (mut source, mut cache) = if let Some(dir) = &ooc.spill_dir {
+        let base = Path::new(dir);
+        let store = PartitionStore::create(&parts, base.join("graph"))?;
+        drop(parts);
+        if ooc.resident_budget_bytes > 0 {
+            let floor = store.max_resident_bytes() * (1 + ooc.depth()) + meta_bytes;
+            if floor > ooc.resident_budget_bytes {
+                return Err(Error::Config(format!(
+                    "out_of_core.resident_budget_bytes: budget {} cannot hold the largest \
+                     partition chunk at prefetch depth {} (needs >= {floor})",
+                    ooc.resident_budget_bytes,
+                    ooc.depth(),
+                )));
+            }
+        }
+        let schedule = ooc_schedule(cfg.epochs, cfg.eval_every, k);
+        let io = DiskIo::new(store, ooc.depth(), schedule, engine.runtime());
+        let cache =
+            crate::memory::ActivationCache::with_spill(k, seed ^ 0x00ca_c4ed, base.join("cache"))?;
+        (PartSource::Disk(io), cache)
+    } else {
+        (
+            PartSource::Ram(parts),
+            crate::memory::ActivationCache::new(k, seed ^ 0x00ca_c4ed),
+        )
+    };
     let allocator = cfg.allocation.allocator(quant)?;
     // One plan set per partition: block counts differ with subgraph size.
     let mut plans: Vec<Option<Vec<BitPlan>>> = vec![None; k];
@@ -1045,7 +1233,8 @@ pub fn train_partitioned(
             .map(|&(r, c)| Matrix::zeros(r, c))
             .collect();
         let mut loss_acc = 0.0f64;
-        for (p, part) in parts.parts.iter().enumerate() {
+        for p in 0..k {
+            let (part, overhead) = source.get(engine.runtime(), p, meta_bytes)?;
             if let Some(alloc) = &allocator {
                 if epoch % cfg.allocation.realloc_interval_epochs == 0 {
                     // Stats stream addressed by (epoch, partition) so the
@@ -1075,13 +1264,14 @@ pub fn train_partitioned(
             // core train nodes; reweight to the global train mean so the
             // accumulated epoch gradient equals the full-batch gradient
             // of the edge-cut-approximated graph.
-            let w = part.core_train_count() as f64 / total_train as f64;
+            let w = core_train_counts[p] as f64 / total_train as f64;
             loss_acc += step.loss * w;
             for (a, g) in grad_acc.iter_mut().zip(&step.grads) {
                 a.axpy(w as f32, g)?;
             }
             max_stash = max_stash.max(step.stash_bytes);
-            peak_resident = peak_resident.max(step.stash_bytes + cache.resident_bytes());
+            peak_resident =
+                peak_resident.max(step.stash_bytes + cache.resident_bytes() + overhead);
         }
         adam.step(&mut model.weights, &grad_acc)?;
         final_train_loss = loss_acc;
@@ -1090,25 +1280,42 @@ pub fn train_partitioned(
             // Park each partition's post-update output activations, then
             // assemble full-graph logits from the cache — at no point is
             // more than one partition's forward pass dense-resident.
-            for (p, part) in parts.parts.iter().enumerate() {
+            for p in 0..k {
+                let (part, overhead) = source.get(engine.runtime(), p, meta_bytes)?;
                 let logits = model.forward_with(&part.data, engine.runtime())?;
                 let plan =
                     logits_cache_plan(logits.rows(), logits.cols(), pcfg.cache_bits)?;
                 cache.park(p, &logits, &plan, &engine, &mut pool)?;
                 pool.put_floats(logits.into_vec());
-                peak_resident = peak_resident.max(cache.resident_bytes());
+                peak_resident = peak_resident.max(cache.resident_bytes() + overhead);
+                drop(part);
+                if streaming {
+                    // Keep at most one compressed slot resident between
+                    // parks: everything parked so far goes back to disk.
+                    for s in 0..=p {
+                        cache.spill(s, &mut pool)?;
+                    }
+                }
             }
+            let idle = source.idle_overhead(meta_bytes);
             let mut full = Matrix::zeros(n, dataset.num_classes);
-            for (p, part) in parts.parts.iter().enumerate() {
+            for (p, (node_map, core_mask)) in assembly.iter().enumerate() {
                 let deq = cache
                     .fetch(p, &engine, &mut pool)?
                     .expect("parked in the loop above");
-                for (local, &parent) in part.node_map.iter().enumerate() {
-                    if part.core_mask[local] {
+                // Sample *after* the fetch: spilled slots come back
+                // through RAM here, and those reloaded compressed bytes
+                // count toward peak residency.
+                peak_resident = peak_resident.max(cache.resident_bytes() + idle);
+                for (local, &parent) in node_map.iter().enumerate() {
+                    if core_mask[local] {
                         full.row_mut(parent).copy_from_slice(deq.row(local));
                     }
                 }
                 pool.put_floats(deq.into_vec());
+                if streaming {
+                    cache.spill(p, &mut pool)?;
+                }
             }
             let (val_loss, _) =
                 softmax_cross_entropy(&full, &dataset.labels, &dataset.val_mask)?;
@@ -1132,10 +1339,13 @@ pub fn train_partitioned(
             final_train_loss,
         },
         peak_resident_bytes: peak_resident,
-        cache_bytes: cache.resident_bytes(),
+        // Resident + spilled, so the cache footprint reads the same in
+        // both modes (spilling moves bytes, it doesn't shrink them).
+        cache_bytes: cache.resident_bytes() + cache.spilled_bytes(),
         num_partitions: k,
-        halo_nodes: parts.total_halo_nodes(),
-        edge_cut_fraction: parts.edge_cut_fraction(),
+        halo_nodes,
+        edge_cut_fraction,
+        model,
     })
 }
 

@@ -19,6 +19,7 @@
 
 mod artifacts;
 pub mod pool;
+pub mod prefetch;
 
 pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
 pub use pool::WorkerPool;

@@ -210,6 +210,32 @@ impl WorkerPool {
         self.threads.min(items / min_per_shard).max(1)
     }
 
+    /// Submit one fire-and-forget job to the pool's **last** background
+    /// worker (the one [`Self::run`]'s round-robin loads least), for
+    /// asynchronous work that overlaps a training step — out-of-core
+    /// chunk prefetches, in practice. Returns the job back (`Err`) when
+    /// the pool has no background workers (the serial pool) or the
+    /// worker is unavailable, so the caller can run it inline.
+    ///
+    /// The job runs interleaved with that worker's [`Self::run`] buckets
+    /// in FIFO channel order. **The job must not unwind** — a panic
+    /// would kill the worker's receive loop and poison every later
+    /// batch; wrap fallible work in `catch_unwind` and ship the result
+    /// (see [`crate::runtime::prefetch`], which does exactly that).
+    #[allow(clippy::type_complexity)]
+    pub fn submit_background(
+        &self,
+        job: Box<dyn FnOnce() + Send + 'static>,
+    ) -> std::result::Result<(), Box<dyn FnOnce() + Send + 'static>> {
+        let Some(sender) = self.senders.last() else {
+            return Err(job);
+        };
+        let Ok(sender) = sender.lock() else {
+            return Err(job);
+        };
+        sender.send(job).map_err(|e| e.0)
+    }
+
     /// Execute a batch of tasks and block until all have completed.
     ///
     /// Task `i` runs on executor `i % threads()`; executor `0` is the
@@ -440,6 +466,39 @@ mod tests {
         assert_eq!(pool.shards_for(64, 16), 4);
         assert_eq!(pool.shards_for(10_000, 16), 8); // capped at threads
         assert_eq!(WorkerPool::serial().shards_for(10_000, 1), 1);
+    }
+
+    #[test]
+    fn submit_background_runs_and_serial_pool_returns_job() {
+        let pool = WorkerPool::new(3);
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit_background(Box::new(move || {
+            tx.send(41usize).unwrap();
+        }))
+        .unwrap_or_else(|_| panic!("threaded pool must accept background jobs"));
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(), 41);
+        // Background jobs interleave with run() batches on the same pool.
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task<'_>> = (0..6)
+            .map(|_| {
+                let counter = &counter;
+                Box::new(move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 6);
+
+        // The serial pool has no background worker: the job comes back.
+        let serial = WorkerPool::serial();
+        let mut ran = false;
+        let returned = serial.submit_background(Box::new(|| {}));
+        if let Err(job) = returned {
+            job();
+            ran = true;
+        }
+        assert!(ran, "serial pool must hand the job back for inline execution");
     }
 
     #[test]

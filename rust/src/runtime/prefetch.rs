@@ -1,0 +1,153 @@
+//! Asynchronous prefetch on the shared [`WorkerPool`] — the overlap
+//! layer of the out-of-core trainer (ISSUE 6).
+//!
+//! [`spawn`] ships a closure to a background pool worker via
+//! [`WorkerPool::submit_background`] and returns a [`PrefetchHandle`]
+//! the caller joins later with [`PrefetchHandle::wait`]. While the
+//! current partition trains, the next partition's chunk decodes on the
+//! worker; the epoch loop then `wait()`s instead of touching the disk.
+//!
+//! Two properties matter for the bit-identity contract:
+//!
+//! * **Panic safety.** A raw job that unwound would kill the worker's
+//!   receive loop and break every later [`WorkerPool::run`] batch. The
+//!   closure therefore runs under `catch_unwind`; `wait()` resumes the
+//!   unwind on the *caller*, exactly like a failing inline load would.
+//! * **Serial equivalence.** On a serial pool (no background workers)
+//!   the closure runs inline in `spawn` — same results, same errors,
+//!   zero threads. Prefetching is a pure latency knob, never a
+//!   numerics knob: the value `wait()` returns is identical either way.
+//!
+//! ```
+//! use iexact::runtime::pool::WorkerPool;
+//! use iexact::runtime::prefetch;
+//!
+//! let pool = WorkerPool::new(2);
+//! let handle = prefetch::spawn(&pool, || 2 + 2);
+//! assert_eq!(handle.wait(), 4);
+//! // Serial pools run the closure inline at spawn time.
+//! let serial = WorkerPool::serial();
+//! assert_eq!(prefetch::spawn(&serial, || 6 * 7).wait(), 42);
+//! ```
+
+use crate::runtime::pool::WorkerPool;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared completion cell: the worker stores the closure's outcome
+/// (value or panic payload), the owner of the handle waits on it.
+struct State<T> {
+    result: Mutex<Option<std::thread::Result<T>>>,
+    cv: Condvar,
+}
+
+/// Join handle for a closure submitted with [`spawn`].
+pub struct PrefetchHandle<T> {
+    state: Arc<State<T>>,
+}
+
+impl<T> std::fmt::Debug for PrefetchHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefetchHandle")
+            .field("ready", &self.is_ready())
+            .finish()
+    }
+}
+
+/// Run `f` on one of `pool`'s background workers (inline, right now, if
+/// the pool is serial) and return a handle to its result.
+pub fn spawn<T, F>(pool: &WorkerPool, f: F) -> PrefetchHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let state = Arc::new(State {
+        result: Mutex::new(None),
+        cv: Condvar::new(),
+    });
+    let state_c = Arc::clone(&state);
+    let job: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
+        // Catch panics so the worker's receive loop survives; wait()
+        // re-raises on the caller.
+        let outcome = catch_unwind(AssertUnwindSafe(f));
+        if let Ok(mut slot) = state_c.result.lock() {
+            *slot = Some(outcome);
+            state_c.cv.notify_all();
+        }
+    });
+    if let Err(job) = pool.submit_background(job) {
+        job();
+    }
+    PrefetchHandle { state }
+}
+
+impl<T> PrefetchHandle<T> {
+    /// Whether the closure has finished (never blocks).
+    pub fn is_ready(&self) -> bool {
+        self.state
+            .result
+            .lock()
+            .map(|s| s.is_some())
+            .unwrap_or(false)
+    }
+
+    /// Block until the closure finishes and return its value. If the
+    /// closure panicked on the worker, the panic resumes here.
+    pub fn wait(self) -> T {
+        let mut slot = self.state.result.lock().expect("prefetch mutex");
+        while slot.is_none() {
+            slot = self.state.cv.wait(slot).expect("prefetch condvar");
+        }
+        match slot.take().expect("checked non-empty above") {
+            Ok(v) => v,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_values_from_background_and_serial_pools() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let handles: Vec<PrefetchHandle<usize>> = (0..8)
+                .map(|i| spawn(&pool, move || i * i))
+                .collect();
+            let got: Vec<usize> = handles.into_iter().map(|h| h.wait()).collect();
+            assert_eq!(got, (0..8).map(|i| i * i).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn panics_resume_on_the_caller_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let handle = spawn(&pool, || -> usize { panic!("prefetch exploded") });
+        let caught = catch_unwind(AssertUnwindSafe(|| handle.wait()));
+        assert!(caught.is_err(), "panic must surface at wait()");
+        // The worker is still alive for both run() batches and spawns.
+        assert_eq!(spawn(&pool, || 7).wait(), 7);
+        let mut out = vec![0usize; 4];
+        let tasks: Vec<crate::runtime::pool::Task<'_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, v)| {
+                Box::new(move || {
+                    *v = i + 1;
+                }) as crate::runtime::pool::Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn is_ready_becomes_true_after_wait_worthy_completion() {
+        let serial = WorkerPool::serial();
+        let h = spawn(&serial, || 1);
+        assert!(h.is_ready(), "serial spawn runs inline");
+        assert_eq!(h.wait(), 1);
+    }
+}

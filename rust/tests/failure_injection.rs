@@ -1,8 +1,15 @@
 //! Failure-injection tests: malformed artifacts, hostile inputs, and
 //! degenerate numerical data must produce errors (or defined behaviour),
-//! never panics.
+//! never panics. The disk-fault section (ISSUE 6) injects truncated
+//! chunks, corrupt manifests, vanishing spill dirs and ENOSPC-style
+//! write failures into the out-of-core path: each must surface an error
+//! naming the offending path, and checkpoints must stay resumable.
 
-use iexact::config::{DatasetSpec, QuantConfig, TrainConfig};
+use iexact::alloc::BitPlan;
+use iexact::config::{DatasetSpec, OutOfCoreConfig, PartitionConfig, QuantConfig, TrainConfig};
+use iexact::engine::QuantEngine;
+use iexact::memory::{ActivationCache, BufferPool};
+use iexact::partition::{partition_dataset, PartitionStore};
 use iexact::quant::{quantize_grouped, BinSpec};
 use iexact::rngs::Pcg64;
 use iexact::runtime::Manifest;
@@ -110,6 +117,148 @@ fn toml_hostile_inputs() {
     ] {
         assert!(ExperimentConfig::from_toml(bad).is_err(), "{bad}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core disk faults (ISSUE 6)
+// ---------------------------------------------------------------------------
+
+fn fault_dir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("iexact_fault_{name}_{}", std::process::id()))
+}
+
+#[test]
+fn truncated_chunk_file_is_rejected_by_name() {
+    let dir = fault_dir("trunc_chunk");
+    let ds = DatasetSpec::tiny().generate(1);
+    let parts = partition_dataset(&ds, 4, 1).unwrap();
+    PartitionStore::create(&parts, &dir).unwrap();
+
+    let victim = dir.join("part-2.chunk");
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+
+    // The manifest itself is intact, so open succeeds (chunks validate
+    // lazily) — the damage must surface on the read, named.
+    let store = PartitionStore::open(&dir).unwrap();
+    let err = store.load_partition(2).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("part-2.chunk"), "error must name the chunk: {msg}");
+    assert!(!msg.to_lowercase().contains("panic"));
+    // Undamaged partitions still load — a single bad chunk does not
+    // poison the store.
+    assert!(store.load_partition(0).is_ok());
+    assert!(store.load_partition(1).is_ok());
+
+    // A zero-length chunk is rejected by name too.
+    std::fs::write(&victim, []).unwrap();
+    let msg = store.load_partition(2).unwrap_err().to_string();
+    assert!(msg.contains("part-2.chunk"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_or_missing_manifest_is_rejected_by_name() {
+    let dir = fault_dir("bad_manifest");
+    let ds = DatasetSpec::tiny().generate(1);
+    let parts = partition_dataset(&ds, 2, 1).unwrap();
+    PartitionStore::create(&parts, &dir).unwrap();
+
+    // Bit-flip in the body: checksum check fires, naming the file.
+    let mpath = dir.join("manifest.bin");
+    let mut bytes = std::fs::read(&mpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&mpath, &bytes).unwrap();
+    let msg = PartitionStore::open(&dir).unwrap_err().to_string();
+    assert!(msg.contains("manifest.bin"), "{msg}");
+    assert!(msg.contains("checksum"), "{msg}");
+
+    // Missing manifest (the crashed-writer signature: chunks present,
+    // manifest absent) is also a named error, not a silent empty store.
+    std::fs::remove_file(&mpath).unwrap();
+    let msg = PartitionStore::open(&dir).unwrap_err().to_string();
+    assert!(msg.contains("manifest.bin"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn spill_dir_vanishing_mid_epoch_surfaces_named_error() {
+    let dir = fault_dir("vanish");
+    let h = Matrix::from_fn(8, 16, |r, c| (r * 3 + c) as f32 * 0.25);
+    let plan = BitPlan::uniform(2, 8, 16).unwrap();
+    let engine = QuantEngine::serial();
+    let mut pool = BufferPool::new();
+    let mut cache = ActivationCache::with_spill(2, 5, &dir).unwrap();
+    cache.park(0, &h, &plan, &engine, &mut pool).unwrap();
+    cache.spill(0, &mut pool).unwrap();
+
+    // The spill dir disappears between epochs (operator wipes /tmp, the
+    // scratch volume unmounts…). Fetching the spilled slot must error
+    // with the spill file's name — never panic, never return stale data.
+    std::fs::remove_dir_all(&dir).unwrap();
+    let err = cache.fetch(0, &engine, &mut pool).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("slot-0.spill"), "error must name the file: {msg}");
+
+    // Training can continue in RAM: a fresh park into the slot works,
+    // and the failed spill write (dir still gone) leaves it resident.
+    cache.park(1, &h, &plan, &engine, &mut pool).unwrap();
+    assert!(cache.spill(1, &mut pool).is_err());
+    assert!(cache.resident_bytes() > 0, "failed spill must keep the slot");
+    assert!(cache.fetch(1, &engine, &mut pool).unwrap().is_some());
+}
+
+#[test]
+fn enospc_style_spill_target_fails_cleanly_and_checkpoint_survives() {
+    // A regular file where the spill dir should go: every create/write
+    // under it fails the way a full disk does — at the filesystem call.
+    let blocker = fault_dir("enospc_blocker");
+    std::fs::write(&blocker, b"not a directory").unwrap();
+    let spill = blocker.join("spill");
+
+    let ds = DatasetSpec::tiny().generate(1);
+    let quant = QuantConfig::int2_blockwise(4);
+    let cfg_ram = TrainConfig {
+        hidden_dim: 32,
+        num_layers: 2,
+        epochs: 2,
+        seeds: vec![0],
+        partition: PartitionConfig {
+            num_partitions: 2,
+            halo_hops: 1,
+            ..PartitionConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+
+    // Healthy in-RAM run first; its checkpoint is the resume point.
+    let good = iexact::pipeline::train_partitioned(&ds, &quant, &cfg_ram, 3).unwrap();
+    let ckpt = fault_dir("enospc_ckpt");
+    iexact::checkpoint::save(&good.model, &ckpt).unwrap();
+
+    // The streaming run must fail with a named error, not panic.
+    let mut cfg = cfg_ram.clone();
+    cfg.out_of_core = OutOfCoreConfig {
+        spill_dir: Some(spill.to_string_lossy().into_owned()),
+        resident_budget_bytes: 0,
+        prefetch_depth: 1,
+    };
+    let err = iexact::pipeline::train_partitioned(&ds, &quant, &cfg, 3).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("iexact_fault_enospc_blocker"),
+        "error must name the unwritable path: {msg}"
+    );
+
+    // The pre-fault checkpoint is untouched and resumes bit-exactly.
+    let resumed = iexact::checkpoint::load(&ckpt).unwrap();
+    assert_eq!(resumed.weights.len(), good.model.weights.len());
+    for (a, b) in resumed.weights.iter().zip(&good.model.weights) {
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&blocker).ok();
 }
 
 #[test]

@@ -1,0 +1,190 @@
+//! Out-of-core parity suite (ISSUE 6).
+//!
+//! Disk-backed `train_partitioned` (`[out_of_core] spill_dir`) must be
+//! **bit-identical** to the in-RAM path: same loss curves, same final
+//! weights, same checkpoint bytes — across partition counts, halo
+//! depths, fixed and heterogeneous BitPlans, and engine thread counts.
+//! Streaming is a residency knob, never a numerics knob.
+
+use iexact::config::{
+    AllocStrategy, AllocationConfig, DatasetSpec, OutOfCoreConfig, ParallelismConfig,
+    PartitionConfig, QuantConfig, TrainConfig,
+};
+use iexact::graph::Dataset;
+use iexact::pipeline::{train_partitioned, PartitionTrainResult};
+use std::path::PathBuf;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn tiny_ds() -> Dataset {
+    DatasetSpec::tiny().generate(1)
+}
+
+/// The runtime_parity harness config, plus partitioning.
+fn base_cfg(threads: usize, k: usize, halo: usize, adaptive: bool) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs: 6,
+        lr: 0.02,
+        eval_every: 2,
+        seeds: vec![0],
+        parallelism: ParallelismConfig {
+            threads,
+            min_blocks_per_shard: 1,
+        },
+        partition: PartitionConfig {
+            num_partitions: k,
+            halo_hops: halo,
+            ..PartitionConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+    if adaptive {
+        cfg.allocation = AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.5,
+            realloc_interval_epochs: 3,
+            min_bits: 1,
+            max_bits: 8,
+        };
+    }
+    cfg
+}
+
+fn unique_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("iexact_ooc_parity_{}_{tag}", std::process::id()))
+}
+
+fn assert_identical(a: &PartitionTrainResult, b: &PartitionTrainResult, what: &str) {
+    assert_eq!(
+        a.result.curve.train_loss, b.result.curve.train_loss,
+        "{what}: train-loss curve diverged"
+    );
+    assert_eq!(
+        a.result.curve.val_loss, b.result.curve.val_loss,
+        "{what}: val-loss curve diverged"
+    );
+    assert_eq!(
+        a.result.final_train_loss, b.result.final_train_loss,
+        "{what}: final loss diverged"
+    );
+    assert_eq!(
+        a.result.test_accuracy, b.result.test_accuracy,
+        "{what}: test accuracy diverged"
+    );
+    assert_eq!(a.cache_bytes, b.cache_bytes, "{what}: cache bytes diverged");
+    assert_eq!(
+        a.model.weights.len(),
+        b.model.weights.len(),
+        "{what}: layer count diverged"
+    );
+    for (l, (wa, wb)) in a.model.weights.iter().zip(&b.model.weights).enumerate() {
+        assert_eq!(
+            wa.as_slice(),
+            wb.as_slice(),
+            "{what}: layer {l} weights diverged"
+        );
+    }
+}
+
+/// Serialize both models through the checkpoint writer and compare the
+/// files byte for byte.
+fn assert_checkpoints_byte_equal(a: &PartitionTrainResult, b: &PartitionTrainResult, tag: &str) {
+    let pa = unique_dir(&format!("{tag}_ck_a.bin"));
+    let pb = unique_dir(&format!("{tag}_ck_b.bin"));
+    iexact::checkpoint::save(&a.model, &pa).unwrap();
+    iexact::checkpoint::save(&b.model, &pb).unwrap();
+    let ba = std::fs::read(&pa).unwrap();
+    let bb = std::fs::read(&pb).unwrap();
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+    assert_eq!(ba, bb, "{tag}: checkpoint bytes diverged");
+}
+
+#[test]
+fn disk_backed_training_is_bit_identical_to_in_ram() {
+    // The ISSUE 6 acceptance matrix: K in {2,4} x halo in {1,2} x
+    // {fixed, heterogeneous} plans x threads in {1,2,4}.
+    let ds = tiny_ds();
+    let quant = QuantConfig::int2_blockwise(4);
+    for k in [2usize, 4] {
+        for halo in [1usize, 2] {
+            for adaptive in [false, true] {
+                let reference =
+                    train_partitioned(&ds, &quant, &base_cfg(1, k, halo, adaptive), 7).unwrap();
+                for threads in THREAD_COUNTS {
+                    let tag = format!("k{k}_h{halo}_a{}_t{threads}", adaptive as u8);
+                    let dir = unique_dir(&tag);
+                    let mut cfg = base_cfg(threads, k, halo, adaptive);
+                    cfg.out_of_core = OutOfCoreConfig {
+                        spill_dir: Some(dir.to_string_lossy().into_owned()),
+                        resident_budget_bytes: 0,
+                        prefetch_depth: 2,
+                    };
+                    let disk = train_partitioned(&ds, &quant, &cfg, 7).unwrap();
+                    // The streaming run really went through the store.
+                    assert!(
+                        dir.join("graph").join("manifest.bin").exists(),
+                        "{tag}: no chunk store was written"
+                    );
+                    assert!(
+                        dir.join("cache").join("slot-0.spill").exists(),
+                        "{tag}: no activation slot was spilled"
+                    );
+                    assert_identical(&reference, &disk, &tag);
+                    assert_checkpoints_byte_equal(&reference, &disk, &tag);
+                    std::fs::remove_dir_all(&dir).ok();
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_peak_residency_is_thread_invariant() {
+    // Prefetch accounting is schedule-based (manifest bytes of queued
+    // chunks), so the reported peak must not depend on worker timing.
+    let ds = tiny_ds();
+    let quant = QuantConfig::int2_blockwise(4);
+    let mut peaks = Vec::new();
+    for threads in THREAD_COUNTS {
+        let dir = unique_dir(&format!("peak_t{threads}"));
+        let mut cfg = base_cfg(threads, 4, 1, false);
+        cfg.out_of_core = OutOfCoreConfig {
+            spill_dir: Some(dir.to_string_lossy().into_owned()),
+            resident_budget_bytes: 0,
+            prefetch_depth: 2,
+        };
+        let out = train_partitioned(&ds, &quant, &cfg, 3).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        peaks.push(out.peak_resident_bytes);
+    }
+    assert!(
+        peaks.windows(2).all(|w| w[0] == w[1]),
+        "peak residency varied with thread count: {peaks:?}"
+    );
+}
+
+#[test]
+fn prefetch_depths_do_not_change_numbers() {
+    // Depth changes how far ahead chunks decode, never what trains.
+    let ds = tiny_ds();
+    let quant = QuantConfig::int2_blockwise(4);
+    let mut runs = Vec::new();
+    for depth in [0usize, 1, 4] {
+        let dir = unique_dir(&format!("depth{depth}"));
+        let mut cfg = base_cfg(2, 4, 1, false);
+        cfg.out_of_core = OutOfCoreConfig {
+            spill_dir: Some(dir.to_string_lossy().into_owned()),
+            resident_budget_bytes: 0,
+            prefetch_depth: depth,
+        };
+        let out = train_partitioned(&ds, &quant, &cfg, 11).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        runs.push(out);
+    }
+    for pair in runs.windows(2) {
+        assert_identical(&pair[0], &pair[1], "prefetch depth sweep");
+    }
+}

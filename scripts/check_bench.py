@@ -56,7 +56,7 @@ REQUIRED_ARM_KEYS = {
 
 # Expected arm groups and dataset-header fields per bench id.
 EXPECTED_GROUPS = {
-    "pipeline": {"table1", "allocation", "partition", "threads", "fused"},
+    "pipeline": {"table1", "allocation", "partition", "threads", "fused", "ooc"},
     "quant": {"codec"},
 }
 DATASET_KEYS = {
@@ -73,6 +73,7 @@ GROUP_ANCHORS = {
     "fused": "materialize t=1",
     "allocation": "fixed int2",
     "partition": "K=1",
+    "ooc": "in-ram K=32",
 }
 
 DEFAULT_GATED_GROUPS = ["table1", "fused", "threads"]
