@@ -308,6 +308,7 @@ fn main() {
         tcfg.parallelism = ParallelismConfig {
             threads,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         };
         let mut peak = 0usize;
         let (_, med, _) = measure(1, 3, || {

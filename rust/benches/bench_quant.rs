@@ -17,7 +17,7 @@
 
 use iexact::engine::QuantEngine;
 use iexact::memory::BufferPool;
-use iexact::quant::{reference, BinSpec, BlockwiseQuantizer, RowQuantizer};
+use iexact::quant::{reference, BinSpec, BlockwiseQuantizer, CodecIsa, RowQuantizer};
 use iexact::rngs::Pcg64;
 use iexact::tensor::Matrix;
 use iexact::util::timer::measure;
@@ -327,6 +327,72 @@ fn main() {
             });
         }
     }
+    // ---- Per-ISA dequantize arms (runtime dispatch, ISSUE 7) ----
+    // Pure unpack→LUT-dequantize per available ISA tier on a larger
+    // stream, speedup normalized to the SWAR fallback — the acceptance
+    // number for the vector kernels (≥1.5x over SWAR at 2-bit on AVX2
+    // hardware). Outputs are bit-identical across tiers
+    // (tests/codec_dispatch.rs proves it), so this isolates pure decode
+    // throughput.
+    println!(
+        "\n# codec dispatch: dequantize per ISA (G=512, serial), detected = {}",
+        CodecIsa::detect()
+    );
+    println!(
+        "{:<34} {:>12} {:>14} {:>12}",
+        "config", "median ms", "Mscalar/s", "vs swar"
+    );
+    let big_scalars_codec = (big_n * big_r) as f64;
+    for bits in [1u32, 2, 4, 8] {
+        let seed = 0x15A + bits as u64;
+        let swar_engine = QuantEngine::serial().with_codec_isa(CodecIsa::Swar).unwrap();
+        let ct = swar_engine
+            .quantize_seeded(&big, 512, bits, &BinSpec::Uniform, seed)
+            .unwrap();
+        let nbytes = ct.nbytes();
+        // SWAR baseline first so every arm (scalar included) reports a
+        // meaningful ratio against the portable fallback.
+        let swar_med = {
+            let mut pool = BufferPool::new();
+            let (_, med, _) = measure(2, 8, || {
+                let deq = swar_engine.dequantize_pooled(&ct, &mut pool).unwrap();
+                std::hint::black_box(&deq);
+                pool.put_floats(deq.into_vec());
+            });
+            med
+        };
+        for isa in CodecIsa::available() {
+            let engine = QuantEngine::serial().with_codec_isa(isa).unwrap();
+            let mut pool = BufferPool::new();
+            let med = if isa == CodecIsa::Swar {
+                swar_med
+            } else {
+                let (_, med, _) = measure(2, 8, || {
+                    let deq = engine.dequantize_pooled(&ct, &mut pool).unwrap();
+                    std::hint::black_box(&deq);
+                    pool.put_floats(deq.into_vec());
+                });
+                med
+            };
+            let speedup = swar_med / med;
+            let name = format!("dequant int{bits} [{isa}]");
+            println!(
+                "{:<34} {:>12.3} {:>14.1} {:>11.2}x",
+                name,
+                med * 1e3,
+                big_scalars_codec / med / 1e6,
+                speedup
+            );
+            arms.push(Arm {
+                group: "codec",
+                name,
+                ms_per_call: med * 1e3,
+                compressed_bytes: nbytes,
+                speedup_vs_two_pass: speedup,
+            });
+        }
+    }
+
     let path = std::env::var("IEXACT_BENCH_QUANT_JSON")
         .unwrap_or_else(|_| "BENCH_quant.json".to_string());
     write_bench_json(&path, n, r, &arms);

@@ -4,6 +4,7 @@
 
 use crate::alloc::SUPPORTED_WIDTHS;
 use crate::graph::{Dataset, GraphGenerator};
+use crate::quant::CodecIsa;
 use crate::util::toml::TomlTable;
 use crate::{Error, Result};
 
@@ -181,11 +182,17 @@ impl Arch {
 ///   over `B` blocks stays serial unless `B >= 2 * min_blocks_per_shard`,
 ///   and then uses at most `B / min_blocks_per_shard` workers, so tiny
 ///   tensors never pay thread-spawn overhead for microseconds of work.
+/// * `codec_isa` — codec kernel tier: `auto` (the default; runtime
+///   feature detection picks AVX2 / NEON / SWAR), or a pinned
+///   `scalar` | `swar` | `avx2` | `neon`. Every tier emits bit-identical
+///   output (see `docs/codec.md`, "Runtime dispatch"); the
+///   `IEXACT_CODEC_ISA` environment variable overrides this key.
 ///
 /// ```toml
 /// [parallelism]
 /// threads = 0              # auto
 /// min_blocks_per_shard = 512
+/// codec_isa = "auto"       # or scalar | swar | avx2 | neon
 /// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParallelismConfig {
@@ -193,6 +200,9 @@ pub struct ParallelismConfig {
     pub threads: usize,
     /// Minimum blocks a shard must receive before fan-out happens.
     pub min_blocks_per_shard: usize,
+    /// Codec ISA tier: `"auto"` or a [`CodecIsa`] name (see type-level
+    /// docs for precedence against `IEXACT_CODEC_ISA`).
+    pub codec_isa: String,
 }
 
 impl Default for ParallelismConfig {
@@ -200,6 +210,7 @@ impl Default for ParallelismConfig {
         ParallelismConfig {
             threads: 0,
             min_blocks_per_shard: 512,
+            codec_isa: "auto".into(),
         }
     }
 }
@@ -217,6 +228,7 @@ impl ParallelismConfig {
         ParallelismConfig {
             threads: 1,
             min_blocks_per_shard: 1,
+            codec_isa: "auto".into(),
         }
     }
 
@@ -234,6 +246,28 @@ impl ParallelismConfig {
         crate::runtime::pool::resolve_threads(self.threads)
     }
 
+    /// The concrete codec ISA this config resolves to, with the
+    /// documented precedence: the `IEXACT_CODEC_ISA` environment
+    /// variable beats the config key beats feature detection. A pinned
+    /// key that [`validate`](Self::validate) would reject (unknown name
+    /// or unavailable tier) falls back to detection rather than
+    /// panicking — infallible engine constructors call this after
+    /// validation has already run.
+    pub fn resolved_codec_isa(&self) -> CodecIsa {
+        if std::env::var_os("IEXACT_CODEC_ISA").is_some() {
+            return CodecIsa::active();
+        }
+        let key = self.codec_isa.trim();
+        if key != "auto" {
+            if let Ok(isa) = CodecIsa::parse(key) {
+                if isa.is_available() {
+                    return isa;
+                }
+            }
+        }
+        CodecIsa::active()
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.min_blocks_per_shard == 0 {
             return Err(Error::Config("min_blocks_per_shard must be >= 1".into()));
@@ -244,6 +278,25 @@ impl ParallelismConfig {
                 Self::MAX_THREADS,
                 self.threads
             )));
+        }
+        let key = self.codec_isa.trim();
+        if key != "auto" {
+            let isa = CodecIsa::parse(key).map_err(|_| {
+                Error::Config(format!(
+                    "parallelism.codec_isa must be one of auto|scalar|swar|avx2|neon, got '{}'",
+                    self.codec_isa
+                ))
+            })?;
+            if !isa.is_available() {
+                return Err(Error::Config(format!(
+                    "parallelism.codec_isa = '{key}' is not available on this CPU (available: {})",
+                    CodecIsa::available()
+                        .iter()
+                        .map(|i| i.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )));
+            }
         }
         Ok(())
     }
@@ -815,6 +868,11 @@ impl ExperimentConfig {
             }
             train.parallelism.min_blocks_per_shard = m as usize;
         }
+        if let Some(s) = t.get_str("parallelism.codec_isa") {
+            // Spelling is vetted by `ParallelismConfig::validate` (run
+            // below), so raw passthrough keeps the error key-pathed.
+            train.parallelism.codec_isa = s.to_string();
+        }
 
         // [allocation] — adaptive per-block bit widths. Negative values
         // are rejected before the usize/u32 casts, like [parallelism].
@@ -1044,7 +1102,8 @@ seeds = [0, 1]
             cfg.train.parallelism,
             ParallelismConfig {
                 threads: 4,
-                min_blocks_per_shard: 64
+                min_blocks_per_shard: 64,
+                codec_isa: "auto".into(),
             }
         );
         // Defaults when the section is absent.
@@ -1293,6 +1352,7 @@ seeds = [0, 1]
         let explicit = ParallelismConfig {
             threads: 3,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         };
         assert!(!explicit.is_auto());
         assert_eq!(explicit.resolved_threads(), 3);
@@ -1301,10 +1361,50 @@ seeds = [0, 1]
         let err = ParallelismConfig {
             threads: ParallelismConfig::MAX_THREADS + 1,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         }
         .validate()
         .unwrap_err()
         .to_string();
         assert!(err.contains("parallelism.threads"), "{err}");
+    }
+
+    #[test]
+    fn codec_isa_key_parses_validates_and_resolves() {
+        // TOML passthrough: portable spellings validate everywhere.
+        let cfg = ExperimentConfig::from_toml("[parallelism]\ncodec_isa = \"swar\"\n").unwrap();
+        assert_eq!(cfg.train.parallelism.codec_isa, "swar");
+        // Resolution honors the env override above the key, so the
+        // key-wins assertions only hold when the env knob is unset.
+        if std::env::var_os("IEXACT_CODEC_ISA").is_none() {
+            assert_eq!(cfg.train.parallelism.resolved_codec_isa(), CodecIsa::Swar);
+            let cfg =
+                ExperimentConfig::from_toml("[parallelism]\ncodec_isa = \"scalar\"\n").unwrap();
+            assert_eq!(cfg.train.parallelism.resolved_codec_isa(), CodecIsa::Scalar);
+        }
+        // Unknown spellings are rejected with the key path.
+        let err = ExperimentConfig::from_toml("[parallelism]\ncodec_isa = \"sse9\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("parallelism.codec_isa"), "{err}");
+        // `auto` resolves to the detected tier, never the scalar oracle.
+        let auto = ParallelismConfig::default();
+        auto.validate().unwrap();
+        if std::env::var_os("IEXACT_CODEC_ISA").is_none() {
+            assert_eq!(auto.resolved_codec_isa(), CodecIsa::detect());
+        }
+        // A vector tier the host lacks is a validation error naming what
+        // *is* available (exercised wherever detection rules one out).
+        for isa in [CodecIsa::Avx2, CodecIsa::Neon] {
+            if isa.is_available() {
+                continue;
+            }
+            let pinned = ParallelismConfig {
+                codec_isa: isa.name().into(),
+                ..ParallelismConfig::default()
+            };
+            let err = pinned.validate().unwrap_err().to_string();
+            assert!(err.contains("not available"), "{err}");
+        }
     }
 }

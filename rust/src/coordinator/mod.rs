@@ -133,6 +133,7 @@ mod tests {
         let parallel = run_native(&mk(ParallelismConfig {
             threads: 8,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         }))
         .unwrap();
         assert_eq!(

@@ -71,8 +71,8 @@ use crate::config::ParallelismConfig;
 use crate::graph::CsrMatrix;
 use crate::memory::BufferPool;
 use crate::quant::{
-    pack_codes_into, quantize_block, quantize_pack_block, unpack_dequantize_block, BinSpec,
-    CompressedTensor, DequantPlan, QuantPlan,
+    pack_codes_slice_isa, quantize_block, quantize_pack_block, unpack_dequantize_block_tiled,
+    BinSpec, CodecIsa, CompressedTensor, DequantPlan, QuantPlan,
 };
 use crate::rngs::Pcg64;
 use crate::runtime::pool::{Task, WorkerPool, MIN_ROWS_PER_SHARD};
@@ -162,12 +162,14 @@ fn validate_planned(pt: &PlannedTensor) -> Result<Vec<usize>> {
 pub struct QuantEngine {
     pool: Arc<WorkerPool>,
     min_blocks_per_shard: usize,
+    codec_isa: CodecIsa,
 }
 
 impl PartialEq for QuantEngine {
     fn eq(&self, other: &Self) -> bool {
         self.threads() == other.threads()
             && self.min_blocks_per_shard == other.min_blocks_per_shard
+            && self.codec_isa == other.codec_isa
     }
 }
 
@@ -180,6 +182,7 @@ impl QuantEngine {
         QuantEngine {
             pool: Arc::new(WorkerPool::serial()),
             min_blocks_per_shard: 1,
+            codec_isa: CodecIsa::active(),
         }
     }
 
@@ -191,6 +194,7 @@ impl QuantEngine {
         QuantEngine {
             pool: Arc::new(WorkerPool::new(threads)),
             min_blocks_per_shard: 1,
+            codec_isa: CodecIsa::active(),
         }
     }
 
@@ -201,11 +205,14 @@ impl QuantEngine {
     }
 
     /// Build from the `[parallelism]` config section, resolving auto mode
-    /// against `std::thread::available_parallelism`.
+    /// against `std::thread::available_parallelism` and the codec ISA
+    /// against `IEXACT_CODEC_ISA` / `parallelism.codec_isa` / feature
+    /// detection (in that precedence order).
     pub fn from_config(cfg: &ParallelismConfig) -> Self {
         QuantEngine {
             pool: Arc::new(WorkerPool::from_config(cfg)),
             min_blocks_per_shard: cfg.min_blocks_per_shard.max(1),
+            codec_isa: cfg.resolved_codec_isa(),
         }
     }
 
@@ -214,7 +221,32 @@ impl QuantEngine {
         QuantEngine {
             pool,
             min_blocks_per_shard: min_blocks_per_shard.max(1),
+            codec_isa: CodecIsa::active(),
         }
+    }
+
+    /// Pin this engine's codec kernels to one ISA tier, bypassing the
+    /// detected default — the forcing knob the dispatch test matrix and
+    /// per-ISA bench arms are built on. Errors if `isa` is not runnable
+    /// on this CPU (forcing must fail loud, never silently fall back).
+    pub fn with_codec_isa(mut self, isa: CodecIsa) -> Result<Self> {
+        if !isa.is_available() {
+            return Err(Error::Config(format!(
+                "codec ISA '{isa}' is not available on this CPU (available: {})",
+                CodecIsa::available()
+                    .iter()
+                    .map(|i| i.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )));
+        }
+        self.codec_isa = isa;
+        Ok(self)
+    }
+
+    /// The codec ISA tier this engine's pack/unpack/dequantize kernels run on.
+    pub fn codec_isa(&self) -> CodecIsa {
+        self.codec_isa
     }
 
     /// The shared compute runtime this engine executes on — pass it to
@@ -436,7 +468,10 @@ impl QuantEngine {
             Some(p) => p.take_bytes_empty(total_bytes),
             None => Vec::new(),
         };
-        pack_codes_into(&codes, bits, &mut packed)?;
+        // Width was validated by `QuantPlan::resolve` above, so the
+        // infallible ISA-dispatched slice packer applies directly.
+        packed.resize(total_bytes, 0);
+        pack_codes_slice_isa(&codes, bits, &mut packed, self.codec_isa);
         if let Some(p) = pool.as_deref_mut() {
             p.put_bytes(codes);
         }
@@ -488,18 +523,20 @@ impl QuantEngine {
             None => vec![0f32; n],
         };
 
+        let isa = self.codec_isa;
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
             for g in 0..num_groups {
                 let start = g * group_len;
                 let end = (start + group_len).min(n);
-                unpack_dequantize_block(
+                unpack_dequantize_block_tiled(
                     &plan,
                     ct.zeros[g],
                     ct.ranges[g],
                     &ct.packed,
                     start,
                     &mut out[start..end],
+                    isa,
                 );
             }
         } else {
@@ -524,7 +561,15 @@ impl QuantEngine {
                     for (j, (&z, &r)) in zeros_c.iter().zip(ranges_c).enumerate() {
                         let lo = j * group_len;
                         let hi = (lo + group_len).min(out_c.len());
-                        unpack_dequantize_block(plan, z, r, packed, base + lo, &mut out_c[lo..hi]);
+                        unpack_dequantize_block_tiled(
+                            plan,
+                            z,
+                            r,
+                            packed,
+                            base + lo,
+                            &mut out_c[lo..hi],
+                            isa,
+                        );
                     }
                 }));
             }
@@ -754,6 +799,7 @@ impl QuantEngine {
             None => vec![0f32; n],
         };
 
+        let isa = self.codec_isa;
         let shards = self.effective_shards(num_groups);
         if shards <= 1 {
             for g in 0..num_groups {
@@ -761,13 +807,14 @@ impl QuantEngine {
                 let hi = (lo + group_len).min(n);
                 let bits = pt.plan.bit(g);
                 let dp = dplans[width_slot(bits)].as_ref().expect("resolved above");
-                unpack_dequantize_block(
+                unpack_dequantize_block_tiled(
                     dp,
                     pt.zeros[g],
                     pt.ranges[g],
                     &pt.packed[offsets[g]..offsets[g + 1]],
                     0,
                     &mut out[lo..hi],
+                    isa,
                 );
             }
         } else {
@@ -791,13 +838,14 @@ impl QuantEngine {
                         let bits = plan.bit(g);
                         let dp =
                             dplans[width_slot(bits)].as_ref().expect("resolved above");
-                        unpack_dequantize_block(
+                        unpack_dequantize_block_tiled(
                             dp,
                             zeros[g],
                             ranges[g],
                             &packed[offsets[g]..offsets[g + 1]],
                             0,
                             &mut out_c[lo..hi],
+                            isa,
                         );
                     }
                 }));
@@ -851,6 +899,7 @@ impl QuantEngine {
             ranges: &ct.ranges,
             group_len: ct.group_len,
             n_scalars,
+            isa: self.codec_isa,
             layout: DecodeLayout::Fixed {
                 plan: DequantPlan::resolve(ct.bits, &ct.bins),
             },
@@ -890,6 +939,7 @@ impl QuantEngine {
             ranges: &pt.ranges,
             group_len: pt.plan.group_len(),
             n_scalars,
+            isa: self.codec_isa,
             layout: DecodeLayout::planned(&pt.plan, &offsets),
         };
         self.fused_matmul(&dec, (rows, cols), b, pool)
@@ -949,6 +999,7 @@ impl QuantEngine {
             ranges: &pt.ranges,
             group_len: pt.plan.group_len(),
             n_scalars,
+            isa: self.codec_isa,
             layout: DecodeLayout::planned(&pt.plan, &offsets),
         };
         self.fused_spmm(adj, &dec, cols, pool)
@@ -1153,6 +1204,7 @@ struct BlockDecoder<'a> {
     ranges: &'a [f32],
     group_len: usize,
     n_scalars: usize,
+    isa: CodecIsa,
     layout: DecodeLayout<'a>,
 }
 
@@ -1205,13 +1257,14 @@ impl BlockDecoder<'_> {
         let out = &mut floats[..len];
         match &self.layout {
             DecodeLayout::Fixed { plan } => {
-                unpack_dequantize_block(
+                unpack_dequantize_block_tiled(
                     plan,
                     self.zeros[g],
                     self.ranges[g],
                     self.packed,
                     g * self.group_len,
                     out,
+                    self.isa,
                 );
             }
             DecodeLayout::Planned {
@@ -1223,13 +1276,14 @@ impl BlockDecoder<'_> {
                 let dp = dplans[width_slot(bits)]
                     .as_ref()
                     .expect("plan resolved per used width");
-                unpack_dequantize_block(
+                unpack_dequantize_block_tiled(
                     dp,
                     self.zeros[g],
                     self.ranges[g],
                     &self.packed[offsets[g]..offsets[g + 1]],
                     0,
                     out,
+                    self.isa,
                 );
             }
         }
@@ -1258,6 +1312,7 @@ mod tests {
         let e = QuantEngine::from_config(&ParallelismConfig {
             threads: 8,
             min_blocks_per_shard: 100,
+            ..ParallelismConfig::default()
         });
         assert_eq!(e.effective_shards(50), 1); // too few blocks
         assert_eq!(e.effective_shards(199), 1); // < 2 full shards

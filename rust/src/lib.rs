@@ -104,7 +104,7 @@ pub mod prelude {
     pub use crate::metrics::RunSummary;
     pub use crate::partition::{partition_dataset, GraphPartition, PartitionSet};
     pub use crate::pipeline::{train, train_partitioned, PartitionTrainResult, TrainResult};
-    pub use crate::quant::{BlockwiseQuantizer, CompressedTensor, RowQuantizer};
+    pub use crate::quant::{BlockwiseQuantizer, CodecIsa, CompressedTensor, RowQuantizer};
     pub use crate::rngs::Pcg64;
     pub use crate::rp::RandomProjection;
     pub use crate::stats::ClippedNormal;

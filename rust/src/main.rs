@@ -49,6 +49,10 @@ TRAIN OPTIONS:
     --threads <n>                 compute-runtime workers for the whole step
                                   (quantize + matmul + spmm + fused unstash);
                                   0 = auto (one per core, capped at 8)
+    --codec-isa <tier>            pin the codec kernels to one ISA tier:
+                                  auto|scalar|swar|avx2|neon (default auto =
+                                  runtime feature detection; all tiers are
+                                  bit-identical). IEXACT_CODEC_ISA env wins.
     --budget-bits <b>             adaptive per-block bit allocation (greedy)
                                   at an average budget of b bits/scalar
     --partitions <k>              partitioned training over k BFS edge-cut
@@ -331,6 +335,12 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         cfg.train.parallelism.threads = t.parse().map_err(|_| {
             iexact::Error::Config(format!("--threads expects a non-negative integer, got '{t}'"))
         })?;
+    }
+    // CLI override for the codec ISA tier. The spelling is vetted by
+    // `ParallelismConfig::validate` below (key-pathed error), so an
+    // unknown or unavailable tier is rejected, like --threads.
+    if let Some(isa) = opts.get("codec-isa") {
+        cfg.train.parallelism.codec_isa = isa.clone();
     }
     // CLI opt-in to adaptive bit allocation: --budget-bits <b> switches
     // the strategy to greedy at that average budget (the rest of the

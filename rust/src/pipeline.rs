@@ -1520,6 +1520,7 @@ mod tests {
         parallel_cfg.parallelism = ParallelismConfig {
             threads: 8,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         };
         for quant in [QuantConfig::int2_blockwise(4), QuantConfig::int2_exact()] {
             let a = train(&ds, &quant, &serial_cfg, 5).unwrap();
@@ -1599,6 +1600,7 @@ mod tests {
         parallel_cfg.parallelism = ParallelismConfig {
             threads: 8,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         };
         let a = train(&ds, &QuantConfig::int2_blockwise(4), &serial_cfg, 5).unwrap();
         let b = train(&ds, &QuantConfig::int2_blockwise(4), &parallel_cfg, 5).unwrap();
@@ -1719,6 +1721,7 @@ mod tests {
         parallel_cfg.parallelism = ParallelismConfig {
             threads: 8,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         };
         let a = train_partitioned(&ds, &q, &serial_cfg, 5).unwrap();
         let b = train_partitioned(&ds, &q, &parallel_cfg, 5).unwrap();

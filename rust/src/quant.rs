@@ -32,6 +32,25 @@
 //! compares against bit-for-bit. Layout, word shapes and the cost
 //! model: `docs/codec.md`.
 //!
+//! ## Runtime ISA dispatch
+//!
+//! The SWAR fold is the universal fallback of a runtime-dispatched
+//! kernel family ([`isa`]): explicit AVX2 (x86-64) and NEON (aarch64)
+//! implementations of the pack / unpack / LUT-dequantize hot loops are
+//! selected once per process via `std::arch` feature detection, and a
+//! plain scalar path is kept as the simplest oracle. Every path is
+//! byte-identical on the packed layout and bit-identical through
+//! quantize→pack and unpack→dequantize — the LUT decode is a pure
+//! table lookup, so vectorizing it cannot reassociate any float math.
+//! `tests/codec_dispatch.rs` forces each available path and proves it
+//! against [`reference`]. The active path can be pinned end to end
+//! with the `IEXACT_CODEC_ISA` env var (strongest), the
+//! `parallelism.codec_isa` config key / `--codec-isa` CLI flag, or per
+//! engine via
+//! [`QuantEngine::with_codec_isa`](crate::engine::QuantEngine::with_codec_isa).
+//! Detection order, per-kernel safety arguments and how to add an ISA:
+//! `docs/codec.md`.
+//!
 //! ## Execution model
 //!
 //! Every quantization group is independent — one `(Z, r)` pair, one slice
@@ -62,6 +81,8 @@
 use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
 use crate::{Error, Result};
+
+pub use isa::CodecIsa;
 
 /// Quantization bin layout on the normalized range `[0, B]`.
 #[derive(Debug, Clone, PartialEq)]
@@ -262,6 +283,63 @@ fn swar_unpack4(p: u32) -> u64 {
     (w | (w << 4)) & 0x0F0F_0F0F_0F0F_0F0F
 }
 
+// ---------------------------------------------------------------------
+// Shared range-splitting arithmetic. Every ISA kernel walks a code
+// range the same way — scalar head to the next byte boundary, word- or
+// vector-parallel body, scalar tail — and the bounds arithmetic for
+// that walk lives here exactly once.
+// ---------------------------------------------------------------------
+
+/// A decode/encode range split: `head` scalar codes reach the next
+/// byte boundary, `body` codes (a multiple of the kernel's `group`
+/// stride) run word- or vector-parallel, `tail` codes finish scalar.
+/// `head + body + tail == n` always.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct RangeSplit {
+    /// Scalar codes before the first byte-aligned index.
+    pub(crate) head: usize,
+    /// Byte-aligned codes; always a multiple of the kernel stride.
+    pub(crate) body: usize,
+    /// Scalar codes after the body.
+    pub(crate) tail: usize,
+}
+
+/// Split a range of `n` codes starting at scalar index `start` for a
+/// kernel whose body consumes `group` codes per iteration (`group`
+/// must be a positive multiple of `codes_per_byte = 8 / bits`). After
+/// the head, the running index `start + head` is byte-aligned (or the
+/// range is exhausted and `body == tail == 0`), so the body may
+/// address `packed[(start + head) / codes_per_byte ..]` bytewise.
+pub(crate) fn split_range(
+    start: usize,
+    n: usize,
+    codes_per_byte: usize,
+    group: usize,
+) -> RangeSplit {
+    debug_assert!(codes_per_byte > 0 && group > 0 && group % codes_per_byte == 0);
+    let misalign = start % codes_per_byte;
+    let head = if misalign == 0 {
+        0
+    } else {
+        (codes_per_byte - misalign).min(n)
+    };
+    let body = (n - head) / group * group;
+    RangeSplit {
+        head,
+        body,
+        tail: n - head - body,
+    }
+}
+
+/// Scalar extraction of code `idx` from a packed stream at any
+/// supported width — the oracle move every head/tail loop makes.
+#[inline(always)]
+pub(crate) fn get_code(packed: &[u8], bits: u32, idx: usize) -> u8 {
+    let cpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    (packed[idx / cpb] >> (bits as usize * (idx % cpb))) & mask
+}
+
 /// [`pack_codes`] into an exactly-sized output slice, writing **every**
 /// byte of `out` (the final partial byte is zero-padded). This is the
 /// per-block packer of the heterogeneous-width path: each block of a
@@ -273,7 +351,38 @@ fn swar_unpack4(p: u32) -> u64 {
 ///
 /// `out.len()` must equal `(codes.len() * bits).div_ceil(8)`; width must
 /// be one of 1/2/4/8 (both are validated by the callers once per tensor).
+///
+/// Dispatches to the process-wide active [`isa::CodecIsa`]; use
+/// [`pack_codes_slice_isa`] to pin a path.
 pub(crate) fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
+    pack_codes_slice_isa(codes, bits, out, isa::CodecIsa::active());
+}
+
+/// [`pack_codes_slice`] on an explicitly chosen ISA path. Every path
+/// emits byte-identical output: the layout is frozen by
+/// `tests/golden_pack.rs` and cross-ISA equality is enforced by
+/// `tests/codec_dispatch.rs`.
+pub(crate) fn pack_codes_slice_isa(codes: &[u8], bits: u32, out: &mut [u8], isa: isa::CodecIsa) {
+    match isa {
+        isa::CodecIsa::Scalar => reference::pack_codes_slice_scalar(codes, bits, out),
+        isa::CodecIsa::Swar => pack_codes_slice_swar(codes, bits, out),
+        // SAFETY: `Avx2`/`Neon` values only come from `CodecIsa`
+        // constructors that vet `is_available()` (detection, config
+        // validation, the forced test entry points), so the required
+        // target feature is present at runtime.
+        #[cfg(target_arch = "x86_64")]
+        isa::CodecIsa::Avx2 => unsafe { isa::avx2::pack_codes_slice(codes, bits, out) },
+        #[cfg(target_arch = "aarch64")]
+        isa::CodecIsa::Neon => unsafe { isa::neon::pack_codes_slice(codes, bits, out) },
+        // A vector ISA this build has no kernels for (unreachable in
+        // practice: such values never pass `is_available()`).
+        _ => pack_codes_slice_swar(codes, bits, out),
+    }
+}
+
+/// The SWAR pack path: full 8-code groups fold through one `u64` op
+/// chain; only the ragged tail (< 8 codes) packs scalar-wise.
+fn pack_codes_slice_swar(codes: &[u8], bits: u32, out: &mut [u8]) {
     debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
     let full = codes.len() / 8;
     let word = |i: usize| -> u64 {
@@ -350,8 +459,9 @@ pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
 /// every supported width divides 8, codes never straddle byte
 /// boundaries.
 ///
-/// Word-parallel: after a scalar head reaches a byte boundary, every
-/// full 8-code group spreads through one SWAR fold; only the ragged
+/// Word-parallel: after a scalar head reaches a byte boundary
+/// ([`split_range`]), every full 8-code group spreads through one SWAR
+/// fold (or a wider vector op on the AVX2/NEON paths); only the ragged
 /// tail decodes scalar-wise.
 ///
 /// The production caller is [`unpack_codes`] (always `start == 0`,
@@ -361,75 +471,87 @@ pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u8>> {
 /// shared packed stream (unit-tested against scalar extraction);
 /// callers must pre-validate that `packed` holds at least
 /// `start + out.len()` codes — out-of-range access panics.
+///
+/// Dispatches to the process-wide active [`isa::CodecIsa`]; use
+/// [`unpack_range_isa`] to pin a path.
 pub(crate) fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    unpack_range_isa(packed, bits, start, out, isa::CodecIsa::active());
+}
+
+/// [`unpack_range`] on an explicitly chosen ISA path.
+pub(crate) fn unpack_range_isa(
+    packed: &[u8],
+    bits: u32,
+    start: usize,
+    out: &mut [u8],
+    isa: isa::CodecIsa,
+) {
+    match isa {
+        isa::CodecIsa::Scalar => unpack_range_scalar(packed, bits, start, out),
+        isa::CodecIsa::Swar => unpack_range_swar(packed, bits, start, out),
+        // SAFETY: vector variants are only constructed after
+        // `is_available()` vetting — the feature is present.
+        #[cfg(target_arch = "x86_64")]
+        isa::CodecIsa::Avx2 => unsafe { isa::avx2::unpack_range(packed, bits, start, out) },
+        #[cfg(target_arch = "aarch64")]
+        isa::CodecIsa::Neon => unsafe { isa::neon::unpack_range(packed, bits, start, out) },
+        _ => unpack_range_swar(packed, bits, start, out),
+    }
+}
+
+/// The scalar-oracle unpack path: one shift/mask per code, no word
+/// tricks at all.
+fn unpack_range_scalar(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = get_code(packed, bits, start + i);
+    }
+}
+
+/// The SWAR unpack path: [`split_range`] head, one SWAR fold per
+/// 8-code group, scalar tail.
+fn unpack_range_swar(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
     let n = out.len();
+    if bits == 8 {
+        out.copy_from_slice(&packed[start..start + n]);
+        return;
+    }
+    let cpb = (8 / bits) as usize;
+    let s = split_range(start, n, cpb, 8);
+    for i in 0..s.head {
+        out[i] = get_code(packed, bits, start + i);
+    }
+    let mut i = s.head;
+    let mut p = (start + s.head) / cpb;
+    let body_end = s.head + s.body;
     match bits {
         1 => {
-            let mut i = 0;
-            let mut idx = start;
-            while i < n && idx % 8 != 0 {
-                out[i] = (packed[idx / 8] >> (idx % 8)) & 0b1;
-                i += 1;
-                idx += 1;
-            }
-            while i + 8 <= n {
-                let w = swar_unpack1(packed[idx / 8]);
+            while i < body_end {
+                let w = swar_unpack1(packed[p]);
                 out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                p += 1;
                 i += 8;
-                idx += 8;
-            }
-            while i < n {
-                out[i] = (packed[idx / 8] >> (idx % 8)) & 0b1;
-                i += 1;
-                idx += 1;
             }
         }
         2 => {
-            let mut i = 0;
-            let mut idx = start;
-            while i < n && idx % 4 != 0 {
-                out[i] = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
-                i += 1;
-                idx += 1;
-            }
-            while i + 8 <= n {
-                let p = idx / 4;
+            while i < body_end {
                 let half = u16::from_le_bytes(packed[p..p + 2].try_into().expect("2-byte chunk"));
-                let w = swar_unpack2(half);
-                out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                out[i..i + 8].copy_from_slice(&swar_unpack2(half).to_le_bytes());
+                p += 2;
                 i += 8;
-                idx += 8;
-            }
-            while i < n {
-                out[i] = (packed[idx / 4] >> (2 * (idx % 4))) & 0b11;
-                i += 1;
-                idx += 1;
             }
         }
         4 => {
-            let mut i = 0;
-            let mut idx = start;
-            while i < n && idx % 2 != 0 {
-                out[i] = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
-                i += 1;
-                idx += 1;
-            }
-            while i + 8 <= n {
-                let p = idx / 2;
+            while i < body_end {
                 let quad = u32::from_le_bytes(packed[p..p + 4].try_into().expect("4-byte chunk"));
-                let w = swar_unpack4(quad);
-                out[i..i + 8].copy_from_slice(&w.to_le_bytes());
+                out[i..i + 8].copy_from_slice(&swar_unpack4(quad).to_le_bytes());
+                p += 4;
                 i += 8;
-                idx += 8;
-            }
-            while i < n {
-                out[i] = (packed[idx / 2] >> (4 * (idx % 2))) & 0b1111;
-                i += 1;
-                idx += 1;
             }
         }
-        8 => out.copy_from_slice(&packed[start..start + n]),
         _ => unreachable!("bit width validated before unpacking"),
+    }
+    for i in body_end..n {
+        out[i] = get_code(packed, bits, start + i);
     }
 }
 
@@ -551,6 +673,9 @@ pub(crate) fn dequantize_block(
 ///
 /// Same bounds contract as [`unpack_range`]: `packed` must hold at
 /// least `start + out.len()` codes.
+///
+/// Dispatches to the process-wide active [`isa::CodecIsa`]; use
+/// [`unpack_dequantize_block_isa`] to pin a path.
 pub(crate) fn unpack_dequantize_block(
     plan: &DequantPlan,
     z: f32,
@@ -559,20 +684,52 @@ pub(crate) fn unpack_dequantize_block(
     start: usize,
     out: &mut [f32],
 ) {
+    unpack_dequantize_block_isa(plan, z, r, packed, start, out, isa::CodecIsa::active());
+}
+
+/// [`unpack_dequantize_block`] on an explicitly chosen ISA path. The
+/// LUT decode performs no per-element float arithmetic — every output
+/// is a pure table lookup of a value computed once per block — so the
+/// vector paths are bit-identical to the scalar oracle by construction
+/// (and `tests/codec_dispatch.rs` enforces it anyway).
+pub(crate) fn unpack_dequantize_block_isa(
+    plan: &DequantPlan,
+    z: f32,
+    r: f32,
+    packed: &[u8],
+    start: usize,
+    out: &mut [f32],
+    isa: isa::CodecIsa,
+) {
     if plan.norm.len() <= 16 {
         // Sub-byte widths (1/2/4 bits; 16 levels at most): value LUT.
         let mut lut = [0.0f32; 16];
         for (k, &p) in plan.norm.iter().enumerate() {
             lut[k] = z + r * p;
         }
-        match plan.bits {
-            1 => decode_block_lut_width::<1>(packed, start, out, &lut),
-            2 => decode_block_lut_width::<2>(packed, start, out, &lut),
-            4 => decode_block_lut_width::<4>(packed, start, out, &lut),
-            _ => unreachable!("≤ 16 levels implies a sub-byte width"),
+        match isa {
+            isa::CodecIsa::Scalar => decode_block_lut_scalar(packed, plan.bits, start, out, &lut),
+            // SAFETY: vector variants are only constructed after
+            // `is_available()` vetting — the feature is present.
+            #[cfg(target_arch = "x86_64")]
+            isa::CodecIsa::Avx2 => unsafe {
+                isa::avx2::decode_block_lut(packed, plan.bits, start, out, &lut)
+            },
+            #[cfg(target_arch = "aarch64")]
+            isa::CodecIsa::Neon => unsafe {
+                isa::neon::decode_block_lut(packed, plan.bits, start, out, &lut)
+            },
+            _ => match plan.bits {
+                1 => decode_block_lut_width::<1>(packed, start, out, &lut),
+                2 => decode_block_lut_width::<2>(packed, start, out, &lut),
+                4 => decode_block_lut_width::<4>(packed, start, out, &lut),
+                _ => unreachable!("≤ 16 levels implies a sub-byte width"),
+            },
         }
     } else if plan.uniform {
-        // INT8 uniform: codes are whole bytes; ĥ = z + k·(r/B).
+        // INT8 uniform: codes are whole bytes; ĥ = z + k·(r/B). No
+        // unpacking exists to vectorize, so the byte-wide paths are
+        // shared by every ISA (memory-bound either way).
         let w = r / plan.b_max;
         let bytes = &packed[start..start + out.len()];
         for (o, &code) in out.iter_mut().zip(bytes) {
@@ -587,9 +744,56 @@ pub(crate) fn unpack_dequantize_block(
     }
 }
 
-/// LUT decode loop for a sub-byte width `B`: scalar head to the next
-/// byte boundary, then one byte → `8 / B` lookups (the compiler unrolls
-/// the constant-trip inner loop), scalar tail.
+/// Decode tile for the engine's fused consumers, in codes: 4096 codes
+/// are 16 KiB of `f32` output plus at most 2 KiB of packed input per
+/// tile, which sits in L1 alongside the 64-byte value LUT — the vector
+/// body streams from cache even when a caller decodes a multi-megabyte
+/// range in one call.
+pub(crate) const DECODE_TILE: usize = 4096;
+
+/// [`unpack_dequantize_block_isa`] in cache-sized tiles. Decoding is
+/// positionally pure — code `start + i` alone determines `out[i]` — so
+/// any tiling is bit-identical to one flat call; the tile loop only
+/// bounds the working set of the engine's fused consumers.
+pub(crate) fn unpack_dequantize_block_tiled(
+    plan: &DequantPlan,
+    z: f32,
+    r: f32,
+    packed: &[u8],
+    start: usize,
+    out: &mut [f32],
+    isa: isa::CodecIsa,
+) {
+    let n = out.len();
+    if n <= DECODE_TILE {
+        unpack_dequantize_block_isa(plan, z, r, packed, start, out, isa);
+        return;
+    }
+    let mut off = 0;
+    while off < n {
+        let end = (off + DECODE_TILE).min(n);
+        unpack_dequantize_block_isa(plan, z, r, packed, start + off, &mut out[off..end], isa);
+        off = end;
+    }
+}
+
+/// The scalar-oracle LUT decode: one shift/mask/lookup per code.
+fn decode_block_lut_scalar(
+    packed: &[u8],
+    bits: u32,
+    start: usize,
+    out: &mut [f32],
+    lut: &[f32; 16],
+) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = lut[get_code(packed, bits, start + i) as usize];
+    }
+}
+
+/// Portable (SWAR-tier) LUT decode loop for a sub-byte width `B`:
+/// scalar head to the next byte boundary ([`split_range`]), then one
+/// byte → `8 / B` lookups (the compiler unrolls the constant-trip
+/// inner loop), scalar tail.
 fn decode_block_lut_width<const B: usize>(
     packed: &[u8],
     start: usize,
@@ -599,27 +803,23 @@ fn decode_block_lut_width<const B: usize>(
     let cpb = 8 / B; // codes per byte
     let mask = (1usize << B) - 1;
     let n = out.len();
-    let mut i = 0;
-    let mut idx = start;
-    while i < n && idx % cpb != 0 {
-        out[i] = lut[(packed[idx / cpb] as usize >> (B * (idx % cpb))) & mask];
-        i += 1;
-        idx += 1;
+    let s = split_range(start, n, cpb, cpb);
+    for i in 0..s.head {
+        out[i] = lut[get_code(packed, B as u32, start + i) as usize];
     }
-    let mut p = idx / cpb;
-    while i + cpb <= n {
+    let mut i = s.head;
+    let mut p = (start + s.head) / cpb;
+    let body_end = s.head + s.body;
+    while i < body_end {
         let byte = packed[p] as usize;
         p += 1;
         for k in 0..cpb {
             out[i + k] = lut[(byte >> (B * k)) & mask];
         }
         i += cpb;
-        idx += cpb;
     }
-    while i < n {
-        out[i] = lut[(packed[idx / cpb] as usize >> (B * (idx % cpb))) & mask];
-        i += 1;
-        idx += 1;
+    for i in body_end..n {
+        out[i] = lut[get_code(packed, B as u32, start + i) as usize];
     }
 }
 
@@ -879,6 +1079,694 @@ pub fn quantize_grouped_seeded(
     seed: u64,
 ) -> Result<CompressedTensor> {
     crate::engine::QuantEngine::serial().quantize_seeded(h, group_len, bits, bins, seed)
+}
+
+/// Runtime ISA dispatch for the codec kernels.
+///
+/// Every sub-byte codec hot loop — `pack_codes_slice`, `unpack_range`
+/// and the fused LUT dequantize — exists in up to four interchangeable
+/// implementations: a **scalar** oracle (one shift/mask per code), the
+/// portable **SWAR** fold (8 codes per `u64`, the universal fallback),
+/// and explicit-SIMD **AVX2** (x86-64) / **NEON** (aarch64) kernels.
+/// [`CodecIsa::active`] picks the best available path once per process
+/// via `std::arch` runtime feature detection; the `IEXACT_CODEC_ISA`
+/// env var pins it for tests, benches and CI. All paths produce
+/// byte-identical packed streams and bit-identical `f32`
+/// reconstructions — enforced by `tests/codec_dispatch.rs` against
+/// [`reference`](super::reference).
+///
+/// Safety argument shared by the vector kernels: they are `unsafe`
+/// only for their `#[target_feature]` contract (the instruction set
+/// must be present — guaranteed because `Avx2`/`Neon` values are only
+/// constructed after [`CodecIsa::is_available`] vetting) and for raw
+/// unaligned loads/stores whose bounds derive from
+/// [`split_range`](super::split_range): the body processes whole
+/// byte-aligned groups, so a group touching codes
+/// `[start + i, start + i + G)` touches exactly packed bytes
+/// `[(start + i)·b/8, (start + i + G)·b/8)` and output elements
+/// `[i, i + G)`, both inside the caller-validated ranges. No alignment
+/// is assumed anywhere (`loadu`/`storeu` only).
+pub mod isa {
+    use crate::{Error, Result};
+    use std::sync::OnceLock;
+
+    /// One codec kernel family. Ordering in [`CodecIsa::ALL`] is
+    /// slowest-to-fastest; detection picks the last available entry.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+    pub enum CodecIsa {
+        /// One shift/mask per code — the simplest oracle tier.
+        Scalar,
+        /// Portable 8-codes-per-`u64` fold; available everywhere.
+        Swar,
+        /// 128/256-bit x86-64 kernels (`vpsrlvd` index extraction,
+        /// `vpermps` LUT lookup, byte unpack/pack trees).
+        Avx2,
+        /// aarch64 kernels (`vzip`/`vuzp` trees, `tbl` LUT lookup).
+        Neon,
+    }
+
+    impl CodecIsa {
+        /// Every variant, slowest first.
+        pub const ALL: [CodecIsa; 4] = [
+            CodecIsa::Scalar,
+            CodecIsa::Swar,
+            CodecIsa::Avx2,
+            CodecIsa::Neon,
+        ];
+
+        /// The knob spelling (`IEXACT_CODEC_ISA`, `parallelism.codec_isa`,
+        /// `--codec-isa`) for this variant.
+        pub fn name(self) -> &'static str {
+            match self {
+                CodecIsa::Scalar => "scalar",
+                CodecIsa::Swar => "swar",
+                CodecIsa::Avx2 => "avx2",
+                CodecIsa::Neon => "neon",
+            }
+        }
+
+        /// Parse a knob value. `"auto"` is *not* accepted here — auto
+        /// resolution is the caller's business ([`CodecIsa::detect`]).
+        pub fn parse(s: &str) -> Result<CodecIsa> {
+            match s {
+                "scalar" => Ok(CodecIsa::Scalar),
+                "swar" => Ok(CodecIsa::Swar),
+                "avx2" => Ok(CodecIsa::Avx2),
+                "neon" => Ok(CodecIsa::Neon),
+                other => Err(Error::Config(format!(
+                    "unknown codec ISA '{other}' (expected scalar|swar|avx2|neon)"
+                ))),
+            }
+        }
+
+        /// Whether this path can run on the current host: portable
+        /// tiers always, vector tiers iff compiled for the matching
+        /// architecture *and* the CPU reports the feature at runtime.
+        pub fn is_available(self) -> bool {
+            match self {
+                CodecIsa::Scalar | CodecIsa::Swar => true,
+                CodecIsa::Avx2 => avx2_detected(),
+                CodecIsa::Neon => neon_detected(),
+            }
+        }
+
+        /// All paths runnable on this host, slowest first. Always
+        /// contains `Scalar` and `Swar`; the differential suite
+        /// iterates exactly this list.
+        pub fn available() -> Vec<CodecIsa> {
+            Self::ALL.iter().copied().filter(|i| i.is_available()).collect()
+        }
+
+        /// The best available path: `Avx2` or `Neon` when detected,
+        /// else the SWAR fallback. `Scalar` is never auto-selected —
+        /// it exists to be forced.
+        pub fn detect() -> CodecIsa {
+            if CodecIsa::Avx2.is_available() {
+                CodecIsa::Avx2
+            } else if CodecIsa::Neon.is_available() {
+                CodecIsa::Neon
+            } else {
+                CodecIsa::Swar
+            }
+        }
+
+        /// The process-wide active path, resolved once: the
+        /// `IEXACT_CODEC_ISA` env var if set (the strongest override —
+        /// it reaches default-constructed engines in tests, benches and
+        /// CI end to end), else [`CodecIsa::detect`]. An unknown or
+        /// host-unavailable env value **panics**: the env var is a
+        /// forcing knob, and silently falling back would let a pinned
+        /// CI matrix row silently test the wrong path.
+        pub fn active() -> CodecIsa {
+            static ACTIVE: OnceLock<CodecIsa> = OnceLock::new();
+            *ACTIVE.get_or_init(|| match std::env::var("IEXACT_CODEC_ISA") {
+                Ok(v) => {
+                    let isa = CodecIsa::parse(v.trim())
+                        .unwrap_or_else(|e| panic!("IEXACT_CODEC_ISA: {e}"));
+                    assert!(
+                        isa.is_available(),
+                        "IEXACT_CODEC_ISA={v} is not available on this host \
+                         (available: {:?})",
+                        CodecIsa::available()
+                    );
+                    isa
+                }
+                Err(_) => CodecIsa::detect(),
+            })
+        }
+    }
+
+    impl std::fmt::Display for CodecIsa {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str(self.name())
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_detected() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    fn avx2_detected() -> bool {
+        false
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn neon_detected() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    fn neon_detected() -> bool {
+        false
+    }
+
+    // -----------------------------------------------------------------
+    // Forced-dispatch entry points for the differential harness. Doc-
+    // hidden `pub` rather than `#[cfg(test)]` because the integration
+    // suite (`tests/codec_dispatch.rs`) and `bench_quant` link the
+    // crate externally — same deal as [`reference`](super::reference).
+    // They assert availability and geometry loudly: these are test
+    // surface, not production surface.
+    // -----------------------------------------------------------------
+
+    /// `pack_codes_slice` pinned to `isa`.
+    #[doc(hidden)]
+    pub fn pack_codes_slice_forced(isa: CodecIsa, codes: &[u8], bits: u32, out: &mut [u8]) {
+        assert!(isa.is_available(), "codec ISA {isa} not available on this host");
+        assert!(matches!(bits, 1 | 2 | 4 | 8), "unsupported bit width {bits}");
+        assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+        super::pack_codes_slice_isa(codes, bits, out, isa);
+    }
+
+    /// `unpack_range` pinned to `isa`.
+    #[doc(hidden)]
+    pub fn unpack_range_forced(
+        isa: CodecIsa,
+        packed: &[u8],
+        bits: u32,
+        start: usize,
+        out: &mut [u8],
+    ) {
+        assert!(isa.is_available(), "codec ISA {isa} not available on this host");
+        assert!(matches!(bits, 1 | 2 | 4 | 8), "unsupported bit width {bits}");
+        assert!(
+            packed.len() * (8 / bits) as usize >= start + out.len(),
+            "packed buffer too short for start={start} + {} codes",
+            out.len()
+        );
+        super::unpack_range_isa(packed, bits, start, out, isa);
+    }
+
+    /// Fused unpack→dequantize pinned to `isa`, resolving the
+    /// per-block plan from `(bits, bins)`.
+    #[doc(hidden)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn unpack_dequantize_forced(
+        isa: CodecIsa,
+        bits: u32,
+        bins: &super::BinSpec,
+        z: f32,
+        r: f32,
+        packed: &[u8],
+        start: usize,
+        out: &mut [f32],
+    ) {
+        assert!(isa.is_available(), "codec ISA {isa} not available on this host");
+        assert!(matches!(bits, 1 | 2 | 4 | 8), "unsupported bit width {bits}");
+        let plan = super::DequantPlan::resolve(bits, bins);
+        super::unpack_dequantize_block_isa(&plan, z, r, packed, start, out, isa);
+    }
+
+    /// AVX2 kernels. `unsafe` per the module-level safety argument:
+    /// reachable only through `is_available()`-vetted `CodecIsa::Avx2`
+    /// values, bounds from [`split_range`](super::split_range),
+    /// unaligned loads/stores throughout.
+    #[cfg(target_arch = "x86_64")]
+    pub(crate) mod avx2 {
+        use core::arch::x86_64::*;
+
+        /// # Safety
+        /// AVX2 must be available (callers dispatch on vetted
+        /// [`CodecIsa`](super::CodecIsa) values only).
+        #[target_feature(enable = "avx2")]
+        pub(crate) unsafe fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
+            debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+            match bits {
+                // Single-bit spread has no byte-granular structure for
+                // the unpack trees; the SWAR fold stays the best move.
+                1 => super::super::pack_codes_slice_swar(codes, 1, out),
+                2 => pack2(codes, out),
+                4 => pack4(codes, out),
+                8 => out.copy_from_slice(codes),
+                _ => unreachable!("bit width validated before packing"),
+            }
+        }
+
+        /// 16 two-bit codes → 4 packed bytes per iteration: two
+        /// fold-and-narrow rounds over `u16` lanes (codes → nibble
+        /// pairs → bytes), exactly mirroring the SWAR fold shape.
+        #[target_feature(enable = "avx2")]
+        unsafe fn pack2(codes: &[u8], out: &mut [u8]) {
+            let n = codes.len();
+            let full = n / 16 * 16;
+            let keep2 = _mm_set1_epi16(0x0003);
+            let keep_byte = _mm_set1_epi16(0x00FF);
+            let mut i = 0;
+            while i < full {
+                // SAFETY: i + 16 <= full <= n, so the load covers
+                // codes[i..i + 16]; the 4-byte store lands at
+                // out[i/4..i/4 + 4], inside out.len() = ceil(n/4).
+                let v = _mm_loadu_si128(codes.as_ptr().add(i) as *const __m128i);
+                let even = _mm_and_si128(v, keep2);
+                let odd = _mm_and_si128(_mm_srli_epi16::<8>(v), keep2);
+                let pairs = _mm_or_si128(even, _mm_slli_epi16::<2>(odd));
+                let pairs8 = _mm_packus_epi16(pairs, pairs);
+                let even2 = _mm_and_si128(pairs8, keep_byte);
+                let odd2 = _mm_srli_epi16::<8>(pairs8);
+                let quads = _mm_or_si128(even2, _mm_slli_epi16::<4>(odd2));
+                let quads8 = _mm_packus_epi16(quads, quads);
+                let word = _mm_cvtsi128_si32(quads8) as u32;
+                out[i / 4..i / 4 + 4].copy_from_slice(&word.to_le_bytes());
+                i += 16;
+            }
+            if full < n {
+                super::super::reference::pack_codes_slice_scalar(
+                    &codes[full..],
+                    2,
+                    &mut out[full / 4..],
+                );
+            }
+        }
+
+        /// 16 four-bit codes → 8 packed bytes per iteration: keep the
+        /// even code of each `u16` lane, fold the odd code in at bit 4,
+        /// narrow lanes to bytes with `packus`.
+        #[target_feature(enable = "avx2")]
+        unsafe fn pack4(codes: &[u8], out: &mut [u8]) {
+            let n = codes.len();
+            let full = n / 16 * 16;
+            // Selects the low byte of a u16 lane *and* masks it to a
+            // nibble in one op (codes above 15 are clamped like the
+            // scalar reference's `& 0b1111`).
+            let keep4 = _mm_set1_epi16(0x000F);
+            let mut i = 0;
+            while i < full {
+                // SAFETY: i + 16 <= n covers the load; the 8-byte store
+                // lands at out[i/2..i/2 + 8], inside ceil(n/2).
+                let v = _mm_loadu_si128(codes.as_ptr().add(i) as *const __m128i);
+                let even = _mm_and_si128(v, keep4);
+                let odd = _mm_and_si128(_mm_srli_epi16::<8>(v), keep4);
+                let t = _mm_or_si128(even, _mm_slli_epi16::<4>(odd));
+                let b = _mm_packus_epi16(t, t);
+                _mm_storel_epi64(out.as_mut_ptr().add(i / 2) as *mut __m128i, b);
+                i += 16;
+            }
+            if full < n {
+                super::super::reference::pack_codes_slice_scalar(
+                    &codes[full..],
+                    4,
+                    &mut out[full / 2..],
+                );
+            }
+        }
+
+        /// # Safety
+        /// AVX2 must be available; `packed` must hold at least
+        /// `start + out.len()` codes (caller-validated, as for
+        /// `unpack_range`).
+        #[target_feature(enable = "avx2")]
+        pub(crate) unsafe fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+            match bits {
+                1 => super::super::unpack_range_swar(packed, 1, start, out),
+                2 => unpack2(packed, start, out),
+                4 => unpack4(packed, start, out),
+                8 => out.copy_from_slice(&packed[start..start + out.len()]),
+                _ => unreachable!("bit width validated before unpacking"),
+            }
+        }
+
+        /// 16 packed bytes → 64 two-bit codes per iteration: four
+        /// masked shifts split each byte into its code planes, then an
+        /// `unpacklo/hi` tree re-interleaves them into stream order.
+        #[target_feature(enable = "avx2")]
+        unsafe fn unpack2(packed: &[u8], start: usize, out: &mut [u8]) {
+            let n = out.len();
+            let s = super::super::split_range(start, n, 4, 64);
+            for i in 0..s.head {
+                out[i] = super::super::get_code(packed, 2, start + i);
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut p = (start + s.head) / 4;
+            let m = _mm_set1_epi8(0x03);
+            while i < body_end {
+                // SAFETY: the group covers codes start+i..start+i+64 ⇒
+                // packed bytes p..p+16 exist (caller contract); stores
+                // cover out[i..i+64] with i+64 <= body_end <= n.
+                let v = _mm_loadu_si128(packed.as_ptr().add(p) as *const __m128i);
+                let c0 = _mm_and_si128(v, m);
+                let c1 = _mm_and_si128(_mm_srli_epi16::<2>(v), m);
+                let c2 = _mm_and_si128(_mm_srli_epi16::<4>(v), m);
+                let c3 = _mm_and_si128(_mm_srli_epi16::<6>(v), m);
+                let u0 = _mm_unpacklo_epi8(c0, c1);
+                let u1 = _mm_unpacklo_epi8(c2, c3);
+                let v0 = _mm_unpackhi_epi8(c0, c1);
+                let v1 = _mm_unpackhi_epi8(c2, c3);
+                let o = out.as_mut_ptr().add(i);
+                _mm_storeu_si128(o as *mut __m128i, _mm_unpacklo_epi16(u0, u1));
+                _mm_storeu_si128(o.add(16) as *mut __m128i, _mm_unpackhi_epi16(u0, u1));
+                _mm_storeu_si128(o.add(32) as *mut __m128i, _mm_unpacklo_epi16(v0, v1));
+                _mm_storeu_si128(o.add(48) as *mut __m128i, _mm_unpackhi_epi16(v0, v1));
+                p += 16;
+                i += 64;
+            }
+            for i in body_end..n {
+                out[i] = super::super::get_code(packed, 2, start + i);
+            }
+        }
+
+        /// 16 packed bytes → 32 four-bit codes per iteration: low/high
+        /// nibble planes re-interleaved with one `unpacklo/hi` pair.
+        #[target_feature(enable = "avx2")]
+        unsafe fn unpack4(packed: &[u8], start: usize, out: &mut [u8]) {
+            let n = out.len();
+            let s = super::super::split_range(start, n, 2, 32);
+            for i in 0..s.head {
+                out[i] = super::super::get_code(packed, 4, start + i);
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut p = (start + s.head) / 2;
+            let lo_mask = _mm_set1_epi8(0x0F);
+            while i < body_end {
+                // SAFETY: codes start+i..start+i+32 ⇒ packed bytes
+                // p..p+16 exist; stores cover out[i..i+32] <= n.
+                let v = _mm_loadu_si128(packed.as_ptr().add(p) as *const __m128i);
+                let lo = _mm_and_si128(v, lo_mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), lo_mask);
+                let o = out.as_mut_ptr().add(i);
+                _mm_storeu_si128(o as *mut __m128i, _mm_unpacklo_epi8(lo, hi));
+                _mm_storeu_si128(o.add(16) as *mut __m128i, _mm_unpackhi_epi8(lo, hi));
+                p += 16;
+                i += 32;
+            }
+            for i in body_end..n {
+                out[i] = super::super::get_code(packed, 4, start + i);
+            }
+        }
+
+        /// Fused LUT dequantize: the eight code indices of one byte
+        /// group come from a single variable shift (`vpsrlvd`) over a
+        /// broadcast of the group's packed bytes, and the `f32` values
+        /// from a `vpermps` table lookup — widths 1/2 index the low 8
+        /// LUT entries directly; width 4 blends a second `vpermps`
+        /// over entries 8..15 on code bit 3. Pure table lookups: no
+        /// float arithmetic per element, hence bit-identical to the
+        /// scalar LUT loop.
+        ///
+        /// # Safety
+        /// AVX2 must be available; `packed` must hold at least
+        /// `start + out.len()` codes.
+        #[target_feature(enable = "avx2")]
+        pub(crate) unsafe fn decode_block_lut(
+            packed: &[u8],
+            bits: u32,
+            start: usize,
+            out: &mut [f32],
+            lut: &[f32; 16],
+        ) {
+            debug_assert!(matches!(bits, 1 | 2 | 4), "LUT decode is sub-byte only");
+            let cpb = (8 / bits) as usize;
+            let n = out.len();
+            let s = super::super::split_range(start, n, cpb, 8);
+            for i in 0..s.head {
+                out[i] = lut[super::super::get_code(packed, bits, start + i) as usize];
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut p = (start + s.head) / cpb;
+            let bytes_per_group = bits as usize; // 8 codes · bits / 8
+            let shifts = match bits {
+                1 => _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7),
+                2 => _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14),
+                _ => _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28),
+            };
+            let mask = _mm256_set1_epi32((1i32 << bits) - 1);
+            let lut_lo = _mm256_loadu_ps(lut.as_ptr());
+            let lut_hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+            let seven = _mm256_set1_epi32(7);
+            while i < body_end {
+                let mut word = 0u32;
+                for (k, &byte) in packed[p..p + bytes_per_group].iter().enumerate() {
+                    word |= (byte as u32) << (8 * k);
+                }
+                let idx = _mm256_and_si256(
+                    _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts),
+                    mask,
+                );
+                let lo = _mm256_permutevar8x32_ps(lut_lo, idx);
+                let vals = if bits == 4 {
+                    let hi = _mm256_permutevar8x32_ps(lut_hi, idx);
+                    let use_hi = _mm256_cmpgt_epi32(idx, seven);
+                    _mm256_blendv_ps(lo, hi, _mm256_castsi256_ps(use_hi))
+                } else {
+                    lo
+                };
+                // SAFETY: i + 8 <= body_end <= n (body is a multiple
+                // of 8), so the 8-lane store stays inside `out`.
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), vals);
+                p += bytes_per_group;
+                i += 8;
+            }
+            for i in body_end..n {
+                out[i] = lut[super::super::get_code(packed, bits, start + i) as usize];
+            }
+        }
+    }
+
+    /// NEON kernels — the aarch64 mirror of [`avx2`], same safety
+    /// argument (`tbl`-based LUT lookups, `vzip`/`vuzp` code trees).
+    #[cfg(target_arch = "aarch64")]
+    pub(crate) mod neon {
+        use core::arch::aarch64::*;
+
+        /// # Safety
+        /// NEON must be available (callers dispatch on vetted
+        /// [`CodecIsa`](super::CodecIsa) values only).
+        #[target_feature(enable = "neon")]
+        pub(crate) unsafe fn pack_codes_slice(codes: &[u8], bits: u32, out: &mut [u8]) {
+            debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+            match bits {
+                1 => super::super::pack_codes_slice_swar(codes, 1, out),
+                2 => pack2(codes, out),
+                4 => pack4(codes, out),
+                8 => out.copy_from_slice(codes),
+                _ => unreachable!("bit width validated before packing"),
+            }
+        }
+
+        /// 32 two-bit codes → 8 packed bytes per iteration: two
+        /// deinterleave-and-fold rounds (`vuzp1/2` + shift-or).
+        #[target_feature(enable = "neon")]
+        unsafe fn pack2(codes: &[u8], out: &mut [u8]) {
+            let n = codes.len();
+            let full = n / 32 * 32;
+            let m = vdupq_n_u8(0x03);
+            let mut i = 0;
+            while i < full {
+                // SAFETY: i + 32 <= n covers both loads; the 8-byte
+                // store lands at out[i/4..i/4 + 8], inside ceil(n/4).
+                let a = vandq_u8(vld1q_u8(codes.as_ptr().add(i)), m);
+                let b = vandq_u8(vld1q_u8(codes.as_ptr().add(i + 16)), m);
+                let even = vuzp1q_u8(a, b);
+                let odd = vuzp2q_u8(a, b);
+                let pairs = vorrq_u8(even, vshlq_n_u8::<2>(odd)); // 16 nibbles
+                let even2 = vuzp1q_u8(pairs, pairs);
+                let odd2 = vuzp2q_u8(pairs, pairs);
+                let quads = vorrq_u8(even2, vshlq_n_u8::<4>(odd2));
+                vst1_u8(out.as_mut_ptr().add(i / 4), vget_low_u8(quads));
+                i += 32;
+            }
+            if full < n {
+                super::super::reference::pack_codes_slice_scalar(
+                    &codes[full..],
+                    2,
+                    &mut out[full / 4..],
+                );
+            }
+        }
+
+        /// 32 four-bit codes → 16 packed bytes per iteration: one
+        /// deinterleave (`vuzp1/2`) + shift-or fold.
+        #[target_feature(enable = "neon")]
+        unsafe fn pack4(codes: &[u8], out: &mut [u8]) {
+            let n = codes.len();
+            let full = n / 32 * 32;
+            let m = vdupq_n_u8(0x0F);
+            let mut i = 0;
+            while i < full {
+                // SAFETY: i + 32 <= n covers both loads; the 16-byte
+                // store lands at out[i/2..i/2 + 16], inside ceil(n/2).
+                let a = vandq_u8(vld1q_u8(codes.as_ptr().add(i)), m);
+                let b = vandq_u8(vld1q_u8(codes.as_ptr().add(i + 16)), m);
+                let even = vuzp1q_u8(a, b);
+                let odd = vuzp2q_u8(a, b);
+                vst1q_u8(
+                    out.as_mut_ptr().add(i / 2),
+                    vorrq_u8(even, vshlq_n_u8::<4>(odd)),
+                );
+                i += 32;
+            }
+            if full < n {
+                super::super::reference::pack_codes_slice_scalar(
+                    &codes[full..],
+                    4,
+                    &mut out[full / 2..],
+                );
+            }
+        }
+
+        /// # Safety
+        /// NEON must be available; `packed` must hold at least
+        /// `start + out.len()` codes.
+        #[target_feature(enable = "neon")]
+        pub(crate) unsafe fn unpack_range(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+            match bits {
+                1 => super::super::unpack_range_swar(packed, 1, start, out),
+                2 => unpack2(packed, start, out),
+                4 => unpack4(packed, start, out),
+                8 => out.copy_from_slice(&packed[start..start + out.len()]),
+                _ => unreachable!("bit width validated before unpacking"),
+            }
+        }
+
+        /// 16 packed bytes → 64 two-bit codes per iteration: masked
+        /// shifts split the code planes, a `vzip` tree re-interleaves.
+        #[target_feature(enable = "neon")]
+        unsafe fn unpack2(packed: &[u8], start: usize, out: &mut [u8]) {
+            let n = out.len();
+            let s = super::super::split_range(start, n, 4, 64);
+            for i in 0..s.head {
+                out[i] = super::super::get_code(packed, 2, start + i);
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut p = (start + s.head) / 4;
+            let m = vdupq_n_u8(0x03);
+            while i < body_end {
+                // SAFETY: codes start+i..start+i+64 ⇒ packed bytes
+                // p..p+16 exist; stores cover out[i..i+64] <= n.
+                let v = vld1q_u8(packed.as_ptr().add(p));
+                let c0 = vandq_u8(v, m);
+                let c1 = vandq_u8(vshrq_n_u8::<2>(v), m);
+                let c2 = vandq_u8(vshrq_n_u8::<4>(v), m);
+                let c3 = vshrq_n_u8::<6>(v);
+                let u0 = vreinterpretq_u16_u8(vzip1q_u8(c0, c1));
+                let u1 = vreinterpretq_u16_u8(vzip1q_u8(c2, c3));
+                let v0 = vreinterpretq_u16_u8(vzip2q_u8(c0, c1));
+                let v1 = vreinterpretq_u16_u8(vzip2q_u8(c2, c3));
+                let o = out.as_mut_ptr().add(i);
+                vst1q_u8(o, vreinterpretq_u8_u16(vzip1q_u16(u0, u1)));
+                vst1q_u8(o.add(16), vreinterpretq_u8_u16(vzip2q_u16(u0, u1)));
+                vst1q_u8(o.add(32), vreinterpretq_u8_u16(vzip1q_u16(v0, v1)));
+                vst1q_u8(o.add(48), vreinterpretq_u8_u16(vzip2q_u16(v0, v1)));
+                p += 16;
+                i += 64;
+            }
+            for i in body_end..n {
+                out[i] = super::super::get_code(packed, 2, start + i);
+            }
+        }
+
+        /// 16 packed bytes → 32 four-bit codes per iteration.
+        #[target_feature(enable = "neon")]
+        unsafe fn unpack4(packed: &[u8], start: usize, out: &mut [u8]) {
+            let n = out.len();
+            let s = super::super::split_range(start, n, 2, 32);
+            for i in 0..s.head {
+                out[i] = super::super::get_code(packed, 4, start + i);
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut p = (start + s.head) / 2;
+            let m = vdupq_n_u8(0x0F);
+            while i < body_end {
+                // SAFETY: codes start+i..start+i+32 ⇒ packed bytes
+                // p..p+16 exist; stores cover out[i..i+32] <= n.
+                let v = vld1q_u8(packed.as_ptr().add(p));
+                let lo = vandq_u8(v, m);
+                let hi = vshrq_n_u8::<4>(v);
+                let o = out.as_mut_ptr().add(i);
+                vst1q_u8(o, vzip1q_u8(lo, hi));
+                vst1q_u8(o.add(16), vzip2q_u8(lo, hi));
+                p += 16;
+                i += 32;
+            }
+            for i in body_end..n {
+                out[i] = super::super::get_code(packed, 4, start + i);
+            }
+        }
+
+        /// Fused LUT dequantize: decode 16 codes into a scratch vector,
+        /// then four `tbl` lookups — one per byte plane of the 16 `f32`
+        /// LUT entries — and a `vst4` interleaved store reassemble the
+        /// little-endian `f32` values. Byte-level copies of LUT entries:
+        /// bit-identical to the scalar loop by construction.
+        ///
+        /// # Safety
+        /// NEON must be available; `packed` must hold at least
+        /// `start + out.len()` codes.
+        #[target_feature(enable = "neon")]
+        pub(crate) unsafe fn decode_block_lut(
+            packed: &[u8],
+            bits: u32,
+            start: usize,
+            out: &mut [f32],
+            lut: &[f32; 16],
+        ) {
+            debug_assert!(matches!(bits, 1 | 2 | 4), "LUT decode is sub-byte only");
+            // Byte planes of the LUT: plane j holds byte j of each of
+            // the 16 little-endian f32 entries.
+            let mut planes = [[0u8; 16]; 4];
+            for (k, &v) in lut.iter().enumerate() {
+                for (j, &b) in v.to_le_bytes().iter().enumerate() {
+                    planes[j][k] = b;
+                }
+            }
+            let p0 = vld1q_u8(planes[0].as_ptr());
+            let p1 = vld1q_u8(planes[1].as_ptr());
+            let p2 = vld1q_u8(planes[2].as_ptr());
+            let p3 = vld1q_u8(planes[3].as_ptr());
+            let cpb = (8 / bits) as usize;
+            let n = out.len();
+            let s = super::super::split_range(start, n, cpb, 16);
+            for i in 0..s.head {
+                out[i] = lut[super::super::get_code(packed, bits, start + i) as usize];
+            }
+            let body_end = s.head + s.body;
+            let mut i = s.head;
+            let mut scratch = [0u8; 16];
+            while i < body_end {
+                // start + i is byte-aligned here, so the scratch decode
+                // of a whole 16-code group is a pure body move.
+                super::super::unpack_range_swar(packed, bits, start + i, &mut scratch);
+                let codes = vld1q_u8(scratch.as_ptr());
+                let vals = uint8x16x4_t(
+                    vqtbl1q_u8(p0, codes),
+                    vqtbl1q_u8(p1, codes),
+                    vqtbl1q_u8(p2, codes),
+                    vqtbl1q_u8(p3, codes),
+                );
+                // SAFETY: writes 64 bytes = out[i..i + 16] with
+                // i + 16 <= body_end <= n.
+                vst4q_u8(out.as_mut_ptr().add(i) as *mut u8, vals);
+                i += 16;
+            }
+            for i in body_end..n {
+                out[i] = lut[super::super::get_code(packed, bits, start + i) as usize];
+            }
+        }
+    }
 }
 
 /// Pre-fusion reference codec — the oracle the word-parallel kernels
@@ -1645,5 +2533,155 @@ mod tests {
         let mut rng = Pcg64::new(25);
         assert!(quantize_grouped(&h, 0, 2, &BinSpec::Uniform, &mut rng).is_err());
         assert!(quantize_grouped(&h, 2, 3, &BinSpec::Uniform, &mut rng).is_err());
+    }
+
+    #[test]
+    fn split_range_is_exact() {
+        // Exhaustive check of the one shared bounds helper: the pieces
+        // sum to n, the head is minimal-to-alignment, the body is a
+        // whole number of groups starting byte-aligned.
+        for cpb in [1usize, 2, 4, 8] {
+            for group in [cpb, 2 * cpb, 8 * cpb.max(1), 64] {
+                if group % cpb != 0 {
+                    continue;
+                }
+                for start in 0..40 {
+                    for n in 0..80 {
+                        let s = split_range(start, n, cpb, group);
+                        assert_eq!(s.head + s.body + s.tail, n, "cpb={cpb} start={start} n={n}");
+                        assert!(s.head < cpb || (s.head == n && n < cpb));
+                        assert_eq!(s.body % group, 0);
+                        if s.body > 0 || s.tail > 0 {
+                            assert_eq!(
+                                (start + s.head) % cpb,
+                                0,
+                                "body must start byte-aligned (cpb={cpb} start={start} n={n})"
+                            );
+                        }
+                        if s.head > 0 {
+                            assert_ne!(start % cpb, 0, "aligned starts take no head");
+                        }
+                        assert!(s.tail < group + cpb, "tail bounded by one group");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn get_code_matches_reference_unpack() {
+        let mut rng = Pcg64::new(0xA16);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            let codes: Vec<u8> = (0..57).map(|_| rng.next_bounded(max) as u8).collect();
+            let packed = reference::pack_codes(&codes, bits).unwrap();
+            for (idx, &c) in codes.iter().enumerate() {
+                assert_eq!(get_code(&packed, bits, idx), c, "bits={bits} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_isa_knob_spellings_roundtrip() {
+        for i in CodecIsa::ALL {
+            assert_eq!(CodecIsa::parse(i.name()).unwrap(), i);
+            assert_eq!(format!("{i}"), i.name());
+        }
+        assert!(CodecIsa::parse("auto").is_err(), "auto resolves elsewhere");
+        assert!(CodecIsa::parse("sse2").is_err());
+        // Portable tiers exist everywhere; detection returns something
+        // runnable and never the scalar oracle.
+        let avail = CodecIsa::available();
+        assert!(avail.contains(&CodecIsa::Scalar) && avail.contains(&CodecIsa::Swar));
+        assert!(CodecIsa::detect().is_available());
+        assert_ne!(CodecIsa::detect(), CodecIsa::Scalar);
+    }
+
+    #[test]
+    fn every_available_isa_packs_and_unpacks_identically() {
+        // Unit-level cross-ISA smoke (the full differential property
+        // suite is tests/codec_dispatch.rs): pack and ranged unpack on
+        // every runnable path must match the scalar reference exactly.
+        let mut rng = Pcg64::new(0xA17);
+        for bits in [1u32, 2, 4, 8] {
+            let max = (1u32 << bits) as u64;
+            for n in [0usize, 1, 7, 8, 15, 16, 17, 63, 64, 65, 130, 257] {
+                let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+                let golden = reference::pack_codes(&codes, bits).unwrap();
+                for i in CodecIsa::available() {
+                    let mut packed = vec![0xffu8; golden.len()];
+                    pack_codes_slice_isa(&codes, bits, &mut packed, i);
+                    assert_eq!(packed, golden, "pack isa={i} bits={bits} n={n}");
+                    for start in [0usize, 1, 3, 5, 9, 31, 33] {
+                        if start > n {
+                            continue;
+                        }
+                        let mut out = vec![0xeeu8; n - start];
+                        unpack_range_isa(&packed, bits, start, &mut out, i);
+                        assert_eq!(
+                            out,
+                            &codes[start..],
+                            "unpack isa={i} bits={bits} n={n} start={start}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_decodes_lut_identically() {
+        // The fused LUT dequantize is a pure table lookup, so every ISA
+        // must produce bit-identical f32 streams — uniform and VM bins,
+        // misaligned starts included.
+        let mut rng = Pcg64::new(0xA18);
+        for (bits, bins) in [
+            (1u32, BinSpec::Uniform),
+            (2, BinSpec::Uniform),
+            (2, BinSpec::int2_vm(0.9, 2.1).unwrap()),
+            (4, BinSpec::Uniform),
+        ] {
+            let max = (1u32 << bits) as u64;
+            let n = 267;
+            let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(max) as u8).collect();
+            let packed = reference::pack_codes(&codes, bits).unwrap();
+            let plan = DequantPlan::resolve(bits, &bins);
+            for (start, len) in [(0usize, n), (0, 8), (3, 64), (7, 9), (17, 129), (96, 31)] {
+                let mut golden = vec![0f32; len];
+                dequantize_block(&plan, -0.75, 2.5, &codes[start..start + len], &mut golden);
+                for i in CodecIsa::available() {
+                    let mut out = vec![f32::NAN; len];
+                    unpack_dequantize_block_isa(&plan, -0.75, 2.5, &packed, start, &mut out, i);
+                    let golden_bits: Vec<u32> = golden.iter().map(|v| v.to_bits()).collect();
+                    let out_bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        out_bits, golden_bits,
+                        "decode isa={i} bits={bits} start={start} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_decode_matches_flat_across_isas() {
+        // Larger than DECODE_TILE so the tile loop actually splits; the
+        // result must be bit-identical to one flat call at any tiling.
+        let mut rng = Pcg64::new(0xA19);
+        let n = DECODE_TILE * 2 + 137;
+        let codes: Vec<u8> = (0..n).map(|_| rng.next_bounded(4) as u8).collect();
+        let packed = reference::pack_codes(&codes, 2).unwrap();
+        let plan = DequantPlan::resolve(2, &BinSpec::Uniform);
+        let mut flat = vec![0f32; n];
+        dequantize_block(&plan, 0.1, 1.9, &codes, &mut flat);
+        for i in CodecIsa::available() {
+            let mut tiled = vec![f32::NAN; n];
+            unpack_dequantize_block_tiled(&plan, 0.1, 1.9, &packed, 0, &mut tiled, i);
+            assert_eq!(
+                tiled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                flat.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tiled decode isa={i}"
+            );
+        }
     }
 }

@@ -1,0 +1,303 @@
+//! Forced-dispatch differential suite for the runtime-dispatched codec
+//! (ISSUE 7).
+//!
+//! Every codec hot loop — `pack_codes_slice`, `unpack_range` and the
+//! fused LUT dequantize — exists in up to four ISA tiers (scalar, SWAR,
+//! AVX2, NEON) behind one runtime dispatch point. This suite iterates
+//! every tier *available on the current host* (`CodecIsa::available()`
+//! always contains `scalar` and `swar`, so the cross-checks run
+//! everywhere, and the vector tiers join automatically on matching
+//! hardware) and proves each one byte-identical on the packed layout
+//! and bit-identical through unpack→dequantize against the retained
+//! `iexact::quant::reference` oracle — across widths 1/2/4/8, ragged
+//! tails, misaligned `unpack_range` starts straddling SIMD lane
+//! boundaries, constant blocks and heterogeneous `BitPlan`s. Failure
+//! messages carry the ISA, width, geometry and RNG seed so any
+//! counterexample reproduces from the log line alone.
+//!
+//! The forcing knob itself is under test too: `IEXACT_CODEC_ISA` (the
+//! CI dispatch matrix pins it) must be honored by `CodecIsa::active()`
+//! and therefore by every default-constructed engine, and
+//! `QuantEngine::with_codec_isa` must reject tiers the host cannot run.
+
+use iexact::alloc::BitPlan;
+use iexact::engine::QuantEngine;
+use iexact::quant::isa::{pack_codes_slice_forced, unpack_dequantize_forced, unpack_range_forced};
+use iexact::quant::{reference, BinSpec, CodecIsa, CompressedTensor};
+use iexact::rngs::Pcg64;
+use iexact::tensor::Matrix;
+
+/// Miri runs the same assertions on shrunk geometry: the point there is
+/// the borrow/bounds reasoning of the `unsafe` kernels, not coverage.
+fn code_lengths() -> &'static [usize] {
+    if cfg!(miri) {
+        &[0, 1, 7, 8, 17, 65]
+    } else {
+        &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 129, 333, 1024, 1031]
+    }
+}
+
+fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.next_f32() * 4.0 - 2.0)
+}
+
+fn random_codes(n: usize, bits: u32, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed);
+    let max = (1u32 << bits) as u64;
+    (0..n).map(|_| rng.next_bounded(max) as u8).collect()
+}
+
+#[test]
+fn forced_dispatch_override_is_honored() {
+    // The active path must be exactly what the env knob (or detection,
+    // when unset) says — the property the whole CI matrix rests on.
+    match std::env::var("IEXACT_CODEC_ISA") {
+        Ok(v) => {
+            let pinned = CodecIsa::parse(v.trim()).expect("CI pins only valid spellings");
+            assert_eq!(CodecIsa::active(), pinned, "IEXACT_CODEC_ISA={v} not honored");
+            assert_eq!(
+                QuantEngine::serial().codec_isa(),
+                pinned,
+                "default-constructed engine ignored IEXACT_CODEC_ISA={v}"
+            );
+        }
+        Err(_) => {
+            assert_eq!(CodecIsa::active(), CodecIsa::detect());
+        }
+    }
+    // Explicit forcing beats everything and round-trips the getter...
+    for isa in CodecIsa::available() {
+        let engine = QuantEngine::serial().with_codec_isa(isa).unwrap();
+        assert_eq!(engine.codec_isa(), isa);
+    }
+    // ...and forcing an unavailable tier fails loud, never falls back.
+    for isa in CodecIsa::ALL {
+        if !isa.is_available() {
+            let err = QuantEngine::serial().with_codec_isa(isa).unwrap_err();
+            assert!(
+                err.to_string().contains(isa.name()),
+                "error should name the rejected tier: {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pack_matches_reference_on_every_available_isa() {
+    for bits in [1u32, 2, 4, 8] {
+        for &n in code_lengths() {
+            let seed = 0xD15_0000 ^ ((bits as u64) << 32) ^ n as u64;
+            let codes = random_codes(n, bits, seed);
+            let golden = reference::pack_codes(&codes, bits).unwrap();
+            for isa in CodecIsa::available() {
+                // Poisoned output buffer: a kernel that skips a byte
+                // (instead of zero-padding it) fails loudly.
+                let mut packed = vec![0xa5u8; golden.len()];
+                pack_codes_slice_forced(isa, &codes, bits, &mut packed);
+                assert_eq!(packed, golden, "isa={isa} bits={bits} n={n} seed={seed:#x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn unpack_range_matches_reference_at_misaligned_starts() {
+    // Starts chosen to straddle every boundary the kernels care about:
+    // mid-byte (scalar head), byte (SWAR word), and the 16/32/64-code
+    // SIMD group sizes of the AVX2/NEON unpack trees; lengths leave
+    // ragged tails on both sides.
+    let starts: &[usize] = if cfg!(miri) {
+        &[0, 1, 7, 15, 16, 63, 64, 65]
+    } else {
+        &[0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 47, 63, 64, 65, 127, 128, 129, 255]
+    };
+    let lens: &[usize] = if cfg!(miri) {
+        &[0, 1, 9, 33]
+    } else {
+        &[0, 1, 3, 7, 8, 9, 16, 31, 33, 64, 65, 100, 257]
+    };
+    for bits in [1u32, 2, 4, 8] {
+        let n = 600;
+        let seed = 0x0A11_0000 ^ bits as u64;
+        let codes = random_codes(n, bits, seed);
+        let packed = reference::pack_codes(&codes, bits).unwrap();
+        for &start in starts {
+            for &len in lens {
+                if start + len > n {
+                    continue;
+                }
+                for isa in CodecIsa::available() {
+                    let mut out = vec![0xa5u8; len];
+                    unpack_range_forced(isa, &packed, bits, start, &mut out);
+                    assert_eq!(
+                        out,
+                        &codes[start..start + len],
+                        "isa={isa} bits={bits} start={start} len={len} seed={seed:#x}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_dequantize_matches_reference_bit_for_bit() {
+    // The fused unpack→LUT path must reproduce the scalar two-pass
+    // reconstruction exactly (compared on raw f32 bits, not with a
+    // tolerance) under uniform and variance-minimized bins alike.
+    let bin_specs = [
+        (1u32, BinSpec::Uniform),
+        (2, BinSpec::Uniform),
+        (2, BinSpec::int2_vm(1.2, 1.8).unwrap()),
+        (4, BinSpec::Uniform),
+        (8, BinSpec::Uniform),
+    ];
+    for (bits, bins) in bin_specs {
+        for &n in code_lengths() {
+            if n == 0 {
+                continue;
+            }
+            let seed = 0xDE0_0000 ^ ((bits as u64) << 32) ^ n as u64;
+            let codes = random_codes(n, bits, seed);
+            let packed = reference::pack_codes(&codes, bits).unwrap();
+            let (z, r) = (-0.6875f32, 2.25f32);
+            // Golden: the two-pass reference decoder over one group
+            // spanning the whole stream.
+            let golden_ct = CompressedTensor {
+                packed: packed.clone(),
+                zeros: vec![z],
+                ranges: vec![r],
+                shape: (1, n),
+                group_len: n,
+                bits,
+                bins: bins.clone(),
+            };
+            let golden = reference::dequantize(&golden_ct).unwrap();
+            let golden = golden.as_slice();
+            for isa in CodecIsa::available() {
+                for start in [0usize, 3, 17] {
+                    if start > n {
+                        continue;
+                    }
+                    let mut out = vec![f32::NAN; n - start];
+                    unpack_dequantize_forced(isa, bits, &bins, z, r, &packed, start, &mut out);
+                    let want: Vec<u32> = golden[start..].iter().map(|v| v.to_bits()).collect();
+                    let got: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        got, want,
+                        "isa={isa} bits={bits} n={n} start={start} seed={seed:#x}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn constant_blocks_decode_exactly_on_every_isa() {
+    // Constant input ⇒ all-zero codes and range 0: every ISA must decode
+    // the block back to the constant exactly, including the all-zeros
+    // packed stream the vector LUT paths see as one splatted lane.
+    for bits in [1u32, 2, 4, 8] {
+        let n = 200;
+        let codes = vec![0u8; n];
+        let packed = reference::pack_codes(&codes, bits).unwrap();
+        for isa in CodecIsa::available() {
+            let mut out = vec![f32::NAN; n];
+            unpack_dequantize_forced(
+                isa,
+                bits,
+                &BinSpec::Uniform,
+                -1.25,
+                0.0,
+                &packed,
+                0,
+                &mut out,
+            );
+            assert!(
+                out.iter().all(|&v| v == -1.25),
+                "isa={isa} bits={bits}: constant block not exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_engines_agree_with_reference_end_to_end() {
+    // Quantize→pack and unpack→dequantize through `QuantEngine`, pinned
+    // to each available tier: packed bytes, (Z, r) metadata and the f32
+    // reconstruction must all equal the serial reference oracle.
+    let h = sample_matrix(17, 31, 0x15A_BEE);
+    for bits in [1u32, 2, 4, 8] {
+        for group_len in [8usize, 20, 7, 64] {
+            let seed = 0x5EED ^ ((bits as u64) << 8) ^ (group_len as u64);
+            let want =
+                reference::quantize_grouped_seeded(&h, group_len, bits, &BinSpec::Uniform, seed)
+                    .unwrap();
+            let want_deq = reference::dequantize(&want).unwrap();
+            for isa in CodecIsa::available() {
+                for threads in [1usize, 4] {
+                    let engine = QuantEngine::with_threads(threads).with_codec_isa(isa).unwrap();
+                    let got = engine
+                        .quantize_seeded(&h, group_len, bits, &BinSpec::Uniform, seed)
+                        .unwrap();
+                    let ctx = format!(
+                        "isa={isa} bits={bits} G={group_len} t={threads} seed={seed:#x}"
+                    );
+                    assert_eq!(got.packed, want.packed, "packed {ctx}");
+                    assert_eq!(got.zeros, want.zeros, "zeros {ctx}");
+                    assert_eq!(got.ranges, want.ranges, "ranges {ctx}");
+                    let deq = engine.dequantize(&got).unwrap();
+                    assert_eq!(deq.as_slice(), want_deq.as_slice(), "dequant {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_engines_agree_on_heterogeneous_bitplans() {
+    // 1221 scalars at G=100 → 13 blocks mixing all four widths with a
+    // ragged final block (21 scalars) — the planned path every tier
+    // shares through the byte-aligned per-block layout.
+    let h = sample_matrix(33, 37, 0x15A_DEC);
+    let plan_seed = 7u64;
+    let mut rng = Pcg64::new(plan_seed);
+    let widths: Vec<u8> = (0..13).map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize]).collect();
+    let plan = BitPlan::new(widths, 100).unwrap();
+    let seed = 0xFEED_u64;
+    let want = reference::quantize_planned_seeded(&h, &plan, seed).unwrap();
+    let want_deq = reference::dequantize_planned(&want).unwrap();
+    for isa in CodecIsa::available() {
+        let engine = QuantEngine::with_threads(4).with_codec_isa(isa).unwrap();
+        let got = engine.quantize_planned_seeded(&h, &plan, seed).unwrap();
+        let ctx = format!("isa={isa} plan_seed={plan_seed} seed={seed:#x}");
+        assert_eq!(got.packed, want.packed, "packed {ctx}");
+        assert_eq!(got.zeros, want.zeros, "zeros {ctx}");
+        assert_eq!(got.ranges, want.ranges, "ranges {ctx}");
+        let deq = engine.dequantize_planned(&got).unwrap();
+        assert_eq!(deq.as_slice(), want_deq.as_slice(), "dequant {ctx}");
+    }
+}
+
+#[test]
+fn cross_isa_outputs_are_interchangeable() {
+    // Bytes packed by one tier must unpack/decode identically through
+    // every other tier — the property that makes the packed stream a
+    // portable wire/checkpoint format across heterogeneous hosts.
+    let bits = 2u32;
+    let n = if cfg!(miri) { 96 } else { 1021 };
+    let seed = 0x1177_u64;
+    let codes = random_codes(n, bits, seed);
+    let avail = CodecIsa::available();
+    for &packer in &avail {
+        let mut packed = vec![0u8; (n * bits as usize).div_ceil(8)];
+        pack_codes_slice_forced(packer, &codes, bits, &mut packed);
+        for &unpacker in &avail {
+            let mut out = vec![0u8; n];
+            unpack_range_forced(unpacker, &packed, bits, 0, &mut out);
+            assert_eq!(out, codes, "pack={packer} unpack={unpacker} seed={seed:#x}");
+        }
+    }
+}

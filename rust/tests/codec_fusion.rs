@@ -15,7 +15,7 @@ use iexact::alloc::BitPlan;
 use iexact::engine::QuantEngine;
 use iexact::graph::CsrMatrix;
 use iexact::memory::BufferPool;
-use iexact::quant::{reference, BinSpec};
+use iexact::quant::{reference, BinSpec, CodecIsa};
 use iexact::rngs::Pcg64;
 use iexact::tensor::Matrix;
 
@@ -169,6 +169,50 @@ fn fused_planned_uniform_plan_equals_fixed_width_bytes() {
             .unwrap();
         assert_eq!(planned.packed, fixed.packed, "bits={bits}");
         assert_eq!(planned.zeros, fixed.zeros, "bits={bits}");
+    }
+}
+
+#[test]
+fn fused_paths_match_reference_under_every_forced_isa() {
+    // The fusion bit-identity contract, re-proven per dispatch tier:
+    // quantize→pack (fused and two-pass-fallback group lengths) and the
+    // fused unpack→dequantize must equal the two-pass reference on every
+    // ISA the host can run — uniform bins, VM bins, and a heterogeneous
+    // plan. The deep geometry sweep lives in `codec_dispatch.rs`; this
+    // pins the *engine-integrated* fused kernels specifically.
+    let h = sample_matrix(17, 31, 0xBEE);
+    let vm = BinSpec::int2_vm(1.2, 1.8).unwrap();
+    let plan = hetero_plan(13, 100, 7);
+    let want_planned = reference::quantize_planned_seeded(&h, &plan, 0xfeed).unwrap();
+    let want_planned_deq = reference::dequantize_planned(&want_planned).unwrap();
+    for isa in CodecIsa::available() {
+        let engine = QuantEngine::with_threads(4).with_codec_isa(isa).unwrap();
+        for (bits, bins) in [(1u32, &BinSpec::Uniform), (2, &vm), (4, &BinSpec::Uniform)] {
+            // G=20 rides the fused quantize-pack path, G=7 the two-pass
+            // fallback — both pack through the forced ISA now.
+            for group_len in [20usize, 7] {
+                let seed = 0xF05ED ^ ((bits as u64) << 8) ^ (group_len as u64);
+                let want =
+                    reference::quantize_grouped_seeded(&h, group_len, bits, bins, seed).unwrap();
+                let got = engine.quantize_seeded(&h, group_len, bits, bins, seed).unwrap();
+                assert_eq!(
+                    got.packed, want.packed,
+                    "packed isa={isa} bits={bits} G={group_len}"
+                );
+                assert_eq!(
+                    engine.dequantize(&got).unwrap().as_slice(),
+                    reference::dequantize(&want).unwrap().as_slice(),
+                    "dequant isa={isa} bits={bits} G={group_len}"
+                );
+            }
+        }
+        let got = engine.quantize_planned_seeded(&h, &plan, 0xfeed).unwrap();
+        assert_eq!(got.packed, want_planned.packed, "planned packed isa={isa}");
+        assert_eq!(
+            engine.dequantize_planned(&got).unwrap().as_slice(),
+            want_planned_deq.as_slice(),
+            "planned dequant isa={isa}"
+        );
     }
 }
 

@@ -29,7 +29,7 @@
 
 use iexact::alloc::{BitPlan, PlannedTensor};
 use iexact::engine::QuantEngine;
-use iexact::quant::{BinSpec, CompressedTensor};
+use iexact::quant::{BinSpec, CodecIsa, CompressedTensor};
 use iexact::rngs::Pcg64;
 use iexact::tensor::Matrix;
 use std::path::PathBuf;
@@ -197,6 +197,42 @@ fn golden_planned_heterogeneous() {
         .quantize_planned_seeded(&h, &plan, QUANT_SEED)
         .unwrap();
     assert_eq!(serialize_planned(&pt), serialize_planned(&par));
+}
+
+#[test]
+fn golden_fixtures_hold_under_every_forced_isa() {
+    // The runtime-dispatched kernels must not perturb the frozen layout:
+    // each available ISA tier, forced end to end through the engine,
+    // serializes to the *same committed fixtures* (no re-bless) and
+    // dequantizes bit-identically to the serial default path.
+    let h = fixture_input();
+    let baseline = QuantEngine::serial();
+    for isa in CodecIsa::available() {
+        let engine = QuantEngine::serial().with_codec_isa(isa).unwrap();
+        for bits in [2u32, 4, 8] {
+            let ct = engine
+                .quantize_seeded(&h, GROUP_LEN, bits, &BinSpec::Uniform, QUANT_SEED)
+                .unwrap();
+            check_golden(&format!("fixed_int{bits}"), &serialize_fixed(&ct));
+            let want = baseline
+                .quantize_seeded(&h, GROUP_LEN, bits, &BinSpec::Uniform, QUANT_SEED)
+                .unwrap();
+            assert_eq!(
+                engine.dequantize(&ct).unwrap().as_slice(),
+                baseline.dequantize(&want).unwrap().as_slice(),
+                "dequantize isa={isa} bits={bits}"
+            );
+        }
+        let plan = hetero_plan();
+        let pt = engine.quantize_planned_seeded(&h, &plan, QUANT_SEED).unwrap();
+        check_golden("planned_hetero", &serialize_planned(&pt));
+        let want = baseline.quantize_planned_seeded(&h, &plan, QUANT_SEED).unwrap();
+        assert_eq!(
+            engine.dequantize_planned(&pt).unwrap().as_slice(),
+            baseline.dequantize_planned(&want).unwrap().as_slice(),
+            "planned dequantize isa={isa}"
+        );
+    }
 }
 
 #[test]

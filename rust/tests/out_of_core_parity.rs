@@ -32,6 +32,7 @@ fn base_cfg(threads: usize, k: usize, halo: usize, adaptive: bool) -> TrainConfi
         parallelism: ParallelismConfig {
             threads,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         },
         partition: PartitionConfig {
             num_partitions: k,

@@ -153,6 +153,7 @@ fn partitioned_training_is_identical_across_thread_counts() {
     threaded.parallelism = ParallelismConfig {
         threads: 8,
         min_blocks_per_shard: 1,
+        ..ParallelismConfig::default()
     };
     let a = train_partitioned(&ds, &q, &serial, 9).unwrap();
     let b = train_partitioned(&ds, &q, &threaded, 9).unwrap();

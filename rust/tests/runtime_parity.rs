@@ -210,6 +210,7 @@ fn thread_cfg(threads: usize) -> TrainConfig {
         parallelism: ParallelismConfig {
             threads,
             min_blocks_per_shard: 1,
+            ..ParallelismConfig::default()
         },
         ..TrainConfig::default()
     }
