@@ -144,8 +144,11 @@ pub(crate) fn write_matrix(buf: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
-/// Serialize a full [`TrainState`] to `path` (format V2).
-pub fn save_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+/// Serialize a full [`TrainState`] to its on-disk byte image (format
+/// V2, checksum trailer included) without touching the filesystem. The
+/// distributed leader checkpoints through this (atomic tmp+rename), and
+/// the parity suite compares state images byte-for-byte.
+pub fn state_to_bytes(state: &TrainState) -> Vec<u8> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     write_u32(&mut buf, STATE_VERSION);
@@ -189,6 +192,12 @@ pub fn save_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
     }
     let checksum = fnv1a(&buf);
     buf.extend_from_slice(&checksum.to_le_bytes());
+    buf
+}
+
+/// Serialize a full [`TrainState`] to `path` (format V2).
+pub fn save_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let buf = state_to_bytes(state);
     let mut f = std::fs::File::create(path.as_ref())?;
     f.write_all(&buf)?;
     Ok(())

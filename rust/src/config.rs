@@ -574,6 +574,82 @@ impl OutOfCoreConfig {
     }
 }
 
+/// Multi-process partition-parallel training knobs — the
+/// `[distributed]` config section.
+///
+/// With `workers > 0`, `iexact train` becomes a **leader**: it spawns
+/// that many worker processes on localhost, deals the `[partition]`
+/// subgraphs out to them, and all-reduces their per-partition gradients
+/// in fixed partition order every epoch
+/// ([`crate::coordinator::dist::train_distributed`]). Halo/eval
+/// activations cross process boundaries in packed-code form (the
+/// [`BitPlan`](crate::alloc::BitPlan) wire body), and the run is
+/// **bit-identical** to single-process
+/// [`train_partitioned`](crate::pipeline::train_partitioned) at any
+/// worker count (see `docs/distributed-training.md`).
+///
+/// ```toml
+/// [distributed]
+/// workers = 2                  # worker processes (0 = single-process)
+/// checkpoint_path = "/tmp/iexact-dist.ckpt"
+/// checkpoint_every_epochs = 10
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DistributedConfig {
+    /// Worker-process count; `0` (the default) keeps training
+    /// single-process.
+    pub workers: usize,
+    /// Leader checkpoint file (written atomically via tmp + rename every
+    /// [`checkpoint_every_epochs`](Self::checkpoint_every_epochs)).
+    /// `None` disables periodic checkpoints.
+    pub checkpoint_path: Option<String>,
+    /// Epoch interval between leader checkpoints.
+    pub checkpoint_every_epochs: usize,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            workers: 0,
+            checkpoint_path: None,
+            checkpoint_every_epochs: 10,
+        }
+    }
+}
+
+impl DistributedConfig {
+    /// More processes than this on one host is certainly a typo.
+    pub const MAX_WORKERS: usize = 64;
+
+    /// Whether multi-process training is enabled.
+    pub fn enabled(&self) -> bool {
+        self.workers > 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers > Self::MAX_WORKERS {
+            return Err(Error::Config(format!(
+                "distributed.workers must be <= {}, got {}",
+                Self::MAX_WORKERS,
+                self.workers
+            )));
+        }
+        if self.checkpoint_every_epochs == 0 {
+            return Err(Error::Config(
+                "distributed.checkpoint_every_epochs must be >= 1".into(),
+            ));
+        }
+        if let Some(p) = &self.checkpoint_path {
+            if p.is_empty() {
+                return Err(Error::Config(
+                    "distributed.checkpoint_path must be a non-empty path".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -594,6 +670,9 @@ pub struct TrainConfig {
     pub partition: PartitionConfig,
     /// Disk-backed partitioned training (`[out_of_core]`; default: off).
     pub out_of_core: OutOfCoreConfig,
+    /// Multi-process partition-parallel training (`[distributed]`;
+    /// default: off).
+    pub distributed: DistributedConfig,
 }
 
 impl Default for TrainConfig {
@@ -611,6 +690,7 @@ impl Default for TrainConfig {
             allocation: AllocationConfig::default(),
             partition: PartitionConfig::default(),
             out_of_core: OutOfCoreConfig::default(),
+            distributed: DistributedConfig::default(),
         }
     }
 }
@@ -634,7 +714,30 @@ impl TrainConfig {
         self.parallelism.validate()?;
         self.allocation.validate()?;
         self.partition.validate()?;
-        self.out_of_core.validate()
+        self.out_of_core.validate()?;
+        self.distributed.validate()?;
+        if self.distributed.enabled() {
+            // Every worker must own at least one partition — the leader
+            // deals partitions out disjointly, and a workerless worker
+            // would never receive a weights-bearing request.
+            if self.distributed.workers > self.partition.num_partitions {
+                return Err(Error::Config(format!(
+                    "distributed.workers ({}) must be <= partition.num_partitions ({}): \
+                     each worker owns at least one partition",
+                    self.distributed.workers, self.partition.num_partitions
+                )));
+            }
+            // Workers regenerate and hold their partitions in RAM; the
+            // streaming store is a single-process residency knob.
+            if self.out_of_core.enabled() {
+                return Err(Error::Config(
+                    "distributed.workers > 0 is incompatible with \
+                     out_of_core.spill_dir (workers hold their partitions in RAM)"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -965,6 +1068,34 @@ impl ExperimentConfig {
                 )));
             }
             train.out_of_core.prefetch_depth = d as usize;
+        }
+
+        // [distributed] — multi-process partition-parallel training.
+        // Negative values are rejected before the usize casts (cf. the
+        // sections above).
+        if let Some(w) = t.get_int("distributed.workers") {
+            if w < 0 {
+                return Err(Error::Config(format!(
+                    "distributed.workers must be >= 0, got {w}"
+                )));
+            }
+            train.distributed.workers = w as usize;
+        }
+        if let Some(p) = t.get_str("distributed.checkpoint_path") {
+            if p.is_empty() {
+                return Err(Error::Config(
+                    "distributed.checkpoint_path must be a non-empty path".into(),
+                ));
+            }
+            train.distributed.checkpoint_path = Some(p.to_string());
+        }
+        if let Some(e) = t.get_int("distributed.checkpoint_every_epochs") {
+            if e < 1 {
+                return Err(Error::Config(format!(
+                    "distributed.checkpoint_every_epochs must be >= 1, got {e}"
+                )));
+            }
+            train.distributed.checkpoint_every_epochs = e as usize;
         }
 
         let cfg = ExperimentConfig {
@@ -1299,6 +1430,68 @@ seeds = [0, 1]
             ..PartitionConfig::default()
         };
         assert!(p.validate().unwrap_err().to_string().contains("partition.cache_bits"));
+    }
+
+    #[test]
+    fn toml_distributed_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[partition]\nnum_partitions = 4\n\n[distributed]\nworkers = 2\n\
+             checkpoint_path = \"/tmp/iexact-dist.ckpt\"\ncheckpoint_every_epochs = 5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.distributed,
+            DistributedConfig {
+                workers: 2,
+                checkpoint_path: Some("/tmp/iexact-dist.ckpt".into()),
+                checkpoint_every_epochs: 5,
+            }
+        );
+        assert!(cfg.train.distributed.enabled());
+        // Defaults when the section is absent: single-process training.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.distributed, DistributedConfig::default());
+        assert!(!cfg.train.distributed.enabled());
+    }
+
+    #[test]
+    fn distributed_validation_reports_key_paths() {
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        let cases: &[(&str, &str)] = &[
+            ("[distributed]\nworkers = -1\n", "distributed.workers"),
+            ("[distributed]\nworkers = 65\n", "distributed.workers"),
+            (
+                "[distributed]\ncheckpoint_path = \"\"\n",
+                "distributed.checkpoint_path",
+            ),
+            (
+                "[distributed]\ncheckpoint_every_epochs = 0\n",
+                "distributed.checkpoint_every_epochs",
+            ),
+            // More workers than partitions: someone would own nothing.
+            (
+                "[partition]\nnum_partitions = 2\n\n[distributed]\nworkers = 4\n",
+                "partition.num_partitions",
+            ),
+            // Distributed + out-of-core is rejected with both keys named.
+            (
+                "[partition]\nnum_partitions = 2\n\n[distributed]\nworkers = 2\n\n\
+                 [out_of_core]\nspill_dir = \"/tmp/x\"\n",
+                "out_of_core.spill_dir",
+            ),
+        ];
+        for (toml, key) in cases {
+            let e = err(toml);
+            assert!(e.contains(key), "error for `{toml}` missing '{key}': {e}");
+        }
+        // Struct-level validate mirrors the TOML layer.
+        let d = DistributedConfig {
+            workers: DistributedConfig::MAX_WORKERS + 1,
+            ..DistributedConfig::default()
+        };
+        assert!(d.validate().unwrap_err().to_string().contains("distributed.workers"));
     }
 
     #[test]

@@ -1,0 +1,744 @@
+//! Multi-process partition-parallel training over localhost TCP.
+//!
+//! `iexact train --workers N` turns the partitioned trainer into a
+//! **leader** process that spawns `N` worker processes and drives them
+//! through a small framed protocol (`frame`/`proto` submodules):
+//!
+//! 1. **Handshake** — each worker connects, sends `Hello{rank}`, and
+//!    receives the full training context (dataset *spec*, seeds, quant
+//!    and allocation config). Workers regenerate the dataset and
+//!    re-partition it locally — no subgraph bytes cross the wire — and
+//!    the agreement is cross-checked via the
+//!    [`HaloOwnership`](crate::partition::HaloOwnership) fingerprint.
+//! 2. **Epochs** — the leader broadcasts the epoch-start weights and a
+//!    partition assignment to every live worker; workers run the shared
+//!    `partition_train_step` kernel and stream back per-partition
+//!    losses/gradients, which the leader folds **in fixed partition
+//!    order** with the same core-train-count weights as the
+//!    single-process loop, then takes the one Adam step per epoch.
+//! 3. **Eval** — on eval epochs workers forward their partitions at the
+//!    post-update weights and reply with the logits **in packed-code
+//!    form** (the quantized [`BitPlan`](crate::alloc::BitPlan) bytes
+//!    plus plan header — never dense `f32`); the leader parks the
+//!    bodies directly into its
+//!    [`ActivationCache`](crate::memory::ActivationCache) and assembles
+//!    full-graph metrics exactly as
+//!    [`train_partitioned_span`](crate::pipeline::train_partitioned_span)
+//!    does.
+//!
+//! Because partition steps are addressed by `(epoch, partition)` — RNG
+//! streams included — every step is a pure function of the epoch-start
+//! weights, so the run is **bit-identical to single-process
+//! [`train_partitioned`](crate::pipeline::train_partitioned) at any
+//! worker count**, and any step may be recomputed anywhere. That is
+//! also the fault story: a worker that dies mid-epoch (detected as an
+//! I/O error on its socket) simply has its unfinished partitions
+//! re-dispatched to the survivors, and a run restarted after a leader
+//! crash resumes from the last `[distributed] checkpoint_path`
+//! checkpoint ([`TrainState`](crate::checkpoint::TrainState) V2) with
+//! the identical trajectory. See `docs/distributed-training.md`.
+
+mod frame;
+mod proto;
+
+use crate::alloc::BitPlan;
+use crate::checkpoint::{state_to_bytes, TrainState};
+use crate::config::{DatasetSpec, QuantConfig, TrainConfig};
+use crate::engine::QuantEngine;
+use crate::linalg::softmax_cross_entropy;
+use crate::memory::{ActivationCache, BufferPool};
+use crate::metrics::{masked_accuracy, TrainCurve};
+use crate::partition::{partition_dataset, HaloOwnership, PartitionSet};
+use crate::pipeline::{
+    allocate_plans, init_partitioned_run, pack_partition_logits, partition_train_step,
+    resolve_layer_bins, GcnModel, PartitionTrainResult, TrainResult,
+};
+use crate::rngs::Pcg64;
+use crate::tensor::Matrix;
+use crate::util::timer::LapTimer;
+use crate::{Error, Result};
+use proto::Msg;
+use std::net::{TcpListener, TcpStream};
+
+fn proto_err(msg: impl std::fmt::Display) -> Error {
+    Error::Runtime(format!("dist protocol: {msg}"))
+}
+
+fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    frame::write_frame(stream, &msg.encode())
+}
+
+fn read_msg(stream: &mut TcpStream) -> Result<Msg> {
+    Msg::decode(&frame::read_frame(stream)?)
+}
+
+/// Write a checkpoint via temp-file-then-rename so a leader killed
+/// mid-write can never leave a torn file where the resume path expects
+/// a valid [`TrainState`].
+fn write_checkpoint_atomic(path: &str, state: &TrainState) -> Result<()> {
+    let bytes = state_to_bytes(state);
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Worker-side knobs. The default is a plain worker; tests inject
+/// faults through it.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOptions {
+    /// Fault injection: after this many partition training steps the
+    /// worker exits without replying, so the leader observes exactly
+    /// what a crashed worker looks like — a closed socket mid-epoch.
+    pub fail_after_steps: Option<usize>,
+}
+
+/// Halo/eval traffic accounting: what actually crossed process
+/// boundaries (packed codes + plan headers) vs. what shipping dense
+/// `f32` activations would have cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireStats {
+    /// Bytes of packed eval bodies received by the leader.
+    pub halo_payload_bytes: u64,
+    /// Bytes the same activations would occupy as dense `f32`.
+    pub halo_f32_bytes: u64,
+}
+
+/// What a distributed run hands back: the single-process-identical
+/// metrics/state plus wire accounting and the fault-recovery tally.
+#[derive(Debug, Clone)]
+pub struct DistTrainOutcome {
+    /// Same shape (and bit-identical content) as single-process
+    /// [`train_partitioned`](crate::pipeline::train_partitioned).
+    pub result: PartitionTrainResult,
+    /// End-of-run state; byte-identical under
+    /// [`state_to_bytes`](crate::checkpoint::state_to_bytes) to the
+    /// single-process run's.
+    pub state: TrainState,
+    pub wire: WireStats,
+    /// Partitions re-dispatched to a surviving worker after their
+    /// original owner died (0 in a healthy run).
+    pub reassigned_partitions: usize,
+}
+
+struct WorkerLink {
+    rank: u32,
+    stream: TcpStream,
+    alive: bool,
+}
+
+/// Accept exactly `n` workers and index them by their announced rank.
+fn accept_workers(listener: &TcpListener, n: usize) -> Result<Vec<WorkerLink>> {
+    let mut links: Vec<Option<WorkerLink>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        match read_msg(&mut stream)? {
+            Msg::Hello { rank } => {
+                let r = rank as usize;
+                if r >= n {
+                    return Err(proto_err(format!(
+                        "worker rank {rank} out of range (expected 0..{n})"
+                    )));
+                }
+                if links[r].is_some() {
+                    return Err(proto_err(format!("duplicate worker rank {rank}")));
+                }
+                links[r] = Some(WorkerLink {
+                    rank,
+                    stream,
+                    alive: true,
+                });
+            }
+            other => {
+                return Err(proto_err(format!("expected Hello, got {}", other.kind())));
+            }
+        }
+    }
+    Ok(links
+        .into_iter()
+        .map(|l| l.expect("every rank connected exactly once"))
+        .collect())
+}
+
+/// Scatter one request per partition over the live workers and gather
+/// one parsed response per partition, **re-dispatching the partitions
+/// of any worker that dies** (send or receive I/O error) until every
+/// partition has a result or no worker survives.
+///
+/// Correct because every request is a pure function of its partition
+/// index and the epoch-start weights: recomputing a dead worker's
+/// partition elsewhere yields bit-identical results. Named protocol
+/// errors (garbage frames, aborts, mismatched replies) are fatal —
+/// only *dead* peers are survivable, confused ones are not.
+fn dispatch<T>(
+    links: &mut [WorkerLink],
+    k: usize,
+    reassigned: &mut usize,
+    make: impl Fn(Vec<u64>) -> Msg,
+    mut parse: impl FnMut(Msg, usize) -> Result<T>,
+) -> Result<Vec<T>> {
+    let mut out: Vec<Option<T>> = (0..k).map(|_| None).collect();
+    let mut first_round = true;
+    loop {
+        let pending: Vec<usize> = (0..k).filter(|&p| out[p].is_none()).collect();
+        if pending.is_empty() {
+            break;
+        }
+        let alive: Vec<usize> = links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive)
+            .map(|(i, _)| i)
+            .collect();
+        if alive.is_empty() {
+            return Err(proto_err(format!(
+                "all {} workers are dead with {} partition results outstanding",
+                links.len(),
+                pending.len()
+            )));
+        }
+        if !first_round {
+            *reassigned += pending.len();
+        }
+        first_round = false;
+        // Round-robin the pending partitions over the live workers —
+        // with all workers alive this is the static p % N assignment.
+        let mut rounds: Vec<Vec<u64>> = vec![Vec::new(); links.len()];
+        for (i, &p) in pending.iter().enumerate() {
+            rounds[alive[i % alive.len()]].push(p as u64);
+        }
+        // Write every request before reading any response: workers
+        // proceed independently, so the leader never deadlocks waiting
+        // on a worker that is itself waiting to be asked.
+        for (w, parts) in rounds.iter().enumerate() {
+            if parts.is_empty() {
+                continue;
+            }
+            if write_msg(&mut links[w].stream, &make(parts.clone())).is_err() {
+                links[w].alive = false;
+            }
+        }
+        for (w, parts) in rounds.iter().enumerate() {
+            if parts.is_empty() || !links[w].alive {
+                continue;
+            }
+            for &p in parts {
+                match read_msg(&mut links[w].stream) {
+                    Ok(Msg::Abort { reason }) => {
+                        return Err(proto_err(format!(
+                            "worker {} aborted: {reason}",
+                            links[w].rank
+                        )));
+                    }
+                    Ok(msg) => {
+                        out[p as usize] = Some(parse(msg, p as usize)?);
+                    }
+                    Err(Error::Io(_)) => {
+                        // Dead worker: everything it still owed goes
+                        // back into the pool for the next round.
+                        links[w].alive = false;
+                        break;
+                    }
+                    Err(other) => return Err(other),
+                }
+            }
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|o| o.expect("loop exits only with every partition resolved"))
+        .collect())
+}
+
+/// Drive a distributed training run as the **leader**: accept
+/// `cfg.distributed.workers` connections on `listener`, hand each
+/// worker the training context, and run the partitioned trainer's
+/// epoch loop with all partition steps computed remotely.
+///
+/// The run is **bit-identical** to single-process
+/// [`train_partitioned`](crate::pipeline::train_partitioned) on the
+/// same `(spec, dataset_seed, quant, cfg, seed)` at any worker count —
+/// same loss curve, same final weights, byte-identical
+/// [`state_to_bytes`](crate::checkpoint::state_to_bytes) image — and
+/// survives worker deaths by re-dispatching their partitions (see
+/// [`DistTrainOutcome::reassigned_partitions`]). With
+/// `cfg.distributed.checkpoint_path` set, a [`TrainState`] is written
+/// atomically every `checkpoint_every_epochs`; pass a loaded state as
+/// `resume` to continue a killed run with the identical trajectory.
+///
+/// The caller owns process management: bind the listener, spawn the
+/// worker processes (or threads, in tests) pointed at its address,
+/// then call this.
+pub fn train_distributed(
+    listener: &TcpListener,
+    spec: &DatasetSpec,
+    dataset_seed: u64,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+    resume: Option<TrainState>,
+) -> Result<DistTrainOutcome> {
+    quant.validate()?;
+    cfg.validate()?;
+    let dcfg = &cfg.distributed;
+    if !dcfg.enabled() {
+        return Err(Error::Config(
+            "train_distributed requires distributed.workers >= 1".into(),
+        ));
+    }
+    let dataset = spec.generate(dataset_seed);
+    dataset.validate()?;
+    let pcfg = &cfg.partition;
+    let k = pcfg.num_partitions;
+    let parts = partition_dataset(&dataset, k, pcfg.halo_hops)?;
+    let fingerprint = HaloOwnership::build(&parts)?.fingerprint();
+    let core_train_counts: Vec<usize> = parts.parts.iter().map(|p| p.core_train_count()).collect();
+    let total_train: usize = core_train_counts.iter().sum();
+    if total_train == 0 {
+        return Err(Error::Config("dataset has no training nodes".into()));
+    }
+    let halo_nodes = parts.total_halo_nodes();
+    let edge_cut_fraction = parts.edge_cut_fraction();
+    // Scatter metadata for eval assembly; the subgraphs themselves live
+    // on the workers, so the leader drops the partition set entirely.
+    let assembly: Vec<(Vec<usize>, Vec<bool>)> = parts
+        .parts
+        .iter()
+        .map(|p| (p.node_map.clone(), p.core_mask.clone()))
+        .collect();
+    drop(parts);
+
+    let (start_epoch, mut model, mut adam, rng) =
+        init_partitioned_run(&dataset, quant, cfg, seed, resume)?;
+
+    let mut links = accept_workers(listener, dcfg.workers)?;
+    let setup = proto::WorkerSetup {
+        spec: spec.clone(),
+        dataset_seed,
+        seed,
+        quant: quant.clone(),
+        arch: cfg.arch,
+        hidden_dim: cfg.hidden_dim,
+        num_layers: cfg.num_layers,
+        num_partitions: k,
+        halo_hops: pcfg.halo_hops,
+        cache_bits: pcfg.cache_bits,
+        allocation: cfg.allocation.clone(),
+        ownership_fingerprint: fingerprint,
+    };
+    for link in &mut links {
+        write_msg(&mut link.stream, &Msg::Setup(Box::new(setup.clone())))?;
+    }
+    for link in &mut links {
+        match read_msg(&mut link.stream)? {
+            Msg::Ready { fingerprint: fp } if fp == fingerprint => {}
+            Msg::Ready { fingerprint: fp } => {
+                return Err(proto_err(format!(
+                    "worker {} partitioning fingerprint {fp:#018x} disagrees with \
+                     leader {fingerprint:#018x}",
+                    link.rank
+                )));
+            }
+            Msg::Abort { reason } => {
+                return Err(proto_err(format!(
+                    "worker {} aborted during handshake: {reason}",
+                    link.rank
+                )));
+            }
+            other => {
+                return Err(proto_err(format!(
+                    "expected Ready from worker {}, got {}",
+                    link.rank,
+                    other.kind()
+                )));
+            }
+        }
+    }
+
+    let engine = QuantEngine::from_config(&cfg.parallelism);
+    let mut pool = BufferPool::new();
+    let mut cache = ActivationCache::new(k, seed ^ 0x00ca_c4ed);
+
+    let mut curve = TrainCurve::default();
+    let mut timer = LapTimer::new();
+    let mut best_val_loss = f64::INFINITY;
+    let mut test_at_best = 0.0;
+    let mut max_stash = 0usize;
+    let mut peak_resident = 0usize;
+    let mut final_train_loss = f64::NAN;
+    let mut wire = WireStats::default();
+    let mut reassigned = 0usize;
+    let n = dataset.num_nodes();
+
+    for epoch in start_epoch..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let steps = dispatch(
+            &mut links,
+            k,
+            &mut reassigned,
+            |parts| Msg::Steps {
+                epoch: epoch as u64,
+                parts,
+                weights: model.weights.clone(),
+            },
+            |msg, p| match msg {
+                Msg::StepResult {
+                    part,
+                    loss,
+                    stash_bytes,
+                    grads,
+                } if part as usize == p => Ok((loss, stash_bytes as usize, grads)),
+                other => Err(proto_err(format!(
+                    "expected StepResult for partition {p}, got {}",
+                    other.kind()
+                ))),
+            },
+        )?;
+        // Fold in fixed partition order p = 0..k — the dispatch order
+        // and worker count cannot leak into the accumulated gradient.
+        let mut grad_acc: Vec<Matrix> = model
+            .shapes()
+            .iter()
+            .map(|&(r, c)| Matrix::zeros(r, c))
+            .collect();
+        let mut loss_acc = 0.0f64;
+        for (p, (loss, stash, grads)) in steps.into_iter().enumerate() {
+            if grads.len() != grad_acc.len() {
+                return Err(proto_err(format!(
+                    "partition {p} returned {} gradient matrices, expected {}",
+                    grads.len(),
+                    grad_acc.len()
+                )));
+            }
+            let w = core_train_counts[p] as f64 / total_train as f64;
+            loss_acc += loss * w;
+            for (a, g) in grad_acc.iter_mut().zip(&grads) {
+                a.axpy(w as f32, g)?;
+            }
+            max_stash = max_stash.max(stash);
+        }
+        adam.step(&mut model.weights, &grad_acc)?;
+        final_train_loss = loss_acc;
+
+        if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            let bodies = dispatch(
+                &mut links,
+                k,
+                &mut reassigned,
+                |parts| Msg::Evals {
+                    epoch: epoch as u64,
+                    parts,
+                    weights: model.weights.clone(),
+                },
+                |msg, p| match msg {
+                    Msg::EvalResult { part, body } if part as usize == p => Ok(body),
+                    other => Err(proto_err(format!(
+                        "expected EvalResult for partition {p}, got {}",
+                        other.kind()
+                    ))),
+                },
+            )?;
+            // Packed logits park straight into the cache — the wire body
+            // *is* the cache entry, quantized on the worker under the
+            // same slot seed stream a local park would use.
+            for (p, body) in bodies.into_iter().enumerate() {
+                wire.halo_payload_bytes += body.len() as u64;
+                let pt = engine.decode_from_wire(&body, &mut pool)?;
+                wire.halo_f32_bytes += (pt.shape.0 * pt.shape.1 * 4) as u64;
+                cache.park_packed(p, pt, &mut pool)?;
+            }
+            peak_resident = peak_resident.max(cache.resident_bytes());
+            let mut full = Matrix::zeros(n, dataset.num_classes);
+            for (p, (node_map, core_mask)) in assembly.iter().enumerate() {
+                let deq = cache
+                    .fetch(p, &engine, &mut pool)?
+                    .expect("parked in the loop above");
+                for (local, &parent) in node_map.iter().enumerate() {
+                    if core_mask[local] {
+                        full.row_mut(parent).copy_from_slice(deq.row(local));
+                    }
+                }
+                pool.put_floats(deq.into_vec());
+            }
+            let (val_loss, _) = softmax_cross_entropy(&full, &dataset.labels, &dataset.val_mask)?;
+            let val_acc = masked_accuracy(&full, &dataset.labels, &dataset.val_mask);
+            curve.push(epoch, loss_acc, val_loss, val_acc);
+            if val_loss < best_val_loss {
+                best_val_loss = val_loss;
+                test_at_best = masked_accuracy(&full, &dataset.labels, &dataset.test_mask);
+            }
+        }
+
+        if let Some(path) = &dcfg.checkpoint_path {
+            let done = epoch + 1;
+            if done % dcfg.checkpoint_every_epochs == 0 || done == cfg.epochs {
+                let st = TrainState {
+                    epoch: done,
+                    model: model.clone(),
+                    adam: adam.clone(),
+                    rng: rng.clone(),
+                    plans: None,
+                };
+                write_checkpoint_atomic(path, &st)?;
+            }
+        }
+        timer.record(t0.elapsed());
+    }
+
+    // Best-effort: a worker that already died is already accounted for.
+    for link in &mut links {
+        if link.alive {
+            let _ = write_msg(&mut link.stream, &Msg::Shutdown);
+        }
+    }
+
+    let state = TrainState {
+        epoch: cfg.epochs,
+        model: model.clone(),
+        adam,
+        rng,
+        plans: None,
+    };
+    Ok(DistTrainOutcome {
+        result: PartitionTrainResult {
+            result: TrainResult {
+                test_accuracy: test_at_best,
+                best_val_loss,
+                curve,
+                epochs_per_sec: timer.rate_per_sec(),
+                stash_bytes: max_stash,
+                final_train_loss,
+            },
+            peak_resident_bytes: peak_resident,
+            cache_bytes: cache.resident_bytes() + cache.spilled_bytes(),
+            num_partitions: k,
+            halo_nodes,
+            edge_cut_fraction,
+            model,
+        },
+        state,
+        wire,
+        reassigned_partitions: reassigned,
+    })
+}
+
+/// Run one **worker**: connect to the leader at `addr`, announce
+/// `rank`, rebuild the training context from the Setup message
+/// (regenerating the dataset and re-partitioning locally), then serve
+/// step/eval requests until Shutdown.
+///
+/// All compute goes through the same `partition_train_step` /
+/// `pack_partition_logits` kernels as the single-process trainer, on a
+/// serial [`QuantEngine`] — results are bit-identical at any thread
+/// count anyway, and worker processes already are the parallelism.
+/// Eval replies carry the partition's logits as packed codes, never
+/// dense `f32`.
+pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    write_msg(&mut stream, &Msg::Hello { rank })?;
+    let setup = match read_msg(&mut stream)? {
+        Msg::Setup(s) => *s,
+        Msg::Abort { reason } => {
+            return Err(proto_err(format!("leader aborted: {reason}")));
+        }
+        other => {
+            return Err(proto_err(format!("expected Setup, got {}", other.kind())));
+        }
+    };
+    let dataset = setup.spec.generate(setup.dataset_seed);
+    dataset.validate()?;
+    let k = setup.num_partitions;
+    let parts = partition_dataset(&dataset, k, setup.halo_hops)?;
+    let fingerprint = HaloOwnership::build(&parts)?.fingerprint();
+    if fingerprint != setup.ownership_fingerprint {
+        // Training on a divergent partitioning would silently corrupt
+        // the run; tell the leader why before bailing.
+        let reason = format!(
+            "worker {rank} partitioning fingerprint {fingerprint:#018x} disagrees \
+             with leader {:#018x}",
+            setup.ownership_fingerprint
+        );
+        let _ = write_msg(
+            &mut stream,
+            &Msg::Abort {
+                reason: reason.clone(),
+            },
+        );
+        return Err(proto_err(reason));
+    }
+    write_msg(&mut stream, &Msg::Ready { fingerprint })?;
+
+    let bins = resolve_layer_bins(
+        setup.arch,
+        dataset.num_features(),
+        setup.hidden_dim,
+        dataset.num_classes,
+        setup.num_layers,
+        &setup.quant,
+    )?;
+    let allocator = setup.allocation.allocator(&setup.quant)?;
+    let engine = QuantEngine::serial();
+    let mut pool = BufferPool::new();
+    let mut plans: Vec<Option<Vec<BitPlan>>> = vec![None; k];
+    let mut plans_epoch: Option<u64> = None;
+    let mut steps_done = 0usize;
+
+    loop {
+        match read_msg(&mut stream)? {
+            Msg::Steps {
+                epoch,
+                parts: assigned,
+                weights,
+            } => {
+                let model = GcnModel {
+                    arch: setup.arch,
+                    weights,
+                };
+                if let Some(alloc) = &allocator {
+                    let e = epoch as usize;
+                    if e % setup.allocation.realloc_interval_epochs == 0
+                        && plans_epoch != Some(epoch)
+                    {
+                        // Re-solve *all* k partitions' plans, not just
+                        // this round's: a mid-epoch reassignment may hand
+                        // this worker any partition, and the stats
+                        // streams are (epoch, partition)-addressed so the
+                        // solve is identical wherever it runs.
+                        for (p, slot) in plans.iter_mut().enumerate() {
+                            let mut stats_rng =
+                                Pcg64::with_stream(setup.seed ^ 0xb17a_1710, (e * k + p) as u64);
+                            *slot = Some(allocate_plans(
+                                &model,
+                                &parts.parts[p].data,
+                                &setup.quant,
+                                alloc,
+                                &mut stats_rng,
+                            )?);
+                        }
+                        plans_epoch = Some(epoch);
+                    }
+                }
+                for &pu in &assigned {
+                    let p = checked_part(pu, &parts)?;
+                    if let Some(limit) = opts.fail_after_steps {
+                        if steps_done >= limit {
+                            // Fault injection: vanish without replying —
+                            // the leader sees the closed socket, exactly
+                            // like a crashed worker process.
+                            return Ok(());
+                        }
+                    }
+                    let (loss, grads, stash) = partition_train_step(
+                        &model,
+                        &parts.parts[p].data,
+                        &setup.quant,
+                        &bins,
+                        plans[p].as_deref(),
+                        setup.seed,
+                        epoch as usize,
+                        k,
+                        p,
+                        &engine,
+                        &mut pool,
+                    )?;
+                    steps_done += 1;
+                    write_msg(
+                        &mut stream,
+                        &Msg::StepResult {
+                            part: pu,
+                            loss,
+                            stash_bytes: stash as u64,
+                            grads,
+                        },
+                    )?;
+                }
+            }
+            Msg::Evals {
+                epoch: _,
+                parts: assigned,
+                weights,
+            } => {
+                let model = GcnModel {
+                    arch: setup.arch,
+                    weights,
+                };
+                for &pu in &assigned {
+                    let p = checked_part(pu, &parts)?;
+                    let pt = pack_partition_logits(
+                        &model,
+                        &parts.parts[p].data,
+                        setup.cache_bits,
+                        setup.seed,
+                        p,
+                        &engine,
+                        &mut pool,
+                    )?;
+                    let mut body = Vec::with_capacity(64 + pt.packed.len());
+                    crate::memory::write_planned(&mut body, &pt);
+                    pool.put_bytes(pt.packed);
+                    write_msg(&mut stream, &Msg::EvalResult { part: pu, body })?;
+                }
+            }
+            Msg::Shutdown => return Ok(()),
+            Msg::Abort { reason } => {
+                return Err(proto_err(format!("leader aborted: {reason}")));
+            }
+            other => {
+                return Err(proto_err(format!(
+                    "unexpected {} message on a serving worker",
+                    other.kind()
+                )));
+            }
+        }
+    }
+}
+
+fn checked_part(pu: u64, parts: &PartitionSet) -> Result<usize> {
+    let p = pu as usize;
+    if p >= parts.parts.len() {
+        return Err(proto_err(format!(
+            "leader assigned partition {p}, but only {} exist",
+            parts.parts.len()
+        )));
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Arch;
+    use crate::linalg::Adam;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("iexact_dist_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn checkpoint_write_is_atomic_and_loadable() {
+        let mut rng = Pcg64::new(7);
+        let model = GcnModel::init_arch(Arch::Gcn, 4, 8, 3, 2, &mut rng).unwrap();
+        let adam = Adam::new(1e-2, 0.0, &model.shapes());
+        let state = TrainState {
+            epoch: 5,
+            model,
+            adam,
+            rng,
+            plans: None,
+        };
+        let path = tmp_path("atomic_ckpt");
+        let path_str = path.to_str().unwrap().to_string();
+        write_checkpoint_atomic(&path_str, &state).unwrap();
+        // The temp file must not linger and the artifact must round-trip.
+        assert!(!std::path::Path::new(&format!("{path_str}.tmp")).exists());
+        let loaded = crate::checkpoint::load_state(&path).unwrap();
+        assert_eq!(loaded.epoch, 5);
+        assert_eq!(
+            crate::checkpoint::state_to_bytes(&loaded),
+            crate::checkpoint::state_to_bytes(&state)
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,533 @@
+//! Message layer of the distributed protocol: everything that travels
+//! inside a [`frame`](super::frame) payload.
+//!
+//! Encoding rides the checkpoint module's little-endian write helpers
+//! and bounds-checked [`Reader`], so the wire format shares its idioms
+//! (and its truncation diagnostics) with every on-disk format in the
+//! crate. Matrices use the exact checkpoint layout; the `EvalResult`
+//! body is a [`crate::memory::write_planned`] image — the same bytes an
+//! out-of-core spill file holds after its slot field.
+
+use crate::checkpoint::{write_matrix, write_u32, write_u64, Reader};
+use crate::config::{AllocStrategy, AllocationConfig, Arch, DatasetSpec, QuantConfig, QuantMode};
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+const TAG_HELLO: u8 = 1;
+const TAG_SETUP: u8 = 2;
+const TAG_READY: u8 = 3;
+const TAG_STEPS: u8 = 4;
+const TAG_STEP_RESULT: u8 = 5;
+const TAG_EVALS: u8 = 6;
+const TAG_EVAL_RESULT: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+const TAG_ABORT: u8 = 9;
+
+/// Caps on repeated fields — far above any real run, low enough that a
+/// desynced peer cannot make the decoder allocate absurdly.
+const MAX_PARTS: usize = 1 << 20;
+const MAX_WEIGHTS: usize = 1024;
+const MAX_STRING: usize = 4096;
+const MAX_BODY: usize = 1 << 31;
+
+fn bad(msg: impl std::fmt::Display) -> Error {
+    Error::Runtime(format!("dist protocol: {msg}"))
+}
+
+/// Everything a worker needs to reconstruct the leader's training
+/// context from scratch: the dataset is *regenerated* (spec + seed), the
+/// graph re-partitioned locally, and the agreement cross-checked via the
+/// [`HaloOwnership`](crate::partition::HaloOwnership) fingerprint — no
+/// subgraph bytes ever cross the wire.
+#[derive(Debug, Clone)]
+pub(crate) struct WorkerSetup {
+    pub spec: DatasetSpec,
+    pub dataset_seed: u64,
+    /// The run seed: keys the per-`(epoch, partition)` step streams and
+    /// the cache slot streams.
+    pub seed: u64,
+    pub quant: QuantConfig,
+    pub arch: Arch,
+    pub hidden_dim: usize,
+    pub num_layers: usize,
+    pub num_partitions: usize,
+    pub halo_hops: usize,
+    pub cache_bits: u32,
+    pub allocation: AllocationConfig,
+    /// The leader's halo ownership digest; a worker whose local
+    /// partitioning disagrees must abort rather than train.
+    pub ownership_fingerprint: u64,
+}
+
+fn write_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    write_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_f64(r: &mut Reader<'_>) -> Result<f64> {
+    Ok(f64::from_le_bytes(r.take(8)?.try_into().unwrap()))
+}
+
+fn read_str(r: &mut Reader<'_>) -> Result<String> {
+    let len = r.u64()? as usize;
+    if len > MAX_STRING {
+        return Err(bad(format!("string length {len} exceeds {MAX_STRING}")));
+    }
+    String::from_utf8(r.take(len)?.to_vec()).map_err(|_| bad("string is not valid UTF-8"))
+}
+
+fn write_parts(buf: &mut Vec<u8>, parts: &[u64]) {
+    write_u64(buf, parts.len() as u64);
+    for &p in parts {
+        write_u64(buf, p);
+    }
+}
+
+fn read_parts(r: &mut Reader<'_>) -> Result<Vec<u64>> {
+    let n = r.u64()? as usize;
+    if n > MAX_PARTS {
+        return Err(bad(format!("partition list length {n} exceeds {MAX_PARTS}")));
+    }
+    (0..n).map(|_| r.u64()).collect()
+}
+
+fn write_matrices(buf: &mut Vec<u8>, ms: &[Matrix]) {
+    write_u32(buf, ms.len() as u32);
+    for m in ms {
+        write_matrix(buf, m);
+    }
+}
+
+fn read_matrices(r: &mut Reader<'_>) -> Result<Vec<Matrix>> {
+    let n = r.u32()? as usize;
+    if n > MAX_WEIGHTS {
+        return Err(bad(format!("matrix list length {n} exceeds {MAX_WEIGHTS}")));
+    }
+    (0..n).map(|_| r.matrix()).collect()
+}
+
+impl WorkerSetup {
+    fn write(&self, buf: &mut Vec<u8>) {
+        write_str(buf, &self.spec.name);
+        write_u64(buf, self.spec.num_nodes as u64);
+        write_u64(buf, self.spec.num_features as u64);
+        write_u64(buf, self.spec.num_classes as u64);
+        write_f64(buf, self.spec.mean_degree);
+        write_f64(buf, self.spec.feature_snr);
+        write_f64(buf, self.spec.homophily);
+        write_u64(buf, self.dataset_seed);
+        write_u64(buf, self.seed);
+        let (mode, group_ratio) = match self.quant.mode {
+            QuantMode::Fp32 => (0u8, 0u64),
+            QuantMode::RowWise => (1, 0),
+            QuantMode::BlockWise { group_ratio } => (2, group_ratio as u64),
+            QuantMode::RowWiseVm => (3, 0),
+        };
+        buf.push(mode);
+        write_u64(buf, group_ratio);
+        write_u32(buf, self.quant.bits);
+        write_u64(buf, self.quant.proj_ratio as u64);
+        buf.push(match self.arch {
+            Arch::Gcn => 0,
+            Arch::GraphSage => 1,
+        });
+        write_u64(buf, self.hidden_dim as u64);
+        write_u64(buf, self.num_layers as u64);
+        write_u64(buf, self.num_partitions as u64);
+        write_u64(buf, self.halo_hops as u64);
+        write_u32(buf, self.cache_bits);
+        buf.push(match self.allocation.strategy {
+            AllocStrategy::Fixed => 0,
+            AllocStrategy::Greedy => 1,
+        });
+        write_f64(buf, self.allocation.budget_bits);
+        write_u64(buf, self.allocation.realloc_interval_epochs as u64);
+        write_u32(buf, self.allocation.min_bits);
+        write_u32(buf, self.allocation.max_bits);
+        write_u64(buf, self.ownership_fingerprint);
+    }
+
+    fn read(r: &mut Reader<'_>) -> Result<WorkerSetup> {
+        let name = read_str(r)?;
+        let spec = DatasetSpec {
+            name,
+            num_nodes: r.u64()? as usize,
+            num_features: r.u64()? as usize,
+            num_classes: r.u64()? as usize,
+            mean_degree: read_f64(r)?,
+            feature_snr: read_f64(r)?,
+            homophily: read_f64(r)?,
+        };
+        let dataset_seed = r.u64()?;
+        let seed = r.u64()?;
+        let mode_tag = r.byte()?;
+        let group_ratio = r.u64()? as usize;
+        let mode = match mode_tag {
+            0 => QuantMode::Fp32,
+            1 => QuantMode::RowWise,
+            2 => QuantMode::BlockWise { group_ratio },
+            3 => QuantMode::RowWiseVm,
+            other => return Err(bad(format!("bad quant mode tag {other}"))),
+        };
+        let quant = QuantConfig {
+            mode,
+            bits: r.u32()?,
+            proj_ratio: r.u64()? as usize,
+        };
+        let arch = match r.byte()? {
+            0 => Arch::Gcn,
+            1 => Arch::GraphSage,
+            other => return Err(bad(format!("bad arch byte {other}"))),
+        };
+        let hidden_dim = r.u64()? as usize;
+        let num_layers = r.u64()? as usize;
+        let num_partitions = r.u64()? as usize;
+        let halo_hops = r.u64()? as usize;
+        let cache_bits = r.u32()?;
+        let strategy = match r.byte()? {
+            0 => AllocStrategy::Fixed,
+            1 => AllocStrategy::Greedy,
+            other => return Err(bad(format!("bad allocation strategy byte {other}"))),
+        };
+        let allocation = AllocationConfig {
+            strategy,
+            budget_bits: read_f64(r)?,
+            realloc_interval_epochs: r.u64()? as usize,
+            min_bits: r.u32()?,
+            max_bits: r.u32()?,
+        };
+        let ownership_fingerprint = r.u64()?;
+        Ok(WorkerSetup {
+            spec,
+            dataset_seed,
+            seed,
+            quant,
+            arch,
+            hidden_dim,
+            num_layers,
+            num_partitions,
+            halo_hops,
+            cache_bits,
+            allocation,
+            ownership_fingerprint,
+        })
+    }
+}
+
+/// One protocol message. Partition indices travel as `u64` so the wire
+/// layout is pointer-width-independent.
+#[derive(Debug, Clone)]
+pub(crate) enum Msg {
+    /// Worker → leader, first message on connect.
+    Hello { rank: u32 },
+    /// Leader → worker: the full training context (boxed — it dwarfs the
+    /// other variants).
+    Setup(Box<WorkerSetup>),
+    /// Worker → leader: local partitioning agrees with the leader's.
+    Ready { fingerprint: u64 },
+    /// Leader → worker: run these partitions' gradient steps at `epoch`
+    /// from these weights; reply with one `StepResult` per partition in
+    /// order.
+    Steps {
+        epoch: u64,
+        parts: Vec<u64>,
+        weights: Vec<Matrix>,
+    },
+    /// Worker → leader: one partition step's loss, peak stash bytes and
+    /// f32 gradients.
+    StepResult {
+        part: u64,
+        loss: f64,
+        stash_bytes: u64,
+        grads: Vec<Matrix>,
+    },
+    /// Leader → worker: forward these partitions at `epoch`'s
+    /// post-update weights and reply with packed logits.
+    Evals {
+        epoch: u64,
+        parts: Vec<u64>,
+        weights: Vec<Matrix>,
+    },
+    /// Worker → leader: one partition's logits as a packed
+    /// planned-tensor body (quantized codes + plan header — never f32).
+    EvalResult { part: u64, body: Vec<u8> },
+    /// Leader → worker: training is over, exit cleanly.
+    Shutdown,
+    /// Either direction: unrecoverable divergence; the run must stop.
+    Abort { reason: String },
+}
+
+impl Msg {
+    /// Variant name for protocol diagnostics.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Setup(_) => "Setup",
+            Msg::Ready { .. } => "Ready",
+            Msg::Steps { .. } => "Steps",
+            Msg::StepResult { .. } => "StepResult",
+            Msg::Evals { .. } => "Evals",
+            Msg::EvalResult { .. } => "EvalResult",
+            Msg::Shutdown => "Shutdown",
+            Msg::Abort { .. } => "Abort",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Msg::Hello { rank } => {
+                buf.push(TAG_HELLO);
+                write_u32(&mut buf, *rank);
+            }
+            Msg::Setup(s) => {
+                buf.push(TAG_SETUP);
+                s.write(&mut buf);
+            }
+            Msg::Ready { fingerprint } => {
+                buf.push(TAG_READY);
+                write_u64(&mut buf, *fingerprint);
+            }
+            Msg::Steps {
+                epoch,
+                parts,
+                weights,
+            } => {
+                buf.push(TAG_STEPS);
+                write_u64(&mut buf, *epoch);
+                write_parts(&mut buf, parts);
+                write_matrices(&mut buf, weights);
+            }
+            Msg::StepResult {
+                part,
+                loss,
+                stash_bytes,
+                grads,
+            } => {
+                buf.push(TAG_STEP_RESULT);
+                write_u64(&mut buf, *part);
+                write_f64(&mut buf, *loss);
+                write_u64(&mut buf, *stash_bytes);
+                write_matrices(&mut buf, grads);
+            }
+            Msg::Evals {
+                epoch,
+                parts,
+                weights,
+            } => {
+                buf.push(TAG_EVALS);
+                write_u64(&mut buf, *epoch);
+                write_parts(&mut buf, parts);
+                write_matrices(&mut buf, weights);
+            }
+            Msg::EvalResult { part, body } => {
+                buf.push(TAG_EVAL_RESULT);
+                write_u64(&mut buf, *part);
+                write_u64(&mut buf, body.len() as u64);
+                buf.extend_from_slice(body);
+            }
+            Msg::Shutdown => buf.push(TAG_SHUTDOWN),
+            Msg::Abort { reason } => {
+                buf.push(TAG_ABORT);
+                write_str(&mut buf, reason);
+            }
+        }
+        buf
+    }
+
+    pub(crate) fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader {
+            cur: payload,
+            what: "dist message",
+        };
+        // Reader truncation errors are Artifact("dist message truncated");
+        // requalify them as protocol errors — on a socket they mean a
+        // desynced peer, not a damaged file.
+        let msg = Self::decode_body(&mut r).map_err(|e| match e {
+            Error::Artifact(m) => bad(m),
+            other => other,
+        })?;
+        if !r.cur.is_empty() {
+            return Err(bad(format!(
+                "{} bytes trailing a {} message",
+                r.cur.len(),
+                msg.kind()
+            )));
+        }
+        Ok(msg)
+    }
+
+    fn decode_body(r: &mut Reader<'_>) -> Result<Msg> {
+        Ok(match r.byte()? {
+            TAG_HELLO => Msg::Hello { rank: r.u32()? },
+            TAG_SETUP => Msg::Setup(Box::new(WorkerSetup::read(r)?)),
+            TAG_READY => Msg::Ready {
+                fingerprint: r.u64()?,
+            },
+            TAG_STEPS => Msg::Steps {
+                epoch: r.u64()?,
+                parts: read_parts(r)?,
+                weights: read_matrices(r)?,
+            },
+            TAG_STEP_RESULT => Msg::StepResult {
+                part: r.u64()?,
+                loss: read_f64(r)?,
+                stash_bytes: r.u64()?,
+                grads: read_matrices(r)?,
+            },
+            TAG_EVALS => Msg::Evals {
+                epoch: r.u64()?,
+                parts: read_parts(r)?,
+                weights: read_matrices(r)?,
+            },
+            TAG_EVAL_RESULT => {
+                let part = r.u64()?;
+                let len = r.u64()? as usize;
+                if len > MAX_BODY {
+                    return Err(bad(format!("eval body length {len} exceeds {MAX_BODY}")));
+                }
+                Msg::EvalResult {
+                    part,
+                    body: r.take(len)?.to_vec(),
+                }
+            }
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_ABORT => Msg::Abort {
+                reason: read_str(r)?,
+            },
+            other => return Err(bad(format!("unknown message tag {other}"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> WorkerSetup {
+        WorkerSetup {
+            spec: DatasetSpec::tiny(),
+            dataset_seed: 7,
+            seed: 42,
+            quant: QuantConfig::int2_blockwise(8),
+            arch: Arch::GraphSage,
+            hidden_dim: 32,
+            num_layers: 3,
+            num_partitions: 4,
+            halo_hops: 1,
+            cache_bits: 2,
+            allocation: AllocationConfig {
+                strategy: AllocStrategy::Greedy,
+                budget_bits: 2.5,
+                realloc_interval_epochs: 5,
+                min_bits: 1,
+                max_bits: 8,
+            },
+            ownership_fingerprint: 0xdead_beef_cafe_f00d,
+        }
+    }
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        Msg::decode(&msg.encode()).unwrap()
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        let m = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        match roundtrip(&Msg::Hello { rank: 3 }) {
+            Msg::Hello { rank } => assert_eq!(rank, 3),
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::Setup(Box::new(setup()))) {
+            Msg::Setup(s) => {
+                let want = setup();
+                assert_eq!(s.spec.name, want.spec.name);
+                assert_eq!(s.spec.num_nodes, want.spec.num_nodes);
+                assert_eq!(s.spec.homophily, want.spec.homophily);
+                assert_eq!(s.quant, want.quant);
+                assert_eq!(s.arch, want.arch);
+                assert_eq!(s.num_partitions, 4);
+                assert_eq!(s.cache_bits, 2);
+                assert_eq!(s.allocation.strategy, AllocStrategy::Greedy);
+                assert_eq!(s.allocation.budget_bits, 2.5);
+                assert_eq!(s.ownership_fingerprint, want.ownership_fingerprint);
+            }
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::Steps {
+            epoch: 9,
+            parts: vec![0, 2],
+            weights: vec![m.clone()],
+        }) {
+            Msg::Steps {
+                epoch,
+                parts,
+                weights,
+            } => {
+                assert_eq!(epoch, 9);
+                assert_eq!(parts, vec![0, 2]);
+                assert_eq!(weights, vec![m.clone()]);
+            }
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::StepResult {
+            part: 2,
+            loss: 0.5,
+            stash_bytes: 128,
+            grads: vec![m.clone()],
+        }) {
+            Msg::StepResult {
+                part,
+                loss,
+                stash_bytes,
+                grads,
+            } => {
+                assert_eq!((part, loss, stash_bytes), (2, 0.5, 128));
+                assert_eq!(grads, vec![m]);
+            }
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::EvalResult {
+            part: 1,
+            body: vec![1, 2, 3],
+        }) {
+            Msg::EvalResult { part, body } => {
+                assert_eq!(part, 1);
+                assert_eq!(body, vec![1, 2, 3]);
+            }
+            other => panic!("{}", other.kind()),
+        }
+        assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+        match roundtrip(&Msg::Abort {
+            reason: "mismatch".into(),
+        }) {
+            Msg::Abort { reason } => assert_eq!(reason, "mismatch"),
+            other => panic!("{}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn malformed_messages_are_named_protocol_errors() {
+        // Unknown tag.
+        let msg = Msg::decode(&[0xEE]).unwrap_err().to_string();
+        assert!(msg.contains("dist protocol"), "{msg}");
+        assert!(msg.contains("unknown message tag"), "{msg}");
+        // Truncated body requalifies as a protocol error, not artifact.
+        let mut bytes = Msg::Hello { rank: 1 }.encode();
+        bytes.truncate(2);
+        let msg = Msg::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("dist protocol"), "{msg}");
+        assert!(msg.contains("truncated"), "{msg}");
+        // Trailing bytes.
+        let mut bytes = Msg::Shutdown.encode();
+        bytes.push(0);
+        let msg = Msg::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("trailing"), "{msg}");
+        // Empty payload.
+        assert!(Msg::decode(&[]).is_err());
+    }
+}

@@ -11,8 +11,15 @@
 //! [`ParallelismConfig`](crate::config::ParallelismConfig)); the engine's
 //! per-block RNG streams guarantee that a sweep's numbers are identical
 //! whatever thread count each cell ran with.
+//!
+//! The [`dist`] submodule scales the partitioned trainer across
+//! **worker processes**: a leader drives workers over localhost TCP,
+//! halo/eval activations cross process boundaries as packed quantized
+//! codes, and the run stays bit-identical to the single-process loop
+//! at any worker count.
 
 mod aot;
+pub mod dist;
 
 pub use aot::{AotCoordinator, AotTrainOutcome};
 
@@ -44,6 +51,13 @@ pub fn run_native_on(
     quant: &QuantConfig,
     train_cfg: &TrainConfig,
 ) -> Result<RunOutcome> {
+    // This is a public entry point callable without `cfg.validate()`
+    // (unlike `run_native`), and the mean rate below divides by the seed
+    // count — an empty list would yield NaN `epochs_per_sec` and a
+    // zero-count accuracy aggregate instead of an error.
+    if train_cfg.seeds.is_empty() {
+        return Err(crate::Error::Config("train.seeds must be non-empty".into()));
+    }
     let mut acc = Aggregate::new();
     let mut rate = 0.0;
     let mut results = Vec::with_capacity(train_cfg.seeds.len());
@@ -109,6 +123,21 @@ mod tests {
         assert!(out.summary.memory_mb > 0.0);
         assert!(out.summary.epochs_per_sec > 0.0);
         assert_eq!(out.summary.dataset, "tiny");
+    }
+
+    #[test]
+    fn run_native_on_rejects_empty_seeds() {
+        // Regression: an empty seed list used to divide by zero into a
+        // NaN epochs_per_sec and an empty aggregate; it must be a
+        // key-pathed config error.
+        let ds = DatasetSpec::tiny().generate(1);
+        let cfg = TrainConfig {
+            seeds: vec![],
+            ..TrainConfig::default()
+        };
+        let err = run_native_on(&ds, &QuantConfig::int2_blockwise(8), &cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("train.seeds"), "unexpected message: {msg}");
     }
 
     #[test]

@@ -760,6 +760,51 @@ impl QuantEngine {
         })
     }
 
+    /// Quantize `h` under `plan` at `seed` and serialize the result into
+    /// a wire body — the send side of the distributed halo exchange. The
+    /// body layout is exactly the spill-file body (shape, plan header,
+    /// metadata floats, packed codes; see
+    /// `crate::memory::write_planned`), so the activations cross process
+    /// boundaries **as packed codes**, never as dense `f32`. The
+    /// intermediate packed buffer recycles through `pool`.
+    pub fn pack_to_wire(
+        &self,
+        h: &Matrix,
+        plan: &BitPlan,
+        seed: u64,
+        pool: &mut BufferPool,
+    ) -> Result<Vec<u8>> {
+        let pt = self.quantize_planned_seeded_pooled(h, plan, seed, pool)?;
+        let mut buf = Vec::with_capacity(64 + pt.nbytes() + pt.plan.num_blocks());
+        crate::memory::write_planned(&mut buf, &pt);
+        pool.put_bytes(pt.packed);
+        Ok(buf)
+    }
+
+    /// Decode a [`Self::pack_to_wire`] body back into a
+    /// [`PlannedTensor`] — the receive side of the halo exchange. The
+    /// tensor stays in packed-code form (park it, ship it on, or
+    /// dequantize via [`Self::dequantize_planned_pooled`]); malformed
+    /// bodies surface named `wire planned tensor` errors, never panics.
+    pub fn decode_from_wire(
+        &self,
+        bytes: &[u8],
+        pool: &mut BufferPool,
+    ) -> Result<PlannedTensor> {
+        let mut r = crate::checkpoint::Reader {
+            cur: bytes,
+            what: "wire planned tensor",
+        };
+        let pt = crate::memory::read_planned(&mut r, pool)?;
+        if !r.cur.is_empty() {
+            pool.put_bytes(pt.packed);
+            return Err(crate::Error::Artifact(
+                "wire planned tensor: trailing bytes".into(),
+            ));
+        }
+        Ok(pt)
+    }
+
     /// Dequantize a [`PlannedTensor`] (Eq. 3 per block, each at its own
     /// width), sharding the block loop across worker threads. Purely
     /// deterministic — parallel and serial results are bit-identical.

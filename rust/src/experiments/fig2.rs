@@ -53,7 +53,7 @@ pub fn from_activations(act: &crate::tensor::Matrix) -> Result<Fig2> {
     let d = act.cols().max(4);
     let mut h = Histogram::new(0.0, 3.0, BINS)?;
     h.add_all_f32(act.as_slice());
-    let observed = h.probabilities();
+    let observed = h.probabilities()?;
     let uniform = vec![1.0 / BINS as f64; BINS];
     let cn = ClippedNormal::new(2, d)?;
     let clipped_normal = h.discretize_cdf(|x| cn.cdf(x));

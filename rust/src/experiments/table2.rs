@@ -79,7 +79,7 @@ pub fn analyze_dataset(
         // Observed histogram over [0, 3].
         let mut h = Histogram::new(0.0, 3.0, HIST_BINS)?;
         h.add_all_f32(act.as_slice());
-        let observed = h.probabilities();
+        let observed = h.probabilities()?;
 
         // Uniform model.
         let uniform = vec![1.0 / HIST_BINS as f64; HIST_BINS];

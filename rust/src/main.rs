@@ -64,6 +64,15 @@ TRAIN OPTIONS:
                                   holding the whole PartitionSet in RAM
     --resident-budget <bytes>     resident byte budget for --spill-dir runs
     --prefetch-depth <n>          chunks prefetched ahead (default 1, max 8)
+    --workers <n>                 distributed: spawn n worker processes and
+                                  train partition-parallel over localhost
+                                  TCP; halo/eval activations cross process
+                                  boundaries as packed quantized codes, and
+                                  the run is bit-identical to --workers 0
+    --checkpoint <path>           distributed: write a resumable checkpoint
+                                  (atomic temp-then-rename) during training
+    --checkpoint-every <n>        checkpoint interval in epochs (default 10)
+    --resume <path>               distributed: resume from a checkpoint
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
 
 PARTITION OPTIONS:
@@ -300,6 +309,22 @@ fn cmd_partition(opts: &Opts) -> iexact::Result<()> {
 }
 
 fn cmd_train(opts: &Opts) -> iexact::Result<()> {
+    // Hidden worker mode: `iexact train --worker-rank R --connect ADDR`
+    // is how a distributed leader spawns its worker processes. The
+    // worker gets its whole training context over the socket, so none
+    // of the other flags apply here.
+    if let Some(r) = opts.get("worker-rank") {
+        let rank: u32 = r.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--worker-rank expects a non-negative integer, got '{r}'"
+            ))
+        })?;
+        let addr = opts.get("connect").ok_or_else(|| {
+            iexact::Error::Config("--worker-rank requires --connect <addr>".into())
+        })?;
+        let opts = iexact::coordinator::dist::WorkerOptions::default();
+        return iexact::coordinator::dist::run_worker(addr, rank, &opts);
+    }
     let mut cfg = if let Some(path) = opts.get("config") {
         ExperimentConfig::from_toml_file(std::path::Path::new(path))?
     } else {
@@ -387,6 +412,25 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
             ))
         })?;
     }
+    // Distributed training: --workers <n> makes this process the leader
+    // of n spawned workers. Invalid values are rejected, like --threads.
+    if let Some(w) = opts.get("workers") {
+        cfg.train.distributed.workers = w.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--workers expects a non-negative integer, got '{w}'"
+            ))
+        })?;
+    }
+    if let Some(p) = opts.get("checkpoint") {
+        cfg.train.distributed.checkpoint_path = Some(p.clone());
+    }
+    if let Some(e) = opts.get("checkpoint-every") {
+        cfg.train.distributed.checkpoint_every_epochs = e.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--checkpoint-every expects a positive integer, got '{e}'"
+            ))
+        })?;
+    }
     cfg.validate()?;
     let ds = cfg.dataset.generate(cfg.dataset_seed);
     eprintln!(
@@ -396,6 +440,46 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         ds.num_edges(),
         cfg.quant.label()
     );
+    if cfg.train.distributed.enabled() {
+        if opts.contains_key("sample") {
+            return Err(iexact::Error::Config(
+                "--sample (GraphSAINT-RN) and --workers (distributed partitioned \
+                 training) cannot be combined; pick one"
+                    .into(),
+            ));
+        }
+        let seed = cfg.train.seeds.first().copied().unwrap_or(0);
+        if cfg.train.seeds.len() > 1 {
+            eprintln!(
+                "note: distributed training runs a single seed ({seed}); \
+                 ignoring {} more from train.seeds",
+                cfg.train.seeds.len() - 1
+            );
+        }
+        let resume = match opts.get("resume") {
+            Some(p) => Some(iexact::checkpoint::load_state(std::path::Path::new(p))?),
+            None => None,
+        };
+        let out = run_distributed_leader(&cfg, seed, resume)?;
+        let wire_pct = 100.0 * out.wire.halo_payload_bytes as f64
+            / (out.wire.halo_f32_bytes.max(1)) as f64;
+        println!(
+            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}\nedge cut:      {:.1}%\nworkers:       {}\nhalo wire KB:  {} ({:.1}% of the f32 {} KB)\nreassigned partitions: {}",
+            out.result.result.test_accuracy,
+            out.result.result.epochs_per_sec,
+            out.result.result.stash_bytes / 1024,
+            100.0 * out.result.edge_cut_fraction,
+            cfg.train.distributed.workers,
+            out.wire.halo_payload_bytes / 1024,
+            wire_pct,
+            out.wire.halo_f32_bytes / 1024,
+            out.reassigned_partitions
+        );
+        if let Some(path) = opts.get("csv") {
+            std::fs::write(path, out.result.result.curve.to_csv())?;
+        }
+        return Ok(());
+    }
     if cfg.train.partition.num_partitions > 1 {
         // The two minibatching regimes are mutually exclusive; silently
         // preferring one would mislabel the numbers the user reads.
@@ -466,6 +550,47 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         eprintln!("loss curve written to {path}");
     }
     Ok(())
+}
+
+/// Spawn the worker processes (`iexact train --worker-rank R --connect
+/// ADDR` on an ephemeral localhost port), run the leader loop, then
+/// reap the children. On a leader error the workers are killed first —
+/// one could still be blocked reading a socket the leader never served.
+fn run_distributed_leader(
+    cfg: &ExperimentConfig,
+    seed: u64,
+    resume: Option<iexact::checkpoint::TrainState>,
+) -> iexact::Result<iexact::coordinator::dist::DistTrainOutcome> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for rank in 0..cfg.train.distributed.workers {
+        let child = std::process::Command::new(&exe)
+            .arg("train")
+            .arg("--worker-rank")
+            .arg(rank.to_string())
+            .arg("--connect")
+            .arg(&addr)
+            .spawn()?;
+        children.push(child);
+    }
+    let result = iexact::coordinator::dist::train_distributed(
+        &listener,
+        &cfg.dataset,
+        cfg.dataset_seed,
+        &cfg.quant,
+        &cfg.train,
+        seed,
+        resume,
+    );
+    for mut child in children {
+        if result.is_err() {
+            let _ = child.kill();
+        }
+        let _ = child.wait();
+    }
+    result
 }
 
 fn cmd_train_aot(opts: &Opts) -> iexact::Result<()> {

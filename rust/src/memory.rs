@@ -261,6 +261,16 @@ fn spill_err(path: &Path, msg: impl std::fmt::Display) -> Error {
     Error::Artifact(format!("out_of_core: {}: {msg}", path.display()))
 }
 
+/// The quantization seed for cache slot `slot` of a cache keyed by
+/// `cache_seed`. Exposed so a remote worker can pack a tensor under the
+/// exact stream a local [`ActivationCache::park`] would use — the
+/// contract behind the distributed halo exchange's bit-identity (the
+/// leader [`park_packed`](ActivationCache::park_packed)s the received
+/// codes and gets the same slot bytes as if it had quantized locally).
+pub fn slot_quant_seed(cache_seed: u64, slot: usize) -> u64 {
+    Pcg64::with_stream(cache_seed, slot as u64).next_u64()
+}
+
 impl ActivationCache {
     /// A cache with `num_slots` empty slots; `seed` keys every slot's
     /// quantization stream.
@@ -349,10 +359,43 @@ impl ActivationCache {
                 self.slots.len()
             )));
         }
-        // Recycle the outgoing occupant's packed buffer first so the new
-        // park can draw it straight back out of the pool. Any on-disk
-        // copy is now stale: remove it best-effort (a failed remove is
-        // harmless — the slot is no longer marked on_disk).
+        self.clear_slot(slot, pool);
+        let seed = slot_quant_seed(self.seed, slot);
+        let pt = engine.quantize_planned_seeded_pooled(h, plan, seed, pool)?;
+        self.slots[slot] = Slot::Resident { pt, on_disk: false };
+        self.parks += 1;
+        Ok(())
+    }
+
+    /// Park an already-quantized tensor into `slot` — the receive side of
+    /// the distributed halo exchange, where a worker packed the tensor
+    /// under [`slot_quant_seed`] and shipped the codes over the wire.
+    /// Bit-identical to a local [`park`](Self::park) of the same matrix
+    /// under the same plan: the slot ends up holding the same bytes, so
+    /// every downstream fetch/spill/checksum path is unchanged.
+    pub fn park_packed(
+        &mut self,
+        slot: usize,
+        pt: PlannedTensor,
+        pool: &mut BufferPool,
+    ) -> Result<()> {
+        if slot >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "cache slot {slot} out of range {}",
+                self.slots.len()
+            )));
+        }
+        self.clear_slot(slot, pool);
+        self.slots[slot] = Slot::Resident { pt, on_disk: false };
+        self.parks += 1;
+        Ok(())
+    }
+
+    /// Recycle the outgoing occupant's packed buffer first so the new
+    /// park can draw it straight back out of the pool. Any on-disk
+    /// copy is now stale: remove it best-effort (a failed remove is
+    /// harmless — the slot is no longer marked on_disk).
+    fn clear_slot(&mut self, slot: usize, pool: &mut BufferPool) {
         match std::mem::replace(&mut self.slots[slot], Slot::Empty) {
             Slot::Resident { pt, on_disk } => {
                 pool.put_bytes(pt.packed);
@@ -369,11 +412,6 @@ impl ActivationCache {
             }
             Slot::Empty => {}
         }
-        let seed = Pcg64::with_stream(self.seed, slot as u64).next_u64();
-        let pt = engine.quantize_planned_seeded_pooled(h, plan, seed, pool)?;
-        self.slots[slot] = Slot::Resident { pt, on_disk: false };
-        self.parks += 1;
-        Ok(())
     }
 
     /// Dequantize the tensor parked in `slot` (None if the slot is
@@ -544,31 +582,91 @@ impl ActivationCache {
     }
 }
 
+/// Serialize a [`PlannedTensor`]'s body — shape, plan header, metadata
+/// floats and packed codes — into `buf`. This is both the spill-file body
+/// (after the slot field) and the distributed wire body: one layout, so
+/// the on-disk and on-wire formats cannot drift.
+pub(crate) fn write_planned(buf: &mut Vec<u8>, pt: &PlannedTensor) {
+    write_u64(buf, pt.shape.0 as u64);
+    write_u64(buf, pt.shape.1 as u64);
+    write_u64(buf, pt.plan.group_len() as u64);
+    write_u64(buf, pt.plan.num_blocks() as u64);
+    buf.extend_from_slice(pt.plan.bits());
+    write_u64(buf, pt.zeros.len() as u64);
+    for &z in &pt.zeros {
+        buf.extend_from_slice(&z.to_le_bytes());
+    }
+    write_u64(buf, pt.ranges.len() as u64);
+    for &r in &pt.ranges {
+        buf.extend_from_slice(&r.to_le_bytes());
+    }
+    write_u64(buf, pt.packed.len() as u64);
+    buf.extend_from_slice(&pt.packed);
+}
+
+/// Decode a [`write_planned`] body from `r`. Errors are keyed by the
+/// reader's `what` string; the packed buffer is drawn from `pool` so the
+/// decode sits on the same steady-state recycling path as a fresh park.
+pub(crate) fn read_planned(
+    r: &mut crate::checkpoint::Reader<'_>,
+    pool: &mut BufferPool,
+) -> Result<PlannedTensor> {
+    const MAX_COUNT: usize = 1 << 30;
+    let what = r.what;
+    let bad = |msg: String| Error::Artifact(format!("{what}: {msg}"));
+    let rows = r.u64()? as usize;
+    let cols = r.u64()? as usize;
+    let group_len = r.u64()? as usize;
+    let num_blocks = r.u64()? as usize;
+    if num_blocks > MAX_COUNT {
+        return Err(bad(format!("bad block count {num_blocks}")));
+    }
+    let bits = r.take(num_blocks)?.to_vec();
+    let plan = BitPlan::new(bits, group_len).map_err(|e| bad(format!("bad bit plan: {e}")))?;
+    let n_zeros = r.u64()? as usize;
+    if n_zeros > MAX_COUNT {
+        return Err(bad(format!("bad zeros count {n_zeros}")));
+    }
+    let zeros: Vec<f32> = r
+        .take(n_zeros * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let n_ranges = r.u64()? as usize;
+    if n_ranges > MAX_COUNT {
+        return Err(bad(format!("bad ranges count {n_ranges}")));
+    }
+    let ranges: Vec<f32> = r
+        .take(n_ranges * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let n_packed = r.u64()? as usize;
+    if n_packed > MAX_COUNT {
+        return Err(bad(format!("bad packed length {n_packed}")));
+    }
+    let raw = r.take(n_packed)?;
+    let mut packed = pool.take_bytes_scratch(n_packed);
+    packed.copy_from_slice(raw);
+    Ok(PlannedTensor {
+        packed,
+        zeros,
+        ranges,
+        shape: (rows, cols),
+        plan,
+    })
+}
+
 fn encode_spill(slot: usize, pt: &PlannedTensor) -> Vec<u8> {
     let mut buf: Vec<u8> = Vec::with_capacity(64 + pt.nbytes() + pt.plan.num_blocks());
     buf.extend_from_slice(SPILL_MAGIC);
     write_u32(&mut buf, SPILL_VERSION);
     write_u64(&mut buf, slot as u64);
-    write_u64(&mut buf, pt.shape.0 as u64);
-    write_u64(&mut buf, pt.shape.1 as u64);
-    write_u64(&mut buf, pt.plan.group_len() as u64);
-    write_u64(&mut buf, pt.plan.num_blocks() as u64);
-    buf.extend_from_slice(pt.plan.bits());
-    write_u64(&mut buf, pt.zeros.len() as u64);
-    for &z in &pt.zeros {
-        buf.extend_from_slice(&z.to_le_bytes());
-    }
-    write_u64(&mut buf, pt.ranges.len() as u64);
-    for &r in &pt.ranges {
-        buf.extend_from_slice(&r.to_le_bytes());
-    }
-    write_u64(&mut buf, pt.packed.len() as u64);
-    buf.extend_from_slice(&pt.packed);
+    write_planned(&mut buf, pt);
     buf
 }
 
 fn decode_spill(path: &Path, slot: usize, pool: &mut BufferPool) -> Result<PlannedTensor> {
-    const MAX_COUNT: usize = 1 << 30;
     let bytes = std::fs::read(path)
         .map_err(|e| spill_err(path, format!("cannot read spill file: {e}")))?;
     if bytes.len() < SPILL_MAGIC.len() + 8 {
@@ -600,53 +698,17 @@ fn decode_spill(path: &Path, slot: usize, pool: &mut BufferPool) -> Result<Plann
             format!("spill file is for slot {stored_slot}, expected {slot}"),
         ));
     }
-    let rows = r.u64()? as usize;
-    let cols = r.u64()? as usize;
-    let group_len = r.u64()? as usize;
-    let num_blocks = r.u64()? as usize;
-    if num_blocks > MAX_COUNT {
-        return Err(spill_err(path, format!("bad block count {num_blocks}")));
-    }
-    let bits = r.take(num_blocks)?.to_vec();
-    let plan = BitPlan::new(bits, group_len)
-        .map_err(|e| spill_err(path, format!("bad bit plan: {e}")))?;
-    let n_zeros = r.u64()? as usize;
-    if n_zeros > MAX_COUNT {
-        return Err(spill_err(path, format!("bad zeros count {n_zeros}")));
-    }
-    let zeros: Vec<f32> = r
-        .take(n_zeros * 4)?
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    let n_ranges = r.u64()? as usize;
-    if n_ranges > MAX_COUNT {
-        return Err(spill_err(path, format!("bad ranges count {n_ranges}")));
-    }
-    let ranges: Vec<f32> = r
-        .take(n_ranges * 4)?
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    let n_packed = r.u64()? as usize;
-    if n_packed > MAX_COUNT {
-        return Err(spill_err(path, format!("bad packed length {n_packed}")));
-    }
-    let raw = r.take(n_packed)?;
+    let pt = read_planned(&mut r, pool).map_err(|e| match e {
+        // Re-key body-level errors onto the file path so operators see
+        // which spill file is bad (the failure-injection contract).
+        Error::Artifact(m) => spill_err(path, m),
+        other => other,
+    })?;
     if !r.cur.is_empty() {
+        pool.put_bytes(pt.packed);
         return Err(spill_err(path, "trailing bytes in spill file"));
     }
-    // Draw the packed buffer from the pool — the reload sits on the same
-    // steady-state recycling path as a fresh park.
-    let mut packed = pool.take_bytes_scratch(n_packed);
-    packed.copy_from_slice(raw);
-    Ok(PlannedTensor {
-        packed,
-        zeros,
-        ranges,
-        shape: (rows, cols),
-        plan,
-    })
+    Ok(pt)
 }
 
 /// Capacity class of a requested buffer length: the next power of two

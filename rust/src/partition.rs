@@ -128,6 +128,83 @@ impl PartitionSet {
     }
 }
 
+/// Which partition's core owns each parent node — the scatter authority
+/// of the distributed eval assembly. A halo node appears in several
+/// induced subgraphs, but exactly one partition *owns* it (the one whose
+/// core contains it), and only the owner's activations are scattered
+/// into full-graph buffers. [`Self::fingerprint`] digests the whole map
+/// so the leader/worker handshake can prove both processes derived the
+/// same partitioning from the same dataset.
+#[derive(Debug, Clone)]
+pub struct HaloOwnership {
+    /// `owner_of[parent]` = index of the partition whose core holds it.
+    owner_of: Vec<usize>,
+    num_partitions: usize,
+}
+
+impl HaloOwnership {
+    /// Build the ownership map from a partition set's cores. Errors if
+    /// any parent node is owned by zero or more than one core — either
+    /// would silently corrupt the assembled logits, so it is a named
+    /// invariant violation, not a debug assert.
+    pub fn build(parts: &PartitionSet) -> Result<Self> {
+        let mut owner_of = vec![usize::MAX; parts.num_nodes];
+        for (p, part) in parts.parts.iter().enumerate() {
+            for &parent in &part.core {
+                if parent >= owner_of.len() {
+                    return Err(Error::Runtime(format!(
+                        "partition {p} core node {parent} out of range {}",
+                        owner_of.len()
+                    )));
+                }
+                if owner_of[parent] != usize::MAX {
+                    return Err(Error::Runtime(format!(
+                        "parent node {parent} owned by both partition {} and {p}",
+                        owner_of[parent]
+                    )));
+                }
+                owner_of[parent] = p;
+            }
+        }
+        if let Some(orphan) = owner_of.iter().position(|&o| o == usize::MAX) {
+            return Err(Error::Runtime(format!(
+                "parent node {orphan} is in no partition core"
+            )));
+        }
+        Ok(HaloOwnership {
+            owner_of,
+            num_partitions: parts.parts.len(),
+        })
+    }
+
+    /// The partition whose core owns `parent` (`None` if out of range).
+    pub fn owner(&self, parent: usize) -> Option<usize> {
+        self.owner_of.get(parent).copied()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.num_partitions
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.owner_of.len()
+    }
+
+    /// FNV-1a digest of the full ownership map. The distributed Setup
+    /// handshake carries the leader's fingerprint; a worker whose
+    /// locally-derived map digests differently aborts before training
+    /// (same guard class as the store's magic/endianness tags).
+    pub fn fingerprint(&self) -> u64 {
+        let mut buf = Vec::with_capacity(16 + self.owner_of.len() * 8);
+        write_u64(&mut buf, self.num_partitions as u64);
+        write_u64(&mut buf, self.owner_of.len() as u64);
+        for &o in &self.owner_of {
+            write_u64(&mut buf, o as u64);
+        }
+        fnv1a(&buf)
+    }
+}
+
 /// Deterministic BFS/greedy edge-cut partitioning of `ds` into `k`
 /// induced subgraphs with `halo_hops`-hop boundary neighborhoods.
 ///
@@ -951,5 +1028,48 @@ mod tests {
         let store = PartitionStore::create(&parts, &dir).unwrap();
         assert!(store.load_partition(2).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn halo_ownership_matches_core_masks() {
+        // The ownership map must agree with the per-partition core walk
+        // the single-process scatter uses: local node i of partition p
+        // with core_mask[i] set is owned by p, and every parent node is
+        // owned exactly once — so an ownership-driven scatter touches
+        // the same (partition, row) pairs as the core_mask walk.
+        let d = ds();
+        for (k, h) in [(1usize, 0usize), (3, 0), (4, 2)] {
+            let parts = partition_dataset(&d, k, h).unwrap();
+            let own = HaloOwnership::build(&parts).unwrap();
+            assert_eq!(own.num_partitions(), k);
+            assert_eq!(own.num_nodes(), d.num_nodes());
+            let mut scattered = vec![0usize; d.num_nodes()];
+            for (p, part) in parts.parts.iter().enumerate() {
+                for (local, &parent) in part.node_map.iter().enumerate() {
+                    if part.core_mask[local] {
+                        assert_eq!(own.owner(parent), Some(p), "k={k} h={h}");
+                        scattered[parent] += 1;
+                    } else {
+                        assert_ne!(own.owner(parent), Some(p), "halo owned by host");
+                    }
+                }
+            }
+            assert!(scattered.iter().all(|&c| c == 1), "k={k} h={h}: scatter gap");
+        }
+    }
+
+    #[test]
+    fn halo_ownership_fingerprint_detects_divergence() {
+        let d = ds();
+        let a = HaloOwnership::build(&partition_dataset(&d, 4, 1).unwrap()).unwrap();
+        let b = HaloOwnership::build(&partition_dataset(&d, 4, 1).unwrap()).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "pure function of the dataset");
+        // A different K or dataset digests differently (the map is
+        // cores-only, so halo depth does not enter it).
+        let c = HaloOwnership::build(&partition_dataset(&d, 2, 1).unwrap()).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let other = DatasetSpec::tiny().generate(8);
+        let e = HaloOwnership::build(&partition_dataset(&other, 4, 1).unwrap()).unwrap();
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 }

@@ -289,7 +289,7 @@ fn resolve_bins(q: &QuantConfig, r_dim: usize) -> Result<BinSpec> {
 /// [`GcnModel::layer_shapes`], which is the single source of truth for
 /// the 2x GraphSAGE concat. Shared by the full-batch and partitioned
 /// trainers so the stash-width formula cannot drift between them.
-fn resolve_layer_bins(
+pub(crate) fn resolve_layer_bins(
     arch: Arch,
     feat_dim: usize,
     hidden_dim: usize,
@@ -935,9 +935,9 @@ pub fn train_span(
 /// eval forward pass on eval epochs. The prefetch queue follows this
 /// schedule exactly, so by run end every prefetched chunk has been
 /// consumed.
-fn ooc_schedule(epochs: usize, eval_every: usize, k: usize) -> Vec<usize> {
+fn ooc_schedule(start_epoch: usize, epochs: usize, eval_every: usize, k: usize) -> Vec<usize> {
     let mut seq = Vec::new();
-    for epoch in 0..epochs {
+    for epoch in start_epoch..epochs {
         seq.extend(0..k);
         if epoch % eval_every == 0 || epoch + 1 == epochs {
             seq.extend(0..k);
@@ -1082,9 +1082,65 @@ pub struct PartitionTrainResult {
 /// so `(zero, range)` metadata stays well under the code bytes even for
 /// narrow class counts (logit scales are homogeneous across nodes, so
 /// multi-row blocks cost little fidelity).
-fn logits_cache_plan(rows: usize, cols: usize, bits: u32) -> Result<BitPlan> {
+pub(crate) fn logits_cache_plan(rows: usize, cols: usize, bits: u32) -> Result<BitPlan> {
     let glen = (cols * 8).max(1);
     BitPlan::uniform(bits, (rows * cols).div_ceil(glen), glen)
+}
+
+/// The RNG stream for partition `p`'s training step at `epoch` of a
+/// `k`-partition run. Addressing steps by `(epoch, partition)` — not by
+/// a serial RNG threaded through the visit order — makes every
+/// partition step a pure function of the epoch-start weights, so a
+/// distributed run computing steps on remote workers (in any
+/// interleaving) is bit-identical to the single-process loop.
+pub(crate) fn partition_step_rng(seed: u64, epoch: usize, k: usize, p: usize) -> Pcg64 {
+    Pcg64::with_stream(seed ^ 0xd157_51ed, (epoch * k + p) as u64)
+}
+
+/// One partition training step, addressed by `(epoch, partition)`: the
+/// shared compute kernel of the single-process partitioned trainer and
+/// the distributed workers. Returns `(loss, grads, stash_bytes)`; the
+/// loss/grads are means over the partition's core train nodes (the
+/// caller applies the core-train-count weighting).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn partition_train_step(
+    model: &GcnModel,
+    part: &Dataset,
+    quant: &QuantConfig,
+    bins: &[BinSpec],
+    plans: Option<&[BitPlan]>,
+    seed: u64,
+    epoch: usize,
+    k: usize,
+    p: usize,
+    engine: &QuantEngine,
+    pool: &mut BufferPool,
+) -> Result<(f64, Vec<Matrix>, usize)> {
+    let mut rng = partition_step_rng(seed, epoch, k, p);
+    let step = train_step(model, part, quant, bins, &mut rng, engine, pool, plans)?;
+    Ok((step.loss, step.grads, step.stash_bytes))
+}
+
+/// Forward partition `p` and quantize its logits exactly as
+/// [`ActivationCache::park`](crate::memory::ActivationCache::park) of a
+/// `run_seed`-keyed cache would — same plan, same slot seed stream — so
+/// the packed bytes can cross a process boundary and be
+/// `park_packed`-ed at the leader with bit-identical cache contents.
+pub(crate) fn pack_partition_logits(
+    model: &GcnModel,
+    part: &Dataset,
+    cache_bits: u32,
+    run_seed: u64,
+    p: usize,
+    engine: &QuantEngine,
+    pool: &mut BufferPool,
+) -> Result<crate::alloc::PlannedTensor> {
+    let logits = model.forward_with(part, engine.runtime())?;
+    let plan = logits_cache_plan(logits.rows(), logits.cols(), cache_bits)?;
+    let seed = crate::memory::slot_quant_seed(run_seed ^ 0x00ca_c4ed, p);
+    let pt = engine.quantize_planned_seeded_pooled(&logits, &plan, seed, pool)?;
+    pool.put_floats(logits.into_vec());
+    Ok(pt)
 }
 
 /// Partitioned large-graph training (`[partition]` config section):
@@ -1137,6 +1193,109 @@ pub fn train_partitioned(
     cfg: &TrainConfig,
     seed: u64,
 ) -> Result<PartitionTrainResult> {
+    train_partitioned_span(dataset, quant, cfg, seed, None).map(|(r, _)| r)
+}
+
+/// Set up (or resume) a partitioned run's mutable trainer state: the
+/// epoch cursor, model, optimizer and the run's main RNG (used only for
+/// weight init — partition steps draw from [`partition_step_rng`]).
+/// Shared by the single-process span and the distributed leader so
+/// their resume validation cannot drift.
+pub(crate) fn init_partitioned_run(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+    resume: Option<crate::checkpoint::TrainState>,
+) -> Result<(usize, GcnModel, Adam, Pcg64)> {
+    match resume {
+        None => {
+            let mut rng = Pcg64::new(seed ^ 0x9a27_1710);
+            let model = GcnModel::init_arch(
+                cfg.arch,
+                dataset.num_features(),
+                cfg.hidden_dim,
+                dataset.num_classes,
+                cfg.num_layers,
+                &mut rng,
+            )?;
+            let adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
+            Ok((0, model, adam, rng))
+        }
+        Some(st) => {
+            if st.epoch >= cfg.epochs {
+                return Err(Error::Config(format!(
+                    "resume epoch {} leaves no epochs to run (train.epochs = {})",
+                    st.epoch, cfg.epochs
+                )));
+            }
+            // Partitioned checkpoints never carry full-batch plans
+            // (per-partition plans are re-solved at realloc boundaries
+            // from epoch-addressed stats); a state that has them came
+            // from the full-batch trainer and must not resume here.
+            if st.plans.is_some() {
+                return Err(Error::Config(
+                    "resume state carries full-batch bit plans; it was saved by the \
+                     full-batch trainer, not the partitioned one"
+                        .into(),
+                ));
+            }
+            let expected = GcnModel::layer_shapes(
+                cfg.arch,
+                dataset.num_features(),
+                cfg.hidden_dim,
+                dataset.num_classes,
+                cfg.num_layers,
+            );
+            if st.model.arch != cfg.arch || st.model.shapes() != expected {
+                return Err(Error::Config(format!(
+                    "resume state is a {} model with weight shapes {:?}; \
+                     config/dataset want {} with {:?}",
+                    st.model.arch.label(),
+                    st.model.shapes(),
+                    cfg.arch.label(),
+                    expected
+                )));
+            }
+            // Adaptive runs re-solve per-partition plans only at realloc
+            // boundaries; resuming between boundaries would run at full
+            // width until the next re-solve and fork the trajectory.
+            if cfg.allocation.allocator(quant)?.is_some()
+                && st.epoch % cfg.allocation.realloc_interval_epochs != 0
+            {
+                return Err(Error::Config(format!(
+                    "allocation.strategy is adaptive but resume epoch {} is not a \
+                     realloc boundary (allocation.realloc_interval_epochs = {}); \
+                     partitioned checkpoints carry no per-partition plans, so the \
+                     trajectory would fork",
+                    st.epoch, cfg.allocation.realloc_interval_epochs
+                )));
+            }
+            let mut adam = st.adam;
+            adam.lr = cfg.lr;
+            adam.weight_decay = cfg.weight_decay;
+            Ok((st.epoch, st.model, adam, st.rng))
+        }
+    }
+}
+
+/// Resumable partitioned training: runs epochs `[start, cfg.epochs)`
+/// where `start` is `0` for a fresh run or `resume.epoch` when
+/// continuing from a saved [`TrainState`](crate::checkpoint::TrainState),
+/// and returns the end-of-span state alongside the span's metrics (the
+/// returned [`PartitionTrainResult`] covers only the span that ran).
+///
+/// Partition steps draw from per-`(epoch, partition)` RNG streams
+/// (`partition_step_rng`), so a resumed span — or a distributed run
+/// computing the same steps on remote workers — reproduces the
+/// uninterrupted run's trajectory **bit-identically**.
+pub fn train_partitioned_span(
+    dataset: &Dataset,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+    resume: Option<crate::checkpoint::TrainState>,
+) -> Result<(PartitionTrainResult, crate::checkpoint::TrainState)> {
     quant.validate()?;
     cfg.validate()?;
     dataset.validate()?;
@@ -1165,15 +1324,8 @@ pub fn train_partitioned(
         .map(|(nm, cm)| nm.len() * std::mem::size_of::<usize>() + cm.len())
         .sum();
 
-    let mut rng = Pcg64::new(seed ^ 0x9a27_1710);
-    let mut model = GcnModel::init_arch(
-        cfg.arch,
-        dataset.num_features(),
-        cfg.hidden_dim,
-        dataset.num_classes,
-        cfg.num_layers,
-        &mut rng,
-    )?;
+    let (start_epoch, mut model, mut adam, rng) =
+        init_partitioned_run(dataset, quant, cfg, seed, resume)?;
     let bins = resolve_layer_bins(
         cfg.arch,
         dataset.num_features(),
@@ -1200,7 +1352,7 @@ pub fn train_partitioned(
                 )));
             }
         }
-        let schedule = ooc_schedule(cfg.epochs, cfg.eval_every, k);
+        let schedule = ooc_schedule(start_epoch, cfg.epochs, cfg.eval_every, k);
         let io = DiskIo::new(store, ooc.depth(), schedule, engine.runtime());
         let cache =
             crate::memory::ActivationCache::with_spill(k, seed ^ 0x00ca_c4ed, base.join("cache"))?;
@@ -1215,7 +1367,6 @@ pub fn train_partitioned(
     // One plan set per partition: block counts differ with subgraph size.
     let mut plans: Vec<Option<Vec<BitPlan>>> = vec![None; k];
 
-    let mut adam = Adam::new(cfg.lr, cfg.weight_decay, &model.shapes());
     let mut curve = TrainCurve::default();
     let mut timer = LapTimer::new();
     let mut best_val_loss = f64::INFINITY;
@@ -1225,7 +1376,7 @@ pub fn train_partitioned(
     let mut final_train_loss = f64::NAN;
     let n = dataset.num_nodes();
 
-    for epoch in 0..cfg.epochs {
+    for epoch in start_epoch..cfg.epochs {
         let t0 = std::time::Instant::now();
         let mut grad_acc: Vec<Matrix> = model
             .shapes()
@@ -1250,28 +1401,30 @@ pub fn train_partitioned(
                     )?);
                 }
             }
-            let step = train_step(
+            let (loss, grads, step_stash) = partition_train_step(
                 &model,
                 &part.data,
                 quant,
                 &bins,
-                &mut rng,
+                plans[p].as_deref(),
+                seed,
+                epoch,
+                k,
+                p,
                 &engine,
                 &mut pool,
-                plans[p].as_deref(),
             )?;
             // Partition losses/gradients are means over the partition's
             // core train nodes; reweight to the global train mean so the
             // accumulated epoch gradient equals the full-batch gradient
             // of the edge-cut-approximated graph.
             let w = core_train_counts[p] as f64 / total_train as f64;
-            loss_acc += step.loss * w;
-            for (a, g) in grad_acc.iter_mut().zip(&step.grads) {
+            loss_acc += loss * w;
+            for (a, g) in grad_acc.iter_mut().zip(&grads) {
                 a.axpy(w as f32, g)?;
             }
-            max_stash = max_stash.max(step.stash_bytes);
-            peak_resident =
-                peak_resident.max(step.stash_bytes + cache.resident_bytes() + overhead);
+            max_stash = max_stash.max(step_stash);
+            peak_resident = peak_resident.max(step_stash + cache.resident_bytes() + overhead);
         }
         adam.step(&mut model.weights, &grad_acc)?;
         final_train_loss = loss_acc;
@@ -1329,24 +1482,37 @@ pub fn train_partitioned(
         timer.record(t0.elapsed());
     }
 
-    Ok(PartitionTrainResult {
-        result: TrainResult {
-            test_accuracy: test_at_best,
-            best_val_loss,
-            curve,
-            epochs_per_sec: timer.rate_per_sec(),
-            stash_bytes: max_stash,
-            final_train_loss,
+    // The main rng is constant after weight init (steps draw from their
+    // own epoch-addressed streams), so the saved state round-trips it
+    // unchanged — same 32 bytes whether the run checkpointed or not.
+    let state = crate::checkpoint::TrainState {
+        epoch: cfg.epochs,
+        model: model.clone(),
+        adam,
+        rng,
+        plans: None,
+    };
+    Ok((
+        PartitionTrainResult {
+            result: TrainResult {
+                test_accuracy: test_at_best,
+                best_val_loss,
+                curve,
+                epochs_per_sec: timer.rate_per_sec(),
+                stash_bytes: max_stash,
+                final_train_loss,
+            },
+            peak_resident_bytes: peak_resident,
+            // Resident + spilled, so the cache footprint reads the same in
+            // both modes (spilling moves bytes, it doesn't shrink them).
+            cache_bytes: cache.resident_bytes() + cache.spilled_bytes(),
+            num_partitions: k,
+            halo_nodes,
+            edge_cut_fraction,
+            model,
         },
-        peak_resident_bytes: peak_resident,
-        // Resident + spilled, so the cache footprint reads the same in
-        // both modes (spilling moves bytes, it doesn't shrink them).
-        cache_bytes: cache.resident_bytes() + cache.spilled_bytes(),
-        num_partitions: k,
-        halo_nodes,
-        edge_cut_fraction,
-        model,
-    })
+        state,
+    ))
 }
 
 /// Capture the *normalized projected* activations `H̄_proj ∈ [0, B]` per

@@ -276,14 +276,26 @@ impl Histogram {
     }
 
     /// Normalized probabilities per bin (sums to 1).
-    pub fn probabilities(&self) -> Vec<f64> {
+    ///
+    /// A histogram with no observations has no distribution to report,
+    /// so `total == 0` is a named [`Error::Numerical`] rather than a
+    /// degenerate return: an all-zero "p" makes `kl_divergence(p, q)`
+    /// report 0 against *any* model (every `p == 0` bin contributes
+    /// nothing to the sum), so an empty cell would silently corrupt
+    /// variance-model stats instead of failing loudly.
+    pub fn probabilities(&self) -> Result<Vec<f64>> {
         if self.total == 0 {
-            return vec![0.0; self.bins()];
+            return Err(Error::Numerical(
+                "histogram has no observations (total = 0); cannot normalize to \
+                 probabilities"
+                    .into(),
+            ));
         }
-        self.counts
+        Ok(self
+            .counts
             .iter()
             .map(|&c| c as f64 / self.total as f64)
-            .collect()
+            .collect())
     }
 
     /// Discretize an arbitrary density over the histogram's bins via the
@@ -493,8 +505,22 @@ mod tests {
         h.add_all(&[0.1, 0.2, 1.5, 2.9, 3.5, -1.0]);
         assert_eq!(h.total, 6);
         assert_eq!(h.counts, vec![3, 1, 2]); // clamp: 3.5 -> bin 2, -1 -> bin 0
-        let p = h.probabilities();
+        let p = h.probabilities().unwrap();
         assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_probabilities_is_named_error() {
+        // An all-zero "observed" vector would make kl/js divergence
+        // silently report a perfect fit; an empty histogram must error.
+        let h = Histogram::new(0.0, 3.0, 8).unwrap();
+        let err = h.probabilities().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no observations"), "unexpected message: {msg}");
+        // discretize_cdf is a pure model discretization — it stays usable
+        // on an empty histogram (only the bin geometry matters).
+        let m = h.discretize_cdf(|x| x / 3.0);
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -525,7 +551,7 @@ mod tests {
         for _ in 0..200_000 {
             h.add(cn.sample(&mut rng));
         }
-        let obs = h.probabilities();
+        let obs = h.probabilities().unwrap();
         let model_cn = h.discretize_cdf(|x| cn.cdf(x));
         let uniform = vec![1.0 / 64.0; 64];
         let js_cn = js_divergence(&obs, &model_cn).unwrap();

@@ -1,0 +1,311 @@
+//! Distributed training parity and fault-injection suite (ISSUE 8).
+//!
+//! Multi-process `train_distributed` must be **bit-identical** to
+//! single-process `train_partitioned` at any worker count — same loss
+//! curves, same final weights, byte-identical checkpoint state — while
+//! halo/eval activations cross process boundaries as packed quantized
+//! codes (asserted well under half the dense-f32 bytes). Killing a
+//! worker mid-epoch must change nothing but the reassignment tally,
+//! and garbage peers must surface *named* protocol errors.
+//!
+//! Workers run as in-process threads over real localhost TCP sockets —
+//! the exact same `run_worker` entry the spawned `iexact train
+//! --worker-rank` processes use.
+
+use iexact::checkpoint::{load_state, state_to_bytes, TrainState};
+use iexact::config::{
+    AllocStrategy, AllocationConfig, DatasetSpec, PartitionConfig, QuantConfig, TrainConfig,
+};
+use iexact::coordinator::dist::{run_worker, train_distributed, DistTrainOutcome, WorkerOptions};
+use iexact::pipeline::{train_partitioned_span, PartitionTrainResult};
+use std::net::TcpListener;
+
+const DATASET_SEED: u64 = 1;
+const SEED: u64 = 7;
+
+fn spec() -> DatasetSpec {
+    DatasetSpec::tiny()
+}
+
+fn base_cfg(k: usize, workers: usize, adaptive: bool) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs: 6,
+        lr: 0.02,
+        eval_every: 2,
+        seeds: vec![SEED],
+        partition: PartitionConfig {
+            num_partitions: k,
+            halo_hops: 1,
+            cache_bits: 2,
+            ..PartitionConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+    cfg.distributed.workers = workers;
+    if adaptive {
+        cfg.allocation = AllocationConfig {
+            strategy: AllocStrategy::Greedy,
+            budget_bits: 2.5,
+            realloc_interval_epochs: 3,
+            min_bits: 1,
+            max_bits: 8,
+        };
+    }
+    cfg
+}
+
+/// Drive a leader with `opts.len()` in-process worker threads connected
+/// over real TCP.
+fn run_dist(
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    resume: Option<TrainState>,
+    opts: Vec<WorkerOptions>,
+) -> iexact::Result<DistTrainOutcome> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = opts
+        .into_iter()
+        .enumerate()
+        .map(|(rank, o)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, rank as u32, &o))
+        })
+        .collect();
+    let result = train_distributed(&listener, &spec(), DATASET_SEED, quant, cfg, SEED, resume);
+    for h in handles {
+        // Workers may exit Err (fault injection, leader-side failure);
+        // the leader result is what the test judges.
+        let _ = h.join().unwrap();
+    }
+    result
+}
+
+fn assert_identical(a: &PartitionTrainResult, b: &PartitionTrainResult, what: &str) {
+    assert_eq!(
+        a.result.curve.epochs, b.result.curve.epochs,
+        "{what}: eval schedule diverged"
+    );
+    assert_eq!(
+        a.result.curve.train_loss, b.result.curve.train_loss,
+        "{what}: train-loss curve diverged"
+    );
+    assert_eq!(
+        a.result.curve.val_loss, b.result.curve.val_loss,
+        "{what}: val-loss curve diverged"
+    );
+    assert_eq!(
+        a.result.curve.val_accuracy, b.result.curve.val_accuracy,
+        "{what}: val-accuracy curve diverged"
+    );
+    assert_eq!(
+        a.result.final_train_loss, b.result.final_train_loss,
+        "{what}: final loss diverged"
+    );
+    assert_eq!(
+        a.result.test_accuracy, b.result.test_accuracy,
+        "{what}: test accuracy diverged"
+    );
+    assert_eq!(
+        a.result.stash_bytes, b.result.stash_bytes,
+        "{what}: peak stash diverged"
+    );
+    assert_eq!(a.cache_bytes, b.cache_bytes, "{what}: cache bytes diverged");
+    assert_eq!(a.halo_nodes, b.halo_nodes, "{what}: halo nodes diverged");
+    assert_eq!(
+        a.edge_cut_fraction, b.edge_cut_fraction,
+        "{what}: edge cut diverged"
+    );
+    for (l, (wa, wb)) in a.model.weights.iter().zip(&b.model.weights).enumerate() {
+        assert_eq!(
+            wa.as_slice(),
+            wb.as_slice(),
+            "{what}: layer {l} weights diverged"
+        );
+    }
+}
+
+#[test]
+fn distributed_is_bit_identical_at_any_worker_count() {
+    let quant = QuantConfig::int2_blockwise(4);
+    for adaptive in [false, true] {
+        let single = base_cfg(4, 0, adaptive);
+        let ds = spec().generate(DATASET_SEED);
+        let (reference, ref_state) =
+            train_partitioned_span(&ds, &quant, &single, SEED, None).unwrap();
+        for workers in [1usize, 2, 4] {
+            let tag = format!("a{}_w{workers}", adaptive as u8);
+            let cfg = base_cfg(4, workers, adaptive);
+            let out = run_dist(
+                &quant,
+                &cfg,
+                None,
+                vec![WorkerOptions::default(); workers],
+            )
+            .unwrap();
+            assert_identical(&reference, &out.result, &tag);
+            // The canonical state serialization must agree to the byte.
+            assert_eq!(
+                state_to_bytes(&ref_state),
+                state_to_bytes(&out.state),
+                "{tag}: checkpoint state bytes diverged"
+            );
+            assert_eq!(
+                out.reassigned_partitions, 0,
+                "{tag}: healthy run reassigned partitions"
+            );
+            // The tentpole's wire claim: halo/eval traffic crosses as
+            // packed INT2 codes at well under half the f32 bytes.
+            assert!(out.wire.halo_payload_bytes > 0, "{tag}: no wire traffic");
+            assert!(
+                out.wire.halo_payload_bytes * 2 < out.wire.halo_f32_bytes,
+                "{tag}: wire bytes {} not < 0.5x f32 bytes {}",
+                out.wire.halo_payload_bytes,
+                out.wire.halo_f32_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn killed_worker_is_reassigned_and_changes_nothing() {
+    let quant = QuantConfig::int2_blockwise(4);
+    let ds = spec().generate(DATASET_SEED);
+    let (reference, ref_state) =
+        train_partitioned_span(&ds, &quant, &base_cfg(4, 0, false), SEED, None).unwrap();
+    // Worker 1 vanishes mid-epoch after its third training step; the
+    // survivor must absorb its partitions with identical numbers.
+    let opts = vec![
+        WorkerOptions::default(),
+        WorkerOptions {
+            fail_after_steps: Some(3),
+        },
+    ];
+    let out = run_dist(&quant, &base_cfg(4, 2, false), None, opts).unwrap();
+    assert!(
+        out.reassigned_partitions > 0,
+        "the killed worker's partitions were never reassigned"
+    );
+    assert_identical(&reference, &out.result, "killed worker");
+    assert_eq!(
+        state_to_bytes(&ref_state),
+        state_to_bytes(&out.state),
+        "killed worker: checkpoint state bytes diverged"
+    );
+}
+
+#[test]
+fn all_workers_dead_is_a_named_error() {
+    let quant = QuantConfig::int2_blockwise(4);
+    let opts = vec![WorkerOptions {
+        fail_after_steps: Some(0),
+    }];
+    let err = run_dist(&quant, &base_cfg(2, 1, false), None, opts).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("dist protocol"), "{msg}");
+    assert!(msg.contains("workers are dead"), "{msg}");
+}
+
+#[test]
+fn garbage_handshake_is_a_named_protocol_error() {
+    let quant = QuantConfig::int2_blockwise(4);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        // Not an iexact frame: wrong magic from the first byte.
+        s.write_all(&[0x47u8; 64]).unwrap();
+        // Hold the socket open until the leader rejects us.
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    });
+    let err = train_distributed(
+        &listener,
+        &spec(),
+        DATASET_SEED,
+        &quant,
+        &base_cfg(2, 1, false),
+        SEED,
+        None,
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("dist protocol"), "{msg}");
+    assert!(msg.contains("magic"), "{msg}");
+    peer.join().unwrap();
+}
+
+#[test]
+fn out_of_range_worker_rank_is_rejected() {
+    let quant = QuantConfig::int2_blockwise(4);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let w = std::thread::spawn(move || {
+        let _ = run_worker(&addr, 7, &WorkerOptions::default());
+    });
+    let err = train_distributed(
+        &listener,
+        &spec(),
+        DATASET_SEED,
+        &quant,
+        &base_cfg(2, 1, false),
+        SEED,
+        None,
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("rank 7 out of range"), "{msg}");
+    w.join().unwrap();
+}
+
+#[test]
+fn checkpoint_resume_reproduces_the_uninterrupted_run() {
+    let quant = QuantConfig::int2_blockwise(4);
+    let ds = spec().generate(DATASET_SEED);
+    let mut full = base_cfg(4, 0, false);
+    full.epochs = 8;
+    let (_, ref_state) = train_partitioned_span(&ds, &quant, &full, SEED, None).unwrap();
+
+    let ckpt = std::env::temp_dir()
+        .join(format!("iexact_dist_resume_{}.ckpt", std::process::id()));
+    let ckpt_str = ckpt.to_str().unwrap().to_string();
+
+    // Leg A: epochs [0, 4) distributed, checkpointing every 2 epochs —
+    // then pretend the leader was killed and resume from disk.
+    let mut leg_a = base_cfg(4, 2, false);
+    leg_a.epochs = 4;
+    leg_a.distributed.checkpoint_path = Some(ckpt_str.clone());
+    leg_a.distributed.checkpoint_every_epochs = 2;
+    run_dist(&quant, &leg_a, None, vec![WorkerOptions::default(); 2]).unwrap();
+    let saved = load_state(&ckpt).unwrap();
+    assert_eq!(saved.epoch, 4, "leg A should have checkpointed at epoch 4");
+
+    // Leg B: resume at epoch 4, run to 8, still checkpointing.
+    let mut leg_b = base_cfg(4, 2, false);
+    leg_b.epochs = 8;
+    leg_b.distributed.checkpoint_path = Some(ckpt_str.clone());
+    leg_b.distributed.checkpoint_every_epochs = 2;
+    let out = run_dist(
+        &quant,
+        &leg_b,
+        Some(saved),
+        vec![WorkerOptions::default(); 2],
+    )
+    .unwrap();
+    assert_eq!(
+        state_to_bytes(&ref_state),
+        state_to_bytes(&out.state),
+        "resumed run diverged from the uninterrupted single-process run"
+    );
+    // The final on-disk checkpoint is the same state, byte for byte.
+    let final_saved = load_state(&ckpt).unwrap();
+    assert_eq!(
+        state_to_bytes(&final_saved),
+        state_to_bytes(&out.state),
+        "final checkpoint file disagrees with the returned state"
+    );
+    std::fs::remove_file(&ckpt).ok();
+}
