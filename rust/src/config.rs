@@ -650,6 +650,86 @@ impl DistributedConfig {
     }
 }
 
+/// Compressed-embedding serving knobs — the `[serve]` config section.
+///
+/// `iexact serve` loads a trained checkpoint, quantizes the final-layer
+/// embeddings into packed [`BitPlan`](crate::alloc::BitPlan) form once,
+/// drops the dense `f32`, and answers embedding / neighborhood-scoring
+/// queries over localhost TCP by decoding only the touched blocks
+/// (see `docs/serving.md`). Concurrent queries coalesce through a
+/// micro-batching window so overlapping neighborhoods decode each
+/// block at most once per batch.
+///
+/// ```toml
+/// [serve]
+/// port = 0                 # listen port (0 = OS-assigned ephemeral)
+/// batch_window_us = 200    # micro-batch coalescing window
+/// max_batch = 64           # queries per batch cap
+/// serve_bits = 2           # transcode width (0 = keep training width)
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// TCP listen port on 127.0.0.1; `0` (the default) asks the OS for
+    /// an ephemeral port (printed on startup).
+    pub port: u16,
+    /// Micro-batching window in microseconds: after the first query of
+    /// a batch arrives, the dispatcher keeps admitting queries until
+    /// the window closes (or [`max_batch`](Self::max_batch) fills).
+    /// `0` disables coalescing — every query is its own batch.
+    pub batch_window_us: usize,
+    /// Maximum queries coalesced into one batch.
+    pub max_batch: usize,
+    /// Serve-time transcode width (SGQuant-style density knob): re-pack
+    /// the embedding store at this bit width at startup. `0` (the
+    /// default) keeps the width the store was quantized at.
+    pub serve_bits: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 0,
+            batch_window_us: 200,
+            max_batch: 64,
+            serve_bits: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// A coalescing window above one second is certainly a typo — the
+    /// window is a latency tax on every batched query.
+    pub const MAX_BATCH_WINDOW_US: usize = 1_000_000;
+    /// Batches beyond this stop improving decode sharing and only grow
+    /// tail latency.
+    pub const MAX_BATCH: usize = 4096;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_window_us > Self::MAX_BATCH_WINDOW_US {
+            return Err(Error::Config(format!(
+                "serve.batch_window_us must be <= {}, got {}",
+                Self::MAX_BATCH_WINDOW_US,
+                self.batch_window_us
+            )));
+        }
+        if self.max_batch == 0 || self.max_batch > Self::MAX_BATCH {
+            return Err(Error::Config(format!(
+                "serve.max_batch must be in 1..={}, got {}",
+                Self::MAX_BATCH,
+                self.max_batch
+            )));
+        }
+        if !matches!(self.serve_bits, 0 | 1 | 2 | 4 | 8) {
+            return Err(Error::Config(format!(
+                "serve.serve_bits must be 0 (keep training width) or one of \
+                 1/2/4/8, got {}",
+                self.serve_bits
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// GNN + optimizer hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -673,6 +753,8 @@ pub struct TrainConfig {
     /// Multi-process partition-parallel training (`[distributed]`;
     /// default: off).
     pub distributed: DistributedConfig,
+    /// Compressed-embedding serving (`[serve]`; used by `iexact serve`).
+    pub serve: ServeConfig,
 }
 
 impl Default for TrainConfig {
@@ -691,6 +773,7 @@ impl Default for TrainConfig {
             partition: PartitionConfig::default(),
             out_of_core: OutOfCoreConfig::default(),
             distributed: DistributedConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -716,6 +799,7 @@ impl TrainConfig {
         self.partition.validate()?;
         self.out_of_core.validate()?;
         self.distributed.validate()?;
+        self.serve.validate()?;
         if self.distributed.enabled() {
             // Every worker must own at least one partition — the leader
             // deals partitions out disjointly, and a workerless worker
@@ -1096,6 +1180,41 @@ impl ExperimentConfig {
                 )));
             }
             train.distributed.checkpoint_every_epochs = e as usize;
+        }
+
+        // [serve] — compressed-embedding serving. Negative values are
+        // rejected before the unsigned casts (cf. the sections above).
+        if let Some(p) = t.get_int("serve.port") {
+            if !(0..=u16::MAX as i64).contains(&p) {
+                return Err(Error::Config(format!(
+                    "serve.port must be in 0..=65535, got {p}"
+                )));
+            }
+            train.serve.port = p as u16;
+        }
+        if let Some(w) = t.get_int("serve.batch_window_us") {
+            if w < 0 {
+                return Err(Error::Config(format!(
+                    "serve.batch_window_us must be >= 0, got {w}"
+                )));
+            }
+            train.serve.batch_window_us = w as usize;
+        }
+        if let Some(m) = t.get_int("serve.max_batch") {
+            if m < 1 {
+                return Err(Error::Config(format!(
+                    "serve.max_batch must be >= 1, got {m}"
+                )));
+            }
+            train.serve.max_batch = m as usize;
+        }
+        if let Some(b) = t.get_int("serve.serve_bits") {
+            if b < 0 {
+                return Err(Error::Config(format!(
+                    "serve.serve_bits must be >= 0, got {b}"
+                )));
+            }
+            train.serve.serve_bits = b as u32;
         }
 
         let cfg = ExperimentConfig {
@@ -1492,6 +1611,60 @@ seeds = [0, 1]
             ..DistributedConfig::default()
         };
         assert!(d.validate().unwrap_err().to_string().contains("distributed.workers"));
+    }
+
+    #[test]
+    fn toml_serve_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[serve]\nport = 4800\nbatch_window_us = 500\nmax_batch = 32\nserve_bits = 2\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.serve,
+            ServeConfig {
+                port: 4800,
+                batch_window_us: 500,
+                max_batch: 32,
+                serve_bits: 2,
+            }
+        );
+        // Defaults when the section is absent: ephemeral port, keep the
+        // training width.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.serve, ServeConfig::default());
+        assert_eq!(cfg.train.serve.serve_bits, 0);
+    }
+
+    #[test]
+    fn serve_validation_reports_key_paths() {
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        let cases: &[(&str, &str)] = &[
+            ("[serve]\nport = -1\n", "serve.port"),
+            ("[serve]\nport = 65536\n", "serve.port"),
+            ("[serve]\nbatch_window_us = -1\n", "serve.batch_window_us"),
+            ("[serve]\nbatch_window_us = 2000000\n", "serve.batch_window_us"),
+            ("[serve]\nmax_batch = 0\n", "serve.max_batch"),
+            ("[serve]\nmax_batch = 5000\n", "serve.max_batch"),
+            ("[serve]\nserve_bits = 3\n", "serve.serve_bits"),
+            ("[serve]\nserve_bits = -2\n", "serve.serve_bits"),
+        ];
+        for (toml, key) in cases {
+            let e = err(toml);
+            assert!(e.contains(key), "error for `{toml}` missing '{key}': {e}");
+        }
+        // Struct-level validate mirrors the TOML layer.
+        let s = ServeConfig {
+            max_batch: ServeConfig::MAX_BATCH + 1,
+            ..ServeConfig::default()
+        };
+        assert!(s.validate().unwrap_err().to_string().contains("serve.max_batch"));
+        let s = ServeConfig {
+            serve_bits: 5,
+            ..ServeConfig::default()
+        };
+        assert!(s.validate().unwrap_err().to_string().contains("serve.serve_bits"));
     }
 
     #[test]

@@ -38,7 +38,10 @@
 //! checkpoint ([`TrainState`](crate::checkpoint::TrainState) V2) with
 //! the identical trajectory. See `docs/distributed-training.md`.
 
-mod frame;
+// The frame layer is shared crate-wide: the serving subsystem
+// (`crate::serve`) speaks the same framed wire format with its own
+// message tags, so framing bugs are fixed in exactly one place.
+pub(crate) mod frame;
 mod proto;
 
 use crate::alloc::BitPlan;

@@ -802,7 +802,29 @@ impl QuantEngine {
                 "wire planned tensor: trailing bytes".into(),
             ));
         }
-        Ok(pt)
+        // Structural cross-checks happen HERE, at the trust boundary —
+        // a peer-supplied body whose shape, plan, metadata counts and
+        // packed length disagree must be rejected by name on receipt,
+        // not crash some later decode.
+        match validate_planned(&pt) {
+            Err(e) => {
+                let msg = format!("wire planned tensor: inconsistent body: {e}");
+                pool.put_bytes(pt.packed);
+                Err(crate::Error::Artifact(msg))
+            }
+            Ok(offsets) => {
+                let total = *offsets.last().expect("offsets non-empty");
+                if pt.packed.len() != total {
+                    let msg = format!(
+                        "wire planned tensor: packed body has {} bytes, plan needs {total}",
+                        pt.packed.len()
+                    );
+                    pool.put_bytes(pt.packed);
+                    return Err(crate::Error::Artifact(msg));
+                }
+                Ok(pt)
+            }
+        }
     }
 
     /// Dequantize a [`PlannedTensor`] (Eq. 3 per block, each at its own
@@ -1048,6 +1070,284 @@ impl QuantEngine {
             layout: DecodeLayout::planned(&pt.plan, &offsets),
         };
         self.fused_spmm(adj, &dec, cols, pool)
+    }
+
+    /// Decode **only the listed rows** of a row-aligned
+    /// [`PlannedTensor`] into a `rows.len() × cols` matrix — the serving
+    /// read path's touched-row entry point. Each worker keeps one
+    /// decoded block (`group_len` floats, recycled through `pool`) as
+    /// its tile cache, so peak intermediate memory is one block per
+    /// worker regardless of how many rows the tensor holds; the dense
+    /// `N × R` matrix is never materialized
+    /// ([`PoolStats::max_float_take`](crate::memory::PoolStats) proves
+    /// it). Bit-identical to gathering the same rows from
+    /// [`Self::dequantize_planned`] at any thread count and ISA.
+    ///
+    /// Requires row-aligned blocks (`group_len % cols == 0`) — the
+    /// layout every pipeline stash and every serving store uses; a
+    /// non-aligned plan is a named [`Error::Config`] (a serving store
+    /// must *never* silently fall back to a dense decode).
+    pub fn dequantize_rows_planned(
+        &self,
+        pt: &PlannedTensor,
+        rows: &[usize],
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let (n_rows, cols) = pt.shape;
+        let offsets = validate_planned(pt)?;
+        let group_len = pt.plan.group_len();
+        if cols == 0 || group_len % cols != 0 {
+            return Err(Error::Config(format!(
+                "dequantize_rows_planned needs row-aligned blocks \
+                 (group_len {group_len} % cols {cols} != 0)"
+            )));
+        }
+        if let Some(&bad) = rows.iter().find(|&&r| r >= n_rows) {
+            return Err(Error::Shape(format!(
+                "row index {bad} out of range for {n_rows}-row tensor"
+            )));
+        }
+        let dec = BlockDecoder {
+            packed: &pt.packed,
+            zeros: &pt.zeros,
+            ranges: &pt.ranges,
+            group_len,
+            n_scalars: n_rows * cols,
+            isa: self.codec_isa,
+            layout: DecodeLayout::planned(&pt.plan, &offsets),
+        };
+        let rows_per_block = group_len / cols;
+        let mut out = Matrix::zeros(rows.len(), cols);
+        if rows.is_empty() {
+            return Ok(out);
+        }
+        let shards = self.pool.shards_for(rows.len(), MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            let mut floats = pool.take_floats_scratch(group_len);
+            let mut cached = usize::MAX;
+            let out_data = out.as_mut_slice();
+            for (i, &r) in rows.iter().enumerate() {
+                let g = r / rows_per_block;
+                if g != cached {
+                    dec.decode(g, &mut floats);
+                    cached = g;
+                }
+                let off = (r - g * rows_per_block) * cols;
+                out_data[i * cols..(i + 1) * cols].copy_from_slice(&floats[off..off + cols]);
+            }
+            pool.put_floats(floats);
+        } else {
+            let rows_per = rows.len().div_ceil(shards);
+            let shard_count = rows.len().div_ceil(rows_per);
+            let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
+                .map(|_| pool.take_floats_scratch(group_len))
+                .collect();
+            let dec = &dec;
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for ((rows_c, out_c), floats) in rows
+                .chunks(rows_per)
+                .zip(out.as_mut_slice().chunks_mut(rows_per * cols))
+                .zip(float_scr.iter_mut())
+            {
+                tasks.push(Box::new(move || {
+                    let mut cached = usize::MAX;
+                    for (&r, out_row) in rows_c.iter().zip(out_c.chunks_mut(cols)) {
+                        let g = r / rows_per_block;
+                        if g != cached {
+                            dec.decode(g, floats);
+                            cached = g;
+                        }
+                        let off = (r - g * rows_per_block) * cols;
+                        out_row.copy_from_slice(&floats[off..off + cols]);
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+            for f in float_scr {
+                pool.put_floats(f);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode an explicit **block list**: block `blocks[i]` lands at
+    /// `out[i * group_len ..]` (only `block_len` floats are written for
+    /// a ragged final block). This is the shared-decode-tile primitive
+    /// behind the serving batcher — a batch of overlapping queries
+    /// computes its sorted-unique touched-block set once, decodes each
+    /// block **exactly once** here, and answers every query from the
+    /// resulting tile arena. The block loop shards across the engine's
+    /// [`WorkerPool`]; decode is deterministic, so the arena is
+    /// bit-identical to the corresponding slices of
+    /// [`Self::dequantize_planned`] at any thread count.
+    pub fn decode_blocks_planned(
+        &self,
+        pt: &PlannedTensor,
+        blocks: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let offsets = validate_planned(pt)?;
+        let group_len = pt.plan.group_len();
+        let num_groups = pt.plan.num_blocks();
+        if let Some(&bad) = blocks.iter().find(|&&g| g >= num_groups) {
+            return Err(Error::Shape(format!(
+                "block index {bad} out of range for {num_groups}-block plan"
+            )));
+        }
+        if out.len() < blocks.len() * group_len {
+            return Err(Error::Shape(format!(
+                "decode_blocks_planned: output holds {} floats, {} blocks need {}",
+                out.len(),
+                blocks.len(),
+                blocks.len() * group_len
+            )));
+        }
+        if blocks.is_empty() {
+            return Ok(());
+        }
+        let (rows, cols) = pt.shape;
+        let dec = BlockDecoder {
+            packed: &pt.packed,
+            zeros: &pt.zeros,
+            ranges: &pt.ranges,
+            group_len,
+            n_scalars: rows * cols,
+            isa: self.codec_isa,
+            layout: DecodeLayout::planned(&pt.plan, &offsets),
+        };
+        let shards = self.effective_shards(blocks.len());
+        if shards <= 1 {
+            for (&g, tile) in blocks.iter().zip(out.chunks_mut(group_len)) {
+                dec.decode(g, tile);
+            }
+        } else {
+            let per_shard = blocks.len().div_ceil(shards);
+            let dec = &dec;
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shards);
+            for (blocks_c, out_c) in blocks
+                .chunks(per_shard)
+                .zip(out.chunks_mut(per_shard * group_len))
+            {
+                tasks.push(Box::new(move || {
+                    for (&g, tile) in blocks_c.iter().zip(out_c.chunks_mut(group_len)) {
+                        dec.decode(g, tile);
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+        }
+        Ok(())
+    }
+
+    /// Fused `adj @ Dequant(pt)` restricted to the listed **output
+    /// rows** — the serving scorer. Row `out_rows[i]` of the result is
+    /// the CSR-neighborhood aggregation of output row `out_rows[i]`,
+    /// accumulated in the same serial order over the same decoded
+    /// values as [`Self::dequantize_spmm_planned`], so the returned
+    /// `out_rows.len() × cols` matrix is **bit-identical** to gathering
+    /// those rows from the full product. One decoded block per worker;
+    /// the dense operand is never materialized.
+    ///
+    /// Requires row-aligned blocks like
+    /// [`Self::dequantize_rows_planned`] (named [`Error::Config`]
+    /// otherwise).
+    pub fn dequantize_spmm_rows_planned(
+        &self,
+        adj: &CsrMatrix,
+        pt: &PlannedTensor,
+        out_rows: &[usize],
+        pool: &mut BufferPool,
+    ) -> Result<Matrix> {
+        let (rows, cols) = pt.shape;
+        let offsets = validate_planned(pt)?;
+        let group_len = pt.plan.group_len();
+        if adj.n_cols != rows {
+            return Err(Error::Shape(format!(
+                "dequantize_spmm_rows: {}x{} @ {rows}x{cols}",
+                adj.n_rows, adj.n_cols
+            )));
+        }
+        if cols == 0 || group_len % cols != 0 {
+            return Err(Error::Config(format!(
+                "dequantize_spmm_rows_planned needs row-aligned blocks \
+                 (group_len {group_len} % cols {cols} != 0)"
+            )));
+        }
+        if let Some(&bad) = out_rows.iter().find(|&&r| r >= adj.n_rows) {
+            return Err(Error::Shape(format!(
+                "output row {bad} out of range for {}-row adjacency",
+                adj.n_rows
+            )));
+        }
+        let dec = BlockDecoder {
+            packed: &pt.packed,
+            zeros: &pt.zeros,
+            ranges: &pt.ranges,
+            group_len,
+            n_scalars: rows * cols,
+            isa: self.codec_isa,
+            layout: DecodeLayout::planned(&pt.plan, &offsets),
+        };
+        let rows_per_block = group_len / cols;
+        let mut out = Matrix::zeros(out_rows.len(), cols);
+        if out_rows.is_empty() {
+            return Ok(out);
+        }
+        let shards = self.pool.shards_for(out_rows.len(), MIN_ROWS_PER_SHARD);
+        if shards <= 1 {
+            let mut floats = pool.take_floats_scratch(group_len);
+            let mut cached = usize::MAX;
+            let out_data = out.as_mut_slice();
+            for (i, &r) in out_rows.iter().enumerate() {
+                let (idx, vals) = adj.row(r);
+                fused_spmm_row(
+                    idx,
+                    vals,
+                    &dec,
+                    rows_per_block,
+                    cols,
+                    &mut cached,
+                    &mut floats,
+                    &mut out_data[i * cols..(i + 1) * cols],
+                );
+            }
+            pool.put_floats(floats);
+        } else {
+            let rows_per = out_rows.len().div_ceil(shards);
+            let shard_count = out_rows.len().div_ceil(rows_per);
+            let mut float_scr: Vec<Vec<f32>> = (0..shard_count)
+                .map(|_| pool.take_floats_scratch(group_len))
+                .collect();
+            let dec = &dec;
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(shard_count);
+            for ((rows_c, out_c), floats) in out_rows
+                .chunks(rows_per)
+                .zip(out.as_mut_slice().chunks_mut(rows_per * cols))
+                .zip(float_scr.iter_mut())
+            {
+                tasks.push(Box::new(move || {
+                    let mut cached = usize::MAX;
+                    for (&r, out_row) in rows_c.iter().zip(out_c.chunks_mut(cols)) {
+                        let (idx, vals) = adj.row(r);
+                        fused_spmm_row(
+                            idx,
+                            vals,
+                            dec,
+                            rows_per_block,
+                            cols,
+                            &mut cached,
+                            floats,
+                            out_row,
+                        );
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+            for f in float_scr {
+                pool.put_floats(f);
+            }
+        }
+        Ok(out)
     }
 
     /// Shared core of the fused dequantize→matmul kernels: shard the
@@ -1808,6 +2108,153 @@ mod tests {
         assert!(engine
             .dequantize_matmul_planned(&bad, &Matrix::zeros(8, 3), &mut pool)
             .is_err());
+    }
+
+    #[test]
+    fn touched_row_decode_matches_full_dequantize_bitwise() {
+        // The serving read path: decoding only the requested rows must
+        // equal gathering the same rows from the full decode, byte for
+        // byte, at any thread count — with one block of scratch per
+        // worker, never the dense matrix.
+        let n = 64;
+        let h = sample_matrix(n, 16, 50);
+        let mut rng = Pcg64::new(51);
+        // 16 blocks of 64 scalars (4 rows each), mixed widths.
+        let bits: Vec<u8> = (0..16)
+            .map(|_| [1u8, 2, 4, 8][rng.next_bounded(4) as usize])
+            .collect();
+        let plan = BitPlan::new(bits, 64).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xcafe)
+            .unwrap();
+        let full = QuantEngine::serial().dequantize_planned(&pt).unwrap();
+        let rows: Vec<usize> = vec![0, 3, 3, 17, 62, 5, 63, 0];
+        for threads in [1usize, 2, 4, 7] {
+            let e = QuantEngine::with_threads(threads);
+            let mut pool = BufferPool::new();
+            let got = e.dequantize_rows_planned(&pt, &rows, &mut pool).unwrap();
+            assert_eq!(got.shape(), (rows.len(), 16));
+            for (i, &r) in rows.iter().enumerate() {
+                assert_eq!(
+                    &got.as_slice()[i * 16..(i + 1) * 16],
+                    &full.as_slice()[r * 16..(r + 1) * 16],
+                    "t={threads} row {r}"
+                );
+            }
+            assert!(
+                pool.stats().max_float_take <= 64,
+                "touched-row decode took {} floats",
+                pool.stats().max_float_take
+            );
+        }
+    }
+
+    #[test]
+    fn decode_blocks_planned_matches_full_decode() {
+        let h = sample_matrix(32, 16, 52); // 512 scalars, 8 blocks of 64
+        let plan = BitPlan::new(vec![2, 4, 1, 8, 2, 2, 4, 1], 64).unwrap();
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xd00d)
+            .unwrap();
+        let full = QuantEngine::serial().dequantize_planned(&pt).unwrap();
+        let blocks = vec![7usize, 0, 3, 3, 5];
+        for threads in [1usize, 3, 8] {
+            let e = QuantEngine::with_threads(threads);
+            let mut arena = vec![0f32; blocks.len() * 64];
+            e.decode_blocks_planned(&pt, &blocks, &mut arena).unwrap();
+            for (i, &g) in blocks.iter().enumerate() {
+                assert_eq!(
+                    &arena[i * 64..(i + 1) * 64],
+                    &full.as_slice()[g * 64..(g + 1) * 64],
+                    "t={threads} block {g}"
+                );
+            }
+        }
+        // Bounds errors are named, never panics.
+        let e = QuantEngine::serial();
+        let msg = e
+            .decode_blocks_planned(&pt, &[8], &mut vec![0f32; 64])
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+        let msg = e
+            .decode_blocks_planned(&pt, &[0, 1], &mut vec![0f32; 64])
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("output holds"), "{msg}");
+    }
+
+    #[test]
+    fn touched_row_spmm_matches_full_product_bitwise() {
+        let n = 60;
+        let h = sample_matrix(n, 16, 53);
+        let adj = ring_adjacency(n);
+        let plan = BitPlan::uniform(2, 30, 32).unwrap(); // 2 rows per block
+        let pt = QuantEngine::serial()
+            .quantize_planned_seeded(&h, &plan, 0xf00f)
+            .unwrap();
+        let reference = adj
+            .spmm(&QuantEngine::serial().dequantize_planned(&pt).unwrap())
+            .unwrap();
+        let out_rows: Vec<usize> = vec![0, 59, 13, 13, 28, 7];
+        for threads in [1usize, 2, 5] {
+            let e = QuantEngine::with_threads(threads);
+            let mut pool = BufferPool::new();
+            let got = e
+                .dequantize_spmm_rows_planned(&adj, &pt, &out_rows, &mut pool)
+                .unwrap();
+            for (i, &r) in out_rows.iter().enumerate() {
+                assert_eq!(
+                    &got.as_slice()[i * 16..(i + 1) * 16],
+                    &reference.as_slice()[r * 16..(r + 1) * 16],
+                    "t={threads} row {r}"
+                );
+            }
+            assert!(pool.stats().max_float_take <= 32);
+        }
+    }
+
+    #[test]
+    fn touched_row_entry_points_reject_bad_inputs() {
+        let h = sample_matrix(30, 16, 54);
+        let engine = QuantEngine::serial();
+        let mut pool = BufferPool::new();
+        // Non-row-aligned plan: named Config error, no silent dense
+        // fallback on the serving path.
+        let plan = BitPlan::uniform(4, 20, 24).unwrap();
+        let pt = engine.quantize_planned_seeded(&h, &plan, 1).unwrap();
+        let msg = engine
+            .dequantize_rows_planned(&pt, &[0], &mut pool)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("row-aligned"), "{msg}");
+        let adj = ring_adjacency(30);
+        let msg = engine
+            .dequantize_spmm_rows_planned(&adj, &pt, &[0], &mut pool)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("row-aligned"), "{msg}");
+        // Out-of-range indices on an aligned plan.
+        let plan = BitPlan::uniform(2, 15, 32).unwrap();
+        let pt = engine.quantize_planned_seeded(&h, &plan, 2).unwrap();
+        let msg = engine
+            .dequantize_rows_planned(&pt, &[30], &mut pool)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+        let msg = engine
+            .dequantize_spmm_rows_planned(&adj, &pt, &[99], &mut pool)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+        // Empty queries are fine.
+        assert_eq!(
+            engine
+                .dequantize_rows_planned(&pt, &[], &mut pool)
+                .unwrap()
+                .shape(),
+            (0, 16)
+        );
     }
 
     #[test]

@@ -86,6 +86,7 @@ pub mod rngs;
 pub mod rp;
 pub mod sampling;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod util;
@@ -96,7 +97,7 @@ pub mod prelude {
     pub use crate::alloc::{BitAllocator, BitPlan, BlockStats, PlannedTensor};
     pub use crate::config::{
         AllocationConfig, DatasetSpec, ExperimentConfig, ParallelismConfig, PartitionConfig,
-        QuantConfig, QuantMode, TrainConfig,
+        QuantConfig, QuantMode, ServeConfig, TrainConfig,
     };
     pub use crate::engine::QuantEngine;
     pub use crate::graph::{CsrMatrix, Dataset, GraphGenerator};
@@ -107,6 +108,10 @@ pub mod prelude {
     pub use crate::quant::{BlockwiseQuantizer, CodecIsa, CompressedTensor, RowQuantizer};
     pub use crate::rngs::Pcg64;
     pub use crate::rp::RandomProjection;
+    pub use crate::serve::{
+        BatchQueue, EmbeddingStore, Query, QueueClient, ServeClient, ServeEngine, ServeStats,
+        ServerHandle,
+    };
     pub use crate::stats::ClippedNormal;
     pub use crate::tensor::Matrix;
     pub use crate::varmin::{optimal_boundaries, BoundaryTable};

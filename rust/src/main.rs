@@ -31,6 +31,7 @@ COMMANDS:
     allocation    Adaptive vs fixed bit allocation at equal budgets
     partition     Partitioned training: peak-resident bytes vs full-graph
     train         Train one configuration on the native pipeline
+    serve         Serve embedding/scoring queries from a packed store
     train-aot     Train via the AOT (JAX->HLO->PJRT) path
     artifacts     List AOT artifacts and their shapes
     boundaries    Print optimal (alpha*, beta*) for a D range (Appendix B)
@@ -73,7 +74,28 @@ TRAIN OPTIONS:
                                   (atomic temp-then-rename) during training
     --checkpoint-every <n>        checkpoint interval in epochs (default 10)
     --resume <path>               distributed: resume from a checkpoint
+    --save-model <path>           write a V1 model checkpoint after training
+                                  (full-graph native path only); feed it to
+                                  `iexact serve --checkpoint`
     --epochs <n>  --hidden <n>  --seed <n>  --config <file.toml>
+
+SERVE OPTIONS:
+    --checkpoint <path>    model checkpoint from `iexact train --save-model`
+                           (required)
+    --dataset arxiv|flickr|tiny   graph to serve (default: tiny; shapes must
+                           match the checkpointed model)
+    --port <p>             TCP port on 127.0.0.1 (default 0 = ephemeral,
+                           printed on startup)
+    --batch-window-us <w>  micro-batch coalescing window (default 200;
+                           0 = answer already-queued queries only)
+    --max-batch <n>        max queries per shared decode batch (default 64)
+    --serve-bits <b>       transcode the packed store to b bits before
+                           serving (0 = keep the build width; SGQuant-style
+                           train-wide / serve-narrow)
+    --self-test            fire a concurrent mixed query burst against the
+                           running server, verify replies bit-identical to a
+                           full offline dequantize and packed residency
+                           below the f32 footprint, then shut down
 
 PARTITION OPTIONS:
     --partitions <k>       Restrict the sweep to one partition count
@@ -118,6 +140,7 @@ fn main() -> ExitCode {
         "allocation" => cmd_allocation(&opts),
         "partition" => cmd_partition(&opts),
         "train" => cmd_train(&opts),
+        "serve" => cmd_serve(&opts),
         "train-aot" => cmd_train_aot(&opts),
         "artifacts" => cmd_artifacts(&opts),
         "boundaries" => cmd_boundaries(&opts),
@@ -440,6 +463,35 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         ds.num_edges(),
         cfg.quant.label()
     );
+    // --save-model rides the resumable full-graph span (the one path
+    // whose end-of-run model state is exposed), then writes a V1 model
+    // checkpoint for `iexact serve`.
+    if let Some(path) = opts.get("save-model") {
+        if cfg.train.distributed.enabled()
+            || cfg.train.partition.num_partitions > 1
+            || opts.contains_key("sample")
+        {
+            return Err(iexact::Error::Config(
+                "--save-model is supported on the full-graph native path; \
+                 drop --workers/--partitions/--sample"
+                    .into(),
+            ));
+        }
+        let seed = cfg.train.seeds.first().copied().unwrap_or(0);
+        let (res, state) = iexact::pipeline::train_span(&ds, &cfg.quant, &cfg.train, seed, None)?;
+        iexact::checkpoint::save(&state.model, std::path::Path::new(path))?;
+        eprintln!("model checkpoint written to {path}");
+        println!(
+            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}",
+            res.test_accuracy,
+            res.epochs_per_sec,
+            res.stash_bytes / 1024
+        );
+        if let Some(csv) = opts.get("csv") {
+            std::fs::write(csv, res.curve.to_csv())?;
+        }
+        return Ok(());
+    }
     if cfg.train.distributed.enabled() {
         if opts.contains_key("sample") {
             return Err(iexact::Error::Config(
@@ -591,6 +643,231 @@ fn run_distributed_leader(
         let _ = child.wait();
     }
     result
+}
+
+/// Blocks the embedding store groups on: `rows_per_block * hidden_dim`
+/// scalars per block, so every node's row decodes from exactly one
+/// block.
+const SERVE_ROWS_PER_BLOCK: usize = 8;
+/// Width the store is built at before any `--serve-bits` transcode
+/// ("training width" in the SGQuant train-wide/serve-narrow sense).
+const SERVE_BUILD_BITS: u32 = 8;
+/// Fixed quantization seed so a driver can rebuild a bit-identical
+/// reference store from the same checkpoint (the self-test does).
+const SERVE_STORE_SEED: u64 = 0x5e72_e001;
+
+/// Build the packed store exactly as `iexact serve` serves it: embed,
+/// quantize at the build width, optionally transcode to `serve_bits`.
+/// Deterministic in (checkpoint, dataset, config) — the self-test
+/// relies on rebuilding this byte-identically for its offline
+/// reference.
+fn build_serve_store(
+    model: &iexact::pipeline::GcnModel,
+    ds: &iexact::graph::Dataset,
+    engine: &iexact::engine::QuantEngine,
+    cfg: &iexact::config::ServeConfig,
+) -> iexact::Result<iexact::serve::EmbeddingStore> {
+    let mut store = iexact::serve::EmbeddingStore::build(
+        model,
+        ds,
+        engine,
+        SERVE_BUILD_BITS,
+        SERVE_ROWS_PER_BLOCK,
+        SERVE_STORE_SEED,
+    )?;
+    if cfg.serve_bits != 0 && cfg.serve_bits != SERVE_BUILD_BITS {
+        let mut pool = iexact::memory::BufferPool::new();
+        store.transcode(engine, cfg.serve_bits, &mut pool)?;
+    }
+    Ok(store)
+}
+
+fn cmd_serve(opts: &Opts) -> iexact::Result<()> {
+    let ckpt = opts.get("checkpoint").ok_or_else(|| {
+        iexact::Error::Config(
+            "serve requires --checkpoint <path> (write one with `iexact train --save-model`)"
+                .into(),
+        )
+    })?;
+    let model = iexact::checkpoint::load(std::path::Path::new(ckpt))?;
+    let spec = DatasetSpec::by_name(opts.get("dataset").map(|s| s.as_str()).unwrap_or("tiny"))?;
+    let ds = spec.generate(42);
+
+    let mut cfg = iexact::config::ServeConfig::default();
+    if let Some(p) = opts.get("port") {
+        cfg.port = p.parse().map_err(|_| {
+            iexact::Error::Config(format!("--port expects 0..=65535, got '{p}'"))
+        })?;
+    }
+    if let Some(w) = opts.get("batch-window-us") {
+        cfg.batch_window_us = w.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--batch-window-us expects a non-negative integer, got '{w}'"
+            ))
+        })?;
+    }
+    if let Some(b) = opts.get("max-batch") {
+        cfg.max_batch = b.parse().map_err(|_| {
+            iexact::Error::Config(format!("--max-batch expects a positive integer, got '{b}'"))
+        })?;
+    }
+    if let Some(b) = opts.get("serve-bits") {
+        cfg.serve_bits = b.parse().map_err(|_| {
+            iexact::Error::Config(format!("--serve-bits expects 0/1/2/4/8, got '{b}'"))
+        })?;
+    }
+    cfg.validate()?;
+
+    let engine =
+        iexact::engine::QuantEngine::from_config(&iexact::config::ParallelismConfig::default());
+    let store = build_serve_store(&model, &ds, &engine, &cfg)?;
+    let packed = store.packed_resident_bytes();
+    let f32_bytes = store.f32_bytes();
+    eprintln!(
+        "store: {} nodes x {} dims at {} bits — packed resident {} KB vs f32 {} KB ({:.1}%)",
+        store.num_nodes(),
+        store.dim(),
+        store.bits(),
+        packed / 1024,
+        f32_bytes / 1024,
+        100.0 * packed as f64 / f32_bytes as f64
+    );
+    let handle =
+        iexact::serve::ServerHandle::start(iexact::serve::ServeEngine::new(store, engine), &cfg)?;
+    println!("serving on {}", handle.addr());
+
+    if opts.contains_key("self-test") {
+        let addr = handle.addr();
+        serve_self_test(&addr, &model, &ds, &cfg)?;
+        let (stats, pool) = handle.join();
+        let dense_floats = stats.f32_bytes / 4;
+        let take = pool.stats().max_float_take;
+        if take >= dense_floats {
+            return Err(iexact::Error::Runtime(format!(
+                "serve self-test: max_float_take {take} reached the dense \
+                 {dense_floats}-float footprint — a full matrix was materialized"
+            )));
+        }
+        println!(
+            "self-test ok: {} queries in {} batches, {} blocks decoded of {} requested, \
+             max decode tile {} of {} dense floats",
+            stats.queries,
+            stats.batches,
+            stats.decoded_blocks,
+            stats.requested_blocks,
+            take,
+            dense_floats
+        );
+        return Ok(());
+    }
+    // Long-running mode: serve until a client sends Shutdown.
+    let (stats, _) = handle.join();
+    println!(
+        "served {} queries in {} batches ({} blocks decoded of {} requested)",
+        stats.queries, stats.batches, stats.decoded_blocks, stats.requested_blocks
+    );
+    Ok(())
+}
+
+/// The self-test driver: 8 concurrent TCP clients fire mixed
+/// embedding/scoring bursts and every reply is compared bit-for-bit
+/// against a full offline dequantize of an identically rebuilt store.
+fn serve_self_test(
+    addr: &std::net::SocketAddr,
+    model: &iexact::pipeline::GcnModel,
+    ds: &iexact::graph::Dataset,
+    cfg: &iexact::config::ServeConfig,
+) -> iexact::Result<()> {
+    use iexact::serve::ServeClient;
+
+    // Offline reference: rebuild the store deterministically and decode
+    // ALL of it the slow way.
+    let engine =
+        iexact::engine::QuantEngine::from_config(&iexact::config::ParallelismConfig::default());
+    let store = build_serve_store(model, ds, &engine, cfg)?;
+    let mut pool = iexact::memory::BufferPool::new();
+    let dense = engine.dequantize_planned(store.planned())?;
+    let scores = engine.dequantize_spmm_planned(store.adjacency(), store.planned(), &mut pool)?;
+    let n = store.num_nodes();
+
+    let compare = |got: &iexact::tensor::Matrix,
+                   want: &iexact::tensor::Matrix,
+                   nodes: &[usize],
+                   what: &str|
+     -> iexact::Result<()> {
+        if got.rows() != nodes.len() || got.cols() != want.cols() {
+            return Err(iexact::Error::Runtime(format!(
+                "serve self-test: {what} reply is {}x{}, expected {}x{}",
+                got.rows(),
+                got.cols(),
+                nodes.len(),
+                want.cols()
+            )));
+        }
+        for (i, &v) in nodes.iter().enumerate() {
+            let (g, w) = (got.row(i), want.row(v));
+            if g.iter().zip(w).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(iexact::Error::Runtime(format!(
+                    "serve self-test: {what} reply for node {v} is not bit-identical \
+                     to the offline dequantize"
+                )));
+            }
+        }
+        Ok(())
+    };
+
+    std::thread::scope(|scope| -> iexact::Result<()> {
+        let mut drivers = Vec::new();
+        for t in 0..8usize {
+            let (dense, scores, compare) = (&dense, &scores, &compare);
+            drivers.push(scope.spawn(move || -> iexact::Result<()> {
+                let mut client = ServeClient::connect(addr)?;
+                for round in 0..4usize {
+                    let nodes: Vec<usize> =
+                        (0..6).map(|i| (t * 17 + round * 5 + i * 3) % n).collect();
+                    compare(&client.embed(&nodes)?, dense, &nodes, "embed")?;
+                    compare(&client.score(&nodes)?, scores, &nodes, "score")?;
+                }
+                Ok(())
+            }));
+        }
+        for d in drivers {
+            d.join().expect("self-test driver panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let mut client = ServeClient::connect(addr)?;
+    // A bad node id must come back as a named remote error and leave
+    // the connection usable.
+    let msg = match client.embed(&[n]) {
+        Ok(_) => {
+            return Err(iexact::Error::Runtime(
+                "serve self-test: out-of-range node was answered instead of rejected".into(),
+            ))
+        }
+        Err(e) => e.to_string(),
+    };
+    if !msg.contains("out of range") {
+        return Err(iexact::Error::Runtime(format!(
+            "serve self-test: expected an out-of-range error, got: {msg}"
+        )));
+    }
+    let stats = client.stats()?;
+    if stats.packed_resident_bytes >= stats.f32_bytes {
+        return Err(iexact::Error::Runtime(format!(
+            "serve self-test: packed store ({} B) is not smaller than f32 ({} B)",
+            stats.packed_resident_bytes, stats.f32_bytes
+        )));
+    }
+    if cfg.serve_bits == 2 && 2 * stats.packed_resident_bytes >= stats.f32_bytes {
+        return Err(iexact::Error::Runtime(format!(
+            "serve self-test: INT2 packed store ({} B) exceeds half the f32 \
+             footprint ({} B)",
+            stats.packed_resident_bytes, stats.f32_bytes
+        )));
+    }
+    client.shutdown()
 }
 
 fn cmd_train_aot(opts: &Opts) -> iexact::Result<()> {

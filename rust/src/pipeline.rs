@@ -268,6 +268,22 @@ impl GcnModel {
         }
         Ok(h)
     }
+
+    /// The final hidden representation — the post-ReLU output of the
+    /// penultimate layer, i.e. the node embeddings an embedding store
+    /// serves (`N × hidden`). Runs the same forward as
+    /// [`Self::forward_with`] but stops one layer early, so embeddings
+    /// and logits come from one computation graph and a serving store
+    /// built from this matrix is consistent with the trained model's
+    /// predictions.
+    pub fn embed_with(&self, ds: &Dataset, rt: &WorkerPool) -> Result<Matrix> {
+        let mut h = ds.features.clone();
+        for l in 0..self.num_layers() - 1 {
+            let x = self.layer_input_with(ds, &h, rt)?;
+            h = relu(&x.matmul_with(&self.weights[l], rt)?);
+        }
+        Ok(h)
+    }
 }
 
 /// Per-layer quantization bins, resolved once per run.

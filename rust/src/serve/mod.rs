@@ -1,0 +1,591 @@
+//! Compressed-embedding serving: answer node-embedding and
+//! neighborhood-scoring queries straight out of packed quantized
+//! storage.
+//!
+//! The pipeline trains a GCN whose final hidden layer is an embedding
+//! per node. At serve time that matrix is quantized **once** into a
+//! [`PlannedTensor`] and the dense `f32` copy is dropped; every query
+//! afterwards decodes *only the blocks its rows touch* through
+//! [`QuantEngine::decode_blocks_planned`] /
+//! [`QuantEngine::dequantize_rows_planned`] — the dense N×R matrix is
+//! never rebuilt, and `PoolStats::max_float_take` proves it (the
+//! largest float buffer the serving [`BufferPool`] ever hands out is
+//! one decode tile, not the full matrix).
+//!
+//! Concurrency comes from a micro-batching queue ([`BatchQueue`]):
+//! requests arriving within `batch_window_us` of each other coalesce
+//! into one shared decode pass where each touched block is decoded at
+//! most once, no matter how many queries want rows from it. A serve
+//! -time transcode knob ([`EmbeddingStore::transcode`]) re-packs the
+//! store block-by-block to a lower width than training — also without
+//! materializing the dense matrix.
+//!
+//! Two front ends share this module: an in-process API (used by the
+//! benches) and a localhost TCP server ([`server`]) speaking the same
+//! framed protocol as the distributed coordinator.
+
+mod proto;
+mod server;
+
+pub use server::{ServeClient, ServerHandle};
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::alloc::{BitPlan, PlannedTensor};
+use crate::config::ServeConfig;
+use crate::engine::QuantEngine;
+use crate::graph::{CsrMatrix, Dataset};
+use crate::memory::BufferPool;
+use crate::pipeline::GcnModel;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+/// One serving request, in-process form (the wire form lives in
+/// `proto`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Query {
+    /// Return the embedding row of each listed node.
+    Embed(Vec<usize>),
+    /// Return Â·H rows — each listed node's neighborhood-aggregated
+    /// embedding, decoded fused from packed blocks.
+    Score(Vec<usize>),
+}
+
+impl Query {
+    fn nodes(&self) -> &[usize] {
+        match self {
+            Query::Embed(nodes) | Query::Score(nodes) => nodes,
+        }
+    }
+}
+
+/// Serving counters + memory accounting, snapshotted via
+/// [`ServeEngine::stats`] or the wire `Stats` request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Queries answered.
+    pub queries: u64,
+    /// Decode batches executed (1 query per batch = no coalescing won).
+    pub batches: u64,
+    /// Blocks actually decoded, after per-batch dedup.
+    pub decoded_blocks: u64,
+    /// Blocks requested before dedup; `requested - decoded` is the
+    /// work micro-batching saved.
+    pub requested_blocks: u64,
+    /// Bytes the packed store keeps resident (codes + per-block
+    /// metadata).
+    pub packed_resident_bytes: usize,
+    /// Bytes the dense `f32` embedding matrix would occupy.
+    pub f32_bytes: usize,
+}
+
+/// The packed-resident embedding store: quantized final-layer
+/// activations plus the adjacency needed for scoring queries. The
+/// dense embedding matrix exists only transiently inside
+/// [`EmbeddingStore::build`] and is dropped before it returns.
+pub struct EmbeddingStore {
+    pt: PlannedTensor,
+    adj: CsrMatrix,
+    num_nodes: usize,
+    dim: usize,
+    rows_per_block: usize,
+    seed: u64,
+}
+
+impl EmbeddingStore {
+    /// Run the model's embedding forward pass once, quantize it under
+    /// a uniform `bits` plan with `rows_per_block` embedding rows per
+    /// block, and drop the dense matrix.
+    pub fn build(
+        model: &GcnModel,
+        ds: &Dataset,
+        engine: &QuantEngine,
+        bits: u32,
+        rows_per_block: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let emb = model.embed_with(ds, engine.runtime())?;
+        Self::from_embeddings(emb, ds.adj.clone(), engine, bits, rows_per_block, seed)
+    }
+
+    /// Quantize an already-computed embedding matrix. Takes `emb` by
+    /// value so the dense copy dies here — the store owns only packed
+    /// bytes.
+    pub fn from_embeddings(
+        emb: Matrix,
+        adj: CsrMatrix,
+        engine: &QuantEngine,
+        bits: u32,
+        rows_per_block: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let (num_nodes, dim) = emb.shape();
+        if num_nodes == 0 || dim == 0 {
+            return Err(Error::Config(format!(
+                "embedding store needs a non-empty matrix, got {num_nodes}x{dim}"
+            )));
+        }
+        if rows_per_block == 0 {
+            return Err(Error::Config(
+                "embedding store rows_per_block must be positive".into(),
+            ));
+        }
+        if adj.n_rows != num_nodes || adj.n_cols != num_nodes {
+            return Err(Error::Shape(format!(
+                "embedding store adjacency is {}x{} but embeddings have {num_nodes} rows",
+                adj.n_rows, adj.n_cols
+            )));
+        }
+        // Row-aligned blocks are what make touched-row decode possible:
+        // every node's row lives entirely inside block `node / rows_per_block`.
+        let group_len = rows_per_block * dim;
+        let num_blocks = (num_nodes * dim).div_ceil(group_len);
+        let plan = BitPlan::uniform(bits, num_blocks, group_len)?;
+        let pt = engine.quantize_planned_seeded(&emb, &plan, seed)?;
+        Ok(EmbeddingStore {
+            pt,
+            adj,
+            num_nodes,
+            dim,
+            rows_per_block,
+            seed,
+        })
+        // `emb` (the only dense copy) drops here.
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn rows_per_block(&self) -> usize {
+        self.rows_per_block
+    }
+
+    /// Uniform storage width in bits.
+    pub fn bits(&self) -> u32 {
+        self.pt.plan.bit(0)
+    }
+
+    pub fn planned(&self) -> &PlannedTensor {
+        &self.pt
+    }
+
+    pub fn adjacency(&self) -> &CsrMatrix {
+        &self.adj
+    }
+
+    /// Bytes the store keeps resident: packed codes, per-block `f32`
+    /// zero/range metadata, and the plan's width byte per block.
+    pub fn packed_resident_bytes(&self) -> usize {
+        self.pt.nbytes() + self.pt.plan.num_blocks()
+    }
+
+    /// Bytes the dense `f32` embedding matrix would occupy.
+    pub fn f32_bytes(&self) -> usize {
+        self.num_nodes * self.dim * 4
+    }
+
+    /// Re-pack the store at a different width (SGQuant-style serve-time
+    /// transcode: train wide, serve narrow), block by block. Each block
+    /// is decoded into one tile and immediately re-quantized under the
+    /// new width — the dense matrix is never materialized, so
+    /// `max_float_take` stays at one `group_len` tile even here.
+    pub fn transcode(&mut self, engine: &QuantEngine, bits: u32, pool: &mut BufferPool) -> Result<()> {
+        if bits == self.bits() {
+            return Ok(());
+        }
+        let group_len = self.pt.plan.group_len();
+        let num_blocks = self.pt.plan.num_blocks();
+        let n_scalars = self.num_nodes * self.dim;
+        let new_plan = BitPlan::uniform(bits, num_blocks, group_len)?;
+        let total_bytes = *new_plan.offsets(n_scalars)?.last().unwrap();
+        let mut packed = Vec::with_capacity(total_bytes);
+        let mut zeros = Vec::with_capacity(num_blocks);
+        let mut ranges = Vec::with_capacity(num_blocks);
+        let mut tile = pool.take_floats_scratch(group_len);
+        for g in 0..num_blocks {
+            let len = group_len.min(n_scalars - g * group_len);
+            engine.decode_blocks_planned(&self.pt, &[g], &mut tile)?;
+            let block = Matrix::from_vec(1, len, tile[..len].to_vec())?;
+            let block_plan = BitPlan::uniform(bits, 1, group_len)?;
+            // Per-block seed stream: deterministic, independent of the
+            // order blocks are transcoded in.
+            let sub =
+                engine.quantize_planned_seeded(&block, &block_plan, self.seed.wrapping_add(g as u64 + 1))?;
+            packed.extend_from_slice(&sub.packed);
+            zeros.extend_from_slice(&sub.zeros);
+            ranges.extend_from_slice(&sub.ranges);
+        }
+        pool.put_floats(tile);
+        debug_assert_eq!(packed.len(), total_bytes);
+        self.pt = PlannedTensor {
+            packed,
+            zeros,
+            ranges,
+            shape: self.pt.shape,
+            plan: new_plan,
+        };
+        Ok(())
+    }
+
+    /// Block holding node `v`'s row.
+    fn block_of(&self, v: usize) -> usize {
+        v / self.rows_per_block
+    }
+
+    /// Offset of node `v`'s row inside its block's decode tile.
+    fn row_offset(&self, v: usize) -> usize {
+        (v % self.rows_per_block) * self.dim
+    }
+}
+
+/// The in-process query engine: one [`EmbeddingStore`] + the
+/// [`QuantEngine`] that decodes it. Single-threaded by design — the
+/// [`BatchQueue`] owns one of these behind its dispatcher thread, and
+/// parallelism comes from the engine's `WorkerPool` sharding the
+/// decode itself.
+pub struct ServeEngine {
+    store: EmbeddingStore,
+    engine: QuantEngine,
+    queries: u64,
+    batches: u64,
+    decoded_blocks: u64,
+    requested_blocks: u64,
+}
+
+impl ServeEngine {
+    pub fn new(store: EmbeddingStore, engine: QuantEngine) -> Self {
+        ServeEngine {
+            store,
+            engine,
+            queries: 0,
+            batches: 0,
+            decoded_blocks: 0,
+            requested_blocks: 0,
+        }
+    }
+
+    pub fn store(&self) -> &EmbeddingStore {
+        &self.store
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            queries: self.queries,
+            batches: self.batches,
+            decoded_blocks: self.decoded_blocks,
+            requested_blocks: self.requested_blocks,
+            packed_resident_bytes: self.store.packed_resident_bytes(),
+            f32_bytes: self.store.f32_bytes(),
+        }
+    }
+
+    /// Answer one query through the touched-row entry points (the
+    /// "naive" arm: every query decodes its own blocks, no sharing).
+    pub fn answer(&mut self, query: &Query, pool: &mut BufferPool) -> Result<Matrix> {
+        self.validate(query)?;
+        self.queries += 1;
+        self.batches += 1;
+        let touched = self.touched_blocks(std::slice::from_ref(query));
+        self.requested_blocks += self.count_requested(std::slice::from_ref(query));
+        self.decoded_blocks += touched.len() as u64;
+        match query {
+            Query::Embed(nodes) => self.engine.dequantize_rows_planned(&self.store.pt, nodes, pool),
+            Query::Score(nodes) => {
+                self.engine
+                    .dequantize_spmm_rows_planned(&self.store.adj, &self.store.pt, nodes, pool)
+            }
+        }
+    }
+
+    /// Answer a batch of queries through one shared decode pass: the
+    /// union of touched blocks is decoded exactly once into a single
+    /// tile arena, then every query reads its rows out of the shared
+    /// tiles. Per-query results, so one bad query cannot poison its
+    /// batchmates.
+    pub fn answer_batch(
+        &mut self,
+        queries: &[Query],
+        pool: &mut BufferPool,
+    ) -> Vec<Result<Matrix>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let group_len = self.store.pt.plan.group_len();
+        let blocks = self.touched_blocks(queries);
+        self.requested_blocks += self.count_requested(queries);
+        self.decoded_blocks += blocks.len() as u64;
+        self.queries += queries.len() as u64;
+        self.batches += 1;
+
+        let mut arena = pool.take_floats_scratch(blocks.len() * group_len);
+        if let Err(e) = self
+            .engine
+            .decode_blocks_planned(&self.store.pt, &blocks, &mut arena)
+        {
+            // Infrastructure failure: every query in the batch sees it.
+            let msg = e.to_string();
+            pool.put_floats(arena);
+            return queries
+                .iter()
+                .map(|_| Err(Error::Runtime(msg.clone())))
+                .collect();
+        }
+        let results = queries
+            .iter()
+            .map(|q| self.answer_from_tiles(q, &blocks, &arena))
+            .collect();
+        pool.put_floats(arena);
+        results
+    }
+
+    /// Sorted, deduplicated union of blocks the valid nodes of
+    /// `queries` touch. Invalid node ids are skipped here — their
+    /// query fails with a named error later without dragging bogus
+    /// blocks into the shared decode.
+    fn touched_blocks(&self, queries: &[Query]) -> Vec<usize> {
+        let n = self.store.num_nodes;
+        let mut blocks = Vec::new();
+        for q in queries {
+            match q {
+                Query::Embed(nodes) => {
+                    for &v in nodes {
+                        if v < n {
+                            blocks.push(self.store.block_of(v));
+                        }
+                    }
+                }
+                Query::Score(nodes) => {
+                    for &v in nodes {
+                        if v < n {
+                            let (cols, _) = self.store.adj.row(v);
+                            for &c in cols {
+                                blocks.push(self.store.block_of(c));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        blocks.sort_unstable();
+        blocks.dedup();
+        blocks
+    }
+
+    /// Blocks requested before dedup (what a decode-per-query server
+    /// would have decoded).
+    fn count_requested(&self, queries: &[Query]) -> u64 {
+        let n = self.store.num_nodes;
+        let mut count = 0u64;
+        for q in queries {
+            let mut per_query = Vec::new();
+            match q {
+                Query::Embed(nodes) => {
+                    for &v in nodes {
+                        if v < n {
+                            per_query.push(self.store.block_of(v));
+                        }
+                    }
+                }
+                Query::Score(nodes) => {
+                    for &v in nodes {
+                        if v < n {
+                            let (cols, _) = self.store.adj.row(v);
+                            for &c in cols {
+                                per_query.push(self.store.block_of(c));
+                            }
+                        }
+                    }
+                }
+            }
+            per_query.sort_unstable();
+            per_query.dedup();
+            count += per_query.len() as u64;
+        }
+        count
+    }
+
+    fn validate(&self, query: &Query) -> Result<()> {
+        let n = self.store.num_nodes;
+        if let Some(&bad) = query.nodes().iter().find(|&&v| v >= n) {
+            return Err(Error::Shape(format!(
+                "node index {bad} out of range for {n}-node store"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Answer one query by reading rows out of the shared tile arena.
+    /// Accumulation order for `Score` matches `fused_spmm_row` (CSR
+    /// order, `f32` accumulator from zero), so batched replies are
+    /// bit-identical to the naive and full-dequantize paths.
+    fn answer_from_tiles(&self, query: &Query, blocks: &[usize], arena: &[f32]) -> Result<Matrix> {
+        self.validate(query)?;
+        let dim = self.store.dim;
+        let group_len = self.store.pt.plan.group_len();
+        let tile_base = |g: usize| -> usize {
+            // Every valid node's block is in `blocks` by construction.
+            let i = blocks.binary_search(&g).expect("touched block missing from batch arena");
+            i * group_len
+        };
+        match query {
+            Query::Embed(nodes) => {
+                let mut out = Matrix::zeros(nodes.len(), dim);
+                let data = out.as_mut_slice();
+                for (i, &v) in nodes.iter().enumerate() {
+                    let base = tile_base(self.store.block_of(v)) + self.store.row_offset(v);
+                    data[i * dim..(i + 1) * dim].copy_from_slice(&arena[base..base + dim]);
+                }
+                Ok(out)
+            }
+            Query::Score(nodes) => {
+                let mut out = Matrix::zeros(nodes.len(), dim);
+                let data = out.as_mut_slice();
+                for (i, &v) in nodes.iter().enumerate() {
+                    let out_row = &mut data[i * dim..(i + 1) * dim];
+                    let (cols, vals) = self.store.adj.row(v);
+                    for (&c, &w) in cols.iter().zip(vals) {
+                        let base = tile_base(self.store.block_of(c)) + self.store.row_offset(c);
+                        let src = &arena[base..base + dim];
+                        for (o, &s) in out_row.iter_mut().zip(src) {
+                            *o += w * s;
+                        }
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// A job travelling from a [`QueueClient`] to the dispatcher thread.
+enum Job {
+    Query(Query, mpsc::Sender<Result<Matrix>>),
+    Stats(mpsc::Sender<ServeStats>),
+}
+
+fn queue_closed() -> Error {
+    Error::Runtime("serve queue closed (dispatcher gone)".into())
+}
+
+/// Cloneable handle for submitting queries to a [`BatchQueue`].
+/// `query` blocks until the dispatcher replies; concurrency comes from
+/// calling it on many threads, whose in-flight requests the dispatcher
+/// coalesces.
+#[derive(Clone)]
+pub struct QueueClient {
+    tx: mpsc::Sender<Job>,
+}
+
+impl QueueClient {
+    pub fn query(&self, q: Query) -> Result<Matrix> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Job::Query(q, tx)).map_err(|_| queue_closed())?;
+        rx.recv().map_err(|_| queue_closed())?
+    }
+
+    pub fn stats(&self) -> Result<ServeStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Job::Stats(tx)).map_err(|_| queue_closed())?;
+        rx.recv().map_err(|_| queue_closed())
+    }
+}
+
+/// The micro-batching queue: one dispatcher thread owns the
+/// [`ServeEngine`] and its [`BufferPool`]. The first query to arrive
+/// opens a batch; queries landing within `batch_window_us` join it (up
+/// to `max_batch`), then the whole batch runs through one shared
+/// decode. `batch_window_us == 0` disables waiting — only queries
+/// already queued coalesce; `max_batch == 1` degenerates to
+/// decode-per-query (the naive bench arm).
+pub struct BatchQueue {
+    tx: mpsc::Sender<Job>,
+    handle: std::thread::JoinHandle<(ServeEngine, BufferPool)>,
+}
+
+impl BatchQueue {
+    pub fn spawn(engine: ServeEngine, pool: BufferPool, cfg: &ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let window = Duration::from_micros(cfg.batch_window_us as u64);
+        let max_batch = cfg.max_batch;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("iexact-serve-batch".into())
+            .spawn(move || dispatch(engine, pool, rx, window, max_batch))
+            .map_err(Error::Io)?;
+        Ok(BatchQueue { tx, handle })
+    }
+
+    pub fn client(&self) -> QueueClient {
+        QueueClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Drop the queue's sender and wait for the dispatcher to drain.
+    /// Blocks until every outstanding [`QueueClient`] is dropped too,
+    /// then returns the engine (for final stats) and its pool (whose
+    /// `max_float_take` proves no dense matrix was ever built).
+    pub fn shutdown(self) -> (ServeEngine, BufferPool) {
+        drop(self.tx);
+        self.handle.join().expect("serve dispatcher panicked")
+    }
+}
+
+fn dispatch(
+    mut engine: ServeEngine,
+    mut pool: BufferPool,
+    rx: mpsc::Receiver<Job>,
+    window: Duration,
+    max_batch: usize,
+) -> (ServeEngine, BufferPool) {
+    loop {
+        // Block for the batch opener.
+        let mut pending: Vec<(Query, mpsc::Sender<Result<Matrix>>)> = Vec::new();
+        match rx.recv() {
+            Ok(Job::Stats(tx)) => {
+                let _ = tx.send(engine.stats());
+                continue;
+            }
+            Ok(Job::Query(q, tx)) => pending.push((q, tx)),
+            Err(_) => break, // all clients gone
+        }
+        // Coalesce until the window closes or the batch fills.
+        let deadline = Instant::now() + window;
+        while pending.len() < max_batch {
+            let job = if window.is_zero() {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            };
+            match job {
+                Job::Stats(tx) => {
+                    let _ = tx.send(engine.stats());
+                }
+                Job::Query(q, tx) => pending.push((q, tx)),
+            }
+        }
+        let queries: Vec<Query> = pending.iter().map(|(q, _)| q.clone()).collect();
+        let results = engine.answer_batch(&queries, &mut pool);
+        for ((_, tx), result) in pending.into_iter().zip(results) {
+            // A client that gave up waiting is not an error.
+            let _ = tx.send(result);
+        }
+    }
+    (engine, pool)
+}

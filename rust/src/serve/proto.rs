@@ -1,0 +1,294 @@
+//! Message layer of the serving protocol: everything that travels
+//! inside a [`frame`](crate::coordinator::dist::frame) payload between
+//! a query driver and `iexact serve`.
+//!
+//! The serving wire reuses the distributed coordinator's frame format
+//! verbatim (magic, version, endianness tag, length bound, FNV-1a
+//! checksum) and layers its own tag space on top, encoded through the
+//! checkpoint module's little-endian helpers and bounds-checked
+//! [`Reader`] — one framing implementation, one truncation diagnostic
+//! style, across every wire and disk format in the crate.
+
+use crate::checkpoint::{write_matrix, write_u64, Reader};
+use crate::serve::ServeStats;
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+
+const TAG_EMBED: u8 = 1;
+const TAG_SCORE: u8 = 2;
+const TAG_STATS: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_ROWS: u8 = 129;
+const TAG_STATS_REPLY: u8 = 130;
+const TAG_ERROR: u8 = 131;
+const TAG_BYE: u8 = 132;
+
+/// Caps on repeated fields — far above any real query, low enough that
+/// a desynced peer cannot make the decoder allocate absurdly.
+const MAX_NODES: usize = 1 << 24;
+const MAX_STRING: usize = 4096;
+
+fn bad(msg: impl std::fmt::Display) -> Error {
+    Error::Runtime(format!("serve protocol: {msg}"))
+}
+
+/// A query-driver → server message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum Request {
+    /// Embedding rows for these node ids.
+    Embed(Vec<usize>),
+    /// Neighborhood-aggregated scores for these node ids.
+    Score(Vec<usize>),
+    /// Serving counters + memory accounting snapshot.
+    Stats,
+    /// Graceful server shutdown (acknowledged with [`Reply::Bye`]).
+    Shutdown,
+}
+
+/// A server → query-driver message.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Reply {
+    /// One `f32` row per queried node.
+    Rows(Matrix),
+    /// Counters snapshot for [`Request::Stats`].
+    Stats(ServeStats),
+    /// A per-request failure (bad node id, malformed query); the
+    /// connection stays usable.
+    Error(String),
+    /// Shutdown acknowledgement.
+    Bye,
+}
+
+fn write_nodes(buf: &mut Vec<u8>, nodes: &[usize]) {
+    write_u64(buf, nodes.len() as u64);
+    for &v in nodes {
+        write_u64(buf, v as u64);
+    }
+}
+
+fn read_nodes(r: &mut Reader<'_>) -> Result<Vec<usize>> {
+    let n = r.u64()? as usize;
+    if n > MAX_NODES {
+        return Err(bad(format!("node list length {n} exceeds {MAX_NODES}")));
+    }
+    (0..n).map(|_| Ok(r.u64()? as usize)).collect()
+}
+
+impl Request {
+    /// Variant name for protocol diagnostics.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            Request::Embed(_) => "Embed",
+            Request::Score(_) => "Score",
+            Request::Stats => "Stats",
+            Request::Shutdown => "Shutdown",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Request::Embed(nodes) => {
+                buf.push(TAG_EMBED);
+                write_nodes(&mut buf, nodes);
+            }
+            Request::Score(nodes) => {
+                buf.push(TAG_SCORE);
+                write_nodes(&mut buf, nodes);
+            }
+            Request::Stats => buf.push(TAG_STATS),
+            Request::Shutdown => buf.push(TAG_SHUTDOWN),
+        }
+        buf
+    }
+
+    pub(crate) fn decode(payload: &[u8]) -> Result<Request> {
+        let mut r = Reader {
+            cur: payload,
+            what: "serve message",
+        };
+        // Reader truncation errors are Artifact("serve message
+        // truncated"); requalify them as protocol errors — on a socket
+        // they mean a desynced peer, not a damaged file.
+        let msg = Self::decode_body(&mut r).map_err(|e| match e {
+            Error::Artifact(m) => bad(m),
+            other => other,
+        })?;
+        if !r.cur.is_empty() {
+            return Err(bad(format!(
+                "{} bytes trailing a {} request",
+                r.cur.len(),
+                msg.kind()
+            )));
+        }
+        Ok(msg)
+    }
+
+    fn decode_body(r: &mut Reader<'_>) -> Result<Request> {
+        Ok(match r.byte()? {
+            TAG_EMBED => Request::Embed(read_nodes(r)?),
+            TAG_SCORE => Request::Score(read_nodes(r)?),
+            TAG_STATS => Request::Stats,
+            TAG_SHUTDOWN => Request::Shutdown,
+            other => return Err(bad(format!("unknown request tag {other}"))),
+        })
+    }
+}
+
+impl Reply {
+    /// Variant name for protocol diagnostics.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            Reply::Rows(_) => "Rows",
+            Reply::Stats(_) => "Stats",
+            Reply::Error(_) => "Error",
+            Reply::Bye => "Bye",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Reply::Rows(m) => {
+                buf.push(TAG_ROWS);
+                write_matrix(&mut buf, m);
+            }
+            Reply::Stats(s) => {
+                buf.push(TAG_STATS_REPLY);
+                write_u64(&mut buf, s.queries);
+                write_u64(&mut buf, s.batches);
+                write_u64(&mut buf, s.decoded_blocks);
+                write_u64(&mut buf, s.requested_blocks);
+                write_u64(&mut buf, s.packed_resident_bytes as u64);
+                write_u64(&mut buf, s.f32_bytes as u64);
+            }
+            Reply::Error(msg) => {
+                buf.push(TAG_ERROR);
+                let msg = &msg.as_bytes()[..msg.len().min(MAX_STRING)];
+                write_u64(&mut buf, msg.len() as u64);
+                buf.extend_from_slice(msg);
+            }
+            Reply::Bye => buf.push(TAG_BYE),
+        }
+        buf
+    }
+
+    pub(crate) fn decode(payload: &[u8]) -> Result<Reply> {
+        let mut r = Reader {
+            cur: payload,
+            what: "serve message",
+        };
+        let msg = Self::decode_body(&mut r).map_err(|e| match e {
+            Error::Artifact(m) => bad(m),
+            other => other,
+        })?;
+        if !r.cur.is_empty() {
+            return Err(bad(format!(
+                "{} bytes trailing a {} reply",
+                r.cur.len(),
+                msg.kind()
+            )));
+        }
+        Ok(msg)
+    }
+
+    fn decode_body(r: &mut Reader<'_>) -> Result<Reply> {
+        Ok(match r.byte()? {
+            TAG_ROWS => Reply::Rows(r.matrix()?),
+            TAG_STATS_REPLY => Reply::Stats(ServeStats {
+                queries: r.u64()?,
+                batches: r.u64()?,
+                decoded_blocks: r.u64()?,
+                requested_blocks: r.u64()?,
+                packed_resident_bytes: r.u64()? as usize,
+                f32_bytes: r.u64()? as usize,
+            }),
+            TAG_ERROR => {
+                let len = r.u64()? as usize;
+                if len > MAX_STRING {
+                    return Err(bad(format!("error length {len} exceeds {MAX_STRING}")));
+                }
+                let msg = String::from_utf8(r.take(len)?.to_vec())
+                    .map_err(|_| bad("error message is not valid UTF-8"))?;
+                Reply::Error(msg)
+            }
+            TAG_BYE => Reply::Bye,
+            other => return Err(bad(format!("unknown reply tag {other}"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip() {
+        for req in [
+            Request::Embed(vec![0, 7, 255]),
+            Request::Embed(vec![]),
+            Request::Score(vec![3, 3, 9]),
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            let got = Request::decode(&req.encode()).unwrap();
+            assert_eq!(got, req);
+        }
+    }
+
+    #[test]
+    fn replies_round_trip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let s = ServeStats {
+            queries: 10,
+            batches: 3,
+            decoded_blocks: 5,
+            requested_blocks: 17,
+            packed_resident_bytes: 4096,
+            f32_bytes: 65536,
+        };
+        for reply in [
+            Reply::Rows(m),
+            Reply::Stats(s),
+            Reply::Error("node index 99 out of range".into()),
+            Reply::Bye,
+        ] {
+            let got = Reply::decode(&reply.encode()).unwrap();
+            assert_eq!(got, reply);
+        }
+    }
+
+    #[test]
+    fn malformed_messages_are_named_protocol_errors() {
+        // Unknown tag.
+        let msg = Request::decode(&[42]).unwrap_err().to_string();
+        assert!(msg.contains("serve protocol"), "{msg}");
+        assert!(msg.contains("unknown request tag"), "{msg}");
+        // Truncated body: requalified as a protocol error, not Artifact.
+        let mut bytes = Request::Embed(vec![1, 2, 3]).encode();
+        bytes.truncate(bytes.len() - 4);
+        let msg = Request::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("serve protocol"), "{msg}");
+        assert!(msg.contains("truncated"), "{msg}");
+        // Trailing bytes name the message kind.
+        let mut bytes = Request::Stats.encode();
+        bytes.push(0);
+        let msg = Request::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("trailing a Stats request"), "{msg}");
+        // Absurd node count: rejected before allocation.
+        let mut bytes = vec![TAG_EMBED];
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let msg = Request::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("node list length"), "{msg}");
+        // Reply side: unknown tag and oversized error string.
+        let msg = Reply::decode(&[7]).unwrap_err().to_string();
+        assert!(msg.contains("unknown reply tag"), "{msg}");
+        let mut bytes = vec![TAG_ERROR];
+        bytes.extend_from_slice(&(MAX_STRING as u64 + 1).to_le_bytes());
+        let msg = Reply::decode(&bytes).unwrap_err().to_string();
+        assert!(msg.contains("error length"), "{msg}");
+        // Empty payload.
+        assert!(Request::decode(&[]).is_err());
+        assert!(Reply::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Localhost TCP front end for the serving engine.
+//!
+//! Reuses the distributed coordinator's frame layer
+//! ([`crate::coordinator::dist::frame`]) — magic, version, endianness
+//! tag, checksum — with the serving message tags from
+//! [`super::proto`] inside the payload. One connection handler thread
+//! per client; every handler funnels into the shared [`BatchQueue`]
+//! dispatcher, which is where concurrent requests coalesce into shared
+//! decode batches.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::dist::frame::{read_frame, write_frame};
+use crate::memory::BufferPool;
+use crate::serve::proto::{Reply, Request};
+use crate::serve::{BatchQueue, Query, QueueClient, ServeEngine, ServeStats};
+use crate::{config::ServeConfig, Error, Result};
+
+/// A running serve instance: TCP acceptor + batch dispatcher.
+/// Dropping the handle without [`ServerHandle::join`] leaks the
+/// threads; drivers should send a `Shutdown` request and then `join`.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    accept: std::thread::JoinHandle<()>,
+    queue: BatchQueue,
+}
+
+impl ServerHandle {
+    /// Bind `127.0.0.1:cfg.port` (port 0 = OS-assigned ephemeral) and
+    /// start serving `engine` behind a batch queue configured from
+    /// `cfg`.
+    pub fn start(engine: ServeEngine, cfg: &ServeConfig) -> Result<ServerHandle> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", cfg.port)).map_err(Error::Io)?;
+        let addr = listener.local_addr().map_err(Error::Io)?;
+        let queue = BatchQueue::spawn(engine, BufferPool::new(), cfg)?;
+        let client = queue.client();
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = std::thread::Builder::new()
+            .name("iexact-serve-accept".into())
+            .spawn(move || accept_loop(listener, addr, client, stop))
+            .map_err(Error::Io)?;
+        Ok(ServerHandle {
+            addr,
+            accept,
+            queue,
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the acceptor to stop (a client sent `Shutdown`), drain
+    /// the batch queue, and return final serving stats.
+    /// Also returns the dispatcher's [`BufferPool`] so callers can
+    /// read `max_float_take` — the proof that serving never built a
+    /// dense matrix.
+    pub fn join(self) -> (ServeStats, BufferPool) {
+        let _ = self.accept.join();
+        let (engine, pool) = self.queue.shutdown();
+        (engine.stats(), pool)
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    addr: SocketAddr,
+    client: QueueClient,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(_) => break,
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let client = client.clone();
+        let stop = stop.clone();
+        // Handler threads are detached; the batch queue's shutdown
+        // joins on their QueueClient clones dropping, which happens
+        // when their sockets close.
+        let _ = std::thread::Builder::new()
+            .name("iexact-serve-conn".into())
+            .spawn(move || handle_conn(stream, addr, client, stop));
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, addr: SocketAddr, client: QueueClient, stop: Arc<AtomicBool>) {
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(p) => p,
+            // Closed or desynced peer: drop the connection. The frame
+            // layer cannot resync mid-stream, so no error reply.
+            Err(_) => break,
+        };
+        let reply = match Request::decode(&payload) {
+            Err(e) => Reply::Error(e.to_string()),
+            Ok(Request::Embed(nodes)) => match client.query(Query::Embed(nodes)) {
+                Ok(m) => Reply::Rows(m),
+                Err(e) => Reply::Error(e.to_string()),
+            },
+            Ok(Request::Score(nodes)) => match client.query(Query::Score(nodes)) {
+                Ok(m) => Reply::Rows(m),
+                Err(e) => Reply::Error(e.to_string()),
+            },
+            Ok(Request::Stats) => match client.stats() {
+                Ok(s) => Reply::Stats(s),
+                Err(e) => Reply::Error(e.to_string()),
+            },
+            Ok(Request::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                let _ = write_frame(&mut stream, &Reply::Bye.encode());
+                // Unblock the acceptor so it observes the stop flag.
+                let _ = TcpStream::connect(addr);
+                break;
+            }
+        };
+        if write_frame(&mut stream, &reply.encode()).is_err() {
+            break;
+        }
+    }
+    // `client` drops here, releasing its hold on the batch queue.
+}
+
+/// Blocking TCP client for `iexact serve` — the driver side of the
+/// wire protocol, used by the CI smoke test and available to external
+/// tools via the library API.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).map_err(Error::Io)?;
+        Ok(ServeClient { stream })
+    }
+
+    /// Embedding rows for `nodes`, one row per requested node.
+    pub fn embed(&mut self, nodes: &[usize]) -> Result<crate::tensor::Matrix> {
+        match self.roundtrip(&Request::Embed(nodes.to_vec()))? {
+            Reply::Rows(m) => Ok(m),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Neighborhood-aggregated scores for `nodes`.
+    pub fn score(&mut self, nodes: &[usize]) -> Result<crate::tensor::Matrix> {
+        match self.roundtrip(&Request::Score(nodes.to_vec()))? {
+            Reply::Rows(m) => Ok(m),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.roundtrip(&Request::Stats)? {
+            Reply::Stats(s) => Ok(s),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Ask the server to stop accepting connections and drain.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Reply::Bye => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Reply> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let payload = read_frame(&mut self.stream)?;
+        match Reply::decode(&payload)? {
+            Reply::Error(msg) => Err(Error::Runtime(format!("serve remote error: {msg}"))),
+            reply => Ok(reply),
+        }
+    }
+}
+
+fn unexpected(reply: &Reply) -> Error {
+    Error::Runtime(format!(
+        "serve protocol: unexpected {} reply for this request",
+        reply.kind()
+    ))
+}

@@ -345,6 +345,39 @@ pub fn js_divergence(p: &[f64], q: &[f64]) -> Result<f64> {
     Ok(js / std::f64::consts::LN_2)
 }
 
+/// Exact nearest-rank percentile of an **ascending-sorted** sample.
+///
+/// `q` is a quantile in `[0, 1]`; the nearest-rank index is
+/// `ceil(q * n) - 1` (clamped into the sample), so `q = 0.5` over
+/// `[1, 2, 3, 4]` returns `2` and `q = 0` returns the minimum. This is
+/// the estimator used for the serve bench's p50/p99 latency columns:
+/// it always returns an *observed* value, never an interpolated one.
+///
+/// An empty sample has no percentiles, so it is a named
+/// [`Error::Numerical`] rather than NaN — the same convention as
+/// [`Histogram::probabilities`] on an empty histogram. `q` outside
+/// `[0, 1]` (or NaN) is a named error too.
+pub fn percentile(sorted: &[f64], q: f64) -> Result<f64> {
+    if sorted.is_empty() {
+        return Err(Error::Numerical(
+            "percentile of an empty sample is undefined (no observations)".into(),
+        ));
+    }
+    if !(0.0..=1.0).contains(&q) {
+        return Err(Error::Numerical(format!(
+            "percentile quantile q={q} outside [0, 1]"
+        )));
+    }
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile input must be ascending-sorted"
+    );
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize; // 0..=n
+    let idx = rank.saturating_sub(1).min(n - 1);
+    Ok(sorted[idx])
+}
+
 /// Streaming mean/variance (Welford).
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -558,6 +591,40 @@ mod tests {
         let js_u = js_divergence(&obs, &uniform).unwrap();
         assert!(js_cn < js_u, "cn={js_cn} uniform={js_u}");
         assert!(js_cn < 0.01, "model should fit its own samples: {js_cn}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank_semantics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        // Nearest rank: ceil(q*n) - 1.
+        assert_eq!(percentile(&xs, 0.0).unwrap(), 1.0);
+        assert_eq!(percentile(&xs, 0.25).unwrap(), 1.0);
+        assert_eq!(percentile(&xs, 0.5).unwrap(), 2.0);
+        assert_eq!(percentile(&xs, 0.51).unwrap(), 3.0);
+        assert_eq!(percentile(&xs, 0.99).unwrap(), 4.0);
+        assert_eq!(percentile(&xs, 1.0).unwrap(), 4.0);
+        // Single element: every quantile is that element.
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.5], q).unwrap(), 7.5);
+        }
+        // Duplicate-heavy input: the duplicated value dominates the
+        // middle quantiles, extremes still reach the tails.
+        let dup = [1.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 9.0];
+        assert_eq!(percentile(&dup, 0.1).unwrap(), 1.0);
+        assert_eq!(percentile(&dup, 0.5).unwrap(), 5.0);
+        assert_eq!(percentile(&dup, 0.9).unwrap(), 5.0);
+        assert_eq!(percentile(&dup, 0.91).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_bad_q_are_named_errors() {
+        let msg = percentile(&[], 0.5).unwrap_err().to_string();
+        assert!(msg.contains("empty sample"), "unexpected message: {msg}");
+        assert!(msg.starts_with("numerical error"), "{msg}");
+        for q in [-0.1, 1.1, f64::NAN] {
+            let msg = percentile(&[1.0], q).unwrap_err().to_string();
+            assert!(msg.contains("outside [0, 1]"), "q={q}: {msg}");
+        }
     }
 
     #[test]

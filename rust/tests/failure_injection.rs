@@ -261,6 +261,80 @@ fn enospc_style_spill_target_fails_cleanly_and_checkpoint_survives() {
     std::fs::remove_file(&blocker).ok();
 }
 
+// ---------------------------------------------------------------------------
+// Wire planned-tensor rejections (serving/distributed trust boundary)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_planned_tensor_rejections_are_named() {
+    let engine = QuantEngine::serial();
+    let mut pool = BufferPool::new();
+    let h = Matrix::from_fn(8, 16, |r, c| (r * 5 + c) as f32 * 0.5 - 3.0);
+    let plan = BitPlan::uniform(2, 8, 16).unwrap();
+    let wire = engine.pack_to_wire(&h, &plan, 7, &mut pool).unwrap();
+
+    // The healthy body round-trips.
+    let pt = engine.decode_from_wire(&wire, &mut pool).unwrap();
+    assert_eq!(pt.shape, (8, 16));
+
+    // Truncated packed body: the last codes are missing.
+    let msg = engine
+        .decode_from_wire(&wire[..wire.len() - 3], &mut pool)
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("wire planned tensor"), "{msg}");
+    assert!(msg.contains("truncated"), "{msg}");
+
+    // Any shorter prefix errors too — header cuts, mid-metadata cuts —
+    // never panics, never returns a tensor.
+    for cut in [0, 1, 7, 8, 31, 32, 33, wire.len() / 2, wire.len() - 1] {
+        assert!(
+            engine.decode_from_wire(&wire[..cut], &mut pool).is_err(),
+            "cut={cut}"
+        );
+    }
+
+    // Oversized body: bytes trailing the packed codes.
+    let mut big = wire.clone();
+    big.extend_from_slice(&[0u8; 5]);
+    let msg = engine.decode_from_wire(&big, &mut pool).unwrap_err().to_string();
+    assert!(msg.contains("wire planned tensor"), "{msg}");
+    assert!(msg.contains("trailing bytes"), "{msg}");
+
+    // Absurd declared packed length — rejected before any allocation.
+    // Field offset: shape (2x u64) + group_len + num_blocks (u64 each),
+    // bits bytes, zeros count + f32s, ranges count + f32s.
+    let nb = plan.num_blocks();
+    let packed_len_at = 8 * 4 + nb + 8 + 4 * nb + 8 + 4 * nb;
+    let mut huge = wire.clone();
+    huge[packed_len_at..packed_len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    let msg = engine.decode_from_wire(&huge, &mut pool).unwrap_err().to_string();
+    assert!(msg.contains("bad packed length"), "{msg}");
+
+    // Shape/plan mismatch: the shape field claims 9 rows but the plan
+    // still covers 8x16 scalars. Must be rejected at decode, not crash
+    // a later dequantize.
+    let mut bad_shape = wire.clone();
+    bad_shape[0..8].copy_from_slice(&9u64.to_le_bytes());
+    let msg = engine
+        .decode_from_wire(&bad_shape, &mut pool)
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("wire planned tensor"), "{msg}");
+    assert!(msg.contains("inconsistent body"), "{msg}");
+
+    // Metadata/plan mismatch: a lying zeros count desyncs the body —
+    // still a named wire error of some kind, never a panic.
+    let zeros_count_at = 8 * 4 + nb;
+    let mut bad_meta = wire.clone();
+    bad_meta[zeros_count_at..zeros_count_at + 8].copy_from_slice(&7u64.to_le_bytes());
+    let msg = engine
+        .decode_from_wire(&bad_meta, &mut pool)
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("wire planned tensor"), "{msg}");
+}
+
 #[test]
 fn binspec_hostile_boundaries() {
     let m = Matrix::from_fn(2, 8, |_, c| c as f32);

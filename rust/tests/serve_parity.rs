@@ -1,0 +1,338 @@
+//! Serving parity: every reply that leaves the compressed-embedding
+//! query engine must be **bit-identical** to a full offline
+//! `dequantize_planned` of the same packed store — through the naive
+//! per-query path, the shared-tile batch path, the TCP wire, every
+//! forced codec ISA, and after a serve-time transcode — while the
+//! serving `BufferPool` proves the dense matrix was never rebuilt
+//! (`max_float_take` stays at tile scale).
+//!
+//! The fixture is fully deterministic: synthetic embeddings and a
+//! hand-built adjacency whose queried nodes (`0..QUERY_LIMIT`) only
+//! ever reference neighbors below `QUERY_LIMIT`, so the last blocks of
+//! the store are provably untouched by every batch — the shared tile
+//! arena can never legitimately reach dense size.
+
+use iexact::config::{ParallelismConfig, ServeConfig};
+use iexact::engine::QuantEngine;
+use iexact::graph::CsrMatrix;
+use iexact::memory::BufferPool;
+use iexact::quant::CodecIsa;
+use iexact::serve::{BatchQueue, EmbeddingStore, Query, ServeClient, ServeEngine, ServerHandle};
+use iexact::tensor::Matrix;
+
+const N: usize = 64;
+const DIM: usize = 16;
+const ROWS_PER_BLOCK: usize = 4;
+/// Queries only touch nodes below this; the adjacency keeps their
+/// neighborhoods below it too, so blocks >= QUERY_LIMIT/ROWS_PER_BLOCK
+/// are never decoded.
+const QUERY_LIMIT: usize = 56;
+const SEED: u64 = 0x5e72_e001;
+
+fn adjacency() -> CsrMatrix {
+    let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+    for v in 0..N {
+        edges.push((v, v, 0.5));
+    }
+    for v in 0..QUERY_LIMIT {
+        edges.push((v, (3 * v + 1) % QUERY_LIMIT, 0.25));
+        edges.push((v, (7 * v + 5) % QUERY_LIMIT, 1.5));
+    }
+    CsrMatrix::from_edges(N, &edges).unwrap()
+}
+
+fn embeddings() -> Matrix {
+    Matrix::from_fn(N, DIM, |r, c| ((r * 31 + c * 7) % 97) as f32 * 0.21 - 9.3)
+}
+
+fn store_fixture(engine: &QuantEngine, bits: u32) -> (EmbeddingStore, CsrMatrix) {
+    let adj = adjacency();
+    let store = EmbeddingStore::from_embeddings(
+        embeddings(),
+        adj.clone(),
+        engine,
+        bits,
+        ROWS_PER_BLOCK,
+        SEED,
+    )
+    .unwrap();
+    (store, adj)
+}
+
+fn mixed_queries() -> Vec<Query> {
+    let pick = |mul: usize, add: usize, len: usize| -> Vec<usize> {
+        (0..len).map(|i| (i * mul + add) % QUERY_LIMIT).collect()
+    };
+    vec![
+        Query::Embed(pick(7, 0, 5)),
+        Query::Score(pick(13, 3, 4)),
+        Query::Embed(vec![0, QUERY_LIMIT - 1, 0, QUERY_LIMIT / 2]),
+        Query::Score(pick(5, 11, 6)),
+        Query::Embed(pick(29, 1, 3)),
+        Query::Score(vec![QUERY_LIMIT - 1]),
+    ]
+}
+
+/// Assert `got` row `i` is bit-identical to `want` row `nodes[i]`.
+fn assert_rows(got: &Matrix, want: &Matrix, nodes: &[usize], what: &str) {
+    assert_eq!(got.rows(), nodes.len(), "{what}: row count");
+    assert_eq!(got.cols(), want.cols(), "{what}: col count");
+    for (i, &v) in nodes.iter().enumerate() {
+        for (j, (a, b)) in got.row(i).iter().zip(want.row(v)).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{what}: node {v} col {j}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Offline reference: full dense dequantize + full fused spmm.
+fn reference(engine: &QuantEngine, store: &EmbeddingStore, adj: &CsrMatrix) -> (Matrix, Matrix) {
+    let mut pool = BufferPool::new();
+    let dense = engine.dequantize_planned(store.planned()).unwrap();
+    let scores = engine
+        .dequantize_spmm_planned(adj, store.planned(), &mut pool)
+        .unwrap();
+    (dense, scores)
+}
+
+fn check_queries(
+    serve: &mut ServeEngine,
+    pool: &mut BufferPool,
+    queries: &[Query],
+    dense: &Matrix,
+    scores: &Matrix,
+    what: &str,
+) {
+    // Naive arm: each query decodes its own blocks.
+    for q in queries {
+        let got = serve.answer(q, pool).unwrap();
+        match q {
+            Query::Embed(nodes) => assert_rows(&got, dense, nodes, &format!("{what} naive embed")),
+            Query::Score(nodes) => assert_rows(&got, scores, nodes, &format!("{what} naive score")),
+        }
+    }
+    // Batched arm: one shared decode pass over the whole set.
+    let batched = serve.answer_batch(queries, pool);
+    assert_eq!(batched.len(), queries.len());
+    for (q, got) in queries.iter().zip(batched) {
+        let got = got.unwrap();
+        match q {
+            Query::Embed(nodes) => assert_rows(&got, dense, nodes, &format!("{what} batch embed")),
+            Query::Score(nodes) => assert_rows(&got, scores, nodes, &format!("{what} batch score")),
+        }
+    }
+}
+
+#[test]
+fn replies_bit_identical_to_full_dequantize_under_every_isa() {
+    for isa in CodecIsa::available() {
+        for bits in [2u32, 4] {
+            let engine = QuantEngine::from_config(&ParallelismConfig::default())
+                .with_codec_isa(isa)
+                .unwrap();
+            let (store, adj) = store_fixture(&engine, bits);
+            let (dense, scores) = reference(&engine, &store, &adj);
+            let mut serve = ServeEngine::new(store, engine);
+            let mut pool = BufferPool::new();
+            check_queries(
+                &mut serve,
+                &mut pool,
+                &mixed_queries(),
+                &dense,
+                &scores,
+                &format!("isa={isa:?} bits={bits}"),
+            );
+            // The proof: the serving pool never handed out a dense-sized
+            // float buffer. Queried neighborhoods stay below QUERY_LIMIT,
+            // so at least the store's last blocks are never in any arena.
+            let dense_floats = N * DIM;
+            let take = pool.stats().max_float_take;
+            assert!(
+                take < dense_floats,
+                "isa={isa:?} bits={bits}: max_float_take {take} reached dense {dense_floats}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_counters_track_shared_decode_savings() {
+    let engine = QuantEngine::from_config(&ParallelismConfig::default());
+    let (store, _) = store_fixture(&engine, 2);
+    let group_len = ROWS_PER_BLOCK * DIM;
+    let mut serve = ServeEngine::new(store, engine);
+    let mut pool = BufferPool::new();
+
+    // Four queries over the SAME two blocks: the batch decodes each
+    // block once; naive accounting (requested) says four times.
+    let queries: Vec<Query> = (0..4)
+        .map(|i| Query::Embed(vec![i % ROWS_PER_BLOCK, ROWS_PER_BLOCK + i % ROWS_PER_BLOCK]))
+        .collect();
+    let results = serve.answer_batch(&queries, &mut pool);
+    assert!(results.iter().all(|r| r.is_ok()));
+    let stats = serve.stats();
+    assert_eq!(stats.queries, 4);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.decoded_blocks, 2, "blocks 0 and 1, each decoded once");
+    assert_eq!(stats.requested_blocks, 8, "4 queries x 2 blocks each");
+    // The shared arena was exactly two tiles.
+    assert_eq!(pool.stats().max_float_take, 2 * group_len);
+
+    // Per-query failure isolation: a bad node id fails ITS query with a
+    // named error; batchmates still succeed.
+    let queries = vec![
+        Query::Embed(vec![0, 1]),
+        Query::Embed(vec![N]),
+        Query::Score(vec![2]),
+    ];
+    let results = serve.answer_batch(&queries, &mut pool);
+    assert!(results[0].is_ok());
+    let msg = results[1].as_ref().unwrap_err().to_string();
+    assert!(msg.contains("out of range"), "{msg}");
+    assert!(results[2].is_ok());
+
+    // Empty query list: empty result, no batch counted.
+    let before = serve.stats().batches;
+    assert!(serve.answer_batch(&[], &mut pool).is_empty());
+    assert_eq!(serve.stats().batches, before);
+}
+
+#[test]
+fn transcode_reaches_int2_footprint_and_stays_bit_exact() {
+    let engine = QuantEngine::from_config(&ParallelismConfig::default());
+    let (mut store, adj) = store_fixture(&engine, 8);
+    let wide_bytes = store.packed_resident_bytes();
+    let mut pool = BufferPool::new();
+    store.transcode(&engine, 2, &mut pool).unwrap();
+    assert_eq!(store.bits(), 2);
+    // Codes shrink 4x; per-block zero/range/width metadata is constant.
+    assert!(store.packed_resident_bytes() < wide_bytes / 2);
+    // Acceptance floor: packed-resident < 0.35x the dense f32 footprint
+    // at INT2.
+    assert!(
+        (store.packed_resident_bytes() as f64) < 0.35 * store.f32_bytes() as f64,
+        "{} vs {}",
+        store.packed_resident_bytes(),
+        store.f32_bytes()
+    );
+    // The transcode itself never took more than one tile.
+    assert_eq!(pool.stats().max_float_take, ROWS_PER_BLOCK * DIM);
+
+    // Replies from the transcoded store still match a full dequantize
+    // OF THE TRANSCODED tensor bit-for-bit.
+    let (dense, scores) = reference(&engine, &store, &adj);
+    let mut serve = ServeEngine::new(store, engine);
+    check_queries(
+        &mut serve,
+        &mut pool,
+        &mixed_queries(),
+        &dense,
+        &scores,
+        "transcoded",
+    );
+
+    // Transcoding is deterministic and engine-independent: a serial
+    // engine following the same build-wide-then-narrow path lands on
+    // identical bytes.
+    let engine2 = QuantEngine::serial();
+    let (mut store2, _) = store_fixture(&engine2, 8);
+    store2.transcode(&engine2, 2, &mut pool).unwrap();
+    assert_eq!(store2.planned().packed, serve.store().planned().packed);
+    assert_eq!(store2.planned().zeros, serve.store().planned().zeros);
+    assert_eq!(store2.planned().ranges, serve.store().planned().ranges);
+}
+
+#[test]
+fn batch_queue_coalesces_concurrent_clients() {
+    let engine = QuantEngine::from_config(&ParallelismConfig::default());
+    let (store, adj) = store_fixture(&engine, 2);
+    let (dense, scores) = reference(&engine, &store, &adj);
+    let cfg = ServeConfig {
+        batch_window_us: 300,
+        max_batch: 16,
+        ..ServeConfig::default()
+    };
+    let queue =
+        BatchQueue::spawn(ServeEngine::new(store, engine), BufferPool::new(), &cfg).unwrap();
+
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let client = queue.client();
+            let (dense, scores) = (&dense, &scores);
+            scope.spawn(move || {
+                for round in 0..5usize {
+                    let nodes: Vec<usize> = (0..4)
+                        .map(|i| (t * 19 + round * 7 + i) % QUERY_LIMIT)
+                        .collect();
+                    let got = client.query(Query::Embed(nodes.clone())).unwrap();
+                    assert_rows(&got, dense, &nodes, "queued embed");
+                    let got = client.query(Query::Score(nodes.clone())).unwrap();
+                    assert_rows(&got, scores, &nodes, "queued score");
+                }
+            });
+        }
+    });
+
+    let (engine, pool) = queue.shutdown();
+    let stats = engine.stats();
+    assert_eq!(stats.queries, 80, "8 clients x 5 rounds x 2 queries");
+    assert!(
+        stats.batches <= stats.queries,
+        "{} batches for {} queries",
+        stats.batches,
+        stats.queries
+    );
+    assert!(stats.decoded_blocks <= stats.requested_blocks);
+    assert!(pool.stats().max_float_take < N * DIM);
+}
+
+#[test]
+fn tcp_round_trip_matches_offline_reference() {
+    let engine = QuantEngine::from_config(&ParallelismConfig::default());
+    let (store, adj) = store_fixture(&engine, 2);
+    let (dense, scores) = reference(&engine, &store, &adj);
+    let packed = store.packed_resident_bytes();
+    let cfg = ServeConfig::default(); // port 0 = ephemeral
+    let handle = ServerHandle::start(ServeEngine::new(store, engine), &cfg).unwrap();
+    let addr = handle.addr();
+
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let (dense, scores) = (&dense, &scores);
+            scope.spawn(move || {
+                let mut client = ServeClient::connect(&addr).unwrap();
+                for round in 0..3usize {
+                    let nodes: Vec<usize> = (0..5)
+                        .map(|i| (t * 23 + round * 11 + i * 3) % QUERY_LIMIT)
+                        .collect();
+                    assert_rows(&client.embed(&nodes).unwrap(), dense, &nodes, "tcp embed");
+                    assert_rows(&client.score(&nodes).unwrap(), scores, &nodes, "tcp score");
+                }
+            });
+        }
+    });
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.queries, 24, "4 clients x 3 rounds x 2 queries");
+    assert_eq!(stats.packed_resident_bytes, packed);
+    assert_eq!(stats.f32_bytes, N * DIM * 4);
+    assert!(
+        stats.packed_resident_bytes * 2 < stats.f32_bytes,
+        "INT2 must be < 0.5x f32"
+    );
+    // Remote errors are named and leave the connection usable. (This
+    // rejected query still increments the engine's `queries` counter.)
+    let msg = client.embed(&[N]).unwrap_err().to_string();
+    assert!(msg.contains("serve remote error"), "{msg}");
+    assert!(msg.contains("out of range"), "{msg}");
+    client.shutdown().unwrap();
+    drop(client);
+
+    let (stats, pool) = handle.join();
+    assert_eq!(stats.queries, 25, "24 good queries + 1 rejected");
+    assert!(pool.stats().max_float_take < N * DIM);
+}

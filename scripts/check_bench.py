@@ -56,9 +56,19 @@ REQUIRED_ARM_KEYS = {
 
 # Expected arm groups and dataset-header fields per bench id.
 EXPECTED_GROUPS = {
-    "pipeline": {"table1", "allocation", "partition", "threads", "fused", "ooc"},
+    "pipeline": {"table1", "allocation", "partition", "threads", "fused", "ooc", "serve"},
     "quant": {"codec"},
 }
+
+# Groups added after the committed baseline was last blessed: required
+# in a current run, tolerated as absent from a baseline file until the
+# baseline is re-blessed. Their regression gating is report-only by
+# default regardless (they are not in DEFAULT_GATED_GROUPS).
+POST_BASELINE_GROUPS = {"serve"}
+
+# Extra per-arm keys the serve group must carry (query latency
+# percentiles; throughput rides in the standard rate_per_sec field).
+SERVE_ARM_KEYS = ("p50_us", "p99_us")
 DATASET_KEYS = {
     "pipeline": ("nodes", "edges", "hidden"),
     "quant": ("rows", "cols"),
@@ -74,6 +84,7 @@ GROUP_ANCHORS = {
     "allocation": "fixed int2",
     "partition": "K=1",
     "ooc": "in-ram K=32",
+    "serve": "naive c=8",
 }
 
 DEFAULT_GATED_GROUPS = ["table1", "fused", "threads"]
@@ -101,7 +112,7 @@ def load(path: str) -> dict:
         fail(f"{path} is not valid JSON: {e}")
 
 
-def validate(doc: dict, path: str) -> str:
+def validate(doc: dict, path: str, baseline: bool = False) -> str:
     """Schema-check one trajectory file; returns its bench id."""
     bench = doc.get("bench")
     if bench not in EXPECTED_GROUPS:
@@ -136,9 +147,23 @@ def validate(doc: dict, path: str) -> str:
                 f"{path}: arm {arm['name']!r}: rate {arm['rate_per_sec']} "
                 f"inconsistent with ms_per_epoch {arm['ms_per_epoch']}"
             )
+        if arm["group"] == "serve":
+            for key in SERVE_ARM_KEYS:
+                if not isinstance(arm.get(key), (int, float)) or arm[key] <= 0:
+                    fail(
+                        f"{path}: serve arm {arm['name']!r} needs positive "
+                        f"{key!r}, got {arm.get(key)!r}"
+                    )
+            if arm["p50_us"] > arm["p99_us"]:
+                fail(
+                    f"{path}: serve arm {arm['name']!r}: p50 "
+                    f"{arm['p50_us']} above p99 {arm['p99_us']}"
+                )
 
     groups = {a["group"] for a in arms}
     missing = EXPECTED_GROUPS[bench] - groups
+    if baseline:
+        missing -= POST_BASELINE_GROUPS
     if missing:
         fail(f"{path}: missing arm groups: {sorted(missing)}")
     return bench
@@ -166,6 +191,17 @@ def print_summary(doc: dict, bench: str) -> None:
     if codec:
         best = max(a["speedup_vs_serial"] for a in codec)
         print(f"check_bench: best fused-codec speedup vs two-pass: {best:.2f}x")
+    serve = [a for a in arms if a["group"] == "serve"]
+    for arm in serve:
+        print(
+            f"check_bench: serve '{arm['name']}': p50 {arm['p50_us']:.1f} us, "
+            f"p99 {arm['p99_us']:.1f} us, {arm['rate_per_sec']:.0f} q/s, "
+            f"packed {arm['peak_resident_bytes']} B"
+        )
+    batched = [a for a in serve if a["name"].startswith("batched")]
+    if batched:
+        best = max(a["speedup_vs_serial"] for a in batched)
+        print(f"check_bench: serve batched-over-naive throughput: {best:.2f}x")
 
 
 def compare_to_baseline(cur: dict, base: dict, tolerance: float, groups: list) -> None:
@@ -285,7 +321,7 @@ def main() -> None:
         if bench != "pipeline":
             fail("--baseline comparison is defined for the pipeline bench")
         base = load(args.baseline)
-        if validate(base, args.baseline) != "pipeline":
+        if validate(base, args.baseline, baseline=True) != "pipeline":
             fail(f"{args.baseline} is not a pipeline trajectory")
         compare_to_baseline(
             doc, base, args.tolerance, [g for g in args.groups.split(",") if g]
