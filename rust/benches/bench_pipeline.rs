@@ -372,6 +372,115 @@ fn main() {
         });
     }
 
+    // ---- Chaos-injected distributed training (fault-tolerance cost) ----
+    // The same K=4 / 2-worker run twice: once clean (the anchor), once
+    // with a deterministic chaos drop that kills worker 1 mid-run plus
+    // an elastic restart that rejoins it. The faulted arm must land on
+    // the SAME final state bytes as the clean arm — fault handling is
+    // measured overhead, never a numbers change.
+    {
+        use iexact::checkpoint::state_to_bytes;
+        use iexact::coordinator::dist::chaos::ChaosSchedule;
+        use iexact::coordinator::dist::{
+            run_worker, train_distributed_with, DistHooks, WorkerOptions,
+        };
+        use std::net::TcpListener;
+        let mut ccfg = cfg.clone();
+        ccfg.eval_every = 2;
+        ccfg.partition = iexact::config::PartitionConfig {
+            num_partitions: 4,
+            halo_hops: 0,
+            cache_bits: 2,
+            ..iexact::config::PartitionConfig::default()
+        };
+        ccfg.distributed.workers = 2;
+        let quant = iexact::config::QuantConfig::int2_blockwise(8);
+        println!("\n# chaos-injected distributed training (drop + elastic restart)");
+        println!(
+            "{:<24} {:>14} {:>12} {:>10} {:>10}",
+            "mode", "ms/epoch", "epochs/s", "deaths", "restarts"
+        );
+        let mut clean_epoch = 0.0f64;
+        let mut clean_state: Vec<u8> = Vec::new();
+        for (name, faulted) in [("clean K=4 w=2", false), ("faults K=4 w=2", true)] {
+            let mut deaths = 0u64;
+            let mut restarts = 0u64;
+            let mut state_bytes: Vec<u8> = Vec::new();
+            let (_, med, _) = measure(1, 3, || {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap().to_string();
+                let schedule = faulted.then(|| ChaosSchedule::parse("1:6:drop").unwrap());
+                for rank in 0..2u32 {
+                    let addr = addr.clone();
+                    let opts = WorkerOptions {
+                        chaos: if rank == 1 { schedule.clone() } else { None },
+                        ..Default::default()
+                    };
+                    // Detached: a chaos-killed worker exits on its own,
+                    // survivors exit on Shutdown.
+                    std::thread::spawn(move || {
+                        let _ = run_worker(&addr, rank, &opts);
+                    });
+                }
+                let out = {
+                    let hooks = DistHooks {
+                        respawn: Some(Box::new(|rank| {
+                            let addr = addr.clone();
+                            std::thread::spawn(move || {
+                                let _ = run_worker(
+                                    &addr,
+                                    rank,
+                                    &WorkerOptions {
+                                        rejoin: true,
+                                        ..Default::default()
+                                    },
+                                );
+                            });
+                            Ok(())
+                        })),
+                    };
+                    train_distributed_with(&listener, &spec, 42, &quant, &ccfg, 0, None, hooks)
+                        .unwrap()
+                };
+                deaths = out.faults.deaths;
+                restarts = out.faults.restarts;
+                state_bytes = state_to_bytes(&out.state);
+                std::hint::black_box(out);
+            });
+            if faulted {
+                assert!(deaths >= 1, "chaos drop never killed worker 1");
+                assert!(restarts >= 1, "dead worker was never restarted");
+                assert_eq!(
+                    clean_state, state_bytes,
+                    "faulted run's final state diverged from the clean run"
+                );
+            } else {
+                clean_state = state_bytes.clone();
+            }
+            let per_epoch = med / ccfg.epochs as f64;
+            if !faulted {
+                clean_epoch = per_epoch;
+            }
+            println!(
+                "{:<24} {:>14.2} {:>12.2} {:>10} {:>10}",
+                name,
+                per_epoch * 1e3,
+                1.0 / per_epoch,
+                deaths,
+                restarts
+            );
+            arms.push(Arm {
+                group: "chaos",
+                name: name.to_string(),
+                ms_per_epoch: per_epoch * 1e3,
+                rate_per_sec: 1.0 / per_epoch,
+                peak_resident_bytes: 0,
+                speedup_vs_serial: if faulted { clean_epoch / per_epoch } else { 1.0 },
+                extra: vec![("deaths", deaths as f64), ("restarts", restarts as f64)],
+            });
+        }
+    }
+
     // ---- Shared-runtime thread scaling, end to end ----
     // Same training run, same numbers (bit-identical by construction) —
     // only the wall clock may differ. The whole step rides the
@@ -585,7 +694,7 @@ fn main() {
                     .collect()
             });
             let wall = start.elapsed().as_secs_f64();
-            let (serve_engine, _pool) = queue.shutdown();
+            let (serve_engine, _pool) = queue.shutdown().unwrap();
             let stats = serve_engine.stats();
             assert_eq!(stats.queries as usize, CLIENTS * ROUNDS);
             lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());

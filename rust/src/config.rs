@@ -650,6 +650,124 @@ impl DistributedConfig {
     }
 }
 
+/// Fault-tolerance knobs for the distributed runtime — the
+/// `[fault_tolerance]` config section.
+///
+/// Governs the leader's supervision loop
+/// ([`crate::coordinator::dist::train_distributed`]): every socket read
+/// and write carries a deadline, missed heartbeats mark a worker
+/// *suspect* and retry with capped exponential backoff, and a worker
+/// declared dead may be restarted and re-`Setup` mid-run (bounded by
+/// [`max_restarts`](Self::max_restarts)). The deterministic chaos layer
+/// ([`crate::coordinator::dist::chaos`]) is configured here too (or via
+/// the `IEXACT_CHAOS` env var, which wins).
+///
+/// ```toml
+/// [fault_tolerance]
+/// io_timeout_ms = 30000        # per-read/write deadline (0 = block forever)
+/// heartbeat_every_epochs = 1   # heartbeat cadence (0 = off)
+/// max_retries = 2              # suspect-read retries before declaring dead
+/// backoff_base_ms = 50         # first retry backoff
+/// backoff_cap_ms = 2000        # backoff ceiling
+/// max_restarts = 2             # total worker restarts per run
+/// # chaos = "1:4:drop;0:6:delay:250"   # deterministic fault schedule
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultToleranceConfig {
+    /// Per-operation socket deadline in milliseconds for leader-side
+    /// reads/writes (and the worker's `Setup` wait). `0` disables
+    /// deadlines — every read blocks forever, as before PR 10.
+    pub io_timeout_ms: u64,
+    /// Leader pings every worker with `Heartbeat`/`HeartbeatAck` every
+    /// this many epochs before dispatching work. `0` disables
+    /// heartbeats.
+    pub heartbeat_every_epochs: usize,
+    /// How many times a timed-out (suspect) read or heartbeat is
+    /// retried before the worker is declared dead.
+    pub max_retries: usize,
+    /// First retry waits this long; each further retry doubles it.
+    pub backoff_base_ms: u64,
+    /// Exponential backoff ceiling.
+    pub backoff_cap_ms: u64,
+    /// Total worker restarts allowed per run (across all ranks). A
+    /// crashed worker beyond this budget stays dead and its partitions
+    /// are reassigned to survivors.
+    pub max_restarts: usize,
+    /// Deterministic chaos schedule (`rank:index:kind[:ms]` events
+    /// joined by `;` — see [`crate::coordinator::dist::chaos`]).
+    /// Injected into spawned workers; the `IEXACT_CHAOS` env var
+    /// overrides it.
+    pub chaos: Option<String>,
+}
+
+impl Default for FaultToleranceConfig {
+    fn default() -> Self {
+        FaultToleranceConfig {
+            io_timeout_ms: 30_000,
+            heartbeat_every_epochs: 1,
+            max_retries: 2,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            max_restarts: 2,
+            chaos: None,
+        }
+    }
+}
+
+impl FaultToleranceConfig {
+    /// A deadline above ten minutes is certainly a typo — the whole
+    /// point of the section is that nothing blocks unboundedly.
+    pub const MAX_IO_TIMEOUT_MS: u64 = 600_000;
+    /// Retry budgets beyond this only delay the inevitable declaration.
+    pub const MAX_RETRIES: usize = 16;
+    /// Restart budgets beyond this mask a systematically crashing
+    /// worker instead of surfacing it.
+    pub const MAX_RESTARTS: usize = 16;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.io_timeout_ms > Self::MAX_IO_TIMEOUT_MS {
+            return Err(Error::Config(format!(
+                "fault_tolerance.io_timeout_ms must be <= {}, got {}",
+                Self::MAX_IO_TIMEOUT_MS,
+                self.io_timeout_ms
+            )));
+        }
+        if self.max_retries > Self::MAX_RETRIES {
+            return Err(Error::Config(format!(
+                "fault_tolerance.max_retries must be <= {}, got {}",
+                Self::MAX_RETRIES,
+                self.max_retries
+            )));
+        }
+        if self.max_restarts > Self::MAX_RESTARTS {
+            return Err(Error::Config(format!(
+                "fault_tolerance.max_restarts must be <= {}, got {}",
+                Self::MAX_RESTARTS,
+                self.max_restarts
+            )));
+        }
+        if self.backoff_base_ms == 0 {
+            return Err(Error::Config(
+                "fault_tolerance.backoff_base_ms must be >= 1".into(),
+            ));
+        }
+        if self.backoff_cap_ms < self.backoff_base_ms {
+            return Err(Error::Config(format!(
+                "fault_tolerance.backoff_cap_ms ({}) must be >= backoff_base_ms ({})",
+                self.backoff_cap_ms, self.backoff_base_ms
+            )));
+        }
+        if let Some(spec) = &self.chaos {
+            // Parse eagerly so a typo'd schedule fails at config load
+            // with a key-pathed message, not mid-run inside a worker.
+            crate::coordinator::dist::chaos::ChaosSchedule::parse(spec).map_err(|e| {
+                Error::Config(format!("fault_tolerance.chaos: {e}"))
+            })?;
+        }
+        Ok(())
+    }
+}
+
 /// Compressed-embedding serving knobs — the `[serve]` config section.
 ///
 /// `iexact serve` loads a trained checkpoint, quantizes the final-layer
@@ -683,6 +801,16 @@ pub struct ServeConfig {
     /// the embedding store at this bit width at startup. `0` (the
     /// default) keeps the width the store was quantized at.
     pub serve_bits: u32,
+    /// Per-connection read deadline in milliseconds: a client that
+    /// stalls mid-request longer than this is dropped (counted in
+    /// [`ServeStats::timed_out_connections`](crate::serve::ServeStats)).
+    /// `0` disables the deadline.
+    pub read_timeout_ms: u64,
+    /// Concurrent-connection cap: connections beyond it are shed with a
+    /// named `Error` reply instead of queueing (counted in
+    /// [`ServeStats::shed_connections`](crate::serve::ServeStats)).
+    /// `0` disables the cap.
+    pub max_connections: usize,
 }
 
 impl Default for ServeConfig {
@@ -692,6 +820,8 @@ impl Default for ServeConfig {
             batch_window_us: 200,
             max_batch: 64,
             serve_bits: 0,
+            read_timeout_ms: 30_000,
+            max_connections: 256,
         }
     }
 }
@@ -703,6 +833,9 @@ impl ServeConfig {
     /// Batches beyond this stop improving decode sharing and only grow
     /// tail latency.
     pub const MAX_BATCH: usize = 4096;
+    /// More simultaneous localhost connections than this is certainly a
+    /// typo (each one pins a handler thread).
+    pub const MAX_CONNECTIONS: usize = 4096;
 
     pub fn validate(&self) -> Result<()> {
         if self.batch_window_us > Self::MAX_BATCH_WINDOW_US {
@@ -724,6 +857,20 @@ impl ServeConfig {
                 "serve.serve_bits must be 0 (keep training width) or one of \
                  1/2/4/8, got {}",
                 self.serve_bits
+            )));
+        }
+        if self.read_timeout_ms > FaultToleranceConfig::MAX_IO_TIMEOUT_MS {
+            return Err(Error::Config(format!(
+                "serve.read_timeout_ms must be <= {}, got {}",
+                FaultToleranceConfig::MAX_IO_TIMEOUT_MS,
+                self.read_timeout_ms
+            )));
+        }
+        if self.max_connections > Self::MAX_CONNECTIONS {
+            return Err(Error::Config(format!(
+                "serve.max_connections must be <= {}, got {}",
+                Self::MAX_CONNECTIONS,
+                self.max_connections
             )));
         }
         Ok(())
@@ -753,6 +900,9 @@ pub struct TrainConfig {
     /// Multi-process partition-parallel training (`[distributed]`;
     /// default: off).
     pub distributed: DistributedConfig,
+    /// Deadlines, heartbeats, restart budget and chaos injection for
+    /// the distributed runtime (`[fault_tolerance]`).
+    pub fault_tolerance: FaultToleranceConfig,
     /// Compressed-embedding serving (`[serve]`; used by `iexact serve`).
     pub serve: ServeConfig,
 }
@@ -773,6 +923,7 @@ impl Default for TrainConfig {
             partition: PartitionConfig::default(),
             out_of_core: OutOfCoreConfig::default(),
             distributed: DistributedConfig::default(),
+            fault_tolerance: FaultToleranceConfig::default(),
             serve: ServeConfig::default(),
         }
     }
@@ -799,6 +950,7 @@ impl TrainConfig {
         self.partition.validate()?;
         self.out_of_core.validate()?;
         self.distributed.validate()?;
+        self.fault_tolerance.validate()?;
         self.serve.validate()?;
         if self.distributed.enabled() {
             // Every worker must own at least one partition — the leader
@@ -1182,6 +1334,68 @@ impl ExperimentConfig {
             train.distributed.checkpoint_every_epochs = e as usize;
         }
 
+        // [fault_tolerance] — distributed-runtime deadlines, heartbeats,
+        // restart budget and chaos injection. Negative values are
+        // rejected before the unsigned casts (cf. the sections above).
+        if let Some(ms) = t.get_int("fault_tolerance.io_timeout_ms") {
+            if ms < 0 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.io_timeout_ms must be >= 0, got {ms}"
+                )));
+            }
+            train.fault_tolerance.io_timeout_ms = ms as u64;
+        }
+        if let Some(e) = t.get_int("fault_tolerance.heartbeat_every_epochs") {
+            if e < 0 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.heartbeat_every_epochs must be >= 0, got {e}"
+                )));
+            }
+            train.fault_tolerance.heartbeat_every_epochs = e as usize;
+        }
+        if let Some(r) = t.get_int("fault_tolerance.max_retries") {
+            if r < 0 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.max_retries must be >= 0, got {r}"
+                )));
+            }
+            train.fault_tolerance.max_retries = r as usize;
+        }
+        if let Some(ms) = t.get_int("fault_tolerance.backoff_base_ms") {
+            if ms < 1 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.backoff_base_ms must be >= 1, got {ms}"
+                )));
+            }
+            train.fault_tolerance.backoff_base_ms = ms as u64;
+        }
+        if let Some(ms) = t.get_int("fault_tolerance.backoff_cap_ms") {
+            if ms < 1 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.backoff_cap_ms must be >= 1, got {ms}"
+                )));
+            }
+            train.fault_tolerance.backoff_cap_ms = ms as u64;
+        }
+        if let Some(r) = t.get_int("fault_tolerance.max_restarts") {
+            if r < 0 {
+                return Err(Error::Config(format!(
+                    "fault_tolerance.max_restarts must be >= 0, got {r}"
+                )));
+            }
+            train.fault_tolerance.max_restarts = r as usize;
+        }
+        if let Some(s) = t.get_str("fault_tolerance.chaos") {
+            if s.is_empty() {
+                return Err(Error::Config(
+                    "fault_tolerance.chaos must be a non-empty schedule".into(),
+                ));
+            }
+            // Spelling is vetted by `FaultToleranceConfig::validate`
+            // (run below), so raw passthrough keeps the error key-pathed.
+            train.fault_tolerance.chaos = Some(s.to_string());
+        }
+
         // [serve] — compressed-embedding serving. Negative values are
         // rejected before the unsigned casts (cf. the sections above).
         if let Some(p) = t.get_int("serve.port") {
@@ -1215,6 +1429,22 @@ impl ExperimentConfig {
                 )));
             }
             train.serve.serve_bits = b as u32;
+        }
+        if let Some(ms) = t.get_int("serve.read_timeout_ms") {
+            if ms < 0 {
+                return Err(Error::Config(format!(
+                    "serve.read_timeout_ms must be >= 0, got {ms}"
+                )));
+            }
+            train.serve.read_timeout_ms = ms as u64;
+        }
+        if let Some(c) = t.get_int("serve.max_connections") {
+            if c < 0 {
+                return Err(Error::Config(format!(
+                    "serve.max_connections must be >= 0, got {c}"
+                )));
+            }
+            train.serve.max_connections = c as usize;
         }
 
         let cfg = ExperimentConfig {
@@ -1616,7 +1846,8 @@ seeds = [0, 1]
     #[test]
     fn toml_serve_section() {
         let cfg = ExperimentConfig::from_toml(
-            "[serve]\nport = 4800\nbatch_window_us = 500\nmax_batch = 32\nserve_bits = 2\n",
+            "[serve]\nport = 4800\nbatch_window_us = 500\nmax_batch = 32\nserve_bits = 2\n\
+             read_timeout_ms = 1500\nmax_connections = 8\n",
         )
         .unwrap();
         assert_eq!(
@@ -1626,6 +1857,8 @@ seeds = [0, 1]
                 batch_window_us: 500,
                 max_batch: 32,
                 serve_bits: 2,
+                read_timeout_ms: 1500,
+                max_connections: 8,
             }
         );
         // Defaults when the section is absent: ephemeral port, keep the
@@ -1649,6 +1882,10 @@ seeds = [0, 1]
             ("[serve]\nmax_batch = 5000\n", "serve.max_batch"),
             ("[serve]\nserve_bits = 3\n", "serve.serve_bits"),
             ("[serve]\nserve_bits = -2\n", "serve.serve_bits"),
+            ("[serve]\nread_timeout_ms = -1\n", "serve.read_timeout_ms"),
+            ("[serve]\nread_timeout_ms = 600001\n", "serve.read_timeout_ms"),
+            ("[serve]\nmax_connections = -1\n", "serve.max_connections"),
+            ("[serve]\nmax_connections = 5000\n", "serve.max_connections"),
         ];
         for (toml, key) in cases {
             let e = err(toml);
@@ -1665,6 +1902,87 @@ seeds = [0, 1]
             ..ServeConfig::default()
         };
         assert!(s.validate().unwrap_err().to_string().contains("serve.serve_bits"));
+    }
+
+    #[test]
+    fn toml_fault_tolerance_section() {
+        let cfg = ExperimentConfig::from_toml(
+            "[fault_tolerance]\nio_timeout_ms = 5000\nheartbeat_every_epochs = 2\n\
+             max_retries = 3\nbackoff_base_ms = 10\nbackoff_cap_ms = 100\nmax_restarts = 1\n\
+             chaos = \"1:4:drop;0:6:delay:250\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.fault_tolerance,
+            FaultToleranceConfig {
+                io_timeout_ms: 5000,
+                heartbeat_every_epochs: 2,
+                max_retries: 3,
+                backoff_base_ms: 10,
+                backoff_cap_ms: 100,
+                max_restarts: 1,
+                chaos: Some("1:4:drop;0:6:delay:250".into()),
+            }
+        );
+        // Defaults when the section is absent: 30s deadlines, heartbeat
+        // every epoch, 2 restarts, no chaos.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.train.fault_tolerance, FaultToleranceConfig::default());
+        assert!(cfg.train.fault_tolerance.chaos.is_none());
+    }
+
+    #[test]
+    fn fault_tolerance_validation_reports_key_paths() {
+        let err = |toml: &str| -> String {
+            ExperimentConfig::from_toml(toml).unwrap_err().to_string()
+        };
+        let cases: &[(&str, &str)] = &[
+            (
+                "[fault_tolerance]\nio_timeout_ms = -1\n",
+                "fault_tolerance.io_timeout_ms",
+            ),
+            (
+                "[fault_tolerance]\nio_timeout_ms = 600001\n",
+                "fault_tolerance.io_timeout_ms",
+            ),
+            (
+                "[fault_tolerance]\nmax_retries = 17\n",
+                "fault_tolerance.max_retries",
+            ),
+            (
+                "[fault_tolerance]\nmax_restarts = 17\n",
+                "fault_tolerance.max_restarts",
+            ),
+            (
+                "[fault_tolerance]\nbackoff_base_ms = 0\n",
+                "fault_tolerance.backoff_base_ms",
+            ),
+            // Cap below base: the backoff would shrink, not grow.
+            (
+                "[fault_tolerance]\nbackoff_base_ms = 500\nbackoff_cap_ms = 100\n",
+                "fault_tolerance.backoff_cap_ms",
+            ),
+            // A typo'd chaos schedule fails at config load, key-pathed.
+            (
+                "[fault_tolerance]\nchaos = \"1:4:explode\"\n",
+                "fault_tolerance.chaos",
+            ),
+            ("[fault_tolerance]\nchaos = \"\"\n", "fault_tolerance.chaos"),
+        ];
+        for (toml, key) in cases {
+            let e = err(toml);
+            assert!(e.contains(key), "error for `{toml}` missing '{key}': {e}");
+        }
+        // Struct-level validate mirrors the TOML layer.
+        let ft = FaultToleranceConfig {
+            max_restarts: FaultToleranceConfig::MAX_RESTARTS + 1,
+            ..FaultToleranceConfig::default()
+        };
+        assert!(ft
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("fault_tolerance.max_restarts"));
     }
 
     #[test]

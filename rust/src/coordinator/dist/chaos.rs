@@ -1,0 +1,274 @@
+//! Deterministic chaos injection for the distributed runtime.
+//!
+//! A [`ChaosSchedule`] is a finite map from `(rank, message-index)` to
+//! a [`Fault`], applied to that worker's **outgoing** frames (message
+//! index 0 is its `Hello`/`Rejoin`, 1 its `Ready`, then one per
+//! `StepResult`/`EvalResult`/heartbeat ack). Because every fault is
+//! addressed, a chaos run is exactly reproducible: the same schedule
+//! against the same config perturbs the same bytes of the same
+//! messages, so `tests/chaos_dist.rs` can assert the strong property —
+//! the run either completes with weights bit-identical to the
+//! undisturbed run, or fails with a *named* error. Never a hang.
+//!
+//! Fault semantics (implemented in the frame layer,
+//! [`FrameConn::write_frame`](super::frame::FrameConn)):
+//!
+//! * `drop` — the frame is never sent and the socket is severed: a
+//!   simulated crash immediately before the send. (Dropping a single
+//!   frame while keeping the connection would desync the epoch
+//!   protocol rather than model any real failure.)
+//! * `delay:MS` — the frame is sent after `MS` milliseconds: a hung
+//!   but alive worker, exercising the leader's suspect/retry path.
+//! * `trunc` — half the frame is sent, then the socket is severed: a
+//!   crash mid-write, exercising the leader's short-read handling.
+//! * `flip` — one payload bit is flipped and the frame sent normally:
+//!   wire corruption, which the frame checksum must turn into a named
+//!   protocol error.
+//!
+//! Schedules come from three places, in precedence order: the
+//! `IEXACT_CHAOS` env var (wins, so a whole leader+workers process
+//! tree can be armed externally), the `[fault_tolerance] chaos` config
+//! key, or a [`WorkerOptions`](super::WorkerOptions) field for
+//! in-process test workers.
+//!
+//! The spec grammar is `rank:index:kind[:ms]` events joined by `;`:
+//!
+//! ```text
+//! IEXACT_CHAOS="1:4:drop;0:6:delay:250;1:3:trunc;0:5:flip"
+//! ```
+
+use crate::rngs::Pcg64;
+use std::collections::BTreeMap;
+
+/// Env var holding a chaos spec; overrides the config key.
+pub const CHAOS_ENV: &str = "IEXACT_CHAOS";
+
+/// Marker prefix for errors raised *by* an injected fault inside the
+/// faulting worker (the peer sees a normal dead-peer error instead).
+const KILL_MARKER: &str = "chaos fault injected";
+
+/// One injected fault (see the module docs for wire semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Sever the connection instead of sending: a crash before send.
+    Drop,
+    /// Send the frame late: a hung-but-alive worker.
+    Delay {
+        /// How long the frame is held back.
+        ms: u64,
+    },
+    /// Send half the frame, then sever: a crash mid-write.
+    Truncate,
+    /// Flip one payload bit and send: wire corruption.
+    BitFlip,
+}
+
+impl Fault {
+    fn spec_kind(&self) -> &'static str {
+        match self {
+            Fault::Drop => "drop",
+            Fault::Delay { .. } => "delay",
+            Fault::Truncate => "trunc",
+            Fault::BitFlip => "flip",
+        }
+    }
+}
+
+/// A deterministic fault schedule addressed by `(rank, message-index)`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosSchedule {
+    events: BTreeMap<(u32, u64), Fault>,
+}
+
+impl ChaosSchedule {
+    /// Parse the `rank:index:kind[:ms]` grammar. Errors are plain
+    /// strings so callers can prepend their own key path.
+    pub fn parse(spec: &str) -> std::result::Result<Self, String> {
+        let mut events = BTreeMap::new();
+        for ev in spec.split(';').filter(|e| !e.trim().is_empty()) {
+            let parts: Vec<&str> = ev.trim().split(':').collect();
+            if parts.len() < 3 {
+                return Err(format!(
+                    "bad chaos event '{ev}': expected rank:index:kind[:ms]"
+                ));
+            }
+            let rank: u32 = parts[0]
+                .parse()
+                .map_err(|_| format!("bad chaos event '{ev}': rank '{}'", parts[0]))?;
+            let index: u64 = parts[1]
+                .parse()
+                .map_err(|_| format!("bad chaos event '{ev}': index '{}'", parts[1]))?;
+            let fault = match (parts[2], parts.len()) {
+                ("drop", 3) => Fault::Drop,
+                ("trunc", 3) => Fault::Truncate,
+                ("flip", 3) => Fault::BitFlip,
+                ("delay", 4) => Fault::Delay {
+                    ms: parts[3].parse().map_err(|_| {
+                        format!("bad chaos event '{ev}': delay ms '{}'", parts[3])
+                    })?,
+                },
+                ("delay", _) => {
+                    return Err(format!("bad chaos event '{ev}': delay needs :ms"));
+                }
+                (kind, _) => {
+                    return Err(format!(
+                        "bad chaos event '{ev}': unknown kind '{kind}' \
+                         (drop/delay/trunc/flip)"
+                    ));
+                }
+            };
+            if events.insert((rank, index), fault).is_some() {
+                return Err(format!(
+                    "duplicate chaos event for rank {rank} index {index}"
+                ));
+            }
+        }
+        Ok(ChaosSchedule { events })
+    }
+
+    /// Serialize back to the spec grammar (round-trips through
+    /// [`parse`](Self::parse); used to arm child processes via env).
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|((rank, index), fault)| match fault {
+                Fault::Delay { ms } => format!("{rank}:{index}:delay:{ms}"),
+                f => format!("{rank}:{index}:{}", f.spec_kind()),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// A seeded pseudo-random schedule: `events` faults drawn from
+    /// `kinds`, spread over `ranks` workers at message indices in
+    /// `2..2 + index_span` (0/1 are the handshake — faulting those just
+    /// aborts the run before it starts, which is a different test).
+    pub fn seeded(seed: u64, ranks: u32, events: usize, index_span: u64, kinds: &[Fault]) -> Self {
+        assert!(ranks > 0 && !kinds.is_empty() && index_span > 0);
+        let mut rng = Pcg64::new(seed ^ 0xc4a0_5000);
+        let mut out = BTreeMap::new();
+        let mut attempts = 0;
+        while out.len() < events && attempts < events * 16 {
+            attempts += 1;
+            let rank = (rng.next_u64() % ranks as u64) as u32;
+            let index = 2 + rng.next_u64() % index_span;
+            let kind = kinds[(rng.next_u64() % kinds.len() as u64) as usize];
+            let fault = match kind {
+                Fault::Delay { .. } => Fault::Delay {
+                    ms: 50 + rng.next_u64() % 250,
+                },
+                f => f,
+            };
+            out.entry((rank, index)).or_insert(fault);
+        }
+        ChaosSchedule { events: out }
+    }
+
+    /// Read the schedule from [`CHAOS_ENV`], if set.
+    pub fn from_env() -> std::result::Result<Option<Self>, String> {
+        match std::env::var(CHAOS_ENV) {
+            Ok(spec) if !spec.is_empty() => Self::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The fault scheduled for `rank`'s `index`-th outgoing frame.
+    pub fn get(&self, rank: u32, index: u64) -> Option<Fault> {
+        self.events.get(&(rank, index)).copied()
+    }
+}
+
+/// A schedule bound to one worker's rank, attached to its
+/// [`FrameConn`](super::frame::FrameConn).
+#[derive(Debug, Clone)]
+pub(crate) struct ChaosState {
+    rank: u32,
+    schedule: ChaosSchedule,
+}
+
+impl ChaosState {
+    pub(crate) fn new(rank: u32, schedule: ChaosSchedule) -> Self {
+        ChaosState { rank, schedule }
+    }
+
+    pub(crate) fn fault_at(&self, index: u64) -> Option<Fault> {
+        self.schedule.get(self.rank, index)
+    }
+}
+
+/// The error an injected `drop`/`trunc` fault raises inside the
+/// faulting worker; [`is_chaos_kill`] recognizes it so the worker can
+/// exit as cleanly as a real crash would.
+pub(crate) fn kill_error(kind: &str, index: u64) -> crate::Error {
+    crate::Error::Runtime(format!("{KILL_MARKER}: {kind} at frame {index}"))
+}
+
+/// Whether `e` is an injected-crash marker from [`kill_error`].
+pub fn is_chaos_kill(e: &crate::Error) -> bool {
+    matches!(e, crate::Error::Runtime(m) if m.starts_with(KILL_MARKER))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips() {
+        let spec = "0:2:drop;0:5:flip;1:3:delay:250;1:4:trunc";
+        let sched = ChaosSchedule::parse(spec).unwrap();
+        assert_eq!(sched.len(), 4);
+        assert_eq!(sched.get(1, 3), Some(Fault::Delay { ms: 250 }));
+        assert_eq!(sched.get(0, 2), Some(Fault::Drop));
+        assert_eq!(sched.get(0, 3), None);
+        assert_eq!(sched.to_spec(), spec);
+        assert_eq!(ChaosSchedule::parse(&sched.to_spec()).unwrap(), sched);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_offending_event() {
+        for (spec, needle) in [
+            ("1:2", "rank:index:kind"),
+            ("x:2:drop", "rank 'x'"),
+            ("1:y:drop", "index 'y'"),
+            ("1:2:explode", "unknown kind 'explode'"),
+            ("1:2:delay", "delay needs :ms"),
+            ("1:2:delay:zz", "delay ms 'zz'"),
+            ("1:2:drop;1:2:flip", "duplicate"),
+        ] {
+            let err = ChaosSchedule::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "spec '{spec}': {err}");
+        }
+    }
+
+    #[test]
+    fn seeded_schedules_are_deterministic_and_skip_the_handshake() {
+        let kinds = [Fault::Drop, Fault::Delay { ms: 0 }, Fault::Truncate];
+        let a = ChaosSchedule::seeded(7, 2, 5, 10, &kinds);
+        let b = ChaosSchedule::seeded(7, 2, 5, 10, &kinds);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        for ((rank, index), _) in &a.events {
+            assert!(*rank < 2);
+            assert!((2..12).contains(index), "index {index} hits the handshake");
+        }
+        // A different seed draws a different schedule.
+        let c = ChaosSchedule::seeded(8, 2, 5, 10, &kinds);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kill_marker_is_recognizable() {
+        let e = kill_error("drop", 4);
+        assert!(is_chaos_kill(&e));
+        assert!(e.to_string().contains("drop at frame 4"));
+        assert!(!is_chaos_kill(&crate::Error::Runtime("other".into())));
+    }
+}

@@ -12,19 +12,36 @@
 //! checksum 8 B  u64 LE FNV-1a over everything above
 //! ```
 //!
-//! The functions are generic over `io::Read`/`io::Write` so the
+//! The free functions are generic over `io::Read`/`io::Write` so the
 //! corruption tests drive them through in-memory cursors, and every
 //! malformed-frame path returns a *named* protocol error
 //! (`runtime error: dist protocol: ...`) rather than a bare I/O error —
-//! a garbage peer and a dead peer are different diagnoses.
+//! a garbage peer and a dead peer are different diagnoses. A third
+//! diagnosis joined in PR 10: an expired socket deadline surfaces as
+//! [`Error::Timeout`], distinct from dead-peer `Io`, because a *suspect*
+//! peer may still recover.
+//!
+//! [`FrameConn`] wraps a `TcpStream` with per-operation deadlines and a
+//! **resumable** frame reader: a deadline that expires mid-frame leaves
+//! the partially-read bytes buffered, so a retried read continues the
+//! same frame instead of desyncing the stream (a plain `read_exact`
+//! would silently discard the prefix it already consumed). It is also
+//! the attachment point for the deterministic chaos layer
+//! ([`super::chaos`]), which perturbs outgoing frames by message index.
 
+use super::chaos::{ChaosState, Fault};
 use crate::checkpoint::fnv1a;
 use crate::{Error, Result};
 use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
 
 pub(crate) const FRAME_MAGIC: &[u8; 8] = b"IEXADIST";
-pub(crate) const PROTO_VERSION: u32 = 1;
+pub(crate) const PROTO_VERSION: u32 = 2;
 pub(crate) const ENDIAN_TAG: u32 = 0x0102_0304;
+
+const HEADER_LEN: usize = 24;
+const TAIL_LEN: usize = 8;
 
 /// Frames above this are certainly a protocol desync, not a real
 /// message — reject before allocating.
@@ -34,9 +51,23 @@ fn proto_err(msg: impl std::fmt::Display) -> Error {
     Error::Runtime(format!("dist protocol: {msg}"))
 }
 
-/// Write one frame around `payload`.
-pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    let mut buf: Vec<u8> = Vec::with_capacity(32 + payload.len());
+/// Map an I/O failure to the right diagnosis: an expired socket
+/// deadline (`WouldBlock`/`TimedOut`, platform-dependent) becomes a
+/// named [`Error::Timeout`] — the peer is *suspect*, not dead — and
+/// everything else stays a dead-peer [`Error::Io`].
+fn classify_io(e: std::io::Error, what: &str) -> Error {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            Error::Timeout(format!("{what} deadline expired"))
+        }
+        _ => Error::Io(e),
+    }
+}
+
+/// Serialize one frame around `payload` (header + payload + checksum).
+fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::with_capacity(HEADER_LEN + payload.len() + TAIL_LEN);
     buf.extend_from_slice(FRAME_MAGIC);
     buf.extend_from_slice(&PROTO_VERSION.to_le_bytes());
     buf.extend_from_slice(&ENDIAN_TAG.to_le_bytes());
@@ -44,18 +75,11 @@ pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
     buf.extend_from_slice(payload);
     let checksum = fnv1a(&buf);
     buf.extend_from_slice(&checksum.to_le_bytes());
-    w.write_all(&buf)?;
-    w.flush()?;
-    Ok(())
+    buf
 }
 
-/// Read one frame, validating magic, version, endianness tag, length
-/// bound and checksum; returns the payload. Short reads surface as the
-/// underlying `io error` (a closed socket is how a dead worker is
-/// detected), every other mismatch as a named `dist protocol` error.
-pub(crate) fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
-    let mut head = [0u8; 24];
-    r.read_exact(&mut head)?;
+/// Validate a frame header, returning the payload length.
+fn parse_header(head: &[u8; HEADER_LEN]) -> Result<usize> {
     if &head[..8] != FRAME_MAGIC {
         return Err(proto_err("bad frame magic (not an iexact dist peer?)"));
     }
@@ -76,26 +100,208 @@ pub(crate) fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     if len > MAX_PAYLOAD {
         return Err(proto_err(format!("frame length {len} exceeds {MAX_PAYLOAD}")));
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
-    let mut tail = [0u8; 8];
-    r.read_exact(&mut tail)?;
-    let stored = u64::from_le_bytes(tail);
-    let mut sum = fnv1a(&head);
-    for &b in &payload {
+    Ok(len as usize)
+}
+
+/// Verify the trailing FNV-1a checksum of `head + payload`.
+fn check_checksum(head: &[u8; HEADER_LEN], payload: &[u8], stored: u64) -> Result<()> {
+    let mut sum = fnv1a(head);
+    for &b in payload {
         sum ^= b as u64;
         sum = sum.wrapping_mul(0x100_0000_01b3);
     }
     if sum != stored {
         return Err(proto_err("frame checksum mismatch"));
     }
+    Ok(())
+}
+
+/// Write one frame around `payload`.
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    let buf = encode_frame(payload);
+    w.write_all(&buf).map_err(|e| classify_io(e, "frame write"))?;
+    w.flush().map_err(|e| classify_io(e, "frame flush"))?;
+    Ok(())
+}
+
+/// Read one frame, validating magic, version, endianness tag, length
+/// bound and checksum; returns the payload. Short reads surface as the
+/// underlying `io error` (a closed socket is how a dead worker is
+/// detected), an expired deadline as `Error::Timeout`, and every other
+/// mismatch as a named `dist protocol` error.
+///
+/// NOT deadline-resumable: a timeout mid-frame leaves the stream
+/// desynced. Peers with a retry budget must use [`FrameConn`].
+pub(crate) fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head).map_err(|e| classify_io(e, "frame read"))?;
+    let len = parse_header(&head)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| classify_io(e, "frame read"))?;
+    let mut tail = [0u8; TAIL_LEN];
+    r.read_exact(&mut tail).map_err(|e| classify_io(e, "frame read"))?;
+    check_checksum(&head, &payload, u64::from_le_bytes(tail))?;
     Ok(payload)
+}
+
+/// A framed TCP connection with per-operation deadlines, a resumable
+/// reader, and an optional chaos shim on outgoing frames.
+///
+/// Reads accumulate into an internal buffer capped at the current
+/// frame's exact length (they never consume bytes of the next frame),
+/// so an [`Error::Timeout`] from [`read_frame`](Self::read_frame) can
+/// be retried and the read resumes where it stopped. Writes are *not*
+/// retryable after a timeout — a partial frame already left the socket
+/// — so callers must treat a write timeout as a dead peer.
+pub(crate) struct FrameConn {
+    stream: TcpStream,
+    label: String,
+    /// Partially-read bytes of the in-flight frame.
+    rbuf: Vec<u8>,
+    /// Total frame size (header + payload + tail) once the header has
+    /// been parsed; `None` while still reading the header.
+    want: Option<usize>,
+    /// Outgoing message index (frames written), consumed by the chaos
+    /// schedule.
+    frames_written: u64,
+    chaos: Option<ChaosState>,
+}
+
+impl FrameConn {
+    /// Wrap `stream`; `label` names the peer in timeout messages.
+    pub(crate) fn new(stream: TcpStream, label: impl Into<String>) -> Self {
+        FrameConn {
+            stream,
+            label: label.into(),
+            rbuf: Vec::new(),
+            want: None,
+            frames_written: 0,
+            chaos: None,
+        }
+    }
+
+    /// Set both socket deadlines; `0` blocks forever (the pre-PR-10
+    /// behavior).
+    pub(crate) fn set_deadline_ms(&mut self, ms: u64) -> Result<()> {
+        let d = if ms == 0 { None } else { Some(Duration::from_millis(ms)) };
+        self.stream.set_read_timeout(d)?;
+        self.stream.set_write_timeout(d)?;
+        Ok(())
+    }
+
+    /// Rename the peer once its identity is known (e.g. after `Hello`).
+    pub(crate) fn set_label(&mut self, label: impl Into<String>) {
+        self.label = label.into();
+    }
+
+    /// Attach a deterministic fault schedule to outgoing frames.
+    pub(crate) fn set_chaos(&mut self, state: ChaosState) {
+        self.chaos = Some(state);
+    }
+
+    pub(crate) fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Whether a timed-out read left a partial frame buffered (the
+    /// stream is mid-frame and only a *resumed* read keeps it synced).
+    pub(crate) fn mid_frame(&self) -> bool {
+        !self.rbuf.is_empty()
+    }
+
+    /// Write one frame, applying the chaos schedule if armed. A `Drop`
+    /// or `Truncate` fault severs the connection and returns the
+    /// [`chaos kill marker`](super::chaos::is_chaos_kill) — the injected
+    /// crash the supervisor is being tested against.
+    pub(crate) fn write_frame(&mut self, payload: &[u8]) -> Result<()> {
+        let idx = self.frames_written;
+        self.frames_written += 1;
+        let mut buf = encode_frame(payload);
+        if let Some(chaos) = &self.chaos {
+            match chaos.fault_at(idx) {
+                None => {}
+                Some(Fault::Delay { ms }) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(Fault::Drop) => {
+                    let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                    return Err(super::chaos::kill_error("drop", idx));
+                }
+                Some(Fault::Truncate) => {
+                    let cut = buf.len() / 2;
+                    let _ = self.stream.write_all(&buf[..cut]);
+                    let _ = self.stream.flush();
+                    let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                    return Err(super::chaos::kill_error("truncate", idx));
+                }
+                Some(Fault::BitFlip) => {
+                    // Flip one payload bit; the peer's checksum test
+                    // must turn this into a named protocol error.
+                    let pos = HEADER_LEN + payload.len() / 2;
+                    buf[pos.min(buf.len() - 1)] ^= 0x40;
+                }
+            }
+        }
+        self.stream
+            .write_all(&buf)
+            .map_err(|e| classify_io(e, &format!("{}: frame write", self.label)))?;
+        self.stream
+            .flush()
+            .map_err(|e| classify_io(e, &format!("{}: frame flush", self.label)))?;
+        Ok(())
+    }
+
+    /// Read one frame, resumably. On `Error::Timeout` the bytes read so
+    /// far stay buffered and a retry continues the same frame; any
+    /// other error is terminal for the connection.
+    pub(crate) fn read_frame(&mut self) -> Result<Vec<u8>> {
+        loop {
+            let target = match self.want {
+                None => HEADER_LEN,
+                Some(total) => total,
+            };
+            if self.rbuf.len() >= target {
+                if self.want.is_none() {
+                    let head: [u8; HEADER_LEN] = self.rbuf[..HEADER_LEN].try_into().unwrap();
+                    let len = parse_header(&head)?;
+                    self.want = Some(HEADER_LEN + len + TAIL_LEN);
+                    continue;
+                }
+                let frame = std::mem::take(&mut self.rbuf);
+                self.want = None;
+                let head: [u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+                let payload = &frame[HEADER_LEN..target - TAIL_LEN];
+                let stored =
+                    u64::from_le_bytes(frame[target - TAIL_LEN..target].try_into().unwrap());
+                check_checksum(&head, payload, stored)?;
+                return Ok(payload.to_vec());
+            }
+            // Cap the raw read at the bytes this frame still needs so
+            // the buffer never swallows the start of the next frame.
+            let need = target - self.rbuf.len();
+            let mut tmp = [0u8; 64 * 1024];
+            let cap = need.min(tmp.len());
+            let n = self
+                .stream
+                .read(&mut tmp[..cap])
+                .map_err(|e| classify_io(e, &format!("{}: frame read", self.label)))?;
+            if n == 0 {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("{}: peer closed the connection", self.label),
+                )));
+            }
+            self.rbuf.extend_from_slice(&tmp[..n]);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::io::Cursor;
+    use std::net::TcpListener;
 
     fn roundtrip(payload: &[u8]) -> Vec<u8> {
         let mut buf = Vec::new();
@@ -152,5 +358,58 @@ mod tests {
         buf[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
         let msg = read_frame(&mut Cursor::new(&buf)).unwrap_err().to_string();
         assert!(msg.contains("frame length"), "{msg}");
+    }
+
+    /// Localhost socket pair for FrameConn tests.
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn conn_round_trips_and_survives_mid_frame_timeout() {
+        let (client, server) = tcp_pair();
+        let mut conn = FrameConn::new(server, "test peer");
+        conn.set_deadline_ms(50).unwrap();
+
+        // Trickle half a frame: the deadline expires mid-frame, the
+        // partial bytes stay buffered, and a retried read finishes the
+        // SAME frame once the rest arrives. A plain read_exact would
+        // have discarded the prefix and desynced the stream.
+        let frame = roundtrip(b"resumable payload");
+        let (half, rest) = frame.split_at(frame.len() / 2);
+        let mut w = &client;
+        w.write_all(half).unwrap();
+        w.flush().unwrap();
+        let err = conn.read_frame().unwrap_err();
+        assert!(
+            matches!(err, Error::Timeout(_)),
+            "expected Timeout, got {err}"
+        );
+        assert!(err.to_string().contains("test peer"), "{err}");
+        assert!(conn.mid_frame());
+        w.write_all(rest).unwrap();
+        w.flush().unwrap();
+        assert_eq!(conn.read_frame().unwrap(), b"resumable payload");
+        assert!(!conn.mid_frame());
+
+        // Full frames round-trip through the conn writer too.
+        let mut back = FrameConn::new(client, "other side");
+        back.write_frame(b"reply").unwrap();
+        assert_eq!(conn.read_frame().unwrap(), b"reply");
+    }
+
+    #[test]
+    fn conn_clean_close_is_io_not_timeout() {
+        let (client, server) = tcp_pair();
+        let mut conn = FrameConn::new(server, "test peer");
+        conn.set_deadline_ms(1000).unwrap();
+        drop(client);
+        let err = conn.read_frame().unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "expected Io, got {err}");
+        assert!(!conn.mid_frame());
     }
 }

@@ -30,23 +30,41 @@
 //! streams included — every step is a pure function of the epoch-start
 //! weights, so the run is **bit-identical to single-process
 //! [`train_partitioned`](crate::pipeline::train_partitioned) at any
-//! worker count**, and any step may be recomputed anywhere. That is
-//! also the fault story: a worker that dies mid-epoch (detected as an
-//! I/O error on its socket) simply has its unfinished partitions
-//! re-dispatched to the survivors, and a run restarted after a leader
-//! crash resumes from the last `[distributed] checkpoint_path`
-//! checkpoint ([`TrainState`](crate::checkpoint::TrainState) V2) with
-//! the identical trajectory. See `docs/distributed-training.md`.
+//! worker count**, and any step may be recomputed anywhere.
+//!
+//! # Fault tolerance (PR 10)
+//!
+//! The leader runs a **supervisor** over its worker links: every socket
+//! operation carries a `[fault_tolerance] io_timeout_ms` deadline
+//! (surfaced as the named [`Error::Timeout`], distinct from dead-peer
+//! `Io`), an expired read marks the worker *suspect* and retries with
+//! capped exponential backoff (the frame layer resumes the partial
+//! read), and exhausted retries declare it **dead** — its unfinished
+//! partitions are re-dispatched to the survivors exactly as a closed
+//! socket always was. Heartbeat probes at epoch boundaries catch hung
+//! workers even between dispatches. A dead worker may be **restarted**
+//! (bounded by `max_restarts`, via [`DistHooks::respawn`]): the
+//! replacement announces `Rejoin{rank}` and receives a fresh `Setup`
+//! whose `plans_from` carries the last realloc epoch's weights, so it
+//! re-solves bit plans bit-identically to the survivors and the run's
+//! result stays **bit-identical to an uninterrupted run**. The
+//! [`chaos`] submodule injects deterministic faults (drop / delay /
+//! truncate / bit-flip, addressed by `(rank, message-index)`) under
+//! which `tests/chaos_dist.rs` proves exactly that property. A leader
+//! killed mid-run still resumes from the `[distributed]
+//! checkpoint_path` checkpoint ([`TrainState`]) with the identical
+//! trajectory. See `docs/distributed-training.md`.
 
 // The frame layer is shared crate-wide: the serving subsystem
 // (`crate::serve`) speaks the same framed wire format with its own
 // message tags, so framing bugs are fixed in exactly one place.
+pub mod chaos;
 pub(crate) mod frame;
 mod proto;
 
 use crate::alloc::BitPlan;
 use crate::checkpoint::{state_to_bytes, TrainState};
-use crate::config::{DatasetSpec, QuantConfig, TrainConfig};
+use crate::config::{DatasetSpec, FaultToleranceConfig, QuantConfig, TrainConfig};
 use crate::engine::QuantEngine;
 use crate::linalg::softmax_cross_entropy;
 use crate::memory::{ActivationCache, BufferPool};
@@ -60,19 +78,67 @@ use crate::rngs::Pcg64;
 use crate::tensor::Matrix;
 use crate::util::timer::LapTimer;
 use crate::{Error, Result};
+use frame::FrameConn;
 use proto::Msg;
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 fn proto_err(msg: impl std::fmt::Display) -> Error {
     Error::Runtime(format!("dist protocol: {msg}"))
 }
 
-fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
-    frame::write_frame(stream, &msg.encode())
+fn send(conn: &mut FrameConn, msg: &Msg) -> Result<()> {
+    conn.write_frame(&msg.encode())
 }
 
-fn read_msg(stream: &mut TcpStream) -> Result<Msg> {
-    Msg::decode(&frame::read_frame(stream)?)
+fn recv(conn: &mut FrameConn) -> Result<Msg> {
+    Msg::decode(&conn.read_frame()?)
+}
+
+/// Handshake deadline: 10x the steady-state deadline, because the peer
+/// regenerates and re-partitions the dataset between `Setup` and
+/// `Ready`. `0` (deadlines off) stays 0.
+fn handshake_ms(ft: &FaultToleranceConfig) -> u64 {
+    ft.io_timeout_ms.saturating_mul(10)
+}
+
+fn backoff_ms(ft: &FaultToleranceConfig, attempt: usize) -> u64 {
+    ft.backoff_base_ms
+        .saturating_mul(1u64 << attempt.min(20))
+        .min(ft.backoff_cap_ms)
+}
+
+/// Accept one connection within `ms` milliseconds (`0` = block
+/// forever). The listener is polled non-blockingly so a worker that
+/// never comes up yields a named [`Error::Timeout`], not a hang.
+fn accept_with_deadline(listener: &TcpListener, ms: u64) -> Result<TcpStream> {
+    if ms == 0 {
+        let (stream, _) = listener.accept()?;
+        return Ok(stream);
+    }
+    listener.set_nonblocking(true)?;
+    let deadline = std::time::Instant::now() + Duration::from_millis(ms);
+    let res = loop {
+        match listener.accept() {
+            Ok((stream, _)) => break Ok(stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if std::time::Instant::now() >= deadline {
+                    break Err(Error::Timeout(format!(
+                        "accepting a worker connection: deadline expired after {ms} ms"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => break Err(e.into()),
+        }
+    };
+    listener.set_nonblocking(false)?;
+    if let Ok(stream) = &res {
+        // Accepted sockets are blocking on every platform we support,
+        // but be explicit — the deadline machinery assumes it.
+        stream.set_nonblocking(false)?;
+    }
+    res
 }
 
 /// Write a checkpoint via temp-file-then-rename so a leader killed
@@ -88,12 +154,111 @@ fn write_checkpoint_atomic(path: &str, state: &TrainState) -> Result<()> {
 
 /// Worker-side knobs. The default is a plain worker; tests inject
 /// faults through it.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct WorkerOptions {
     /// Fault injection: after this many partition training steps the
     /// worker exits without replying, so the leader observes exactly
     /// what a crashed worker looks like — a closed socket mid-epoch.
     pub fail_after_steps: Option<usize>,
+    /// Fault injection: when `steps_done` reaches this count the worker
+    /// sleeps [`stall_ms`](Self::stall_ms) **once** before continuing —
+    /// a hung-but-alive worker whose socket stays open, exercising the
+    /// leader's suspect/declare-dead path rather than its dead-socket
+    /// path.
+    pub stall_after_steps: Option<usize>,
+    /// How long the injected stall sleeps (bounded, so tests can always
+    /// join the worker thread).
+    pub stall_ms: u64,
+    /// Deterministic fault schedule applied to this worker's outgoing
+    /// frames (see [`chaos`]). Worker *processes* are armed through the
+    /// `IEXACT_CHAOS` env var instead (`main.rs` maps it here).
+    pub chaos: Option<chaos::ChaosSchedule>,
+    /// Deadline for the `Setup` wait after connecting; `0` blocks
+    /// forever. Steady-state reads stay deadline-free — a worker's
+    /// liveness signal is the leader's socket, and a dead leader is an
+    /// EOF, not a timeout.
+    pub setup_timeout_ms: u64,
+    /// Announce `Rejoin{rank}` instead of `Hello{rank}`: this worker
+    /// replaces a dead one mid-run and expects a `Setup` carrying
+    /// `plans_from`.
+    pub rejoin: bool,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            fail_after_steps: None,
+            stall_after_steps: None,
+            stall_ms: 0,
+            chaos: None,
+            setup_timeout_ms: 30_000,
+            rejoin: false,
+        }
+    }
+}
+
+/// Drop guard over spawned worker processes: however the leader exits
+/// — clean return, error, or panic — no child outlives it.
+///
+/// The pre-PR-10 leader killed children only on its error *return*
+/// path, so a leader panic (or an early `?`) stranded workers blocked
+/// on their sockets forever. Owning the children in a guard makes the
+/// cleanup unconditional; [`wait_all`](Self::wait_all) is the polite
+/// exit for runs that ended well.
+#[derive(Default)]
+pub struct ChildReaper {
+    children: Vec<std::process::Child>,
+}
+
+impl ChildReaper {
+    pub fn new() -> Self {
+        ChildReaper::default()
+    }
+
+    pub fn push(&mut self, child: std::process::Child) {
+        self.children.push(child);
+    }
+
+    pub fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Give every child `grace` to exit on its own (they were just told
+    /// to shut down), then kill and reap whatever is left. Never blocks
+    /// longer than `grace` plus reaping time — a hung worker cannot
+    /// wedge the leader's exit.
+    pub fn wait_all(&mut self, grace: Duration) {
+        let deadline = std::time::Instant::now() + grace;
+        while !self.children.is_empty() && std::time::Instant::now() < deadline {
+            self.children
+                .retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            if self.children.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.kill_all();
+    }
+
+    /// Kill and reap every remaining child (idempotent: killing an
+    /// already-exited child is a no-op, and waiting reaps the zombie).
+    fn kill_all(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for ChildReaper {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
 }
 
 /// Halo/eval traffic accounting: what actually crossed process
@@ -105,6 +270,21 @@ pub struct WireStats {
     pub halo_payload_bytes: u64,
     /// Bytes the same activations would occupy as dense `f32`.
     pub halo_f32_bytes: u64,
+}
+
+/// Supervision tally: what the fault-tolerance layer observed and did
+/// during a run (all zero in a healthy run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultEvents {
+    /// Read deadlines that expired (each marks a worker *suspect* and
+    /// retries; several may belong to one eventual death).
+    pub timeouts: u64,
+    /// Heartbeat probes whose ack never arrived.
+    pub heartbeat_misses: u64,
+    /// Workers declared dead (socket closed, or retries exhausted).
+    pub deaths: u64,
+    /// Workers successfully restarted and rejoined mid-run.
+    pub restarts: u64,
 }
 
 /// What a distributed run hands back: the single-process-identical
@@ -122,21 +302,216 @@ pub struct DistTrainOutcome {
     /// Partitions re-dispatched to a surviving worker after their
     /// original owner died (0 in a healthy run).
     pub reassigned_partitions: usize,
+    /// What the supervisor observed and did (see [`FaultEvents`]).
+    pub faults: FaultEvents,
+}
+
+/// Leader-side integration hooks for elastic worker restart.
+///
+/// The leader itself has no idea how workers come into existence — the
+/// caller spawned them (processes in production, threads in tests) —
+/// so restarting one is delegated back through `respawn`. With no hook
+/// (the default), a dead worker stays dead and its partitions are
+/// simply reassigned.
+#[derive(Default)]
+pub struct DistHooks<'a> {
+    /// Start a replacement worker for `rank`, pointed at the same
+    /// leader address, with [`WorkerOptions::rejoin`] set. The hook
+    /// only *launches* it; the leader handles the `Rejoin` handshake.
+    #[allow(clippy::type_complexity)]
+    pub respawn: Option<Box<dyn FnMut(u32) -> Result<()> + 'a>>,
 }
 
 struct WorkerLink {
     rank: u32,
-    stream: TcpStream,
+    conn: FrameConn,
     alive: bool,
 }
 
+/// The leader's view of its worker fleet plus the fault-tolerance
+/// machinery: deadline-aware reads with suspect/retry, heartbeats, and
+/// declare-dead → restart.
+struct Supervisor<'a> {
+    links: Vec<WorkerLink>,
+    listener: &'a TcpListener,
+    ft: FaultToleranceConfig,
+    hooks: DistHooks<'a>,
+    events: FaultEvents,
+    restarts_used: usize,
+    nonce: u64,
+}
+
+impl<'a> Supervisor<'a> {
+    /// Read one message from worker `w`, retrying expired deadlines up
+    /// to `max_retries` times with capped exponential backoff (the
+    /// frame layer resumes partial reads, so a retry continues the same
+    /// frame). The final failure is returned as `Error::Timeout` naming
+    /// the worker; the caller decides whether that is fatal or a death.
+    fn read_retry(&mut self, w: usize) -> Result<Msg> {
+        let mut attempt = 0;
+        loop {
+            match recv(&mut self.links[w].conn) {
+                Err(Error::Timeout(m)) => {
+                    self.events.timeouts += 1;
+                    if attempt >= self.ft.max_retries {
+                        return Err(Error::Timeout(format!(
+                            "worker {} declared dead: {m} ({} suspect retries exhausted)",
+                            self.links[w].rank, self.ft.max_retries
+                        )));
+                    }
+                    // Suspect: back off, then resume the same read.
+                    std::thread::sleep(Duration::from_millis(backoff_ms(&self.ft, attempt)));
+                    attempt += 1;
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Probe every live worker with `Heartbeat` and wait for the
+    /// matching ack. A missed ack (deadline exhausted or closed socket)
+    /// declares the worker dead — partitions reassign at the next
+    /// dispatch; a *wrong* ack is a confused peer and fatal.
+    fn heartbeat(&mut self, setup: &proto::WorkerSetup) -> Result<()> {
+        for w in 0..self.links.len() {
+            if !self.links[w].alive {
+                continue;
+            }
+            self.nonce += 1;
+            let nonce = self.nonce;
+            if send(&mut self.links[w].conn, &Msg::Heartbeat { nonce }).is_err() {
+                self.events.heartbeat_misses += 1;
+                self.declare_dead(w, setup);
+                continue;
+            }
+            match self.read_retry(w) {
+                Ok(Msg::HeartbeatAck { nonce: n }) if n == nonce => {}
+                Ok(Msg::HeartbeatAck { nonce: n }) => {
+                    return Err(proto_err(format!(
+                        "worker {} acked heartbeat nonce {n}, probe was {nonce}",
+                        self.links[w].rank
+                    )));
+                }
+                Ok(Msg::Abort { reason }) => {
+                    return Err(proto_err(format!(
+                        "worker {} aborted: {reason}",
+                        self.links[w].rank
+                    )));
+                }
+                Ok(other) => {
+                    return Err(proto_err(format!(
+                        "expected HeartbeatAck from worker {}, got {}",
+                        self.links[w].rank,
+                        other.kind()
+                    )));
+                }
+                Err(Error::Io(_)) | Err(Error::Timeout(_)) => {
+                    self.events.heartbeat_misses += 1;
+                    self.declare_dead(w, setup);
+                }
+                Err(other) => return Err(other),
+            }
+        }
+        Ok(())
+    }
+
+    /// Mark worker `w` dead and attempt an elastic restart if a respawn
+    /// hook is installed and the restart budget allows. A failed
+    /// restart consumes budget and leaves the rank dead (partitions
+    /// reassign to survivors) — restart is an optimization, never a
+    /// correctness requirement.
+    fn declare_dead(&mut self, w: usize, setup: &proto::WorkerSetup) {
+        self.links[w].alive = false;
+        self.events.deaths += 1;
+        let rank = self.links[w].rank;
+        if self.hooks.respawn.is_none() || self.restarts_used >= self.ft.max_restarts {
+            return;
+        }
+        self.restarts_used += 1;
+        if let Err(e) = self.hooks.respawn.as_mut().expect("checked above")(rank) {
+            eprintln!("[dist] failed to respawn worker {rank}: {e} (rank stays dead)");
+            return;
+        }
+        match self.admit_rejoin(rank, setup) {
+            Ok(conn) => {
+                self.links[w].conn = conn;
+                self.links[w].alive = true;
+                self.events.restarts += 1;
+            }
+            Err(e) => {
+                eprintln!("[dist] worker {rank} rejoin failed: {e} (rank stays dead)");
+            }
+        }
+    }
+
+    /// Accept the restarted worker's connection and run the rejoin
+    /// handshake: `Rejoin{rank}` in, `Setup` (with `plans_from`) out,
+    /// `Ready` fingerprint check, then steady-state deadlines.
+    fn admit_rejoin(&mut self, rank: u32, setup: &proto::WorkerSetup) -> Result<FrameConn> {
+        let hs = handshake_ms(&self.ft);
+        let stream = accept_with_deadline(self.listener, hs)?;
+        stream.set_nodelay(true)?;
+        let mut conn = FrameConn::new(stream, format!("worker {rank} (rejoining)"));
+        conn.set_deadline_ms(hs)?;
+        match recv(&mut conn)? {
+            Msg::Rejoin { rank: r } if r == rank => {}
+            Msg::Rejoin { rank: r } => {
+                return Err(proto_err(format!(
+                    "rejoining worker announced rank {r}, expected {rank}"
+                )));
+            }
+            other => {
+                return Err(proto_err(format!(
+                    "expected Rejoin from restarted worker {rank}, got {}",
+                    other.kind()
+                )));
+            }
+        }
+        send(&mut conn, &Msg::Setup(Box::new(setup.clone())))?;
+        match recv(&mut conn)? {
+            Msg::Ready { fingerprint } if fingerprint == setup.ownership_fingerprint => {}
+            Msg::Ready { fingerprint } => {
+                return Err(proto_err(format!(
+                    "rejoined worker {rank} partitioning fingerprint {fingerprint:#018x} \
+                     disagrees with leader {:#018x}",
+                    setup.ownership_fingerprint
+                )));
+            }
+            Msg::Abort { reason } => {
+                return Err(proto_err(format!(
+                    "worker {rank} aborted during rejoin: {reason}"
+                )));
+            }
+            other => {
+                return Err(proto_err(format!(
+                    "expected Ready from rejoined worker {rank}, got {}",
+                    other.kind()
+                )));
+            }
+        }
+        conn.set_deadline_ms(self.ft.io_timeout_ms)?;
+        conn.set_label(format!("worker {rank}"));
+        Ok(conn)
+    }
+}
+
 /// Accept exactly `n` workers and index them by their announced rank.
-fn accept_workers(listener: &TcpListener, n: usize) -> Result<Vec<WorkerLink>> {
+/// Handshake reads run at the relaxed handshake deadline; handshake
+/// failures (including timeouts) are fatal — the fleet either comes up
+/// whole or the run does not start.
+fn accept_workers(
+    listener: &TcpListener,
+    n: usize,
+    ft: &FaultToleranceConfig,
+) -> Result<Vec<WorkerLink>> {
+    let hs = handshake_ms(ft);
     let mut links: Vec<Option<WorkerLink>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
-        let (mut stream, _) = listener.accept()?;
+        let stream = accept_with_deadline(listener, hs)?;
         stream.set_nodelay(true)?;
-        match read_msg(&mut stream)? {
+        let mut conn = FrameConn::new(stream, "connecting worker");
+        conn.set_deadline_ms(hs)?;
+        match recv(&mut conn)? {
             Msg::Hello { rank } => {
                 let r = rank as usize;
                 if r >= n {
@@ -147,9 +522,10 @@ fn accept_workers(listener: &TcpListener, n: usize) -> Result<Vec<WorkerLink>> {
                 if links[r].is_some() {
                     return Err(proto_err(format!("duplicate worker rank {rank}")));
                 }
+                conn.set_label(format!("worker {rank}"));
                 links[r] = Some(WorkerLink {
                     rank,
-                    stream,
+                    conn,
                     alive: true,
                 });
             }
@@ -166,8 +542,11 @@ fn accept_workers(listener: &TcpListener, n: usize) -> Result<Vec<WorkerLink>> {
 
 /// Scatter one request per partition over the live workers and gather
 /// one parsed response per partition, **re-dispatching the partitions
-/// of any worker that dies** (send or receive I/O error) until every
-/// partition has a result or no worker survives.
+/// of any worker that dies** (send or receive I/O error, or a read
+/// deadline whose suspect retries exhaust) until every partition has a
+/// result or no worker survives. Each death runs through the
+/// supervisor's restart path, so a re-spawned worker can rejoin and
+/// absorb pending partitions in the very same dispatch.
 ///
 /// Correct because every request is a pure function of its partition
 /// index and the epoch-start weights: recomputing a dead worker's
@@ -175,7 +554,8 @@ fn accept_workers(listener: &TcpListener, n: usize) -> Result<Vec<WorkerLink>> {
 /// errors (garbage frames, aborts, mismatched replies) are fatal —
 /// only *dead* peers are survivable, confused ones are not.
 fn dispatch<T>(
-    links: &mut [WorkerLink],
+    sup: &mut Supervisor<'_>,
+    setup: &proto::WorkerSetup,
     k: usize,
     reassigned: &mut usize,
     make: impl Fn(Vec<u64>) -> Msg,
@@ -188,7 +568,8 @@ fn dispatch<T>(
         if pending.is_empty() {
             break;
         }
-        let alive: Vec<usize> = links
+        let alive: Vec<usize> = sup
+            .links
             .iter()
             .enumerate()
             .filter(|(_, l)| l.alive)
@@ -197,7 +578,7 @@ fn dispatch<T>(
         if alive.is_empty() {
             return Err(proto_err(format!(
                 "all {} workers are dead with {} partition results outstanding",
-                links.len(),
+                sup.links.len(),
                 pending.len()
             )));
         }
@@ -207,7 +588,7 @@ fn dispatch<T>(
         first_round = false;
         // Round-robin the pending partitions over the live workers —
         // with all workers alive this is the static p % N assignment.
-        let mut rounds: Vec<Vec<u64>> = vec![Vec::new(); links.len()];
+        let mut rounds: Vec<Vec<u64>> = vec![Vec::new(); sup.links.len()];
         for (i, &p) in pending.iter().enumerate() {
             rounds[alive[i % alive.len()]].push(p as u64);
         }
@@ -218,29 +599,34 @@ fn dispatch<T>(
             if parts.is_empty() {
                 continue;
             }
-            if write_msg(&mut links[w].stream, &make(parts.clone())).is_err() {
-                links[w].alive = false;
+            if send(&mut sup.links[w].conn, &make(parts.clone())).is_err() {
+                // A write timeout left a partial frame on the socket —
+                // unlike reads it cannot be resumed, so either way the
+                // worker is dead to us.
+                sup.declare_dead(w, setup);
             }
         }
         for (w, parts) in rounds.iter().enumerate() {
-            if parts.is_empty() || !links[w].alive {
+            if parts.is_empty() || !sup.links[w].alive {
                 continue;
             }
             for &p in parts {
-                match read_msg(&mut links[w].stream) {
+                match sup.read_retry(w) {
                     Ok(Msg::Abort { reason }) => {
                         return Err(proto_err(format!(
                             "worker {} aborted: {reason}",
-                            links[w].rank
+                            sup.links[w].rank
                         )));
                     }
                     Ok(msg) => {
                         out[p as usize] = Some(parse(msg, p as usize)?);
                     }
-                    Err(Error::Io(_)) => {
-                        // Dead worker: everything it still owed goes
-                        // back into the pool for the next round.
-                        links[w].alive = false;
+                    Err(Error::Io(_)) | Err(Error::Timeout(_)) => {
+                        // Dead (or hopelessly hung) worker: everything
+                        // it still owed goes back into the pool for the
+                        // next round; the restart path may already have
+                        // revived the rank.
+                        sup.declare_dead(w, setup);
                         break;
                     }
                     Err(other) => return Err(other),
@@ -272,7 +658,9 @@ fn dispatch<T>(
 ///
 /// The caller owns process management: bind the listener, spawn the
 /// worker processes (or threads, in tests) pointed at its address,
-/// then call this.
+/// then call this. Equivalent to
+/// [`train_distributed_with`] with no restart hook — dead workers stay
+/// dead and their partitions reassign.
 pub fn train_distributed(
     listener: &TcpListener,
     spec: &DatasetSpec,
@@ -282,6 +670,34 @@ pub fn train_distributed(
     seed: u64,
     resume: Option<TrainState>,
 ) -> Result<DistTrainOutcome> {
+    train_distributed_with(
+        listener,
+        spec,
+        dataset_seed,
+        quant,
+        cfg,
+        seed,
+        resume,
+        DistHooks::default(),
+    )
+}
+
+/// [`train_distributed`] plus leader-side [`DistHooks`]: with a
+/// `respawn` hook installed, a worker declared dead is re-spawned
+/// (bounded by `[fault_tolerance] max_restarts`), re-admitted through
+/// the `Rejoin` handshake and re-`Setup` mid-run — with the epoch
+/// results still bit-identical to an uninterrupted run.
+#[allow(clippy::too_many_arguments)]
+pub fn train_distributed_with(
+    listener: &TcpListener,
+    spec: &DatasetSpec,
+    dataset_seed: u64,
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    seed: u64,
+    resume: Option<TrainState>,
+    hooks: DistHooks<'_>,
+) -> Result<DistTrainOutcome> {
     quant.validate()?;
     cfg.validate()?;
     let dcfg = &cfg.distributed;
@@ -290,6 +706,7 @@ pub fn train_distributed(
             "train_distributed requires distributed.workers >= 1".into(),
         ));
     }
+    let ft = cfg.fault_tolerance.clone();
     let dataset = spec.generate(dataset_seed);
     dataset.validate()?;
     let pcfg = &cfg.partition;
@@ -315,8 +732,17 @@ pub fn train_distributed(
     let (start_epoch, mut model, mut adam, rng) =
         init_partitioned_run(&dataset, quant, cfg, seed, resume)?;
 
-    let mut links = accept_workers(listener, dcfg.workers)?;
-    let setup = proto::WorkerSetup {
+    let mut sup = Supervisor {
+        links: accept_workers(listener, dcfg.workers, &ft)?,
+        listener,
+        ft: ft.clone(),
+        hooks,
+        events: FaultEvents::default(),
+        restarts_used: 0,
+        nonce: 0,
+    };
+    let adaptive = cfg.allocation.allocator(quant)?.is_some();
+    let mut setup = proto::WorkerSetup {
         spec: spec.clone(),
         dataset_seed,
         seed,
@@ -329,34 +755,35 @@ pub fn train_distributed(
         cache_bits: pcfg.cache_bits,
         allocation: cfg.allocation.clone(),
         ownership_fingerprint: fingerprint,
+        plans_from: None,
     };
-    for link in &mut links {
-        write_msg(&mut link.stream, &Msg::Setup(Box::new(setup.clone())))?;
+    for w in 0..sup.links.len() {
+        send(&mut sup.links[w].conn, &Msg::Setup(Box::new(setup.clone())))?;
     }
-    for link in &mut links {
-        match read_msg(&mut link.stream)? {
+    for w in 0..sup.links.len() {
+        let rank = sup.links[w].rank;
+        match recv(&mut sup.links[w].conn)? {
             Msg::Ready { fingerprint: fp } if fp == fingerprint => {}
             Msg::Ready { fingerprint: fp } => {
                 return Err(proto_err(format!(
-                    "worker {} partitioning fingerprint {fp:#018x} disagrees with \
-                     leader {fingerprint:#018x}",
-                    link.rank
+                    "worker {rank} partitioning fingerprint {fp:#018x} disagrees with \
+                     leader {fingerprint:#018x}"
                 )));
             }
             Msg::Abort { reason } => {
                 return Err(proto_err(format!(
-                    "worker {} aborted during handshake: {reason}",
-                    link.rank
+                    "worker {rank} aborted during handshake: {reason}"
                 )));
             }
             other => {
                 return Err(proto_err(format!(
-                    "expected Ready from worker {}, got {}",
-                    link.rank,
+                    "expected Ready from worker {rank}, got {}",
                     other.kind()
                 )));
             }
         }
+        // Handshake survived: drop to the steady-state deadline.
+        sup.links[w].conn.set_deadline_ms(ft.io_timeout_ms)?;
     }
 
     let engine = QuantEngine::from_config(&cfg.parallelism);
@@ -376,8 +803,19 @@ pub fn train_distributed(
 
     for epoch in start_epoch..cfg.epochs {
         let t0 = std::time::Instant::now();
+        // Keep the rejoin context current *before* any fault can strike
+        // this epoch: at a realloc boundary the workers re-solve their
+        // bit plans from these exact weights, so a worker restarted any
+        // time before the next boundary must re-solve from them too.
+        if adaptive && epoch % cfg.allocation.realloc_interval_epochs == 0 {
+            setup.plans_from = Some((epoch as u64, model.weights.clone()));
+        }
+        if ft.heartbeat_every_epochs > 0 && epoch % ft.heartbeat_every_epochs == 0 {
+            sup.heartbeat(&setup)?;
+        }
         let steps = dispatch(
-            &mut links,
+            &mut sup,
+            &setup,
             k,
             &mut reassigned,
             |parts| Msg::Steps {
@@ -426,7 +864,8 @@ pub fn train_distributed(
 
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
             let bodies = dispatch(
-                &mut links,
+                &mut sup,
+                &setup,
                 k,
                 &mut reassigned,
                 |parts| Msg::Evals {
@@ -490,9 +929,9 @@ pub fn train_distributed(
     }
 
     // Best-effort: a worker that already died is already accounted for.
-    for link in &mut links {
+    for link in &mut sup.links {
         if link.alive {
-            let _ = write_msg(&mut link.stream, &Msg::Shutdown);
+            let _ = send(&mut link.conn, &Msg::Shutdown);
         }
     }
 
@@ -523,13 +962,15 @@ pub fn train_distributed(
         state,
         wire,
         reassigned_partitions: reassigned,
+        faults: sup.events,
     })
 }
 
 /// Run one **worker**: connect to the leader at `addr`, announce
-/// `rank`, rebuild the training context from the Setup message
-/// (regenerating the dataset and re-partitioning locally), then serve
-/// step/eval requests until Shutdown.
+/// `rank` (via `Hello`, or `Rejoin` for a restarted worker), rebuild
+/// the training context from the Setup message (regenerating the
+/// dataset and re-partitioning locally), then serve step/eval/heartbeat
+/// requests until Shutdown.
 ///
 /// All compute goes through the same `partition_train_step` /
 /// `pack_partition_logits` kernels as the single-process trainer, on a
@@ -537,11 +978,40 @@ pub fn train_distributed(
 /// count anyway, and worker processes already are the parallelism.
 /// Eval replies carry the partition's logits as packed codes, never
 /// dense `f32`.
+///
+/// An injected chaos crash (`drop`/`trunc` faults from
+/// [`WorkerOptions::chaos`]) exits with `Ok(())`, exactly like the
+/// `fail_after_steps` injection — from the outside both look like a
+/// cleanly crashed process.
 pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
-    let mut stream = TcpStream::connect(addr)?;
+    match run_worker_inner(addr, rank, opts) {
+        Err(e) if chaos::is_chaos_kill(&e) => Ok(()),
+        other => other,
+    }
+}
+
+fn run_worker_inner(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
-    write_msg(&mut stream, &Msg::Hello { rank })?;
-    let setup = match read_msg(&mut stream)? {
+    let mut conn = FrameConn::new(stream, "leader");
+    if let Some(schedule) = &opts.chaos {
+        conn.set_chaos(chaos::ChaosState::new(rank, schedule.clone()));
+    }
+    let hello = if opts.rejoin {
+        Msg::Rejoin { rank }
+    } else {
+        Msg::Hello { rank }
+    };
+    send(&mut conn, &hello)?;
+    // Only the Setup wait carries a deadline: a leader that accepts a
+    // connection but never ships context is indistinguishable from a
+    // hang. Past Setup, a dead leader is a closed socket (EOF), so
+    // steady-state reads block without deadlines.
+    conn.set_deadline_ms(opts.setup_timeout_ms)?;
+    let setup = match recv(&mut conn).map_err(|e| match e {
+        Error::Timeout(m) => Error::Timeout(format!("worker {rank} waiting for Setup: {m}")),
+        other => other,
+    })? {
         Msg::Setup(s) => *s,
         Msg::Abort { reason } => {
             return Err(proto_err(format!("leader aborted: {reason}")));
@@ -550,6 +1020,7 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
             return Err(proto_err(format!("expected Setup, got {}", other.kind())));
         }
     };
+    conn.set_deadline_ms(0)?;
     let dataset = setup.spec.generate(setup.dataset_seed);
     dataset.validate()?;
     let k = setup.num_partitions;
@@ -563,15 +1034,15 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
              with leader {:#018x}",
             setup.ownership_fingerprint
         );
-        let _ = write_msg(
-            &mut stream,
+        let _ = send(
+            &mut conn,
             &Msg::Abort {
                 reason: reason.clone(),
             },
         );
         return Err(proto_err(reason));
     }
-    write_msg(&mut stream, &Msg::Ready { fingerprint })?;
+    send(&mut conn, &Msg::Ready { fingerprint })?;
 
     let bins = resolve_layer_bins(
         setup.arch,
@@ -588,8 +1059,31 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
     let mut plans_epoch: Option<u64> = None;
     let mut steps_done = 0usize;
 
+    // Rejoin context: re-solve every partition's plans from the last
+    // realloc epoch's weights, exactly as the surviving workers did at
+    // that epoch — the stats streams are (epoch, partition)-addressed,
+    // so the solve lands bit-identical wherever (and whenever) it runs.
+    if let (Some(alloc), Some((e0, w0))) = (&allocator, &setup.plans_from) {
+        let model = GcnModel {
+            arch: setup.arch,
+            weights: w0.clone(),
+        };
+        let e = *e0 as usize;
+        for (p, slot) in plans.iter_mut().enumerate() {
+            let mut stats_rng = Pcg64::with_stream(setup.seed ^ 0xb17a_1710, (e * k + p) as u64);
+            *slot = Some(allocate_plans(
+                &model,
+                &parts.parts[p].data,
+                &setup.quant,
+                alloc,
+                &mut stats_rng,
+            )?);
+        }
+        plans_epoch = Some(*e0);
+    }
+
     loop {
-        match read_msg(&mut stream)? {
+        match recv(&mut conn)? {
             Msg::Steps {
                 epoch,
                 parts: assigned,
@@ -633,6 +1127,12 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
                             return Ok(());
                         }
                     }
+                    if opts.stall_after_steps == Some(steps_done) {
+                        // Fault injection: hang with the socket open.
+                        // Bounded so tests can always join the thread;
+                        // the leader's deadline must fire first.
+                        std::thread::sleep(Duration::from_millis(opts.stall_ms));
+                    }
                     let (loss, grads, stash) = partition_train_step(
                         &model,
                         &parts.parts[p].data,
@@ -647,8 +1147,8 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
                         &mut pool,
                     )?;
                     steps_done += 1;
-                    write_msg(
-                        &mut stream,
+                    send(
+                        &mut conn,
                         &Msg::StepResult {
                             part: pu,
                             loss,
@@ -681,8 +1181,11 @@ pub fn run_worker(addr: &str, rank: u32, opts: &WorkerOptions) -> Result<()> {
                     let mut body = Vec::with_capacity(64 + pt.packed.len());
                     crate::memory::write_planned(&mut body, &pt);
                     pool.put_bytes(pt.packed);
-                    write_msg(&mut stream, &Msg::EvalResult { part: pu, body })?;
+                    send(&mut conn, &Msg::EvalResult { part: pu, body })?;
                 }
+            }
+            Msg::Heartbeat { nonce } => {
+                send(&mut conn, &Msg::HeartbeatAck { nonce })?;
             }
             Msg::Shutdown => return Ok(()),
             Msg::Abort { reason } => {
@@ -743,5 +1246,77 @@ mod tests {
             crate::checkpoint::state_to_bytes(&state)
         );
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let ft = FaultToleranceConfig {
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            ..FaultToleranceConfig::default()
+        };
+        assert_eq!(backoff_ms(&ft, 0), 50);
+        assert_eq!(backoff_ms(&ft, 1), 100);
+        assert_eq!(backoff_ms(&ft, 3), 400);
+        assert_eq!(backoff_ms(&ft, 10), 2_000);
+        assert_eq!(backoff_ms(&ft, 63), 2_000); // shift is clamped, no overflow
+    }
+
+    #[test]
+    fn accept_deadline_expires_as_named_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = accept_with_deadline(&listener, 50).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(err.to_string().contains("accepting a worker"), "{err}");
+    }
+
+    /// Regression for the leader error path: dropping the reaper (as an
+    /// early `?` or a panic would) must kill and reap every child, not
+    /// leave it running or zombied.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn child_reaper_kills_on_drop() {
+        let mut reaper = ChildReaper::new();
+        let child = std::process::Command::new("sleep")
+            .arg("30")
+            .spawn()
+            .expect("spawn sleep");
+        let pid = child.id();
+        reaper.push(child);
+        assert_eq!(reaper.len(), 1);
+        drop(reaper);
+        // Killed AND waited: the pid is fully reaped, so /proc/<pid> is
+        // gone (a zombie would still have an entry).
+        assert!(
+            !std::path::Path::new(&format!("/proc/{pid}")).exists(),
+            "child {pid} survived the reaper drop"
+        );
+    }
+
+    /// `wait_all` reaps children that exit within the grace period
+    /// without killing, and never blocks past grace on one that won't.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn child_reaper_wait_all_is_bounded() {
+        let mut reaper = ChildReaper::new();
+        let quick = std::process::Command::new("true").spawn().expect("spawn");
+        let hung = std::process::Command::new("sleep")
+            .arg("30")
+            .spawn()
+            .expect("spawn sleep");
+        let hung_pid = hung.id();
+        reaper.push(quick);
+        reaper.push(hung);
+        let t0 = std::time::Instant::now();
+        reaper.wait_all(Duration::from_millis(300));
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "wait_all blocked on a hung child"
+        );
+        assert!(reaper.is_empty());
+        assert!(
+            !std::path::Path::new(&format!("/proc/{hung_pid}")).exists(),
+            "hung child {hung_pid} was not killed after the grace period"
+        );
     }
 }

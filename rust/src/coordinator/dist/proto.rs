@@ -22,6 +22,9 @@ const TAG_EVALS: u8 = 6;
 const TAG_EVAL_RESULT: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
 const TAG_ABORT: u8 = 9;
+const TAG_HEARTBEAT: u8 = 10;
+const TAG_HEARTBEAT_ACK: u8 = 11;
+const TAG_REJOIN: u8 = 12;
 
 /// Caps on repeated fields — far above any real run, low enough that a
 /// desynced peer cannot make the decoder allocate absurdly.
@@ -57,6 +60,12 @@ pub(crate) struct WorkerSetup {
     /// The leader's halo ownership digest; a worker whose local
     /// partitioning disagrees must abort rather than train.
     pub ownership_fingerprint: u64,
+    /// Mid-run rejoin context: the last realloc epoch and its
+    /// epoch-start weights. A restarted worker re-solves all bit plans
+    /// from these — bit-identically to what the surviving workers
+    /// solved at that epoch — instead of starting from epoch 0 state.
+    /// `None` at the start of a run (or under fixed allocation).
+    pub plans_from: Option<(u64, Vec<Matrix>)>,
 }
 
 fn write_f64(buf: &mut Vec<u8>, v: f64) {
@@ -149,6 +158,14 @@ impl WorkerSetup {
         write_u32(buf, self.allocation.min_bits);
         write_u32(buf, self.allocation.max_bits);
         write_u64(buf, self.ownership_fingerprint);
+        match &self.plans_from {
+            None => buf.push(0),
+            Some((epoch, weights)) => {
+                buf.push(1);
+                write_u64(buf, *epoch);
+                write_matrices(buf, weights);
+            }
+        }
     }
 
     fn read(r: &mut Reader<'_>) -> Result<WorkerSetup> {
@@ -201,6 +218,15 @@ impl WorkerSetup {
             max_bits: r.u32()?,
         };
         let ownership_fingerprint = r.u64()?;
+        let plans_from = match r.byte()? {
+            0 => None,
+            1 => {
+                let epoch = r.u64()?;
+                let weights = read_matrices(r)?;
+                Some((epoch, weights))
+            }
+            other => return Err(bad(format!("bad plans_from tag {other}"))),
+        };
         Ok(WorkerSetup {
             spec,
             dataset_seed,
@@ -214,6 +240,7 @@ impl WorkerSetup {
             cache_bits,
             allocation,
             ownership_fingerprint,
+            plans_from,
         })
     }
 }
@@ -259,6 +286,16 @@ pub(crate) enum Msg {
     Shutdown,
     /// Either direction: unrecoverable divergence; the run must stop.
     Abort { reason: String },
+    /// Leader → worker: liveness probe. The nonce ties each ack to its
+    /// probe so a late ack from a previous probe cannot satisfy a new
+    /// one.
+    Heartbeat { nonce: u64 },
+    /// Worker → leader: echo of a probe's nonce.
+    HeartbeatAck { nonce: u64 },
+    /// Worker → leader, first message of a *restarted* worker: resume
+    /// `rank`'s seat mid-run (the leader replies with a fresh `Setup`
+    /// carrying `plans_from`).
+    Rejoin { rank: u32 },
 }
 
 impl Msg {
@@ -274,6 +311,9 @@ impl Msg {
             Msg::EvalResult { .. } => "EvalResult",
             Msg::Shutdown => "Shutdown",
             Msg::Abort { .. } => "Abort",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::HeartbeatAck { .. } => "HeartbeatAck",
+            Msg::Rejoin { .. } => "Rejoin",
         }
     }
 
@@ -334,6 +374,18 @@ impl Msg {
             Msg::Abort { reason } => {
                 buf.push(TAG_ABORT);
                 write_str(&mut buf, reason);
+            }
+            Msg::Heartbeat { nonce } => {
+                buf.push(TAG_HEARTBEAT);
+                write_u64(&mut buf, *nonce);
+            }
+            Msg::HeartbeatAck { nonce } => {
+                buf.push(TAG_HEARTBEAT_ACK);
+                write_u64(&mut buf, *nonce);
+            }
+            Msg::Rejoin { rank } => {
+                buf.push(TAG_REJOIN);
+                write_u32(&mut buf, *rank);
             }
         }
         buf
@@ -399,6 +451,9 @@ impl Msg {
             TAG_ABORT => Msg::Abort {
                 reason: read_str(r)?,
             },
+            TAG_HEARTBEAT => Msg::Heartbeat { nonce: r.u64()? },
+            TAG_HEARTBEAT_ACK => Msg::HeartbeatAck { nonce: r.u64()? },
+            TAG_REJOIN => Msg::Rejoin { rank: r.u32()? },
             other => return Err(bad(format!("unknown message tag {other}"))),
         })
     }
@@ -428,6 +483,7 @@ mod tests {
                 max_bits: 8,
             },
             ownership_fingerprint: 0xdead_beef_cafe_f00d,
+            plans_from: None,
         }
     }
 
@@ -506,6 +562,33 @@ mod tests {
             reason: "mismatch".into(),
         }) {
             Msg::Abort { reason } => assert_eq!(reason, "mismatch"),
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::Heartbeat { nonce: 0xfeed }) {
+            Msg::Heartbeat { nonce } => assert_eq!(nonce, 0xfeed),
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::HeartbeatAck { nonce: 0xfeed }) {
+            Msg::HeartbeatAck { nonce } => assert_eq!(nonce, 0xfeed),
+            other => panic!("{}", other.kind()),
+        }
+        match roundtrip(&Msg::Rejoin { rank: 2 }) {
+            Msg::Rejoin { rank } => assert_eq!(rank, 2),
+            other => panic!("{}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn setup_plans_from_round_trips() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32 * 0.5);
+        let mut s = setup();
+        s.plans_from = Some((12, vec![m.clone(), m.clone()]));
+        match roundtrip(&Msg::Setup(Box::new(s))) {
+            Msg::Setup(got) => {
+                let (epoch, weights) = got.plans_from.expect("plans_from lost on the wire");
+                assert_eq!(epoch, 12);
+                assert_eq!(weights, vec![m.clone(), m]);
+            }
             other => panic!("{}", other.kind()),
         }
     }

@@ -96,8 +96,8 @@ pub mod varmin;
 pub mod prelude {
     pub use crate::alloc::{BitAllocator, BitPlan, BlockStats, PlannedTensor};
     pub use crate::config::{
-        AllocationConfig, DatasetSpec, ExperimentConfig, ParallelismConfig, PartitionConfig,
-        QuantConfig, QuantMode, ServeConfig, TrainConfig,
+        AllocationConfig, DatasetSpec, ExperimentConfig, FaultToleranceConfig, ParallelismConfig,
+        PartitionConfig, QuantConfig, QuantMode, ServeConfig, TrainConfig,
     };
     pub use crate::engine::QuantEngine;
     pub use crate::graph::{CsrMatrix, Dataset, GraphGenerator};
@@ -130,6 +130,10 @@ pub enum Error {
     Runtime(String),
     /// Underlying I/O failure.
     Io(std::io::Error),
+    /// A read/write deadline expired. Distinct from [`Error::Io`]: the
+    /// peer may still be alive (suspect, not dead), so callers with a
+    /// retry budget may re-attempt the operation.
+    Timeout(String),
     /// Numerical-domain failure (NaN, divergence, empty baseline, …).
     Numerical(String),
 }
@@ -142,6 +146,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
         }
     }

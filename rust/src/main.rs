@@ -74,6 +74,23 @@ TRAIN OPTIONS:
                                   (atomic temp-then-rename) during training
     --checkpoint-every <n>        checkpoint interval in epochs (default 10)
     --resume <path>               distributed: resume from a checkpoint
+    --io-timeout-ms <ms>          distributed: per-read/write socket deadline
+                                  (default 30000; 0 = block forever); a worker
+                                  missing it goes *suspect*, is retried with
+                                  capped exponential backoff, then declared
+                                  dead and its partitions reassigned
+    --heartbeat-every <n>         distributed: leader heartbeat cadence in
+                                  epochs (default 1; 0 = off)
+    --max-retries <n>             distributed: suspect-probe retries before a
+                                  worker is declared dead (default 2)
+    --max-restarts <n>            distributed: elastic worker restarts per run
+                                  (default 2); a dead worker is re-spawned
+                                  with --rejoin and re-Setup mid-run, with the
+                                  result bit-identical to an undisturbed run
+    --chaos <spec>                distributed: deterministic fault injection,
+                                  'rank:index:kind[:ms]' events joined by ';'
+                                  (kinds: drop, delay:<ms>, trunc, flip);
+                                  the IEXACT_CHAOS env var overrides this
     --save-model <path>           write a V1 model checkpoint after training
                                   (full-graph native path only); feed it to
                                   `iexact serve --checkpoint`
@@ -92,6 +109,11 @@ SERVE OPTIONS:
     --serve-bits <b>       transcode the packed store to b bits before
                            serving (0 = keep the build width; SGQuant-style
                            train-wide / serve-narrow)
+    --read-timeout-ms <ms> per-connection read deadline (default 30000); a
+                           stalled client is disconnected and counted in the
+                           stats instead of pinning a handler thread
+    --max-connections <n>  concurrent connection cap (default 256); beyond it
+                           new connections are shed with a named error reply
     --self-test            fire a concurrent mixed query burst against the
                            running server, verify replies bit-identical to a
                            full offline dequantize and packed residency
@@ -345,8 +367,16 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         let addr = opts.get("connect").ok_or_else(|| {
             iexact::Error::Config("--worker-rank requires --connect <addr>".into())
         })?;
-        let opts = iexact::coordinator::dist::WorkerOptions::default();
-        return iexact::coordinator::dist::run_worker(addr, rank, &opts);
+        // `--rejoin` marks an elastic replacement for a dead rank; the
+        // chaos schedule (if any) arrives through the env var the
+        // leader set when spawning this process.
+        let wopts = iexact::coordinator::dist::WorkerOptions {
+            rejoin: opts.contains_key("rejoin"),
+            chaos: iexact::coordinator::dist::chaos::ChaosSchedule::from_env()
+                .map_err(iexact::Error::Config)?,
+            ..Default::default()
+        };
+        return iexact::coordinator::dist::run_worker(addr, rank, &wopts);
     }
     let mut cfg = if let Some(path) = opts.get("config") {
         ExperimentConfig::from_toml_file(std::path::Path::new(path))?
@@ -454,6 +484,40 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
             ))
         })?;
     }
+    // Fault-tolerance knobs for distributed runs. Invalid values are
+    // rejected, like --threads; ranges (and the chaos grammar) are
+    // vetted by `validate` below with key-pathed messages.
+    if let Some(t) = opts.get("io-timeout-ms") {
+        cfg.train.fault_tolerance.io_timeout_ms = t.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--io-timeout-ms expects a millisecond count, got '{t}'"
+            ))
+        })?;
+    }
+    if let Some(h) = opts.get("heartbeat-every") {
+        cfg.train.fault_tolerance.heartbeat_every_epochs = h.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--heartbeat-every expects a non-negative epoch count, got '{h}'"
+            ))
+        })?;
+    }
+    if let Some(r) = opts.get("max-retries") {
+        cfg.train.fault_tolerance.max_retries = r.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--max-retries expects a non-negative integer, got '{r}'"
+            ))
+        })?;
+    }
+    if let Some(r) = opts.get("max-restarts") {
+        cfg.train.fault_tolerance.max_restarts = r.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--max-restarts expects a non-negative integer, got '{r}'"
+            ))
+        })?;
+    }
+    if let Some(c) = opts.get("chaos") {
+        cfg.train.fault_tolerance.chaos = Some(c.clone());
+    }
     cfg.validate()?;
     let ds = cfg.dataset.generate(cfg.dataset_seed);
     eprintln!(
@@ -516,7 +580,7 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
         let wire_pct = 100.0 * out.wire.halo_payload_bytes as f64
             / (out.wire.halo_f32_bytes.max(1)) as f64;
         println!(
-            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}\nedge cut:      {:.1}%\nworkers:       {}\nhalo wire KB:  {} ({:.1}% of the f32 {} KB)\nreassigned partitions: {}",
+            "test accuracy: {:.4}\nepochs/sec:    {:.2}\npeak stash KB: {}\nedge cut:      {:.1}%\nworkers:       {}\nhalo wire KB:  {} ({:.1}% of the f32 {} KB)\nreassigned partitions: {}\nfaults:        {} timeouts, {} heartbeat misses, {} deaths, {} restarts",
             out.result.result.test_accuracy,
             out.result.result.epochs_per_sec,
             out.result.result.stash_bytes / 1024,
@@ -525,7 +589,11 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
             out.wire.halo_payload_bytes / 1024,
             wire_pct,
             out.wire.halo_f32_bytes / 1024,
-            out.reassigned_partitions
+            out.reassigned_partitions,
+            out.faults.timeouts,
+            out.faults.heartbeat_misses,
+            out.faults.deaths,
+            out.faults.restarts
         );
         if let Some(path) = opts.get("csv") {
             std::fs::write(path, out.result.result.curve.to_csv())?;
@@ -605,42 +673,75 @@ fn cmd_train(opts: &Opts) -> iexact::Result<()> {
 }
 
 /// Spawn the worker processes (`iexact train --worker-rank R --connect
-/// ADDR` on an ephemeral localhost port), run the leader loop, then
-/// reap the children. On a leader error the workers are killed first —
-/// one could still be blocked reading a socket the leader never served.
+/// ADDR` on an ephemeral localhost port) and run the leader loop with
+/// an elastic respawn hook: a worker declared dead is replaced by a
+/// `--rejoin` child (within the `[fault_tolerance] max_restarts`
+/// budget). Every child ever spawned is owned by a [`ChildReaper`]
+/// drop guard, so no worker process outlives the leader on *any* exit
+/// path — clean return, error, or panic. (The pre-guard code killed
+/// children only on the error return, so an early `?` or a panic left
+/// workers blocked on their sockets forever.)
 fn run_distributed_leader(
     cfg: &ExperimentConfig,
     seed: u64,
     resume: Option<iexact::checkpoint::TrainState>,
 ) -> iexact::Result<iexact::coordinator::dist::DistTrainOutcome> {
+    use iexact::coordinator::dist::{chaos, ChildReaper, DistHooks};
+
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     let exe = std::env::current_exe()?;
-    let mut children = Vec::new();
-    for rank in 0..cfg.train.distributed.workers {
-        let child = std::process::Command::new(&exe)
-            .arg("train")
+    // A config chaos schedule reaches the children through the env var;
+    // an IEXACT_CHAOS already set on the leader wins, so a driver can
+    // target the workers directly.
+    let chaos_spec = match std::env::var(chaos::CHAOS_ENV) {
+        Ok(s) if !s.is_empty() => Some(s),
+        _ => cfg.train.fault_tolerance.chaos.clone(),
+    };
+    let spawn_worker = |rank: u32, rejoin: bool| -> iexact::Result<std::process::Child> {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("train")
             .arg("--worker-rank")
             .arg(rank.to_string())
             .arg("--connect")
-            .arg(&addr)
-            .spawn()?;
-        children.push(child);
-    }
-    let result = iexact::coordinator::dist::train_distributed(
-        &listener,
-        &cfg.dataset,
-        cfg.dataset_seed,
-        &cfg.quant,
-        &cfg.train,
-        seed,
-        resume,
-    );
-    for mut child in children {
-        if result.is_err() {
-            let _ = child.kill();
+            .arg(&addr);
+        if rejoin {
+            cmd.arg("--rejoin");
         }
-        let _ = child.wait();
+        if let Some(spec) = &chaos_spec {
+            cmd.env(chaos::CHAOS_ENV, spec);
+        }
+        cmd.spawn().map_err(iexact::Error::Io)
+    };
+    let reaper = std::cell::RefCell::new(ChildReaper::new());
+    for rank in 0..cfg.train.distributed.workers {
+        reaper.borrow_mut().push(spawn_worker(rank as u32, false)?);
+    }
+    let result = {
+        let hooks = DistHooks {
+            respawn: Some(Box::new(|rank| {
+                reaper.borrow_mut().push(spawn_worker(rank, true)?);
+                Ok(())
+            })),
+        };
+        iexact::coordinator::dist::train_distributed_with(
+            &listener,
+            &cfg.dataset,
+            cfg.dataset_seed,
+            &cfg.quant,
+            &cfg.train,
+            seed,
+            resume,
+            hooks,
+        )
+    };
+    if result.is_ok() {
+        // Clean run: the workers just received `Shutdown` — give them a
+        // grace period to exit on their own, then reap (or kill) the
+        // stragglers. On errors the reaper's Drop kills everything.
+        reaper
+            .borrow_mut()
+            .wait_all(std::time::Duration::from_secs(10));
     }
     result
 }
@@ -716,6 +817,20 @@ fn cmd_serve(opts: &Opts) -> iexact::Result<()> {
             iexact::Error::Config(format!("--serve-bits expects 0/1/2/4/8, got '{b}'"))
         })?;
     }
+    if let Some(t) = opts.get("read-timeout-ms") {
+        cfg.read_timeout_ms = t.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--read-timeout-ms expects a millisecond count, got '{t}'"
+            ))
+        })?;
+    }
+    if let Some(c) = opts.get("max-connections") {
+        cfg.max_connections = c.parse().map_err(|_| {
+            iexact::Error::Config(format!(
+                "--max-connections expects a positive integer, got '{c}'"
+            ))
+        })?;
+    }
     cfg.validate()?;
 
     let engine =
@@ -739,7 +854,7 @@ fn cmd_serve(opts: &Opts) -> iexact::Result<()> {
     if opts.contains_key("self-test") {
         let addr = handle.addr();
         serve_self_test(&addr, &model, &ds, &cfg)?;
-        let (stats, pool) = handle.join();
+        let (stats, pool) = handle.join()?;
         let dense_floats = stats.f32_bytes / 4;
         let take = pool.stats().max_float_take;
         if take >= dense_floats {
@@ -761,10 +876,17 @@ fn cmd_serve(opts: &Opts) -> iexact::Result<()> {
         return Ok(());
     }
     // Long-running mode: serve until a client sends Shutdown.
-    let (stats, _) = handle.join();
+    let (stats, _) = handle.join()?;
     println!(
-        "served {} queries in {} batches ({} blocks decoded of {} requested)",
-        stats.queries, stats.batches, stats.decoded_blocks, stats.requested_blocks
+        "served {} queries in {} batches ({} blocks decoded of {} requested; \
+         connections: {} dropped, {} shed, {} timed out)",
+        stats.queries,
+        stats.batches,
+        stats.decoded_blocks,
+        stats.requested_blocks,
+        stats.dropped_connections,
+        stats.shed_connections,
+        stats.timed_out_connections
     );
     Ok(())
 }

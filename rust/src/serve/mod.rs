@@ -78,6 +78,16 @@ pub struct ServeStats {
     pub packed_resident_bytes: usize,
     /// Bytes the dense `f32` embedding matrix would occupy.
     pub f32_bytes: usize,
+    /// Connections closed on a frame-level failure (desynced peer,
+    /// checksum mismatch, death mid-frame). Counted by the TCP front
+    /// end; always 0 for the in-process API.
+    pub dropped_connections: u64,
+    /// Connections refused with a named error because the server was
+    /// already at `serve.max_connections` (load shedding).
+    pub shed_connections: u64,
+    /// Connections closed because a client stalled past
+    /// `serve.read_timeout_ms` mid-request.
+    pub timed_out_connections: u64,
 }
 
 /// The packed-resident embedding store: quantized final-layer
@@ -256,6 +266,7 @@ pub struct ServeEngine {
     batches: u64,
     decoded_blocks: u64,
     requested_blocks: u64,
+    panic_after_batches: Option<u64>,
 }
 
 impl ServeEngine {
@@ -267,7 +278,16 @@ impl ServeEngine {
             batches: 0,
             decoded_blocks: 0,
             requested_blocks: 0,
+            panic_after_batches: None,
         }
+    }
+
+    /// Fault injection for the dispatcher-panic tests: the engine
+    /// panics while answering its `batches`-th batch from now. Not part
+    /// of the serving API.
+    #[doc(hidden)]
+    pub fn inject_panic_after(&mut self, batches: u64) {
+        self.panic_after_batches = Some(self.batches + batches);
     }
 
     pub fn store(&self) -> &EmbeddingStore {
@@ -282,6 +302,11 @@ impl ServeEngine {
             requested_blocks: self.requested_blocks,
             packed_resident_bytes: self.store.packed_resident_bytes(),
             f32_bytes: self.store.f32_bytes(),
+            // Connection-level counters belong to the TCP front end
+            // (`server`), which merges them into wire Stats replies.
+            dropped_connections: 0,
+            shed_connections: 0,
+            timed_out_connections: 0,
         }
     }
 
@@ -322,6 +347,10 @@ impl ServeEngine {
         self.decoded_blocks += blocks.len() as u64;
         self.queries += queries.len() as u64;
         self.batches += 1;
+        if self.panic_after_batches.is_some_and(|at| self.batches >= at) {
+            self.panic_after_batches = None;
+            panic!("injected serve dispatcher panic (inject_panic_after)");
+        }
 
         let mut arena = pool.take_floats_scratch(blocks.len() * group_len);
         if let Err(e) = self
@@ -531,9 +560,30 @@ impl BatchQueue {
     /// Blocks until every outstanding [`QueueClient`] is dropped too,
     /// then returns the engine (for final stats) and its pool (whose
     /// `max_float_take` proves no dense matrix was ever built).
-    pub fn shutdown(self) -> (ServeEngine, BufferPool) {
+    ///
+    /// A dispatcher that died of an uncontained panic surfaces here as
+    /// a named [`Error::Runtime`] instead of propagating the panic into
+    /// the caller (the serve CLI, the leader's self-test) — clients
+    /// observed it as `queue closed` errors already, never as a hang.
+    pub fn shutdown(self) -> Result<(ServeEngine, BufferPool)> {
         drop(self.tx);
-        self.handle.join().expect("serve dispatcher panicked")
+        self.handle.join().map_err(|panic| {
+            Error::Runtime(format!(
+                "serve dispatcher panicked: {}",
+                panic_message(&panic)
+            ))
+        })
+    }
+}
+
+/// Best-effort human-readable payload of a caught panic.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -581,7 +631,22 @@ fn dispatch(
             }
         }
         let queries: Vec<Query> = pending.iter().map(|(q, _)| q.clone()).collect();
-        let results = engine.answer_batch(&queries, &mut pool);
+        // Contain per-batch panics (a bug in the decode path, or the
+        // injected test panic): the batch's clients each get a named
+        // error and the dispatcher keeps serving later batches. The
+        // worst leak is one tile arena stranded outside the pool.
+        let results = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.answer_batch(&queries, &mut pool)
+        })) {
+            Ok(results) => results,
+            Err(panic) => {
+                let msg = format!(
+                    "serve dispatcher panicked answering a batch: {}",
+                    panic_message(&panic)
+                );
+                queries.iter().map(|_| Err(Error::Runtime(msg.clone()))).collect()
+            }
+        };
         for ((_, tx), result) in pending.into_iter().zip(results) {
             // A client that gave up waiting is not an error.
             let _ = tx.send(result);

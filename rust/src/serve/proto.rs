@@ -161,6 +161,9 @@ impl Reply {
                 write_u64(&mut buf, s.requested_blocks);
                 write_u64(&mut buf, s.packed_resident_bytes as u64);
                 write_u64(&mut buf, s.f32_bytes as u64);
+                write_u64(&mut buf, s.dropped_connections);
+                write_u64(&mut buf, s.shed_connections);
+                write_u64(&mut buf, s.timed_out_connections);
             }
             Reply::Error(msg) => {
                 buf.push(TAG_ERROR);
@@ -202,6 +205,9 @@ impl Reply {
                 requested_blocks: r.u64()?,
                 packed_resident_bytes: r.u64()? as usize,
                 f32_bytes: r.u64()? as usize,
+                dropped_connections: r.u64()?,
+                shed_connections: r.u64()?,
+                timed_out_connections: r.u64()?,
             }),
             TAG_ERROR => {
                 let len = r.u64()? as usize;
@@ -246,6 +252,9 @@ mod tests {
             requested_blocks: 17,
             packed_resident_bytes: 4096,
             f32_bytes: 65536,
+            dropped_connections: 2,
+            shed_connections: 1,
+            timed_out_connections: 4,
         };
         for reply in [
             Reply::Rows(m),

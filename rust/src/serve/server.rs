@@ -7,16 +7,61 @@
 //! per client; every handler funnels into the shared [`BatchQueue`]
 //! dispatcher, which is where concurrent requests coalesce into shared
 //! decode batches.
+//!
+//! # Graceful degradation (PR 10)
+//!
+//! Every connection read carries a `serve.read_timeout_ms` deadline, so
+//! a stalled client is disconnected (and counted in
+//! [`ServeStats::timed_out_connections`]) instead of pinning a handler
+//! thread forever. At `serve.max_connections` concurrent handlers, new
+//! connections are **shed**: they receive a named `Error` reply and are
+//! closed immediately ([`ServeStats::shed_connections`]) — overload
+//! degrades loudly rather than queueing unboundedly. Frame-level
+//! failures (desynced peer, checksum mismatch, death mid-frame) close
+//! the connection and count in
+//! [`ServeStats::dropped_connections`]; all three counters are merged
+//! into every wire `Stats` reply and into [`ServerHandle::join`]'s
+//! final snapshot.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::dist::frame::{read_frame, write_frame};
+use crate::coordinator::dist::frame::{read_frame, write_frame, FrameConn};
 use crate::memory::BufferPool;
 use crate::serve::proto::{Reply, Request};
 use crate::serve::{BatchQueue, Query, QueueClient, ServeEngine, ServeStats};
 use crate::{config::ServeConfig, Error, Result};
+
+/// Connection-level counters shared by the acceptor, every handler
+/// thread, and [`ServerHandle::join`]. Relaxed ordering everywhere:
+/// these are statistics, not synchronization.
+#[derive(Default)]
+struct ConnCounters {
+    /// Live handler threads (incremented *before* the handler spawns so
+    /// the shed check can never overshoot `max_connections`).
+    active: AtomicUsize,
+    dropped: AtomicU64,
+    shed: AtomicU64,
+    timed_out: AtomicU64,
+}
+
+impl ConnCounters {
+    fn merge_into(&self, stats: &mut ServeStats) {
+        stats.dropped_connections = self.dropped.load(Ordering::Relaxed);
+        stats.shed_connections = self.shed.load(Ordering::Relaxed);
+        stats.timed_out_connections = self.timed_out.load(Ordering::Relaxed);
+    }
+}
+
+/// Decrements `active` when a handler exits, however it exits.
+struct ActiveGuard(Arc<ConnCounters>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// A running serve instance: TCP acceptor + batch dispatcher.
 /// Dropping the handle without [`ServerHandle::join`] leaks the
@@ -25,6 +70,7 @@ pub struct ServerHandle {
     addr: SocketAddr,
     accept: std::thread::JoinHandle<()>,
     queue: BatchQueue,
+    counters: Arc<ConnCounters>,
 }
 
 impl ServerHandle {
@@ -38,14 +84,21 @@ impl ServerHandle {
         let queue = BatchQueue::spawn(engine, BufferPool::new(), cfg)?;
         let client = queue.client();
         let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(ConnCounters::default());
+        let limits = ConnLimits {
+            read_timeout_ms: cfg.read_timeout_ms,
+            max_connections: cfg.max_connections,
+        };
+        let acc_counters = counters.clone();
         let accept = std::thread::Builder::new()
             .name("iexact-serve-accept".into())
-            .spawn(move || accept_loop(listener, addr, client, stop))
+            .spawn(move || accept_loop(listener, addr, client, stop, acc_counters, limits))
             .map_err(Error::Io)?;
         Ok(ServerHandle {
             addr,
             accept,
             queue,
+            counters,
         })
     }
 
@@ -55,15 +108,25 @@ impl ServerHandle {
     }
 
     /// Wait for the acceptor to stop (a client sent `Shutdown`), drain
-    /// the batch queue, and return final serving stats.
-    /// Also returns the dispatcher's [`BufferPool`] so callers can
-    /// read `max_float_take` — the proof that serving never built a
-    /// dense matrix.
-    pub fn join(self) -> (ServeStats, BufferPool) {
+    /// the batch queue, and return final serving stats (connection
+    /// counters included). Also returns the dispatcher's
+    /// [`BufferPool`] so callers can read `max_float_take` — the proof
+    /// that serving never built a dense matrix. A dispatcher that died
+    /// of an uncontained panic surfaces as a named error, not a panic.
+    pub fn join(self) -> Result<(ServeStats, BufferPool)> {
         let _ = self.accept.join();
-        let (engine, pool) = self.queue.shutdown();
-        (engine.stats(), pool)
+        let counters = self.counters;
+        let (engine, pool) = self.queue.shutdown()?;
+        let mut stats = engine.stats();
+        counters.merge_into(&mut stats);
+        Ok((stats, pool))
     }
+}
+
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    read_timeout_ms: u64,
+    max_connections: usize,
 }
 
 fn accept_loop(
@@ -71,33 +134,78 @@ fn accept_loop(
     addr: SocketAddr,
     client: QueueClient,
     stop: Arc<AtomicBool>,
+    counters: Arc<ConnCounters>,
+    limits: ConnLimits,
 ) {
     loop {
-        let (stream, _) = match listener.accept() {
+        let (mut stream, _) = match listener.accept() {
             Ok(conn) => conn,
             Err(_) => break,
         };
         if stop.load(Ordering::SeqCst) {
             break;
         }
+        // Shed on overload: a named error reply, then close. (Checked
+        // after `stop` so the shutdown self-connect always gets
+        // through.)
+        if counters.active.load(Ordering::Relaxed) >= limits.max_connections {
+            counters.shed.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply::Error(format!(
+                "server at max_connections ({}), connection shed",
+                limits.max_connections
+            ));
+            let _ = write_frame(&mut stream, &reply.encode());
+            continue;
+        }
+        counters.active.fetch_add(1, Ordering::Relaxed);
+        let guard = ActiveGuard(counters.clone());
         let client = client.clone();
         let stop = stop.clone();
+        let conn_counters = counters.clone();
         // Handler threads are detached; the batch queue's shutdown
         // joins on their QueueClient clones dropping, which happens
-        // when their sockets close.
+        // when their sockets close. If the spawn itself fails, the
+        // moved guard still decrements `active`.
         let _ = std::thread::Builder::new()
             .name("iexact-serve-conn".into())
-            .spawn(move || handle_conn(stream, addr, client, stop));
+            .spawn(move || {
+                let _guard = guard;
+                handle_conn(stream, addr, client, stop, conn_counters, limits)
+            });
     }
 }
 
-fn handle_conn(mut stream: TcpStream, addr: SocketAddr, client: QueueClient, stop: Arc<AtomicBool>) {
+fn handle_conn(
+    stream: TcpStream,
+    addr: SocketAddr,
+    client: QueueClient,
+    stop: Arc<AtomicBool>,
+    counters: Arc<ConnCounters>,
+    limits: ConnLimits,
+) {
+    let mut conn = FrameConn::new(stream, "serve client");
+    if conn.set_deadline_ms(limits.read_timeout_ms).is_err() {
+        counters.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
     loop {
-        let payload = match read_frame(&mut stream) {
+        let payload = match conn.read_frame() {
             Ok(p) => p,
-            // Closed or desynced peer: drop the connection. The frame
-            // layer cannot resync mid-stream, so no error reply.
-            Err(_) => break,
+            // A stalled client is disconnected, not waited on. No
+            // retry here — unlike the dist leader, the server owes a
+            // slow client nothing.
+            Err(Error::Timeout(_)) => {
+                counters.timed_out.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            // Clean disconnect between requests: the normal end of a
+            // conversation.
+            Err(Error::Io(_)) if !conn.mid_frame() => break,
+            // Died mid-frame, or desynced/corrupt framing: count it.
+            Err(_) => {
+                counters.dropped.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
         };
         let reply = match Request::decode(&payload) {
             Err(e) => Reply::Error(e.to_string()),
@@ -110,18 +218,22 @@ fn handle_conn(mut stream: TcpStream, addr: SocketAddr, client: QueueClient, sto
                 Err(e) => Reply::Error(e.to_string()),
             },
             Ok(Request::Stats) => match client.stats() {
-                Ok(s) => Reply::Stats(s),
+                Ok(mut s) => {
+                    counters.merge_into(&mut s);
+                    Reply::Stats(s)
+                }
                 Err(e) => Reply::Error(e.to_string()),
             },
             Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
-                let _ = write_frame(&mut stream, &Reply::Bye.encode());
+                let _ = conn.write_frame(&Reply::Bye.encode());
                 // Unblock the acceptor so it observes the stop flag.
                 let _ = TcpStream::connect(addr);
                 break;
             }
         };
-        if write_frame(&mut stream, &reply.encode()).is_err() {
+        if conn.write_frame(&reply.encode()).is_err() {
+            counters.dropped.fetch_add(1, Ordering::Relaxed);
             break;
         }
     }

@@ -1,0 +1,317 @@
+//! Deterministic chaos suite for the fault-tolerant distributed
+//! runtime (ISSUE 10).
+//!
+//! Every test drives `train_distributed` (or `_with`) against workers
+//! armed with a seeded [`ChaosSchedule`] and holds the runtime to the
+//! acceptance bar: under **every** fault schedule the run either
+//! completes with final weights **bit-identical** to an undisturbed
+//! run, or fails with a *named* error — and no test may hang (each is
+//! watchdog-bounded). The hung-worker test additionally pins the
+//! latency claim: a stalled-but-alive worker is declared dead within
+//! the configured deadline budget, not waited out.
+
+use iexact::checkpoint::state_to_bytes;
+use iexact::config::{DatasetSpec, PartitionConfig, QuantConfig, TrainConfig};
+use iexact::coordinator::dist::chaos::{ChaosSchedule, Fault};
+use iexact::coordinator::dist::{
+    run_worker, train_distributed, train_distributed_with, DistHooks, DistTrainOutcome,
+    WorkerOptions,
+};
+use iexact::pipeline::{train_partitioned_span, PartitionTrainResult};
+use std::net::TcpListener;
+use std::time::Duration;
+
+const DATASET_SEED: u64 = 1;
+const SEED: u64 = 7;
+
+fn spec() -> DatasetSpec {
+    DatasetSpec::tiny()
+}
+
+fn base_cfg(k: usize, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        hidden_dim: 32,
+        num_layers: 3,
+        epochs: 6,
+        lr: 0.02,
+        eval_every: 2,
+        seeds: vec![SEED],
+        partition: PartitionConfig {
+            num_partitions: k,
+            halo_hops: 1,
+            cache_bits: 2,
+            ..PartitionConfig::default()
+        },
+        ..TrainConfig::default()
+    };
+    cfg.distributed.workers = workers;
+    cfg
+}
+
+/// Run `f` on its own thread and panic (failing the test) if it does
+/// not finish within `secs` — the suite's no-hang guarantee. A timed
+/// out closure's thread leaks, which is fine: the watchdog firing IS
+/// the test failure.
+fn watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("watchdog: test exceeded its deadline — the runtime hung")
+}
+
+/// Leader + in-process chaos-armed worker threads over real TCP.
+/// Worker threads are detached, not joined: a chaos-killed or stalled
+/// worker exits on its own once the leader's sockets close, and a
+/// join here would re-introduce exactly the hang the suite forbids.
+fn run_chaos(
+    quant: &QuantConfig,
+    cfg: &TrainConfig,
+    opts: Vec<WorkerOptions>,
+) -> iexact::Result<DistTrainOutcome> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    for (rank, o) in opts.into_iter().enumerate() {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let _ = run_worker(&addr, rank as u32, &o);
+        });
+    }
+    train_distributed(&listener, &spec(), DATASET_SEED, quant, cfg, SEED, None)
+}
+
+fn reference(quant: &QuantConfig, k: usize) -> PartitionTrainResult {
+    let ds = spec().generate(DATASET_SEED);
+    train_partitioned_span(&ds, quant, &base_cfg(k, 0), SEED, None)
+        .unwrap()
+        .0
+}
+
+fn assert_weights_identical(a: &PartitionTrainResult, b: &PartitionTrainResult, what: &str) {
+    assert_eq!(
+        a.result.curve.train_loss, b.result.curve.train_loss,
+        "{what}: train-loss curve diverged"
+    );
+    assert_eq!(
+        a.result.test_accuracy, b.result.test_accuracy,
+        "{what}: test accuracy diverged"
+    );
+    for (l, (wa, wb)) in a.model.weights.iter().zip(&b.model.weights).enumerate() {
+        assert_eq!(
+            wa.as_slice(),
+            wb.as_slice(),
+            "{what}: layer {l} weights diverged"
+        );
+    }
+}
+
+fn chaos_opts(schedule: &ChaosSchedule, workers: usize) -> Vec<WorkerOptions> {
+    (0..workers)
+        .map(|_| WorkerOptions {
+            chaos: Some(schedule.clone()),
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// Each fault kind on a steady-state frame of worker 1: survivable
+/// kinds (drop, delay, truncate) complete bit-identical to the
+/// undisturbed reference; a bit-flip is a *confused* peer, which must
+/// fail loudly as a named checksum error, never silently train on.
+#[test]
+fn every_fault_kind_completes_identical_or_fails_named() {
+    watchdog(300, || {
+        let quant = QuantConfig::int2_blockwise(4);
+        let reference = reference(&quant, 4);
+        for (spec_str, lethal) in [
+            ("1:4:drop", true),
+            ("1:4:delay:100", false),
+            ("1:4:trunc", true),
+        ] {
+            let schedule = ChaosSchedule::parse(spec_str).unwrap();
+            let out = run_chaos(&quant, &base_cfg(4, 2), chaos_opts(&schedule, 2)).unwrap();
+            assert_weights_identical(&reference, &out.result, spec_str);
+            if lethal {
+                assert!(
+                    out.faults.deaths >= 1,
+                    "{spec_str}: the faulted worker was never declared dead"
+                );
+                assert!(
+                    out.reassigned_partitions > 0,
+                    "{spec_str}: no partitions were reassigned"
+                );
+            } else {
+                assert_eq!(
+                    out.faults.deaths, 0,
+                    "{spec_str}: a merely slow worker was declared dead"
+                );
+            }
+        }
+        // Bit-flip: the frame checksum must catch it and the leader
+        // must abort with a named protocol error.
+        let schedule = ChaosSchedule::parse("1:4:flip").unwrap();
+        let err = run_chaos(&quant, &base_cfg(4, 2), chaos_opts(&schedule, 2)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("checksum"), "{msg}");
+    });
+}
+
+/// Seeded pseudo-random schedules over both workers: every outcome is
+/// either bit-identical completion or a named error — nothing hangs,
+/// nothing silently diverges.
+#[test]
+fn seeded_schedules_complete_identical_or_fail_named() {
+    watchdog(600, || {
+        let quant = QuantConfig::int2_blockwise(4);
+        let reference = reference(&quant, 4);
+        let kinds = [Fault::Drop, Fault::Delay { ms: 30 }, Fault::Truncate];
+        for chaos_seed in 1..=4u64 {
+            let schedule = ChaosSchedule::seeded(chaos_seed, 2, 3, 24, &kinds);
+            assert!(!schedule.is_empty());
+            match run_chaos(&quant, &base_cfg(4, 2), chaos_opts(&schedule, 2)) {
+                Ok(out) => {
+                    assert_weights_identical(
+                        &reference,
+                        &out.result,
+                        &format!("chaos seed {chaos_seed}"),
+                    );
+                }
+                Err(e) => {
+                    // Only the all-dead exhaustion is an acceptable
+                    // failure for these (non-corrupting) kinds, and it
+                    // must be the named protocol error.
+                    let msg = e.to_string();
+                    assert!(
+                        msg.contains("workers are dead"),
+                        "chaos seed {chaos_seed}: unexpected failure: {msg}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The latency acceptance bar: a hung-but-alive worker (stalls 8 s
+/// mid-epoch) no longer stalls the epoch past the configured deadline
+/// budget. With `io_timeout_ms = 150` and one retry, the leader must
+/// declare it dead, reassign, and finish the whole run — bit-identical
+/// — in a small multiple of the deadline, not the stall.
+#[test]
+fn hung_worker_is_declared_dead_within_the_deadline_budget() {
+    watchdog(120, || {
+        let quant = QuantConfig::int2_blockwise(4);
+        let reference = reference(&quant, 4);
+        let mut cfg = base_cfg(4, 2);
+        cfg.fault_tolerance.io_timeout_ms = 150;
+        cfg.fault_tolerance.max_retries = 1;
+        cfg.fault_tolerance.backoff_base_ms = 10;
+        cfg.fault_tolerance.backoff_cap_ms = 20;
+        let opts = vec![
+            WorkerOptions::default(),
+            WorkerOptions {
+                stall_after_steps: Some(1),
+                stall_ms: 8_000,
+                ..Default::default()
+            },
+        ];
+        let t0 = std::time::Instant::now();
+        let out = run_chaos(&quant, &cfg, opts).unwrap();
+        let elapsed = t0.elapsed();
+        assert!(
+            out.faults.timeouts >= 1,
+            "the stall never surfaced as a read deadline"
+        );
+        assert!(
+            out.faults.deaths >= 1,
+            "the hung worker was never declared dead"
+        );
+        assert!(
+            out.reassigned_partitions > 0,
+            "the hung worker's partitions were never reassigned"
+        );
+        assert!(
+            elapsed < Duration::from_millis(6_000),
+            "leader took {elapsed:?} — it waited out the 8 s stall instead of \
+             cutting the worker loose at the deadline"
+        );
+        assert_weights_identical(&reference, &out.result, "hung worker");
+    });
+}
+
+/// Chaos kill + elastic restart in one run: worker 1 is chaos-dropped
+/// mid-epoch, the respawn hook brings up a clean `rejoin` replacement,
+/// and the final state is still bit-identical to the undisturbed run.
+#[test]
+fn chaos_killed_worker_restarts_and_stays_bit_identical() {
+    watchdog(120, || {
+        let quant = QuantConfig::int2_blockwise(4);
+        let ds = spec().generate(DATASET_SEED);
+        let (reference, ref_state) =
+            train_partitioned_span(&ds, &quant, &base_cfg(4, 0), SEED, None).unwrap();
+        let cfg = base_cfg(4, 2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let schedule = ChaosSchedule::parse("1:6:drop").unwrap();
+        for (rank, o) in chaos_opts(&schedule, 2).into_iter().enumerate() {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let _ = run_worker(&addr, rank as u32, &o);
+            });
+        }
+        let out = {
+            let hooks = DistHooks {
+                respawn: Some(Box::new(|rank| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        let _ = run_worker(
+                            &addr,
+                            rank,
+                            &WorkerOptions {
+                                rejoin: true,
+                                ..Default::default()
+                            },
+                        );
+                    });
+                    Ok(())
+                })),
+            };
+            train_distributed_with(
+                &listener,
+                &spec(),
+                DATASET_SEED,
+                &quant,
+                &cfg,
+                SEED,
+                None,
+                hooks,
+            )
+            .unwrap()
+        };
+        assert!(out.faults.deaths >= 1, "the chaos drop was never noticed");
+        assert!(
+            out.faults.restarts >= 1,
+            "the dead worker was never restarted"
+        );
+        assert_weights_identical(&reference, &out.result, "chaos + restart");
+        assert_eq!(
+            state_to_bytes(&ref_state),
+            state_to_bytes(&out.state),
+            "chaos + restart: checkpoint state bytes diverged"
+        );
+    });
+}
+
+/// The spec grammar round-trips through the env-var transport the CLI
+/// leader uses to arm spawned worker processes.
+#[test]
+fn schedule_spec_round_trips() {
+    let schedule = ChaosSchedule::parse("0:3:drop;1:5:delay:250;1:9:trunc;0:11:flip").unwrap();
+    assert_eq!(schedule.len(), 4);
+    let reparsed = ChaosSchedule::parse(&schedule.to_spec()).unwrap();
+    assert_eq!(schedule, reparsed);
+    // Seeded schedules round-trip too (the leader serializes one into
+    // IEXACT_CHAOS for its children).
+    let seeded = ChaosSchedule::seeded(9, 2, 4, 16, &[Fault::Drop, Fault::Delay { ms: 40 }]);
+    assert_eq!(seeded, ChaosSchedule::parse(&seeded.to_spec()).unwrap());
+}

@@ -181,6 +181,7 @@ fn killed_worker_is_reassigned_and_changes_nothing() {
         WorkerOptions::default(),
         WorkerOptions {
             fail_after_steps: Some(3),
+            ..Default::default()
         },
     ];
     let out = run_dist(&quant, &base_cfg(4, 2, false), None, opts).unwrap();
@@ -196,11 +197,151 @@ fn killed_worker_is_reassigned_and_changes_nothing() {
     );
 }
 
+/// The elastic-restart tentpole: worker 1 crashes mid-epoch, the
+/// leader's respawn hook brings up a `--rejoin` replacement, and the
+/// run still finishes bit-identical to the uninterrupted
+/// single-process reference — in both fixed and adaptive-allocation
+/// modes (the latter exercises `plans_from` re-solving on rejoin).
+#[test]
+fn crashed_worker_restarts_rejoins_and_stays_bit_identical() {
+    use iexact::coordinator::dist::{train_distributed_with, DistHooks};
+    let quant = QuantConfig::int2_blockwise(4);
+    let ds = spec().generate(DATASET_SEED);
+    for adaptive in [false, true] {
+        let tag = format!("restart_a{}", adaptive as u8);
+        let (reference, ref_state) =
+            train_partitioned_span(&ds, &quant, &base_cfg(4, 0, adaptive), SEED, None).unwrap();
+        let cfg = base_cfg(4, 2, adaptive);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker_opts = vec![
+            WorkerOptions::default(),
+            WorkerOptions {
+                fail_after_steps: Some(3),
+                ..Default::default()
+            },
+        ];
+        let handles: Vec<_> = worker_opts
+            .into_iter()
+            .enumerate()
+            .map(|(rank, o)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || run_worker(&addr, rank as u32, &o))
+            })
+            .collect();
+        let respawned = std::cell::RefCell::new(Vec::new());
+        let out = {
+            let hooks = DistHooks {
+                respawn: Some(Box::new(|rank| {
+                    let addr = addr.clone();
+                    respawned.borrow_mut().push(std::thread::spawn(move || {
+                        run_worker(
+                            &addr,
+                            rank,
+                            &WorkerOptions {
+                                rejoin: true,
+                                ..Default::default()
+                            },
+                        )
+                    }));
+                    Ok(())
+                })),
+            };
+            train_distributed_with(
+                &listener,
+                &spec(),
+                DATASET_SEED,
+                &quant,
+                &cfg,
+                SEED,
+                None,
+                hooks,
+            )
+            .unwrap()
+        };
+        for h in handles {
+            let _ = h.join().unwrap();
+        }
+        for h in respawned.into_inner() {
+            let _ = h.join().unwrap();
+        }
+        assert!(out.faults.deaths >= 1, "{tag}: the crash was never noticed");
+        assert!(
+            out.faults.restarts >= 1,
+            "{tag}: the dead worker was never restarted"
+        );
+        assert_identical(&reference, &out.result, &tag);
+        assert_eq!(
+            state_to_bytes(&ref_state),
+            state_to_bytes(&out.state),
+            "{tag}: checkpoint state bytes diverged"
+        );
+    }
+}
+
+/// A respawn hook that cannot deliver a replacement consumes restart
+/// budget but must not fail the run: the rank stays dead, partitions
+/// reassign, and the numbers still match the reference.
+#[test]
+fn failed_respawn_degrades_to_reassignment() {
+    use iexact::coordinator::dist::{train_distributed_with, DistHooks};
+    let quant = QuantConfig::int2_blockwise(4);
+    let ds = spec().generate(DATASET_SEED);
+    let (reference, _) =
+        train_partitioned_span(&ds, &quant, &base_cfg(4, 0, false), SEED, None).unwrap();
+    let cfg = base_cfg(4, 2, false);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker_opts = vec![
+        WorkerOptions::default(),
+        WorkerOptions {
+            fail_after_steps: Some(3),
+            ..Default::default()
+        },
+    ];
+    let handles: Vec<_> = worker_opts
+        .into_iter()
+        .enumerate()
+        .map(|(rank, o)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, rank as u32, &o))
+        })
+        .collect();
+    let hooks = DistHooks {
+        respawn: Some(Box::new(|rank| {
+            Err(iexact::Error::Runtime(format!(
+                "injected respawn failure for worker {rank}"
+            )))
+        })),
+    };
+    let out = train_distributed_with(
+        &listener,
+        &spec(),
+        DATASET_SEED,
+        &quant,
+        &cfg,
+        SEED,
+        None,
+        hooks,
+    )
+    .unwrap();
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+    assert!(out.faults.deaths >= 1, "the crash was never noticed");
+    assert!(
+        out.reassigned_partitions > 0,
+        "the dead worker's partitions were never reassigned"
+    );
+    assert_identical(&reference, &out.result, "failed respawn");
+}
+
 #[test]
 fn all_workers_dead_is_a_named_error() {
     let quant = QuantConfig::int2_blockwise(4);
     let opts = vec![WorkerOptions {
         fail_after_steps: Some(0),
+        ..Default::default()
     }];
     let err = run_dist(&quant, &base_cfg(2, 1, false), None, opts).unwrap_err();
     let msg = err.to_string();

@@ -335,6 +335,203 @@ fn wire_planned_tensor_rejections_are_named() {
     assert!(msg.contains("wire planned tensor"), "{msg}");
 }
 
+// ---------------------------------------------------------------------------
+// Distributed + serving timeout paths (ISSUE 10)
+// ---------------------------------------------------------------------------
+
+/// Bounded-run guard: every timeout test must finish inside `secs`.
+fn bounded<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(secs))
+        .expect("watchdog: timeout path hung instead of timing out")
+}
+
+/// A peer that connects and then goes silent must expire the leader's
+/// handshake deadline as a named `Error::Timeout` — not block the run
+/// forever (the pre-ISSUE-10 behaviour).
+#[test]
+fn leader_read_timeout_on_silent_worker_is_named() {
+    bounded(60, || {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Silent "worker": connects, never says Hello, holds the socket.
+        std::thread::spawn(move || {
+            let _s = std::net::TcpStream::connect(addr).unwrap();
+            std::thread::sleep(std::time::Duration::from_secs(30));
+        });
+        let mut cfg = TrainConfig {
+            hidden_dim: 32,
+            epochs: 2,
+            seeds: vec![0],
+            partition: PartitionConfig {
+                num_partitions: 2,
+                halo_hops: 1,
+                ..PartitionConfig::default()
+            },
+            ..TrainConfig::default()
+        };
+        cfg.distributed.workers = 1;
+        cfg.fault_tolerance.io_timeout_ms = 100; // handshake deadline = 10x
+        let t0 = std::time::Instant::now();
+        let err = iexact::coordinator::dist::train_distributed(
+            &listener,
+            &DatasetSpec::tiny(),
+            1,
+            &QuantConfig::int2_blockwise(4),
+            &cfg,
+            0,
+            None,
+        )
+        .unwrap_err();
+        assert!(matches!(err, iexact::Error::Timeout(_)), "{err}");
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(20),
+            "leader took {:?} to give up on a silent worker",
+            t0.elapsed()
+        );
+    });
+}
+
+/// A worker whose leader accepts but never sends `Setup` must give up
+/// at its own setup deadline with a named timeout, not hang.
+#[test]
+fn worker_setup_timeout_is_named() {
+    bounded(60, || {
+        // The "leader" listens but never accepts or speaks; the kernel
+        // backlog completes the worker's connect anyway.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = iexact::coordinator::dist::WorkerOptions {
+            setup_timeout_ms: 100,
+            ..Default::default()
+        };
+        let err = iexact::coordinator::dist::run_worker(&addr, 0, &opts).unwrap_err();
+        assert!(matches!(err, iexact::Error::Timeout(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("waiting for Setup"), "{msg}");
+        drop(listener);
+    });
+}
+
+/// Serve fixture: a tiny deterministic packed store behind a
+/// `ServeEngine` (mirrors the serve_parity fixture, smaller).
+fn serve_engine_fixture() -> iexact::serve::ServeEngine {
+    use iexact::graph::CsrMatrix;
+    let n = 16usize;
+    let dim = 8usize;
+    let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+    for v in 0..n {
+        edges.push((v, v, 0.5));
+        edges.push((v, (v * 3 + 1) % n, 0.25));
+    }
+    let adj = CsrMatrix::from_edges(n, &edges).unwrap();
+    let emb = Matrix::from_fn(n, dim, |r, c| ((r * 13 + c * 5) % 41) as f32 * 0.3 - 4.1);
+    let engine = QuantEngine::serial();
+    let store =
+        iexact::serve::EmbeddingStore::from_embeddings(emb, adj, &engine, 4, 4, 0x5e72_e001)
+            .unwrap();
+    iexact::serve::ServeEngine::new(store, engine)
+}
+
+/// A client that connects and stalls past `read_timeout_ms` is
+/// disconnected (its handler thread freed) and counted in
+/// `timed_out_connections` — visible over the wire and in the final
+/// join stats.
+#[test]
+fn serve_stalled_client_is_disconnected_and_counted() {
+    bounded(60, || {
+        use std::io::Read;
+        let cfg = iexact::config::ServeConfig {
+            read_timeout_ms: 100,
+            ..iexact::config::ServeConfig::default()
+        };
+        let handle = iexact::serve::ServerHandle::start(serve_engine_fixture(), &cfg).unwrap();
+        let addr = handle.addr();
+
+        // The stalled client: connects, sends nothing. The server must
+        // hang up on it (we observe EOF) instead of waiting forever.
+        let mut stalled = std::net::TcpStream::connect(addr).unwrap();
+        let mut sink = Vec::new();
+        let n = stalled.read_to_end(&mut sink).unwrap();
+        assert_eq!(n, 0, "server should close a stalled connection");
+
+        // A healthy client sees the counter over the wire.
+        let mut client = iexact::serve::ServeClient::connect(&addr).unwrap();
+        let stats = client.stats().unwrap();
+        assert!(
+            stats.timed_out_connections >= 1,
+            "stall was not counted: {stats:?}"
+        );
+        client.shutdown().unwrap();
+        drop(client);
+        let (stats, _) = handle.join().unwrap();
+        assert!(stats.timed_out_connections >= 1);
+    });
+}
+
+/// Above `max_connections`, new connections are shed with a named
+/// error reply instead of queueing unboundedly, and the shed is
+/// counted.
+#[test]
+fn serve_sheds_connections_over_the_cap_with_named_error() {
+    bounded(60, || {
+        let cfg = iexact::config::ServeConfig {
+            max_connections: 1,
+            ..iexact::config::ServeConfig::default()
+        };
+        let handle = iexact::serve::ServerHandle::start(serve_engine_fixture(), &cfg).unwrap();
+        let addr = handle.addr();
+
+        let mut holder = iexact::serve::ServeClient::connect(&addr).unwrap();
+        // First query proves the holder's handler is up (active == 1).
+        holder.embed(&[0, 1]).unwrap();
+
+        // Second connection: shed with a named error.
+        let mut shed = iexact::serve::ServeClient::connect(&addr).unwrap();
+        let msg = shed.stats().unwrap_err().to_string();
+        assert!(msg.contains("max_connections"), "{msg}");
+        assert!(msg.contains("shed"), "{msg}");
+        drop(shed);
+
+        // The holder's connection still works and sees the count.
+        let stats = holder.stats().unwrap();
+        assert!(stats.shed_connections >= 1, "{stats:?}");
+        holder.shutdown().unwrap();
+        drop(holder);
+        let (stats, _) = handle.join().unwrap();
+        assert!(stats.shed_connections >= 1);
+    });
+}
+
+/// A dispatcher panic mid-batch is contained: the panicking batch's
+/// queries get a named error, the engine keeps serving, and shutdown
+/// still drains cleanly.
+#[test]
+fn serve_dispatcher_panic_is_contained_and_named() {
+    bounded(60, || {
+        let cfg = iexact::config::ServeConfig::default();
+        let mut engine = serve_engine_fixture();
+        engine.inject_panic_after(1);
+        let handle = iexact::serve::ServerHandle::start(engine, &cfg).unwrap();
+        let addr = handle.addr();
+
+        let mut client = iexact::serve::ServeClient::connect(&addr).unwrap();
+        let msg = client.embed(&[0, 1]).unwrap_err().to_string();
+        assert!(msg.contains("dispatcher panicked"), "{msg}");
+        // The engine survives the contained panic and keeps answering.
+        let rows = client.embed(&[2, 3]).unwrap();
+        assert_eq!(rows.rows(), 2);
+        client.shutdown().unwrap();
+        drop(client);
+        let (stats, _) = handle.join().unwrap();
+        assert!(stats.queries >= 2);
+    });
+}
+
 #[test]
 fn binspec_hostile_boundaries() {
     let m = Matrix::from_fn(2, 8, |_, c| c as f32);

@@ -276,7 +276,7 @@ fn batch_queue_coalesces_concurrent_clients() {
         }
     });
 
-    let (engine, pool) = queue.shutdown();
+    let (engine, pool) = queue.shutdown().unwrap();
     let stats = engine.stats();
     assert_eq!(stats.queries, 80, "8 clients x 5 rounds x 2 queries");
     assert!(
@@ -332,7 +332,10 @@ fn tcp_round_trip_matches_offline_reference() {
     client.shutdown().unwrap();
     drop(client);
 
-    let (stats, pool) = handle.join();
+    let (stats, pool) = handle.join().unwrap();
     assert_eq!(stats.queries, 25, "24 good queries + 1 rejected");
+    assert_eq!(stats.dropped_connections, 0);
+    assert_eq!(stats.shed_connections, 0);
+    assert_eq!(stats.timed_out_connections, 0);
     assert!(pool.stats().max_float_take < N * DIM);
 }

@@ -24,8 +24,8 @@ table.
 
 additionally compares the current run against a committed baseline and
 exits non-zero when any gated arm (groups ``table1``/``fused``/
-``threads`` by default, override with ``--groups``) regressed by more
-than the tolerance. Absolute wall-clock is machine-dependent, so the
+``threads``/``serve`` by default, override with ``--groups``) regressed
+by more than the tolerance. Absolute wall-clock is machine-dependent, so the
 comparison is **anchored**: each arm's time ratio (current/baseline) is
 normalized by its group's anchor arm (``FP32``, ``threads=1``,
 ``materialize t=1``), which cancels the machine-speed factor; the
@@ -56,7 +56,17 @@ REQUIRED_ARM_KEYS = {
 
 # Expected arm groups and dataset-header fields per bench id.
 EXPECTED_GROUPS = {
-    "pipeline": {"table1", "allocation", "partition", "threads", "fused", "ooc", "serve"},
+    "pipeline": {
+        "table1",
+        "allocation",
+        "partition",
+        "threads",
+        "fused",
+        "ooc",
+        "dist",
+        "chaos",
+        "serve",
+    },
     "quant": {"codec"},
 }
 
@@ -64,11 +74,18 @@ EXPECTED_GROUPS = {
 # in a current run, tolerated as absent from a baseline file until the
 # baseline is re-blessed. Their regression gating is report-only by
 # default regardless (they are not in DEFAULT_GATED_GROUPS).
-POST_BASELINE_GROUPS = {"serve"}
+POST_BASELINE_GROUPS = {"dist", "chaos"}
 
 # Extra per-arm keys the serve group must carry (query latency
 # percentiles; throughput rides in the standard rate_per_sec field).
 SERVE_ARM_KEYS = ("p50_us", "p99_us")
+
+# Extra per-arm keys the chaos group must carry: the fault-recovery
+# tally of the run the arm timed. The clean anchor arm must record
+# zero of both; the faulted arm must have seen at least one death AND
+# one elastic restart, otherwise the arm silently measured a fault-free
+# run and its "fault-tolerance overhead" number is fiction.
+CHAOS_ARM_KEYS = ("deaths", "restarts")
 DATASET_KEYS = {
     "pipeline": ("nodes", "edges", "hidden"),
     "quant": ("rows", "cols"),
@@ -84,10 +101,12 @@ GROUP_ANCHORS = {
     "allocation": "fixed int2",
     "partition": "K=1",
     "ooc": "in-ram K=32",
+    "dist": "K=4 workers=2",
+    "chaos": "clean K=4 w=2",
     "serve": "naive c=8",
 }
 
-DEFAULT_GATED_GROUPS = ["table1", "fused", "threads"]
+DEFAULT_GATED_GROUPS = ["table1", "fused", "threads", "serve"]
 
 # Arms whose *baseline* time is below this get a doubled tolerance:
 # sub-millisecond kernels (the fused group) are measured over a handful
@@ -159,6 +178,27 @@ def validate(doc: dict, path: str, baseline: bool = False) -> str:
                     f"{path}: serve arm {arm['name']!r}: p50 "
                     f"{arm['p50_us']} above p99 {arm['p99_us']}"
                 )
+        if arm["group"] == "chaos":
+            for key in CHAOS_ARM_KEYS:
+                val = arm.get(key)
+                if not isinstance(val, (int, float)) or val < 0:
+                    fail(
+                        f"{path}: chaos arm {arm['name']!r} needs non-negative "
+                        f"{key!r}, got {val!r}"
+                    )
+            clean = arm["name"].startswith("clean")
+            if clean and (arm["deaths"] != 0 or arm["restarts"] != 0):
+                fail(
+                    f"{path}: chaos anchor {arm['name']!r} recorded faults "
+                    f"(deaths={arm['deaths']}, restarts={arm['restarts']}) — "
+                    "the clean arm must be fault-free"
+                )
+            if not clean and (arm["deaths"] < 1 or arm["restarts"] < 1):
+                fail(
+                    f"{path}: chaos arm {arm['name']!r} saw no death/restart "
+                    f"(deaths={arm['deaths']}, restarts={arm['restarts']}) — "
+                    "it measured a fault-free run"
+                )
 
     groups = {a["group"] for a in arms}
     missing = EXPECTED_GROUPS[bench] - groups
@@ -202,6 +242,12 @@ def print_summary(doc: dict, bench: str) -> None:
     if batched:
         best = max(a["speedup_vs_serial"] for a in batched)
         print(f"check_bench: serve batched-over-naive throughput: {best:.2f}x")
+    chaos = [a for a in arms if a["group"] == "chaos"]
+    for arm in chaos:
+        print(
+            f"check_bench: chaos '{arm['name']}': {arm['ms_per_epoch']:.2f} "
+            f"ms/epoch, deaths={arm['deaths']:.0f}, restarts={arm['restarts']:.0f}"
+        )
 
 
 def compare_to_baseline(cur: dict, base: dict, tolerance: float, groups: list) -> None:
@@ -309,7 +355,7 @@ def main() -> None:
     ap.add_argument(
         "--groups",
         default=",".join(DEFAULT_GATED_GROUPS),
-        help="comma-separated arm groups to gate (default table1,fused,threads)",
+        help="comma-separated arm groups to gate (default table1,fused,threads,serve)",
     )
     args = ap.parse_args()
 
